@@ -1,0 +1,54 @@
+//! Compare the five scheduling algorithms (paper Fig 4(b)) on both
+//! workload models and on a hand-built adversarial queue that makes the
+//! policy differences vivid.
+//!
+//! ```bash
+//! cargo run --release --example algorithm_comparison
+//! ```
+
+use sst_sched::job::Job;
+use sst_sched::sched::Policy;
+use sst_sched::sim::run_policy;
+use sst_sched::trace::{Das2Model, SdscSp2Model, Workload};
+use sst_sched::util::table::{f, Table};
+
+fn compare(name: &str, make: impl Fn() -> Workload) {
+    println!("== {name} ==");
+    let mut t = Table::new(&["policy", "mean wait (s)", "p95 (s)", "slowdown", "util"]);
+    for p in Policy::ALL {
+        let r = run_policy(make(), p);
+        let s = r.wait_stats();
+        t.row(&[
+            p.to_string(),
+            f(s.mean_wait),
+            f(s.p95_wait),
+            f(s.mean_slowdown),
+            format!("{:.3}", r.mean_utilization),
+        ]);
+    }
+    t.print();
+    println!();
+}
+
+fn main() {
+    // Grid-style workload (small short jobs, DAS-2-like).
+    compare("DAS-2-like, 6k jobs, compressed arrivals", || {
+        Das2Model::default().generate(6_000, 7).scale_arrivals(0.45).drop_infeasible()
+    });
+
+    // Capability-HPC workload (large long jobs, SDSC-SP2-like).
+    compare("SDSC-SP2-like, 3k jobs", || {
+        SdscSp2Model::default().generate(3_000, 7).drop_infeasible()
+    });
+
+    // Adversarial queue: one huge job at the head, a stream of small
+    // short jobs behind it — the classic case where backfilling shines
+    // and LJF starves the small jobs.
+    compare("adversarial: wide head + narrow stream (1 node x 64 cores)", || {
+        let mut jobs = vec![Job::with_estimate(0, 0, 48, 7_200, 7_200)];
+        for i in 1..400u64 {
+            jobs.push(Job::with_estimate(i, 5 + i * 3, 4, 300, 450));
+        }
+        Workload::new("adversarial", jobs, 1, 64)
+    });
+}

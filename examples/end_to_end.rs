@@ -1,0 +1,102 @@
+//! End-to-end driver: exercises the FULL system on a real small workload,
+//! proving all layers compose (EXPERIMENTS.md §End-to-end):
+//!
+//! 1. L2/L1 artifact — loads the AOT-compiled JAX+Pallas queue-scoring
+//!    model (`artifacts/model.hlo.txt`) on the PJRT CPU client;
+//! 2. L3 — simulates 20k DAS-2-like jobs under EASY backfilling with the
+//!    XLA scorer on the scheduling hot path;
+//! 3. validates the run against the independent CQsim-like baseline;
+//! 4. asserts XLA-scored decisions match native-scored decisions;
+//! 5. runs the Galactic Plane workflow and a modeled parallel scaling
+//!    sweep — the paper's full result surface in one binary.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use sst_sched::baseline::run_baseline;
+use sst_sched::metrics::{correlation, resample};
+use sst_sched::parallel::run_jobs_parallel_modeled;
+use sst_sched::runtime::{backfill_with_accel, Accel};
+use sst_sched::sched::Policy;
+use sst_sched::sim::{SimReport, Simulation};
+use sst_sched::trace::Das2Model;
+use sst_sched::workflow::generators::galactic_plane;
+use sst_sched::workflow::WorkflowExecutor;
+
+fn run_with(accel: Accel, workload: sst_sched::trace::Workload) -> SimReport {
+    let sched = backfill_with_accel(accel).expect("run `make artifacts` first");
+    Simulation::new(workload, Policy::FcfsBackfill)
+        .with_scheduler(Box::new(sched))
+        .run(None)
+}
+
+fn main() {
+    println!("=== sst-sched end-to-end driver ===\n");
+    let workload = Das2Model::default()
+        .generate(20_000, 2026)
+        .scale_arrivals(0.5)
+        .drop_infeasible();
+    println!(
+        "[1] workload: {} jobs, 72 nodes x 2 cores, offered load {:.2}",
+        workload.jobs.len(),
+        workload.offered_load()
+    );
+
+    // --- L1/L2/L3 composition: XLA-scored backfilling ---
+    let t0 = std::time::Instant::now();
+    let xla = run_with(Accel::Xla, workload.clone());
+    let xla_wall = t0.elapsed();
+    let s = xla.wait_stats();
+    println!("\n[2] XLA-scored EASY backfilling (Pallas fit-kernel on the hot path):");
+    println!("    completed {}   mean wait {:.1} s   p95 {:.1} s   util {:.3}",
+        s.jobs, s.mean_wait, s.p95_wait, xla.mean_utilization);
+    println!("    {} events in {:.0} ms ({:.0} ev/s)",
+        xla.events, xla_wall.as_secs_f64() * 1e3,
+        xla.events as f64 / xla_wall.as_secs_f64());
+
+    // --- XLA vs native decision parity ---
+    let native = run_with(Accel::Native, workload.clone());
+    let starts = |r: &SimReport| {
+        let mut v: Vec<(u64, u64)> =
+            r.completed.iter().map(|j| (j.id, j.start.unwrap().ticks())).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(starts(&xla), starts(&native), "XLA scorer changed scheduling decisions!");
+    println!("\n[3] parity: XLA-scored and native-scored runs made IDENTICAL decisions");
+
+    // --- validation vs the independent baseline ---
+    let base = run_baseline(&workload, Policy::FcfsBackfill);
+    let t1 = xla.end_time.max(base.end_time);
+    let ours = resample(&xla.occupancy, sst_sched::core::time::SimTime::ZERO, t1, 48);
+    let theirs = resample(&base.occupancy, sst_sched::core::time::SimTime::ZERO, t1, 48);
+    let corr = correlation(&ours, &theirs);
+    let bs = base.wait_stats();
+    println!("\n[4] validation vs independent CQsim-like baseline:");
+    println!("    occupancy correlation {corr:.4}");
+    println!("    mean wait: ours {:.1} s vs baseline {:.1} s", s.mean_wait, bs.mean_wait);
+    assert!(corr > 0.85, "validation failed: occupancy diverged (corr {corr})");
+
+    // --- workflow component ---
+    let wf = galactic_plane(17, 7, false);
+    let tasks = wf.len();
+    let crit = wf.critical_path_time();
+    let rep = WorkflowExecutor::new(64, u64::MAX).run(wf);
+    println!("\n[5] Galactic Plane workflow: {} tasks on 64 cpus", tasks);
+    println!("    makespan {} s (critical path {:.0} s), mean task wait {:.1} s",
+        rep.makespan.ticks(), crit, rep.mean_wait());
+
+    // --- parallel scaling (modeled; single-CPU container) ---
+    println!("\n[6] modeled conservative-PDES scaling (100k-job DAS-2-like):");
+    let big = Das2Model::default().generate(100_000, 3).drop_infeasible();
+    let mut base_ms = None;
+    for ranks in [1usize, 2, 4, 8] {
+        let rep = run_jobs_parallel_modeled(&big, Policy::FcfsBackfill, ranks, 86_400);
+        let ms = rep.wall.as_secs_f64() * 1e3;
+        let b = *base_ms.get_or_insert(ms);
+        println!("    ranks {ranks}: modeled wall {ms:>8.1} ms   speedup {:.2}x", b / ms);
+    }
+
+    println!("\n=== all layers composed; end-to-end run OK ===");
+}

@@ -1,0 +1,69 @@
+//! Conservative-parallel scaling demo (paper Figs 5-6).
+//!
+//! Runs the same workloads through the threaded runner (correctness; this
+//! container exposes one CPU, so threads cannot speed anything up) and
+//! through the modeled runner (per-rank window times measured serially,
+//! wall = conservative-window critical path) and prints both.
+//!
+//! ```bash
+//! cargo run --release --example parallel_scaling
+//! ```
+
+use sst_sched::parallel::{
+    run_jobs_parallel, run_jobs_parallel_modeled, run_workflow_parallel_modeled,
+};
+use sst_sched::sched::Policy;
+use sst_sched::trace::Das2Model;
+use sst_sched::util::table::Table;
+use sst_sched::workflow::generators::galactic_plane_wide;
+
+fn main() {
+    let w = Das2Model::default().generate(100_000, 1).drop_infeasible();
+    println!("job workload: {} jobs (DAS-2-like)\n", w.jobs.len());
+
+    println!("threaded runner (correctness; 1-CPU container => no speedup expected):");
+    let mut t = Table::new(&["ranks", "wall (ms)", "completed", "windows"]);
+    for ranks in [1usize, 2, 4] {
+        let rep = run_jobs_parallel(&w, Policy::FcfsBackfill, ranks, 86_400);
+        t.row(&[
+            ranks.to_string(),
+            format!("{:.1}", rep.wall.as_secs_f64() * 1e3),
+            rep.total_completed().to_string(),
+            rep.windows.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\nmodeled conservative-PDES wall time (per-rank window critical path):");
+    let mut t = Table::new(&["ranks", "modeled wall (ms)", "speedup", "windows"]);
+    let mut base = None;
+    for ranks in [1usize, 2, 4, 8, 16] {
+        let rep = run_jobs_parallel_modeled(&w, Policy::FcfsBackfill, ranks, 86_400);
+        let ms = rep.wall.as_secs_f64() * 1e3;
+        let b = *base.get_or_insert(ms);
+        t.row(&[
+            ranks.to_string(),
+            format!("{ms:.1}"),
+            format!("{:.2}x", b / ms),
+            rep.windows.to_string(),
+        ]);
+    }
+    t.print();
+
+    let wf = galactic_plane_wide(17, 256, 1, false);
+    println!("\nworkflow: galactic plane, {} tasks, cross-rank dependency traffic:", wf.len());
+    let mut t = Table::new(&["ranks", "modeled wall (ms)", "speedup", "makespan (s)"]);
+    let mut base = None;
+    for ranks in [1usize, 2, 4, 8] {
+        let rep = run_workflow_parallel_modeled(&wf, ranks, 256, 5);
+        let ms = rep.wall.as_secs_f64() * 1e3;
+        let b = *base.get_or_insert(ms);
+        t.row(&[
+            ranks.to_string(),
+            format!("{ms:.2}"),
+            format!("{:.2}x", b / ms),
+            rep.end_time().to_string(),
+        ]);
+    }
+    t.print();
+}

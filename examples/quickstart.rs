@@ -1,0 +1,43 @@
+//! Quickstart: simulate a small DAS-2-like workload under EASY
+//! backfilling and print the scheduling report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sst_sched::sched::Policy;
+use sst_sched::sim::Simulation;
+use sst_sched::trace::Das2Model;
+
+fn main() {
+    // 1. Generate a workload: 5,000 grid-like jobs for a 72-node
+    //    dual-core cluster, arrivals compressed so a queue actually forms.
+    let workload = Das2Model::default()
+        .generate(5_000, 42)
+        .scale_arrivals(0.5)
+        .drop_infeasible();
+    println!(
+        "workload: {} jobs, offered load {:.2}",
+        workload.jobs.len(),
+        workload.offered_load()
+    );
+
+    // 2. Run the event-driven simulation under EASY backfilling.
+    let report = Simulation::new(workload, Policy::FcfsBackfill).with_seed(1).run(None);
+
+    // 3. Inspect the results.
+    let stats = report.wait_stats();
+    println!("completed        {}", stats.jobs);
+    println!("DES events       {}", report.events);
+    println!("sim end          {} s", report.end_time.ticks());
+    println!("mean wait        {:.1} s", stats.mean_wait);
+    println!("p95 wait         {:.1} s", stats.p95_wait);
+    println!("mean slowdown    {:.2}", stats.mean_slowdown);
+    println!("mean utilization {:.3}", report.mean_utilization);
+
+    // 4. Occupancy over time (Fig 3(a)-style series, 12 samples).
+    println!("\nnode occupancy over time:");
+    for (t, occ) in report.occupancy.downsample(12) {
+        println!("  t={:>9}  {:>5.1} nodes  {}", t.ticks(), occ, "#".repeat(occ as usize / 2));
+    }
+}

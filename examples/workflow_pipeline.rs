@@ -1,0 +1,83 @@
+//! Workflow management demo (paper §3): load the paper's Listing-2 JSON
+//! spec, execute it, then run the Pegasus-gallery workflows
+//! (Montage/Galactic-Plane, SIPHT, Epigenomics 4/5/6seq, CyberShake,
+//! LIGO) through the same engine and report makespans vs critical paths.
+//!
+//! ```bash
+//! cargo run --release --example workflow_pipeline
+//! ```
+
+use sst_sched::util::table::{f, Table};
+use sst_sched::workflow::generators as wfgen;
+use sst_sched::workflow::{Workflow, WorkflowExecutor, WorkflowSpec};
+
+fn run(name: &str, wf: Workflow, cpu: u64, table: &mut Table) {
+    let tasks = wf.len();
+    let crit = wf.critical_path_time();
+    let work = wf.total_work();
+    let rep = WorkflowExecutor::new(cpu, u64::MAX).run(wf);
+    table.row(&[
+        name.to_string(),
+        tasks.to_string(),
+        cpu.to_string(),
+        rep.makespan.ticks().to_string(),
+        f(crit),
+        format!("{:.2}", work / rep.makespan.ticks().max(1) as f64),
+        f(rep.mean_wait()),
+        rep.peak_cpu.to_string(),
+    ]);
+}
+
+fn main() {
+    // 1. The paper's Listing-2 example, from its JSON input format.
+    let spec = WorkflowSpec::load("examples/workflows/listing2.json")
+        .expect("run from the repo root: examples/workflows/listing2.json");
+    println!(
+        "Listing 2: {} tasks on cpu={} mem={} MB, policy {:?}, preemption {}",
+        spec.workflow.len(),
+        spec.cpu_available,
+        spec.memory_available_mb,
+        spec.scheduling_policy,
+        spec.preemption
+    );
+    let rep = WorkflowExecutor::new(spec.cpu_available, spec.memory_available_mb)
+        .run(spec.workflow.clone());
+    println!(
+        "  makespan {} s (critical path {:.0} s), mean wait {:.1} s\n",
+        rep.makespan.ticks(),
+        spec.workflow.critical_path_time(),
+        rep.mean_wait()
+    );
+    for t in &rep.tasks {
+        println!(
+            "  task {}: ready@{} start@{} end@{}",
+            t.id,
+            t.ready.ticks(),
+            t.start.ticks(),
+            t.end.ticks()
+        );
+    }
+
+    // 2. The Pegasus gallery (paper §4 workloads + the rest of the Juve
+    //    et al. profile set).
+    println!("\nPegasus-gallery workflows (32-cpu pool):");
+    let mut t = Table::new(&[
+        "workflow",
+        "tasks",
+        "cpu",
+        "makespan (s)",
+        "crit path (s)",
+        "speedup",
+        "mean wait (s)",
+        "peak cpu",
+    ]);
+    run("montage-64", wfgen::montage(64, 1, false), 32, &mut t);
+    run("galactic-plane-17", wfgen::galactic_plane(17, 1, false), 32, &mut t);
+    run("sipht-4", wfgen::sipht(4, 1, false), 32, &mut t);
+    run("epigenomics-4seq", wfgen::epigenomics(4, 8, 1, false), 32, &mut t);
+    run("epigenomics-5seq", wfgen::epigenomics(5, 8, 1, false), 32, &mut t);
+    run("epigenomics-6seq", wfgen::epigenomics(6, 8, 1, false), 32, &mut t);
+    run("cybershake-20", wfgen::cybershake(20, 1, false), 32, &mut t);
+    run("ligo-30", wfgen::ligo_inspiral(30, 1, false), 32, &mut t);
+    t.print();
+}

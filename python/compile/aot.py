@@ -1,0 +1,54 @@
+"""AOT bridge: lower the L2 model to HLO *text* for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts/model.hlo.txt
+
+Python runs ONCE at build time; the Rust binary is self-contained after
+``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from .model import N_PAD, Q_PAD, lower_score_queue
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (return_tuple=True).
+
+    return_tuple=True wraps the outputs in a tuple root so the Rust side
+    always unpacks a tuple regardless of output arity.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument("--q", type=int, default=Q_PAD, help="padded queue length")
+    ap.add_argument("--n", type=int, default=N_PAD, help="padded node count")
+    args = ap.parse_args()
+
+    lowered = lower_score_queue(args.q, args.n)
+    text = to_hlo_text(lowered)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars to {args.out} (Q={args.q}, N={args.n})")
+
+
+if __name__ == "__main__":
+    main()

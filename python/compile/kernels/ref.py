@@ -1,0 +1,56 @@
+"""Pure-jnp oracle for the L1 fit-scoring kernel and the L2 model.
+
+This file is the CORE correctness signal: pytest asserts the Pallas kernel
+(scores.fit_waste) and the full L2 model (model.score_queue) match these
+reference implementations bit-for-allclose. Keep it boring: no Pallas, no
+tiling, one obvious jnp expression per quantity.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .scores import NOFIT
+
+# Mirrors model.SPAN_COST (defined here too so ref.py stays import-light).
+SPAN_COST = 128.0
+
+
+def fit_waste_ref(job_req: jnp.ndarray, node_free: jnp.ndarray) -> jnp.ndarray:
+    """min over nodes of (free - req) where >= 0, else NOFIT. f32[Q]."""
+    req = job_req.astype(jnp.float32)[:, None]  # (Q, 1)
+    free = node_free.astype(jnp.float32)[None, :]  # (1, N)
+    slack = free - req
+    slack = jnp.where(slack >= 0.0, slack, NOFIT)
+    return jnp.min(slack, axis=1)
+
+
+def score_queue_ref(job_req, job_est, job_wait, node_free, params):
+    """Reference for model.score_queue. See model.py for semantics.
+
+    params: f32[4] = [shadow_time, extra_cores, aging_weight, waste_weight]
+    Returns (waste, backfill_ok, priority), each f32[Q].
+    """
+    shadow_time, extra_cores, aging_weight, waste_weight = (
+        params[0],
+        params[1],
+        params[2],
+        params[3],
+    )
+    waste = fit_waste_ref(job_req, node_free)
+    single = waste < NOFIT * 0.5
+    fits_total = job_req.astype(jnp.float32) <= jnp.sum(
+        node_free.astype(jnp.float32)
+    )
+    short_enough = job_est.astype(jnp.float32) <= shadow_time
+    small_enough = job_req.astype(jnp.float32) <= extra_cores
+    backfill_ok = jnp.logical_and(
+        fits_total, jnp.logical_or(short_enough, small_enough)
+    )
+    span_penalty = jnp.where(single, waste, SPAN_COST)
+    priority = (
+        aging_weight * job_wait.astype(jnp.float32)
+        - waste_weight * span_penalty
+        - jnp.where(fits_total, 0.0, NOFIT)
+    )
+    return waste, backfill_ok.astype(jnp.float32), priority

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: tiled queue-x-node fit scoring.
+
+This is the O(Q*N) inner loop of best-fit / backfill scheduling: for every
+queued job q and every node n, compute the slack ``node_free[n] -
+job_req[q]`` and reduce to the per-job minimum non-negative slack (the
+"waste" of the best-fitting node). Jobs that fit nowhere get the ``NOFIT``
+sentinel.
+
+TPU mapping (see DESIGN.md SS Hardware-Adaptation): the fit matrix is tiled
+(Q_TILE x N_TILE) = (8 x 128) to match the VPU lane shape; each tile's
+operands live in VMEM (req column tile + free row tile, ~4.5 KiB combined),
+and the row-min is accumulated across the N grid dimension, which Pallas
+executes sequentially, so the output block acts as a running-min
+accumulator. No MXU use -- the computation is elementwise + reduction.
+
+Runs with ``interpret=True`` everywhere in this repo: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers the kernel to
+plain HLO so the Rust runtime can run it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sentinel for "this job fits on no node". Kept far below f32 max so
+# arithmetic on it (priority mixing in the L2 model) stays finite.
+NOFIT = 1.0e9
+
+# VPU-aligned tile shape: 8 sublanes x 128 lanes.
+Q_TILE = 8
+N_TILE = 128
+
+
+def _fit_kernel(req_ref, free_ref, waste_ref):
+    """One (Q_TILE, N_TILE) tile of the fit matrix, min-reduced over N.
+
+    Grid is (Q/Q_TILE, N/N_TILE); the N axis is the innermost (sequential)
+    grid dimension, so ``waste_ref`` — whose index_map ignores the N grid
+    coordinate — persists across N steps and accumulates the running min.
+    """
+    n_idx = pl.program_id(1)
+    req = req_ref[...]  # (Q_TILE, 1)
+    free = free_ref[...]  # (1, N_TILE)
+    slack = free - req  # (Q_TILE, N_TILE) broadcast
+    slack = jnp.where(slack >= 0.0, slack, NOFIT)
+    tile_min = jnp.min(slack, axis=1, keepdims=True)  # (Q_TILE, 1)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        waste_ref[...] = tile_min
+
+    @pl.when(n_idx != 0)
+    def _acc():
+        waste_ref[...] = jnp.minimum(waste_ref[...], tile_min)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fit_waste(job_req: jax.Array, node_free: jax.Array) -> jax.Array:
+    """Per-job minimum non-negative slack over all nodes.
+
+    Args:
+      job_req: f32[Q] requested cores per queued job (padded slots may be 0).
+      node_free: f32[N] free cores per node (padded slots may be 0).
+
+    Returns:
+      f32[Q]: ``min_n (node_free[n] - job_req[q])`` over nodes where the
+      job fits, else ``NOFIT``.
+
+    Q must be a multiple of Q_TILE and N a multiple of N_TILE; the Rust
+    caller pads to the AOT shapes (see aot.py).
+    """
+    q = job_req.shape[0]
+    n = node_free.shape[0]
+    if q % Q_TILE != 0 or n % N_TILE != 0:
+        raise ValueError(f"shapes must be tile-aligned, got Q={q} N={n}")
+    req2 = job_req.astype(jnp.float32).reshape(q, 1)
+    free2 = node_free.astype(jnp.float32).reshape(1, n)
+    out = pl.pallas_call(
+        _fit_kernel,
+        grid=(q // Q_TILE, n // N_TILE),
+        in_specs=[
+            pl.BlockSpec((Q_TILE, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, N_TILE), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((Q_TILE, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, 1), jnp.float32),
+        interpret=True,
+    )(req2, free2)
+    return out.reshape(q)

@@ -1,0 +1,94 @@
+"""L2 JAX model: batched scheduler scoring.
+
+Computes everything the Rust coordinator's backfill / best-fit scheduler
+needs for one scheduling event, over a padded queue of Q jobs against N
+nodes, in a single fused HLO module:
+
+  * ``waste[q]``       — min non-negative slack over nodes (L1 Pallas
+                         kernel ``kernels.scores.fit_waste``), NOFIT if the
+                         job fits on no *single* node.
+  * ``backfill_ok[q]`` — 1.0 iff the job fits in the machine's total free
+                         cores (multi-node spanning allowed) AND would not
+                         delay the EASY reservation: either it finishes
+                         within the shadow time or it uses only the extra
+                         (non-reserved) cores.
+  * ``priority[q]``    — aging-weighted rank used to order candidates:
+                         ``aging*wait - waste_w*span_penalty``, where the
+                         penalty is the single-node waste when one exists
+                         and the flat SPAN_COST when the job must span
+                         nodes; jobs that do not fit at all are pushed to
+                         -NOFIT.
+
+Shapes are static (AOT): the Rust side pads the live queue to Q and the
+node-free vector to N. Padding convention: padded job slots carry req=0,
+est=0, wait=-inf surrogate (the Rust side masks them out by index anyway);
+padded node slots carry free=0 and can never increase any job's fit,
+because a 0-core node only "fits" req=0 padding jobs.
+
+This module is lowered ONCE by aot.py to artifacts/model.hlo.txt and
+executed from Rust via PJRT; Python never runs on the simulation path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.scores import NOFIT, fit_waste
+
+# Default AOT shapes; rust/src/runtime/mod.rs mirrors these constants.
+Q_PAD = 256
+N_PAD = 512
+
+# Waste surrogate charged to jobs that must span nodes — mirrors
+# rust/src/sched/scorer.rs SPAN_COST.
+SPAN_COST = 128.0
+
+
+def score_queue(job_req, job_est, job_wait, node_free, params):
+    """Score a padded queue. See module docstring.
+
+    Args:
+      job_req:   f32[Q] requested cores per job.
+      job_est:   f32[Q] user-estimated runtime (seconds).
+      job_wait:  f32[Q] time spent waiting so far (seconds).
+      node_free: f32[N] free cores per node.
+      params:    f32[4] = [shadow_time, extra_cores, aging_weight,
+                 waste_weight].
+
+    Returns:
+      (waste f32[Q], backfill_ok f32[Q], priority f32[Q]).
+    """
+    shadow_time = params[0]
+    extra_cores = params[1]
+    aging_weight = params[2]
+    waste_weight = params[3]
+
+    waste = fit_waste(job_req, node_free)  # L1 Pallas kernel
+    single = waste < NOFIT * 0.5
+    total_free = jnp.sum(node_free)
+    fits_total = job_req <= total_free
+    short_enough = job_est <= shadow_time
+    small_enough = job_req <= extra_cores
+    backfill_ok = jnp.logical_and(
+        fits_total, jnp.logical_or(short_enough, small_enough)
+    )
+    span_penalty = jnp.where(single, waste, SPAN_COST)
+    priority = (
+        aging_weight * job_wait - waste_weight * span_penalty
+        - jnp.where(fits_total, 0.0, NOFIT)
+    )
+    return waste, backfill_ok.astype(jnp.float32), priority
+
+
+def lower_score_queue(q: int = Q_PAD, n: int = N_PAD):
+    """jit + lower score_queue at the AOT shapes; returns the Lowered."""
+    f32 = jnp.float32
+    specs = (
+        jax.ShapeDtypeStruct((q,), f32),  # job_req
+        jax.ShapeDtypeStruct((q,), f32),  # job_est
+        jax.ShapeDtypeStruct((q,), f32),  # job_wait
+        jax.ShapeDtypeStruct((n,), f32),  # node_free
+        jax.ShapeDtypeStruct((4,), f32),  # params
+    )
+    return jax.jit(score_queue).lower(*specs)

@@ -1,0 +1,123 @@
+"""pytest: Pallas kernel vs pure-jnp oracle — the CORE correctness signal.
+
+Hypothesis sweeps tile-aligned shapes and adversarial value distributions;
+every property asserts allclose against kernels.ref.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import fit_waste_ref
+from compile.kernels.scores import N_TILE, NOFIT, Q_TILE, fit_waste
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(q, n, req_max=64.0, free_max=64.0, seed=None):
+    rng = np.random.default_rng(seed) if seed is not None else RNG
+    req = rng.uniform(0.0, req_max, size=q).astype(np.float32)
+    free = rng.uniform(0.0, free_max, size=n).astype(np.float32)
+    return jnp.asarray(req), jnp.asarray(free)
+
+
+def _check(req, free):
+    got = np.asarray(fit_waste(req, free))
+    want = np.asarray(fit_waste_ref(req, free))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+class TestFitWasteBasic:
+    def test_single_tile(self):
+        req, free = _rand(Q_TILE, N_TILE, seed=1)
+        _check(req, free)
+
+    def test_default_shapes(self):
+        req, free = _rand(256, 512, seed=2)
+        _check(req, free)
+
+    def test_exact_fit_has_zero_waste(self):
+        req = jnp.zeros((Q_TILE,), jnp.float32).at[0].set(16.0)
+        free = jnp.zeros((N_TILE,), jnp.float32).at[3].set(16.0)
+        got = np.asarray(fit_waste(req, free))
+        assert got[0] == 0.0
+
+    def test_no_fit_is_nofit(self):
+        req = jnp.full((Q_TILE,), 100.0, jnp.float32)
+        free = jnp.full((N_TILE,), 1.0, jnp.float32)
+        got = np.asarray(fit_waste(req, free))
+        np.testing.assert_allclose(got, NOFIT)
+
+    def test_zero_req_matches_min_free(self):
+        req = jnp.zeros((Q_TILE,), jnp.float32)
+        _, free = _rand(Q_TILE, N_TILE, seed=3)
+        got = np.asarray(fit_waste(req, free))
+        np.testing.assert_allclose(got, float(np.min(np.asarray(free))), rtol=1e-6)
+
+    def test_misaligned_shapes_rejected(self):
+        with pytest.raises(ValueError):
+            fit_waste(jnp.zeros((7,), jnp.float32), jnp.zeros((N_TILE,), jnp.float32))
+        with pytest.raises(ValueError):
+            fit_waste(jnp.zeros((Q_TILE,), jnp.float32), jnp.zeros((100,), jnp.float32))
+
+
+class TestFitWasteProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        qt=st.integers(min_value=1, max_value=8),
+        nt=st.integers(min_value=1, max_value=4),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_random_shapes(self, qt, nt, seed):
+        req, free = _rand(qt * Q_TILE, nt * N_TILE, seed=seed)
+        _check(req, free)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        req_max=st.sampled_from([0.5, 8.0, 128.0, 4096.0]),
+        free_max=st.sampled_from([0.5, 8.0, 128.0, 4096.0]),
+    )
+    def test_matches_ref_value_ranges(self, seed, req_max, free_max):
+        req, free = _rand(2 * Q_TILE, 2 * N_TILE, req_max, free_max, seed=seed)
+        _check(req, free)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_integer_valued_inputs(self, seed):
+        # Core counts are integers in the simulator; exercise exact ties.
+        rng = np.random.default_rng(seed)
+        req = jnp.asarray(rng.integers(0, 32, size=2 * Q_TILE).astype(np.float32))
+        free = jnp.asarray(rng.integers(0, 32, size=N_TILE).astype(np.float32))
+        _check(req, free)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_padding_nodes_never_help(self, seed):
+        # Appending free=0 node padding must not change any positive-req job.
+        req, free = _rand(Q_TILE, N_TILE, seed=seed)
+        req = req + 0.001  # strictly positive
+        padded = jnp.concatenate([free, jnp.zeros((N_TILE,), jnp.float32)])
+        a = np.asarray(fit_waste(req, free))
+        b = np.asarray(fit_waste(req, padded))
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_monotone_in_free(self, seed):
+        # Adding one generous node can only decrease (or keep) waste.
+        req, free = _rand(Q_TILE, N_TILE, seed=seed)
+        richer = free.at[0].set(1e6)
+        a = np.asarray(fit_waste(req, free))
+        b = np.asarray(fit_waste(req, richer))
+        assert (b <= a + 1e-6).all()
+
+    def test_deterministic(self):
+        req, free = _rand(2 * Q_TILE, N_TILE, seed=7)
+        a = np.asarray(fit_waste(req, free))
+        b = np.asarray(fit_waste(req, free))
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,94 @@
+"""pytest: L2 model (score_queue) vs oracle + AOT lowering checks."""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.aot import to_hlo_text
+from compile.kernels.ref import score_queue_ref
+from compile.kernels.scores import NOFIT
+from compile.model import N_PAD, Q_PAD, lower_score_queue, score_queue
+
+
+def _inputs(q=64, n=128, seed=0):
+    rng = np.random.default_rng(seed)
+    req = jnp.asarray(rng.integers(0, 64, size=q).astype(np.float32))
+    est = jnp.asarray(rng.uniform(10.0, 7200.0, size=q).astype(np.float32))
+    wait = jnp.asarray(rng.uniform(0.0, 3600.0, size=q).astype(np.float32))
+    free = jnp.asarray(rng.integers(0, 64, size=n).astype(np.float32))
+    params = jnp.asarray(
+        [rng.uniform(0, 7200), rng.integers(0, 256), 1.0, 0.5], dtype=jnp.float32
+    )
+    return req, est, wait, free, params
+
+
+def _check(args):
+    got = score_queue(*args)
+    want = score_queue_ref(*args)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-5)
+
+
+class TestScoreQueue:
+    def test_matches_ref_default(self):
+        _check(_inputs())
+
+    def test_matches_ref_aot_shapes(self):
+        _check(_inputs(q=Q_PAD, n=N_PAD, seed=3))
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_matches_ref_random(self, seed):
+        _check(_inputs(seed=seed))
+
+    def test_backfill_semantics(self):
+        # One 4-core job, est below shadow: backfillable. One 2000-core job
+        # that exceeds total free cores (128*8=1024): not backfillable,
+        # priority driven to -NOFIT.
+        req = jnp.zeros((8,), jnp.float32).at[0].set(4.0).at[1].set(2000.0)
+        est = jnp.full((8,), 50.0, jnp.float32)
+        wait = jnp.zeros((8,), jnp.float32)
+        free = jnp.full((128,), 8.0, jnp.float32)
+        params = jnp.asarray([100.0, 0.0, 1.0, 0.5], dtype=jnp.float32)
+        waste, ok, prio = score_queue(req, est, wait, free, params)
+        assert float(ok[0]) == 1.0
+        assert float(ok[1]) == 0.0
+        assert float(waste[1]) == NOFIT
+        assert float(prio[1]) <= -NOFIT * 0.5
+
+    def test_small_enough_backfills_past_shadow(self):
+        # est > shadow but req <= extra_cores: still backfillable (EASY).
+        req = jnp.zeros((8,), jnp.float32).at[0].set(2.0)
+        est = jnp.full((8,), 1e6, jnp.float32)
+        wait = jnp.zeros((8,), jnp.float32)
+        free = jnp.full((128,), 8.0, jnp.float32)
+        params = jnp.asarray([10.0, 4.0, 1.0, 0.5], dtype=jnp.float32)
+        _, ok, _ = score_queue(req, est, wait, free, params)
+        assert float(ok[0]) == 1.0
+
+    def test_aging_orders_priority(self):
+        # Same req/est, different wait: longer wait -> higher priority.
+        req = jnp.full((8,), 4.0, jnp.float32)
+        est = jnp.full((8,), 50.0, jnp.float32)
+        wait = jnp.arange(8, dtype=jnp.float32) * 100.0
+        free = jnp.full((128,), 8.0, jnp.float32)
+        params = jnp.asarray([100.0, 8.0, 1.0, 0.5], dtype=jnp.float32)
+        _, _, prio = score_queue(req, est, wait, free, params)
+        p = np.asarray(prio)
+        assert (np.diff(p) > 0).all()
+
+
+class TestAot:
+    def test_lowering_produces_hlo_text(self):
+        text = to_hlo_text(lower_score_queue(32, 128))
+        assert "ENTRY" in text
+        assert "f32[32]" in text
+        assert "f32[128]" in text
+
+    def test_default_shapes_lower(self):
+        text = to_hlo_text(lower_score_queue())
+        assert f"f32[{Q_PAD}]" in text
+        assert f"f32[{N_PAD}]" in text

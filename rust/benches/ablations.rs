@@ -1,0 +1,115 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! EASY aging/waste weights, conservative vs EASY backfilling,
+//! conservative-window lookahead, workflow task ordering + preemption,
+//! multi-cluster routing, and topology-aware slowdown sensitivity.
+
+use sst_sched::parallel::run_jobs_parallel_modeled;
+use sst_sched::resources::Topology;
+use sst_sched::sched::{BackfillScheduler, Policy};
+use sst_sched::sim::{run_policy, MetaScheduler, Routing, Simulation};
+use sst_sched::trace::Das2Model;
+use sst_sched::util::table::{f, Table};
+use sst_sched::workflow::generators::{epigenomics, montage, sipht};
+use sst_sched::workflow::{DynamicExecutor, TaskOrder};
+
+fn main() {
+    let workload =
+        Das2Model::default().generate(8_000, 5).scale_arrivals(0.45).drop_infeasible();
+
+    println!("=== ablation: EASY scoring weights (aging, waste) ===");
+    let mut t = Table::new(&["aging", "waste", "mean wait (s)", "p95 (s)"]);
+    for (aging, waste) in [(0.0, 0.0), (1.0, 0.0), (0.0, 0.5), (1.0, 0.5), (4.0, 0.5), (1.0, 4.0)]
+    {
+        let mut sched = BackfillScheduler::new();
+        sched.aging_weight = aging;
+        sched.waste_weight = waste;
+        let r = Simulation::new(workload.clone(), Policy::FcfsBackfill)
+            .with_scheduler(Box::new(sched))
+            .run(None);
+        let s = r.wait_stats();
+        t.row(&[f(aging as f64), f(waste as f64), f(s.mean_wait), f(s.p95_wait)]);
+    }
+    t.print();
+
+    println!("\n=== ablation: EASY vs conservative backfilling ===");
+    let mut t = Table::new(&["policy", "mean wait (s)", "p95 (s)", "slowdown"]);
+    for p in [Policy::Fcfs, Policy::FcfsBackfill, Policy::ConservativeBackfill] {
+        let r = run_policy(workload.clone(), p);
+        let s = r.wait_stats();
+        t.row(&[p.to_string(), f(s.mean_wait), f(s.p95_wait), f(s.mean_slowdown)]);
+    }
+    t.print();
+
+    println!("\n=== ablation: conservative-window lookahead (4 ranks, 50k jobs) ===");
+    let big = Das2Model::default().generate(50_000, 1).drop_infeasible();
+    let mut t = Table::new(&["lookahead (s)", "windows", "modeled wall (ms)"]);
+    for lookahead in [600u64, 3_600, 21_600, 86_400, 345_600] {
+        let rep = run_jobs_parallel_modeled(&big, Policy::FcfsBackfill, 4, lookahead);
+        t.row(&[
+            lookahead.to_string(),
+            rep.windows.to_string(),
+            format!("{:.1}", rep.wall.as_secs_f64() * 1e3),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== ablation: workflow task ordering (8-cpu pool) ===");
+    let mut t = Table::new(&["workflow", "fcfs (s)", "critical-path (s)", "widest (s)", "cp+preempt (s)"]);
+    for w in [montage(64, 1, true), sipht(4, 1, true), epigenomics(4, 8, 1, true)] {
+        let ms = |order: TaskOrder, pre: bool| {
+            let mut ex = DynamicExecutor::new(8, order);
+            if pre {
+                ex = ex.with_preemption();
+            }
+            ex.run(w.clone()).makespan.ticks().to_string()
+        };
+        t.row(&[
+            w.name.clone(),
+            ms(TaskOrder::Fcfs, false),
+            ms(TaskOrder::CriticalPath, false),
+            ms(TaskOrder::WidestFirst, false),
+            ms(TaskOrder::CriticalPath, true),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== ablation: multi-cluster routing (DAS-2 federation) ===");
+    let jobs = Das2Model::default().generate(6_000, 3).scale_arrivals(0.3).jobs;
+    let mut t = Table::new(&["routing", "mean wait (s)", "p95 (s)", "rejected"]);
+    for routing in [Routing::RoundRobin, Routing::LeastLoaded, Routing::BestFitCluster] {
+        let rep = MetaScheduler::das2_federation(routing, Policy::FcfsBackfill).run(&jobs);
+        let s = rep.wait_stats();
+        t.row(&[
+            format!("{routing:?}"),
+            f(s.mean_wait),
+            f(s.p95_wait),
+            rep.rejected.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\n=== ablation: topology slowdown sensitivity (first-fit spread) ===");
+    // Allocate a 16-node job on each topology as nodes 0..16 (contiguous
+    // first-fit) vs a scattered stride-4 placement; report slowdowns.
+    let alloc = |ids: Vec<usize>| sst_sched::resources::Allocation {
+        job_id: 1,
+        taken: ids.into_iter().map(|n| (n, 1, 0)).collect(),
+    };
+    let contiguous = alloc((0..16).collect());
+    let scattered = alloc((0..16).map(|i| i * 4).collect());
+    let mut t = Table::new(&["topology", "span contig", "span scatter", "slowdown@0.1 scatter"]);
+    for topo in [
+        Topology::Mesh2D { x: 8, y: 8 },
+        Topology::Torus2D { x: 8, y: 8 },
+        Topology::FatTree { leaf: 4, agg: 4 },
+        Topology::Dragonfly { a: 4, p: 4 },
+    ] {
+        t.row(&[
+            format!("{topo:?}"),
+            f(topo.allocation_span(&contiguous.node_ids())),
+            f(topo.allocation_span(&scattered.node_ids())),
+            format!("{:.2}x", topo.slowdown(&scattered, 0.1)),
+        ]);
+    }
+    t.print();
+}

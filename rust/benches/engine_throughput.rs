@@ -1,0 +1,41 @@
+//! Bench: core engine + simulator throughput (events/second) — the L3
+//! hot-path numbers tracked in EXPERIMENTS.md §Perf.
+
+use sst_sched::baseline::run_baseline;
+use sst_sched::sched::Policy;
+use sst_sched::sim::run_policy;
+use sst_sched::trace::{Das2Model, SdscSp2Model};
+use sst_sched::util::bench::{section, Bench};
+
+fn main() {
+    section("event-driven simulator throughput");
+    let das2 = Das2Model::default().generate(100_000, 1).drop_infeasible();
+    let sp2 = SdscSp2Model::default().generate(50_000, 1).drop_infeasible();
+    let mut b = Bench::new(1, 5);
+
+    let w = das2.clone();
+    let r = b.case("sim/das2-100k/fcfs", move || run_policy(w.clone(), Policy::Fcfs).events);
+    let median = r.median();
+    let events = run_policy(das2.clone(), Policy::Fcfs).events;
+    println!(
+        "  -> {:.2} M events/s",
+        events as f64 / median.as_secs_f64() / 1e6
+    );
+
+    let w = das2.clone();
+    b.case("sim/das2-100k/backfill", move || {
+        run_policy(w.clone(), Policy::FcfsBackfill).events
+    });
+    let w = sp2.clone();
+    b.case("sim/sp2-50k/backfill", move || {
+        run_policy(w.clone(), Policy::FcfsBackfill).events
+    });
+
+    section("baseline (CQsim-like) for comparison");
+    let w = das2.clone();
+    b.case("baseline/das2-100k/fcfs", move || run_baseline(&w, Policy::Fcfs).events);
+
+    section("workload generation");
+    b.case("gen/das2-100k", || Das2Model::default().generate(100_000, 1).jobs.len());
+    b.case("gen/sp2-50k", || SdscSp2Model::default().generate(50_000, 1).jobs.len());
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate paper Fig 3 (occupancy + running-jobs validation
+//! vs the CQsim-like baseline) and time the two simulators.
+
+use sst_sched::harness::{fig3a, fig3b, print_validation};
+use sst_sched::util::bench::{section, Bench};
+
+fn main() {
+    section("Fig 3(a): node occupancy over time (DAS-2-like, 10k jobs)");
+    let v = fig3a(10_000, 1, 24);
+    print_validation(&v);
+    assert!(v.correlation > 0.9, "validation regressed: corr {}", v.correlation);
+
+    section("Fig 3(b): running jobs over time");
+    let v = fig3b(10_000, 1, 24);
+    print_validation(&v);
+    assert!(v.correlation > 0.9, "validation regressed: corr {}", v.correlation);
+
+    section("timing");
+    let mut b = Bench::new(1, 5);
+    b.case("fig3a/10k-jobs (sim + baseline)", || fig3a(10_000, 1, 24));
+    b.case("fig3b/10k-jobs (sim + baseline)", || fig3b(10_000, 1, 24));
+}

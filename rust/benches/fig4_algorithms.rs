@@ -1,0 +1,30 @@
+//! Bench: regenerate paper Fig 4 (wait-time validation + the five-policy
+//! comparison) and time one full simulation per policy.
+
+use sst_sched::harness::{fig4a, fig4b, print_fig4a, print_fig4b};
+use sst_sched::sched::Policy;
+use sst_sched::sim::run_policy;
+use sst_sched::trace::Das2Model;
+use sst_sched::util::bench::{section, Bench};
+
+fn main() {
+    section("Fig 4(a): wait-time validation vs CQsim-like (10k jobs)");
+    let v = fig4a(10_000, 1, 20);
+    print_fig4a(&v);
+    assert!(v.correlation > 0.9, "validation regressed: corr {}", v.correlation);
+
+    section("Fig 4(b): five scheduling algorithms (8k jobs, high load)");
+    let rows = fig4b(8_000, 1);
+    print_fig4b(&rows);
+    let wait = |n: &str| rows.iter().find(|r| r.policy == n).unwrap().mean_wait;
+    assert!(wait("fcfs-backfill") <= wait("fcfs"), "backfill should beat FCFS");
+    assert!(wait("sjf") <= wait("ljf"), "SJF should beat LJF");
+
+    section("timing: one full 10k-job simulation per policy");
+    let w = Das2Model::default().generate(10_000, 1).scale_arrivals(0.45).drop_infeasible();
+    let mut b = Bench::new(1, 5);
+    for p in Policy::ALL {
+        let w = w.clone();
+        b.case(&format!("sim/das2-10k/{p}"), move || run_policy(w.clone(), p).events);
+    }
+}

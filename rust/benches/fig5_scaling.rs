@@ -1,0 +1,34 @@
+//! Bench: regenerate paper Fig 5 (parallel scaling of the job simulator
+//! on DAS-2-like and SDSC-SP2-like workloads across ranks and scales).
+//!
+//! Wall times are *modeled* conservative-PDES times (this container
+//! exposes one CPU): per-rank window times are measured serially and the
+//! reported wall is the window critical path + barrier costs. See
+//! `parallel::run_parallel_modeled` and DESIGN.md §Substitutions.
+
+use sst_sched::harness::{fig5, print_fig5};
+
+fn main() {
+    println!("Fig 5(a): DAS-2-like, ranks 1-8, three job scales\n");
+    let rows = fig5(false, &[20_000, 50_000, 200_000], &[1, 2, 4, 8], 1);
+    print_fig5(&rows);
+    // Shape assertions: speedup grows with ranks at the largest scale,
+    // and the largest scale speeds up at least as well as the smallest
+    // ("as the job sizes increased, we achieve greater speedup").
+    let at = |jobs: usize, ranks: usize| {
+        rows.iter().find(|r| r.jobs == jobs && r.ranks == ranks).unwrap().speedup
+    };
+    assert!(at(200_000, 8) > at(200_000, 2), "speedup should grow with ranks");
+    assert!(
+        at(200_000, 8) >= at(20_000, 8) * 0.8,
+        "larger workloads should scale at least comparably"
+    );
+
+    println!("Fig 5(b): SDSC-SP2-like, ranks 1-8\n");
+    let rows = fig5(true, &[50_000], &[1, 2, 4, 8], 1);
+    print_fig5(&rows);
+    assert!(
+        rows.last().unwrap().speedup > rows[1].speedup * 0.8,
+        "SP2 scaling should not collapse at 8 ranks"
+    );
+}

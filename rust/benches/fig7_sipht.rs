@@ -1,0 +1,31 @@
+//! Bench: regenerate paper Fig 7 (SIPHT workflow wait-time validation:
+//! simulator with sampled runtimes vs the exact published profile).
+
+use sst_sched::harness::{fig7, print_fig7};
+use sst_sched::util::bench::{section, Bench};
+use sst_sched::workflow::generators::sipht;
+use sst_sched::workflow::WorkflowExecutor;
+
+fn main() {
+    section("Fig 7: SIPHT wait-time validation (4 replicons, 8-cpu pool)");
+    let v = fig7(4, 8, 1);
+    print_fig7(&v);
+    let ratio = v.ours_makespan as f64 / v.ref_makespan as f64;
+    assert!((0.7..1.3).contains(&ratio), "makespan diverged: ratio {ratio}");
+
+    section("sensitivity: pool widths");
+    for cpu in [4u64, 8, 16, 32] {
+        let v = fig7(4, cpu, 1);
+        println!(
+            "cpu={cpu:<3} MAE {:>8.2} s   makespan ref {:>6} s ours {:>6} s",
+            v.mae, v.ref_makespan, v.ours_makespan
+        );
+    }
+
+    section("timing");
+    let mut b = Bench::new(1, 5);
+    b.case("sipht-4/exec-8cpu", || {
+        WorkflowExecutor::new(8, u64::MAX).run(sipht(4, 1, false)).makespan
+    });
+    b.case("fig7/full-validation", || fig7(4, 8, 1).mae);
+}

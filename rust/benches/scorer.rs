@@ -1,0 +1,51 @@
+//! Bench: queue-scorer backends — pure-Rust vs the AOT-compiled
+//! JAX/Pallas artifact on PJRT (the L1/L2 hot-path numbers for
+//! EXPERIMENTS.md §Perf).
+//!
+//! Requires `make artifacts` for the XLA cases; they are skipped with a
+//! notice when the artifact is missing.
+
+use sst_sched::sched::scorer::{NativeScorer, QueueScorer, ScoreParams};
+use sst_sched::runtime::XlaScorer;
+use sst_sched::util::bench::{section, Bench};
+
+fn inputs(q: usize, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let req: Vec<f32> = (0..q).map(|i| (i % 17 + 1) as f32).collect();
+    let est: Vec<f32> = (0..q).map(|i| 60.0 * (1 + i % 23) as f32).collect();
+    let wait: Vec<f32> = (0..q).map(|i| (i % 700) as f32).collect();
+    let free: Vec<f32> = (0..n).map(|i| (i % 3) as f32).collect();
+    (req, est, wait, free)
+}
+
+fn params() -> ScoreParams {
+    ScoreParams { shadow_time: 600.0, extra_cores: 16.0, aging_weight: 1.0, waste_weight: 0.5 }
+}
+
+fn main() {
+    let mut b = Bench::new(3, 10);
+
+    section("native scorer (pure Rust)");
+    for (q, n) in [(32usize, 72usize), (256, 512), (1024, 512)] {
+        let (req, est, wait, free) = inputs(q, n);
+        let mut s = NativeScorer::new();
+        b.case(&format!("native/q{q}/n{n}"), move || {
+            s.score(&req, &est, &wait, &free, params()).priority.len()
+        });
+    }
+
+    section("XLA scorer (AOT JAX + Pallas via PJRT)");
+    match XlaScorer::load_default() {
+        Err(e) => println!("skipped: {e:#} (run `make artifacts`)"),
+        Ok(_) => {
+            for (q, n) in [(32usize, 72usize), (256, 512), (1024, 512)] {
+                let (req, est, wait, free) = inputs(q, n);
+                let mut s = XlaScorer::load_default().unwrap();
+                b.case(&format!("xla/q{q}/n{n}"), move || {
+                    s.score(&req, &est, &wait, &free, params()).priority.len()
+                });
+            }
+            // Compile cost (once per process in production).
+            b.case("xla/load+compile", || XlaScorer::load_default().is_ok());
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Configuration system: JSON experiment configs covering workload,
+//! platform, scheduler and parallel-run parameters — the equivalent of
+//! SST's Python configuration surface, so experiments are declarative
+//! and reproducible (`sst-sched run --config experiment.json`).
+
+use crate::sched::Policy;
+use crate::trace::{Das2Model, SdscSp2Model, Workload};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Where jobs come from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSource {
+    /// DAS-2-like synthetic model.
+    Das2,
+    /// SDSC-SP2-like synthetic model.
+    SdscSp2,
+    /// Parallel Workloads Archive file.
+    Swf(String),
+    /// Grid Workloads Archive file.
+    Gwf(String),
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub source: WorkloadSource,
+    /// Jobs to generate (synthetic) or keep (trace prefix); 0 = all.
+    pub jobs: usize,
+    pub seed: u64,
+    /// Inter-arrival scaling (< 1.0 = higher load).
+    pub arrival_scale: f64,
+    /// Platform override; `None` = the source's native machine.
+    pub nodes: Option<usize>,
+    pub cores_per_node: Option<u64>,
+    pub mem_per_node: u64,
+    pub policy: Policy,
+    /// "native" or "xla".
+    pub accel: String,
+    /// Parallel-run parameters.
+    pub ranks: usize,
+    pub lookahead: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            source: WorkloadSource::Das2,
+            jobs: 10_000,
+            seed: 1,
+            arrival_scale: 1.0,
+            nodes: None,
+            cores_per_node: None,
+            mem_per_node: 0,
+            policy: Policy::FcfsBackfill,
+            accel: "native".to_string(),
+            ranks: 1,
+            lookahead: 3600,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<ExperimentConfig> {
+        let v = Json::parse(text).context("parsing experiment config")?;
+        let mut cfg = ExperimentConfig::default();
+        if let Some(w) = v.get("workload") {
+            let kind = w.get_str_or("kind", "das2");
+            cfg.source = match kind {
+                "das2" => WorkloadSource::Das2,
+                "sdsc-sp2" | "sp2" => WorkloadSource::SdscSp2,
+                "swf" => WorkloadSource::Swf(
+                    w.get("path")
+                        .and_then(|p| p.as_str())
+                        .context("swf workload needs \"path\"")?
+                        .to_string(),
+                ),
+                "gwf" => WorkloadSource::Gwf(
+                    w.get("path")
+                        .and_then(|p| p.as_str())
+                        .context("gwf workload needs \"path\"")?
+                        .to_string(),
+                ),
+                other => bail!("unknown workload kind {other:?}"),
+            };
+            cfg.jobs = w.get_u64_or("jobs", cfg.jobs as u64) as usize;
+            cfg.seed = w.get_u64_or("seed", cfg.seed);
+            cfg.arrival_scale = w.get_f64_or("arrival_scale", cfg.arrival_scale);
+        }
+        if let Some(p) = v.get("platform") {
+            cfg.nodes = p.get("nodes").and_then(|x| x.as_u64()).map(|x| x as usize);
+            cfg.cores_per_node = p.get("cores_per_node").and_then(|x| x.as_u64());
+            cfg.mem_per_node = p.get_u64_or("mem_per_node", 0);
+        }
+        if let Some(s) = v.get("scheduler") {
+            cfg.policy = s
+                .get_str_or("policy", cfg.policy.as_str())
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!(e))?;
+            cfg.accel = s.get_str_or("accel", &cfg.accel).to_string();
+            if !matches!(cfg.accel.as_str(), "native" | "xla" | "hybrid") {
+                bail!("scheduler.accel must be native|xla|hybrid, got {:?}", cfg.accel);
+            }
+        }
+        if let Some(p) = v.get("parallel") {
+            cfg.ranks = p.get_u64_or("ranks", 1) as usize;
+            cfg.lookahead = p.get_u64_or("lookahead", 3600);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> Result<ExperimentConfig> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Serialize (round-trips through [`ExperimentConfig::parse`]).
+    pub fn to_json(&self) -> Json {
+        let (kind, path) = match &self.source {
+            WorkloadSource::Das2 => ("das2", None),
+            WorkloadSource::SdscSp2 => ("sdsc-sp2", None),
+            WorkloadSource::Swf(p) => ("swf", Some(p.clone())),
+            WorkloadSource::Gwf(p) => ("gwf", Some(p.clone())),
+        };
+        let mut wl = vec![
+            ("kind", Json::str(kind)),
+            ("jobs", Json::num(self.jobs as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("arrival_scale", Json::num(self.arrival_scale)),
+        ];
+        if let Some(p) = path {
+            wl.push(("path", Json::str(p)));
+        }
+        let mut platform = vec![("mem_per_node", Json::num(self.mem_per_node as f64))];
+        if let Some(n) = self.nodes {
+            platform.push(("nodes", Json::num(n as f64)));
+        }
+        if let Some(c) = self.cores_per_node {
+            platform.push(("cores_per_node", Json::num(c as f64)));
+        }
+        Json::obj(vec![
+            ("workload", Json::obj(wl)),
+            ("platform", Json::obj(platform)),
+            (
+                "scheduler",
+                Json::obj(vec![
+                    ("policy", Json::str(self.policy.as_str())),
+                    ("accel", Json::str(self.accel.clone())),
+                ]),
+            ),
+            (
+                "parallel",
+                Json::obj(vec![
+                    ("ranks", Json::num(self.ranks as f64)),
+                    ("lookahead", Json::num(self.lookahead as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Materialize the workload this config describes.
+    pub fn build_workload(&self) -> Result<Workload> {
+        let mut w = match &self.source {
+            WorkloadSource::Das2 => Das2Model::default().generate(self.jobs.max(1), self.seed),
+            WorkloadSource::SdscSp2 => {
+                SdscSp2Model::default().generate(self.jobs.max(1), self.seed)
+            }
+            WorkloadSource::Swf(path) => {
+                let jobs = crate::trace::swf::load_swf_file(path)?;
+                let mut wl = Workload::new(path, jobs, 128, 1);
+                if self.jobs > 0 {
+                    wl = wl.truncate(self.jobs);
+                }
+                wl
+            }
+            WorkloadSource::Gwf(path) => {
+                let jobs = crate::trace::gwf::load_gwf_file(path)?;
+                let mut wl = Workload::new(path, jobs, 72, 2);
+                if self.jobs > 0 {
+                    wl = wl.truncate(self.jobs);
+                }
+                wl
+            }
+        };
+        if let Some(n) = self.nodes {
+            w.nodes = n;
+        }
+        if let Some(c) = self.cores_per_node {
+            w.cores_per_node = c;
+        }
+        if (self.arrival_scale - 1.0).abs() > 1e-12 {
+            w = w.scale_arrivals(self.arrival_scale);
+        }
+        Ok(w.drop_infeasible())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "workload": {"kind": "das2", "jobs": 500, "seed": 7, "arrival_scale": 0.8},
+        "platform": {"nodes": 64, "cores_per_node": 2, "mem_per_node": 4096},
+        "scheduler": {"policy": "fcfs-backfill", "accel": "native"},
+        "parallel": {"ranks": 4, "lookahead": 1800}
+    }"#;
+
+    #[test]
+    fn parses_full_config() {
+        let c = ExperimentConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.source, WorkloadSource::Das2);
+        assert_eq!(c.jobs, 500);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.nodes, Some(64));
+        assert_eq!(c.policy, Policy::FcfsBackfill);
+        assert_eq!(c.ranks, 4);
+        assert_eq!(c.lookahead, 1800);
+    }
+
+    #[test]
+    fn defaults_for_empty() {
+        let c = ExperimentConfig::parse("{}").unwrap();
+        assert_eq!(c.jobs, 10_000);
+        assert_eq!(c.policy, Policy::FcfsBackfill);
+        assert_eq!(c.ranks, 1);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = ExperimentConfig::parse(SAMPLE).unwrap();
+        let text = c.to_json().to_pretty();
+        let back = ExperimentConfig::parse(&text).unwrap();
+        assert_eq!(back.jobs, c.jobs);
+        assert_eq!(back.nodes, c.nodes);
+        assert_eq!(back.policy, c.policy);
+        assert_eq!(back.arrival_scale, c.arrival_scale);
+    }
+
+    #[test]
+    fn build_workload_applies_overrides() {
+        let c = ExperimentConfig::parse(SAMPLE).unwrap();
+        let w = c.build_workload().unwrap();
+        assert_eq!(w.nodes, 64);
+        assert_eq!(w.cores_per_node, 2);
+        assert!(w.jobs.len() <= 500);
+        assert!(!w.jobs.is_empty());
+    }
+
+    #[test]
+    fn bad_policy_rejected() {
+        let e = ExperimentConfig::parse(r#"{"scheduler": {"policy": "magic"}}"#).unwrap_err();
+        assert!(e.to_string().contains("magic"));
+    }
+
+    #[test]
+    fn bad_accel_rejected() {
+        assert!(ExperimentConfig::parse(r#"{"scheduler": {"accel": "gpu"}}"#).is_err());
+    }
+
+    #[test]
+    fn swf_requires_path() {
+        assert!(ExperimentConfig::parse(r#"{"workload": {"kind": "swf"}}"#).is_err());
+    }
+}

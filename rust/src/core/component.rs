@@ -1,0 +1,107 @@
+//! Components and the context handed to them (SST-Elements analogue).
+//!
+//! A component is a state machine that receives timestamped payloads and
+//! may emit new ones. All interaction with the engine goes through
+//! [`Ctx`]: reading the clock, sending events over links, self-scheduling,
+//! recording statistics, and drawing random numbers.
+
+use crate::core::event::{ComponentId, Priority};
+use crate::core::link::LinkTable;
+use crate::core::rng::Rng;
+use crate::core::stats::StatRegistry;
+use crate::core::time::{SimDuration, SimTime};
+use std::any::Any;
+
+/// An event buffered by [`Ctx`] for the engine to enqueue.
+#[derive(Debug)]
+pub(crate) struct Emit<P> {
+    pub time: SimTime,
+    pub priority: Priority,
+    pub target: ComponentId,
+    pub payload: P,
+}
+
+/// Execution context passed to a component for one event delivery.
+pub struct Ctx<'a, P> {
+    pub(crate) now: SimTime,
+    pub(crate) self_id: ComponentId,
+    pub(crate) out: &'a mut Vec<Emit<P>>,
+    pub(crate) links: &'a LinkTable,
+    /// Engine-wide statistics registry.
+    pub stats: &'a mut StatRegistry,
+    /// Engine-wide deterministic RNG.
+    pub rng: &'a mut Rng,
+    pub(crate) stop: &'a mut bool,
+}
+
+impl<'a, P> Ctx<'a, P> {
+    /// Current simulated time.
+    #[inline]
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// This component's id.
+    #[inline]
+    pub fn self_id(&self) -> ComponentId {
+        self.self_id
+    }
+
+    /// Send `payload` to `target` over the configured link; it arrives
+    /// after the link latency (0 if the pair is unlinked).
+    pub fn send(&mut self, target: ComponentId, priority: Priority, payload: P) {
+        let lat = self.links.latency(self.self_id, target);
+        self.send_in(target, lat, priority, payload);
+    }
+
+    /// Send with an additional delay on top of the link latency.
+    pub fn send_after(
+        &mut self,
+        target: ComponentId,
+        delay: SimDuration,
+        priority: Priority,
+        payload: P,
+    ) {
+        let lat = self.links.latency(self.self_id, target);
+        self.send_in(target, lat + delay, priority, payload);
+    }
+
+    /// Deliver to self after `delay` (timers, periodic sampling).
+    pub fn schedule_self(&mut self, delay: SimDuration, priority: Priority, payload: P) {
+        self.send_in(self.self_id, delay, priority, payload);
+    }
+
+    fn send_in(
+        &mut self,
+        target: ComponentId,
+        delay: SimDuration,
+        priority: Priority,
+        payload: P,
+    ) {
+        self.out.push(Emit { time: self.now + delay, priority, target, payload });
+    }
+
+    /// Ask the engine to stop after the current event is processed.
+    pub fn request_stop(&mut self) {
+        *self.stop = true;
+    }
+}
+
+/// A simulation component.
+pub trait Component<P> {
+    /// Stable name, used for stat prefixes and debugging.
+    fn name(&self) -> &str;
+
+    /// Called once before the first event, at t=0.
+    fn init(&mut self, _ctx: &mut Ctx<P>) {}
+
+    /// Handle one delivered payload.
+    fn handle(&mut self, payload: P, ctx: &mut Ctx<P>);
+
+    /// Called once after the run ends (flush final statistics).
+    fn finish(&mut self, _ctx: &mut Ctx<P>) {}
+
+    /// Downcast support for extracting results after a run.
+    fn as_any(&self) -> &dyn Any;
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}

@@ -1,0 +1,422 @@
+//! The sequential discrete-event engine (SST-Core analogue).
+//!
+//! Owns the component table, link table, event queue, statistics registry
+//! and RNG. Delivery order is deterministic: (time, priority, sequence).
+//! The parallel engine in `crate::parallel` runs one of these per rank.
+
+use crate::core::component::{Component, Ctx, Emit};
+use crate::core::event::{ComponentId, EventQueue, Priority};
+use crate::core::link::LinkTable;
+use crate::core::rng::Rng;
+use crate::core::stats::StatRegistry;
+use crate::core::time::{SimDuration, SimTime};
+use std::collections::HashMap;
+
+/// Outcome of a run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunReport {
+    /// Events delivered.
+    pub events: u64,
+    /// Clock value when the run stopped.
+    pub end_time: SimTime,
+    /// True if the run stopped because a component requested it or the
+    /// horizon was reached (false = queue drained).
+    pub stopped_early: bool,
+}
+
+/// Sequential discrete-event engine.
+pub struct Engine<P> {
+    components: Vec<Box<dyn Component<P>>>,
+    names: HashMap<String, ComponentId>,
+    queue: EventQueue<P>,
+    links: LinkTable,
+    stats: StatRegistry,
+    rng: Rng,
+    now: SimTime,
+    events_processed: u64,
+    emit_buf: Vec<Emit<P>>,
+    initialized: bool,
+}
+
+impl<P> Engine<P> {
+    pub fn new(seed: u64) -> Self {
+        Engine {
+            components: Vec::new(),
+            names: HashMap::new(),
+            queue: EventQueue::new(),
+            links: LinkTable::new(),
+            stats: StatRegistry::new(),
+            rng: Rng::new(seed),
+            now: SimTime::ZERO,
+            events_processed: 0,
+            emit_buf: Vec::new(),
+            initialized: false,
+        }
+    }
+
+    /// Register a component; returns its id.
+    pub fn add(&mut self, c: Box<dyn Component<P>>) -> ComponentId {
+        let id = self.components.len();
+        let prev = self.names.insert(c.name().to_string(), id);
+        assert!(prev.is_none(), "duplicate component name {:?}", c.name());
+        self.components.push(c);
+        id
+    }
+
+    /// Look up a component id by name.
+    pub fn id_of(&self, name: &str) -> Option<ComponentId> {
+        self.names.get(name).copied()
+    }
+
+    /// Configure a directed link.
+    pub fn connect(&mut self, from: ComponentId, to: ComponentId, latency: SimDuration) {
+        self.links.connect(from, to, latency);
+    }
+
+    pub fn links(&self) -> &LinkTable {
+        &self.links
+    }
+
+    /// Schedule an event from outside any component (initial stimuli).
+    pub fn schedule(
+        &mut self,
+        time: SimTime,
+        priority: Priority,
+        target: ComponentId,
+        payload: P,
+    ) {
+        self.queue.push(time, priority, target, payload);
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn stats(&self) -> &StatRegistry {
+        &self.stats
+    }
+
+    pub fn stats_mut(&mut self) -> &mut StatRegistry {
+        &mut self.stats
+    }
+
+    pub fn pending_events(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Borrow a component for result extraction (downcast via `as_any`).
+    pub fn component(&self, id: ComponentId) -> &dyn Component<P> {
+        self.components[id].as_ref()
+    }
+
+    /// Typed accessor: `engine.get::<JobExecutor>(id)`.
+    pub fn get<T: 'static>(&self, id: ComponentId) -> Option<&T> {
+        self.components[id].as_any().downcast_ref::<T>()
+    }
+
+    pub fn get_mut<T: 'static>(&mut self, id: ComponentId) -> Option<&mut T> {
+        self.components[id].as_any_mut().downcast_mut::<T>()
+    }
+
+    fn init_components(&mut self) {
+        if self.initialized {
+            return;
+        }
+        self.initialized = true;
+        let mut stop = false;
+        for id in 0..self.components.len() {
+            let mut ctx = Ctx {
+                now: self.now,
+                self_id: id,
+                out: &mut self.emit_buf,
+                links: &self.links,
+                stats: &mut self.stats,
+                rng: &mut self.rng,
+                stop: &mut stop,
+            };
+            self.components[id].init(&mut ctx);
+        }
+        for e in self.emit_buf.drain(..) {
+            self.queue.push(e.time, e.priority, e.target, e.payload);
+        }
+    }
+
+    /// Run until the queue drains or `horizon` is passed.
+    pub fn run(&mut self, horizon: Option<SimTime>) -> RunReport {
+        self.init_components();
+        let bound = horizon.unwrap_or(SimTime::MAX);
+        let mut stopped_early = self.drain_until(bound, true);
+        if !stopped_early && self.queue.peek_time().is_some() {
+            // Horizon cut the run short.
+            stopped_early = true;
+            self.now = bound;
+        }
+        self.finish_components();
+        RunReport { events: self.events_processed, end_time: self.now, stopped_early }
+    }
+
+    /// Earliest pending event time (parallel LBTS computation).
+    pub fn next_event_time(&mut self) -> Option<SimTime> {
+        self.init_components(); // init may seed the queue
+        self.queue.peek_time()
+    }
+
+    /// Conservative window step: process every event with time < `bound`
+    /// (half-open YAWNS window), then return. Does NOT run `finish`
+    /// hooks — call [`Engine::finish`] when the whole parallel run ends.
+    pub fn run_window(&mut self, bound: SimTime) -> u64 {
+        self.init_components();
+        let before = self.events_processed;
+        let mut stop = false;
+        while let Some(ev) = self.queue.pop_before(bound) {
+            debug_assert!(ev.time >= self.now, "time went backwards");
+            self.now = ev.time;
+            self.events_processed += 1;
+            let mut ctx = Ctx {
+                now: self.now,
+                self_id: ev.target,
+                out: &mut self.emit_buf,
+                links: &self.links,
+                stats: &mut self.stats,
+                rng: &mut self.rng,
+                stop: &mut stop,
+            };
+            self.components[ev.target].handle(ev.payload, &mut ctx);
+            for e in self.emit_buf.drain(..) {
+                self.queue.push(e.time, e.priority, e.target, e.payload);
+            }
+            if stop {
+                break;
+            }
+        }
+        self.events_processed - before
+    }
+
+    /// Run `finish` hooks (close statistics) after windowed execution.
+    pub fn finish(&mut self) {
+        self.finish_components();
+    }
+
+    /// Inclusive-bound event loop shared by `run`; returns true if a
+    /// component requested stop.
+    fn drain_until(&mut self, bound: SimTime, inclusive: bool) -> bool {
+        let mut stop = false;
+        loop {
+            let ev = if inclusive {
+                self.queue.pop_at_or_before(bound)
+            } else {
+                self.queue.pop_before(bound)
+            };
+            let Some(ev) = ev else { break };
+            debug_assert!(ev.time >= self.now, "time went backwards");
+            self.now = ev.time;
+            self.events_processed += 1;
+            let mut ctx = Ctx {
+                now: self.now,
+                self_id: ev.target,
+                out: &mut self.emit_buf,
+                links: &self.links,
+                stats: &mut self.stats,
+                rng: &mut self.rng,
+                stop: &mut stop,
+            };
+            self.components[ev.target].handle(ev.payload, &mut ctx);
+            for e in self.emit_buf.drain(..) {
+                self.queue.push(e.time, e.priority, e.target, e.payload);
+            }
+            if stop {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn finish_components(&mut self) {
+        let mut stop = false;
+        for id in 0..self.components.len() {
+            let mut ctx = Ctx {
+                now: self.now,
+                self_id: id,
+                out: &mut self.emit_buf,
+                links: &self.links,
+                stats: &mut self.stats,
+                rng: &mut self.rng,
+                stop: &mut stop,
+            };
+            self.components[id].finish(&mut ctx);
+        }
+        self.emit_buf.clear(); // finish() may not schedule new work
+    }
+
+    /// Events delivered so far.
+    pub fn events_processed(&self) -> u64 {
+        self.events_processed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::any::Any;
+
+    /// Ping-pong pair: A sends to B, B replies, N rounds.
+    struct Pinger {
+        name: String,
+        peer: ComponentId,
+        rounds_left: u32,
+        seen: Vec<SimTime>,
+    }
+
+    impl Component<u32> for Pinger {
+        fn name(&self) -> &str {
+            &self.name
+        }
+        fn handle(&mut self, v: u32, ctx: &mut Ctx<u32>) {
+            self.seen.push(ctx.now());
+            if self.rounds_left > 0 {
+                self.rounds_left -= 1;
+                ctx.send(self.peer, Priority::DEFAULT, v + 1);
+            }
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    fn pingpong(latency: u64) -> (Engine<u32>, ComponentId, ComponentId) {
+        let mut e = Engine::new(1);
+        let a = e.add(Box::new(Pinger {
+            name: "a".into(),
+            peer: 1,
+            rounds_left: 3,
+            seen: vec![],
+        }));
+        let b = e.add(Box::new(Pinger {
+            name: "b".into(),
+            peer: 0,
+            rounds_left: 3,
+            seen: vec![],
+        }));
+        e.connect(a, b, SimDuration(latency));
+        e.connect(b, a, SimDuration(latency));
+        (e, a, b)
+    }
+
+    #[test]
+    fn pingpong_advances_clock_by_latency() {
+        let (mut e, a, _b) = pingpong(5);
+        e.schedule(SimTime(0), Priority::DEFAULT, a, 0);
+        let r = e.run(None);
+        // a@0, b@5, a@10, b@15, a@20, b@25, a@30 = 7 deliveries
+        assert_eq!(r.events, 7);
+        assert_eq!(r.end_time, SimTime(30));
+        assert!(!r.stopped_early);
+        let pa = e.get::<Pinger>(a).unwrap();
+        assert_eq!(pa.seen, vec![SimTime(0), SimTime(10), SimTime(20), SimTime(30)]);
+    }
+
+    #[test]
+    fn horizon_stops_run() {
+        let (mut e, a, _) = pingpong(5);
+        e.schedule(SimTime(0), Priority::DEFAULT, a, 0);
+        let r = e.run(Some(SimTime(12)));
+        assert!(r.stopped_early);
+        assert_eq!(r.events, 3); // t=0,5,10
+        assert_eq!(r.end_time, SimTime(12));
+    }
+
+    #[test]
+    fn duplicate_names_panic() {
+        let mut e: Engine<u32> = Engine::new(0);
+        e.add(Box::new(Pinger { name: "x".into(), peer: 0, rounds_left: 0, seen: vec![] }));
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e.add(Box::new(Pinger { name: "x".into(), peer: 0, rounds_left: 0, seen: vec![] }));
+        }));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn id_lookup() {
+        let (e, a, b) = pingpong(1);
+        assert_eq!(e.id_of("a"), Some(a));
+        assert_eq!(e.id_of("b"), Some(b));
+        assert_eq!(e.id_of("c"), None);
+    }
+
+    struct Stopper {
+        at: u32,
+    }
+    impl Component<u32> for Stopper {
+        fn name(&self) -> &str {
+            "stopper"
+        }
+        fn handle(&mut self, v: u32, ctx: &mut Ctx<u32>) {
+            if v >= self.at {
+                ctx.request_stop();
+            } else {
+                ctx.schedule_self(SimDuration(1), Priority::DEFAULT, v + 1);
+            }
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    #[test]
+    fn request_stop_halts() {
+        let mut e = Engine::new(0);
+        let s = e.add(Box::new(Stopper { at: 5 }));
+        e.schedule(SimTime(0), Priority::DEFAULT, s, 0);
+        let r = e.run(None);
+        assert!(r.stopped_early);
+        assert_eq!(r.end_time, SimTime(5));
+    }
+
+    struct Initter {
+        fired: bool,
+    }
+    impl Component<u32> for Initter {
+        fn name(&self) -> &str {
+            "initter"
+        }
+        fn init(&mut self, ctx: &mut Ctx<u32>) {
+            ctx.schedule_self(SimDuration(3), Priority::DEFAULT, 99);
+        }
+        fn handle(&mut self, v: u32, _ctx: &mut Ctx<u32>) {
+            assert_eq!(v, 99);
+            self.fired = true;
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    #[test]
+    fn init_can_schedule() {
+        let mut e = Engine::new(0);
+        let i = e.add(Box::new(Initter { fired: false }));
+        let r = e.run(None);
+        assert_eq!(r.events, 1);
+        assert!(e.get::<Initter>(i).unwrap().fired);
+    }
+
+    #[test]
+    fn deterministic_event_counts() {
+        let run = |seed| {
+            let (mut e, a, _) = pingpong(2);
+            let _ = seed;
+            e.schedule(SimTime(0), Priority::DEFAULT, a, 0);
+            e.run(None).events
+        };
+        assert_eq!(run(1), run(2));
+    }
+}

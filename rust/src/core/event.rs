@@ -1,0 +1,190 @@
+//! Scheduled events and the central event queue.
+//!
+//! Mirrors SST-Core's event model: an event is a payload delivered to a
+//! component at a simulated time. Ordering is total and deterministic:
+//! (time, priority, sequence-number), so two runs of the same simulation
+//! process events in exactly the same order.
+
+use crate::core::time::SimTime;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Index of a component registered with an engine.
+pub type ComponentId = usize;
+
+/// Tie-break priority within a timestamp; lower runs first.
+///
+/// The simulator uses a small set of well-known priorities so that, e.g.,
+/// completions at time t free resources before the scheduler runs at t.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Priority(pub u8);
+
+impl Priority {
+    /// Resource releases / job completions.
+    pub const COMPLETE: Priority = Priority(0);
+    /// Arrivals / submissions.
+    pub const ARRIVE: Priority = Priority(1);
+    /// Scheduler invocations.
+    pub const SCHEDULE: Priority = Priority(2);
+    /// Statistics sampling, reporting.
+    pub const SAMPLE: Priority = Priority(3);
+    pub const DEFAULT: Priority = Priority(2);
+}
+
+/// An event scheduled for delivery.
+#[derive(Debug, Clone)]
+pub struct Scheduled<P> {
+    pub time: SimTime,
+    pub priority: Priority,
+    /// Monotone sequence number: FIFO among equal (time, priority).
+    pub seq: u64,
+    pub target: ComponentId,
+    pub payload: P,
+}
+
+impl<P> PartialEq for Scheduled<P> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key() == other.key()
+    }
+}
+impl<P> Eq for Scheduled<P> {}
+
+impl<P> Scheduled<P> {
+    #[inline]
+    fn key(&self) -> (SimTime, Priority, u64) {
+        (self.time, self.priority, self.seq)
+    }
+}
+
+impl<P> PartialOrd for Scheduled<P> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<P> Ord for Scheduled<P> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        other.key().cmp(&self.key())
+    }
+}
+
+/// Min-heap of scheduled events with deterministic total order.
+#[derive(Debug)]
+pub struct EventQueue<P> {
+    heap: BinaryHeap<Scheduled<P>>,
+    next_seq: u64,
+}
+
+impl<P> Default for EventQueue<P> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+}
+
+impl<P> EventQueue<P> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue { heap: BinaryHeap::with_capacity(cap), next_seq: 0 }
+    }
+
+    /// Schedule `payload` for `target` at absolute `time`.
+    pub fn push(&mut self, time: SimTime, priority: Priority, target: ComponentId, payload: P) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { time, priority, seq, target, payload });
+    }
+
+    /// Earliest pending timestamp, if any.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn pop(&mut self) -> Option<Scheduled<P>> {
+        self.heap.pop()
+    }
+
+    /// Pop the next event only if it is at or before `bound` (conservative
+    /// window execution in the parallel engine).
+    pub fn pop_at_or_before(&mut self, bound: SimTime) -> Option<Scheduled<P>> {
+        match self.heap.peek() {
+            Some(e) if e.time <= bound => self.heap.pop(),
+            _ => None,
+        }
+    }
+
+    /// Pop the next event only if it is strictly before `bound` (YAWNS
+    /// windows are half-open: [start, bound)).
+    pub fn pop_before(&mut self, bound: SimTime) -> Option<Scheduled<P>> {
+        match self.heap.peek() {
+            Some(e) if e.time < bound => self.heap.pop(),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(SimTime(5), Priority::DEFAULT, 0, "c");
+        q.push(SimTime(1), Priority::DEFAULT, 0, "a");
+        q.push(SimTime(3), Priority::DEFAULT, 0, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|e| e.payload).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn priority_breaks_time_ties() {
+        let mut q = EventQueue::new();
+        q.push(SimTime(2), Priority::SCHEDULE, 0, "sched");
+        q.push(SimTime(2), Priority::COMPLETE, 0, "complete");
+        q.push(SimTime(2), Priority::ARRIVE, 0, "arrive");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|e| e.payload).collect();
+        assert_eq!(order, vec!["complete", "arrive", "sched"]);
+    }
+
+    #[test]
+    fn seq_breaks_full_ties_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(SimTime(7), Priority::DEFAULT, 0, i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|e| e.payload).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pop_at_or_before_respects_bound() {
+        let mut q = EventQueue::new();
+        q.push(SimTime(1), Priority::DEFAULT, 0, "a");
+        q.push(SimTime(10), Priority::DEFAULT, 0, "b");
+        assert_eq!(q.pop_at_or_before(SimTime(5)).unwrap().payload, "a");
+        assert!(q.pop_at_or_before(SimTime(5)).is_none());
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop_at_or_before(SimTime(10)).unwrap().payload, "b");
+    }
+
+    #[test]
+    fn peek_time() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(SimTime(9), Priority::DEFAULT, 1, ());
+        q.push(SimTime(4), Priority::DEFAULT, 1, ());
+        assert_eq!(q.peek_time(), Some(SimTime(4)));
+    }
+}

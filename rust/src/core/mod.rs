@@ -1,0 +1,23 @@
+//! The discrete-event simulation core (SST-Core analogue).
+//!
+//! Pure, payload-generic DES machinery with no knowledge of jobs or
+//! workflows: simulated time, a deterministic event queue, components
+//! connected by latency links, a statistics framework, and a
+//! reproducible RNG. Everything HPC-specific lives in the layers above
+//! (`job`, `sched`, `resources`, `workflow`, `sim`).
+
+pub mod component;
+pub mod engine;
+pub mod event;
+pub mod link;
+pub mod rng;
+pub mod stats;
+pub mod time;
+
+pub use component::{Component, Ctx};
+pub use engine::{Engine, RunReport};
+pub use event::{ComponentId, EventQueue, Priority, Scheduled};
+pub use link::LinkTable;
+pub use rng::Rng;
+pub use stats::{Accumulator, Histogram, Stat, StatRegistry, TimeSeries};
+pub use time::{SimDuration, SimTime};

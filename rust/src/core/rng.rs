@@ -1,0 +1,325 @@
+//! Deterministic pseudo-random numbers and the distributions the workload
+//! models need.
+//!
+//! The simulator must be bit-reproducible across runs and across rank
+//! counts (the parallel engine partitions work, it must not change the
+//! workload), so we carry our own small generator instead of a crate:
+//! xoshiro256++ seeded through SplitMix64, plus the handful of
+//! distributions the DAS-2 / SDSC-SP2 workload models and the workflow
+//! generators draw from.
+
+/// xoshiro256++ PRNG (Blackman & Vigna), seeded via SplitMix64.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Rng {
+        let mut sm = seed;
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// Derive an independent stream (e.g. one per workflow generator).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1) double.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection for unbiased bounded ints.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// true with probability p.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with given rate (mean = 1/rate).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        // 1 - f64() is in (0,1], avoiding ln(0).
+        -(1.0 - self.f64()).ln() / rate
+    }
+
+    /// Standard normal via Box-Muller (one value per call; simple > fast).
+    pub fn normal(&mut self, mean: f64, std: f64) -> f64 {
+        let u1 = 1.0 - self.f64(); // (0,1]
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        mean + std * r * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Lognormal: exp(N(mu, sigma)). Heavy-tailed job runtimes.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Bounded Pareto on [lo, hi] with tail index alpha — job size tails.
+    pub fn pareto(&mut self, alpha: f64, lo: f64, hi: f64) -> f64 {
+        debug_assert!(alpha > 0.0 && lo > 0.0 && hi > lo);
+        let u = self.f64();
+        let la = lo.powf(alpha);
+        let ha = hi.powf(alpha);
+        (-(u * ha - u * la - ha) / (ha * la)).powf(-1.0 / alpha)
+    }
+
+    /// Weibull(shape k, scale lambda) — interarrival burstiness.
+    pub fn weibull(&mut self, k: f64, lambda: f64) -> f64 {
+        debug_assert!(k > 0.0 && lambda > 0.0);
+        lambda * (-(1.0 - self.f64()).ln()).powf(1.0 / k)
+    }
+
+    /// Gamma(shape k, scale theta) via Marsaglia-Tsang, k >= 0.01.
+    pub fn gamma(&mut self, k: f64, theta: f64) -> f64 {
+        debug_assert!(k > 0.0 && theta > 0.0);
+        if k < 1.0 {
+            // Boost: Gamma(k) = Gamma(k+1) * U^(1/k)
+            let g = self.gamma(k + 1.0, 1.0);
+            return g * self.f64().powf(1.0 / k) * theta;
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal(0.0, 1.0);
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v * theta;
+            }
+        }
+    }
+
+    /// Index sampled from unnormalized weights.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        debug_assert!(!weights.is_empty());
+        let total: f64 = weights.iter().sum();
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Power-of-two job size in [1, max_pow2], biased toward the weights
+    /// (HPC traces are strongly power-of-two: Feitelson workload models).
+    pub fn pow2_size(&mut self, weights: &[f64]) -> u64 {
+        1u64 << self.weighted(weights)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(4);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let x = r.below(7) as usize;
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn range_inclusive() {
+        let mut r = Rng::new(5);
+        for _ in 0..1000 {
+            let x = r.range(10, 12);
+            assert!((10..=12).contains(&x));
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(6);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal(3.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.15, "var={var}");
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let mut r = Rng::new(8);
+        for _ in 0..1000 {
+            assert!(r.lognormal(4.0, 1.5) > 0.0);
+        }
+    }
+
+    #[test]
+    fn pareto_bounded() {
+        let mut r = Rng::new(9);
+        for _ in 0..5000 {
+            let x = r.pareto(1.2, 1.0, 512.0);
+            assert!((1.0..=512.0 + 1e-9).contains(&x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn gamma_mean() {
+        let mut r = Rng::new(10);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.gamma(2.0, 3.0)).sum::<f64>() / n as f64;
+        assert!((mean - 6.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn weighted_respects_zero_weight() {
+        let mut r = Rng::new(11);
+        for _ in 0..1000 {
+            let i = r.weighted(&[0.0, 1.0, 0.0]);
+            assert_eq!(i, 1);
+        }
+    }
+
+    #[test]
+    fn pow2_size_is_power_of_two() {
+        let mut r = Rng::new(12);
+        for _ in 0..1000 {
+            let s = r.pow2_size(&[1.0, 2.0, 4.0, 2.0, 1.0]);
+            assert!(s.is_power_of_two());
+            assert!(s <= 16);
+        }
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut base = Rng::new(13);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(14);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,406 @@
+//! Statistics framework (SST::Statistics analogue).
+//!
+//! Components register named statistics with the engine's [`StatRegistry`]
+//! and record into them as the simulation runs. Three kinds cover
+//! everything the paper reports:
+//!
+//! * [`Accumulator`] — streaming count/sum/min/max/mean/variance (Welford).
+//! * [`Histogram`] — fixed-width bins with under/overflow.
+//! * [`TimeSeries`] — (time, value) samples, e.g. node occupancy over time.
+
+use crate::core::time::SimTime;
+use std::collections::BTreeMap;
+
+/// Streaming moments via Welford's algorithm.
+#[derive(Debug, Clone, Default)]
+pub struct Accumulator {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Accumulator { n: 0, mean: 0.0, m2: 0.0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Merge another accumulator into this one (parallel rank reduction).
+    pub fn merge(&mut self, other: &Accumulator) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n;
+        self.mean = (self.mean * self.n as f64 + other.mean * other.n as f64) / n;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets plus
+/// underflow/overflow counters.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    width: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, width: (hi - lo) / bins as f64, counts: vec![0; bins], underflow: 0, overflow: 0 }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x - self.lo) / self.width) as usize;
+        if idx >= self.counts.len() {
+            self.overflow += 1;
+        } else {
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.counts
+    }
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Lower edge of bin i.
+    pub fn edge(&self, i: usize) -> f64 {
+        self.lo + self.width * i as f64
+    }
+}
+
+/// (time, value) samples.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pts: Vec<(SimTime, f64)>,
+}
+
+impl TimeSeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, t: SimTime, v: f64) {
+        self.pts.push((t, v));
+    }
+
+    pub fn points(&self) -> &[(SimTime, f64)] {
+        &self.pts
+    }
+
+    pub fn len(&self) -> usize {
+        self.pts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pts.is_empty()
+    }
+
+    /// Time-weighted average of a step function sampled at these points,
+    /// over [first, horizon). Each sample holds until the next one.
+    pub fn time_weighted_mean(&self, horizon: SimTime) -> f64 {
+        if self.pts.is_empty() {
+            return 0.0;
+        }
+        let mut weighted = 0.0;
+        let mut span = 0.0;
+        for w in self.pts.windows(2) {
+            let dt = (w[1].0 - w[0].0).as_f64();
+            weighted += w[0].1 * dt;
+            span += dt;
+        }
+        let last = self.pts[self.pts.len() - 1];
+        if horizon > last.0 {
+            let dt = (horizon - last.0).as_f64();
+            weighted += last.1 * dt;
+            span += dt;
+        }
+        if span == 0.0 {
+            last.1
+        } else {
+            weighted / span
+        }
+    }
+
+    /// Downsample to at most `n` evenly spaced points (for printing).
+    pub fn downsample(&self, n: usize) -> Vec<(SimTime, f64)> {
+        if self.pts.len() <= n || n == 0 {
+            return self.pts.clone();
+        }
+        let stride = self.pts.len() as f64 / n as f64;
+        (0..n)
+            .map(|i| self.pts[(i as f64 * stride) as usize])
+            .collect()
+    }
+}
+
+/// A named statistic.
+#[derive(Debug, Clone)]
+pub enum Stat {
+    Acc(Accumulator),
+    Hist(Histogram),
+    Series(TimeSeries),
+}
+
+/// Registry of named statistics, keyed "component.stat".
+#[derive(Debug, Default)]
+pub struct StatRegistry {
+    stats: BTreeMap<String, Stat>,
+}
+
+impl StatRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn acc(&mut self, name: &str) -> &mut Accumulator {
+        let e = self
+            .stats
+            .entry(name.to_string())
+            .or_insert_with(|| Stat::Acc(Accumulator::new()));
+        match e {
+            Stat::Acc(a) => a,
+            _ => panic!("stat {name} exists with a different kind"),
+        }
+    }
+
+    pub fn hist(&mut self, name: &str, lo: f64, hi: f64, bins: usize) -> &mut Histogram {
+        let e = self
+            .stats
+            .entry(name.to_string())
+            .or_insert_with(|| Stat::Hist(Histogram::new(lo, hi, bins)));
+        match e {
+            Stat::Hist(h) => h,
+            _ => panic!("stat {name} exists with a different kind"),
+        }
+    }
+
+    pub fn series(&mut self, name: &str) -> &mut TimeSeries {
+        let e = self
+            .stats
+            .entry(name.to_string())
+            .or_insert_with(|| Stat::Series(TimeSeries::new()));
+        match e {
+            Stat::Series(s) => s,
+            _ => panic!("stat {name} exists with a different kind"),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Stat> {
+        self.stats.get(name)
+    }
+
+    pub fn get_acc(&self, name: &str) -> Option<&Accumulator> {
+        match self.stats.get(name) {
+            Some(Stat::Acc(a)) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn get_series(&self, name: &str) -> Option<&TimeSeries> {
+        match self.stats.get(name) {
+            Some(Stat::Series(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_hist(&self, name: &str) -> Option<&Histogram> {
+        match self.stats.get(name) {
+            Some(Stat::Hist(h)) => Some(h),
+            _ => None,
+        }
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.stats.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.stats.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stats.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_moments() {
+        let mut a = Accumulator::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            a.record(x);
+        }
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.sum(), 15.0);
+        assert!((a.mean() - 3.0).abs() < 1e-12);
+        assert!((a.variance() - 2.5).abs() < 1e-12);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 5.0);
+    }
+
+    #[test]
+    fn accumulator_empty_is_zeroes() {
+        let a = Accumulator::new();
+        assert_eq!(a.mean(), 0.0);
+        assert_eq!(a.variance(), 0.0);
+        assert_eq!(a.min(), 0.0);
+        assert_eq!(a.max(), 0.0);
+    }
+
+    #[test]
+    fn accumulator_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = Accumulator::new();
+        for &x in &xs {
+            whole.record(x);
+        }
+        let mut left = Accumulator::new();
+        let mut right = Accumulator::new();
+        for &x in &xs[..37] {
+            left.record(x);
+        }
+        for &x in &xs[37..] {
+            right.record(x);
+        }
+        left.merge(&right);
+        assert_eq!(left.count(), whole.count());
+        assert!((left.mean() - whole.mean()).abs() < 1e-9);
+        assert!((left.variance() - whole.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 5);
+        for x in [-1.0, 0.0, 1.9, 2.0, 9.99, 10.0, 55.0] {
+            h.record(x);
+        }
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 2);
+        assert_eq!(h.bins(), &[2, 1, 0, 0, 1]);
+        assert_eq!(h.total(), 7);
+        assert_eq!(h.edge(1), 2.0);
+    }
+
+    #[test]
+    fn time_weighted_mean_step_function() {
+        let mut s = TimeSeries::new();
+        s.record(SimTime(0), 10.0); // holds for 10 ticks
+        s.record(SimTime(10), 0.0); // holds for 10 ticks
+        assert!((s.time_weighted_mean(SimTime(20)) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn downsample_keeps_bounds() {
+        let mut s = TimeSeries::new();
+        for i in 0..1000 {
+            s.record(SimTime(i), i as f64);
+        }
+        let d = s.downsample(10);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d[0].0, SimTime(0));
+    }
+
+    #[test]
+    fn registry_kinds() {
+        let mut r = StatRegistry::new();
+        r.acc("sched.wait").record(5.0);
+        r.acc("sched.wait").record(7.0);
+        r.series("cluster.occupancy").record(SimTime(1), 3.0);
+        r.hist("sched.wait_hist", 0.0, 100.0, 10).record(5.0);
+        assert_eq!(r.get_acc("sched.wait").unwrap().count(), 2);
+        assert_eq!(r.get_series("cluster.occupancy").unwrap().len(), 1);
+        assert_eq!(r.get_hist("sched.wait_hist").unwrap().total(), 1);
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn registry_kind_mismatch_panics() {
+        let mut r = StatRegistry::new();
+        r.acc("x");
+        r.series("x");
+    }
+}

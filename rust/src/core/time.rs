@@ -1,0 +1,146 @@
+//! Simulation time.
+//!
+//! The simulator uses a discrete integer clock. One tick corresponds to one
+//! second by convention (workload traces — SWF/GWF — carry second
+//! resolution), but nothing in the core assumes a unit: components only rely
+//! on the total order and on tick arithmetic.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in simulated time, in ticks since simulation start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+/// A span of simulated time, in ticks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimDuration(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+    /// A time later than any event a simulation will ever schedule.
+    pub const MAX: SimTime = SimTime(u64::MAX);
+
+    #[inline]
+    pub fn ticks(self) -> u64 {
+        self.0
+    }
+
+    /// Saturating difference `self - earlier`.
+    #[inline]
+    pub fn since(self, earlier: SimTime) -> SimDuration {
+        SimDuration(self.0.saturating_sub(earlier.0))
+    }
+
+    #[inline]
+    pub fn as_f64(self) -> f64 {
+        self.0 as f64
+    }
+}
+
+impl SimDuration {
+    pub const ZERO: SimDuration = SimDuration(0);
+
+    #[inline]
+    pub fn ticks(self) -> u64 {
+        self.0
+    }
+
+    #[inline]
+    pub fn as_f64(self) -> f64 {
+        self.0 as f64
+    }
+
+    /// Construct from a float tick count, rounding to the nearest tick and
+    /// clamping negatives to zero (sources: lognormal runtime samples).
+    #[inline]
+    pub fn from_f64(t: f64) -> SimDuration {
+        if t <= 0.0 {
+            SimDuration(0)
+        } else {
+            SimDuration(t.round() as u64)
+        }
+    }
+}
+
+impl Add<SimDuration> for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn add(self, rhs: SimDuration) -> SimTime {
+        SimTime(self.0.saturating_add(rhs.0))
+    }
+}
+
+impl AddAssign<SimDuration> for SimTime {
+    #[inline]
+    fn add_assign(&mut self, rhs: SimDuration) {
+        self.0 = self.0.saturating_add(rhs.0);
+    }
+}
+
+impl Add for SimDuration {
+    type Output = SimDuration;
+    #[inline]
+    fn add(self, rhs: SimDuration) -> SimDuration {
+        SimDuration(self.0.saturating_add(rhs.0))
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimDuration;
+    #[inline]
+    fn sub(self, rhs: SimTime) -> SimDuration {
+        self.since(rhs)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "t={}", self.0)
+    }
+}
+
+impl fmt::Display for SimDuration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}s", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_duration() {
+        assert_eq!(SimTime(10) + SimDuration(5), SimTime(15));
+    }
+
+    #[test]
+    fn since_saturates() {
+        assert_eq!(SimTime(5).since(SimTime(10)), SimDuration(0));
+        assert_eq!(SimTime(10).since(SimTime(4)), SimDuration(6));
+    }
+
+    #[test]
+    fn sub_is_since() {
+        assert_eq!(SimTime(10) - SimTime(4), SimDuration(6));
+    }
+
+    #[test]
+    fn from_f64_rounds_and_clamps() {
+        assert_eq!(SimDuration::from_f64(-3.0), SimDuration(0));
+        assert_eq!(SimDuration::from_f64(2.4), SimDuration(2));
+        assert_eq!(SimDuration::from_f64(2.6), SimDuration(3));
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(SimTime(1) < SimTime(2));
+        assert!(SimTime::MAX > SimTime(u64::MAX - 1));
+    }
+
+    #[test]
+    fn add_saturates_at_max() {
+        assert_eq!(SimTime::MAX + SimDuration(1), SimTime::MAX);
+    }
+}

@@ -1,0 +1,462 @@
+//! Experiment harness: one runner per paper figure (DESIGN.md §3).
+//!
+//! Every runner regenerates the series/rows its figure plots and returns
+//! them as data (benches and tests reuse them); `print_*` companions
+//! render the aligned-column tables the CLI shows. Absolute numbers
+//! differ from the paper (synthetic trace calibrations, different
+//! hardware) but the *shapes* are asserted in rust/tests/figures.rs:
+//! who wins, by what rough factor, where the crossovers fall.
+
+use crate::baseline::run_baseline;
+use crate::core::time::SimTime;
+use crate::metrics::{correlation, mae, nmae, resample, wait_stats};
+use crate::parallel::{run_jobs_parallel_modeled, run_workflow_parallel_modeled};
+use crate::sched::Policy;
+use crate::sim::run_policy;
+use crate::trace::{Das2Model, SdscSp2Model, Workload};
+use crate::util::table::{f, Table};
+use crate::workflow::generators::{galactic_plane_wide, sipht};
+use crate::workflow::WorkflowExecutor;
+
+/// Validation series: ours vs the CQsim-like baseline on a common grid.
+#[derive(Debug, Clone)]
+pub struct ValidationSeries {
+    pub what: &'static str,
+    pub t: Vec<u64>,
+    pub ours: Vec<f64>,
+    pub baseline: Vec<f64>,
+    pub nmae: f64,
+    pub correlation: f64,
+}
+
+fn validation(
+    what: &'static str,
+    workload: &Workload,
+    points: usize,
+    pick: impl Fn(&crate::sim::SimReport) -> &crate::core::stats::TimeSeries,
+    pick_base: impl Fn(&crate::baseline::BaselineReport) -> &crate::core::stats::TimeSeries,
+) -> ValidationSeries {
+    let ours_rep = run_policy(workload.clone(), Policy::Fcfs);
+    let base_rep = run_baseline(workload, Policy::Fcfs);
+    let t0 = SimTime::ZERO;
+    let t1 = SimTime(ours_rep.end_time.ticks().max(base_rep.end_time.ticks()));
+    let ours = resample(pick(&ours_rep), t0, t1, points);
+    let baseline = resample(pick_base(&base_rep), t0, t1, points);
+    let grid: Vec<u64> = (0..points)
+        .map(|k| t1.ticks() * k as u64 / (points as u64 - 1).max(1))
+        .collect();
+    ValidationSeries {
+        what,
+        nmae: nmae(&ours, &baseline),
+        correlation: correlation(&ours, &baseline),
+        t: grid,
+        ours,
+        baseline,
+    }
+}
+
+/// Fig 3(a): node occupancy over time, ours vs CQsim-like (DAS-2-like).
+pub fn fig3a(jobs: usize, seed: u64, points: usize) -> ValidationSeries {
+    let w = Das2Model::default().generate(jobs, seed).drop_infeasible();
+    validation("occupied nodes", &w, points, |r| &r.occupancy, |b| &b.occupancy)
+}
+
+/// Fig 3(b): running jobs over time, ours vs CQsim-like (DAS-2-like).
+pub fn fig3b(jobs: usize, seed: u64, points: usize) -> ValidationSeries {
+    let w = Das2Model::default().generate(jobs, seed).drop_infeasible();
+    validation("running jobs", &w, points, |r| &r.running, |b| &b.running)
+}
+
+pub fn print_validation(v: &ValidationSeries) {
+    let mut t = Table::new(&["time", &format!("ours ({})", v.what), "cqsim-like"]);
+    for i in 0..v.t.len() {
+        t.row(&[v.t[i].to_string(), f(v.ours[i]), f(v.baseline[i])]);
+    }
+    t.print();
+    println!("NMAE = {:.4}   correlation = {:.4}\n", v.nmae, v.correlation);
+}
+
+/// Fig 4(a): per-job wait-time validation, binned over submission order.
+#[derive(Debug, Clone)]
+pub struct WaitValidation {
+    pub bins: Vec<usize>,
+    pub ours: Vec<f64>,
+    pub baseline: Vec<f64>,
+    pub mae: f64,
+    pub correlation: f64,
+}
+
+pub fn fig4a(jobs: usize, seed: u64, bins: usize) -> WaitValidation {
+    // Arrivals compressed so queues actually form (zero-wait validation
+    // would be vacuous).
+    let w = Das2Model::default()
+        .generate(jobs, seed)
+        .scale_arrivals(0.45)
+        .drop_infeasible();
+    let ours = run_policy(w.clone(), Policy::Fcfs);
+    let base = run_baseline(&w, Policy::Fcfs);
+    // Mean wait per submit-order bin.
+    let bin_means = |mut jobs: Vec<crate::job::Job>| -> Vec<f64> {
+        jobs.sort_by_key(|j| (j.submit, j.id));
+        let n = jobs.len().max(1);
+        let mut out = vec![0.0; bins];
+        let mut cnt = vec![0usize; bins];
+        for (i, j) in jobs.iter().enumerate() {
+            let b = (i * bins / n).min(bins - 1);
+            if let Some(wt) = j.wait_time() {
+                out[b] += wt.as_f64();
+                cnt[b] += 1;
+            }
+        }
+        for b in 0..bins {
+            if cnt[b] > 0 {
+                out[b] /= cnt[b] as f64;
+            }
+        }
+        out
+    };
+    let o = bin_means(ours.completed);
+    let b = bin_means(base.completed);
+    WaitValidation {
+        mae: mae(&o, &b),
+        correlation: correlation(&o, &b),
+        bins: (0..bins).collect(),
+        ours: o,
+        baseline: b,
+    }
+}
+
+pub fn print_fig4a(v: &WaitValidation) {
+    let mut t = Table::new(&["job bin", "ours mean wait (s)", "cqsim-like (s)"]);
+    for i in 0..v.bins.len() {
+        t.row(&[v.bins[i].to_string(), f(v.ours[i]), f(v.baseline[i])]);
+    }
+    t.print();
+    println!("MAE = {:.2} s   correlation = {:.4}\n", v.mae, v.correlation);
+}
+
+/// Fig 4(b): the five scheduling algorithms compared.
+#[derive(Debug, Clone)]
+pub struct PolicyRow {
+    pub policy: &'static str,
+    pub mean_wait: f64,
+    pub median_wait: f64,
+    pub p95_wait: f64,
+    pub mean_slowdown: f64,
+    pub utilization: f64,
+    pub makespan: u64,
+}
+
+pub fn fig4b(jobs: usize, seed: u64) -> Vec<PolicyRow> {
+    // Higher load than the validation runs so policies separate.
+    let w = Das2Model::default()
+        .generate(jobs, seed)
+        .scale_arrivals(0.45)
+        .drop_infeasible();
+    Policy::ALL
+        .iter()
+        .map(|&p| {
+            let r = run_policy(w.clone(), p);
+            let s = r.wait_stats();
+            PolicyRow {
+                policy: p.as_str(),
+                mean_wait: s.mean_wait,
+                median_wait: s.median_wait,
+                p95_wait: s.p95_wait,
+                mean_slowdown: s.mean_slowdown,
+                utilization: r.mean_utilization,
+                makespan: r.makespan().ticks(),
+            }
+        })
+        .collect()
+}
+
+pub fn print_fig4b(rows: &[PolicyRow]) {
+    let mut t = Table::new(&[
+        "policy",
+        "mean wait (s)",
+        "median (s)",
+        "p95 (s)",
+        "slowdown",
+        "utilization",
+        "makespan (s)",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.policy.to_string(),
+            f(r.mean_wait),
+            f(r.median_wait),
+            f(r.p95_wait),
+            f(r.mean_slowdown),
+            format!("{:.3}", r.utilization),
+            r.makespan.to_string(),
+        ]);
+    }
+    t.print();
+    println!();
+}
+
+/// Fig 5 rows: parallel scaling of the job simulator.
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    pub workload: String,
+    pub jobs: usize,
+    pub ranks: usize,
+    pub wall_ms: f64,
+    pub speedup: f64,
+    pub events: u64,
+    pub windows: u64,
+}
+
+/// Fig 5(a)/(b): wall-clock scaling across ranks for DAS-2-like (`sp2 =
+/// false`) or SDSC-SP2-like (`sp2 = true`) workloads, across job scales.
+pub fn fig5(sp2: bool, job_scales: &[usize], ranks_list: &[usize], seed: u64) -> Vec<ScaleRow> {
+    let mut rows = Vec::new();
+    for &jobs in job_scales {
+        let w = if sp2 {
+            SdscSp2Model::default().generate(jobs, seed).drop_infeasible()
+        } else {
+            Das2Model::default().generate(jobs, seed).drop_infeasible()
+        };
+        let mut base_ms = None;
+        for &ranks in ranks_list {
+            // Median of 3 runs for wall-clock stability.
+            let mut walls = Vec::new();
+            let mut last = None;
+            for _ in 0..3 {
+                // Lookahead = one simulated day: the partitioned clusters
+                // share no links, so the sync period is a free knob; a
+                // day mirrors how rarely independent clusters couple.
+                // Modeled PDES wall time — this container has one CPU, so
+                // speedup is computed from per-rank window times (see
+                // run_parallel_modeled; substitution documented in
+                // DESIGN.md).
+                let rep = run_jobs_parallel_modeled(&w, Policy::FcfsBackfill, ranks, 86_400);
+                walls.push(rep.wall.as_secs_f64() * 1e3);
+                last = Some(rep);
+            }
+            walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let wall_ms = walls[walls.len() / 2];
+            let rep = last.unwrap();
+            if ranks == ranks_list[0] {
+                base_ms = Some(wall_ms);
+            }
+            rows.push(ScaleRow {
+                workload: w.name.clone(),
+                jobs,
+                ranks,
+                wall_ms,
+                speedup: base_ms.unwrap_or(wall_ms) / wall_ms,
+                events: rep.total_events(),
+                windows: rep.windows,
+            });
+        }
+    }
+    rows
+}
+
+pub fn print_fig5(rows: &[ScaleRow]) {
+    let mut t =
+        Table::new(&["workload", "jobs", "ranks", "wall (ms)", "speedup", "events", "windows"]);
+    for r in rows {
+        t.row(&[
+            r.workload.clone(),
+            r.jobs.to_string(),
+            r.ranks.to_string(),
+            f(r.wall_ms),
+            format!("{:.2}x", r.speedup),
+            r.events.to_string(),
+            r.windows.to_string(),
+        ]);
+    }
+    t.print();
+    println!();
+}
+
+/// Fig 6: workflow-simulation scaling (Galactic Plane). The real run
+/// mosaics thousands of tiles per survey; width scales the per-survey
+/// mosaic so the DAG is big enough for parallel execution to matter.
+pub fn fig6(surveys: usize, ranks_list: &[usize], seed: u64) -> Vec<ScaleRow> {
+    fig6_wide(surveys, 256, ranks_list, seed)
+}
+
+pub fn fig6_wide(
+    surveys: usize,
+    width: usize,
+    ranks_list: &[usize],
+    seed: u64,
+) -> Vec<ScaleRow> {
+    let w = galactic_plane_wide(surveys, width, seed, false);
+    let total_cpu = 256u64;
+    let mut rows = Vec::new();
+    let mut base_ms = None;
+    for &ranks in ranks_list {
+        let mut walls = Vec::new();
+        let mut last = None;
+        for _ in 0..3 {
+            // Modeled PDES wall time (single-CPU container; see fig5).
+            let rep = run_workflow_parallel_modeled(&w, ranks, total_cpu, 5);
+            walls.push(rep.wall.as_secs_f64() * 1e3);
+            last = Some(rep);
+        }
+        walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let wall_ms = walls[walls.len() / 2];
+        let rep = last.unwrap();
+        if base_ms.is_none() {
+            base_ms = Some(wall_ms);
+        }
+        rows.push(ScaleRow {
+            workload: format!("galactic-plane-{surveys}"),
+            jobs: w.len(),
+            ranks,
+            wall_ms,
+            speedup: base_ms.unwrap() / wall_ms,
+            events: rep.total_events(),
+            windows: rep.windows,
+        });
+    }
+    rows
+}
+
+/// Fig 7: SIPHT workflow wait-time validation. The "real-life
+/// measurement" reference is the published exact stage profile executed
+/// on the reference pool; "ours" is the simulator running the sampled
+/// (jittered) profile of the same workflow.
+#[derive(Debug, Clone)]
+pub struct SiphtRow {
+    pub stage: String,
+    pub tasks: usize,
+    pub ref_wait: f64,
+    pub ours_wait: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SiphtValidation {
+    pub rows: Vec<SiphtRow>,
+    pub mae: f64,
+    pub ref_makespan: u64,
+    pub ours_makespan: u64,
+}
+
+pub fn fig7(replicons: usize, cpu: u64, seed: u64) -> SiphtValidation {
+    let reference = WorkflowExecutor::new(cpu, u64::MAX).run(sipht(replicons, seed, true));
+    let ours = WorkflowExecutor::new(cpu, u64::MAX).run(sipht(replicons, seed, false));
+    let wf = sipht(replicons, seed, true); // for stage lookup
+    let mut stages: std::collections::BTreeMap<String, (usize, f64, f64)> = Default::default();
+    for t in &reference.tasks {
+        let stage = wf.tasks[&t.id].stage.clone();
+        let e = stages.entry(stage).or_insert((0, 0.0, 0.0));
+        e.0 += 1;
+        e.1 += t.wait().as_f64();
+    }
+    for t in &ours.tasks {
+        let stage = wf.tasks[&t.id].stage.clone();
+        let e = stages.entry(stage).or_insert((0, 0.0, 0.0));
+        e.2 += t.wait().as_f64();
+    }
+    let rows: Vec<SiphtRow> = stages
+        .into_iter()
+        .map(|(stage, (n, rw, ow))| SiphtRow {
+            stage,
+            tasks: n,
+            ref_wait: rw / n.max(1) as f64,
+            ours_wait: ow / n.max(1) as f64,
+        })
+        .collect();
+    let r: Vec<f64> = rows.iter().map(|x| x.ref_wait).collect();
+    let o: Vec<f64> = rows.iter().map(|x| x.ours_wait).collect();
+    SiphtValidation {
+        mae: mae(&o, &r),
+        ref_makespan: reference.makespan.ticks(),
+        ours_makespan: ours.makespan.ticks(),
+        rows,
+    }
+}
+
+pub fn print_fig7(v: &SiphtValidation) {
+    let mut t = Table::new(&["stage", "tasks", "ref wait (s)", "ours wait (s)"]);
+    for r in &v.rows {
+        t.row(&[r.stage.clone(), r.tasks.to_string(), f(r.ref_wait), f(r.ours_wait)]);
+    }
+    t.print();
+    println!(
+        "MAE = {:.2} s   makespan ref {} s vs ours {} s\n",
+        v.mae, v.ref_makespan, v.ours_makespan
+    );
+}
+
+/// Summary of one plain `run` invocation (CLI).
+pub fn print_run_report(r: &crate::sim::SimReport) {
+    let s = wait_stats(&r.completed);
+    println!("workload          {}", r.workload);
+    println!("policy            {}", r.policy);
+    println!("jobs completed    {}", s.jobs);
+    println!("jobs rejected     {}", r.rejected);
+    println!("DES events        {}", r.events);
+    println!("dispatch rounds   {}", r.dispatches);
+    println!("sim end time      {} s", r.end_time.ticks());
+    println!("mean wait         {:.1} s", s.mean_wait);
+    println!("median wait       {:.1} s", s.median_wait);
+    println!("p95 wait          {:.1} s", s.p95_wait);
+    println!("mean slowdown     {:.2}", s.mean_slowdown);
+    println!("mean utilization  {:.3}", r.mean_utilization);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3a_validates_closely() {
+        let v = fig3a(800, 3, 24);
+        assert_eq!(v.ours.len(), 24);
+        // Independent implementations must track each other closely.
+        assert!(v.correlation > 0.9, "corr {}", v.correlation);
+        assert!(v.nmae < 0.15, "nmae {}", v.nmae);
+    }
+
+    #[test]
+    fn fig3b_validates_closely() {
+        let v = fig3b(800, 3, 24);
+        assert!(v.correlation > 0.9, "corr {}", v.correlation);
+    }
+
+    #[test]
+    fn fig4a_waits_agree() {
+        let v = fig4a(1500, 5, 10);
+        assert!(v.ours.iter().sum::<f64>() > 0.0, "no waits formed — vacuous validation");
+        assert!(v.correlation > 0.9, "corr {}", v.correlation);
+    }
+
+    #[test]
+    fn fig4b_orders_policies_as_paper() {
+        let rows = fig4b(1500, 11);
+        let by = |name: &str| rows.iter().find(|r| r.policy == name).unwrap().clone();
+        let bf = by("fcfs-backfill");
+        let fcfs = by("fcfs");
+        let sjf = by("sjf");
+        let ljf = by("ljf");
+        // Backfilling beats plain FCFS on wait.
+        assert!(bf.mean_wait <= fcfs.mean_wait, "bf {} fcfs {}", bf.mean_wait, fcfs.mean_wait);
+        // SJF minimizes mean wait among the blocking disciplines.
+        assert!(sjf.mean_wait <= fcfs.mean_wait);
+        // LJF is the worst on mean wait (paper: "less efficient").
+        assert!(ljf.mean_wait >= sjf.mean_wait);
+    }
+
+    #[test]
+    fn fig7_reference_and_ours_are_close() {
+        let v = fig7(2, 8, 1);
+        assert!(!v.rows.is_empty());
+        // Same structure, jittered runtimes: makespans within 25%.
+        let ratio = v.ours_makespan as f64 / v.ref_makespan as f64;
+        assert!((0.75..1.25).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn fig6_completes_all_ranks() {
+        let rows = fig6(2, &[1, 2], 1);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].jobs, rows[1].jobs);
+    }
+}

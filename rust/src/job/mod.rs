@@ -1,0 +1,305 @@
+//! Job model: the unit of work the scheduler manages.
+//!
+//! Mirrors the paper's `TaskEvent` (Listing 1): every arriving job is
+//! encapsulated as a serializable event instance carrying a unique id and
+//! detailed resource requirements, and moves through the lifecycle
+//! submitted -> queued -> running -> completed.
+
+pub mod queue;
+
+pub use queue::WaitQueue;
+
+use crate::core::time::{SimDuration, SimTime};
+use crate::util::json::Json;
+
+/// Unique job identifier.
+pub type JobId = u64;
+
+/// Lifecycle state (paper §2: submission, execution, completion).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobState {
+    /// Known to the system but not yet in the wait queue.
+    Submitted,
+    /// In the wait queue.
+    Queued,
+    /// Executing on allocated nodes.
+    Running,
+    /// Finished; resources reclaimed.
+    Completed,
+    /// Rejected (e.g. requests more cores than the machine has).
+    Rejected,
+}
+
+/// A job: static description + mutable lifecycle timestamps.
+///
+/// This is the `TaskEvent` of the paper: it is the payload serialized
+/// across components ([`Job::to_json`]/[`Job::from_json`] stand in for
+/// SST's serialization macros, paper Listing 1).
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    /// Submission (arrival) time.
+    pub submit: SimTime,
+    /// Requested cores (trace "processors").
+    pub cores: u64,
+    /// Requested memory in MB (0 = unspecified).
+    pub memory_mb: u64,
+    /// User-provided runtime estimate — what backfilling trusts.
+    pub est_runtime: SimDuration,
+    /// Actual runtime — what execution takes.
+    pub runtime: SimDuration,
+    /// Trace user id (0 = unknown).
+    pub user: u32,
+    /// Trace group/project id (0 = unknown).
+    pub group: u32,
+    pub state: JobState,
+    /// Set when the job starts running.
+    pub start: Option<SimTime>,
+    /// Set when the job completes.
+    pub end: Option<SimTime>,
+}
+
+impl Job {
+    /// Build a job in `Submitted` state. `est_runtime` is clamped to at
+    /// least the actual runtime when the trace under-estimates? No —
+    /// traces legitimately contain under-estimates (jobs killed at the
+    /// estimate); we preserve both fields as given and let execution use
+    /// min(est, actual) semantics in the executor if configured.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: JobId,
+        submit: SimTime,
+        cores: u64,
+        memory_mb: u64,
+        est_runtime: SimDuration,
+        runtime: SimDuration,
+        user: u32,
+        group: u32,
+    ) -> Job {
+        Job {
+            id,
+            submit,
+            cores,
+            memory_mb,
+            est_runtime,
+            runtime,
+            user,
+            group,
+            state: JobState::Submitted,
+            start: None,
+            end: None,
+        }
+    }
+
+    /// Minimal constructor for tests and synthetic workloads.
+    pub fn simple(id: JobId, submit: u64, cores: u64, runtime: u64) -> Job {
+        Job::new(
+            id,
+            SimTime(submit),
+            cores,
+            0,
+            SimDuration(runtime),
+            SimDuration(runtime),
+            0,
+            0,
+        )
+    }
+
+    /// Same as [`simple`] but with a distinct user estimate.
+    pub fn with_estimate(id: JobId, submit: u64, cores: u64, runtime: u64, est: u64) -> Job {
+        Job::new(
+            id,
+            SimTime(submit),
+            cores,
+            0,
+            SimDuration(est),
+            SimDuration(runtime),
+            0,
+            0,
+        )
+    }
+
+    /// Wait time: start - submit. None if not started.
+    pub fn wait_time(&self) -> Option<SimDuration> {
+        self.start.map(|s| s - self.submit)
+    }
+
+    /// Turnaround: end - submit. None if not completed.
+    pub fn turnaround(&self) -> Option<SimDuration> {
+        self.end.map(|e| e - self.submit)
+    }
+
+    /// Bounded slowdown with threshold tau (standard scheduling metric):
+    /// max(1, turnaround / max(runtime, tau)).
+    pub fn bounded_slowdown(&self, tau: f64) -> Option<f64> {
+        self.turnaround().map(|t| {
+            let denom = (self.runtime.as_f64()).max(tau);
+            (t.as_f64() / denom).max(1.0)
+        })
+    }
+
+    /// Core-seconds consumed.
+    pub fn core_seconds(&self) -> f64 {
+        self.cores as f64 * self.runtime.as_f64()
+    }
+
+    /// Mark started: Queued/Submitted -> Running. Panics on bad transition
+    /// in debug builds (lifecycle invariant).
+    pub fn mark_started(&mut self, now: SimTime) {
+        debug_assert!(
+            matches!(self.state, JobState::Queued | JobState::Submitted),
+            "job {} started from state {:?}",
+            self.id,
+            self.state
+        );
+        self.state = JobState::Running;
+        self.start = Some(now);
+    }
+
+    /// Mark completed: Running -> Completed.
+    pub fn mark_completed(&mut self, now: SimTime) {
+        debug_assert!(
+            self.state == JobState::Running,
+            "job {} completed from state {:?}",
+            self.id,
+            self.state
+        );
+        self.state = JobState::Completed;
+        self.end = Some(now);
+    }
+
+    /// TaskEvent serialization (paper Listing 1): encode the full event
+    /// state so it transfers losslessly across components/ranks.
+    pub fn to_json(&self) -> Json {
+        let state = match self.state {
+            JobState::Submitted => "submitted",
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Completed => "completed",
+            JobState::Rejected => "rejected",
+        };
+        let mut pairs = vec![
+            ("id", Json::num(self.id as f64)),
+            ("submit", Json::num(self.submit.ticks() as f64)),
+            ("cores", Json::num(self.cores as f64)),
+            ("memory_mb", Json::num(self.memory_mb as f64)),
+            ("est_runtime", Json::num(self.est_runtime.ticks() as f64)),
+            ("runtime", Json::num(self.runtime.ticks() as f64)),
+            ("user", Json::num(self.user as f64)),
+            ("group", Json::num(self.group as f64)),
+            ("state", Json::str(state)),
+        ];
+        if let Some(s) = self.start {
+            pairs.push(("start", Json::num(s.ticks() as f64)));
+        }
+        if let Some(e) = self.end {
+            pairs.push(("end", Json::num(e.ticks() as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Inverse of [`Job::to_json`]. Returns `None` on malformed input.
+    pub fn from_json(v: &Json) -> Option<Job> {
+        let state = match v.get_str_or("state", "submitted") {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "completed" => JobState::Completed,
+            "rejected" => JobState::Rejected,
+            _ => JobState::Submitted,
+        };
+        Some(Job {
+            id: v.get("id")?.as_u64()?,
+            submit: SimTime(v.get("submit")?.as_u64()?),
+            cores: v.get("cores")?.as_u64()?,
+            memory_mb: v.get_u64_or("memory_mb", 0),
+            est_runtime: SimDuration(v.get_u64_or("est_runtime", 0)),
+            runtime: SimDuration(v.get_u64_or("runtime", 0)),
+            user: v.get_u64_or("user", 0) as u32,
+            group: v.get_u64_or("group", 0) as u32,
+            state,
+            start: v.get("start").and_then(|x| x.as_u64()).map(SimTime),
+            end: v.get("end").and_then(|x| x.as_u64()).map(SimTime),
+        })
+    }
+}
+
+/// A scheduling decision: start this job on these nodes now.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub job_id: JobId,
+    /// Node indices receiving the allocation.
+    pub nodes: Vec<usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_and_metrics() {
+        let mut j = Job::simple(1, 100, 8, 50);
+        assert_eq!(j.state, JobState::Submitted);
+        assert_eq!(j.wait_time(), None);
+        j.state = JobState::Queued;
+        j.mark_started(SimTime(130));
+        assert_eq!(j.state, JobState::Running);
+        assert_eq!(j.wait_time(), Some(SimDuration(30)));
+        j.mark_completed(SimTime(180));
+        assert_eq!(j.state, JobState::Completed);
+        assert_eq!(j.turnaround(), Some(SimDuration(80)));
+        assert_eq!(j.core_seconds(), 400.0);
+    }
+
+    #[test]
+    fn bounded_slowdown_floors_at_one() {
+        let mut j = Job::simple(1, 0, 1, 100);
+        j.state = JobState::Queued;
+        j.mark_started(SimTime(0));
+        j.mark_completed(SimTime(100));
+        assert_eq!(j.bounded_slowdown(10.0), Some(1.0));
+    }
+
+    #[test]
+    fn bounded_slowdown_uses_tau_for_tiny_jobs() {
+        let mut j = Job::simple(1, 0, 1, 1);
+        j.state = JobState::Queued;
+        j.mark_started(SimTime(99));
+        j.mark_completed(SimTime(100));
+        // turnaround=100, denom=max(1, 10)=10 -> 10.0
+        assert_eq!(j.bounded_slowdown(10.0), Some(10.0));
+    }
+
+    #[test]
+    fn task_event_serialization_roundtrip() {
+        // Paper Listing 1: TaskEvent serialization across components.
+        let mut j = Job::with_estimate(7, 5, 16, 300, 600);
+        j.state = JobState::Queued;
+        j.mark_started(SimTime(50));
+        let text = j.to_json().to_string();
+        let back = Job::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.cores, 16);
+        assert_eq!(back.est_runtime, SimDuration(600));
+        assert_eq!(back.runtime, SimDuration(300));
+        assert_eq!(back.state, JobState::Running);
+        assert_eq!(back.start, Some(SimTime(50)));
+        assert_eq!(back.end, None);
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        assert!(Job::from_json(&Json::parse(r#"{"id": 1}"#).unwrap()).is_none());
+        assert!(Job::from_json(&Json::parse(r#"{"id": -1, "submit": 0, "cores": 1}"#).unwrap())
+            .is_none());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn bad_transition_panics_in_debug() {
+        let mut j = Job::simple(1, 0, 1, 1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            j.mark_completed(SimTime(5)); // never started
+        }));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! The wait queue: jobs submitted but not yet running.
+//!
+//! Insertion order is preserved (FCFS order is queue order); scheduling
+//! algorithms reorder *views* of the queue, never the queue itself, so
+//! algorithm choice cannot corrupt arrival history.
+
+use crate::job::{Job, JobId, JobState};
+use std::collections::HashMap;
+
+/// FIFO wait queue with O(1) membership test and by-id removal.
+#[derive(Debug, Default)]
+pub struct WaitQueue {
+    /// Arrival order. Entries are `None` after removal (compacted lazily).
+    slots: Vec<Option<Job>>,
+    /// job id -> slot index.
+    index: HashMap<JobId, usize>,
+    /// Number of live entries.
+    live: usize,
+}
+
+impl WaitQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    pub fn contains(&self, id: JobId) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    /// Enqueue in arrival order; marks the job `Queued`.
+    pub fn push(&mut self, mut job: Job) {
+        debug_assert!(!self.contains(job.id), "job {} already queued", job.id);
+        job.state = JobState::Queued;
+        let slot = self.slots.len();
+        self.index.insert(job.id, slot);
+        self.slots.push(Some(job));
+        self.live += 1;
+    }
+
+    /// Remove a job by id (it was scheduled or cancelled).
+    pub fn remove(&mut self, id: JobId) -> Option<Job> {
+        let slot = self.index.remove(&id)?;
+        let job = self.slots[slot].take();
+        debug_assert!(job.is_some());
+        self.live -= 1;
+        self.maybe_compact();
+        job
+    }
+
+    /// Jobs in arrival order.
+    pub fn iter(&self) -> impl Iterator<Item = &Job> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+
+    pub fn get(&self, id: JobId) -> Option<&Job> {
+        let slot = *self.index.get(&id)?;
+        self.slots[slot].as_ref()
+    }
+
+    /// First job in arrival order (FCFS head).
+    pub fn head(&self) -> Option<&Job> {
+        self.iter().next()
+    }
+
+    /// Ids in arrival order (snapshot).
+    pub fn ids(&self) -> Vec<JobId> {
+        self.iter().map(|j| j.id).collect()
+    }
+
+    fn maybe_compact(&mut self) {
+        // Compact when more than half the slots are dead and the vec is
+        // non-trivial; keeps iteration O(live).
+        if self.slots.len() >= 64 && self.live * 2 < self.slots.len() {
+            let mut fresh: Vec<Option<Job>> = Vec::with_capacity(self.live);
+            self.index.clear();
+            for s in self.slots.drain(..) {
+                if let Some(j) = s {
+                    self.index.insert(j.id, fresh.len());
+                    fresh.push(Some(j));
+                }
+            }
+            self.slots = fresh;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q_with(ids: &[u64]) -> WaitQueue {
+        let mut q = WaitQueue::new();
+        for &id in ids {
+            q.push(Job::simple(id, id, 1, 10));
+        }
+        q
+    }
+
+    #[test]
+    fn preserves_arrival_order() {
+        let q = q_with(&[3, 1, 2]);
+        assert_eq!(q.ids(), vec![3, 1, 2]);
+        assert_eq!(q.head().unwrap().id, 3);
+    }
+
+    #[test]
+    fn push_marks_queued() {
+        let q = q_with(&[1]);
+        assert_eq!(q.get(1).unwrap().state, JobState::Queued);
+    }
+
+    #[test]
+    fn remove_keeps_order() {
+        let mut q = q_with(&[1, 2, 3, 4]);
+        assert_eq!(q.remove(2).unwrap().id, 2);
+        assert_eq!(q.ids(), vec![1, 3, 4]);
+        assert_eq!(q.len(), 3);
+        assert!(!q.contains(2));
+        assert!(q.remove(2).is_none());
+    }
+
+    #[test]
+    fn compaction_preserves_semantics() {
+        let mut q = WaitQueue::new();
+        for id in 0..200 {
+            q.push(Job::simple(id, id, 1, 1));
+        }
+        for id in 0..150 {
+            q.remove(id);
+        }
+        assert_eq!(q.len(), 50);
+        assert_eq!(q.ids(), (150..200).collect::<Vec<_>>());
+        // Everything still reachable by id after compaction.
+        for id in 150..200 {
+            assert_eq!(q.get(id).unwrap().id, id);
+        }
+    }
+
+    #[test]
+    fn head_after_head_removal() {
+        let mut q = q_with(&[5, 6, 7]);
+        q.remove(5);
+        assert_eq!(q.head().unwrap().id, 6);
+    }
+}

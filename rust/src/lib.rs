@@ -1,0 +1,47 @@
+//! # sst-sched
+//!
+//! Scalable HPC job scheduling and resource management on a conservative
+//! parallel discrete-event core — a from-scratch reproduction of
+//! *"Scalable HPC Job Scheduling and Resource Management in SST"*
+//! (Abdurahman et al., WSC 2024).
+//!
+//! The crate is layered like the paper's system:
+//!
+//! * [`core`] — payload-generic discrete-event engine (SST-Core analogue):
+//!   deterministic event queue, components, latency links, statistics,
+//!   reproducible RNG.
+//! * [`job`], [`resources`], [`sched`] — the job-scheduling component:
+//!   job lifecycle, per-node core/memory accounting (paper Algorithm 1),
+//!   and the five scheduling algorithms (FCFS, SJF, LJF, FCFS+BestFit,
+//!   FCFS+Backfilling/EASY).
+//! * [`workflow`] — the workflow-management component (paper §3): DAG task
+//!   dependencies, JSON input spec, ready-set scheduling, and generators
+//!   for the Pegasus workflows the paper evaluates (Montage/Galactic
+//!   Plane, SIPHT, Epigenomics, ...).
+//! * [`trace`] — SWF/GWF trace I/O plus DAS-2-like and SDSC-SP2-like
+//!   synthetic workload models.
+//! * [`baseline`] — an independent CQsim-like flat event-loop simulator
+//!   used as the validation comparator (paper Figs 3, 4a).
+//! * [`parallel`] — conservative parallel engine: rank partitioning with
+//!   lookahead windows (threads stand in for MPI ranks; Figs 5, 6).
+//! * [`runtime`] — PJRT bridge executing the AOT-compiled JAX/Pallas
+//!   queue-scoring artifact from the scheduler hot path (`--accel xla`).
+//! * [`sim`] — the component wiring: job source, scheduler, resource
+//!   manager, executor, statistics collector.
+//! * [`metrics`], [`config`], [`harness`] — reporting, configuration, and
+//!   per-figure experiment runners.
+
+pub mod baseline;
+pub mod config;
+pub mod core;
+pub mod harness;
+pub mod job;
+pub mod metrics;
+pub mod parallel;
+pub mod resources;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod trace;
+pub mod util;
+pub mod workflow;

@@ -1,0 +1,286 @@
+//! sst-sched CLI — the launcher for the job-scheduling / workflow
+//! simulator (see README.md for a tour).
+//!
+//! ```text
+//! sst-sched run   [--workload das2|sdsc-sp2] [--trace f.swf|f.gwf]
+//!                 [--jobs N] [--policy P] [--accel native|xla]
+//!                 [--ranks R] [--lookahead S] [--seed S]
+//!                 [--config experiment.json]
+//! sst-sched fig   3a|3b|4a|4b|5a|5b|6|7       # regenerate a paper figure
+//! sst-sched workflow --spec wf.json | --gen sipht|montage|epigenomics|...
+//! sst-sched trace-info --trace f.swf|--workload das2 [--jobs N]
+//! sst-sched policies
+//! ```
+
+use anyhow::{bail, Context, Result};
+use sst_sched::config::{ExperimentConfig, WorkloadSource};
+use sst_sched::harness;
+use sst_sched::runtime::Accel;
+use sst_sched::sched::Policy;
+use sst_sched::sim::Simulation;
+use sst_sched::trace::synth::stats;
+use sst_sched::util::cli::Args;
+use sst_sched::util::table::{f, Table};
+use sst_sched::workflow::generators as wfgen;
+use sst_sched::workflow::{WorkflowExecutor, WorkflowSpec};
+
+const USAGE: &str = "\
+sst-sched — scalable HPC job scheduling & resource management simulator
+
+USAGE:
+  sst-sched run [--workload das2|sdsc-sp2] [--trace file.swf|file.gwf]
+                [--jobs N] [--policy fcfs|sjf|ljf|fcfs-bestfit|fcfs-backfill|cons-backfill]
+                [--accel native|xla] [--ranks R] [--lookahead SECONDS]
+                [--seed S] [--arrival-scale F] [--config experiment.json]
+  sst-sched fig <3a|3b|4a|4b|5a|5b|6|7> [--jobs N] [--seed S]
+  sst-sched workflow (--spec wf.json | --gen sipht|montage|galactic|
+                      epigenomics|cybershake|ligo) [--scale K] [--cpu C]
+                     [--ranks R] [--seed S]
+  sst-sched trace-info (--workload das2|sdsc-sp2 | --trace FILE) [--jobs N]
+  sst-sched policies
+  sst-sched help
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "run" => cmd_run(&args),
+        "fig" => cmd_fig(&args),
+        "workflow" => cmd_workflow(&args),
+        "trace-info" => cmd_trace_info(&args),
+        "policies" => {
+            let mut t = Table::new(&["policy", "description"]);
+            t.row(&["fcfs".into(), "first-come first-served (blocking)".into()]);
+            t.row(&["sjf".into(), "shortest estimated runtime first".into()]);
+            t.row(&["ljf".into(), "longest estimated runtime first".into()]);
+            t.row(&["fcfs-bestfit".into(), "FCFS order, tightest-node placement".into()]);
+            t.row(&["fcfs-backfill".into(), "EASY backfilling (default)".into()]);
+            t.row(&["cons-backfill".into(), "conservative backfilling (all-job reservations)".into()]);
+            t.print();
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+/// Build an ExperimentConfig from `--config` + CLI overrides.
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(tr) = args.get("trace") {
+        cfg.source = if tr.ends_with(".gwf") {
+            WorkloadSource::Gwf(tr.to_string())
+        } else {
+            WorkloadSource::Swf(tr.to_string())
+        };
+        cfg.jobs = 0; // whole trace unless --jobs
+    } else if let Some(w) = args.get("workload") {
+        cfg.source = match w {
+            "das2" => WorkloadSource::Das2,
+            "sdsc-sp2" | "sp2" => WorkloadSource::SdscSp2,
+            other => bail!("unknown --workload {other:?} (das2|sdsc-sp2, or use --trace)"),
+        };
+    }
+    cfg.jobs = args.usize_or("jobs", cfg.jobs)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.arrival_scale = args.f64_or("arrival-scale", cfg.arrival_scale)?;
+    if let Some(p) = args.get("policy") {
+        cfg.policy = p.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    }
+    cfg.accel = args.str_or("accel", &cfg.accel);
+    cfg.ranks = args.usize_or("ranks", cfg.ranks)?;
+    cfg.lookahead = args.u64_or("lookahead", cfg.lookahead)?;
+    if let Some(n) = args.get("nodes") {
+        cfg.nodes = Some(n.parse().context("--nodes expects an integer")?);
+    }
+    if let Some(c) = args.get("cores") {
+        cfg.cores_per_node = Some(c.parse().context("--cores expects an integer")?);
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    args.reject_unknown()?;
+    let workload = cfg.build_workload()?;
+    println!(
+        "workload {}: {} jobs on {} nodes x {} cores (offered load {:.2})",
+        workload.name,
+        workload.jobs.len(),
+        workload.nodes,
+        workload.cores_per_node,
+        workload.offered_load()
+    );
+    if cfg.ranks > 1 {
+        let rep = sst_sched::parallel::run_jobs_parallel(
+            &workload,
+            cfg.policy,
+            cfg.ranks,
+            cfg.lookahead,
+        );
+        println!("ranks             {}", rep.ranks);
+        println!("windows           {}", rep.windows);
+        println!("wall time         {:.1} ms", rep.wall.as_secs_f64() * 1e3);
+        println!("events            {}", rep.total_events());
+        println!("event rate        {:.0} ev/s", rep.event_rate());
+        println!("jobs completed    {}", rep.total_completed());
+        println!("mean wait         {:.1} s", rep.mean_wait());
+        return Ok(());
+    }
+    let accel: Accel = cfg.accel.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let mut sim = Simulation::new(workload, cfg.policy).with_seed(cfg.seed);
+    if cfg.policy == Policy::FcfsBackfill {
+        let sched = sst_sched::runtime::backfill_with_accel(accel)?;
+        println!("scorer backend    {}", sched.scorer_backend());
+        sim = sim.with_scheduler(Box::new(sched));
+    }
+    let t0 = std::time::Instant::now();
+    let rep = sim.run(None);
+    let wall = t0.elapsed();
+    harness::print_run_report(&rep);
+    println!("wall time         {:.1} ms", wall.as_secs_f64() * 1e3);
+    println!("event rate        {:.0} ev/s", rep.events as f64 / wall.as_secs_f64().max(1e-9));
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .context("usage: sst-sched fig <3a|3b|4a|4b|5a|5b|6|7>")?;
+    let jobs = args.usize_or("jobs", 0)?;
+    let seed = args.u64_or("seed", 1)?;
+    args.reject_unknown()?;
+    let nz = |d: usize| if jobs == 0 { d } else { jobs };
+    match which {
+        "3a" => {
+            println!("Fig 3(a): node occupancy over time — ours vs CQsim-like\n");
+            harness::print_validation(&harness::fig3a(nz(10_000), seed, 24));
+        }
+        "3b" => {
+            println!("Fig 3(b): running jobs over time — ours vs CQsim-like\n");
+            harness::print_validation(&harness::fig3b(nz(10_000), seed, 24));
+        }
+        "4a" => {
+            println!("Fig 4(a): wait-time validation — ours vs CQsim-like\n");
+            harness::print_fig4a(&harness::fig4a(nz(10_000), seed, 20));
+        }
+        "4b" => {
+            println!("Fig 4(b): scheduling-algorithm comparison (DAS-2-like, high load)\n");
+            harness::print_fig4b(&harness::fig4b(nz(8_000), seed));
+        }
+        "5a" => {
+            println!("Fig 5(a): parallel scaling, DAS-2-like\n");
+            let scales = if jobs == 0 { vec![20_000, 50_000, 100_000] } else { vec![jobs] };
+            harness::print_fig5(&harness::fig5(false, &scales, &[1, 2, 4, 8], seed));
+        }
+        "5b" => {
+            println!("Fig 5(b): parallel scaling, SDSC-SP2-like\n");
+            let scales = if jobs == 0 { vec![50_000] } else { vec![jobs] };
+            harness::print_fig5(&harness::fig5(true, &scales, &[1, 2, 4, 8], seed));
+        }
+        "6" => {
+            println!("Fig 6: workflow-simulation scaling (Galactic Plane)\n");
+            harness::print_fig5(&harness::fig6(17, &[1, 2, 4, 8], seed));
+        }
+        "7" => {
+            println!("Fig 7: SIPHT workflow wait-time validation\n");
+            harness::print_fig7(&harness::fig7(4, 8, seed));
+        }
+        other => bail!("unknown figure {other:?} (3a|3b|4a|4b|5a|5b|6|7)"),
+    }
+    Ok(())
+}
+
+fn cmd_workflow(args: &Args) -> Result<()> {
+    let seed = args.u64_or("seed", 1)?;
+    let scale = args.usize_or("scale", 0)?;
+    let cpu = args.u64_or("cpu", 16)?;
+    let ranks = args.usize_or("ranks", 1)?;
+    let workflow = if let Some(path) = args.get("spec") {
+        let spec = WorkflowSpec::load(path)?;
+        println!(
+            "loaded {:?}: {} tasks, pool cpu={} mem={} MB, policy {}",
+            path,
+            spec.workflow.len(),
+            spec.cpu_available,
+            spec.memory_available_mb,
+            spec.scheduling_policy
+        );
+        spec.workflow
+    } else {
+        let gen = args.str_or("gen", "");
+        let nz = |d: usize| if scale == 0 { d } else { scale };
+        match gen.as_str() {
+            "sipht" => wfgen::sipht(nz(1), seed, false),
+            "montage" => wfgen::montage(nz(20), seed, false),
+            "galactic" | "galactic-plane" => wfgen::galactic_plane(nz(17), seed, false),
+            "epigenomics" => wfgen::epigenomics(nz(4), 4, seed, false),
+            "cybershake" => wfgen::cybershake(nz(10), seed, false),
+            "ligo" => wfgen::ligo_inspiral(nz(10), seed, false),
+            "" => bail!("workflow needs --spec FILE or --gen NAME"),
+            other => bail!("unknown generator {other:?}"),
+        }
+    };
+    args.reject_unknown()?;
+    println!(
+        "workflow {}: {} tasks, {} edges, depth {}, critical path {:.0} s, total work {:.0} s",
+        workflow.name,
+        workflow.len(),
+        workflow.dag.num_edges(),
+        workflow.dag.depth().unwrap(),
+        workflow.critical_path_time(),
+        workflow.total_work()
+    );
+    if ranks > 1 {
+        let rep = sst_sched::parallel::run_workflow_parallel(&workflow, ranks, cpu, 5);
+        println!("ranks        {}", rep.ranks);
+        println!("windows      {}", rep.windows);
+        println!("wall time    {:.1} ms", rep.wall.as_secs_f64() * 1e3);
+        println!("tasks done   {}", rep.total_completed());
+        println!("makespan     {} s", rep.end_time());
+        println!("mean wait    {:.1} s", rep.mean_wait());
+    } else {
+        let rep = WorkflowExecutor::new(cpu, u64::MAX).run(workflow);
+        println!("makespan     {} s", rep.makespan.ticks());
+        println!("peak cpu     {}", rep.peak_cpu);
+        println!("mean wait    {:.1} s", rep.mean_wait());
+        println!("max wait     {:.1} s", rep.max_wait());
+    }
+    Ok(())
+}
+
+fn cmd_trace_info(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    args.reject_unknown()?;
+    let w = cfg.build_workload()?;
+    let s = stats(&w.jobs);
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["workload".into(), w.name.clone()]);
+    t.row(&["jobs".into(), s.jobs.to_string()]);
+    t.row(&["machine".into(), format!("{} nodes x {} cores", w.nodes, w.cores_per_node)]);
+    t.row(&["mean cores/job".into(), f(s.mean_cores)]);
+    t.row(&["median runtime (s)".into(), f(s.median_runtime)]);
+    t.row(&["mean runtime (s)".into(), f(s.mean_runtime)]);
+    t.row(&["mean interarrival (s)".into(), f(s.mean_interarrival)]);
+    t.row(&["power-of-two sizes".into(), format!("{:.0}%", s.pow2_fraction * 100.0)]);
+    t.row(&["offered load".into(), f(w.offered_load())]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,219 @@
+//! Scheduling metrics and series comparison.
+//!
+//! Everything the paper's figures report: wait-time summaries (Fig 4),
+//! node-occupancy and running-job time series (Fig 3), utilization, plus
+//! the comparison statistics (MAE / RMSE / correlation) used to quantify
+//! "our simulator closely matches CQsim".
+
+use crate::core::stats::TimeSeries;
+use crate::core::time::SimTime;
+use crate::job::Job;
+
+/// Wait/turnaround summary over completed jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct WaitStats {
+    pub jobs: usize,
+    pub mean_wait: f64,
+    pub median_wait: f64,
+    pub p95_wait: f64,
+    pub max_wait: f64,
+    pub mean_turnaround: f64,
+    /// Mean bounded slowdown (tau = 10 s).
+    pub mean_slowdown: f64,
+}
+
+/// Summarize completed jobs (jobs without a start/end are skipped).
+pub fn wait_stats(jobs: &[Job]) -> WaitStats {
+    let mut waits: Vec<f64> = Vec::with_capacity(jobs.len());
+    let mut turn = 0.0;
+    let mut slow = 0.0;
+    for j in jobs {
+        let (Some(w), Some(t), Some(s)) =
+            (j.wait_time(), j.turnaround(), j.bounded_slowdown(10.0))
+        else {
+            continue;
+        };
+        waits.push(w.as_f64());
+        turn += t.as_f64();
+        slow += s;
+    }
+    if waits.is_empty() {
+        return WaitStats::default();
+    }
+    waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = waits.len();
+    WaitStats {
+        jobs: n,
+        mean_wait: waits.iter().sum::<f64>() / n as f64,
+        median_wait: waits[n / 2],
+        p95_wait: waits[((n - 1) as f64 * 0.95).round() as usize],
+        max_wait: waits[n - 1],
+        mean_turnaround: turn / n as f64,
+        mean_slowdown: slow / n as f64,
+    }
+}
+
+/// Resample a step-function time series onto a uniform grid of `points`
+/// samples spanning [t0, t1] (sample-and-hold).
+pub fn resample(series: &TimeSeries, t0: SimTime, t1: SimTime, points: usize) -> Vec<f64> {
+    let pts = series.points();
+    let mut out = Vec::with_capacity(points);
+    if pts.is_empty() || points == 0 || t1 <= t0 {
+        out.resize(points, 0.0);
+        return out;
+    }
+    let span = (t1 - t0).as_f64();
+    let mut idx = 0usize;
+    let mut current = 0.0;
+    for k in 0..points {
+        let t = t0.ticks() as f64 + span * k as f64 / (points - 1).max(1) as f64;
+        while idx < pts.len() && (pts[idx].0.ticks() as f64) <= t {
+            current = pts[idx].1;
+            idx += 1;
+        }
+        out.push(current);
+    }
+    out
+}
+
+/// Mean absolute error between equal-length series.
+pub fn mae(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>() / a.len() as f64
+}
+
+/// Root-mean-square error between equal-length series.
+pub fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    (a.iter().zip(b).map(|(x, y)| (x - y).powi(2)).sum::<f64>() / a.len() as f64).sqrt()
+}
+
+/// Pearson correlation; 0.0 when either side is constant.
+pub fn correlation(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 0.0;
+    }
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma).powi(2);
+        vb += (y - mb).powi(2);
+    }
+    if va == 0.0 || vb == 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Normalized MAE: MAE / mean(|reference|); 0 when the reference is flat 0.
+pub fn nmae(ours: &[f64], reference: &[f64]) -> f64 {
+    let m = reference.iter().map(|x| x.abs()).sum::<f64>() / reference.len().max(1) as f64;
+    if m == 0.0 {
+        0.0
+    } else {
+        mae(ours, reference) / m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::time::SimTime;
+
+    fn done_job(id: u64, submit: u64, start: u64, runtime: u64) -> Job {
+        let mut j = Job::simple(id, submit, 4, runtime);
+        j.state = crate::job::JobState::Queued;
+        j.mark_started(SimTime(start));
+        j.mark_completed(SimTime(start + runtime));
+        j
+    }
+
+    #[test]
+    fn wait_stats_basic() {
+        let jobs = vec![done_job(1, 0, 10, 100), done_job(2, 0, 30, 100)];
+        let s = wait_stats(&jobs);
+        assert_eq!(s.jobs, 2);
+        assert_eq!(s.mean_wait, 20.0);
+        assert_eq!(s.max_wait, 30.0);
+        assert_eq!(s.mean_turnaround, (110.0 + 130.0) / 2.0);
+        assert!(s.mean_slowdown >= 1.0);
+    }
+
+    #[test]
+    fn wait_stats_skips_incomplete() {
+        let mut pending = Job::simple(3, 0, 1, 10);
+        pending.state = crate::job::JobState::Queued;
+        let jobs = vec![done_job(1, 0, 5, 10), pending];
+        assert_eq!(wait_stats(&jobs).jobs, 1);
+    }
+
+    #[test]
+    fn wait_stats_empty() {
+        assert_eq!(wait_stats(&[]).jobs, 0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let jobs: Vec<Job> =
+            (0..100).map(|i| done_job(i, 0, i * 10, 50)).collect();
+        let s = wait_stats(&jobs);
+        assert!(s.median_wait <= s.p95_wait);
+        assert!(s.p95_wait <= s.max_wait);
+        assert_eq!(s.max_wait, 990.0);
+    }
+
+    #[test]
+    fn resample_holds_steps() {
+        let mut s = TimeSeries::new();
+        s.record(SimTime(0), 1.0);
+        s.record(SimTime(50), 2.0);
+        let r = resample(&s, SimTime(0), SimTime(100), 5);
+        assert_eq!(r, vec![1.0, 1.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn resample_before_first_point_is_zero() {
+        let mut s = TimeSeries::new();
+        s.record(SimTime(80), 5.0);
+        let r = resample(&s, SimTime(0), SimTime(100), 5);
+        assert_eq!(r, vec![0.0, 0.0, 0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn resample_empty_series() {
+        let s = TimeSeries::new();
+        assert_eq!(resample(&s, SimTime(0), SimTime(10), 3), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![1.0, 2.0, 5.0];
+        assert!((mae(&a, &b) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((rmse(&a, &b) - (4.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert!((correlation(&a, &a) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = a.iter().map(|x| -x).collect();
+        assert!((correlation(&a, &neg) + 1.0).abs() < 1e-12);
+        assert_eq!(correlation(&a, &[1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn nmae_normalizes() {
+        let r = vec![10.0, 10.0];
+        let o = vec![11.0, 9.0];
+        assert!((nmae(&o, &r) - 0.1).abs() < 1e-12);
+        assert_eq!(nmae(&o, &[0.0, 0.0]), 0.0);
+    }
+}

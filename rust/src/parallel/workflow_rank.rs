@@ -1,0 +1,304 @@
+//! Distributed workflow execution (paper Fig 6): one workflow's tasks are
+//! partitioned across ranks (owner = task id mod ranks, as SST partitions
+//! components); dependency edges that cross ranks become real
+//! conservative messages with the link latency as lookahead.
+
+use crate::parallel::{run_parallel, run_parallel_modeled, ParallelReport, RankLogic, RankSummary, BARRIER_COST};
+use crate::workflow::task::TaskId;
+use crate::workflow::Workflow;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum LEv {
+    /// A running task finished.
+    Done(TaskId),
+    /// A task's dependencies were satisfied at this time.
+    Ready(TaskId),
+}
+
+struct WorkflowRank {
+    me: usize,
+    ranks: usize,
+    latency: u64,
+    wf: Workflow,
+    /// Remaining dependency count for owned tasks.
+    pending: BTreeMap<TaskId, usize>,
+    heap: BinaryHeap<Reverse<(u64, u64, LEv)>>,
+    seq: u64,
+    /// (task, became ready at) in FIFO order.
+    ready: VecDeque<(TaskId, u64)>,
+    free_cpu: u64,
+    clock: u64,
+    events: u64,
+    completed: u64,
+    wait_sum: f64,
+}
+
+impl WorkflowRank {
+    fn new(wf: Workflow, me: usize, ranks: usize, cpu: u64, latency: u64) -> WorkflowRank {
+        let mut pending = BTreeMap::new();
+        let mut heap = BinaryHeap::new();
+        let mut seq = 0u64;
+        for (&id, task) in &wf.tasks {
+            if id as usize % ranks != me {
+                continue;
+            }
+            assert!(
+                task.resources.cpu <= cpu,
+                "task {id} needs {} cpu but rank pool is {cpu}",
+                task.resources.cpu
+            );
+            let deg = task.dependencies.len();
+            pending.insert(id, deg);
+            if deg == 0 {
+                heap.push(Reverse((0, seq, LEv::Ready(id))));
+                seq += 1;
+            }
+        }
+        WorkflowRank {
+            me,
+            ranks,
+            latency,
+            wf,
+            pending,
+            heap,
+            seq,
+            ready: VecDeque::new(),
+            free_cpu: cpu,
+            clock: 0,
+            events: 0,
+            completed: 0,
+            wait_sum: 0.0,
+        }
+    }
+
+    fn owner(&self, id: TaskId) -> usize {
+        id as usize % self.ranks
+    }
+
+    fn push(&mut self, t: u64, ev: LEv) {
+        self.heap.push(Reverse((t, self.seq, ev)));
+        self.seq += 1;
+    }
+
+    /// Start every ready task that fits, FIFO (list scheduling, same
+    /// discipline as `workflow::exec`). Early-exits once the pool is
+    /// exhausted so a long blocked queue is not rescanned per event.
+    fn try_start(&mut self, now: u64) {
+        let mut k = 0;
+        while k < self.ready.len() {
+            if self.free_cpu == 0 {
+                return;
+            }
+            let (id, ready_at) = self.ready[k];
+            let (cpu, dur) = {
+                let t = &self.wf.tasks[&id];
+                (t.resources.cpu, t.execution_time.ticks())
+            };
+            if cpu <= self.free_cpu {
+                self.ready.remove(k);
+                self.free_cpu -= cpu;
+                self.wait_sum += (now - ready_at) as f64;
+                self.push(now + dur, LEv::Done(id));
+            } else {
+                k += 1;
+            }
+        }
+    }
+}
+
+impl RankLogic for WorkflowRank {
+    /// Message: "this parent task completed" (dependency trigger).
+    type Msg = TaskId;
+
+    fn next_time(&mut self) -> Option<u64> {
+        self.heap.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    fn run_window(&mut self, bound: u64, outbox: &mut Vec<(usize, u64, TaskId)>) {
+        while let Some(Reverse((t, _, ev))) = self.heap.peek().copied() {
+            if t >= bound {
+                break;
+            }
+            self.heap.pop();
+            debug_assert!(t >= self.clock);
+            self.clock = t;
+            self.events += 1;
+            match ev {
+                LEv::Ready(id) => {
+                    self.ready.push_back((id, t));
+                    self.try_start(t);
+                }
+                LEv::Done(id) => {
+                    self.free_cpu += self.wf.tasks[&id].resources.cpu;
+                    self.completed += 1;
+                    // Trigger dependents: local decrement, remote message
+                    // (one per owning rank).
+                    let mut remote: Vec<usize> = Vec::new();
+                    let children = self.wf.dag.children(id).to_vec();
+                    for child in children {
+                        let o = self.owner(child);
+                        if o == self.me {
+                            let p = self.pending.get_mut(&child).unwrap();
+                            *p -= 1;
+                            if *p == 0 {
+                                self.push(t, LEv::Ready(child));
+                            }
+                        } else if !remote.contains(&o) {
+                            remote.push(o);
+                        }
+                    }
+                    for o in remote {
+                        outbox.push((o, t + self.latency, id));
+                    }
+                    self.try_start(t);
+                }
+            }
+        }
+    }
+
+    fn receive(&mut self, time: u64, parent: TaskId) {
+        for &child in self.wf.dag.children(parent).to_vec().iter() {
+            if self.owner(child) != self.me {
+                continue;
+            }
+            let p = self.pending.get_mut(&child).unwrap();
+            debug_assert!(*p > 0, "double trigger for task {child}");
+            *p -= 1;
+            if *p == 0 {
+                self.push(time, LEv::Ready(child));
+            }
+        }
+    }
+
+    fn finish(&mut self) -> RankSummary {
+        RankSummary {
+            events: self.events,
+            end_time: self.clock,
+            completed: self.completed,
+            wait_sum: self.wait_sum,
+        }
+    }
+}
+
+/// Execute `workflow` across `ranks` threads; total CPU pool is divided
+/// evenly; cross-rank dependency latency = `lookahead` ticks.
+pub fn run_workflow_parallel(
+    workflow: &Workflow,
+    ranks: usize,
+    total_cpu: u64,
+    lookahead: u64,
+) -> ParallelReport {
+    let r = ranks.max(1);
+    let cpu_each = (total_cpu / r as u64).max(1);
+    let builders: Vec<_> = (0..r)
+        .map(|_| {
+            let wf = workflow.clone();
+            move |i: usize| WorkflowRank::new(wf, i, r, cpu_each, lookahead)
+        })
+        .collect();
+    run_parallel(builders, lookahead)
+}
+
+/// Modeled-speedup variant (single-core hosts): see
+/// [`crate::parallel::run_parallel_modeled`].
+pub fn run_workflow_parallel_modeled(
+    workflow: &Workflow,
+    ranks: usize,
+    total_cpu: u64,
+    lookahead: u64,
+) -> ParallelReport {
+    let r = ranks.max(1);
+    let cpu_each = (total_cpu / r as u64).max(1);
+    let builders: Vec<_> = (0..r)
+        .map(|_| {
+            let wf = workflow.clone();
+            move |i: usize| WorkflowRank::new(wf, i, r, cpu_each, lookahead)
+        })
+        .collect();
+    run_parallel_modeled(builders, lookahead, BARRIER_COST)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::generators::{epigenomics, montage, sipht};
+    use crate::workflow::task::Task;
+
+    fn diamond() -> Workflow {
+        Workflow::new(
+            1,
+            "d",
+            vec![
+                Task::new(1, 100, 1, 0),
+                Task::new(2, 150, 1, 0).with_deps(vec![1]),
+                Task::new(3, 200, 1, 0).with_deps(vec![1]),
+                Task::new(4, 300, 1, 0).with_deps(vec![2, 3]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn single_rank_matches_sequential_executor() {
+        let w = diamond();
+        let seq = crate::workflow::WorkflowExecutor::new(8, u64::MAX).run(w.clone());
+        let par = run_workflow_parallel(&w, 1, 8, 1);
+        assert_eq!(par.total_completed(), 4);
+        assert_eq!(par.end_time(), seq.makespan.ticks());
+    }
+
+    #[test]
+    fn all_tasks_complete_across_rank_counts() {
+        let w = montage(24, 1, true);
+        let n = w.len() as u64;
+        for ranks in [1usize, 2, 4] {
+            let r = run_workflow_parallel(&w, ranks, 32, 5);
+            assert_eq!(r.total_completed(), n, "ranks={ranks}");
+        }
+    }
+
+    #[test]
+    fn cross_rank_latency_only_stretches_makespan() {
+        // With 2 ranks the diamond's edges cross ranks (1->2, 2->4 etc.);
+        // each crossing adds `lookahead` latency, so the parallel makespan
+        // is bounded by sequential + depth * latency and is never shorter
+        // than the critical path.
+        let w = diamond();
+        let crit = w.critical_path_time() as u64;
+        let par = run_workflow_parallel(&w, 2, 8, 7);
+        assert!(par.end_time() >= crit);
+        assert!(par.end_time() <= crit + 7 * 3, "end {}", par.end_time());
+    }
+
+    #[test]
+    fn dependencies_respected_under_distribution() {
+        // Implicitly checked by pending counters (debug_assert double
+        // trigger) and completion totals; run a deeper DAG for coverage.
+        let w = epigenomics(4, 3, 1, true);
+        let n = w.len() as u64;
+        let r = run_workflow_parallel(&w, 4, 16, 3);
+        assert_eq!(r.total_completed(), n);
+        // End time never below the critical path.
+        assert!(r.end_time() as f64 >= w.critical_path_time());
+    }
+
+    #[test]
+    fn sipht_runs_distributed() {
+        let w = sipht(2, 1, true);
+        let r = run_workflow_parallel(&w, 3, 12, 2);
+        assert_eq!(r.total_completed(), w.len() as u64);
+        assert!(r.windows > 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let w = montage(16, 2, false);
+        let a = run_workflow_parallel(&w, 4, 16, 5);
+        let b = run_workflow_parallel(&w, 4, 16, 5);
+        assert_eq!(a.end_time(), b.end_time());
+        assert_eq!(a.total_events(), b.total_events());
+        assert_eq!(a.mean_wait(), b.mean_wait());
+    }
+}

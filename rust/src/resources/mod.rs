@@ -1,0 +1,375 @@
+//! Resource management: nodes, core/memory accounting, allocation.
+//!
+//! Implements the paper's Algorithm 1 (allocate/deallocate with a core
+//! pool) generalized to per-node accounting so FCFS-BestFit has real
+//! fragmentation to optimize against. The cluster tracks free cores and
+//! memory per node; allocations record exactly what they took so release
+//! is always exact (conservation invariant, property-tested in
+//! `rust/tests/prop_resources.rs`).
+
+pub mod topology;
+
+pub use topology::Topology;
+
+use crate::job::{Job, JobId};
+
+/// One compute node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    pub cores: u64,
+    pub free_cores: u64,
+    pub memory_mb: u64,
+    pub free_memory_mb: u64,
+}
+
+impl Node {
+    pub fn new(id: usize, cores: u64, memory_mb: u64) -> Node {
+        Node { id, cores, free_cores: cores, memory_mb, free_memory_mb: memory_mb }
+    }
+
+    pub fn busy_cores(&self) -> u64 {
+        self.cores - self.free_cores
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.free_cores == self.cores
+    }
+}
+
+/// How nodes are picked for a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AllocPolicy {
+    /// Scan nodes in id order, take what's free (baseline).
+    #[default]
+    FirstFit,
+    /// Prefer the node whose free-core count most closely matches the
+    /// request (minimizes leftover slack); falls back to packing the
+    /// smallest holes first when the job spans nodes.
+    BestFit,
+}
+
+/// A granted allocation: exactly which cores/memory were taken where.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub job_id: JobId,
+    /// (node id, cores taken, memory taken).
+    pub taken: Vec<(usize, u64, u64)>,
+}
+
+impl Allocation {
+    pub fn cores(&self) -> u64 {
+        self.taken.iter().map(|t| t.1).sum()
+    }
+
+    pub fn node_ids(&self) -> Vec<usize> {
+        self.taken.iter().map(|t| t.0).collect()
+    }
+}
+
+/// The machine: a vector of nodes plus cached aggregates.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    nodes: Vec<Node>,
+    total_cores: u64,
+    free_cores: u64,
+}
+
+impl Cluster {
+    /// Homogeneous cluster: `n` nodes of `cores_per_node` cores and
+    /// `mem_per_node` MB each.
+    pub fn homogeneous(n: usize, cores_per_node: u64, mem_per_node: u64) -> Cluster {
+        let nodes: Vec<Node> =
+            (0..n).map(|i| Node::new(i, cores_per_node, mem_per_node)).collect();
+        let total = cores_per_node * n as u64;
+        Cluster { nodes, total_cores: total, free_cores: total }
+    }
+
+    /// Heterogeneous cluster from explicit (cores, memory) pairs.
+    pub fn heterogeneous(specs: &[(u64, u64)]) -> Cluster {
+        let nodes: Vec<Node> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, &(c, m))| Node::new(i, c, m))
+            .collect();
+        let total = nodes.iter().map(|n| n.cores).sum();
+        Cluster { nodes, total_cores: total, free_cores: total }
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn total_cores(&self) -> u64 {
+        self.total_cores
+    }
+
+    pub fn free_cores(&self) -> u64 {
+        self.free_cores
+    }
+
+    pub fn busy_cores(&self) -> u64 {
+        self.total_cores - self.free_cores
+    }
+
+    /// Fraction of cores busy, in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.total_cores == 0 {
+            0.0
+        } else {
+            self.busy_cores() as f64 / self.total_cores as f64
+        }
+    }
+
+    /// Nodes with at least one busy core (paper Fig 3(a) metric).
+    pub fn occupied_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.is_idle()).count()
+    }
+
+    /// Per-node free cores as f32 (input to the XLA/native scorer).
+    pub fn free_vec(&self) -> Vec<f32> {
+        self.nodes.iter().map(|n| n.free_cores as f32).collect()
+    }
+
+    /// Whether `job` could ever run on this machine.
+    pub fn feasible(&self, job: &Job) -> bool {
+        job.cores <= self.total_cores
+            && job.memory_mb <= self.nodes.iter().map(|n| n.memory_mb).sum::<u64>()
+    }
+
+    /// Whether `job` fits right now (cores only; memory is checked during
+    /// placement because it is per-node).
+    pub fn fits_now(&self, job: &Job) -> bool {
+        job.cores <= self.free_cores
+    }
+
+    /// Memory the job needs on a node contributing `cores_on_node` of its
+    /// `total_cores` cores (proportional share, rounded up).
+    fn mem_share(job_mem: u64, cores_on_node: u64, total_cores: u64) -> u64 {
+        if job_mem == 0 || total_cores == 0 {
+            return 0;
+        }
+        job_mem.div_ceil(total_cores) * cores_on_node
+    }
+
+    /// Try to allocate `job` under `policy`. Returns `None` (and leaves the
+    /// cluster untouched) if the job does not fit at this instant.
+    pub fn allocate(&mut self, job: &Job, policy: AllocPolicy) -> Option<Allocation> {
+        if !self.fits_now(job) || job.cores == 0 {
+            return None;
+        }
+        let plan = match policy {
+            AllocPolicy::FirstFit => self.plan_first_fit(job),
+            AllocPolicy::BestFit => self.plan_best_fit(job),
+        }?;
+        // Commit.
+        for &(nid, c, m) in &plan {
+            let n = &mut self.nodes[nid];
+            debug_assert!(n.free_cores >= c && n.free_memory_mb >= m);
+            n.free_cores -= c;
+            n.free_memory_mb -= m;
+        }
+        self.free_cores -= job.cores;
+        Some(Allocation { job_id: job.id, taken: plan })
+    }
+
+    /// First-fit plan: scan nodes in id order.
+    fn plan_first_fit(&self, job: &Job) -> Option<Vec<(usize, u64, u64)>> {
+        self.plan_in_order(job, (0..self.nodes.len()).collect())
+    }
+
+    /// Best-fit plan. Single-node case: the fitting node with minimum
+    /// leftover. Multi-node case: pack smallest free counts first.
+    fn plan_best_fit(&self, job: &Job) -> Option<Vec<(usize, u64, u64)>> {
+        // Single-node best fit.
+        let mut best: Option<(u64, usize)> = None; // (slack, node)
+        for n in &self.nodes {
+            if n.free_cores >= job.cores {
+                let mem = Self::mem_share(job.memory_mb, job.cores, job.cores);
+                if n.free_memory_mb < mem {
+                    continue;
+                }
+                let slack = n.free_cores - job.cores;
+                if best.map_or(true, |(s, _)| slack < s) {
+                    best = Some((slack, n.id));
+                }
+            }
+        }
+        if let Some((_, nid)) = best {
+            let mem = Self::mem_share(job.memory_mb, job.cores, job.cores);
+            return Some(vec![(nid, job.cores, mem)]);
+        }
+        // Multi-node: smallest holes first (tightest packing).
+        let mut order: Vec<usize> = (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].free_cores > 0)
+            .collect();
+        order.sort_by_key(|&i| (self.nodes[i].free_cores, i));
+        self.plan_in_order(job, order)
+    }
+
+    /// Greedy plan following `order`; `None` if cores or memory run short.
+    fn plan_in_order(&self, job: &Job, order: Vec<usize>) -> Option<Vec<(usize, u64, u64)>> {
+        let mut remaining = job.cores;
+        let mut plan = Vec::new();
+        for nid in order {
+            if remaining == 0 {
+                break;
+            }
+            let n = &self.nodes[nid];
+            if n.free_cores == 0 {
+                continue;
+            }
+            let take = remaining.min(n.free_cores);
+            let mem = Self::mem_share(job.memory_mb, take, job.cores);
+            if n.free_memory_mb < mem {
+                continue; // node lacks memory for its share
+            }
+            plan.push((nid, take, mem));
+            remaining -= take;
+        }
+        if remaining == 0 {
+            Some(plan)
+        } else {
+            None
+        }
+    }
+
+    /// Return an allocation's resources to the pool (Algorithm 1,
+    /// deallocateResources).
+    pub fn release(&mut self, alloc: &Allocation) {
+        for &(nid, c, m) in &alloc.taken {
+            let n = &mut self.nodes[nid];
+            n.free_cores += c;
+            n.free_memory_mb += m;
+            debug_assert!(n.free_cores <= n.cores, "over-release on node {nid}");
+            debug_assert!(n.free_memory_mb <= n.memory_mb);
+        }
+        self.free_cores += alloc.cores();
+        debug_assert!(self.free_cores <= self.total_cores);
+    }
+
+    /// Consistency check (used by tests and debug assertions): cached
+    /// aggregate equals the per-node sum.
+    pub fn check_invariants(&self) -> bool {
+        let sum: u64 = self.nodes.iter().map(|n| n.free_cores).sum();
+        sum == self.free_cores
+            && self.free_cores <= self.total_cores
+            && self.nodes.iter().all(|n| n.free_cores <= n.cores && n.free_memory_mb <= n.memory_mb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, cores: u64) -> Job {
+        Job::simple(id, 0, cores, 10)
+    }
+
+    #[test]
+    fn homogeneous_setup() {
+        let c = Cluster::homogeneous(4, 8, 1024);
+        assert_eq!(c.total_cores(), 32);
+        assert_eq!(c.free_cores(), 32);
+        assert_eq!(c.num_nodes(), 4);
+        assert_eq!(c.occupied_nodes(), 0);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn first_fit_takes_in_node_order() {
+        let mut c = Cluster::homogeneous(4, 8, 1024);
+        let a = c.allocate(&job(1, 12), AllocPolicy::FirstFit).unwrap();
+        assert_eq!(a.taken, vec![(0, 8, 0), (1, 4, 0)]);
+        assert_eq!(c.free_cores(), 20);
+        assert_eq!(c.occupied_nodes(), 2);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn best_fit_picks_tightest_single_node() {
+        let mut c = Cluster::heterogeneous(&[(16, 0), (4, 0), (8, 0)]);
+        // 4-core job: node 1 (slack 0) beats node 2 (slack 4) and 0 (12).
+        let a = c.allocate(&job(1, 4), AllocPolicy::BestFit).unwrap();
+        assert_eq!(a.taken, vec![(1, 4, 0)]);
+    }
+
+    #[test]
+    fn best_fit_multi_node_packs_small_holes() {
+        let mut c = Cluster::heterogeneous(&[(16, 0), (2, 0), (3, 0)]);
+        // Fill node 0 so nothing fits single-node for a 5-core job.
+        let filler = c.allocate(&job(9, 16), AllocPolicy::FirstFit).unwrap();
+        let a = c.allocate(&job(1, 5), AllocPolicy::BestFit).unwrap();
+        // Smallest holes first: node 1 (2 cores) then node 2 (3 cores).
+        assert_eq!(a.taken, vec![(1, 2, 0), (2, 3, 0)]);
+        c.release(&filler);
+        c.release(&a);
+        assert_eq!(c.free_cores(), 21);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn allocate_fails_when_full_and_leaves_state_clean() {
+        let mut c = Cluster::homogeneous(1, 4, 0);
+        let a = c.allocate(&job(1, 4), AllocPolicy::FirstFit).unwrap();
+        assert!(c.allocate(&job(2, 1), AllocPolicy::FirstFit).is_none());
+        assert_eq!(c.free_cores(), 0);
+        c.release(&a);
+        assert_eq!(c.free_cores(), 4);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn zero_core_job_rejected() {
+        let mut c = Cluster::homogeneous(1, 4, 0);
+        assert!(c.allocate(&job(1, 0), AllocPolicy::FirstFit).is_none());
+    }
+
+    #[test]
+    fn memory_constrains_placement() {
+        let mut c = Cluster::heterogeneous(&[(8, 100), (8, 4096)]);
+        let mut j = job(1, 8);
+        j.memory_mb = 2048;
+        // Node 0 lacks memory; allocation must land on node 1.
+        let a = c.allocate(&j, AllocPolicy::BestFit).unwrap();
+        assert_eq!(a.taken.len(), 1);
+        assert_eq!(a.taken[0].0, 1);
+        assert_eq!(a.taken[0].2, 2048);
+        c.release(&a);
+        assert_eq!(c.nodes()[1].free_memory_mb, 4096);
+    }
+
+    #[test]
+    fn feasibility_vs_fits_now() {
+        let mut c = Cluster::homogeneous(2, 4, 0);
+        let big = job(1, 100);
+        assert!(!c.feasible(&big));
+        let j = job(2, 8);
+        assert!(c.feasible(&j));
+        assert!(c.fits_now(&j));
+        let _a = c.allocate(&j, AllocPolicy::FirstFit).unwrap();
+        assert!(c.feasible(&j));
+        assert!(!c.fits_now(&j));
+    }
+
+    #[test]
+    fn utilization_tracks_allocations() {
+        let mut c = Cluster::homogeneous(2, 8, 0);
+        assert_eq!(c.utilization(), 0.0);
+        let a = c.allocate(&job(1, 8), AllocPolicy::FirstFit).unwrap();
+        assert_eq!(c.utilization(), 0.5);
+        c.release(&a);
+        assert_eq!(c.utilization(), 0.0);
+    }
+
+    #[test]
+    fn free_vec_matches_nodes() {
+        let mut c = Cluster::heterogeneous(&[(4, 0), (8, 0)]);
+        let _a = c.allocate(&job(1, 6), AllocPolicy::FirstFit).unwrap();
+        assert_eq!(c.free_vec(), vec![0.0, 6.0]);
+    }
+}

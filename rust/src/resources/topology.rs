@@ -1,0 +1,213 @@
+//! Network topology modeling (SST's Merlin analogue).
+//!
+//! The paper leans on SST's Merlin element for "diverse network
+//! topologies such as dragonfly, torus, mesh, and fattree". This module
+//! provides that substrate at the granularity the job simulator needs:
+//! node-to-node hop distances per topology, locality-aware allocation
+//! scoring, and a communication-slowdown model that stretches job
+//! runtimes when their allocation is fragmented across the machine.
+
+use crate::resources::Allocation;
+
+/// Supported interconnect topologies (the four Merlin examples the paper
+/// names).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Topology {
+    /// 2-D mesh of given dimensions (no wraparound).
+    Mesh2D { x: usize, y: usize },
+    /// 2-D torus (wraparound links).
+    Torus2D { x: usize, y: usize },
+    /// k-ary fat tree: `leaf` nodes per edge switch, `agg` edge switches
+    /// per pod. Distance = 1 within a switch, 3 within a pod, 5 across.
+    FatTree { leaf: usize, agg: usize },
+    /// Dragonfly: `a` routers per group, `p` nodes per router. Distance =
+    /// 1 same router, 2 same group, 3 global (one global hop, canonical
+    /// minimal routing).
+    Dragonfly { a: usize, p: usize },
+}
+
+impl Topology {
+    /// Number of compute nodes the topology wires.
+    pub fn nodes(&self) -> usize {
+        match *self {
+            Topology::Mesh2D { x, y } | Topology::Torus2D { x, y } => x * y,
+            Topology::FatTree { leaf, agg } => leaf * agg * agg,
+            Topology::Dragonfly { a, p } => a * p * (a + 1), // a+1 groups (balanced)
+        }
+    }
+
+    /// Hop distance between node ids (0-based, < nodes()).
+    pub fn distance(&self, u: usize, v: usize) -> usize {
+        if u == v {
+            return 0;
+        }
+        match *self {
+            Topology::Mesh2D { x, .. } => {
+                let (ux, uy) = (u % x, u / x);
+                let (vx, vy) = (v % x, v / x);
+                ux.abs_diff(vx) + uy.abs_diff(vy)
+            }
+            Topology::Torus2D { x, y } => {
+                let (ux, uy) = (u % x, u / x);
+                let (vx, vy) = (v % x, v / x);
+                let dx = ux.abs_diff(vx).min(x - ux.abs_diff(vx));
+                let dy = uy.abs_diff(vy).min(y - uy.abs_diff(vy));
+                dx + dy
+            }
+            Topology::FatTree { leaf, agg } => {
+                let (us, vs) = (u / leaf, v / leaf); // edge switch
+                if us == vs {
+                    return 1;
+                }
+                let pod = agg; // `agg` edge switches per pod
+                if us / pod == vs / pod {
+                    3
+                } else {
+                    5
+                }
+            }
+            Topology::Dragonfly { a, p } => {
+                let (ur, vr) = (u / p, v / p); // router
+                if ur == vr {
+                    return 1;
+                }
+                if ur / a == vr / a {
+                    2 // same group
+                } else {
+                    3 // minimal global route
+                }
+            }
+        }
+    }
+
+    /// Mean pairwise hop distance of an allocation's node set — the
+    /// locality score a topology-aware allocator minimizes.
+    pub fn allocation_span(&self, nodes: &[usize]) -> f64 {
+        if nodes.len() < 2 {
+            return 0.0;
+        }
+        let mut total = 0usize;
+        let mut pairs = 0usize;
+        for i in 0..nodes.len() {
+            for j in i + 1..nodes.len() {
+                total += self.distance(nodes[i], nodes[j]);
+                pairs += 1;
+            }
+        }
+        total as f64 / pairs as f64
+    }
+
+    /// Communication slowdown factor for a job on this allocation:
+    /// 1 + sensitivity * (mean hops - 1)+ . `sensitivity` models how
+    /// communication-bound the application is (0 = embarrassingly
+    /// parallel).
+    pub fn slowdown(&self, alloc: &Allocation, sensitivity: f64) -> f64 {
+        let span = self.allocation_span(&alloc.node_ids());
+        1.0 + sensitivity * (span - 1.0).max(0.0)
+    }
+
+    /// Diameter (max distance over sampled pairs; exact for these closed
+    /// forms).
+    pub fn diameter(&self) -> usize {
+        match *self {
+            Topology::Mesh2D { x, y } => (x - 1) + (y - 1),
+            Topology::Torus2D { x, y } => x / 2 + y / 2,
+            Topology::FatTree { agg, .. } => {
+                if agg > 1 {
+                    5
+                } else {
+                    3
+                }
+            }
+            Topology::Dragonfly { .. } => 3,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_distances() {
+        let t = Topology::Mesh2D { x: 4, y: 4 };
+        assert_eq!(t.nodes(), 16);
+        assert_eq!(t.distance(0, 0), 0);
+        assert_eq!(t.distance(0, 3), 3); // same row
+        assert_eq!(t.distance(0, 15), 6); // opposite corner
+        assert_eq!(t.diameter(), 6);
+    }
+
+    #[test]
+    fn torus_wraps() {
+        let t = Topology::Torus2D { x: 4, y: 4 };
+        assert_eq!(t.distance(0, 3), 1); // wraparound beats 3 hops
+        assert_eq!(t.distance(0, 15), 2); // (-1, -1)
+        assert_eq!(t.diameter(), 4);
+        // Torus never exceeds mesh distance.
+        let m = Topology::Mesh2D { x: 4, y: 4 };
+        for u in 0..16 {
+            for v in 0..16 {
+                assert!(t.distance(u, v) <= m.distance(u, v));
+            }
+        }
+    }
+
+    #[test]
+    fn fat_tree_tiers() {
+        let t = Topology::FatTree { leaf: 4, agg: 2 };
+        assert_eq!(t.nodes(), 16);
+        assert_eq!(t.distance(0, 1), 1); // same edge switch
+        assert_eq!(t.distance(0, 4), 3); // same pod, different switch
+        assert_eq!(t.distance(0, 8), 5); // cross pod
+    }
+
+    #[test]
+    fn dragonfly_tiers() {
+        let t = Topology::Dragonfly { a: 4, p: 2 };
+        assert_eq!(t.nodes(), 4 * 2 * 5);
+        assert_eq!(t.distance(0, 1), 1); // same router
+        assert_eq!(t.distance(0, 2), 2); // same group
+        assert_eq!(t.distance(0, 8), 3); // other group
+    }
+
+    #[test]
+    fn distances_are_symmetric_metrics() {
+        for t in [
+            Topology::Mesh2D { x: 5, y: 3 },
+            Topology::Torus2D { x: 5, y: 3 },
+            Topology::FatTree { leaf: 3, agg: 2 },
+            Topology::Dragonfly { a: 3, p: 2 },
+        ] {
+            let n = t.nodes();
+            for u in 0..n {
+                assert_eq!(t.distance(u, u), 0);
+                for v in 0..n {
+                    assert_eq!(t.distance(u, v), t.distance(v, u), "{t:?} {u} {v}");
+                    assert!(t.distance(u, v) <= t.diameter(), "{t:?} {u}->{v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allocation_span_and_slowdown() {
+        let t = Topology::Mesh2D { x: 8, y: 1 };
+        let tight = Allocation { job_id: 1, taken: vec![(0, 1, 0), (1, 1, 0)] };
+        let spread = Allocation { job_id: 2, taken: vec![(0, 1, 0), (7, 1, 0)] };
+        assert_eq!(t.allocation_span(&tight.node_ids()), 1.0);
+        assert_eq!(t.allocation_span(&spread.node_ids()), 7.0);
+        assert_eq!(t.slowdown(&tight, 0.1), 1.0);
+        assert!((t.slowdown(&spread, 0.1) - 1.6).abs() < 1e-12);
+        // Insensitive apps never slow down.
+        assert_eq!(t.slowdown(&spread, 0.0), 1.0);
+    }
+
+    #[test]
+    fn single_node_alloc_has_zero_span() {
+        let t = Topology::Dragonfly { a: 4, p: 4 };
+        let a = Allocation { job_id: 1, taken: vec![(3, 4, 0)] };
+        assert_eq!(t.allocation_span(&a.node_ids()), 0.0);
+        assert_eq!(t.slowdown(&a, 1.0), 1.0);
+    }
+}

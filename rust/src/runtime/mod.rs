@@ -1,0 +1,332 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifact.
+//!
+//! `make artifacts` lowers the L2 scoring model (python/compile/model.py,
+//! which embeds the L1 Pallas fit kernel) to HLO *text*; this module loads
+//! that text with `HloModuleProto::from_text_file`, compiles it once on
+//! the PJRT CPU client, and exposes it as a [`QueueScorer`] the backfill
+//! scheduler can call on its hot path. Python never runs at simulation
+//! time — the binary is self-contained once `artifacts/` exists.
+//!
+//! HLO text (not a serialized proto) is the interchange format because
+//! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see python/compile/aot.py).
+
+use crate::sched::scorer::{QueueScorer, ScoreParams, Scores};
+use anyhow::{bail, Context, Result};
+
+/// Padded shapes baked into the artifact — keep in sync with
+/// python/compile/model.py (Q_PAD, N_PAD).
+pub const Q_PAD: usize = 256;
+pub const N_PAD: usize = 512;
+
+/// Default artifact location relative to the repo root.
+pub const DEFAULT_ARTIFACT: &str = "artifacts/model.hlo.txt";
+
+/// XLA-backed queue scorer (PJRT CPU client).
+pub struct XlaScorer {
+    /// Kept alive for the executable's lifetime.
+    _client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    q_pad: usize,
+    n_pad: usize,
+    /// Executions performed (for reporting).
+    pub calls: u64,
+}
+
+impl XlaScorer {
+    /// Load and compile the artifact at `path`.
+    pub fn load(path: &str) -> Result<XlaScorer> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?} (run `make artifacts`?)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling HLO on PJRT")?;
+        Ok(XlaScorer { _client: client, exe, q_pad: Q_PAD, n_pad: N_PAD, calls: 0 })
+    }
+
+    /// Load the default artifact.
+    pub fn load_default() -> Result<XlaScorer> {
+        Self::load(DEFAULT_ARTIFACT)
+    }
+
+    /// One padded execution over at most `q_pad` jobs.
+    fn execute_chunk(
+        &mut self,
+        req: &[f32],
+        est: &[f32],
+        wait: &[f32],
+        free_padded: &[f32],
+        params: [f32; 4],
+        out: &mut Scores,
+    ) -> Result<()> {
+        debug_assert!(req.len() <= self.q_pad);
+        let q = req.len();
+        let pad = |xs: &[f32]| {
+            let mut v = xs.to_vec();
+            v.resize(self.q_pad, 0.0);
+            xla::Literal::vec1(&v)
+        };
+        let lit_req = pad(req);
+        let lit_est = pad(est);
+        let lit_wait = pad(wait);
+        let lit_free = xla::Literal::vec1(free_padded);
+        let lit_params = xla::Literal::vec1(&params);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit_req, lit_est, lit_wait, lit_free, lit_params])
+            .context("executing scorer artifact")?[0][0]
+            .to_literal_sync()
+            .context("fetching scorer result")?;
+        self.calls += 1;
+        let (waste, ok, prio) = result.to_tuple3().context("unpacking scorer tuple")?;
+        let waste = waste.to_vec::<f32>()?;
+        let ok = ok.to_vec::<f32>()?;
+        let prio = prio.to_vec::<f32>()?;
+        out.waste.extend_from_slice(&waste[..q]);
+        out.backfill_ok.extend_from_slice(&ok[..q]);
+        out.priority.extend_from_slice(&prio[..q]);
+        Ok(())
+    }
+
+    /// Score arbitrarily long queues by chunking in `q_pad` batches.
+    /// Node count must fit the artifact's padded width.
+    pub fn score_checked(
+        &mut self,
+        job_req: &[f32],
+        job_est: &[f32],
+        job_wait: &[f32],
+        node_free: &[f32],
+        params: ScoreParams,
+    ) -> Result<Scores> {
+        if node_free.len() > self.n_pad {
+            bail!(
+                "cluster has {} nodes but the artifact is padded for {} — \
+                 re-run `make artifacts` with a larger --n",
+                node_free.len(),
+                self.n_pad
+            );
+        }
+        let mut free = node_free.to_vec();
+        free.resize(self.n_pad, 0.0);
+        let q = job_req.len();
+        let mut out = Scores {
+            waste: Vec::with_capacity(q),
+            backfill_ok: Vec::with_capacity(q),
+            priority: Vec::with_capacity(q),
+        };
+        let p = params.as_array();
+        let mut i = 0;
+        while i < q {
+            let j = (i + self.q_pad).min(q);
+            self.execute_chunk(
+                &job_req[i..j],
+                &job_est[i..j],
+                &job_wait[i..j],
+                &free,
+                p,
+                &mut out,
+            )?;
+            i = j;
+        }
+        Ok(out)
+    }
+}
+
+impl QueueScorer for XlaScorer {
+    fn score(
+        &mut self,
+        job_req: &[f32],
+        job_est: &[f32],
+        job_wait: &[f32],
+        node_free: &[f32],
+        params: ScoreParams,
+    ) -> Scores {
+        self.score_checked(job_req, job_est, job_wait, node_free, params)
+            .expect("XLA scorer execution failed")
+    }
+
+    fn backend(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Hybrid scorer: PJRT dispatch costs ~150 us per call regardless of
+/// batch size (EXPERIMENTS.md §Perf), so small queues are scored by the
+/// native implementation and only large ones go to the artifact. Both
+/// backends produce identical decisions (xla_parity tests), so the
+/// crossover is purely a latency knob.
+pub struct HybridScorer {
+    native: crate::sched::NativeScorer,
+    xla: XlaScorer,
+    /// Queue length at which the XLA path wins (measured crossover).
+    pub threshold: usize,
+}
+
+impl HybridScorer {
+    pub fn load_default() -> Result<HybridScorer> {
+        Ok(HybridScorer {
+            native: crate::sched::NativeScorer::new(),
+            xla: XlaScorer::load_default()?,
+            threshold: 512,
+        })
+    }
+
+    /// Fraction of calls that went to the XLA path.
+    pub fn xla_calls(&self) -> u64 {
+        self.xla.calls
+    }
+}
+
+impl QueueScorer for HybridScorer {
+    fn score(
+        &mut self,
+        job_req: &[f32],
+        job_est: &[f32],
+        job_wait: &[f32],
+        node_free: &[f32],
+        params: ScoreParams,
+    ) -> Scores {
+        if job_req.len() >= self.threshold {
+            self.xla.score(job_req, job_est, job_wait, node_free, params)
+        } else {
+            self.native.score(job_req, job_est, job_wait, node_free, params)
+        }
+    }
+
+    fn backend(&self) -> &'static str {
+        "hybrid"
+    }
+}
+
+/// Scorer backend selector (CLI `--accel`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Accel {
+    /// Pure-Rust scorer (always available).
+    #[default]
+    Native,
+    /// AOT-compiled JAX/Pallas artifact via PJRT.
+    Xla,
+    /// Native below the measured batch-size crossover, XLA above.
+    Hybrid,
+}
+
+impl std::str::FromStr for Accel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(Accel::Native),
+            "xla" => Ok(Accel::Xla),
+            "hybrid" => Ok(Accel::Hybrid),
+            other => Err(format!("unknown accel {other:?} (expected native|xla|hybrid)")),
+        }
+    }
+}
+
+/// Build a backfill scheduler with the requested scorer backend.
+pub fn backfill_with_accel(accel: Accel) -> Result<crate::sched::BackfillScheduler> {
+    Ok(match accel {
+        Accel::Native => crate::sched::BackfillScheduler::new(),
+        Accel::Xla => crate::sched::BackfillScheduler::with_scorer(Box::new(
+            XlaScorer::load_default()?,
+        )),
+        Accel::Hybrid => crate::sched::BackfillScheduler::with_scorer(Box::new(
+            HybridScorer::load_default()?,
+        )),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::scorer::{NativeScorer, NOFIT};
+
+    fn artifact_available() -> bool {
+        std::path::Path::new(DEFAULT_ARTIFACT).exists()
+    }
+
+    fn params() -> ScoreParams {
+        ScoreParams { shadow_time: 120.0, extra_cores: 8.0, aging_weight: 1.0, waste_weight: 0.5 }
+    }
+
+    #[test]
+    fn accel_parses() {
+        assert_eq!("xla".parse::<Accel>().unwrap(), Accel::Xla);
+        assert_eq!("NATIVE".parse::<Accel>().unwrap(), Accel::Native);
+        assert_eq!("hybrid".parse::<Accel>().unwrap(), Accel::Hybrid);
+        assert!("gpu".parse::<Accel>().is_err());
+    }
+
+    #[test]
+    fn hybrid_routes_by_batch_size() {
+        if !artifact_available() {
+            return;
+        }
+        let mut h = HybridScorer::load_default().unwrap();
+        h.threshold = 64;
+        let small: Vec<f32> = vec![1.0; 32];
+        let free = vec![8.0; 16];
+        let _ = h.score(&small, &small, &small, &free, params());
+        assert_eq!(h.xla_calls(), 0, "small batch must stay native");
+        let big: Vec<f32> = vec![1.0; 128];
+        let _ = h.score(&big, &big, &big, &free, params());
+        assert!(h.xla_calls() > 0, "large batch must use XLA");
+    }
+
+    #[test]
+    fn xla_matches_native_scorer() {
+        if !artifact_available() {
+            eprintln!("skipping: artifacts/model.hlo.txt missing (run `make artifacts`)");
+            return;
+        }
+        let mut xs = XlaScorer::load_default().unwrap();
+        let mut ns = NativeScorer::new();
+        let req: Vec<f32> = (0..40).map(|i| (i % 9) as f32).collect();
+        let est: Vec<f32> = (0..40).map(|i| 30.0 * (1 + i % 7) as f32).collect();
+        let wait: Vec<f32> = (0..40).map(|i| 10.0 * i as f32).collect();
+        let free: Vec<f32> = (0..72).map(|i| (i % 3) as f32 * 4.0).collect();
+        let a = xs.score(&req, &est, &wait, &free, params());
+        let b = ns.score(&req, &est, &wait, &free, params());
+        assert_eq!(a.backfill_ok, b.backfill_ok);
+        for (x, y) in a.waste.iter().zip(&b.waste) {
+            assert!((x - y).abs() <= 1e-4 * y.abs().max(1.0), "waste {x} vs {y}");
+        }
+        for (x, y) in a.priority.iter().zip(&b.priority) {
+            assert!((x - y).abs() <= 1e-3 * y.abs().max(1.0), "prio {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn xla_chunking_handles_long_queues() {
+        if !artifact_available() {
+            return;
+        }
+        let mut xs = XlaScorer::load_default().unwrap();
+        let q = Q_PAD * 2 + 37; // forces 3 chunks
+        let req: Vec<f32> = (0..q).map(|i| (i % 16 + 1) as f32).collect();
+        let est = vec![60.0; q];
+        let wait = vec![0.0; q];
+        let free = vec![8.0; 64];
+        let s = xs.score(&req, &est, &wait, &free, params());
+        assert_eq!(s.waste.len(), q);
+        assert_eq!(xs.calls, 3);
+        // Spot-check semantics: a 1-core job's best single-node slack is 7.
+        assert_eq!(s.waste[0], 7.0);
+        // 9..16-core jobs fit no single 8-core node.
+        assert_eq!(s.waste[8], NOFIT);
+    }
+
+    #[test]
+    fn too_many_nodes_is_a_clear_error() {
+        if !artifact_available() {
+            return;
+        }
+        let mut xs = XlaScorer::load_default().unwrap();
+        let free = vec![1.0; N_PAD + 1];
+        let err = xs
+            .score_checked(&[1.0], &[1.0], &[0.0], &free, params())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("padded"), "{err}");
+    }
+}

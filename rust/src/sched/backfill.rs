@@ -1,0 +1,310 @@
+//! FCFS with EASY Backfilling (paper §2.1): the head of the queue gets a
+//! reservation at the earliest time enough cores free up (the *shadow
+//! time*); jobs behind it may start out of order iff they cannot delay
+//! that reservation — they either finish before the shadow time or use
+//! only the *extra* cores the head will not need.
+//!
+//! Candidate ranking and feasibility pre-filtering run through a
+//! [`QueueScorer`] — the batched O(Q x N) computation that the L1 Pallas
+//! kernel implements. The default is the pure-Rust [`NativeScorer`];
+//! `--accel xla` swaps in the AOT-compiled artifact. Final admission is
+//! re-checked in exact integer arithmetic, so scorer backend choice can
+//! never change a scheduling decision (asserted by rust/tests/xla_parity).
+
+use crate::core::time::SimTime;
+use crate::resources::{AllocPolicy, Allocation, Cluster};
+use crate::sched::scorer::{NativeScorer, QueueScorer, ScoreParams};
+use crate::sched::{SchedInput, Scheduler};
+
+/// EASY backfilling scheduler.
+pub struct BackfillScheduler {
+    scorer: Box<dyn QueueScorer>,
+    /// Scoring weights (aging, waste) — see ScoreParams.
+    pub aging_weight: f32,
+    pub waste_weight: f32,
+}
+
+impl Default for BackfillScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BackfillScheduler {
+    pub fn new() -> Self {
+        BackfillScheduler {
+            scorer: Box::new(NativeScorer::new()),
+            aging_weight: 1.0,
+            waste_weight: 0.5,
+        }
+    }
+
+    /// Use a specific scorer backend (e.g. `runtime::XlaScorer`).
+    pub fn with_scorer(scorer: Box<dyn QueueScorer>) -> Self {
+        BackfillScheduler { scorer, aging_weight: 1.0, waste_weight: 0.5 }
+    }
+
+    pub fn scorer_backend(&self) -> &'static str {
+        self.scorer.backend()
+    }
+
+    /// Shadow-time computation: walk running-job releases (by *estimated*
+    /// end) until the head job fits. Returns (shadow_time, extra_cores):
+    /// the head's reservation start and the cores it leaves unused then.
+    fn reservation(
+        head_cores: u64,
+        free_now: u64,
+        releases: &mut Vec<(SimTime, u64)>,
+        now: SimTime,
+    ) -> Option<(SimTime, u64)> {
+        releases.sort();
+        let mut avail = free_now;
+        let mut shadow = now;
+        let mut i = 0;
+        while avail < head_cores {
+            if i >= releases.len() {
+                return None; // head can never fit (infeasible)
+            }
+            avail += releases[i].1;
+            shadow = releases[i].0;
+            i += 1;
+        }
+        Some((shadow, avail - head_cores))
+    }
+}
+
+impl Scheduler for BackfillScheduler {
+    fn name(&self) -> &'static str {
+        "fcfs-backfill"
+    }
+
+    fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
+        let mut out = Vec::new();
+
+        // Phase 1 — plain FCFS from the head while jobs fit. Lazy single
+        // pass: under a blocked head this touches only the prefix, never
+        // the whole queue (§Perf).
+        let mut queue_iter = input.queue.iter();
+        let mut phase1_releases: Vec<(SimTime, u64)> = Vec::new();
+        let mut head = None;
+        for job in queue_iter.by_ref() {
+            if !cluster.feasible(job) {
+                continue;
+            }
+            match cluster.allocate(job, AllocPolicy::FirstFit) {
+                Some(a) => {
+                    phase1_releases.push((input.now + job.est_runtime, a.cores()));
+                    out.push(a);
+                }
+                None => {
+                    head = Some(job);
+                    break;
+                }
+            }
+        }
+        let Some(head) = head else { return out };
+
+        // Phase 2 — the head is blocked: compute its reservation from
+        // running jobs plus phase-1 starts (both hold cores until their
+        // estimated ends).
+        let mut releases: Vec<(SimTime, u64)> =
+            input.running.iter().map(|r| (r.est_end, r.cores)).collect();
+        releases.extend(phase1_releases);
+        let Some((shadow, extra)) =
+            Self::reservation(head.cores, cluster.free_cores(), &mut releases, input.now)
+        else {
+            return out; // head infeasible; nothing more to do
+        };
+
+        // Phase 3 — score the candidates behind the head (the batched
+        // O(Q x N) inner loop -> scorer / Pallas kernel).
+        let cands: Vec<&crate::job::Job> = queue_iter.collect();
+        if cands.is_empty() {
+            return out;
+        }
+        let mut req = Vec::with_capacity(cands.len());
+        let mut est = Vec::with_capacity(cands.len());
+        let mut wait = Vec::with_capacity(cands.len());
+        for j in &cands {
+            req.push(j.cores as f32);
+            est.push(j.est_runtime.as_f64() as f32);
+            wait.push((input.now - j.submit).as_f64() as f32);
+        }
+        let params = ScoreParams {
+            shadow_time: (shadow - input.now).as_f64() as f32,
+            extra_cores: extra as f32,
+            aging_weight: self.aging_weight,
+            waste_weight: self.waste_weight,
+        };
+        let scores = self.scorer.score(&req, &est, &wait, &cluster.free_vec(), params);
+
+        // Rank candidates by priority (desc); ties keep arrival order.
+        let mut order: Vec<usize> = (0..cands.len()).collect();
+        order.sort_by(|&a, &b| {
+            scores.priority[b]
+                .partial_cmp(&scores.priority[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+
+        // Phase 4 — admit candidates; exact integer re-check is
+        // authoritative so f32 scoring can never change a decision.
+        let mut remaining_extra = extra;
+        for &ci in &order {
+            if scores.backfill_ok[ci] != 1.0 {
+                continue;
+            }
+            let job = cands[ci];
+            if job.cores > cluster.free_cores() {
+                continue;
+            }
+            let finishes_by_shadow = input.now + job.est_runtime <= shadow;
+            let within_extra = job.cores <= remaining_extra;
+            if !finishes_by_shadow && !within_extra {
+                continue;
+            }
+            if let Some(a) = cluster.allocate(job, AllocPolicy::FirstFit) {
+                if !finishes_by_shadow {
+                    remaining_extra -= job.cores;
+                }
+                out.push(a);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::job::{Job, JobId, WaitQueue};
+    use crate::sched::RunningJob;
+
+    fn run(
+        queue: &WaitQueue,
+        running: &[RunningJob],
+        cluster: &mut Cluster,
+        now: u64,
+    ) -> Vec<JobId> {
+        let input = SchedInput { now: SimTime(now), queue, running };
+        BackfillScheduler::new()
+            .schedule(&input, cluster)
+            .iter()
+            .map(|a| a.job_id)
+            .collect()
+    }
+
+    #[test]
+    fn backfills_short_job_past_blocked_head() {
+        // Machine: 8 cores. Running: 4 cores until t=100.
+        // Head wants 8 (blocked until 100). Short job wants 4 for 50s:
+        // finishes by the shadow time -> backfilled.
+        let mut c = Cluster::homogeneous(1, 8, 0);
+        let ra = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100) }];
+        let mut q = WaitQueue::new();
+        q.push(Job::with_estimate(1, 0, 8, 100, 100)); // head, blocked
+        q.push(Job::with_estimate(2, 1, 4, 50, 50)); // backfill candidate
+        let started = run(&q, &running, &mut c, 0);
+        assert_eq!(started, vec![2]);
+        c.release(&ra);
+    }
+
+    #[test]
+    fn does_not_delay_head_reservation() {
+        // Same as above but the candidate runs for 200s > shadow 100 and
+        // extra = 0 (head takes the whole machine) -> must NOT backfill.
+        let mut c = Cluster::homogeneous(1, 8, 0);
+        let _ra = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100) }];
+        let mut q = WaitQueue::new();
+        q.push(Job::with_estimate(1, 0, 8, 100, 100));
+        q.push(Job::with_estimate(2, 1, 4, 200, 200));
+        let started = run(&q, &running, &mut c, 0);
+        assert!(started.is_empty());
+    }
+
+    #[test]
+    fn long_candidate_on_extra_cores_is_fine() {
+        // Machine: 8 cores, 4 running until t=100. Head wants 6 at shadow
+        // -> extra = 8-6 = 2. A 2-core long job may run indefinitely.
+        let mut c = Cluster::homogeneous(1, 8, 0);
+        let _ra = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100) }];
+        let mut q = WaitQueue::new();
+        q.push(Job::with_estimate(1, 0, 6, 100, 100)); // head: blocked (only 4 free)
+        q.push(Job::with_estimate(2, 1, 2, 10_000, 10_000)); // long but small
+        let started = run(&q, &running, &mut c, 0);
+        assert_eq!(started, vec![2]);
+    }
+
+    #[test]
+    fn extra_budget_is_consumed() {
+        // extra = 2; two 2-core long candidates: only the first backfills.
+        let mut c = Cluster::homogeneous(1, 8, 0);
+        let _ra = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100) }];
+        let mut q = WaitQueue::new();
+        q.push(Job::with_estimate(1, 0, 6, 100, 100)); // head
+        q.push(Job::with_estimate(2, 1, 2, 10_000, 10_000));
+        q.push(Job::with_estimate(3, 2, 2, 10_000, 10_000));
+        let started = run(&q, &running, &mut c, 0);
+        assert_eq!(started, vec![2]);
+    }
+
+    #[test]
+    fn fcfs_phase_starts_fitting_heads() {
+        let mut c = Cluster::homogeneous(1, 8, 0);
+        let mut q = WaitQueue::new();
+        q.push(Job::simple(1, 0, 4, 10));
+        q.push(Job::simple(2, 1, 4, 10));
+        let started = run(&q, &[], &mut c, 0);
+        assert_eq!(started, vec![1, 2]);
+        assert_eq!(c.free_cores(), 0);
+    }
+
+    #[test]
+    fn phase1_jobs_count_toward_shadow() {
+        // Empty machine, 8 cores. Job 1 (4c, est 100) starts in phase 1.
+        // Head job 2 wants 8 -> shadow = 100 (when job 1 releases), extra =
+        // 8-8=0. Candidate job 3 (4c, est 200) must not start.
+        let mut c = Cluster::homogeneous(1, 8, 0);
+        let mut q = WaitQueue::new();
+        q.push(Job::with_estimate(1, 0, 4, 100, 100));
+        q.push(Job::with_estimate(2, 1, 8, 100, 100));
+        q.push(Job::with_estimate(3, 2, 4, 200, 200));
+        let started = run(&q, &[], &mut c, 0);
+        assert_eq!(started, vec![1]);
+    }
+
+    #[test]
+    fn reservation_math() {
+        let mut rel = vec![(SimTime(50), 2u64), (SimTime(30), 2), (SimTime(90), 4)];
+        let (shadow, extra) =
+            BackfillScheduler::reservation(6, 2, &mut rel, SimTime(0)).unwrap();
+        // avail: 2 -> +2@30 -> +2@50 = 6 >= 6 at t=50.
+        assert_eq!(shadow, SimTime(50));
+        assert_eq!(extra, 0);
+        let mut rel2 = vec![(SimTime(10), 8u64)];
+        let (shadow2, extra2) =
+            BackfillScheduler::reservation(4, 0, &mut rel2, SimTime(0)).unwrap();
+        assert_eq!(shadow2, SimTime(10));
+        assert_eq!(extra2, 4);
+        assert!(BackfillScheduler::reservation(100, 0, &mut vec![], SimTime(0)).is_none());
+    }
+
+    #[test]
+    fn aging_prefers_older_candidate_when_budget_tight() {
+        // extra = 2; candidates arrived at t=1 (older) and t=50 — the
+        // older one wins the single slot because aging raises priority.
+        let mut c = Cluster::homogeneous(1, 8, 0);
+        let _ra = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100) }];
+        let mut q = WaitQueue::new();
+        q.push(Job::with_estimate(1, 0, 6, 100, 100)); // head
+        q.push(Job::with_estimate(3, 50, 2, 10_000, 10_000)); // newer first in queue
+        q.push(Job::with_estimate(2, 1, 2, 10_000, 10_000)); // older but later slot
+        let started = run(&q, &running, &mut c, 60);
+        assert_eq!(started, vec![2]);
+    }
+}

@@ -1,0 +1,128 @@
+//! First-Come-First-Served (paper §2.1): jobs start strictly in arrival
+//! order; a head job that does not fit blocks everything behind it.
+
+use crate::job::{Job, JobId};
+use crate::resources::{AllocPolicy, Allocation, Cluster};
+use crate::sched::{SchedInput, Scheduler};
+
+/// Start jobs following `order`; stop at the first one that does not fit
+/// (blocking discipline shared by FCFS / SJF / LJF / BestFit). Jobs that
+/// can never fit the machine are skipped, not blocked on — the driver
+/// rejects them at submission, but a defensive skip keeps the scheduler
+/// total.
+///
+/// Lazy over the order iterator: under a blocked head the scheduler does
+/// O(1) work instead of materializing the whole queue (the difference is
+/// ~1.6x end-to-end on queue-heavy SP2 workloads — EXPERIMENTS.md §Perf).
+pub(crate) fn run_ordered<'a>(
+    order: impl IntoIterator<Item = &'a Job>,
+    cluster: &mut Cluster,
+    policy: AllocPolicy,
+) -> Vec<Allocation> {
+    let mut out = Vec::new();
+    for job in order {
+        if !cluster.feasible(job) {
+            continue;
+        }
+        match cluster.allocate(job, policy) {
+            Some(a) => out.push(a),
+            None => break,
+        }
+    }
+    out
+}
+
+/// Materialized-id variant for schedulers that must sort first (SJF/LJF).
+pub(crate) fn run_ordered_ids(
+    order: &[JobId],
+    input: &SchedInput<'_>,
+    cluster: &mut Cluster,
+    policy: AllocPolicy,
+) -> Vec<Allocation> {
+    run_ordered(
+        order.iter().map(|id| input.queue.get(*id).expect("scheduler got id not in queue")),
+        cluster,
+        policy,
+    )
+}
+
+/// Strict FCFS with first-fit placement.
+#[derive(Debug, Default)]
+pub struct FcfsScheduler;
+
+impl FcfsScheduler {
+    pub fn new() -> Self {
+        FcfsScheduler
+    }
+}
+
+impl Scheduler for FcfsScheduler {
+    fn uses_running_info(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
+        run_ordered(input.queue.iter(), cluster, AllocPolicy::FirstFit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::time::SimTime;
+    use crate::job::{Job, WaitQueue};
+
+    pub(crate) fn input<'a>(queue: &'a WaitQueue) -> SchedInput<'a> {
+        SchedInput { now: SimTime(100), queue, running: &[] }
+    }
+
+    #[test]
+    fn starts_in_arrival_order() {
+        let mut q = WaitQueue::new();
+        q.push(Job::simple(1, 0, 4, 10));
+        q.push(Job::simple(2, 1, 4, 10));
+        let mut c = Cluster::homogeneous(2, 4, 0);
+        let mut s = FcfsScheduler::new();
+        let allocs = s.schedule(&input(&q), &mut c);
+        assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(c.free_cores(), 0);
+    }
+
+    #[test]
+    fn head_blocks_queue() {
+        let mut q = WaitQueue::new();
+        q.push(Job::simple(1, 0, 8, 10)); // needs whole machine
+        q.push(Job::simple(2, 1, 1, 10)); // would fit, must wait
+        let mut c = Cluster::homogeneous(2, 4, 0);
+        // Occupy one core so job 1 cannot start.
+        let blocker = c.allocate(&Job::simple(99, 0, 1, 1), AllocPolicy::FirstFit).unwrap();
+        let mut s = FcfsScheduler::new();
+        let allocs = s.schedule(&input(&q), &mut c);
+        assert!(allocs.is_empty(), "FCFS must not leapfrog the head");
+        c.release(&blocker);
+        let allocs = s.schedule(&input(&q), &mut c);
+        assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    fn infeasible_job_skipped_not_blocking() {
+        let mut q = WaitQueue::new();
+        q.push(Job::simple(1, 0, 1000, 10)); // bigger than machine
+        q.push(Job::simple(2, 1, 2, 10));
+        let mut c = Cluster::homogeneous(2, 4, 0);
+        let mut s = FcfsScheduler::new();
+        let allocs = s.schedule(&input(&q), &mut c);
+        assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn empty_queue_no_allocs() {
+        let q = WaitQueue::new();
+        let mut c = Cluster::homogeneous(2, 4, 0);
+        assert!(FcfsScheduler::new().schedule(&input(&q), &mut c).is_empty());
+    }
+}

@@ -1,0 +1,78 @@
+//! Longest Job First (paper §2.1): expedites long jobs at the cost of
+//! short-job wait times; included as the deliberately-worse comparator in
+//! Fig 4(b).
+
+use crate::resources::{AllocPolicy, Allocation, Cluster};
+use crate::sched::fcfs::run_ordered_ids;
+use crate::sched::sjf::order_by_estimate;
+use crate::sched::{SchedInput, Scheduler};
+
+/// LJF: queue viewed in descending estimated-runtime order, blocking
+/// discipline. Ties break by (submit, id).
+#[derive(Debug, Default)]
+pub struct LjfScheduler;
+
+impl LjfScheduler {
+    pub fn new() -> Self {
+        LjfScheduler
+    }
+}
+
+impl Scheduler for LjfScheduler {
+    fn uses_running_info(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "ljf"
+    }
+
+    fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
+        let order = order_by_estimate(input, true);
+        run_ordered_ids(&order, input, cluster, AllocPolicy::FirstFit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::time::SimTime;
+    use crate::job::{Job, WaitQueue};
+
+    fn input<'a>(queue: &'a WaitQueue) -> SchedInput<'a> {
+        SchedInput { now: SimTime(100), queue, running: &[] }
+    }
+
+    #[test]
+    fn longest_estimate_first() {
+        let mut q = WaitQueue::new();
+        q.push(Job::with_estimate(1, 0, 2, 100, 500));
+        q.push(Job::with_estimate(2, 1, 2, 100, 10));
+        q.push(Job::with_estimate(3, 2, 2, 100, 50));
+        let mut c = Cluster::homogeneous(1, 4, 0);
+        let allocs = LjfScheduler::new().schedule(&input(&q), &mut c);
+        assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![1, 3]);
+    }
+
+    #[test]
+    fn opposite_of_sjf() {
+        let mut q = WaitQueue::new();
+        for (id, est) in [(1u64, 10u64), (2, 20), (3, 30)] {
+            q.push(Job::with_estimate(id, id, 1, 5, est));
+        }
+        let sjf = order_by_estimate(&input(&q), false);
+        let ljf = order_by_estimate(&input(&q), true);
+        let mut rev = ljf.clone();
+        rev.reverse();
+        assert_eq!(sjf, rev);
+    }
+
+    #[test]
+    fn ljf_ties_break_by_arrival() {
+        let mut q = WaitQueue::new();
+        q.push(Job::with_estimate(9, 5, 1, 10, 42));
+        q.push(Job::with_estimate(3, 1, 1, 10, 42));
+        let order = order_by_estimate(&input(&q), true);
+        assert_eq!(order, vec![3, 9]);
+    }
+}

@@ -1,0 +1,165 @@
+//! Job scheduling algorithms (paper §2.1).
+//!
+//! The paper's five policies — FCFS, SJF, LJF, FCFS+BestFit,
+//! FCFS+Backfilling (EASY) — plus conservative backfilling as the
+//! classic ablation comparator. A scheduler is a pure decision procedure: given
+//! the wait queue (arrival order), the set of running jobs and the cluster,
+//! it performs allocations and returns them. It never mutates jobs or the
+//! queue — the simulation driver owns lifecycle transitions — so the same
+//! scheduler implementations run unchanged inside the event-driven
+//! simulator, the CQsim-like baseline, and the parallel engine.
+
+pub mod backfill;
+pub mod bestfit;
+pub mod conservative;
+pub mod fcfs;
+pub mod ljf;
+pub mod scorer;
+pub mod sjf;
+
+pub use backfill::BackfillScheduler;
+pub use conservative::ConservativeScheduler;
+pub use bestfit::BestFitScheduler;
+pub use fcfs::FcfsScheduler;
+pub use ljf::LjfScheduler;
+pub use scorer::{NativeScorer, QueueScorer, ScoreParams, Scores, NOFIT, SPAN_COST};
+pub use sjf::SjfScheduler;
+
+use crate::core::time::SimTime;
+use crate::job::{JobId, WaitQueue};
+use crate::resources::{Allocation, Cluster};
+use std::str::FromStr;
+
+/// What the scheduler knows about a running job (for shadow-time math).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunningJob {
+    pub id: JobId,
+    pub cores: u64,
+    /// Estimated end = start + user estimate (backfilling trusts estimates,
+    /// not actual runtimes — it cannot see the future).
+    pub est_end: SimTime,
+}
+
+/// Scheduler input for one invocation.
+pub struct SchedInput<'a> {
+    pub now: SimTime,
+    pub queue: &'a WaitQueue,
+    pub running: &'a [RunningJob],
+}
+
+/// A scheduling algorithm.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Decide which queued jobs start now; allocations are committed on
+    /// `cluster` and returned in decision order.
+    fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation>;
+
+    /// Whether the algorithm reads `SchedInput::running` (backfilling
+    /// needs the release profile; the blocking disciplines do not). The
+    /// driver skips building the running-job snapshot when false (§Perf).
+    fn uses_running_info(&self) -> bool {
+        true
+    }
+}
+
+/// Policy selector (config/CLI surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Policy {
+    Fcfs,
+    Sjf,
+    Ljf,
+    FcfsBestFit,
+    #[default]
+    FcfsBackfill,
+    /// Conservative backfilling: reservations for every queued job.
+    ConservativeBackfill,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 6] = [
+        Policy::Fcfs,
+        Policy::Sjf,
+        Policy::Ljf,
+        Policy::FcfsBestFit,
+        Policy::FcfsBackfill,
+        Policy::ConservativeBackfill,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Policy::Fcfs => "fcfs",
+            Policy::Sjf => "sjf",
+            Policy::Ljf => "ljf",
+            Policy::FcfsBestFit => "fcfs-bestfit",
+            Policy::FcfsBackfill => "fcfs-backfill",
+            Policy::ConservativeBackfill => "cons-backfill",
+        }
+    }
+
+    /// Instantiate the scheduler for this policy with the default
+    /// (native) scorer.
+    pub fn build(self) -> Box<dyn Scheduler> {
+        match self {
+            Policy::Fcfs => Box::new(FcfsScheduler::new()),
+            Policy::Sjf => Box::new(SjfScheduler::new()),
+            Policy::Ljf => Box::new(LjfScheduler::new()),
+            Policy::FcfsBestFit => Box::new(BestFitScheduler::new()),
+            Policy::FcfsBackfill => Box::new(BackfillScheduler::new()),
+            Policy::ConservativeBackfill => Box::new(ConservativeScheduler::new()),
+        }
+    }
+}
+
+impl FromStr for Policy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "fcfs" => Ok(Policy::Fcfs),
+            "sjf" => Ok(Policy::Sjf),
+            "ljf" => Ok(Policy::Ljf),
+            "fcfs-bestfit" | "bestfit" | "best-fit" => Ok(Policy::FcfsBestFit),
+            "fcfs-backfill" | "backfill" | "easy" => Ok(Policy::FcfsBackfill),
+            "cons-backfill" | "conservative" => Ok(Policy::ConservativeBackfill),
+            other => Err(format!(
+                "unknown policy {other:?} (expected fcfs|sjf|ljf|fcfs-bestfit|fcfs-backfill)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Policy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(p.as_str().parse::<Policy>().unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn policy_aliases() {
+        assert_eq!("easy".parse::<Policy>().unwrap(), Policy::FcfsBackfill);
+        assert_eq!("best-fit".parse::<Policy>().unwrap(), Policy::FcfsBestFit);
+        assert!("mystery".parse::<Policy>().is_err());
+    }
+
+    #[test]
+    fn build_matches_name() {
+        assert_eq!(Policy::Fcfs.build().name(), "fcfs");
+        assert_eq!(Policy::Sjf.build().name(), "sjf");
+        assert_eq!(Policy::Ljf.build().name(), "ljf");
+        assert_eq!(Policy::FcfsBestFit.build().name(), "fcfs-bestfit");
+        assert_eq!(Policy::FcfsBackfill.build().name(), "fcfs-backfill");
+        assert_eq!(Policy::ConservativeBackfill.build().name(), "cons-backfill");
+    }
+}

@@ -1,0 +1,217 @@
+//! Queue scoring: the vectorizable inner loop of best-fit / backfill.
+//!
+//! [`QueueScorer`] abstracts the batched computation the L2 JAX model
+//! performs (python/compile/model.py): per-job single-node best-fit waste,
+//! backfill feasibility under the EASY shadow constraint, and an
+//! aging-weighted priority. Two implementations exist:
+//!
+//! * [`NativeScorer`] (here) — pure Rust, the default; bit-compatible with
+//!   the oracle in python/compile/kernels/ref.py.
+//! * `runtime::XlaScorer` — executes the AOT-compiled HLO artifact on the
+//!   PJRT CPU client; selected with `--accel xla`.
+//!
+//! A scheduler using either must make identical decisions; the parity test
+//! in rust/tests/xla_parity.rs asserts the outputs agree.
+
+/// Sentinel for "fits on no single node" — mirrors kernels/scores.py.
+pub const NOFIT: f32 = 1.0e9;
+
+/// Waste surrogate charged to jobs that must span nodes — mirrors
+/// model.py SPAN_COST.
+pub const SPAN_COST: f32 = 128.0;
+
+/// Scalar parameters of one scoring call — mirrors model.py `params`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoreParams {
+    /// Time until the EASY head-job reservation can start (seconds).
+    pub shadow_time: f32,
+    /// Cores free even after the head job's reservation.
+    pub extra_cores: f32,
+    /// Weight on accumulated wait in the priority.
+    pub aging_weight: f32,
+    /// Weight on waste in the priority.
+    pub waste_weight: f32,
+}
+
+impl Default for ScoreParams {
+    fn default() -> Self {
+        ScoreParams { shadow_time: 0.0, extra_cores: 0.0, aging_weight: 1.0, waste_weight: 0.5 }
+    }
+}
+
+impl ScoreParams {
+    pub fn as_array(&self) -> [f32; 4] {
+        [self.shadow_time, self.extra_cores, self.aging_weight, self.waste_weight]
+    }
+}
+
+/// Scorer output, one entry per queue slot.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Scores {
+    /// Single-node best-fit slack; NOFIT if no single node fits the job.
+    pub waste: Vec<f32>,
+    /// 1.0 iff the job fits in total free cores AND satisfies the EASY
+    /// shadow constraint (short enough or small enough).
+    pub backfill_ok: Vec<f32>,
+    /// Aging-weighted rank; candidates are considered in descending order.
+    pub priority: Vec<f32>,
+}
+
+/// Batched queue scoring.
+pub trait QueueScorer {
+    /// `job_req[q]` cores, `job_est[q]` estimated runtime, `job_wait[q]`
+    /// accumulated wait, `node_free[n]` free cores per node. All slices of
+    /// the same q resp. n; implementations may pad internally.
+    fn score(
+        &mut self,
+        job_req: &[f32],
+        job_est: &[f32],
+        job_wait: &[f32],
+        node_free: &[f32],
+        params: ScoreParams,
+    ) -> Scores;
+
+    /// Human-readable backend name ("native" / "xla").
+    fn backend(&self) -> &'static str;
+}
+
+/// Pure-Rust scorer; the semantics mirror python/compile/kernels/ref.py
+/// exactly (same constants, same formula, f32 arithmetic).
+#[derive(Debug, Clone, Default)]
+pub struct NativeScorer;
+
+impl NativeScorer {
+    pub fn new() -> Self {
+        NativeScorer
+    }
+}
+
+impl QueueScorer for NativeScorer {
+    fn score(
+        &mut self,
+        job_req: &[f32],
+        job_est: &[f32],
+        job_wait: &[f32],
+        node_free: &[f32],
+        params: ScoreParams,
+    ) -> Scores {
+        let q = job_req.len();
+        debug_assert_eq!(job_est.len(), q);
+        debug_assert_eq!(job_wait.len(), q);
+        let total_free: f32 = node_free.iter().sum();
+        let mut out = Scores {
+            waste: Vec::with_capacity(q),
+            backfill_ok: Vec::with_capacity(q),
+            priority: Vec::with_capacity(q),
+        };
+        for i in 0..q {
+            let req = job_req[i];
+            // L1 kernel equivalent: min non-negative slack over nodes.
+            let mut waste = NOFIT;
+            for &free in node_free {
+                let slack = free - req;
+                if slack >= 0.0 && slack < waste {
+                    waste = slack;
+                }
+            }
+            let single = waste < NOFIT * 0.5;
+            let fits_total = req <= total_free;
+            let short_enough = job_est[i] <= params.shadow_time;
+            let small_enough = req <= params.extra_cores;
+            let ok = fits_total && (short_enough || small_enough);
+            let span_penalty = if single { waste } else { SPAN_COST };
+            let priority = params.aging_weight * job_wait[i]
+                - params.waste_weight * span_penalty
+                - if fits_total { 0.0 } else { NOFIT };
+            out.waste.push(waste);
+            out.backfill_ok.push(if ok { 1.0 } else { 0.0 });
+            out.priority.push(priority);
+        }
+        out
+    }
+
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(shadow: f32, extra: f32) -> ScoreParams {
+        ScoreParams { shadow_time: shadow, extra_cores: extra, aging_weight: 1.0, waste_weight: 0.5 }
+    }
+
+    #[test]
+    fn waste_is_min_slack() {
+        let mut s = NativeScorer::new();
+        let out = s.score(&[4.0], &[10.0], &[0.0], &[8.0, 5.0, 3.0], params(100.0, 0.0));
+        assert_eq!(out.waste, vec![1.0]); // 5-4
+    }
+
+    #[test]
+    fn nofit_when_no_single_node() {
+        let mut s = NativeScorer::new();
+        let out = s.score(&[10.0], &[10.0], &[0.0], &[8.0, 5.0], params(100.0, 0.0));
+        assert_eq!(out.waste, vec![NOFIT]);
+        // Still backfillable: fits in total (13 free) and short enough.
+        assert_eq!(out.backfill_ok, vec![1.0]);
+    }
+
+    #[test]
+    fn too_big_for_machine_blocks() {
+        let mut s = NativeScorer::new();
+        let out = s.score(&[100.0], &[1.0], &[0.0], &[8.0, 5.0], params(1e9, 1e9));
+        assert_eq!(out.backfill_ok, vec![0.0]);
+        assert!(out.priority[0] <= -NOFIT * 0.5);
+    }
+
+    #[test]
+    fn shadow_constraint() {
+        let mut s = NativeScorer::new();
+        // est 50 > shadow 10, req 4 > extra 2 -> not backfillable.
+        let out = s.score(&[4.0], &[50.0], &[0.0], &[8.0], params(10.0, 2.0));
+        assert_eq!(out.backfill_ok, vec![0.0]);
+        // est 50 > shadow 10 but req 4 <= extra 4 -> backfillable.
+        let out = s.score(&[4.0], &[50.0], &[0.0], &[8.0], params(10.0, 4.0));
+        assert_eq!(out.backfill_ok, vec![1.0]);
+    }
+
+    #[test]
+    fn aging_raises_priority() {
+        let mut s = NativeScorer::new();
+        let out = s.score(
+            &[2.0, 2.0],
+            &[10.0, 10.0],
+            &[0.0, 500.0],
+            &[8.0],
+            params(100.0, 8.0),
+        );
+        assert!(out.priority[1] > out.priority[0]);
+    }
+
+    #[test]
+    fn span_cost_applied_to_spanning_jobs() {
+        let mut s = NativeScorer::new();
+        // Job 0 fits single-node with waste 0; job 1 spans (waste NOFIT).
+        let out = s.score(
+            &[8.0, 12.0],
+            &[10.0, 10.0],
+            &[0.0, 0.0],
+            &[8.0, 8.0],
+            params(100.0, 16.0),
+        );
+        let p0 = -0.5 * 0.0;
+        let p1 = -0.5 * SPAN_COST;
+        assert_eq!(out.priority[0], p0);
+        assert_eq!(out.priority[1], p1);
+    }
+
+    #[test]
+    fn empty_queue() {
+        let mut s = NativeScorer::new();
+        let out = s.score(&[], &[], &[], &[8.0], params(1.0, 1.0));
+        assert!(out.waste.is_empty() && out.backfill_ok.is_empty() && out.priority.is_empty());
+    }
+}

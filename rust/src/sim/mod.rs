@@ -1,0 +1,345 @@
+//! The job-scheduling simulation (paper Fig 1): SST-style component
+//! wiring of Job Source -> Job Scheduling + Resource Management -> Job
+//! Executor, over the discrete-event core.
+//!
+//! * `JobSource` replays a [`Workload`] as timed submission events.
+//! * `SchedulerComponent` owns the wait queue, the cluster (Resource
+//!   Management) and the policy (Job Scheduling); on every arrival or
+//!   completion it re-runs the scheduling algorithm and dispatches.
+//! * `JobExecutor` simulates execution: a dispatched job completes after
+//!   its actual runtime and the completion event flows back.
+//!
+//! All lifecycle metrics (occupancy / running / utilization series, wait
+//! times) are recorded event-driven — no sampling error.
+
+pub mod components;
+pub mod multicluster;
+
+pub use components::{JobExecutor, JobSource, SchedulerComponent};
+pub use multicluster::{ClusterSpec, MetaScheduler, MultiClusterReport, Routing};
+
+use crate::core::engine::Engine;
+use crate::core::stats::TimeSeries;
+use crate::core::time::{SimDuration, SimTime};
+use crate::job::Job;
+use crate::metrics::{wait_stats, WaitStats};
+use crate::resources::Cluster;
+use crate::sched::{Policy, Scheduler};
+use crate::trace::Workload;
+
+/// Event payload exchanged between simulation components.
+#[derive(Debug, Clone)]
+pub enum Ev {
+    /// Source -> scheduler: a job arrives (paper: TaskEvent). Boxed so
+    /// the event enum stays 16 bytes — heap sift copies are the DES hot
+    /// path (§Perf: +9% throughput).
+    Submit(Box<Job>),
+    /// Source self-event: emit the next arrival.
+    NextArrival,
+    /// Scheduler self-event: run the scheduling algorithm.
+    Dispatch,
+    /// Scheduler -> executor: job started; executor simulates runtime.
+    Start { job_id: u64, runtime: SimDuration },
+    /// Executor -> scheduler: job finished; release resources.
+    Complete { job_id: u64 },
+}
+
+/// Completed-run report.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub policy: &'static str,
+    pub workload: String,
+    /// All jobs that completed, with timestamps.
+    pub completed: Vec<Job>,
+    pub rejected: u64,
+    /// DES events processed.
+    pub events: u64,
+    /// Simulated end time (last completion).
+    pub end_time: SimTime,
+    /// (t, occupied nodes) — paper Fig 3(a).
+    pub occupancy: TimeSeries,
+    /// (t, running jobs) — paper Fig 3(b).
+    pub running: TimeSeries,
+    /// (t, busy cores / total).
+    pub utilization: TimeSeries,
+    /// Time-weighted mean utilization over the run.
+    pub mean_utilization: f64,
+    /// Scheduler invocations (dispatch rounds).
+    pub dispatches: u64,
+}
+
+impl SimReport {
+    pub fn wait_stats(&self) -> WaitStats {
+        wait_stats(&self.completed)
+    }
+
+    /// Makespan: last completion minus first submission.
+    pub fn makespan(&self) -> SimDuration {
+        let first = self.completed.iter().map(|j| j.submit).min().unwrap_or(SimTime::ZERO);
+        self.end_time - first
+    }
+}
+
+/// Simulation builder.
+pub struct Simulation {
+    pub workload: Workload,
+    pub policy: Policy,
+    /// Scheduler override (e.g. XLA-accelerated backfill); defaults to
+    /// `policy.build()`.
+    pub scheduler: Option<Box<dyn Scheduler>>,
+    /// Dispatch link latency (scheduler -> executor), ticks.
+    pub dispatch_latency: u64,
+    pub seed: u64,
+    /// Memory per node (MB); 0 disables memory accounting.
+    pub mem_per_node: u64,
+}
+
+impl Simulation {
+    pub fn new(workload: Workload, policy: Policy) -> Simulation {
+        Simulation {
+            workload,
+            policy,
+            scheduler: None,
+            dispatch_latency: 0,
+            seed: 1,
+            mem_per_node: 0,
+        }
+    }
+
+    pub fn with_scheduler(mut self, s: Box<dyn Scheduler>) -> Simulation {
+        self.scheduler = Some(s);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Simulation {
+        self.seed = seed;
+        self
+    }
+
+    /// Wire the component graph without running (windowed/parallel use).
+    pub fn build(self) -> SimInstance {
+        let Simulation { workload, policy, scheduler, dispatch_latency, seed, mem_per_node } =
+            self;
+        let cluster =
+            Cluster::homogeneous(workload.nodes, workload.cores_per_node, mem_per_node);
+        let scheduler = scheduler.unwrap_or_else(|| policy.build());
+        let policy_name = scheduler.name();
+        let wl_name = workload.name.clone();
+
+        let mut engine: Engine<Ev> = Engine::new(seed);
+        let source = engine.add(Box::new(JobSource::new(workload.jobs)));
+        let sched = engine.add(Box::new(SchedulerComponent::new(cluster, scheduler)));
+        let exec = engine.add(Box::new(JobExecutor::new(sched)));
+        // Wiring (paper Fig 1): source -> scheduler -> executor -> scheduler.
+        engine.connect(source, sched, SimDuration(0));
+        engine.connect(sched, exec, SimDuration(dispatch_latency));
+        engine.connect(exec, sched, SimDuration(0));
+        // Tell source + executor where to send.
+        engine.get_mut::<JobSource>(source).unwrap().target = sched;
+        engine.get_mut::<JobExecutor>(exec).unwrap().scheduler = sched;
+        engine.get_mut::<SchedulerComponent>(sched).unwrap().executor = exec;
+        SimInstance { engine, sched_id: sched, policy_name, workload_name: wl_name }
+    }
+
+    /// Run to completion (or `horizon`) and report.
+    pub fn run(self, horizon: Option<SimTime>) -> SimReport {
+        let mut inst = self.build();
+        let run = inst.engine.run(horizon);
+        inst.report(run.events, run.end_time)
+    }
+}
+
+/// A wired simulation that can be stepped in conservative windows (used
+/// by the parallel engine) or run to completion.
+pub struct SimInstance {
+    pub engine: Engine<Ev>,
+    sched_id: crate::core::event::ComponentId,
+    policy_name: &'static str,
+    workload_name: String,
+}
+
+impl SimInstance {
+    /// Earliest pending event time.
+    pub fn next_time(&mut self) -> Option<SimTime> {
+        self.engine.next_event_time()
+    }
+
+    /// Process all events strictly before `bound`; returns events handled.
+    pub fn run_window(&mut self, bound: SimTime) -> u64 {
+        self.engine.run_window(bound)
+    }
+
+    /// Close statistics and extract the report.
+    pub fn finalize(mut self) -> SimReport {
+        self.engine.finish();
+        let events = self.engine.events_processed();
+        let end = self.engine.now();
+        self.report(events, end)
+    }
+
+    fn report(&mut self, events: u64, end_time: SimTime) -> SimReport {
+        let sched = self.sched_id;
+        let s = self.engine.get_mut::<SchedulerComponent>(sched).unwrap();
+        let utilization = std::mem::take(&mut s.util_series);
+        let mean_utilization = utilization.time_weighted_mean(end_time);
+        SimReport {
+            policy: self.policy_name,
+            workload: self.workload_name.clone(),
+            completed: std::mem::take(&mut s.completed),
+            rejected: s.rejected,
+            events,
+            end_time,
+            occupancy: std::mem::take(&mut s.occupancy),
+            running: std::mem::take(&mut s.running_series),
+            utilization,
+            mean_utilization,
+            dispatches: s.dispatches,
+        }
+    }
+}
+
+/// Convenience: run `workload` under `policy` with defaults.
+pub fn run_policy(workload: Workload, policy: Policy) -> SimReport {
+    Simulation::new(workload, policy).run(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Workload;
+
+    fn tiny_workload() -> Workload {
+        // 2 nodes x 4 cores. Three jobs: two fill the machine, third waits.
+        Workload::new(
+            "tiny",
+            vec![
+                Job::simple(1, 0, 4, 100),
+                Job::simple(2, 0, 4, 100),
+                Job::simple(3, 10, 8, 50),
+            ],
+            2,
+            4,
+        )
+    }
+
+    #[test]
+    fn fcfs_end_to_end() {
+        let r = run_policy(tiny_workload(), Policy::Fcfs);
+        assert_eq!(r.completed.len(), 3);
+        assert_eq!(r.rejected, 0);
+        let by_id: std::collections::BTreeMap<u64, &Job> =
+            r.completed.iter().map(|j| (j.id, j)).collect();
+        // Jobs 1, 2 start immediately; job 3 waits for both to finish.
+        assert_eq!(by_id[&1].start, Some(SimTime(0)));
+        assert_eq!(by_id[&2].start, Some(SimTime(0)));
+        assert_eq!(by_id[&3].start, Some(SimTime(100)));
+        assert_eq!(by_id[&3].end, Some(SimTime(150)));
+        assert_eq!(r.end_time, SimTime(150));
+    }
+
+    #[test]
+    fn occupancy_series_tracks_usage() {
+        let r = run_policy(tiny_workload(), Policy::Fcfs);
+        // At t=0 both nodes occupied; at 100 job 3 takes both; at 150 zero.
+        let last = r.occupancy.points().last().unwrap();
+        assert_eq!(last.0, SimTime(150));
+        assert_eq!(last.1, 0.0);
+        let max = r.occupancy.points().iter().map(|p| p.1).fold(0.0, f64::max);
+        assert_eq!(max, 2.0);
+    }
+
+    #[test]
+    fn infeasible_job_rejected() {
+        let w = Workload::new("rej", vec![Job::simple(1, 0, 100, 10)], 2, 4);
+        let r = run_policy(w, Policy::Fcfs);
+        assert_eq!(r.completed.len(), 0);
+        assert_eq!(r.rejected, 1);
+    }
+
+    #[test]
+    fn all_policies_complete_everything() {
+        for p in Policy::ALL {
+            let r = run_policy(tiny_workload(), p);
+            assert_eq!(r.completed.len(), 3, "{p} lost jobs");
+            assert_eq!(r.rejected, 0);
+            // Conservation: every completed job has start <= end.
+            for j in &r.completed {
+                assert!(j.start.unwrap() <= j.end.unwrap());
+                assert!(j.start.unwrap() >= j.submit);
+            }
+        }
+    }
+
+    #[test]
+    fn backfill_beats_fcfs_on_classic_scenario() {
+        // 8-core machine. J1 takes 4 cores 100s. J2 (head) needs 8 (waits).
+        // J3 needs 4 for 50s: backfill starts it now; FCFS makes it wait.
+        let w = || {
+            Workload::new(
+                "bf",
+                vec![
+                    Job::with_estimate(1, 0, 4, 100, 100),
+                    Job::with_estimate(2, 1, 8, 100, 100),
+                    Job::with_estimate(3, 2, 4, 50, 50),
+                ],
+                1,
+                8,
+            )
+        };
+        let fcfs = run_policy(w(), Policy::Fcfs);
+        let bf = run_policy(w(), Policy::FcfsBackfill);
+        let wait3 = |r: &SimReport| {
+            r.completed.iter().find(|j| j.id == 3).unwrap().wait_time().unwrap().ticks()
+        };
+        assert!(wait3(&bf) < wait3(&fcfs), "backfill {} !< fcfs {}", wait3(&bf), wait3(&fcfs));
+        // Head job 2 must not be delayed by the backfill.
+        let start2 = |r: &SimReport| {
+            r.completed.iter().find(|j| j.id == 2).unwrap().start.unwrap()
+        };
+        assert_eq!(start2(&bf), start2(&fcfs));
+    }
+
+    #[test]
+    fn sjf_prefers_short_jobs_under_contention() {
+        // One 4-core machine; three jobs arrive together.
+        let w = |_| {
+            Workload::new(
+                "sjf",
+                vec![
+                    Job::with_estimate(1, 0, 4, 100, 100),
+                    Job::with_estimate(2, 1, 4, 10, 10),
+                    Job::with_estimate(3, 1, 4, 200, 200),
+                ],
+                1,
+                4,
+            )
+        };
+        let sjf = run_policy(w(()), Policy::Sjf);
+        let stats = sjf.wait_stats();
+        let ljf = run_policy(w(()), Policy::Ljf);
+        assert!(stats.mean_wait < ljf.wait_stats().mean_wait);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let a = run_policy(tiny_workload(), Policy::FcfsBackfill);
+        let b = run_policy(tiny_workload(), Policy::FcfsBackfill);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.end_time, b.end_time);
+        let ids = |r: &SimReport| -> Vec<(u64, Option<SimTime>)> {
+            r.completed.iter().map(|j| (j.id, j.start)).collect()
+        };
+        assert_eq!(ids(&a), ids(&b));
+    }
+
+    #[test]
+    fn dispatch_latency_delays_starts() {
+        let mut sim = Simulation::new(tiny_workload(), Policy::Fcfs);
+        sim.dispatch_latency = 5;
+        let r = sim.run(None);
+        let j1 = r.completed.iter().find(|j| j.id == 1).unwrap();
+        // Start is stamped at dispatch; execution begins at the executor
+        // after the link latency, so completion shifts by 5.
+        assert_eq!(j1.end, Some(SimTime(105)));
+    }
+}

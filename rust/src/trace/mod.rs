@@ -1,0 +1,141 @@
+//! Workload traces: parsers for the two public archive formats the paper
+//! uses, plus statistically calibrated synthetic generators standing in
+//! for the actual logs (which are not redistributable with this repo —
+//! see DESIGN.md §Substitutions).
+//!
+//! * [`swf`] — Parallel Workloads Archive "Standard Workload Format"
+//!   (SDSC-SP2 log, paper §4.1).
+//! * [`gwf`] — Grid Workloads Archive format (GWA-DAS2 trace, §4.1).
+//! * [`synth`] — DAS-2-like and SDSC-SP2-like generators with the
+//!   published marginals (arrival burstiness, power-of-two sizes,
+//!   heavy-tailed runtimes, over-estimated user runtimes).
+//!
+//! If you have the real logs, `sst-sched run --trace path.swf` parses and
+//! simulates them directly; all experiments fall back to the generators.
+
+pub mod gwf;
+pub mod swf;
+pub mod synth;
+
+pub use gwf::parse_gwf;
+pub use swf::{parse_swf, write_swf};
+pub use synth::{das2::Das2Model, sdsc_sp2::SdscSp2Model};
+
+use crate::job::Job;
+
+/// A workload: jobs sorted by submit time plus the machine they target.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub jobs: Vec<Job>,
+    /// Nodes in the target machine.
+    pub nodes: usize,
+    /// Cores per node.
+    pub cores_per_node: u64,
+}
+
+impl Workload {
+    pub fn new(name: &str, mut jobs: Vec<Job>, nodes: usize, cores_per_node: u64) -> Workload {
+        jobs.sort_by_key(|j| (j.submit, j.id));
+        Workload { name: name.to_string(), jobs, nodes, cores_per_node }
+    }
+
+    pub fn total_cores(&self) -> u64 {
+        self.nodes as u64 * self.cores_per_node
+    }
+
+    /// Keep only the first `n` jobs (prefix in submit order).
+    pub fn truncate(mut self, n: usize) -> Workload {
+        self.jobs.truncate(n);
+        self
+    }
+
+    /// Drop jobs that can never fit the machine (the driver would reject
+    /// them; dropping up front keeps validation metrics comparable).
+    pub fn drop_infeasible(mut self) -> Workload {
+        let cap = self.total_cores();
+        self.jobs.retain(|j| j.cores > 0 && j.cores <= cap);
+        self
+    }
+
+    /// Scale all inter-arrival gaps by `factor` (load scaling: < 1.0
+    /// compresses arrivals = higher load).
+    pub fn scale_arrivals(mut self, factor: f64) -> Workload {
+        if self.jobs.is_empty() {
+            return self;
+        }
+        let base = self.jobs[0].submit.ticks();
+        for j in self.jobs.iter_mut() {
+            let off = (j.submit.ticks() - base) as f64 * factor;
+            j.submit = crate::core::time::SimTime(base + off.round() as u64);
+        }
+        self
+    }
+
+    /// Aggregate demand in core-seconds.
+    pub fn core_seconds(&self) -> f64 {
+        self.jobs.iter().map(|j| j.core_seconds()).sum()
+    }
+
+    /// Offered load: demand / capacity over the submission span.
+    pub fn offered_load(&self) -> f64 {
+        if self.jobs.len() < 2 {
+            return 0.0;
+        }
+        let span = (self.jobs.last().unwrap().submit - self.jobs[0].submit).as_f64();
+        if span == 0.0 {
+            return 0.0;
+        }
+        self.core_seconds() / (span * self.total_cores() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::time::SimTime;
+
+    fn wl(jobs: Vec<Job>) -> Workload {
+        Workload::new("t", jobs, 4, 2)
+    }
+
+    #[test]
+    fn sorts_by_submit() {
+        let w = wl(vec![Job::simple(1, 50, 1, 10), Job::simple(2, 10, 1, 10)]);
+        assert_eq!(w.jobs[0].id, 2);
+    }
+
+    #[test]
+    fn drop_infeasible_filters() {
+        let w = wl(vec![
+            Job::simple(1, 0, 100, 10), // > 8 cores total
+            Job::simple(2, 0, 0, 10),   // zero cores
+            Job::simple(3, 0, 8, 10),
+        ])
+        .drop_infeasible();
+        assert_eq!(w.jobs.len(), 1);
+        assert_eq!(w.jobs[0].id, 3);
+    }
+
+    #[test]
+    fn scale_arrivals_compresses() {
+        let w = wl(vec![Job::simple(1, 100, 1, 1), Job::simple(2, 300, 1, 1)])
+            .scale_arrivals(0.5);
+        assert_eq!(w.jobs[0].submit, SimTime(100));
+        assert_eq!(w.jobs[1].submit, SimTime(200));
+    }
+
+    #[test]
+    fn offered_load() {
+        // 2 jobs x 4 cores x 100s = 800 core-s over 100s span x 8 cores = 1.0
+        let w = wl(vec![Job::simple(1, 0, 4, 100), Job::simple(2, 100, 4, 100)]);
+        assert!((w.offered_load() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn truncate_takes_prefix() {
+        let w = wl((0..10).map(|i| Job::simple(i, i * 10, 1, 1)).collect()).truncate(3);
+        assert_eq!(w.jobs.len(), 3);
+        assert_eq!(w.jobs[2].id, 2);
+    }
+}

@@ -1,0 +1,172 @@
+//! Standard Workload Format (SWF) — the Parallel Workloads Archive format
+//! of the SDSC-SP2 log the paper scales with (§4.1).
+//!
+//! 18 whitespace-separated fields per line; `;` starts a comment. Field
+//! meanings (1-based, per the PWA spec):
+//!  1 job number, 2 submit time, 3 wait time, 4 run time, 5 allocated
+//!  processors, 6 average CPU time, 7 used memory, 8 requested processors,
+//!  9 requested time, 10 requested memory, 11 status, 12 user, 13 group,
+//!  14 executable, 15 queue, 16 partition, 17 preceding job, 18 think time.
+//! Missing values are `-1`.
+
+use crate::core::time::{SimDuration, SimTime};
+use crate::job::Job;
+use anyhow::{bail, Context, Result};
+
+/// Parse SWF text into jobs. Jobs with non-positive runtime or processor
+/// count are skipped (cancelled/failed records), matching how CQsim-style
+/// simulators consume these logs.
+pub fn parse_swf(text: &str) -> Result<Vec<Job>> {
+    let mut jobs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with(';') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() < 11 {
+            bail!("swf line {}: expected >= 11 fields, got {}", lineno + 1, f.len());
+        }
+        let get_i64 = |idx: usize| -> Result<i64> {
+            f[idx]
+                .parse::<i64>()
+                .with_context(|| format!("swf line {}: field {} = {:?}", lineno + 1, idx + 1, f[idx]))
+        };
+        let id = get_i64(0)?;
+        let submit = get_i64(1)?;
+        let run = get_i64(3)?;
+        let used_procs = get_i64(4)?;
+        let req_procs = get_i64(7)?;
+        let req_time = get_i64(8)?;
+        let req_mem = get_i64(9)?;
+        let user = if f.len() > 11 { get_i64(11)? } else { -1 };
+        let group = if f.len() > 12 { get_i64(12)? } else { -1 };
+
+        let procs = if req_procs > 0 { req_procs } else { used_procs };
+        if run <= 0 || procs <= 0 || id < 0 || submit < 0 {
+            continue; // cancelled / failed / malformed record
+        }
+        let est = if req_time > 0 { req_time } else { run };
+        jobs.push(Job::new(
+            id as u64,
+            SimTime(submit as u64),
+            procs as u64,
+            req_mem.max(0) as u64,
+            SimDuration(est as u64),
+            SimDuration(run as u64),
+            user.max(0) as u32,
+            group.max(0) as u32,
+        ));
+    }
+    Ok(jobs)
+}
+
+/// Write jobs as SWF (the fields we track; the rest are -1). Inverse of
+/// [`parse_swf`] for the tracked fields.
+pub fn write_swf(jobs: &[Job], header_comment: &str) -> String {
+    let mut out = String::new();
+    for line in header_comment.lines() {
+        out.push_str("; ");
+        out.push_str(line);
+        out.push('\n');
+    }
+    for j in jobs {
+        let wait = j.wait_time().map(|w| w.ticks() as i64).unwrap_or(-1);
+        out.push_str(&format!(
+            "{} {} {} {} {} -1 -1 {} {} {} 1 {} {} -1 -1 -1 -1 -1\n",
+            j.id,
+            j.submit.ticks(),
+            wait,
+            j.runtime.ticks(),
+            j.cores,
+            j.cores,
+            j.est_runtime.ticks(),
+            if j.memory_mb == 0 { -1 } else { j.memory_mb as i64 },
+            j.user,
+            j.group,
+        ));
+    }
+    out
+}
+
+/// Read and parse an SWF file.
+pub fn load_swf_file(path: &str) -> Result<Vec<Job>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading SWF file {path:?}"))?;
+    parse_swf(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+; SDSC SP2 sample
+; UnixStartTime: 0
+1 0 10 120 4 -1 -1 4 600 -1 1 12 3 -1 -1 -1 -1 -1
+2 30 -1 60 -1 -1 -1 8 100 2048 1 7 1 -1 -1 -1 -1 -1
+3 60 5 -1 4 -1 -1 4 600 -1 0 2 1 -1 -1 -1 -1 -1
+4 90 5 50 0 -1 -1 0 600 -1 0 2 1 -1 -1 -1 -1 -1
+";
+
+    #[test]
+    fn parses_valid_records() {
+        let jobs = parse_swf(SAMPLE).unwrap();
+        // Jobs 3 (run=-1) and 4 (procs=0) are skipped.
+        assert_eq!(jobs.len(), 2);
+        let j = &jobs[0];
+        assert_eq!(j.id, 1);
+        assert_eq!(j.submit, SimTime(0));
+        assert_eq!(j.cores, 4);
+        assert_eq!(j.runtime, SimDuration(120));
+        assert_eq!(j.est_runtime, SimDuration(600));
+        assert_eq!(j.user, 12);
+        assert_eq!(j.group, 3);
+        // Requested memory captured.
+        assert_eq!(jobs[1].memory_mb, 2048);
+    }
+
+    #[test]
+    fn requested_procs_preferred_over_used() {
+        let jobs = parse_swf("1 0 0 10 2 -1 -1 16 20 -1 1 0 0 -1 -1 -1 -1 -1\n").unwrap();
+        assert_eq!(jobs[0].cores, 16);
+    }
+
+    #[test]
+    fn falls_back_to_used_procs() {
+        let jobs = parse_swf("1 0 0 10 2 -1 -1 -1 20 -1 1 0 0 -1 -1 -1 -1 -1\n").unwrap();
+        assert_eq!(jobs[0].cores, 2);
+    }
+
+    #[test]
+    fn estimate_falls_back_to_runtime() {
+        let jobs = parse_swf("1 0 0 77 2 -1 -1 2 -1 -1 1 0 0 -1 -1 -1 -1 -1\n").unwrap();
+        assert_eq!(jobs[0].est_runtime, SimDuration(77));
+    }
+
+    #[test]
+    fn short_lines_error() {
+        assert!(parse_swf("1 2 3\n").is_err());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        assert!(parse_swf("x 0 0 10 2 -1 -1 2 20 -1 1 0 0 -1 -1 -1 -1 -1\n").is_err());
+    }
+
+    #[test]
+    fn write_parse_roundtrip() {
+        let jobs = parse_swf(SAMPLE).unwrap();
+        let text = write_swf(&jobs, "roundtrip test");
+        let back = parse_swf(&text).unwrap();
+        assert_eq!(back.len(), jobs.len());
+        for (a, b) in jobs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.submit, b.submit);
+            assert_eq!(a.cores, b.cores);
+            assert_eq!(a.runtime, b.runtime);
+            assert_eq!(a.est_runtime, b.est_runtime);
+            assert_eq!(a.user, b.user);
+        }
+    }
+}

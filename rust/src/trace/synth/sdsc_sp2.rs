@@ -1,0 +1,170 @@
+//! SDSC-SP2-like workload model.
+//!
+//! The San Diego Supercomputer Center IBM SP2 log (Parallel Workloads
+//! Archive, 1998-2000) covers 73,496 jobs on a 128-node machine. Compared
+//! to DAS-2 it is a classic capability-HPC profile: larger jobs (up to the
+//! full machine), much longer runtimes (median ~10 min, tail to 18 h),
+//! higher utilization (~83%), and slower arrivals. Model calibrated to
+//! the published log summary:
+//!
+//! * sizes: power-of-two weighted toward 1-16, occasional full-machine;
+//! * runtimes: lognormal body (mu=5.9, sigma=1.9 -> median ~6 min) with an
+//!   8% Pareto tail to 18 h;
+//! * arrivals: exponential gaps (mean ~13 min) + diurnal modulation;
+//! * estimates: 15-min buckets, capped at the 18 h queue limit.
+
+use super::{clamp_u64, next_arrival, stats, user_estimate, WorkloadStats, FIRST_ARRIVAL};
+use crate::core::rng::Rng;
+use crate::core::time::{SimDuration, SimTime};
+use crate::job::Job;
+use crate::trace::Workload;
+
+/// SDSC-SP2-like generator parameters.
+#[derive(Debug, Clone)]
+pub struct SdscSp2Model {
+    /// 128 thin nodes.
+    pub nodes: usize,
+    /// One processor per SP2 thin node (jobs request processors=nodes).
+    pub cores_per_node: u64,
+    pub mean_interarrival: f64,
+    pub runtime_mu: f64,
+    pub runtime_sigma: f64,
+    pub tail_fraction: f64,
+    /// 18-hour queue limit of the SP2.
+    pub max_runtime: u64,
+    /// Power-of-two weights for 2^0 .. 2^7 (1..128 procs).
+    pub size_weights: [f64; 8],
+    pub odd_size_fraction: f64,
+    pub users: u32,
+}
+
+impl Default for SdscSp2Model {
+    fn default() -> Self {
+        SdscSp2Model {
+            nodes: 128,
+            cores_per_node: 1,
+            mean_interarrival: 780.0,
+            runtime_mu: 5.9,
+            runtime_sigma: 1.9,
+            tail_fraction: 0.08,
+            max_runtime: 18 * 3600,
+            // 1..16 dominate, 32/64 substantial, 128 rare (SP2 shape).
+            size_weights: [0.22, 0.14, 0.14, 0.16, 0.14, 0.10, 0.07, 0.03],
+            odd_size_fraction: 0.10,
+            users: 437, // the log's published user count
+        }
+    }
+}
+
+impl SdscSp2Model {
+    /// Generate `n` jobs deterministically from `seed`.
+    pub fn generate(&self, n: usize, seed: u64) -> Workload {
+        let mut rng = Rng::new(seed ^ 0x5D5C_5B2);
+        let mut jobs = Vec::with_capacity(n);
+        let mut t = FIRST_ARRIVAL.ticks();
+        let max_cores = self.nodes as u64 * self.cores_per_node;
+        for id in 0..n {
+            t = next_arrival(&mut rng, t, self.mean_interarrival);
+            let mut cores = rng.pow2_size(&self.size_weights);
+            if rng.chance(self.odd_size_fraction) && cores > 2 {
+                cores = rng.range(cores / 2 + 1, cores - 1);
+            }
+            cores = cores.clamp(1, max_cores);
+            let runtime = if rng.chance(self.tail_fraction) {
+                clamp_u64(
+                    rng.pareto(1.2, 3600.0, self.max_runtime as f64),
+                    3600,
+                    self.max_runtime,
+                )
+            } else {
+                clamp_u64(
+                    rng.lognormal(self.runtime_mu, self.runtime_sigma),
+                    1,
+                    self.max_runtime,
+                )
+            };
+            let est = user_estimate(&mut rng, runtime, self.max_runtime);
+            let user = rng.below(self.users as u64) as u32;
+            jobs.push(Job::new(
+                id as u64 + 1,
+                SimTime(t),
+                cores,
+                0,
+                SimDuration(est),
+                SimDuration(runtime),
+                user,
+                user % 16,
+            ));
+        }
+        Workload::new("sdsc-sp2-synth", jobs, self.nodes, self.cores_per_node)
+    }
+
+    pub fn stats(&self, n: usize, seed: u64) -> WorkloadStats {
+        stats(&self.generate(n, seed).jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let m = SdscSp2Model::default();
+        let a = m.generate(300, 9);
+        let b = m.generate(300, 9);
+        assert_eq!(a.jobs.len(), b.jobs.len());
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!((x.submit, x.cores, x.runtime), (y.submit, y.cores, y.runtime));
+        }
+    }
+
+    #[test]
+    fn marginals_match_sp2_shape() {
+        let s = SdscSp2Model::default().stats(20_000, 5);
+        // Bigger jobs than DAS-2.
+        assert!(s.mean_cores > 8.0 && s.mean_cores < 32.0, "mean_cores={}", s.mean_cores);
+        // Median runtime minutes, not seconds.
+        assert!(
+            s.median_runtime > 120.0 && s.median_runtime < 3600.0,
+            "median_runtime={}",
+            s.median_runtime
+        );
+        // Heavy tail pulls the mean far above the median.
+        assert!(s.mean_runtime > 2.0 * s.median_runtime);
+        assert!(s.pow2_fraction > 0.8);
+        assert!((s.mean_interarrival - 780.0).abs() < 120.0,
+            "interarrival={}", s.mean_interarrival);
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let m = SdscSp2Model::default();
+        let w = m.generate(5000, 2);
+        for j in &w.jobs {
+            assert!(j.cores >= 1 && j.cores <= 128);
+            assert!(j.runtime.ticks() <= m.max_runtime);
+            assert!(j.est_runtime.ticks() <= m.max_runtime);
+        }
+    }
+
+    #[test]
+    fn higher_load_than_das2() {
+        // SP2 ran hot (~83% utilization); the offered load should be
+        // substantially higher than the DAS-2 model's.
+        let sp2 = SdscSp2Model::default().generate(10_000, 3).offered_load();
+        let das2 = crate::trace::synth::das2::Das2Model::default()
+            .generate(10_000, 3)
+            .offered_load();
+        assert!(sp2 > das2, "sp2={sp2} das2={das2}");
+        assert!(sp2 > 0.4 && sp2 < 2.0, "sp2 load {sp2}");
+    }
+
+    #[test]
+    fn full_machine_jobs_exist_but_rare() {
+        let w = SdscSp2Model::default().generate(20_000, 4);
+        let full = w.jobs.iter().filter(|j| j.cores == 128).count();
+        assert!(full > 0, "no full-machine jobs generated");
+        assert!((full as f64) < 0.08 * w.jobs.len() as f64, "too many: {full}");
+    }
+}

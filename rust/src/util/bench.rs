@@ -1,0 +1,149 @@
+//! Micro-benchmark harness used by `rust/benches/*` (criterion is not in
+//! the offline crate set; this provides the part of it we need: warmup,
+//! repeated timed runs, and robust summary statistics).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub runs: Vec<Duration>,
+}
+
+impl BenchResult {
+    pub fn min(&self) -> Duration {
+        self.runs.iter().copied().min().unwrap_or_default()
+    }
+
+    pub fn median(&self) -> Duration {
+        let mut r = self.runs.clone();
+        r.sort();
+        r[r.len() / 2]
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.runs.iter().sum();
+        total / self.runs.len().max(1) as u32
+    }
+
+    /// Pretty line, e.g. `fig5/ranks=4   median 12.3ms  min 11.9ms  (5 runs)`.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} median {:>10}  min {:>10}  ({} runs)",
+            self.name,
+            fmt_dur(self.median()),
+            fmt_dur(self.min()),
+            self.runs.len()
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.2}s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner: warms up, then times `runs` executions.
+pub struct Bench {
+    warmup: usize,
+    runs: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new(1, 5)
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, runs: usize) -> Bench {
+        Bench { warmup, runs, results: Vec::new() }
+    }
+
+    /// Time `f`; a `std::hint::black_box`-style sink is applied to the
+    /// closure's return value so the work is not optimized away.
+    pub fn case<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut runs = Vec::with_capacity(self.runs);
+        for _ in 0..self.runs {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            runs.push(t0.elapsed());
+        }
+        let r = BenchResult { name: name.to_string(), runs };
+        println!("{}", r.line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bench::new(0, 3);
+        let mut count = 0u64;
+        b.case("noop", || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 3);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].runs.len(), 3);
+    }
+
+    #[test]
+    fn warmup_not_counted() {
+        let mut b = Bench::new(2, 1);
+        let mut count = 0u64;
+        b.case("noop", || {
+            count += 1;
+        });
+        assert_eq!(count, 3); // 2 warmup + 1 timed
+        assert_eq!(b.results()[0].runs.len(), 1);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.5ms");
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.00s");
+    }
+
+    #[test]
+    fn median_and_min() {
+        let r = BenchResult {
+            name: "x".into(),
+            runs: vec![
+                Duration::from_millis(3),
+                Duration::from_millis(1),
+                Duration::from_millis(2),
+            ],
+        };
+        assert_eq!(r.min(), Duration::from_millis(1));
+        assert_eq!(r.median(), Duration::from_millis(2));
+    }
+}

@@ -1,0 +1,138 @@
+//! Minimal command-line parsing (clap is not in the offline crate set).
+//!
+//! Supports `--key value`, `--key=value`, bare `--flag`, and positional
+//! arguments, with typed getters and an unknown-option check so typos
+//! fail loudly instead of being ignored.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals + options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    /// Options the program has asked about (for unknown-option check).
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.options.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().insert(key.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(key, default as u64)? as usize)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    /// Error if any provided option was never consulted (likely a typo).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> =
+            self.options.keys().filter(|k| !seen.contains(*k)).collect();
+        if !unknown.is_empty() {
+            bail!("unknown option(s): {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["fig", "3a", "--jobs", "500", "--policy=sjf", "--quiet"]);
+        assert_eq!(a.positional, vec!["fig", "3a"]);
+        assert_eq!(a.u64_or("jobs", 0).unwrap(), 500);
+        assert_eq!(a.str_or("policy", "fcfs"), "sjf");
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.u64_or("jobs", 7).unwrap(), 7);
+        assert_eq!(a.f64_or("scale", 1.5).unwrap(), 1.5);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["--jobs", "many"]);
+        assert!(a.u64_or("jobs", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_check() {
+        let a = parse(&["--jobs", "5", "--polcy", "sjf"]);
+        let _ = a.u64_or("jobs", 0);
+        let err = a.reject_unknown().unwrap_err().to_string();
+        assert!(err.contains("polcy"), "{err}");
+        let _ = a.get("polcy");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["--offset", "-5"]);
+        // "-5" doesn't start with --, so it's a value.
+        assert_eq!(a.str_or("offset", ""), "-5");
+    }
+}

@@ -1,0 +1,12 @@
+//! In-repo substrates that would normally come from crates: JSON
+//! (parser/writer), a micro-benchmark harness, and a tiny property-testing
+//! helper. The offline vendored crate set only covers the `xla` bridge, so
+//! these are first-class, tested modules rather than dependencies.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod table;
+
+pub use json::{Json, JsonError};

@@ -1,0 +1,75 @@
+//! Tiny property-testing helper (proptest is not in the offline crate
+//! set). Drives a closure with many seeded random cases; on failure it
+//! reports the seed so the case can be replayed deterministically.
+//!
+//! Used by the invariant suites in rust/tests/prop_*.rs.
+
+use crate::core::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` for `cases` seeded inputs. The closure receives a fresh
+/// deterministic [`Rng`] per case and returns `Err(msg)` to fail.
+/// Panics with the failing seed on the first failure.
+pub fn check_n(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    // Base seed fixed for reproducibility; vary per case.
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// [`check_n`] with the default case count.
+pub fn check(name: &str, prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    check_n(name, DEFAULT_CASES, prop);
+}
+
+/// Replay a single seed (paste from a failure message while debugging).
+pub fn replay(seed: u64, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replay of seed {seed:#x} failed: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_n("count", 10, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn failing_property_panics_with_seed() {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check_n("fail", 10, |rng| {
+                let _ = rng.next_u64();
+                Err("boom".into())
+            })
+        }));
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("boom"));
+    }
+
+    #[test]
+    fn cases_get_distinct_randomness() {
+        let mut firsts = std::collections::HashSet::new();
+        check_n("distinct", 20, |rng| {
+            firsts.insert(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(firsts.len(), 20);
+    }
+}

@@ -1,0 +1,260 @@
+//! DAG machinery: adjacency-list dependency graph, cycle detection,
+//! topological order, ready-set computation (paper §3.2 "DAG
+//! Representation" — adjacency lists, chosen for large sparse workflows).
+
+use crate::workflow::task::TaskId;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Directed acyclic dependency graph over task ids.
+///
+/// Edge `a -> b` means "b depends on a" (a must finish before b starts).
+#[derive(Debug, Clone, Default)]
+pub struct Dag {
+    /// dependents (out-edges): a -> tasks unblocked by a.
+    children: BTreeMap<TaskId, Vec<TaskId>>,
+    /// dependency count (in-degree) per task.
+    indegree: BTreeMap<TaskId, usize>,
+}
+
+impl Dag {
+    pub fn new() -> Dag {
+        Dag::default()
+    }
+
+    /// Build from (task, dependencies) pairs. Every mentioned id becomes a
+    /// node. Duplicate edges are kept once.
+    pub fn from_dependencies(deps: &[(TaskId, &[TaskId])]) -> Dag {
+        let mut dag = Dag::new();
+        for (t, ds) in deps {
+            dag.ensure_node(*t);
+            for d in ds.iter() {
+                dag.add_edge(*d, *t);
+            }
+        }
+        dag
+    }
+
+    pub fn ensure_node(&mut self, id: TaskId) {
+        self.children.entry(id).or_default();
+        self.indegree.entry(id).or_insert(0);
+    }
+
+    /// Add dependency edge `before -> after`; ignores exact duplicates.
+    pub fn add_edge(&mut self, before: TaskId, after: TaskId) {
+        self.ensure_node(before);
+        self.ensure_node(after);
+        let kids = self.children.get_mut(&before).unwrap();
+        if kids.contains(&after) {
+            return;
+        }
+        kids.push(after);
+        *self.indegree.get_mut(&after).unwrap() += 1;
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.children.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.children.values().map(|v| v.len()).sum()
+    }
+
+    /// Tasks unblocked by `id`.
+    pub fn children(&self, id: TaskId) -> &[TaskId] {
+        self.children.get(&id).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Number of direct dependencies of `id`.
+    pub fn indegree(&self, id: TaskId) -> usize {
+        self.indegree.get(&id).copied().unwrap_or(0)
+    }
+
+    /// Entry tasks (no dependencies), in id order.
+    pub fn roots(&self) -> Vec<TaskId> {
+        self.indegree.iter().filter(|(_, &d)| d == 0).map(|(&id, _)| id).collect()
+    }
+
+    /// Exit tasks (nothing depends on them), in id order.
+    pub fn leaves(&self) -> Vec<TaskId> {
+        self.children.iter().filter(|(_, v)| v.is_empty()).map(|(&id, _)| id).collect()
+    }
+
+    /// Kahn topological sort; `None` if the graph has a cycle.
+    pub fn topo_sort(&self) -> Option<Vec<TaskId>> {
+        let mut indeg = self.indegree.clone();
+        let mut q: VecDeque<TaskId> =
+            indeg.iter().filter(|(_, &d)| d == 0).map(|(&id, _)| id).collect();
+        let mut order = Vec::with_capacity(self.num_nodes());
+        while let Some(id) = q.pop_front() {
+            order.push(id);
+            for &c in self.children(id) {
+                let d = indeg.get_mut(&c).unwrap();
+                *d -= 1;
+                if *d == 0 {
+                    q.push_back(c);
+                }
+            }
+        }
+        if order.len() == self.num_nodes() {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    pub fn is_acyclic(&self) -> bool {
+        self.topo_sort().is_some()
+    }
+
+    /// Longest path length in edges (the DAG's depth = critical-path hop
+    /// count); `None` on cycles.
+    pub fn depth(&self) -> Option<usize> {
+        let order = self.topo_sort()?;
+        let mut dist: BTreeMap<TaskId, usize> = BTreeMap::new();
+        let mut max = 0;
+        for id in order {
+            let d = *dist.get(&id).unwrap_or(&0);
+            for &c in self.children(id) {
+                let e = dist.entry(c).or_insert(0);
+                *e = (*e).max(d + 1);
+                max = max.max(*e);
+            }
+        }
+        Some(max)
+    }
+
+    /// Critical path weight with per-task costs; `None` on cycles.
+    pub fn critical_path(&self, cost: impl Fn(TaskId) -> f64) -> Option<f64> {
+        let order = self.topo_sort()?;
+        let mut finish: BTreeMap<TaskId, f64> = BTreeMap::new();
+        let mut best = 0.0f64;
+        for id in order {
+            let start = self
+                .parents_of(id)
+                .iter()
+                .map(|p| *finish.get(p).unwrap_or(&0.0))
+                .fold(0.0f64, f64::max);
+            let f = start + cost(id);
+            best = best.max(f);
+            finish.insert(id, f);
+        }
+        Some(best)
+    }
+
+    /// Direct dependencies of `id` (computed; adjacency stores children).
+    pub fn parents_of(&self, id: TaskId) -> Vec<TaskId> {
+        self.children
+            .iter()
+            .filter(|(_, kids)| kids.contains(&id))
+            .map(|(&p, _)| p)
+            .collect()
+    }
+
+    /// All ids.
+    pub fn nodes(&self) -> impl Iterator<Item = TaskId> + '_ {
+        self.children.keys().copied()
+    }
+
+    /// Validate that every dependency of every node exists (no dangling
+    /// ids can occur by construction) and the graph is acyclic; returns a
+    /// human-readable error otherwise.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.is_acyclic() {
+            // Identify one offending node set for the message.
+            let in_topo: BTreeSet<TaskId> = self.topo_sort().unwrap_or_default().into_iter().collect();
+            let stuck: Vec<TaskId> = self.nodes().filter(|n| !in_topo.contains(n)).collect();
+            return Err(format!("dependency cycle involving tasks {stuck:?}"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Listing-2 example: 1 -> {2,3} -> 4.
+    fn diamond() -> Dag {
+        Dag::from_dependencies(&[(1, &[]), (2, &[1]), (3, &[1]), (4, &[2, 3])])
+    }
+
+    #[test]
+    fn diamond_structure() {
+        let d = diamond();
+        assert_eq!(d.num_nodes(), 4);
+        assert_eq!(d.num_edges(), 4);
+        assert_eq!(d.roots(), vec![1]);
+        assert_eq!(d.leaves(), vec![4]);
+        assert_eq!(d.indegree(4), 2);
+        assert_eq!(d.children(1), &[2, 3]);
+        assert_eq!(d.parents_of(4), vec![2, 3]);
+    }
+
+    #[test]
+    fn topo_respects_dependencies() {
+        let d = diamond();
+        let order = d.topo_sort().unwrap();
+        let pos = |id| order.iter().position(|&x| x == id).unwrap();
+        assert!(pos(1) < pos(2));
+        assert!(pos(1) < pos(3));
+        assert!(pos(2) < pos(4));
+        assert!(pos(3) < pos(4));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut d = diamond();
+        d.add_edge(4, 1);
+        assert!(!d.is_acyclic());
+        assert!(d.topo_sort().is_none());
+        let err = d.validate().unwrap_err();
+        assert!(err.contains("cycle"));
+    }
+
+    #[test]
+    fn self_loop_is_cycle() {
+        let mut d = Dag::new();
+        d.add_edge(1, 1);
+        assert!(!d.is_acyclic());
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut d = Dag::new();
+        d.add_edge(1, 2);
+        d.add_edge(1, 2);
+        assert_eq!(d.num_edges(), 1);
+        assert_eq!(d.indegree(2), 1);
+    }
+
+    #[test]
+    fn depth_and_critical_path() {
+        let d = diamond();
+        assert_eq!(d.depth(), Some(2));
+        // Costs: 1=100, 2=150, 3=200, 4=300 (paper Listing 2).
+        let costs = |id: TaskId| match id {
+            1 => 100.0,
+            2 => 150.0,
+            3 => 200.0,
+            4 => 300.0,
+            _ => 0.0,
+        };
+        // Critical path 1 -> 3 -> 4 = 600.
+        assert_eq!(d.critical_path(costs), Some(600.0));
+    }
+
+    #[test]
+    fn empty_dag() {
+        let d = Dag::new();
+        assert_eq!(d.topo_sort(), Some(vec![]));
+        assert_eq!(d.depth(), Some(0));
+        assert!(d.roots().is_empty());
+    }
+
+    #[test]
+    fn disconnected_components() {
+        let d = Dag::from_dependencies(&[(1, &[]), (2, &[1]), (10, &[]), (11, &[10])]);
+        assert_eq!(d.roots(), vec![1, 10]);
+        assert_eq!(d.topo_sort().unwrap().len(), 4);
+    }
+}

@@ -1,0 +1,236 @@
+//! Event-driven workflow execution (paper §3.2 "Scheduling and
+//! Execution"): ready tasks are started FCFS whenever CPU and memory
+//! allow; completions trigger dependents; the run drives a small
+//! discrete-event loop identical in semantics to the SST integration but
+//! self-contained for workflow-only experiments (Figs 6, 7).
+
+use crate::core::time::{SimDuration, SimTime};
+use crate::workflow::manager::WorkflowManager;
+use crate::workflow::task::TaskId;
+use crate::workflow::Workflow;
+use std::collections::BinaryHeap;
+
+/// Per-task outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskTimes {
+    pub id: TaskId,
+    pub ready: SimTime,
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl TaskTimes {
+    pub fn wait(&self) -> SimDuration {
+        self.start - self.ready
+    }
+}
+
+/// Result of executing one workflow.
+#[derive(Debug, Clone)]
+pub struct WorkflowReport {
+    pub name: String,
+    pub makespan: SimDuration,
+    pub tasks: Vec<TaskTimes>,
+    /// Peak concurrent CPU use observed.
+    pub peak_cpu: u64,
+    pub events: u64,
+}
+
+impl WorkflowReport {
+    pub fn mean_wait(&self) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        self.tasks.iter().map(|t| t.wait().as_f64()).sum::<f64>() / self.tasks.len() as f64
+    }
+
+    pub fn max_wait(&self) -> f64 {
+        self.tasks.iter().map(|t| t.wait().as_f64()).fold(0.0, f64::max)
+    }
+
+    /// Wait times grouped by the order tasks completed (Fig 7's series).
+    pub fn waits_in_completion_order(&self) -> Vec<f64> {
+        let mut ts = self.tasks.clone();
+        ts.sort_by_key(|t| (t.end, t.id));
+        ts.iter().map(|t| t.wait().as_f64()).collect()
+    }
+}
+
+/// FCFS workflow executor over a (cpu, memory) pool.
+#[derive(Debug, Clone)]
+pub struct WorkflowExecutor {
+    pub cpu: u64,
+    pub memory_mb: u64,
+}
+
+impl WorkflowExecutor {
+    pub fn new(cpu: u64, memory_mb: u64) -> WorkflowExecutor {
+        WorkflowExecutor { cpu: cpu.max(1), memory_mb }
+    }
+
+    /// Run the workflow to completion; panics if any task's requirements
+    /// exceed the pool (validated up front with a clear message).
+    pub fn run(&self, workflow: Workflow) -> WorkflowReport {
+        for t in workflow.tasks.values() {
+            assert!(
+                t.resources.cpu <= self.cpu && t.resources.memory_mb <= self.memory_mb,
+                "task {} needs (cpu {}, mem {}) but pool is (cpu {}, mem {})",
+                t.id,
+                t.resources.cpu,
+                t.resources.memory_mb,
+                self.cpu,
+                self.memory_mb
+            );
+        }
+        let name = workflow.name.clone();
+        let mut mgr = WorkflowManager::new(workflow, SimTime::ZERO);
+        let mut now = SimTime::ZERO;
+        let mut free_cpu = self.cpu;
+        let mut free_mem = self.memory_mb;
+        let mut peak_cpu = 0u64;
+        let mut events = 0u64;
+        // Completion min-heap: (end_time, task) — Reverse for min.
+        let mut completions: BinaryHeap<std::cmp::Reverse<(SimTime, TaskId)>> = BinaryHeap::new();
+        let mut done: Vec<TaskTimes> = Vec::with_capacity(mgr.workflow().len());
+
+        loop {
+            // Start ready tasks FCFS (id order = submission order) while
+            // resources allow. A blocked head does not block smaller
+            // later tasks (task scheduling here is list-FCFS, as basic
+            // workflow engines do).
+            let ready = mgr.ready_tasks();
+            for id in ready {
+                let (cpu, mem, dur) = {
+                    let t = &mgr.workflow().tasks[&id];
+                    (t.resources.cpu, t.resources.memory_mb, t.execution_time)
+                };
+                if cpu <= free_cpu && mem <= free_mem {
+                    free_cpu -= cpu;
+                    free_mem -= mem;
+                    mgr.mark_started(id, now);
+                    completions.push(std::cmp::Reverse((now + dur, id)));
+                    events += 1;
+                }
+            }
+            peak_cpu = peak_cpu.max(self.cpu - free_cpu);
+
+            // Advance to the next completion.
+            let Some(std::cmp::Reverse((t_end, id))) = completions.pop() else {
+                break;
+            };
+            debug_assert!(t_end >= now);
+            now = t_end;
+            events += 1;
+            {
+                let t = &mgr.workflow().tasks[&id];
+                free_cpu += t.resources.cpu;
+                free_mem += t.resources.memory_mb;
+            }
+            mgr.mark_completed(id, now);
+            debug_assert!(mgr.check_invariants());
+            let t = &mgr.workflow().tasks[&id];
+            done.push(TaskTimes {
+                id,
+                ready: t.ready_at.expect("ran => was ready"),
+                start: t.start.expect("ran => started"),
+                end: now,
+            });
+        }
+        assert!(mgr.all_done(), "deadlock: {} of {} tasks completed (resource starvation?)",
+            mgr.num_completed(), mgr.workflow().len());
+        done.sort_by_key(|t| t.id);
+        WorkflowReport { name, makespan: now - SimTime::ZERO, tasks: done, peak_cpu, events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::task::Task;
+
+    fn listing2_workflow() -> Workflow {
+        Workflow::new(
+            1,
+            "listing2",
+            vec![
+                Task::new(1, 100, 2, 1024),
+                Task::new(2, 150, 1, 512).with_deps(vec![1]),
+                Task::new(3, 200, 1, 512).with_deps(vec![1]),
+                Task::new(4, 300, 2, 1024).with_deps(vec![2, 3]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn listing2_with_ample_resources_hits_critical_path() {
+        let r = WorkflowExecutor::new(10, 8192).run(listing2_workflow());
+        // 1 (100) -> max(150, 200) -> 4 (300) = 600.
+        assert_eq!(r.makespan, SimDuration(600));
+        assert_eq!(r.tasks.len(), 4);
+        // Tasks 2 and 3 run concurrently.
+        assert_eq!(r.peak_cpu, 2);
+        assert_eq!(r.mean_wait(), 0.0);
+    }
+
+    #[test]
+    fn cpu_bottleneck_serializes_parallel_stage() {
+        // Pool of 1 CPU: tasks 2 and 3 must serialize.
+        let r = WorkflowExecutor::new(2, 8192).run(listing2_workflow());
+        // 1(100, 2cpu) -> 2&3 in parallel (1 cpu each fits in 2) -> 4.
+        assert_eq!(r.makespan, SimDuration(600));
+        let r1 = WorkflowExecutor::new(1, 8192).run(Workflow::new(
+            1,
+            "narrow",
+            vec![
+                Task::new(1, 100, 1, 0),
+                Task::new(2, 150, 1, 0).with_deps(vec![1]),
+                Task::new(3, 200, 1, 0).with_deps(vec![1]),
+                Task::new(4, 300, 1, 0).with_deps(vec![2, 3]),
+            ],
+        )
+        .unwrap());
+        // Everything serial: 100+150+200+300.
+        assert_eq!(r1.makespan, SimDuration(750));
+        // One of tasks 2/3 waited for the other.
+        assert!(r1.max_wait() > 0.0);
+    }
+
+    #[test]
+    fn dependencies_strictly_respected() {
+        let r = WorkflowExecutor::new(10, 8192).run(listing2_workflow());
+        let by_id: std::collections::BTreeMap<_, _> =
+            r.tasks.iter().map(|t| (t.id, *t)).collect();
+        assert!(by_id[&2].start >= by_id[&1].end);
+        assert!(by_id[&3].start >= by_id[&1].end);
+        assert!(by_id[&4].start >= by_id[&2].end.max(by_id[&3].end));
+    }
+
+    #[test]
+    fn memory_constraint_blocks_concurrency() {
+        // Two independent tasks, each needs all memory: must serialize.
+        let w = Workflow::new(
+            1,
+            "mem",
+            vec![Task::new(1, 50, 1, 1000), Task::new(2, 50, 1, 1000)],
+        )
+        .unwrap();
+        let r = WorkflowExecutor::new(8, 1000).run(w);
+        assert_eq!(r.makespan, SimDuration(100));
+    }
+
+    #[test]
+    #[should_panic(expected = "needs")]
+    fn oversized_task_panics_clearly() {
+        let w = Workflow::new(1, "big", vec![Task::new(1, 10, 64, 0)]).unwrap();
+        WorkflowExecutor::new(2, 100).run(w);
+    }
+
+    #[test]
+    fn single_task_workflow() {
+        let w = Workflow::new(1, "one", vec![Task::new(1, 42, 1, 0)]).unwrap();
+        let r = WorkflowExecutor::new(1, 0).run(w);
+        assert_eq!(r.makespan, SimDuration(42));
+        assert_eq!(r.tasks[0].wait(), SimDuration(0));
+    }
+}

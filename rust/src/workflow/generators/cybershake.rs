@@ -1,0 +1,77 @@
+//! CyberShake workflow generator (seismic hazard characterization; part
+//! of the Juve et al. profile set the paper's workflow component targets).
+//!
+//! Per site: strain Green tensors are extracted, a large fan of
+//! seismogram syntheses runs per rupture variation, peak intensities are
+//! computed per seismogram, and two zip joins collect outputs. Stage
+//! means (seconds): ExtractSGT 110.5, SeismogramSynthesis 48.2, ZipSeis
+//! 150.1, PeakValCalcOkaya 1.0, ZipPSA 265.3.
+
+use super::Builder;
+use crate::workflow::Workflow;
+
+/// CyberShake with `sites` SGT pairs; each site fans into `variations`
+/// seismogram syntheses (default profile uses a large fan; scaled here).
+pub fn cybershake(sites: usize, seed: u64, exact: bool) -> Workflow {
+    cybershake_fan(sites, 8, seed, exact)
+}
+
+/// Full-parameter variant.
+pub fn cybershake_fan(sites: usize, variations: usize, seed: u64, exact: bool) -> Workflow {
+    let s = sites.max(1);
+    let v = variations.max(1);
+    let mut b = Builder::new(seed ^ 0xC4B3_54AE, exact);
+    let mut seis_all = Vec::new();
+    let mut peaks_all = Vec::new();
+    for _ in 0..s {
+        let sgt = b.task("ExtractSGT", 110.5, 1, 2048, vec![]);
+        for _ in 0..v {
+            let seis = b.task("SeismogramSynthesis", 48.2, 1, 1024, vec![sgt]);
+            let peak = b.task("PeakValCalcOkaya", 1.0, 1, 256, vec![seis]);
+            seis_all.push(seis);
+            peaks_all.push(peak);
+        }
+    }
+    let _zip_seis = b.task("ZipSeis", 150.1, 1, 1024, seis_all);
+    let _zip_psa = b.task("ZipPSA", 265.3, 1, 1024, peaks_all);
+    b.build(5, "cybershake")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_count() {
+        let w = cybershake_fan(10, 8, 1, true);
+        // 10 SGT + 80 seis + 80 peak + 2 zips.
+        assert_eq!(w.len(), 10 + 80 + 80 + 2);
+    }
+
+    #[test]
+    fn two_zip_leaves() {
+        let w = cybershake(4, 1, true);
+        let mut stages: Vec<String> =
+            w.dag.leaves().iter().map(|l| w.tasks[l].stage.clone()).collect();
+        stages.sort();
+        assert_eq!(stages, vec!["ZipPSA".to_string(), "ZipSeis".to_string()]);
+    }
+
+    #[test]
+    fn wide_and_shallow() {
+        let w = cybershake_fan(10, 8, 1, true);
+        // SGT -> seis -> peak -> zip = 3 edges deep.
+        assert_eq!(w.dag.depth(), Some(3));
+    }
+
+    #[test]
+    fn every_peak_has_one_seismogram_parent() {
+        let w = cybershake_fan(3, 2, 1, true);
+        for (id, t) in w.tasks.iter().filter(|(_, t)| t.stage == "PeakValCalcOkaya") {
+            let parents = w.dag.parents_of(*id);
+            assert_eq!(parents.len(), 1, "peak {id} parents {parents:?}");
+            assert_eq!(w.tasks[&parents[0]].stage, "SeismogramSynthesis");
+            let _ = t;
+        }
+    }
+}

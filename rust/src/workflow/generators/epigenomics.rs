@@ -1,0 +1,97 @@
+//! Epigenomics workflow generator (paper §4.1: "4seq, 5seq, 6seq"
+//! epigenomic sequencing pipelines).
+//!
+//! The USC Epigenome Center pipeline maps methylation states: per
+//! sequence lane the read file is split into chunks, each chunk passes a
+//! filter -> convert -> reformat -> map chain, per-lane maps merge, and
+//! the global merge feeds indexing and pileup. "4seq/5seq/6seq" = number
+//! of lanes. Structure and stage means (seconds) per Juve et al. 2013:
+//! fastQSplit 34.9, filterContams 2.5, sol2sanger 0.5->1, fast2bfq 1.4,
+//! map 201.9, mapMerge (lane) 11.0, mapMerge (global) 60.0, maqIndex
+//! 40.1, pileup 55.9.
+
+use super::Builder;
+use crate::workflow::Workflow;
+
+/// Epigenomics with `lanes` sequence lanes (4/5/6 in the paper) and
+/// `splits` chunks per lane.
+pub fn epigenomics(lanes: usize, splits: usize, seed: u64, exact: bool) -> Workflow {
+    let l = lanes.max(1);
+    let s = splits.max(1);
+    let mut b = Builder::new(seed ^ 0xE916E0, exact);
+    let mut lane_merges = Vec::new();
+    for _ in 0..l {
+        let split = b.task("fastQSplit", 34.9, 1, 512, vec![]);
+        let mut maps = Vec::new();
+        for _ in 0..s {
+            let filter = b.task("filterContams", 2.5, 1, 256, vec![split]);
+            let sol = b.task("sol2sanger", 1.0, 1, 256, vec![filter]);
+            let bfq = b.task("fast2bfq", 1.4, 1, 256, vec![sol]);
+            let map = b.task("map", 201.9, 1, 1024, vec![bfq]);
+            maps.push(map);
+        }
+        lane_merges.push(b.task("mapMerge", 11.0, 1, 512, maps));
+    }
+    let global_merge = b.task("mapMergeGlobal", 60.0, 1, 1024, lane_merges);
+    let index = b.task("maqIndex", 40.1, 1, 1024, vec![global_merge]);
+    let _pileup = b.task("pileup", 55.9, 1, 1024, vec![index]);
+    b.build(4, &format!("epigenomics-{l}seq"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_count_formula() {
+        // Per lane: 1 split + 4*s chain tasks + 1 merge; plus 3 global.
+        for (lanes, splits) in [(4usize, 4usize), (5, 4), (6, 8)] {
+            let w = epigenomics(lanes, splits, 1, true);
+            assert_eq!(w.len(), lanes * (2 + 4 * splits) + 3);
+        }
+    }
+
+    #[test]
+    fn four_five_six_seq_grow_monotonically() {
+        let n4 = epigenomics(4, 4, 1, true).len();
+        let n5 = epigenomics(5, 4, 1, true).len();
+        let n6 = epigenomics(6, 4, 1, true).len();
+        assert!(n4 < n5 && n5 < n6);
+    }
+
+    #[test]
+    fn pipeline_depth() {
+        let w = epigenomics(4, 4, 1, true);
+        // split -> filter -> sol -> bfq -> map -> laneMerge -> globalMerge
+        // -> index -> pileup = 8 edges.
+        assert_eq!(w.dag.depth(), Some(8));
+    }
+
+    #[test]
+    fn pileup_is_single_leaf() {
+        let w = epigenomics(5, 3, 2, true);
+        let leaves = w.dag.leaves();
+        assert_eq!(leaves.len(), 1);
+        assert_eq!(w.tasks[&leaves[0]].stage, "pileup");
+    }
+
+    #[test]
+    fn map_stage_dominates_work() {
+        let w = epigenomics(4, 4, 1, true);
+        let map_work: f64 = w
+            .tasks
+            .values()
+            .filter(|t| t.stage == "map")
+            .map(|t| t.execution_time.as_f64())
+            .sum();
+        assert!(map_work > 0.8 * w.total_work(), "map fraction too small");
+    }
+
+    #[test]
+    fn lanes_are_parallel_until_global_merge() {
+        let w = epigenomics(4, 2, 1, true);
+        // Critical path ~ one lane's chain + global tail, far below the
+        // serial total.
+        assert!(w.critical_path_time() < w.total_work() / 3.0);
+    }
+}

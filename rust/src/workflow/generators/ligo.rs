@@ -1,0 +1,91 @@
+//! LIGO Inspiral Analysis workflow generator (gravitational-wave binary
+//! inspiral search; completes the Juve et al. profile set).
+//!
+//! Two-pass structure: template banks feed matched-filter inspirals,
+//! coincidence (Thinca) joins detector groups, trigger banks re-filter,
+//! and a second coincidence pass concludes. Stage means (seconds):
+//! TmpltBank 18.1, Inspiral 460.2, Thinca 5.1, TrigBank 5.1.
+
+use super::Builder;
+use crate::workflow::Workflow;
+
+/// LIGO Inspiral over `segments` data segments, grouped `group` per
+/// Thinca coincidence.
+pub fn ligo_inspiral(segments: usize, seed: u64, exact: bool) -> Workflow {
+    ligo_grouped(segments, 5, seed, exact)
+}
+
+/// Full-parameter variant.
+pub fn ligo_grouped(segments: usize, group: usize, seed: u64, exact: bool) -> Workflow {
+    let n = segments.max(1);
+    let g = group.max(1);
+    let mut b = Builder::new(seed ^ 0x7160_1160, exact);
+
+    // Pass 1: bank -> inspiral per segment.
+    let mut inspirals = Vec::new();
+    for _ in 0..n {
+        let bank = b.task("TmpltBank", 18.1, 1, 512, vec![]);
+        inspirals.push(b.task("Inspiral", 460.2, 1, 1024, vec![bank]));
+    }
+
+    // Thinca coincidence per group of segments.
+    let mut thincas = Vec::new();
+    for chunk in inspirals.chunks(g) {
+        thincas.push(b.task("Thinca", 5.1, 1, 512, chunk.to_vec()));
+    }
+
+    // Pass 2: per group, trigger bank -> second inspiral fan -> Thinca2.
+    for &th in &thincas {
+        let trig = b.task("TrigBank", 5.1, 1, 512, vec![th]);
+        let mut pass2 = Vec::new();
+        for _ in 0..g.min(n) {
+            pass2.push(b.task("Inspiral2", 460.2, 1, 1024, vec![trig]));
+        }
+        let _th2 = b.task("Thinca2", 5.1, 1, 512, pass2);
+    }
+    b.build(6, "ligo-inspiral")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_count() {
+        let w = ligo_grouped(10, 5, 1, true);
+        // Pass1: 10 banks + 10 inspirals. 2 thincas. Per thinca: 1 trig +
+        // 5 inspiral2 + 1 thinca2 = 7 -> 14.
+        assert_eq!(w.len(), 20 + 2 + 14);
+    }
+
+    #[test]
+    fn thinca2_leaves() {
+        let w = ligo_grouped(10, 5, 1, true);
+        let leaves = w.dag.leaves();
+        assert_eq!(leaves.len(), 2);
+        for l in leaves {
+            assert_eq!(w.tasks[&l].stage, "Thinca2");
+        }
+    }
+
+    #[test]
+    fn two_pass_depth() {
+        let w = ligo_grouped(10, 5, 1, true);
+        // bank -> inspiral -> thinca -> trig -> inspiral2 -> thinca2.
+        assert_eq!(w.dag.depth(), Some(5));
+    }
+
+    #[test]
+    fn critical_path_includes_both_inspiral_passes() {
+        let w = ligo_grouped(5, 5, 1, true);
+        assert!(w.critical_path_time() >= 2.0 * 460.0);
+    }
+
+    #[test]
+    fn partial_last_group() {
+        let w = ligo_grouped(7, 5, 1, true);
+        // Two thinca groups: 5 + 2.
+        let thincas = w.tasks.values().filter(|t| t.stage == "Thinca").count();
+        assert_eq!(thincas, 2);
+    }
+}

@@ -1,0 +1,168 @@
+//! Montage / Galactic Plane workflow generator.
+//!
+//! Montage builds astronomical image mosaics; the paper's Fig 6 runs the
+//! *Galactic Plane* workflow — Montage applied to 17 sky surveys with all
+//! pixels reprojected to a common scale. Structure per Juve et al. 2013:
+//!
+//! ```text
+//! mProjectPP (W)  -> mDiffFit (~3W/2 overlaps) -> mConcatFit (1)
+//!   -> mBgModel (1) -> mBackground (W) -> mImgtbl (1) -> mAdd (1)
+//!   -> mShrink (1) -> mJPEG (1)
+//! ```
+//!
+//! Stage runtime means (seconds) from the published Montage profile:
+//! mProjectPP 1.73, mDiffFit 0.66, mConcatFit 143, mBgModel 384,
+//! mBackground 1.72, mImgtbl 2.5, mAdd 282, mShrink 66, mJPEG 0.7.
+
+use super::Builder;
+use crate::workflow::Workflow;
+
+/// Montage over `width` input images. `exact` disables runtime jitter.
+pub fn montage(width: usize, seed: u64, exact: bool) -> Workflow {
+    montage_named(width, seed, exact, 1, "montage")
+}
+
+fn montage_named(width: usize, seed: u64, exact: bool, id: u64, name: &str) -> Workflow {
+    let w = width.max(2);
+    let mut b = Builder::new(seed ^ 0x4D07A6E, exact);
+
+    // mProjectPP: one per input image.
+    let projects = b.stage("mProjectPP", w, 1.73, 1, 512, &[]);
+
+    // mDiffFit: one per overlapping image pair. A strip mosaic overlaps
+    // neighbours; model ~1.5 overlaps per image: (i, i+1) pairs plus every
+    // second (i, i+2) pair.
+    let mut diffs = Vec::new();
+    for i in 0..w - 1 {
+        diffs.push(b.task(
+            "mDiffFit",
+            0.66,
+            1,
+            256,
+            vec![projects[i], projects[i + 1]],
+        ));
+        if i % 2 == 0 && i + 2 < w {
+            diffs.push(b.task(
+                "mDiffFit",
+                0.66,
+                1,
+                256,
+                vec![projects[i], projects[i + 2]],
+            ));
+        }
+    }
+
+    // Fit concatenation and background model: global joins.
+    let concat = b.task("mConcatFit", 143.0, 1, 1024, diffs.clone());
+    let bg_model = b.task("mBgModel", 384.0, 1, 1024, vec![concat]);
+
+    // mBackground: per image, needs its projection and the model.
+    let backgrounds: Vec<_> = projects
+        .iter()
+        .map(|&p| b.task("mBackground", 1.72, 1, 512, vec![p, bg_model]))
+        .collect();
+
+    let imgtbl = b.task("mImgtbl", 2.5, 1, 512, backgrounds.clone());
+    let add = b.task("mAdd", 282.0, 1, 2048, vec![imgtbl]);
+    let shrink = b.task("mShrink", 66.0, 1, 1024, vec![add]);
+    let _jpeg = b.task("mJPEG", 0.7, 1, 256, vec![shrink]);
+
+    b.build(id, name)
+}
+
+/// Galactic Plane: `surveys` independent Montage mosaics (the paper's run
+/// uses 17 surveys) merged under a final tile-aggregation task.
+pub fn galactic_plane(surveys: usize, seed: u64, exact: bool) -> Workflow {
+    galactic_plane_wide(surveys, 8, seed, exact)
+}
+
+/// Galactic Plane with `width` images per survey mosaic (scaling knob for
+/// the Fig 6 experiments; the real run mosaics thousands of tiles).
+pub fn galactic_plane_wide(surveys: usize, width: usize, seed: u64, exact: bool) -> Workflow {
+    let s = surveys.max(1);
+    let width = width.max(2);
+    let mut b = Builder::new(seed ^ 0x6A1AC71C, exact);
+    let mut mosaic_leaves = Vec::new();
+    for k in 0..s {
+        // Inline one Montage per survey through the same builder so ids
+        // stay unique.
+        let projects = b.stage("mProjectPP", width, 1.73, 1, 512, &[]);
+        let mut diffs = Vec::new();
+        for i in 0..projects.len() - 1 {
+            diffs.push(b.task(
+                "mDiffFit",
+                0.66,
+                1,
+                256,
+                vec![projects[i], projects[i + 1]],
+            ));
+        }
+        let concat = b.task("mConcatFit", 143.0, 1, 1024, diffs);
+        let bg = b.task("mBgModel", 384.0, 1, 1024, vec![concat]);
+        let backs: Vec<_> = projects
+            .iter()
+            .map(|&p| b.task("mBackground", 1.72, 1, 512, vec![p, bg]))
+            .collect();
+        let imgtbl = b.task("mImgtbl", 2.5, 1, 512, backs);
+        let add = b.task("mAdd", 282.0, 1, 2048, vec![imgtbl]);
+        let _ = k;
+        mosaic_leaves.push(add);
+    }
+    let _merge = b.task("gp-merge", 120.0, 2, 4096, mosaic_leaves);
+    b.build(17, "galactic-plane")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn montage_shape() {
+        let w = montage(20, 1, true);
+        let h = w.stage_histogram();
+        assert_eq!(h["mProjectPP"], 20);
+        assert_eq!(h["mBackground"], 20);
+        assert_eq!(h["mConcatFit"], 1);
+        assert_eq!(h["mBgModel"], 1);
+        assert_eq!(h["mAdd"], 1);
+        assert!(h["mDiffFit"] >= 19, "diffs = {}", h["mDiffFit"]);
+        // Chain mConcatFit -> mBgModel -> ... -> mJPEG bounds depth.
+        assert!(w.dag.depth().unwrap() >= 7);
+    }
+
+    #[test]
+    fn montage_entry_and_exit() {
+        let w = montage(10, 2, true);
+        // All roots are projections; single JPEG leaf.
+        for r in w.dag.roots() {
+            assert_eq!(w.tasks[&r].stage, "mProjectPP");
+        }
+        let leaves = w.dag.leaves();
+        assert_eq!(leaves.len(), 1);
+        assert_eq!(w.tasks[&leaves[0]].stage, "mJPEG");
+    }
+
+    #[test]
+    fn galactic_plane_scales_with_surveys() {
+        let small = galactic_plane(2, 1, true);
+        let large = galactic_plane(6, 1, true);
+        assert!(large.len() > small.len() * 2);
+        // Single global merge leaf.
+        assert_eq!(large.dag.leaves().len(), 1);
+    }
+
+    #[test]
+    fn background_depends_on_model_and_projection() {
+        let w = montage(6, 3, true);
+        let (id, _) = w
+            .tasks
+            .iter()
+            .find(|(_, t)| t.stage == "mBackground")
+            .expect("has backgrounds");
+        let parents = w.dag.parents_of(*id);
+        let stages: Vec<&str> =
+            parents.iter().map(|p| w.tasks[p].stage.as_str()).collect();
+        assert!(stages.contains(&"mProjectPP"));
+        assert!(stages.contains(&"mBgModel"));
+    }
+}

@@ -1,0 +1,118 @@
+//! SIPHT workflow generator (paper Fig 7).
+//!
+//! SIPHT searches for small untranslated RNAs (sRNAs) in bacterial
+//! replicons (Juve 2014, Pegasus gallery). One replicon's sub-workflow is
+//! ~31 tasks: a fan of Patser motif searches concatenated into one file,
+//! three independent terminator/motif predictions joined by the SRNA
+//! prediction, a fan of BLAST comparisons, and a final annotation join.
+//!
+//! Stage runtime means (seconds) from the published SIPHT profile:
+//! Patser 0.96, Patser_concate 0.03->1, Transterm 32.3, Findterm 594.9,
+//! RNAMotif 25.6, SRNA 12.4, FFN_parse 0.7->1, Blast 3311.1,
+//! Blast_synteny 3.6, Blast_candidate 0.6->1, Blast_QRNA 440.8,
+//! Blast_paralogues 0.7->1, SRNA_annotate 0.14->1.
+
+use super::Builder;
+use crate::workflow::Workflow;
+
+/// Number of Patser tasks per replicon in the published workflow.
+const PATSER_FAN: usize = 21;
+
+/// SIPHT over `replicons` bacterial replicons (the gallery instance is 1;
+/// larger values model the multi-replicon campaigns the project ran).
+pub fn sipht(replicons: usize, seed: u64, exact: bool) -> Workflow {
+    let r = replicons.max(1);
+    let mut b = Builder::new(seed ^ 0x51B117, exact);
+    let mut annotates = Vec::new();
+    for _ in 0..r {
+        // Patser fan -> concatenation.
+        let patsers = b.stage("patser", PATSER_FAN, 0.96, 1, 128, &[]);
+        let concat = b.task("patser_concate", 1.0, 1, 128, patsers);
+
+        // Independent predictions.
+        let transterm = b.task("transterm", 32.3, 1, 512, vec![]);
+        let findterm = b.task("findterm", 594.9, 1, 1024, vec![]);
+        let rnamotif = b.task("rnamotif", 25.6, 1, 512, vec![]);
+
+        // SRNA prediction joins the three.
+        let srna = b.task("srna", 12.4, 1, 512, vec![transterm, findterm, rnamotif]);
+
+        // FFN parse + BLAST fan.
+        let ffn = b.task("ffn_parse", 1.0, 1, 256, vec![srna]);
+        let blast = b.task("blast", 3311.1, 1, 2048, vec![srna, ffn]);
+        let synteny = b.task("blast_synteny", 3.6, 1, 512, vec![srna, ffn]);
+        let candidate = b.task("blast_candidate", 1.0, 1, 256, vec![srna]);
+        let qrna = b.task("blast_qrna", 440.8, 1, 1024, vec![srna, ffn]);
+        let paralogues = b.task("blast_paralogues", 1.0, 1, 256, vec![srna]);
+
+        // Final annotation joins everything (incl. the Patser concat).
+        let annotate = b.task(
+            "srna_annotate",
+            1.0,
+            1,
+            256,
+            vec![concat, blast, synteny, candidate, qrna, paralogues],
+        );
+        annotates.push(annotate);
+    }
+    b.build(7, "sipht")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_replicon_task_count() {
+        let w = sipht(1, 1, true);
+        // 21 patser + concat + 3 predictions + srna + ffn + 5 blasts +
+        // annotate = 33.
+        assert_eq!(w.len(), 33);
+        let h = w.stage_histogram();
+        assert_eq!(h["patser"], PATSER_FAN);
+        assert_eq!(h["blast"], 1);
+        assert_eq!(h["srna_annotate"], 1);
+    }
+
+    #[test]
+    fn annotate_is_the_only_leaf() {
+        let w = sipht(1, 2, true);
+        let leaves = w.dag.leaves();
+        assert_eq!(leaves.len(), 1);
+        assert_eq!(w.tasks[&leaves[0]].stage, "srna_annotate");
+    }
+
+    #[test]
+    fn blast_dominates_critical_path() {
+        let w = sipht(1, 1, true);
+        // Critical path must include the 3311 s blast.
+        assert!(w.critical_path_time() >= 3311.0);
+        // findterm (594.9) -> srna -> blast -> annotate ~ 3920.
+        assert!(w.critical_path_time() < 4200.0);
+    }
+
+    #[test]
+    fn replicons_scale_independently() {
+        let w = sipht(3, 1, true);
+        assert_eq!(w.len(), 3 * 33);
+        assert_eq!(w.dag.leaves().len(), 3);
+        // Parallel replicons: critical path equals single replicon's.
+        let single = sipht(1, 1, true);
+        assert!((w.critical_path_time() - single.critical_path_time()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn srna_joins_three_predictions() {
+        let w = sipht(1, 3, true);
+        let (id, _) = w.tasks.iter().find(|(_, t)| t.stage == "srna").unwrap();
+        let stages: Vec<String> = w
+            .dag
+            .parents_of(*id)
+            .iter()
+            .map(|p| w.tasks[p].stage.clone())
+            .collect();
+        for s in ["transterm", "findterm", "rnamotif"] {
+            assert!(stages.iter().any(|x| x == s), "srna missing parent {s}");
+        }
+    }
+}

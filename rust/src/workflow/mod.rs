@@ -1,0 +1,157 @@
+//! Workflow management (paper §3): DAG task dependencies, the JSON input
+//! specification (Listing 2), ready-set scheduling, and generators for
+//! the Pegasus workflows the paper evaluates.
+//!
+//! * [`task`] — the task model (§3.1).
+//! * [`dag`] — adjacency-list DAG with cycle detection / topo / critical
+//!   path (§3.2).
+//! * [`spec`] — the JSON input format (Listing 2) loader/writer.
+//! * [`manager`] — the Workflow Management module: dependency tracking,
+//!   completion triggers, ready-task detection.
+//! * [`exec`] — event-driven workflow execution on a bounded resource
+//!   pool (FCFS task scheduling, as in the paper).
+//! * [`generators`] — Montage/Galactic-Plane, SIPHT, Epigenomics
+//!   (4seq/5seq/6seq), CyberShake and LIGO-Inspiral shaped DAGs with
+//!   published stage profiles (Juve et al. 2013).
+
+pub mod dag;
+pub mod dynamic;
+pub mod exec;
+pub mod generators;
+pub mod manager;
+pub mod spec;
+pub mod task;
+
+pub use dag::Dag;
+pub use dynamic::{DynamicExecutor, TaskOrder};
+pub use exec::{WorkflowExecutor, WorkflowReport};
+pub use manager::WorkflowManager;
+pub use spec::WorkflowSpec;
+pub use task::{Task, TaskId, TaskResources, TaskState};
+
+use std::collections::BTreeMap;
+
+/// A workflow: identified task set + derived DAG (paper §3.2: `tasks`,
+/// `workflow_id`, `dependencies`).
+#[derive(Debug, Clone)]
+pub struct Workflow {
+    pub id: u64,
+    pub name: String,
+    pub tasks: BTreeMap<TaskId, Task>,
+    pub dag: Dag,
+}
+
+impl Workflow {
+    /// Build from tasks; derives the DAG from each task's dependency list.
+    /// Fails on dangling dependencies or cycles.
+    pub fn new(id: u64, name: &str, tasks: Vec<Task>) -> Result<Workflow, String> {
+        let mut map = BTreeMap::new();
+        let mut dag = Dag::new();
+        for t in tasks {
+            dag.ensure_node(t.id);
+            if map.insert(t.id, t).is_some() {
+                return Err(format!("duplicate task id in workflow {name:?}"));
+            }
+        }
+        let ids: Vec<TaskId> = map.keys().copied().collect();
+        for id in ids {
+            let deps = map[&id].dependencies.clone();
+            for d in deps {
+                if !map.contains_key(&d) {
+                    return Err(format!("task {id} depends on unknown task {d}"));
+                }
+                dag.add_edge(d, id);
+            }
+        }
+        dag.validate()?;
+        Ok(Workflow { id, name: name.to_string(), tasks: map, dag })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    /// Sum of task execution times (serial makespan).
+    pub fn total_work(&self) -> f64 {
+        self.tasks.values().map(|t| t.execution_time.as_f64()).sum()
+    }
+
+    /// Critical-path time (lower bound on makespan with infinite
+    /// resources).
+    pub fn critical_path_time(&self) -> f64 {
+        self.dag
+            .critical_path(|id| self.tasks[&id].execution_time.as_f64())
+            .expect("workflow validated acyclic")
+    }
+
+    /// Tasks per stage label (reporting).
+    pub fn stage_histogram(&self) -> BTreeMap<String, usize> {
+        let mut h: BTreeMap<String, usize> = BTreeMap::new();
+        for t in self.tasks.values() {
+            *h.entry(t.stage.clone()).or_insert(0) += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn listing2() -> Workflow {
+        Workflow::new(
+            1,
+            "listing2",
+            vec![
+                Task::new(1, 100, 2, 1024),
+                Task::new(2, 150, 1, 512).with_deps(vec![1]),
+                Task::new(3, 200, 1, 512).with_deps(vec![1]),
+                Task::new(4, 300, 2, 1024).with_deps(vec![2, 3]),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn builds_dag_from_tasks() {
+        let w = listing2();
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.dag.roots(), vec![1]);
+        assert_eq!(w.dag.leaves(), vec![4]);
+        assert_eq!(w.total_work(), 750.0);
+        assert_eq!(w.critical_path_time(), 600.0);
+    }
+
+    #[test]
+    fn dangling_dependency_rejected() {
+        let err = Workflow::new(1, "bad", vec![Task::new(1, 10, 1, 0).with_deps(vec![9])])
+            .unwrap_err();
+        assert!(err.contains("unknown task 9"));
+    }
+
+    #[test]
+    fn cycle_rejected() {
+        let err = Workflow::new(
+            1,
+            "cyc",
+            vec![
+                Task::new(1, 10, 1, 0).with_deps(vec![2]),
+                Task::new(2, 10, 1, 0).with_deps(vec![1]),
+            ],
+        )
+        .unwrap_err();
+        assert!(err.contains("cycle"));
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let err =
+            Workflow::new(1, "dup", vec![Task::new(1, 10, 1, 0), Task::new(1, 20, 1, 0)])
+                .unwrap_err();
+        assert!(err.contains("duplicate"));
+    }
+}

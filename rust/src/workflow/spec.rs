@@ -1,0 +1,154 @@
+//! Workflow input specification (paper §3.3, Listing 2): a JSON document
+//! with `tasks`, `resources_available`, `scheduling_policy`, `preemption`.
+
+use crate::util::json::Json;
+use crate::workflow::task::Task;
+use crate::workflow::Workflow;
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed workflow specification.
+#[derive(Debug, Clone)]
+pub struct WorkflowSpec {
+    pub workflow: Workflow,
+    /// Resource pool the workflow runs in.
+    pub cpu_available: u64,
+    pub memory_available_mb: u64,
+    /// "Static" (FCFS among ready tasks) is what the paper supports.
+    pub scheduling_policy: String,
+    pub preemption: bool,
+}
+
+impl WorkflowSpec {
+    /// Parse the Listing-2 JSON text.
+    pub fn parse(text: &str) -> Result<WorkflowSpec> {
+        let v = Json::parse(text).context("parsing workflow spec JSON")?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<WorkflowSpec> {
+        let tasks_json = v
+            .get("tasks")
+            .and_then(|t| t.as_arr())
+            .ok_or_else(|| anyhow!("workflow spec missing \"tasks\" array"))?;
+        let mut tasks = Vec::with_capacity(tasks_json.len());
+        for (i, tj) in tasks_json.iter().enumerate() {
+            tasks.push(
+                Task::from_json(tj).ok_or_else(|| anyhow!("malformed task at index {i}"))?,
+            );
+        }
+        let workflow = Workflow::new(
+            v.get_u64_or("workflow_id", 1),
+            v.get_str_or("name", "workflow"),
+            tasks,
+        )
+        .map_err(|e| anyhow!(e))?;
+        let res = v.get("resources_available");
+        let cpu = res.map(|r| r.get_u64_or("cpu", 1)).unwrap_or(1);
+        let mem = res.map(|r| r.get_u64_or("memory", u64::MAX)).unwrap_or(u64::MAX);
+        Ok(WorkflowSpec {
+            workflow,
+            cpu_available: cpu.max(1),
+            memory_available_mb: mem,
+            scheduling_policy: v.get_str_or("scheduling_policy", "Static").to_string(),
+            preemption: v.get_bool_or("preemption", false),
+        })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<WorkflowSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading workflow spec {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Serialize back to Listing-2 JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workflow_id", Json::num(self.workflow.id as f64)),
+            ("name", Json::str(self.workflow.name.clone())),
+            (
+                "tasks",
+                Json::Arr(self.workflow.tasks.values().map(|t| t.to_json()).collect()),
+            ),
+            (
+                "resources_available",
+                Json::obj(vec![
+                    ("cpu", Json::num(self.cpu_available as f64)),
+                    ("memory", Json::num(self.memory_available_mb as f64)),
+                ]),
+            ),
+            ("scheduling_policy", Json::str(self.scheduling_policy.clone())),
+            ("preemption", Json::Bool(self.preemption)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Listing 2, verbatim structure.
+    pub const LISTING2: &str = r#"{
+        "tasks": [
+            {"id": 1, "execution_time": 100, "resources": {"cpu": 2, "memory": 1024}, "dependencies": []},
+            {"id": 2, "execution_time": 150, "resources": {"cpu": 1, "memory": 512}, "dependencies": [1]},
+            {"id": 3, "execution_time": 200, "resources": {"cpu": 1, "memory": 512}, "dependencies": [1]},
+            {"id": 4, "execution_time": 300, "resources": {"cpu": 2, "memory": 1024}, "dependencies": [2, 3]}
+        ],
+        "resources_available": {"cpu": 10, "memory": 8192},
+        "scheduling_policy": "Static",
+        "preemption": false
+    }"#;
+
+    #[test]
+    fn parses_paper_listing2() {
+        let spec = WorkflowSpec::parse(LISTING2).unwrap();
+        assert_eq!(spec.workflow.len(), 4);
+        assert_eq!(spec.cpu_available, 10);
+        assert_eq!(spec.memory_available_mb, 8192);
+        assert_eq!(spec.scheduling_policy, "Static");
+        assert!(!spec.preemption);
+        assert_eq!(spec.workflow.dag.roots(), vec![1]);
+        assert_eq!(spec.workflow.tasks[&4].dependencies, vec![2, 3]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let spec = WorkflowSpec::parse(LISTING2).unwrap();
+        let text = spec.to_json().to_pretty();
+        let back = WorkflowSpec::parse(&text).unwrap();
+        assert_eq!(back.workflow.len(), 4);
+        assert_eq!(back.cpu_available, 10);
+        assert_eq!(back.workflow.tasks[&2].execution_time.ticks(), 150);
+    }
+
+    #[test]
+    fn missing_tasks_is_error() {
+        assert!(WorkflowSpec::parse(r#"{"resources_available": {"cpu": 1}}"#).is_err());
+    }
+
+    #[test]
+    fn malformed_task_is_error() {
+        let e = WorkflowSpec::parse(r#"{"tasks": [{"id": 1}]}"#).unwrap_err();
+        assert!(e.to_string().contains("malformed task"));
+    }
+
+    #[test]
+    fn cyclic_spec_is_error() {
+        let text = r#"{"tasks": [
+            {"id": 1, "execution_time": 1, "dependencies": [2]},
+            {"id": 2, "execution_time": 1, "dependencies": [1]}
+        ]}"#;
+        assert!(WorkflowSpec::parse(text).is_err());
+    }
+
+    #[test]
+    fn defaults_for_missing_pool() {
+        let spec = WorkflowSpec::parse(
+            r#"{"tasks": [{"id": 1, "execution_time": 1, "dependencies": []}]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.cpu_available, 1);
+        assert_eq!(spec.scheduling_policy, "Static");
+    }
+}

@@ -1,0 +1,169 @@
+//! Workflow tasks (paper §3.1).
+//!
+//! A task is the unit of a workflow: execution time, resource
+//! requirements, dependency list, and lifecycle state. Mirrors the
+//! attributes the paper calls out: `task_id`, `execution_time`,
+//! `resource_requirements`, `dependencies`, `state`.
+
+use crate::core::time::{SimDuration, SimTime};
+use crate::util::json::Json;
+
+/// Unique task identifier within a workflow.
+pub type TaskId = u64;
+
+/// Task lifecycle (paper §3.1 "state").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskState {
+    /// Dependencies not yet satisfied.
+    Waiting,
+    /// Dependencies satisfied, queued for resources.
+    Ready,
+    /// Executing.
+    Running,
+    /// Finished.
+    Completed,
+}
+
+/// Resource requirements of a task (paper: CPU cycles, memory, I/O).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TaskResources {
+    pub cpu: u64,
+    pub memory_mb: u64,
+}
+
+/// One computational job within a workflow.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: TaskId,
+    /// Estimated execution time (from computational complexity or
+    /// historical data — for generated Pegasus-like workflows this is the
+    /// published per-stage profile).
+    pub execution_time: SimDuration,
+    pub resources: TaskResources,
+    /// Task ids that must complete before this task starts.
+    pub dependencies: Vec<TaskId>,
+    pub state: TaskState,
+    /// Stage label (e.g. "mProject", "blast") for reporting.
+    pub stage: String,
+    /// Set when the task becomes ready / starts / ends.
+    pub ready_at: Option<SimTime>,
+    pub start: Option<SimTime>,
+    pub end: Option<SimTime>,
+}
+
+impl Task {
+    pub fn new(id: TaskId, execution_time: u64, cpu: u64, memory_mb: u64) -> Task {
+        Task {
+            id,
+            execution_time: SimDuration(execution_time),
+            resources: TaskResources { cpu, memory_mb },
+            dependencies: Vec::new(),
+            state: TaskState::Waiting,
+            stage: String::new(),
+            ready_at: None,
+            start: None,
+            end: None,
+        }
+    }
+
+    pub fn with_deps(mut self, deps: Vec<TaskId>) -> Task {
+        self.dependencies = deps;
+        self
+    }
+
+    pub fn with_stage(mut self, stage: &str) -> Task {
+        self.stage = stage.to_string();
+        self
+    }
+
+    /// Wait between becoming ready and starting (paper Fig 7 metric).
+    pub fn wait_time(&self) -> Option<SimDuration> {
+        match (self.ready_at, self.start) {
+            (Some(r), Some(s)) => Some(s - r),
+            _ => None,
+        }
+    }
+
+    /// Listing-2 JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("execution_time", Json::num(self.execution_time.ticks() as f64)),
+            (
+                "resources",
+                Json::obj(vec![
+                    ("cpu", Json::num(self.resources.cpu as f64)),
+                    ("memory", Json::num(self.resources.memory_mb as f64)),
+                ]),
+            ),
+            (
+                "dependencies",
+                Json::Arr(self.dependencies.iter().map(|d| Json::num(*d as f64)).collect()),
+            ),
+            ("stage", Json::str(self.stage.clone())),
+        ])
+    }
+
+    /// Parse the Listing-2 JSON form.
+    pub fn from_json(v: &Json) -> Option<Task> {
+        let id = v.get("id")?.as_u64()?;
+        let exec = v.get("execution_time")?.as_u64()?;
+        let res = v.get("resources");
+        let cpu = res.map(|r| r.get_u64_or("cpu", 1)).unwrap_or(1);
+        let mem = res.map(|r| r.get_u64_or("memory", 0)).unwrap_or(0);
+        let deps = v
+            .get("dependencies")
+            .and_then(|d| d.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_u64()).collect())
+            .unwrap_or_default();
+        let mut t = Task::new(id, exec, cpu.max(1), mem).with_deps(deps);
+        t.stage = v.get_str_or("stage", "").to_string();
+        Some(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Task::new(4, 300, 2, 1024).with_deps(vec![2, 3]).with_stage("mAdd");
+        let back = Task::from_json(&Json::parse(&t.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.id, 4);
+        assert_eq!(back.execution_time, SimDuration(300));
+        assert_eq!(back.resources, TaskResources { cpu: 2, memory_mb: 1024 });
+        assert_eq!(back.dependencies, vec![2, 3]);
+        assert_eq!(back.stage, "mAdd");
+    }
+
+    #[test]
+    fn paper_listing2_task_parses() {
+        let v = Json::parse(
+            r#"{"id": 2, "execution_time": 150, "resources": {"cpu": 1, "memory": 512}, "dependencies": [1]}"#,
+        )
+        .unwrap();
+        let t = Task::from_json(&v).unwrap();
+        assert_eq!(t.id, 2);
+        assert_eq!(t.resources.cpu, 1);
+        assert_eq!(t.dependencies, vec![1]);
+    }
+
+    #[test]
+    fn missing_resources_default() {
+        let t = Task::from_json(&Json::parse(r#"{"id": 1, "execution_time": 5}"#).unwrap())
+            .unwrap();
+        assert_eq!(t.resources.cpu, 1);
+        assert_eq!(t.resources.memory_mb, 0);
+        assert!(t.dependencies.is_empty());
+    }
+
+    #[test]
+    fn wait_time_requires_both_stamps() {
+        let mut t = Task::new(1, 10, 1, 0);
+        assert_eq!(t.wait_time(), None);
+        t.ready_at = Some(SimTime(5));
+        t.start = Some(SimTime(12));
+        assert_eq!(t.wait_time(), Some(SimDuration(7)));
+    }
+}

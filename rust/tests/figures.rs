@@ -1,0 +1,97 @@
+//! Figure-shape regression tests: fast versions of every paper figure,
+//! asserting the qualitative results the paper reports (who wins, what
+//! tracks what, what scales) so refactors cannot silently break the
+//! reproduction.
+
+use sst_sched::harness::*;
+
+#[test]
+fn fig3a_occupancy_tracks_baseline() {
+    let v = fig3a(3_000, 1, 24);
+    assert!(v.correlation > 0.9, "Fig 3(a) corr {}", v.correlation);
+    assert!(v.nmae < 0.15, "Fig 3(a) nmae {}", v.nmae);
+    // The series is not trivial (machine actually gets used).
+    assert!(v.ours.iter().cloned().fold(0.0, f64::max) > 10.0);
+}
+
+#[test]
+fn fig3b_running_jobs_tracks_baseline() {
+    let v = fig3b(3_000, 1, 24);
+    assert!(v.correlation > 0.9, "Fig 3(b) corr {}", v.correlation);
+}
+
+#[test]
+fn fig4a_wait_times_track_baseline() {
+    let v = fig4a(3_000, 1, 12);
+    assert!(v.ours.iter().sum::<f64>() > 0.0, "no waits formed");
+    assert!(v.correlation > 0.9, "Fig 4(a) corr {}", v.correlation);
+}
+
+#[test]
+fn fig4b_policy_ordering_matches_paper() {
+    let rows = fig4b(4_000, 1);
+    assert_eq!(rows.len(), sst_sched::sched::Policy::ALL.len());
+    let by = |n: &str| rows.iter().find(|r| r.policy == n).unwrap().clone();
+    // Paper Fig 4(b) qualitative claims:
+    // backfilling "maximizes resource utilization by intelligently
+    // filling scheduling gaps" -> at least as good as FCFS on wait.
+    assert!(by("fcfs-backfill").mean_wait <= by("fcfs").mean_wait + 1e-9);
+    // "SJF reduces average job completion times".
+    assert!(by("sjf").mean_wait <= by("fcfs").mean_wait + 1e-9);
+    // "LJF is less efficient".
+    assert!(by("ljf").mean_wait >= by("sjf").mean_wait);
+    // Best Fit "does not significantly improve job completion times":
+    // within 10% of FCFS.
+    let (bf, fc) = (by("fcfs-bestfit").mean_wait, by("fcfs").mean_wait);
+    assert!((bf - fc).abs() <= 0.1 * fc.max(1.0), "bestfit {bf} vs fcfs {fc}");
+    // Conservative backfilling sits between FCFS and EASY on mean wait.
+    let cons = by("cons-backfill").mean_wait;
+    assert!(cons <= fc + 1e-9, "conservative {cons} worse than FCFS {fc}");
+    assert!(
+        cons + 1e-9 >= by("fcfs-backfill").mean_wait * 0.8,
+        "conservative should rarely beat EASY by much"
+    );
+}
+
+#[test]
+fn fig5a_speedup_grows_with_ranks_and_scale() {
+    let rows = fig5(false, &[5_000, 40_000], &[1, 2, 4], 1);
+    let at = |jobs: usize, ranks: usize| {
+        rows.iter().find(|r| r.jobs == jobs && r.ranks == ranks).unwrap().speedup
+    };
+    assert!(at(40_000, 4) > 1.2, "no speedup at 4 ranks: {}", at(40_000, 4));
+    assert!(at(40_000, 4) >= at(40_000, 2) * 0.75, "speedup collapsed at 4 ranks");
+    // Paper: "as the job sizes increased, we achieve greater speedup".
+    assert!(
+        at(40_000, 4) >= at(5_000, 4) * 0.7,
+        "large scale {} should not scale worse than small {}",
+        at(40_000, 4),
+        at(5_000, 4)
+    );
+}
+
+#[test]
+fn fig5b_sp2_scales() {
+    let rows = fig5(true, &[20_000], &[1, 4], 1);
+    assert!(rows[1].speedup > 1.2, "SP2 speedup {}", rows[1].speedup);
+}
+
+#[test]
+fn fig6_workflow_scales() {
+    let rows = fig6_wide(17, 128, &[1, 4], 1);
+    assert!(rows[1].speedup > 1.3, "workflow speedup {}", rows[1].speedup);
+    assert_eq!(rows[0].jobs, rows[1].jobs);
+}
+
+#[test]
+fn fig7_sipht_waits_match_reference() {
+    let v = fig7(4, 8, 1);
+    let ratio = v.ours_makespan as f64 / v.ref_makespan as f64;
+    assert!((0.7..1.3).contains(&ratio), "Fig 7 makespan ratio {ratio}");
+    // Per-stage waits correlate: stages that wait in the reference wait
+    // in ours.
+    let r: Vec<f64> = v.rows.iter().map(|x| x.ref_wait).collect();
+    let o: Vec<f64> = v.rows.iter().map(|x| x.ours_wait).collect();
+    let corr = sst_sched::metrics::correlation(&o, &r);
+    assert!(corr > 0.8, "Fig 7 stage-wait corr {corr}");
+}

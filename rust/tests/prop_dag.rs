@@ -1,0 +1,162 @@
+//! Property tests: DAG / workflow-management invariants on random DAGs
+//! (random layered graphs, as in Gupta et al. 2017, which the paper cites
+//! for DAG generation).
+
+use sst_sched::core::rng::Rng;
+use sst_sched::core::time::SimTime;
+use sst_sched::parallel::run_workflow_parallel_modeled;
+use sst_sched::util::prop::{check, check_n};
+use sst_sched::workflow::task::Task;
+use sst_sched::workflow::{Workflow, WorkflowExecutor, WorkflowManager};
+
+/// Random layered DAG: tasks in layers, edges only point downward (so the
+/// graph is acyclic by construction).
+fn random_workflow(rng: &mut Rng) -> Workflow {
+    let layers = rng.range(1, 6) as usize;
+    let mut tasks: Vec<Task> = Vec::new();
+    let mut prev_layer: Vec<u64> = Vec::new();
+    let mut next_id = 1u64;
+    for _ in 0..layers {
+        let width = rng.range(1, 8) as usize;
+        let mut this_layer = Vec::new();
+        for _ in 0..width {
+            let mut deps = Vec::new();
+            for &p in &prev_layer {
+                if rng.chance(0.4) {
+                    deps.push(p);
+                }
+            }
+            let t = Task::new(next_id, rng.range(1, 500), rng.range(1, 3), 0).with_deps(deps);
+            this_layer.push(next_id);
+            tasks.push(t);
+            next_id += 1;
+        }
+        prev_layer = this_layer;
+    }
+    Workflow::new(1, "random", tasks).expect("layered construction is acyclic")
+}
+
+#[test]
+fn topo_sort_respects_every_edge() {
+    check("topo respects edges", |rng| {
+        let w = random_workflow(rng);
+        let order = w.dag.topo_sort().ok_or("cycle in layered DAG?!")?;
+        let pos: std::collections::HashMap<u64, usize> =
+            order.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        for id in w.dag.nodes() {
+            for &child in w.dag.children(id) {
+                if pos[&id] >= pos[&child] {
+                    return Err(format!("edge {id}->{child} violated"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn manager_never_readies_task_before_dependencies() {
+    check("manager ready-set", |rng| {
+        let w = random_workflow(rng);
+        let mut mgr = WorkflowManager::new(w, SimTime::ZERO);
+        let mut t = 0u64;
+        // Random-order execution of ready tasks until done.
+        while !mgr.all_done() {
+            let ready = mgr.ready_tasks();
+            if ready.is_empty() && mgr.num_running() == 0 {
+                return Err("deadlock: nothing ready, nothing running".into());
+            }
+            if !ready.is_empty() {
+                let pick = ready[rng.below(ready.len() as u64) as usize];
+                mgr.mark_started(pick, SimTime(t));
+                t += 1;
+                mgr.mark_completed(pick, SimTime(t));
+            }
+            if !mgr.check_invariants() {
+                return Err("manager invariants violated".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn executor_respects_dependencies_and_critical_path() {
+    check("executor correctness", |rng| {
+        let w = random_workflow(rng);
+        let crit = w.critical_path_time();
+        let total = w.total_work();
+        let cpu = rng.range(3, 16); // >= max task cpu (3)
+        let dag = w.dag.clone();
+        let rep = WorkflowExecutor::new(cpu, u64::MAX).run(w);
+        let by_id: std::collections::HashMap<_, _> =
+            rep.tasks.iter().map(|t| (t.id, *t)).collect();
+        for id in dag.nodes() {
+            for &child in dag.children(id) {
+                if by_id[&child].start < by_id[&id].end {
+                    return Err(format!("task {child} started before parent {id} ended"));
+                }
+            }
+        }
+        let ms = rep.makespan.as_f64();
+        if ms + 1e-9 < crit {
+            return Err(format!("makespan {ms} below critical path {crit}"));
+        }
+        if ms > total + 1e-9 {
+            return Err(format!("makespan {ms} above serial bound {total}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn distributed_execution_matches_task_count_any_partition() {
+    check_n("distributed completeness", 60, |rng| {
+        let w = random_workflow(rng);
+        let n = w.len() as u64;
+        let ranks = rng.range(1, 6) as usize;
+        // Pool per rank must cover the largest task (cpu <= 3).
+        let rep = run_workflow_parallel_modeled(&w, ranks, 3 * ranks as u64 + 8, rng.range(1, 20));
+        if rep.total_completed() != n {
+            return Err(format!(
+                "{} of {n} tasks completed across {ranks} ranks",
+                rep.total_completed()
+            ));
+        }
+        // Makespan never below the critical path (latency only stretches).
+        if (rep.end_time() as f64) + 1e-9 < w.critical_path_time() {
+            return Err("distributed makespan below critical path".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spec_roundtrip_preserves_semantics() {
+    check_n("spec roundtrip", 60, |rng| {
+        let w = random_workflow(rng);
+        let spec = sst_sched::workflow::WorkflowSpec {
+            workflow: w.clone(),
+            cpu_available: 8,
+            memory_available_mb: u64::MAX,
+            scheduling_policy: "Static".into(),
+            preemption: false,
+        };
+        let text = spec.to_json().to_pretty();
+        let back = sst_sched::workflow::WorkflowSpec::parse(&text)
+            .map_err(|e| format!("reparse failed: {e:#}"))?;
+        if back.workflow.len() != w.len() {
+            return Err("task count changed through roundtrip".into());
+        }
+        let a = WorkflowExecutor::new(8, u64::MAX).run(w);
+        let b = WorkflowExecutor::new(8, u64::MAX).run(back.workflow);
+        if a.makespan != b.makespan {
+            return Err(format!(
+                "roundtrip changed makespan: {} vs {}",
+                a.makespan.ticks(),
+                b.makespan.ticks()
+            ));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,223 @@
+//! Property tests for the beyond-the-paper modules: conservative
+//! backfilling's reservation profile, topology metrics, multi-cluster
+//! routing, and dynamic workflow scheduling.
+
+use sst_sched::core::rng::Rng;
+use sst_sched::job::Job;
+use sst_sched::resources::Topology;
+use sst_sched::sched::Policy;
+use sst_sched::sim::{run_policy, MetaScheduler, Routing};
+use sst_sched::trace::{Das2Model, Workload};
+use sst_sched::util::prop::check_n;
+use sst_sched::workflow::task::Task;
+use sst_sched::workflow::{DynamicExecutor, TaskOrder, Workflow, WorkflowExecutor};
+
+fn random_workload(rng: &mut Rng) -> Workload {
+    let nodes = rng.range(1, 12) as usize;
+    let cores = rng.range(1, 6);
+    let n = rng.range(10, 80) as usize;
+    let mut t = 0u64;
+    let jobs: Vec<Job> = (0..n as u64)
+        .map(|id| {
+            t += rng.below(300);
+            let runtime = rng.range(1, 3000);
+            Job::with_estimate(
+                id + 1,
+                t,
+                rng.range(1, nodes as u64 * cores + 1),
+                runtime,
+                runtime + rng.below(3000),
+            )
+        })
+        .collect();
+    Workload::new("ext", jobs, nodes, cores).drop_infeasible()
+}
+
+#[test]
+fn conservative_never_delays_earlier_arrivals() {
+    // The defining property: adding LATER jobs to the queue never makes
+    // any EARLIER job start later under conservative backfilling.
+    //
+    // This holds for EXACT estimates (est == runtime): with over-
+    // estimates the guarantee covers the *reserved* start, not the
+    // realized one — early completions open gaps that backfilled jobs
+    // occupy at the instant an earlier job would otherwise have grabbed
+    // them (Mu'alem & Feitelson 2001 discuss exactly this).
+    check_n("conservative no-delay", 60, |rng| {
+        let mut w = random_workload(rng);
+        for j in w.jobs.iter_mut() {
+            j.est_runtime = j.runtime;
+        }
+        if w.jobs.len() < 4 {
+            return Ok(());
+        }
+        let cut = w.jobs.len() / 2;
+        let prefix = Workload::new("prefix", w.jobs[..cut].to_vec(), w.nodes, w.cores_per_node);
+        let full = run_policy(w.clone(), Policy::ConservativeBackfill);
+        let pre = run_policy(prefix, Policy::ConservativeBackfill);
+        let start_of = |r: &sst_sched::sim::SimReport, id: u64| {
+            r.completed.iter().find(|j| j.id == id).map(|j| j.start.unwrap())
+        };
+        for j in &w.jobs[..cut] {
+            let (Some(a), Some(b)) = (start_of(&full, j.id), start_of(&pre, j.id)) else {
+                continue;
+            };
+            if a > b {
+                return Err(format!(
+                    "job {} delayed by later arrivals: {} > {}",
+                    j.id,
+                    a.ticks(),
+                    b.ticks()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn all_policies_complete_random_workloads() {
+    check_n("six policies total", 60, |rng| {
+        let w = random_workload(rng);
+        let n = w.jobs.len();
+        let p = Policy::ALL[rng.below(Policy::ALL.len() as u64) as usize];
+        let r = run_policy(w, p);
+        if r.completed.len() != n {
+            return Err(format!("{p}: {} of {n} completed", r.completed.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn topology_distance_is_a_symmetric_bounded_metric() {
+    check_n("topology metric", 40, |rng| {
+        let topo = match rng.below(4) {
+            0 => Topology::Mesh2D { x: rng.range(2, 8) as usize, y: rng.range(2, 8) as usize },
+            1 => Topology::Torus2D { x: rng.range(2, 8) as usize, y: rng.range(2, 8) as usize },
+            2 => Topology::FatTree { leaf: rng.range(2, 5) as usize, agg: rng.range(1, 4) as usize },
+            _ => Topology::Dragonfly { a: rng.range(2, 5) as usize, p: rng.range(1, 4) as usize },
+        };
+        let n = topo.nodes();
+        for _ in 0..50 {
+            let u = rng.below(n as u64) as usize;
+            let v = rng.below(n as u64) as usize;
+            let d = topo.distance(u, v);
+            if topo.distance(v, u) != d {
+                return Err(format!("{topo:?}: asymmetric d({u},{v})"));
+            }
+            if u == v && d != 0 {
+                return Err("self distance nonzero".into());
+            }
+            if u != v && d == 0 {
+                return Err("distinct nodes at distance 0".into());
+            }
+            if d > topo.diameter() {
+                return Err(format!("{topo:?}: d({u},{v})={d} exceeds diameter"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn routing_always_respects_cluster_capacity() {
+    check_n("routing capacity", 40, |rng| {
+        let routing = match rng.below(3) {
+            0 => Routing::RoundRobin,
+            1 => Routing::LeastLoaded,
+            _ => Routing::BestFitCluster,
+        };
+        let m = MetaScheduler::das2_federation(routing, Policy::Fcfs);
+        let jobs = Das2Model::default().generate(rng.range(50, 400) as usize, rng.next_u64()).jobs;
+        for (j, r) in jobs.iter().zip(m.route(&jobs)) {
+            if let Some(i) = r {
+                if j.cores > m.clusters[i].total_cores() {
+                    return Err(format!("job {} routed over capacity", j.id));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dynamic_orders_agree_with_static_on_dependency_safety() {
+    check_n("dynamic dep safety", 50, |rng| {
+        // Random layered DAG (same construction as prop_dag).
+        let layers = rng.range(2, 5) as usize;
+        let mut tasks: Vec<Task> = Vec::new();
+        let mut prev: Vec<u64> = Vec::new();
+        let mut next_id = 1u64;
+        for _ in 0..layers {
+            let width = rng.range(1, 6) as usize;
+            let mut this = Vec::new();
+            for _ in 0..width {
+                let deps: Vec<u64> =
+                    prev.iter().copied().filter(|_| rng.chance(0.5)).collect();
+                tasks.push(Task::new(next_id, rng.range(1, 200), 1, 0).with_deps(deps));
+                this.push(next_id);
+                next_id += 1;
+            }
+            prev = this;
+        }
+        let w = Workflow::new(1, "dyn", tasks).expect("layered is acyclic");
+        let order = match rng.below(3) {
+            0 => TaskOrder::Fcfs,
+            1 => TaskOrder::CriticalPath,
+            _ => TaskOrder::WidestFirst,
+        };
+        let mut ex = DynamicExecutor::new(rng.range(1, 6), order);
+        if rng.chance(0.5) {
+            ex = ex.with_preemption();
+        }
+        let rep = ex.run(w.clone());
+        if rep.tasks.len() != w.len() {
+            return Err("dynamic executor lost tasks".into());
+        }
+        let by: std::collections::BTreeMap<_, _> =
+            rep.tasks.iter().map(|t| (t.id, *t)).collect();
+        for id in w.dag.nodes() {
+            for &c in w.dag.children(id) {
+                if by[&c].start < by[&id].end {
+                    return Err(format!("edge {id}->{c} violated under {order:?}"));
+                }
+            }
+        }
+        // Makespan bounded by critical path and serial work.
+        let ms = rep.makespan.as_f64();
+        if ms + 1e-9 < w.critical_path_time() {
+            return Err("below critical path".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn static_and_dynamic_fcfs_agree() {
+    check_n("static==dynamic fcfs", 40, |rng| {
+        let mut tasks = Vec::new();
+        for id in 1..=rng.range(3, 20) {
+            let deps = if id > 1 && rng.chance(0.4) {
+                vec![rng.range(1, id - 1)]
+            } else {
+                vec![]
+            };
+            tasks.push(Task::new(id, rng.range(1, 100), 1, 0).with_deps(deps));
+        }
+        let Ok(w) = Workflow::new(1, "cmp", tasks) else {
+            return Ok(()); // improbable duplicate-free failure guard
+        };
+        let cpu = rng.range(1, 5);
+        let a = WorkflowExecutor::new(cpu, u64::MAX).run(w.clone());
+        let b = DynamicExecutor::new(cpu, TaskOrder::Fcfs).run(w);
+        if a.makespan != b.makespan {
+            return Err(format!(
+                "makespans differ: static {} dynamic {}",
+                a.makespan.ticks(),
+                b.makespan.ticks()
+            ));
+        }
+        Ok(())
+    });
+}

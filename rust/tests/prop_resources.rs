@@ -1,0 +1,150 @@
+//! Property tests: resource-manager invariants under random
+//! allocate/release sequences (paper Algorithm 1's conservation laws).
+
+use sst_sched::core::rng::Rng;
+use sst_sched::job::Job;
+use sst_sched::resources::{AllocPolicy, Allocation, Cluster};
+use sst_sched::util::prop::check;
+
+fn random_cluster(rng: &mut Rng) -> Cluster {
+    if rng.chance(0.5) {
+        Cluster::homogeneous(rng.range(1, 32) as usize, rng.range(1, 16), 0)
+    } else {
+        let n = rng.range(1, 24) as usize;
+        let specs: Vec<(u64, u64)> =
+            (0..n).map(|_| (rng.range(1, 32), rng.range(0, 8192))).collect();
+        Cluster::heterogeneous(&specs)
+    }
+}
+
+fn policy(rng: &mut Rng) -> AllocPolicy {
+    if rng.chance(0.5) {
+        AllocPolicy::FirstFit
+    } else {
+        AllocPolicy::BestFit
+    }
+}
+
+#[test]
+fn conservation_under_random_traffic() {
+    check("conservation", |rng| {
+        let mut c = random_cluster(rng);
+        let total = c.total_cores();
+        let mut live: Vec<Allocation> = Vec::new();
+        for step in 0..100u64 {
+            if rng.chance(0.6) || live.is_empty() {
+                let job = Job::simple(step, 0, rng.range(1, total + 4), 10);
+                if let Some(a) = c.allocate(&job, policy(rng)) {
+                    if a.cores() != job.cores {
+                        return Err(format!("allocated {} != requested {}", a.cores(), job.cores));
+                    }
+                    live.push(a);
+                }
+            } else {
+                let idx = rng.below(live.len() as u64) as usize;
+                let a = live.swap_remove(idx);
+                c.release(&a);
+            }
+            if !c.check_invariants() {
+                return Err(format!("invariants broken at step {step}"));
+            }
+            let held: u64 = live.iter().map(|a| a.cores()).sum();
+            if c.free_cores() + held != total {
+                return Err(format!(
+                    "leak: free {} + held {held} != total {total}",
+                    c.free_cores()
+                ));
+            }
+        }
+        // Release everything: cluster must be pristine.
+        for a in live.drain(..) {
+            c.release(&a);
+        }
+        if c.free_cores() != total || c.occupied_nodes() != 0 {
+            return Err("cluster not pristine after full release".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn allocation_never_exceeds_node_capacity() {
+    check("node capacity", |rng| {
+        let mut c = random_cluster(rng);
+        let mut live = Vec::new();
+        for step in 0..60u64 {
+            let job = Job::simple(step, 0, rng.range(1, 40), 10);
+            if let Some(a) = c.allocate(&job, policy(rng)) {
+                live.push(a);
+            }
+            for n in c.nodes() {
+                if n.free_cores > n.cores {
+                    return Err(format!("node {} over capacity", n.id));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn best_fit_single_node_is_optimal() {
+    check("best-fit optimality", |rng| {
+        let mut c = random_cluster(rng);
+        // Random pre-load.
+        let mut step = 1000;
+        for _ in 0..rng.below(8) {
+            let j = Job::simple(step, 0, rng.range(1, 8), 10);
+            let _ = c.allocate(&j, AllocPolicy::FirstFit);
+            step += 1;
+        }
+        let req = rng.range(1, 16);
+        let job = Job::simple(1, 0, req, 10);
+        let before = c.clone();
+        if let Some(a) = c.allocate(&job, AllocPolicy::BestFit) {
+            if a.taken.len() == 1 {
+                let (nid, _, _) = a.taken[0];
+                let chosen_slack = before.nodes()[nid].free_cores - req;
+                // No other node that fits has smaller slack.
+                for n in before.nodes() {
+                    if n.free_cores >= req && n.free_cores - req < chosen_slack {
+                        return Err(format!(
+                            "node {} slack {} beats chosen {} slack {}",
+                            n.id,
+                            n.free_cores - req,
+                            nid,
+                            chosen_slack
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn failed_allocation_leaves_cluster_untouched() {
+    check("failed allocation purity", |rng| {
+        let mut c = random_cluster(rng);
+        let total = c.total_cores();
+        // Fill most of the machine.
+        let filler = Job::simple(1, 0, total.saturating_sub(1).max(1), 10);
+        let _a = c.allocate(&filler, AllocPolicy::FirstFit);
+        let free_before = c.free_cores();
+        let snapshot: Vec<u64> = c.nodes().iter().map(|n| n.free_cores).collect();
+        // This cannot fit.
+        let big = Job::simple(2, 0, total + rng.range(1, 100), 10);
+        if c.allocate(&big, policy(rng)).is_some() {
+            return Err("impossible allocation succeeded".into());
+        }
+        if c.free_cores() != free_before {
+            return Err("failed allocation changed free count".into());
+        }
+        let after: Vec<u64> = c.nodes().iter().map(|n| n.free_cores).collect();
+        if snapshot != after {
+            return Err("failed allocation mutated node state".into());
+        }
+        Ok(())
+    });
+}

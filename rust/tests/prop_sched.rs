@@ -1,0 +1,158 @@
+//! Property tests: scheduling-discipline invariants over random
+//! workloads, checked end-to-end through the event-driven simulator.
+
+use sst_sched::core::rng::Rng;
+use sst_sched::core::time::SimTime;
+use sst_sched::job::Job;
+use sst_sched::sched::Policy;
+use sst_sched::sim::{run_policy, SimReport};
+use sst_sched::trace::Workload;
+use sst_sched::util::prop::check_n;
+
+fn random_workload(rng: &mut Rng) -> Workload {
+    let nodes = rng.range(1, 16) as usize;
+    let cores = rng.range(1, 8);
+    let n = rng.range(5, 120) as usize;
+    let mut t = 0u64;
+    let jobs: Vec<Job> = (0..n as u64)
+        .map(|id| {
+            t += rng.below(200);
+            let runtime = rng.range(1, 2000);
+            let est = runtime + rng.below(2000);
+            Job::with_estimate(id + 1, t, rng.range(1, nodes as u64 * cores + 2), runtime, est)
+        })
+        .collect();
+    Workload::new("prop", jobs, nodes, cores).drop_infeasible()
+}
+
+fn random_policy(rng: &mut Rng) -> Policy {
+    Policy::ALL[rng.below(Policy::ALL.len() as u64) as usize]
+}
+
+/// Reconstruct core usage over time from the report and verify capacity
+/// is never exceeded and every lifecycle timestamp is sane.
+fn verify_lifecycle(r: &SimReport, capacity: u64, expected: usize) -> Result<(), String> {
+    if r.completed.len() != expected {
+        return Err(format!("completed {} != submitted {expected}", r.completed.len()));
+    }
+    let mut deltas: Vec<(SimTime, i64)> = Vec::new();
+    for j in &r.completed {
+        let start = j.start.ok_or_else(|| format!("job {} never started", j.id))?;
+        let end = j.end.ok_or_else(|| format!("job {} never ended", j.id))?;
+        if start < j.submit {
+            return Err(format!("job {} started before submit", j.id));
+        }
+        if end.ticks() < start.ticks() + j.runtime.ticks() {
+            return Err(format!("job {} ended early", j.id));
+        }
+        deltas.push((start, j.cores as i64));
+        deltas.push((end, -(j.cores as i64)));
+    }
+    // Releases before acquisitions at equal times (completion frees first).
+    deltas.sort_by_key(|&(t, d)| (t, d));
+    let mut usage = 0i64;
+    for (t, d) in deltas {
+        usage += d;
+        if usage > capacity as i64 {
+            return Err(format!("capacity exceeded at {t}: {usage} > {capacity}"));
+        }
+        if usage < 0 {
+            return Err(format!("negative usage at {t}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn no_policy_oversubscribes_or_loses_jobs() {
+    check_n("lifecycle+capacity", 120, |rng| {
+        let w = random_workload(rng);
+        let expected = w.jobs.len();
+        let capacity = w.total_cores();
+        let p = random_policy(rng);
+        let r = run_policy(w, p);
+        verify_lifecycle(&r, capacity, expected)
+    });
+}
+
+#[test]
+fn fcfs_starts_in_arrival_order() {
+    check_n("fcfs order", 80, |rng| {
+        let w = random_workload(rng);
+        let r = run_policy(w, Policy::Fcfs);
+        let mut jobs = r.completed.clone();
+        jobs.sort_by_key(|j| (j.submit, j.id));
+        // FCFS invariant: start times are non-decreasing in arrival order.
+        for pair in jobs.windows(2) {
+            if pair[1].start.unwrap() < pair[0].start.unwrap() {
+                return Err(format!(
+                    "job {} (arrived later) started before job {}",
+                    pair[1].id, pair[0].id
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn backfill_never_delays_vs_fcfs_makespan_head() {
+    // EASY property (observable form): under backfilling, the FCFS-order
+    // start time of each job never gets *worse* for the blocked head
+    // job at any scheduling point where estimates are exact. With exact
+    // estimates (est == runtime) the backfill schedule's makespan is <=
+    // FCFS's.
+    check_n("easy no-harm", 60, |rng| {
+        let mut w = random_workload(rng);
+        for j in w.jobs.iter_mut() {
+            j.est_runtime = j.runtime; // exact estimates
+        }
+        let fcfs = run_policy(w.clone(), Policy::Fcfs);
+        let bf = run_policy(w, Policy::FcfsBackfill);
+        if bf.end_time > fcfs.end_time {
+            return Err(format!(
+                "backfill makespan {} > fcfs {}",
+                bf.end_time.ticks(),
+                fcfs.end_time.ticks()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simulator_agrees_with_independent_baseline() {
+    // The validation property behind Figs 3/4a, as a randomized law:
+    // the component simulator and the flat CQsim-like baseline make
+    // identical FCFS decisions on any workload.
+    check_n("cross-simulator agreement", 60, |rng| {
+        let w = random_workload(rng);
+        let ours = run_policy(w.clone(), Policy::Fcfs);
+        let base = sst_sched::baseline::run_baseline(&w, Policy::Fcfs);
+        let key = |jobs: &[Job]| {
+            let mut v: Vec<(u64, Option<SimTime>)> =
+                jobs.iter().map(|j| (j.id, j.start)).collect();
+            v.sort_unstable();
+            v
+        };
+        if key(&ours.completed) != key(&base.completed) {
+            return Err("independent simulators disagreed under FCFS".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn deterministic_across_repeated_runs() {
+    check_n("determinism", 40, |rng| {
+        let w = random_workload(rng);
+        let p = random_policy(rng);
+        let a = run_policy(w.clone(), p);
+        let b = run_policy(w, p);
+        if a.events != b.events || a.end_time != b.end_time {
+            return Err(format!("run differed: {}/{} vs {}/{}",
+                a.events, a.end_time.ticks(), b.events, b.end_time.ticks()));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,105 @@
+//! XLA/native parity: the AOT-compiled JAX+Pallas scorer must produce
+//! the same *scheduling decisions* as the pure-Rust scorer — backend
+//! choice is a performance knob, never a semantics knob.
+//!
+//! Requires `make artifacts`; tests self-skip when the artifact is
+//! missing so `cargo test` stays green on fresh checkouts.
+
+use sst_sched::core::rng::Rng;
+use sst_sched::runtime::{backfill_with_accel, Accel, XlaScorer, DEFAULT_ARTIFACT};
+use sst_sched::sched::scorer::{NativeScorer, QueueScorer, ScoreParams};
+use sst_sched::sched::Policy;
+use sst_sched::sim::Simulation;
+use sst_sched::trace::{Das2Model, SdscSp2Model};
+use sst_sched::util::prop::check_n;
+
+fn artifact() -> bool {
+    let here = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT);
+    if here.exists() {
+        std::env::set_current_dir(env!("CARGO_MANIFEST_DIR")).unwrap();
+        true
+    } else {
+        eprintln!("skipping XLA parity tests: run `make artifacts`");
+        false
+    }
+}
+
+#[test]
+fn scorer_outputs_match_on_random_inputs() {
+    if !artifact() {
+        return;
+    }
+    let mut xla = XlaScorer::load_default().unwrap();
+    let mut native = NativeScorer::new();
+    check_n("scorer parity", 40, |rng: &mut Rng| {
+        let q = rng.range(1, 300) as usize;
+        let n = rng.range(1, 400) as usize;
+        let req: Vec<f32> = (0..q).map(|_| rng.range(0, 64) as f32).collect();
+        let est: Vec<f32> = (0..q).map(|_| rng.range(1, 86_400) as f32).collect();
+        let wait: Vec<f32> = (0..q).map(|_| rng.range(0, 50_000) as f32).collect();
+        let free: Vec<f32> = (0..n).map(|_| rng.range(0, 16) as f32).collect();
+        let params = ScoreParams {
+            shadow_time: rng.range(0, 86_400) as f32,
+            extra_cores: rng.range(0, 128) as f32,
+            aging_weight: 1.0,
+            waste_weight: 0.5,
+        };
+        let a = xla.score(&req, &est, &wait, &free, params);
+        let b = native.score(&req, &est, &wait, &free, params);
+        if a.backfill_ok != b.backfill_ok {
+            return Err("backfill_ok mismatch".into());
+        }
+        for i in 0..q {
+            let (x, y) = (a.waste[i], b.waste[i]);
+            if (x - y).abs() > 1e-3 * y.abs().max(1.0) {
+                return Err(format!("waste[{i}] {x} vs {y}"));
+            }
+            let (x, y) = (a.priority[i], b.priority[i]);
+            if (x - y).abs() > 1e-2 * y.abs().max(1.0) {
+                return Err(format!("priority[{i}] {x} vs {y}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn decisions(accel: Accel, w: &sst_sched::trace::Workload) -> Vec<(u64, u64)> {
+    let sched = backfill_with_accel(accel).unwrap();
+    let r = Simulation::new(w.clone(), Policy::FcfsBackfill)
+        .with_scheduler(Box::new(sched))
+        .run(None);
+    let mut v: Vec<(u64, u64)> =
+        r.completed.iter().map(|j| (j.id, j.start.unwrap().ticks())).collect();
+    v.sort_unstable();
+    v
+}
+
+#[test]
+fn das2_scheduling_decisions_identical() {
+    if !artifact() {
+        return;
+    }
+    let w = Das2Model::default().generate(3_000, 17).scale_arrivals(0.4).drop_infeasible();
+    assert_eq!(decisions(Accel::Xla, &w), decisions(Accel::Native, &w));
+}
+
+#[test]
+fn sp2_scheduling_decisions_identical() {
+    if !artifact() {
+        return;
+    }
+    // SP2: 128 nodes of 1 core — heavy backfilling traffic.
+    let w = SdscSp2Model::default().generate(2_000, 23).drop_infeasible();
+    assert_eq!(decisions(Accel::Xla, &w), decisions(Accel::Native, &w));
+}
+
+#[test]
+fn long_queue_chunked_scoring_still_identical() {
+    if !artifact() {
+        return;
+    }
+    // Compress arrivals hard so queues exceed the artifact's Q_PAD=256
+    // and the XLA scorer must chunk.
+    let w = Das2Model::default().generate(2_000, 31).scale_arrivals(0.02).drop_infeasible();
+    assert_eq!(decisions(Accel::Xla, &w), decisions(Accel::Native, &w));
+}
