@@ -25,7 +25,12 @@ use sst_sched::workflow::generators::galactic_plane;
 use sst_sched::workflow::WorkflowExecutor;
 
 fn run_with(accel: Accel, workload: sst_sched::trace::Workload) -> SimReport {
-    let sched = backfill_with_accel(accel).expect("run `make artifacts` first");
+    // Falls back to the native scorer when this build has no XLA/PJRT
+    // support (`xla` cargo feature) or the artifact is missing.
+    let sched = backfill_with_accel(accel).unwrap_or_else(|e| {
+        eprintln!("note: {e:#}; falling back to --accel native");
+        backfill_with_accel(Accel::Native).unwrap()
+    });
     Simulation::new(workload, Policy::FcfsBackfill)
         .with_scheduler(Box::new(sched))
         .run(None)

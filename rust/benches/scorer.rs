@@ -6,6 +6,7 @@
 //! notice when the artifact is missing.
 
 use sst_sched::sched::scorer::{NativeScorer, QueueScorer, ScoreParams};
+#[cfg(feature = "xla")]
 use sst_sched::runtime::XlaScorer;
 use sst_sched::util::bench::{section, Bench};
 
@@ -34,6 +35,9 @@ fn main() {
     }
 
     section("XLA scorer (AOT JAX + Pallas via PJRT)");
+    #[cfg(not(feature = "xla"))]
+    println!("skipped: built without the `xla` feature");
+    #[cfg(feature = "xla")]
     match XlaScorer::load_default() {
         Err(e) => println!("skipped: {e:#} (run `make artifacts`)"),
         Ok(_) => {

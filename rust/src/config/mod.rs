@@ -3,7 +3,9 @@
 //! SST's Python configuration surface, so experiments are declarative
 //! and reproducible (`sst-sched run --config experiment.json`).
 
-use crate::sched::Policy;
+use crate::core::time::SimDuration;
+use crate::sched::{Policy, PreemptionConfig};
+use crate::sim::{FaultConfig, ReservationSpec};
 use crate::trace::{Das2Model, SdscSp2Model, Workload};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -40,6 +42,18 @@ pub struct ExperimentConfig {
     /// Parallel-run parameters.
     pub ranks: usize,
     pub lookahead: u64,
+    /// Node failure model (`faults.*`); disabled by default.
+    pub faults: FaultConfig,
+    /// Preemption layer (`preemption.*`); mode `none` by default.
+    pub preemption: PreemptionConfig,
+    /// Assign derived per-user priority bands (`job.user % bands`) to
+    /// the loaded workload (`preemption.priority_bands`). Trace formats
+    /// (SWF/GWF) carry no priorities, so priority-aware eviction is
+    /// inert on them without this; 0 leaves priorities untouched (the
+    /// synthetic models ship 3 bands of their own).
+    pub priority_bands: u8,
+    /// Advance reservations (`reservations[]`).
+    pub reservations: Vec<ReservationSpec>,
 }
 
 impl Default for ExperimentConfig {
@@ -56,6 +70,10 @@ impl Default for ExperimentConfig {
             accel: "native".to_string(),
             ranks: 1,
             lookahead: 3600,
+            faults: FaultConfig::default(),
+            preemption: PreemptionConfig::default(),
+            priority_bands: 0,
+            reservations: Vec::new(),
         }
     }
 }
@@ -107,6 +125,41 @@ impl ExperimentConfig {
             cfg.ranks = p.get_u64_or("ranks", 1) as usize;
             cfg.lookahead = p.get_u64_or("lookahead", 3600);
         }
+        if let Some(fj) = v.get("faults") {
+            cfg.faults.mtbf = fj.get_f64_or("mtbf", 0.0);
+            cfg.faults.mttr = fj.get_f64_or("mttr", cfg.faults.mttr);
+            cfg.faults.seed = fj.get_u64_or("seed", cfg.faults.seed);
+            cfg.faults.until = fj.get("until").and_then(|x| x.as_u64());
+            if cfg.faults.mtbf < 0.0 || cfg.faults.mttr <= 0.0 {
+                bail!("faults.mtbf must be >= 0 and faults.mttr > 0");
+            }
+        }
+        if let Some(pj) = v.get("preemption") {
+            cfg.preemption.mode = pj
+                .get_str_or("mode", "none")
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!(e))?;
+            cfg.preemption.checkpoint_overhead =
+                SimDuration(pj.get_u64_or("checkpoint_overhead", 0));
+            cfg.preemption.restart_overhead = SimDuration(pj.get_u64_or("restart_overhead", 0));
+            cfg.preemption.starvation_threshold =
+                SimDuration(pj.get_u64_or("starvation_threshold", 0));
+            cfg.priority_bands = pj.get_u64_or("priority_bands", 0) as u8;
+        }
+        if let Some(rj) = v.get("reservations").and_then(|r| r.as_arr()) {
+            for (i, r) in rj.iter().enumerate() {
+                let nodes = r.get_u64_or("nodes", 0) as usize;
+                let duration = r.get_u64_or("duration", 0);
+                if nodes == 0 || duration == 0 {
+                    bail!("reservations[{i}] needs nonzero \"nodes\" and \"duration\"");
+                }
+                cfg.reservations.push(ReservationSpec {
+                    start: r.get_u64_or("start", 0),
+                    duration,
+                    nodes,
+                });
+            }
+        }
         Ok(cfg)
     }
 
@@ -141,7 +194,7 @@ impl ExperimentConfig {
         if let Some(c) = self.cores_per_node {
             platform.push(("cores_per_node", Json::num(c as f64)));
         }
-        Json::obj(vec![
+        let mut top = vec![
             ("workload", Json::obj(wl)),
             ("platform", Json::obj(platform)),
             (
@@ -158,7 +211,57 @@ impl ExperimentConfig {
                     ("lookahead", Json::num(self.lookahead as f64)),
                 ]),
             ),
-        ])
+        ];
+        if self.faults.enabled() {
+            let mut fj = vec![
+                ("mtbf", Json::num(self.faults.mtbf)),
+                ("mttr", Json::num(self.faults.mttr)),
+                ("seed", Json::num(self.faults.seed as f64)),
+            ];
+            if let Some(u) = self.faults.until {
+                fj.push(("until", Json::num(u as f64)));
+            }
+            top.push(("faults", Json::obj(fj)));
+        }
+        if self.preemption.enabled() {
+            top.push((
+                "preemption",
+                Json::obj(vec![
+                    ("mode", Json::str(self.preemption.mode.as_str())),
+                    (
+                        "checkpoint_overhead",
+                        Json::num(self.preemption.checkpoint_overhead.ticks() as f64),
+                    ),
+                    (
+                        "restart_overhead",
+                        Json::num(self.preemption.restart_overhead.ticks() as f64),
+                    ),
+                    (
+                        "starvation_threshold",
+                        Json::num(self.preemption.starvation_threshold.ticks() as f64),
+                    ),
+                    ("priority_bands", Json::num(self.priority_bands as f64)),
+                ]),
+            ));
+        }
+        if !self.reservations.is_empty() {
+            top.push((
+                "reservations",
+                Json::Arr(
+                    self.reservations
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("start", Json::num(r.start as f64)),
+                                ("duration", Json::num(r.duration as f64)),
+                                ("nodes", Json::num(r.nodes as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(top)
     }
 
     /// Materialize the workload this config describes.
@@ -193,6 +296,11 @@ impl ExperimentConfig {
         }
         if (self.arrival_scale - 1.0).abs() > 1e-12 {
             w = w.scale_arrivals(self.arrival_scale);
+        }
+        if self.priority_bands > 0 {
+            for j in w.jobs.iter_mut() {
+                j.priority = (j.user % self.priority_bands as u32) as u8;
+            }
         }
         Ok(w.drop_infeasible())
     }
@@ -264,5 +372,59 @@ mod tests {
     #[test]
     fn swf_requires_path() {
         assert!(ExperimentConfig::parse(r#"{"workload": {"kind": "swf"}}"#).is_err());
+    }
+
+    const FAULTY: &str = r#"{
+        "workload": {"kind": "sdsc-sp2", "jobs": 200, "seed": 3},
+        "faults": {"mtbf": 40000, "mttr": 1800, "seed": 99, "until": 500000},
+        "preemption": {"mode": "checkpoint", "checkpoint_overhead": 60,
+                       "restart_overhead": 30, "starvation_threshold": 7200,
+                       "priority_bands": 4},
+        "reservations": [{"start": 1000, "duration": 5000, "nodes": 8}]
+    }"#;
+
+    #[test]
+    fn parses_fault_subsystem_config() {
+        let c = ExperimentConfig::parse(FAULTY).unwrap();
+        assert!(c.faults.enabled());
+        assert_eq!(c.faults.mtbf, 40000.0);
+        assert_eq!(c.faults.mttr, 1800.0);
+        assert_eq!(c.faults.seed, 99);
+        assert_eq!(c.faults.until, Some(500000));
+        assert_eq!(c.preemption.mode, crate::sched::PreemptionMode::Checkpoint);
+        assert_eq!(c.preemption.checkpoint_overhead, SimDuration(60));
+        assert_eq!(c.preemption.restart_overhead, SimDuration(30));
+        assert_eq!(c.preemption.starvation_threshold, SimDuration(7200));
+        assert_eq!(c.priority_bands, 4);
+        // Priority bands reach the built workload.
+        let w = c.build_workload().unwrap();
+        assert!(w.jobs.iter().any(|j| j.priority > 0));
+        assert!(w.jobs.iter().all(|j| j.priority < 4));
+        assert_eq!(
+            c.reservations,
+            vec![ReservationSpec { start: 1000, duration: 5000, nodes: 8 }]
+        );
+    }
+
+    #[test]
+    fn fault_config_roundtrips() {
+        let c = ExperimentConfig::parse(FAULTY).unwrap();
+        let back = ExperimentConfig::parse(&c.to_json().to_pretty()).unwrap();
+        assert_eq!(back.faults, c.faults);
+        assert_eq!(back.preemption, c.preemption);
+        assert_eq!(back.reservations, c.reservations);
+    }
+
+    #[test]
+    fn fault_free_default_and_validation() {
+        let c = ExperimentConfig::parse("{}").unwrap();
+        assert!(!c.faults.enabled());
+        assert!(!c.preemption.enabled());
+        assert!(c.reservations.is_empty());
+        assert!(ExperimentConfig::parse(r#"{"faults": {"mtbf": 10, "mttr": 0}}"#).is_err());
+        assert!(ExperimentConfig::parse(r#"{"preemption": {"mode": "vaporize"}}"#).is_err());
+        assert!(
+            ExperimentConfig::parse(r#"{"reservations": [{"start": 5, "nodes": 0}]}"#).is_err()
+        );
     }
 }

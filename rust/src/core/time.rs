@@ -94,6 +94,16 @@ impl Sub for SimTime {
     }
 }
 
+impl Sub for SimDuration {
+    type Output = SimDuration;
+    /// Saturating difference (a partial run segment can never push the
+    /// remaining work below zero).
+    #[inline]
+    fn sub(self, rhs: SimDuration) -> SimDuration {
+        SimDuration(self.0.saturating_sub(rhs.0))
+    }
+}
+
 impl fmt::Display for SimTime {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "t={}", self.0)
@@ -124,6 +134,12 @@ mod tests {
     #[test]
     fn sub_is_since() {
         assert_eq!(SimTime(10) - SimTime(4), SimDuration(6));
+    }
+
+    #[test]
+    fn duration_sub_saturates() {
+        assert_eq!(SimDuration(10) - SimDuration(4), SimDuration(6));
+        assert_eq!(SimDuration(4) - SimDuration(10), SimDuration(0));
     }
 
     #[test]

@@ -385,6 +385,94 @@ pub fn print_fig7(v: &SiphtValidation) {
     );
 }
 
+/// One row of a fault-tolerance comparison: a (policy, preemption mode)
+/// pair run against a common seeded failure trace.
+#[derive(Debug, Clone)]
+pub struct FaultRow {
+    pub policy: &'static str,
+    pub mode: &'static str,
+    pub mean_wait: f64,
+    pub mean_utilization: f64,
+    /// Goodput: useful core-seconds per available core-second (the
+    /// headline metric — see `SimReport::mean_effective_utilization`).
+    pub effective_utilization: f64,
+    pub lost_work: f64,
+    pub overhead_work: f64,
+    pub failures: u64,
+    pub preemptions: u64,
+    pub requeues: u64,
+    pub makespan: u64,
+}
+
+/// Run every `(policy, preemption)` case against the *same* failure
+/// trace (the injector stream is seeded per-run, not shared, so every
+/// case sees identical failure instants, victims and repair times) and
+/// report the comparison (fault/preemption subsystem; used by
+/// examples/fault_tolerance.rs and the `faults` CLI command).
+pub fn fault_comparison(
+    workload: &Workload,
+    faults: crate::sim::FaultConfig,
+    reservations: &[crate::sim::ReservationSpec],
+    cases: &[(Policy, crate::sched::PreemptionConfig)],
+) -> Vec<FaultRow> {
+    cases
+        .iter()
+        .map(|&(policy, preemption)| {
+            let r = crate::sim::Simulation::new(workload.clone(), policy)
+                .with_faults(faults)
+                .with_preemption(preemption)
+                .with_reservations(reservations.to_vec())
+                .run(None);
+            FaultRow {
+                policy: r.policy,
+                mode: r.preemption_mode,
+                mean_wait: r.wait_stats().mean_wait,
+                mean_utilization: r.mean_utilization,
+                effective_utilization: r.mean_effective_utilization,
+                lost_work: r.lost_work,
+                overhead_work: r.overhead_work,
+                failures: r.faults.failures,
+                preemptions: r.faults.preemptions,
+                requeues: r.faults.requeues,
+                makespan: r.makespan().ticks(),
+            }
+        })
+        .collect()
+}
+
+pub fn print_fault_rows(rows: &[FaultRow]) {
+    let mut t = Table::new(&[
+        "policy",
+        "preemption",
+        "mean wait (s)",
+        "eff util",
+        "util",
+        "lost (core-s)",
+        "overhead (core-s)",
+        "fails",
+        "evictions",
+        "requeues",
+        "makespan (s)",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.policy.to_string(),
+            r.mode.to_string(),
+            f(r.mean_wait),
+            format!("{:.3}", r.effective_utilization),
+            format!("{:.3}", r.mean_utilization),
+            f(r.lost_work),
+            f(r.overhead_work),
+            r.failures.to_string(),
+            r.preemptions.to_string(),
+            r.requeues.to_string(),
+            r.makespan.to_string(),
+        ]);
+    }
+    t.print();
+    println!();
+}
+
 /// Summary of one plain `run` invocation (CLI).
 pub fn print_run_report(r: &crate::sim::SimReport) {
     let s = wait_stats(&r.completed);
@@ -400,6 +488,21 @@ pub fn print_run_report(r: &crate::sim::SimReport) {
     println!("p95 wait          {:.1} s", s.p95_wait);
     println!("mean slowdown     {:.2}", s.mean_slowdown);
     println!("mean utilization  {:.3}", r.mean_utilization);
+    // Fault/preemption outputs, only when the subsystem was active.
+    if r.faults != crate::sim::FaultCounters::default() || r.preemption_mode != "none" {
+        println!("preemption mode   {}", r.preemption_mode);
+        println!("effective util    {:.3}", r.mean_effective_utilization);
+        println!("node failures     {}", r.faults.failures);
+        println!("node repairs      {}", r.faults.repairs);
+        println!("preemptions       {}", r.faults.preemptions);
+        println!("failure requeues  {}", r.faults.requeues);
+        println!("reservations      {}", r.faults.reservations_started);
+        if r.faults.reservations_short_nodes > 0 {
+            println!("resv short nodes  {}", r.faults.reservations_short_nodes);
+        }
+        println!("lost work         {:.0} core-s", r.lost_work);
+        println!("ckpt overhead     {:.0} core-s", r.overhead_work);
+    }
 }
 
 #[cfg(test)]
@@ -458,5 +561,32 @@ mod tests {
         let rows = fig6(2, &[1, 2], 1);
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].jobs, rows[1].jobs);
+    }
+
+    #[test]
+    fn fault_comparison_shares_one_failure_trace() {
+        use crate::core::time::SimDuration;
+        use crate::sched::{PreemptionConfig, PreemptionMode};
+        let w = Das2Model::default().generate(500, 5).scale_arrivals(0.5).drop_infeasible();
+        let faults =
+            crate::sim::FaultConfig { mtbf: 5_000.0, mttr: 2_000.0, seed: 11, until: None };
+        let ckpt = PreemptionConfig {
+            mode: PreemptionMode::Checkpoint,
+            checkpoint_overhead: SimDuration(30),
+            restart_overhead: SimDuration(30),
+            starvation_threshold: SimDuration::ZERO,
+        };
+        let rows = fault_comparison(
+            &w,
+            faults,
+            &[],
+            &[(Policy::Fcfs, PreemptionConfig::default()), (Policy::FcfsBackfill, ckpt)],
+        );
+        assert_eq!(rows.len(), 2);
+        // Identical injector stream => identical failure counts.
+        assert_eq!(rows[0].failures, rows[1].failures);
+        assert!(rows[0].failures > 0, "no failures injected — vacuous comparison");
+        assert_eq!(rows[0].mode, "none");
+        assert_eq!(rows[1].mode, "checkpoint");
     }
 }

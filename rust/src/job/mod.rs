@@ -52,11 +52,36 @@ pub struct Job {
     pub user: u32,
     /// Trace group/project id (0 = unknown).
     pub group: u32,
+    /// Scheduling priority (fault/preemption subsystem): higher values
+    /// are more important; preemptive policies only evict strictly
+    /// lower-priority work. Traces default to 0.
+    pub priority: u8,
     pub state: JobState,
-    /// Set when the job starts running.
+    /// Set when the job first starts running (wait time = start - submit,
+    /// also for jobs that are later preempted and restarted).
     pub start: Option<SimTime>,
     /// Set when the job completes.
     pub end: Option<SimTime>,
+    /// Start of the current run segment (equals `start` for jobs that
+    /// were never preempted).
+    pub last_start: Option<SimTime>,
+    /// Work still to execute. Initially the actual runtime; preemption
+    /// and failure rewrite it (see `record_interruption`).
+    pub remaining: SimDuration,
+    /// Machine time consumed across all run segments so far.
+    pub executed: SimDuration,
+    /// Checkpoint/restart overhead charged so far.
+    pub overhead: SimDuration,
+    /// Progress discarded by kills (failures or non-checkpointed
+    /// eviction).
+    pub lost: SimDuration,
+    /// Planned evictions suffered (preemptive policies, reservations).
+    pub preempt_count: u32,
+    /// Node-failure kills suffered.
+    pub fail_count: u32,
+    /// Dispatch generation: bumped every time the job is (re)started so
+    /// stale completion events from a cancelled segment are ignored.
+    pub incarnation: u32,
 }
 
 impl Job {
@@ -85,9 +110,18 @@ impl Job {
             runtime,
             user,
             group,
+            priority: 0,
             state: JobState::Submitted,
             start: None,
             end: None,
+            last_start: None,
+            remaining: runtime,
+            executed: SimDuration::ZERO,
+            overhead: SimDuration::ZERO,
+            lost: SimDuration::ZERO,
+            preempt_count: 0,
+            fail_count: 0,
+            incarnation: 0,
         }
     }
 
@@ -144,7 +178,9 @@ impl Job {
     }
 
     /// Mark started: Queued/Submitted -> Running. Panics on bad transition
-    /// in debug builds (lifecycle invariant).
+    /// in debug builds (lifecycle invariant). `start` keeps the *first*
+    /// start (wait-time metric); `last_start` tracks the current segment
+    /// and the incarnation counter invalidates any stale completion.
     pub fn mark_started(&mut self, now: SimTime) {
         debug_assert!(
             matches!(self.state, JobState::Queued | JobState::Submitted),
@@ -153,7 +189,11 @@ impl Job {
             self.state
         );
         self.state = JobState::Running;
-        self.start = Some(now);
+        if self.start.is_none() {
+            self.start = Some(now);
+        }
+        self.last_start = Some(now);
+        self.incarnation += 1;
     }
 
     /// Mark completed: Running -> Completed.
@@ -166,6 +206,63 @@ impl Job {
         );
         self.state = JobState::Completed;
         self.end = Some(now);
+        if let Some(s) = self.last_start {
+            self.executed = self.executed + (now - s);
+        }
+        self.remaining = SimDuration::ZERO;
+    }
+
+    /// Record an interruption of the current run segment at `now`
+    /// (Running -> Queued; the driver re-enqueues the job).
+    ///
+    /// With `keep_progress` (checkpointed eviction) the work done so far
+    /// survives and `overhead` extra ticks (checkpoint + restart cost)
+    /// are charged onto the remaining work. Without it (node failure, or
+    /// kill-mode eviction) all progress since the segment start is lost
+    /// and the job starts over from its full runtime.
+    ///
+    /// Accounting invariant (property-tested in rust/tests/prop_faults.rs):
+    /// at completion, `executed == runtime + overhead + lost`.
+    pub fn record_interruption(&mut self, now: SimTime, keep_progress: bool, overhead: SimDuration) {
+        debug_assert!(
+            self.state == JobState::Running,
+            "job {} interrupted from state {:?}",
+            self.id,
+            self.state
+        );
+        let seg_start = self.last_start.expect("running job without a segment start");
+        let elapsed = now - seg_start;
+        self.executed = self.executed + elapsed;
+        if keep_progress {
+            self.remaining = (self.remaining - elapsed) + overhead;
+            self.overhead = self.overhead + overhead;
+        } else {
+            // Starting over: everything executed so far that is not
+            // already booked as overhead is lost work. (Assigning rather
+            // than accumulating keeps the completion invariant exact
+            // across mixed checkpoint/kill histories.)
+            self.lost = self.executed - self.overhead;
+            self.remaining = self.runtime;
+        }
+        self.state = JobState::Submitted;
+        self.last_start = None;
+    }
+
+    /// Runtime estimate for the *next* run segment.
+    ///
+    /// Fresh jobs and jobs that start over after a kill (no checkpoint
+    /// exists) carry only the user estimate — the scheduler must not see
+    /// the actual runtime. A checkpoint-restored job's remaining work
+    /// *is* known to the system (the checkpoint records its progress),
+    /// so the restore segment uses `remaining`, the standard simulator
+    /// treatment of checkpoint metadata.
+    pub fn est_remaining(&self) -> SimDuration {
+        let interrupted = self.preempt_count > 0 || self.fail_count > 0;
+        if interrupted && self.remaining != self.runtime {
+            self.remaining
+        } else {
+            self.est_runtime
+        }
     }
 
     /// TaskEvent serialization (paper Listing 1): encode the full event
@@ -189,11 +286,24 @@ impl Job {
             ("group", Json::num(self.group as f64)),
             ("state", Json::str(state)),
         ];
+        if self.priority != 0 {
+            pairs.push(("priority", Json::num(self.priority as f64)));
+        }
         if let Some(s) = self.start {
             pairs.push(("start", Json::num(s.ticks() as f64)));
         }
         if let Some(e) = self.end {
             pairs.push(("end", Json::num(e.ticks() as f64)));
+        }
+        // Fault/preemption lifecycle, only when the job was touched —
+        // untouched jobs keep the paper's original TaskEvent shape.
+        if self.preempt_count != 0 || self.fail_count != 0 {
+            pairs.push(("remaining", Json::num(self.remaining.ticks() as f64)));
+            pairs.push(("executed", Json::num(self.executed.ticks() as f64)));
+            pairs.push(("overhead", Json::num(self.overhead.ticks() as f64)));
+            pairs.push(("lost", Json::num(self.lost.ticks() as f64)));
+            pairs.push(("preempt_count", Json::num(self.preempt_count as f64)));
+            pairs.push(("fail_count", Json::num(self.fail_count as f64)));
         }
         Json::obj(pairs)
     }
@@ -207,18 +317,29 @@ impl Job {
             "rejected" => JobState::Rejected,
             _ => JobState::Submitted,
         };
+        let runtime = SimDuration(v.get_u64_or("runtime", 0));
+        let start = v.get("start").and_then(|x| x.as_u64()).map(SimTime);
         Some(Job {
             id: v.get("id")?.as_u64()?,
             submit: SimTime(v.get("submit")?.as_u64()?),
             cores: v.get("cores")?.as_u64()?,
             memory_mb: v.get_u64_or("memory_mb", 0),
             est_runtime: SimDuration(v.get_u64_or("est_runtime", 0)),
-            runtime: SimDuration(v.get_u64_or("runtime", 0)),
+            runtime,
             user: v.get_u64_or("user", 0) as u32,
             group: v.get_u64_or("group", 0) as u32,
+            priority: v.get_u64_or("priority", 0) as u8,
             state,
-            start: v.get("start").and_then(|x| x.as_u64()).map(SimTime),
+            start,
             end: v.get("end").and_then(|x| x.as_u64()).map(SimTime),
+            last_start: if state == JobState::Running { start } else { None },
+            remaining: SimDuration(v.get_u64_or("remaining", runtime.ticks())),
+            executed: SimDuration(v.get_u64_or("executed", 0)),
+            overhead: SimDuration(v.get_u64_or("overhead", 0)),
+            lost: SimDuration(v.get_u64_or("lost", 0)),
+            preempt_count: v.get_u64_or("preempt_count", 0) as u32,
+            fail_count: v.get_u64_or("fail_count", 0) as u32,
+            incarnation: 0,
         })
     }
 }
@@ -291,6 +412,80 @@ mod tests {
         assert!(Job::from_json(&Json::parse(r#"{"id": 1}"#).unwrap()).is_none());
         assert!(Job::from_json(&Json::parse(r#"{"id": -1, "submit": 0, "cores": 1}"#).unwrap())
             .is_none());
+    }
+
+    #[test]
+    fn checkpointed_interruption_keeps_progress_and_charges_overhead() {
+        let mut j = Job::simple(1, 0, 2, 100);
+        j.state = JobState::Queued;
+        j.mark_started(SimTime(0));
+        assert_eq!(j.incarnation, 1);
+        // Evicted at t=40 with 7 ticks of checkpoint+restart overhead.
+        j.record_interruption(SimTime(40), true, SimDuration(7));
+        assert_eq!(j.remaining, SimDuration(67)); // 100 - 40 + 7
+        assert_eq!(j.executed, SimDuration(40));
+        assert_eq!(j.overhead, SimDuration(7));
+        assert_eq!(j.lost, SimDuration::ZERO);
+        // Restart; second segment runs to completion.
+        j.state = JobState::Queued;
+        j.mark_started(SimTime(200));
+        assert_eq!(j.incarnation, 2);
+        assert_eq!(j.start, Some(SimTime(0)), "first start preserved");
+        assert_eq!(j.last_start, Some(SimTime(200)));
+        j.mark_completed(SimTime(200 + 67));
+        assert_eq!(j.executed, SimDuration(107));
+        // Invariant: executed == runtime + overhead + lost.
+        assert_eq!(
+            j.executed.ticks(),
+            j.runtime.ticks() + j.overhead.ticks() + j.lost.ticks()
+        );
+    }
+
+    #[test]
+    fn killed_interruption_loses_progress() {
+        let mut j = Job::simple(1, 0, 4, 50);
+        j.state = JobState::Queued;
+        j.mark_started(SimTime(10));
+        j.record_interruption(SimTime(40), false, SimDuration::ZERO);
+        assert_eq!(j.remaining, SimDuration(50), "full runtime must be redone");
+        assert_eq!(j.lost, SimDuration(30));
+        j.state = JobState::Queued;
+        j.mark_started(SimTime(100));
+        j.mark_completed(SimTime(150));
+        assert_eq!(j.executed, SimDuration(80));
+        assert_eq!(
+            j.executed.ticks(),
+            j.runtime.ticks() + j.overhead.ticks() + j.lost.ticks()
+        );
+    }
+
+    #[test]
+    fn mixed_checkpoint_then_kill_accounting_stays_exact() {
+        let mut j = Job::simple(1, 0, 1, 100);
+        j.state = JobState::Queued;
+        j.mark_started(SimTime(0));
+        j.record_interruption(SimTime(20), true, SimDuration(5)); // ckpt
+        j.state = JobState::Queued;
+        j.mark_started(SimTime(30));
+        j.record_interruption(SimTime(60), false, SimDuration::ZERO); // kill
+        j.state = JobState::Queued;
+        j.mark_started(SimTime(70));
+        j.mark_completed(SimTime(170));
+        assert_eq!(
+            j.executed.ticks(),
+            j.runtime.ticks() + j.overhead.ticks() + j.lost.ticks()
+        );
+    }
+
+    #[test]
+    fn est_remaining_switches_after_interruption() {
+        let mut j = Job::with_estimate(1, 0, 1, 100, 500);
+        assert_eq!(j.est_remaining(), SimDuration(500));
+        j.state = JobState::Queued;
+        j.mark_started(SimTime(0));
+        j.record_interruption(SimTime(30), true, SimDuration(0));
+        j.preempt_count += 1; // the driver tags the reason
+        assert_eq!(j.est_remaining(), SimDuration(70));
     }
 
     #[test]

@@ -14,6 +14,19 @@
 //!   job lifecycle, per-node core/memory accounting (paper Algorithm 1),
 //!   and the five scheduling algorithms (FCFS, SJF, LJF, FCFS+BestFit,
 //!   FCFS+Backfilling/EASY).
+//! * fault/preemption/reservation subsystem (beyond the paper; AccaSim-
+//!   and Reuther-et-al-style scenario diversity): node lifecycle states
+//!   (`Up`/`Draining`/`Down`/`Reserved`) with seeded exponential
+//!   MTBF/MTTR failure injection ([`sim::FaultInjector`]), advance
+//!   reservations, and a preemption-capable policy layer
+//!   ([`sched::PreemptiveScheduler`]) that composes checkpoint/restart
+//!   or kill-and-requeue eviction with every scheduling algorithm.
+//!   Config surface: `faults.{mtbf,mttr,seed,until}`,
+//!   `preemption.{mode,checkpoint_overhead,restart_overhead,
+//!   starvation_threshold}`, `reservations[{start,duration,nodes}]`.
+//!   New outputs: preemption/requeue/failure/repair counts, lost and
+//!   checkpointed work (core-seconds), and goodput-based effective
+//!   utilization (see `sim::SimReport`).
 //! * [`workflow`] — the workflow-management component (paper §3): DAG task
 //!   dependencies, JSON input spec, ready-set scheduling, and generators
 //!   for the Pegasus workflows the paper evaluates (Montage/Galactic

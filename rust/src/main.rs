@@ -14,9 +14,10 @@
 
 use anyhow::{bail, Context, Result};
 use sst_sched::config::{ExperimentConfig, WorkloadSource};
+use sst_sched::core::time::SimDuration;
 use sst_sched::harness;
 use sst_sched::runtime::Accel;
-use sst_sched::sched::Policy;
+use sst_sched::sched::{Policy, PreemptionConfig, PreemptionMode};
 use sst_sched::sim::Simulation;
 use sst_sched::trace::synth::stats;
 use sst_sched::util::cli::Args;
@@ -32,6 +33,11 @@ USAGE:
                 [--jobs N] [--policy fcfs|sjf|ljf|fcfs-bestfit|fcfs-backfill|cons-backfill]
                 [--accel native|xla] [--ranks R] [--lookahead SECONDS]
                 [--seed S] [--arrival-scale F] [--config experiment.json]
+                [--mtbf S] [--mttr S] [--faults-seed S] [--faults-until T]
+                [--preemption none|kill|checkpoint] [--ckpt-overhead S]
+                [--restart-overhead S] [--starvation S] [--priority-bands N]
+  sst-sched faults [--workload ...] [--jobs N] [--mtbf S] [--mttr S] ...
+                # policy x preemption-mode comparison on one failure trace
   sst-sched fig <3a|3b|4a|4b|5a|5b|6|7> [--jobs N] [--seed S]
   sst-sched workflow (--spec wf.json | --gen sipht|montage|galactic|
                       epigenomics|cybershake|ligo) [--scale K] [--cpu C]
@@ -54,6 +60,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
+        "faults" => cmd_faults(&args),
         "fig" => cmd_fig(&args),
         "workflow" => cmd_workflow(&args),
         "trace-info" => cmd_trace_info(&args),
@@ -111,6 +118,23 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     if let Some(c) = args.get("cores") {
         cfg.cores_per_node = Some(c.parse().context("--cores expects an integer")?);
     }
+    // Fault/preemption knobs (fault subsystem).
+    cfg.faults.mtbf = args.f64_or("mtbf", cfg.faults.mtbf)?;
+    cfg.faults.mttr = args.f64_or("mttr", cfg.faults.mttr)?;
+    cfg.faults.seed = args.u64_or("faults-seed", cfg.faults.seed)?;
+    if let Some(u) = args.get("faults-until") {
+        cfg.faults.until = Some(u.parse().context("--faults-until expects an integer")?);
+    }
+    if let Some(m) = args.get("preemption") {
+        cfg.preemption.mode = m.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    }
+    cfg.preemption.checkpoint_overhead =
+        SimDuration(args.u64_or("ckpt-overhead", cfg.preemption.checkpoint_overhead.ticks())?);
+    cfg.preemption.restart_overhead =
+        SimDuration(args.u64_or("restart-overhead", cfg.preemption.restart_overhead.ticks())?);
+    cfg.preemption.starvation_threshold =
+        SimDuration(args.u64_or("starvation", cfg.preemption.starvation_threshold.ticks())?);
+    cfg.priority_bands = args.u64_or("priority-bands", cfg.priority_bands as u64)? as u8;
     Ok(cfg)
 }
 
@@ -127,11 +151,19 @@ fn cmd_run(args: &Args) -> Result<()> {
         workload.offered_load()
     );
     if cfg.ranks > 1 {
-        let rep = sst_sched::parallel::run_jobs_parallel(
+        let opts = sst_sched::parallel::RankSimOpts {
+            seed: cfg.seed,
+            faults: cfg.faults,
+            preemption: cfg.preemption,
+            reservations: cfg.reservations.clone(),
+        };
+        let rep = sst_sched::parallel::run_jobs_parallel_opts(
             &workload,
             cfg.policy,
             cfg.ranks,
             cfg.lookahead,
+            &opts,
+            true,
         );
         println!("ranks             {}", rep.ranks);
         println!("windows           {}", rep.windows);
@@ -143,7 +175,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         return Ok(());
     }
     let accel: Accel = cfg.accel.parse().map_err(|e: String| anyhow::anyhow!(e))?;
-    let mut sim = Simulation::new(workload, cfg.policy).with_seed(cfg.seed);
+    let mut sim = Simulation::new(workload, cfg.policy)
+        .with_seed(cfg.seed)
+        .with_faults(cfg.faults)
+        .with_preemption(cfg.preemption)
+        .with_reservations(cfg.reservations.clone());
     if cfg.policy == Policy::FcfsBackfill {
         let sched = sst_sched::runtime::backfill_with_accel(accel)?;
         println!("scorer backend    {}", sched.scorer_backend());
@@ -155,6 +191,55 @@ fn cmd_run(args: &Args) -> Result<()> {
     harness::print_run_report(&rep);
     println!("wall time         {:.1} ms", wall.as_secs_f64() * 1e3);
     println!("event rate        {:.0} ev/s", rep.events as f64 / wall.as_secs_f64().max(1e-9));
+    Ok(())
+}
+
+/// Compare scheduling policies with and without preemption under one
+/// seeded failure trace (fault/preemption subsystem).
+fn cmd_faults(args: &Args) -> Result<()> {
+    let mut cfg = config_from(args)?;
+    args.reject_unknown()?;
+    if !cfg.faults.enabled() {
+        // A faults comparison without faults is vacuous; give the demo
+        // sensible defaults (mean one failure per ~8 simulated hours).
+        cfg.faults.mtbf = 28_800.0;
+        cfg.faults.mttr = 3_600.0;
+    }
+    let workload = cfg.build_workload()?;
+    println!(
+        "workload {}: {} jobs on {} nodes x {} cores; faults mtbf={:.0}s mttr={:.0}s seed={}\n",
+        workload.name,
+        workload.jobs.len(),
+        workload.nodes,
+        workload.cores_per_node,
+        cfg.faults.mtbf,
+        cfg.faults.mttr,
+        cfg.faults.seed,
+    );
+    let ckpt = if cfg.preemption.enabled() {
+        cfg.preemption
+    } else {
+        PreemptionConfig {
+            mode: PreemptionMode::Checkpoint,
+            checkpoint_overhead: SimDuration(60),
+            restart_overhead: SimDuration(30),
+            starvation_threshold: SimDuration::ZERO,
+        }
+    };
+    let mut cases = vec![
+        (Policy::Fcfs, PreemptionConfig::default()),
+        (Policy::Fcfs, ckpt),
+        (Policy::FcfsBackfill, PreemptionConfig::default()),
+        (Policy::FcfsBackfill, ckpt),
+    ];
+    // An explicitly requested policy joins the comparison rather than
+    // being silently ignored.
+    if !matches!(cfg.policy, Policy::Fcfs | Policy::FcfsBackfill) {
+        cases.push((cfg.policy, PreemptionConfig::default()));
+        cases.push((cfg.policy, ckpt));
+    }
+    let rows = harness::fault_comparison(&workload, cfg.faults, &cfg.reservations, &cases);
+    harness::print_fault_rows(&rows);
     Ok(())
 }
 

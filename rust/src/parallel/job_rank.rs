@@ -6,10 +6,55 @@
 //! conservative runner provides the barrier-window execution whose cost
 //! (windows x barriers) is what limits speedup, as in SST.
 
-use crate::parallel::{run_parallel, run_parallel_modeled, ParallelReport, RankLogic, RankSummary, BARRIER_COST};
-use crate::sched::Policy;
-use crate::sim::{SimInstance, Simulation};
+use crate::parallel::{fnv1a, run_parallel, run_parallel_modeled, ParallelReport, RankLogic, RankSummary, BARRIER_COST};
+use crate::sched::{Policy, PreemptionConfig};
+use crate::sim::{FaultConfig, ReservationSpec, SimInstance, Simulation};
 use crate::trace::Workload;
+
+/// Per-rank simulation options for fault-aware parallel runs.
+///
+/// `faults` and `reservations` describe the *whole* cluster; the runner
+/// rescales them per rank so aggregate behavior matches the serial run
+/// of the same config: each of the R sub-clusters gets `mtbf x R`
+/// (preserving the total failure rate), a rank-derived injector seed
+/// (decorrelating failure instants across ranks), and
+/// `ceil(nodes / R)` of every reservation.
+#[derive(Debug, Clone)]
+pub struct RankSimOpts {
+    pub seed: u64,
+    pub faults: FaultConfig,
+    pub preemption: PreemptionConfig,
+    pub reservations: Vec<ReservationSpec>,
+}
+
+impl RankSimOpts {
+    /// The slice of this cluster-wide config that rank `i` of `ranks`
+    /// simulates (see the type docs).
+    fn for_rank(&self, i: usize, ranks: usize) -> RankSimOpts {
+        let r = ranks.max(1);
+        let mut o = self.clone();
+        o.faults.mtbf *= r as f64;
+        o.faults.seed = self
+            .faults
+            .seed
+            .wrapping_add((i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        for resv in &mut o.reservations {
+            resv.nodes = resv.nodes.div_ceil(r);
+        }
+        o
+    }
+}
+
+impl Default for RankSimOpts {
+    fn default() -> Self {
+        RankSimOpts {
+            seed: 1,
+            faults: FaultConfig::default(),
+            preemption: PreemptionConfig::default(),
+            reservations: Vec::new(),
+        }
+    }
+}
 
 /// Split a workload into `ranks` sub-workloads: jobs round-robin (keeping
 /// every stream's arrival mix representative), nodes divided evenly.
@@ -69,7 +114,34 @@ impl RankLogic for JobRank {
             .filter_map(|j| j.wait_time())
             .map(|w| w.as_f64())
             .sum();
-        RankSummary { events, end_time: end, completed, wait_sum }
+        // Digest the full per-job lifecycle so determinism tests can
+        // compare threaded vs modeled vs repeated runs byte-exactly.
+        let mut jobs: Vec<&crate::job::Job> = sched.completed.iter().collect();
+        jobs.sort_by_key(|j| j.id);
+        let mut buf = Vec::with_capacity(jobs.len() * 40);
+        for j in jobs {
+            for v in [
+                j.id,
+                j.start.map(|t| t.ticks()).unwrap_or(u64::MAX),
+                j.end.map(|t| t.ticks()).unwrap_or(u64::MAX),
+                j.executed.ticks(),
+                j.overhead.ticks(),
+                j.lost.ticks(),
+                j.preempt_count as u64,
+                j.fail_count as u64,
+            ] {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for v in [
+            sched.fault_counters.failures,
+            sched.fault_counters.repairs,
+            sched.fault_counters.preemptions,
+            sched.fault_counters.requeues,
+        ] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        RankSummary { events, end_time: end, completed, wait_sum, fingerprint: fnv1a(&buf) }
     }
 }
 
@@ -81,14 +153,7 @@ pub fn run_jobs_parallel(
     ranks: usize,
     lookahead: u64,
 ) -> ParallelReport {
-    let parts = partition_workload(workload, ranks);
-    let builders: Vec<_> = parts
-        .into_iter()
-        .map(|part| {
-            move |_i: usize| JobRank { inst: Simulation::new(part, policy).build() }
-        })
-        .collect();
-    run_parallel(builders, lookahead)
+    run_jobs_parallel_opts(workload, policy, ranks, lookahead, &RankSimOpts::default(), true)
 }
 
 /// Modeled-speedup variant (single-core hosts): see
@@ -99,14 +164,43 @@ pub fn run_jobs_parallel_modeled(
     ranks: usize,
     lookahead: u64,
 ) -> ParallelReport {
+    run_jobs_parallel_opts(workload, policy, ranks, lookahead, &RankSimOpts::default(), false)
+}
+
+/// Fault-aware parallel run: every rank simulates its partition under
+/// the same seeded failure model / preemption mode / reservations.
+/// `threaded` picks real worker threads vs the serial modeled runner —
+/// both produce identical results (asserted by the determinism tests).
+pub fn run_jobs_parallel_opts(
+    workload: &Workload,
+    policy: Policy,
+    ranks: usize,
+    lookahead: u64,
+    opts: &RankSimOpts,
+    threaded: bool,
+) -> ParallelReport {
     let parts = partition_workload(workload, ranks);
+    let n_parts = parts.len();
     let builders: Vec<_> = parts
         .into_iter()
-        .map(|part| {
-            move |_i: usize| JobRank { inst: Simulation::new(part, policy).build() }
+        .enumerate()
+        .map(|(i, part)| {
+            let opts = opts.for_rank(i, n_parts);
+            move |_i: usize| JobRank {
+                inst: Simulation::new(part, policy)
+                    .with_seed(opts.seed)
+                    .with_faults(opts.faults)
+                    .with_preemption(opts.preemption)
+                    .with_reservations(opts.reservations)
+                    .build(),
+            }
         })
         .collect();
-    run_parallel_modeled(builders, lookahead, BARRIER_COST)
+    if threaded {
+        run_parallel(builders, lookahead)
+    } else {
+        run_parallel_modeled(builders, lookahead, BARRIER_COST)
+    }
 }
 
 #[cfg(test)]

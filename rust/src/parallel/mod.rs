@@ -19,7 +19,10 @@
 pub mod job_rank;
 pub mod workflow_rank;
 
-pub use job_rank::{partition_workload, run_jobs_parallel, run_jobs_parallel_modeled};
+pub use job_rank::{
+    partition_workload, run_jobs_parallel, run_jobs_parallel_modeled, run_jobs_parallel_opts,
+    RankSimOpts,
+};
 pub use workflow_rank::{run_workflow_parallel, run_workflow_parallel_modeled};
 
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -56,6 +59,20 @@ pub struct RankSummary {
     pub completed: u64,
     /// Sum of wait times (for aggregate means).
     pub wait_sum: f64,
+    /// Order-independent digest of the rank's results (0 when the rank
+    /// logic does not compute one). Byte-equal digests across thread
+    /// counts and runs are what the determinism regression tests assert.
+    pub fingerprint: u64,
+}
+
+/// FNV-1a, the crate-wide helper for result digests.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
 }
 
 /// Aggregate outcome of a parallel run.
@@ -335,6 +352,7 @@ mod tests {
                 end_time: self.clock,
                 completed: self.received.len() as u64,
                 wait_sum: 0.0,
+                fingerprint: 0,
             }
         }
     }

@@ -178,6 +178,7 @@ impl RankLogic for WorkflowRank {
             end_time: self.clock,
             completed: self.completed,
             wait_sum: self.wait_sum,
+            fingerprint: 0,
         }
     }
 }

@@ -13,6 +13,21 @@ pub use topology::Topology;
 
 use crate::job::{Job, JobId};
 
+/// Node lifecycle state (fault/reservation subsystem).
+///
+/// Only `Up` nodes accept new allocations. `Draining` nodes finish their
+/// running jobs but take no new work; `Down` nodes are failed (any
+/// occupant was killed when the failure hit); `Reserved` nodes are held
+/// idle for an advance reservation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum NodeState {
+    #[default]
+    Up,
+    Draining,
+    Down,
+    Reserved,
+}
+
 /// One compute node.
 #[derive(Debug, Clone)]
 pub struct Node {
@@ -21,11 +36,19 @@ pub struct Node {
     pub free_cores: u64,
     pub memory_mb: u64,
     pub free_memory_mb: u64,
+    pub state: NodeState,
 }
 
 impl Node {
     pub fn new(id: usize, cores: u64, memory_mb: u64) -> Node {
-        Node { id, cores, free_cores: cores, memory_mb, free_memory_mb: memory_mb }
+        Node {
+            id,
+            cores,
+            free_cores: cores,
+            memory_mb,
+            free_memory_mb: memory_mb,
+            state: NodeState::Up,
+        }
     }
 
     pub fn busy_cores(&self) -> u64 {
@@ -34,6 +57,11 @@ impl Node {
 
     pub fn is_idle(&self) -> bool {
         self.free_cores == self.cores
+    }
+
+    /// Whether the node accepts new allocations.
+    pub fn is_available(&self) -> bool {
+        self.state == NodeState::Up
     }
 }
 
@@ -68,11 +96,19 @@ impl Allocation {
 }
 
 /// The machine: a vector of nodes plus cached aggregates.
+///
+/// `free_cores` counts free cores on `Up` nodes only (the schedulable
+/// pool); `busy_cores` counts allocated cores on any node; `down_cores`
+/// counts the physical capacity of `Down` nodes. All three are cached and
+/// kept consistent by `allocate`/`release`/`set_node_state`
+/// (`check_invariants` cross-checks against the per-node truth).
 #[derive(Debug, Clone)]
 pub struct Cluster {
     nodes: Vec<Node>,
     total_cores: u64,
     free_cores: u64,
+    busy_cores: u64,
+    down_cores: u64,
 }
 
 impl Cluster {
@@ -82,7 +118,7 @@ impl Cluster {
         let nodes: Vec<Node> =
             (0..n).map(|i| Node::new(i, cores_per_node, mem_per_node)).collect();
         let total = cores_per_node * n as u64;
-        Cluster { nodes, total_cores: total, free_cores: total }
+        Cluster { nodes, total_cores: total, free_cores: total, busy_cores: 0, down_cores: 0 }
     }
 
     /// Heterogeneous cluster from explicit (cores, memory) pairs.
@@ -93,7 +129,7 @@ impl Cluster {
             .map(|(i, &(c, m))| Node::new(i, c, m))
             .collect();
         let total = nodes.iter().map(|n| n.cores).sum();
-        Cluster { nodes, total_cores: total, free_cores: total }
+        Cluster { nodes, total_cores: total, free_cores: total, busy_cores: 0, down_cores: 0 }
     }
 
     pub fn nodes(&self) -> &[Node] {
@@ -108,15 +144,22 @@ impl Cluster {
         self.total_cores
     }
 
+    /// Free cores on `Up` nodes (the schedulable pool).
     pub fn free_cores(&self) -> u64 {
         self.free_cores
     }
 
+    /// Cores currently allocated to jobs (on any node).
     pub fn busy_cores(&self) -> u64 {
-        self.total_cores - self.free_cores
+        self.busy_cores
     }
 
-    /// Fraction of cores busy, in [0, 1].
+    /// Physical cores on nodes that are not `Down`.
+    pub fn available_cores(&self) -> u64 {
+        self.total_cores - self.down_cores
+    }
+
+    /// Fraction of physical cores busy, in [0, 1].
     pub fn utilization(&self) -> f64 {
         if self.total_cores == 0 {
             0.0
@@ -125,14 +168,62 @@ impl Cluster {
         }
     }
 
+    /// Fraction of *non-failed* capacity busy (the paper-style metric an
+    /// operator watches during an outage): busy / (total - down).
+    pub fn effective_utilization(&self) -> f64 {
+        let avail = self.available_cores();
+        if avail == 0 {
+            0.0
+        } else {
+            self.busy_cores() as f64 / avail as f64
+        }
+    }
+
+    /// Change a node's lifecycle state, keeping the cached pools
+    /// consistent: a node leaving `Up` removes its free cores from the
+    /// schedulable pool, a node entering `Up` returns them.
+    pub fn set_node_state(&mut self, id: usize, new: NodeState) {
+        let old = self.nodes[id].state;
+        if old == new {
+            return;
+        }
+        if old == NodeState::Up {
+            self.free_cores -= self.nodes[id].free_cores;
+        }
+        if new == NodeState::Up {
+            self.free_cores += self.nodes[id].free_cores;
+        }
+        if old == NodeState::Down {
+            self.down_cores -= self.nodes[id].cores;
+        }
+        if new == NodeState::Down {
+            self.down_cores += self.nodes[id].cores;
+        }
+        self.nodes[id].state = new;
+        debug_assert!(self.check_invariants());
+    }
+
+    pub fn node_state(&self, id: usize) -> NodeState {
+        self.nodes[id].state
+    }
+
+    /// Node ids currently in `state`.
+    pub fn nodes_in_state(&self, state: NodeState) -> Vec<usize> {
+        self.nodes.iter().filter(|n| n.state == state).map(|n| n.id).collect()
+    }
+
     /// Nodes with at least one busy core (paper Fig 3(a) metric).
     pub fn occupied_nodes(&self) -> usize {
         self.nodes.iter().filter(|n| !n.is_idle()).count()
     }
 
     /// Per-node free cores as f32 (input to the XLA/native scorer).
+    /// Non-`Up` nodes report zero free so no backend can place on them.
     pub fn free_vec(&self) -> Vec<f32> {
-        self.nodes.iter().map(|n| n.free_cores as f32).collect()
+        self.nodes
+            .iter()
+            .map(|n| if n.is_available() { n.free_cores as f32 } else { 0.0 })
+            .collect()
     }
 
     /// Whether `job` could ever run on this machine.
@@ -169,11 +260,13 @@ impl Cluster {
         // Commit.
         for &(nid, c, m) in &plan {
             let n = &mut self.nodes[nid];
+            debug_assert!(n.is_available());
             debug_assert!(n.free_cores >= c && n.free_memory_mb >= m);
             n.free_cores -= c;
             n.free_memory_mb -= m;
         }
         self.free_cores -= job.cores;
+        self.busy_cores += job.cores;
         Some(Allocation { job_id: job.id, taken: plan })
     }
 
@@ -188,7 +281,7 @@ impl Cluster {
         // Single-node best fit.
         let mut best: Option<(u64, usize)> = None; // (slack, node)
         for n in &self.nodes {
-            if n.free_cores >= job.cores {
+            if n.is_available() && n.free_cores >= job.cores {
                 let mem = Self::mem_share(job.memory_mb, job.cores, job.cores);
                 if n.free_memory_mb < mem {
                     continue;
@@ -205,7 +298,7 @@ impl Cluster {
         }
         // Multi-node: smallest holes first (tightest packing).
         let mut order: Vec<usize> = (0..self.nodes.len())
-            .filter(|&i| self.nodes[i].free_cores > 0)
+            .filter(|&i| self.nodes[i].is_available() && self.nodes[i].free_cores > 0)
             .collect();
         order.sort_by_key(|&i| (self.nodes[i].free_cores, i));
         self.plan_in_order(job, order)
@@ -220,7 +313,7 @@ impl Cluster {
                 break;
             }
             let n = &self.nodes[nid];
-            if n.free_cores == 0 {
+            if !n.is_available() || n.free_cores == 0 {
                 continue;
             }
             let take = remaining.min(n.free_cores);
@@ -239,7 +332,9 @@ impl Cluster {
     }
 
     /// Return an allocation's resources to the pool (Algorithm 1,
-    /// deallocateResources).
+    /// deallocateResources). Cores on a node that has left `Up` since the
+    /// allocation go back to the node but not to the schedulable pool —
+    /// `set_node_state` already removed that node's free cores.
     pub fn release(&mut self, alloc: &Allocation) {
         for &(nid, c, m) in &alloc.taken {
             let n = &mut self.nodes[nid];
@@ -247,16 +342,33 @@ impl Cluster {
             n.free_memory_mb += m;
             debug_assert!(n.free_cores <= n.cores, "over-release on node {nid}");
             debug_assert!(n.free_memory_mb <= n.memory_mb);
+            if n.state == NodeState::Up {
+                self.free_cores += c;
+            }
+            self.busy_cores -= c;
         }
-        self.free_cores += alloc.cores();
         debug_assert!(self.free_cores <= self.total_cores);
     }
 
     /// Consistency check (used by tests and debug assertions): cached
-    /// aggregate equals the per-node sum.
+    /// aggregates equal the per-node sums.
     pub fn check_invariants(&self) -> bool {
-        let sum: u64 = self.nodes.iter().map(|n| n.free_cores).sum();
-        sum == self.free_cores
+        let free_up: u64 = self
+            .nodes
+            .iter()
+            .filter(|n| n.state == NodeState::Up)
+            .map(|n| n.free_cores)
+            .sum();
+        let busy: u64 = self.nodes.iter().map(|n| n.cores - n.free_cores).sum();
+        let down: u64 = self
+            .nodes
+            .iter()
+            .filter(|n| n.state == NodeState::Down)
+            .map(|n| n.cores)
+            .sum();
+        free_up == self.free_cores
+            && busy == self.busy_cores
+            && down == self.down_cores
             && self.free_cores <= self.total_cores
             && self.nodes.iter().all(|n| n.free_cores <= n.cores && n.free_memory_mb <= n.memory_mb)
     }
@@ -371,5 +483,66 @@ mod tests {
         let mut c = Cluster::heterogeneous(&[(4, 0), (8, 0)]);
         let _a = c.allocate(&job(1, 6), AllocPolicy::FirstFit).unwrap();
         assert_eq!(c.free_vec(), vec![0.0, 6.0]);
+    }
+
+    #[test]
+    fn down_node_leaves_pool_and_returns() {
+        let mut c = Cluster::homogeneous(2, 4, 0);
+        c.set_node_state(0, NodeState::Down);
+        assert_eq!(c.free_cores(), 4);
+        assert_eq!(c.available_cores(), 4);
+        assert_eq!(c.free_vec(), vec![0.0, 4.0]);
+        // Allocation must land entirely on the surviving node.
+        let a = c.allocate(&job(1, 4), AllocPolicy::FirstFit).unwrap();
+        assert_eq!(a.node_ids(), vec![1]);
+        assert!(c.allocate(&job(2, 1), AllocPolicy::FirstFit).is_none());
+        c.set_node_state(0, NodeState::Up);
+        assert_eq!(c.free_cores(), 4);
+        assert_eq!(c.available_cores(), 8);
+        c.release(&a);
+        assert_eq!(c.free_cores(), 8);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn draining_and_reserved_reject_new_work() {
+        for s in [NodeState::Draining, NodeState::Reserved] {
+            let mut c = Cluster::homogeneous(1, 4, 0);
+            c.set_node_state(0, s);
+            assert!(c.allocate(&job(1, 1), AllocPolicy::FirstFit).is_none());
+            assert!(c.allocate(&job(1, 1), AllocPolicy::BestFit).is_none());
+            assert_eq!(c.free_cores(), 0);
+            assert_eq!(c.available_cores(), 4, "{s:?} capacity is not failed");
+            assert!(c.check_invariants());
+        }
+    }
+
+    #[test]
+    fn release_onto_down_node_stays_out_of_pool() {
+        let mut c = Cluster::homogeneous(2, 4, 0);
+        let a = c.allocate(&job(1, 4), AllocPolicy::FirstFit).unwrap();
+        assert_eq!(a.node_ids(), vec![0]);
+        c.set_node_state(0, NodeState::Down);
+        // The occupant is killed by the driver; its cores return to the
+        // node but not to the schedulable pool.
+        c.release(&a);
+        assert_eq!(c.free_cores(), 4);
+        assert_eq!(c.busy_cores(), 0);
+        assert!(c.check_invariants());
+        c.set_node_state(0, NodeState::Up);
+        assert_eq!(c.free_cores(), 8);
+        assert!(c.check_invariants());
+    }
+
+    #[test]
+    fn effective_utilization_excludes_down_capacity() {
+        let mut c = Cluster::homogeneous(4, 4, 0);
+        let _a = c.allocate(&job(1, 4), AllocPolicy::FirstFit).unwrap();
+        assert_eq!(c.utilization(), 0.25);
+        assert_eq!(c.effective_utilization(), 0.25);
+        c.set_node_state(3, NodeState::Down);
+        assert_eq!(c.utilization(), 0.25);
+        assert!((c.effective_utilization() - 4.0 / 12.0).abs() < 1e-12);
+        assert_eq!(c.nodes_in_state(NodeState::Down), vec![3]);
     }
 }

@@ -11,8 +11,16 @@
 //! jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
 //! rejects; the text parser reassigns ids (see python/compile/aot.py).
 
+//! The PJRT path needs an `xla` binding crate that is not part of the
+//! offline crate set, so everything touching it is gated behind the
+//! `xla` cargo feature; the default build keeps the [`Accel`] selector
+//! and reports a clear error when an XLA backend is requested.
+
+#[cfg(feature = "xla")]
 use crate::sched::scorer::{QueueScorer, ScoreParams, Scores};
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "xla")]
+use anyhow::{bail, Context};
 
 /// Padded shapes baked into the artifact — keep in sync with
 /// python/compile/model.py (Q_PAD, N_PAD).
@@ -23,6 +31,7 @@ pub const N_PAD: usize = 512;
 pub const DEFAULT_ARTIFACT: &str = "artifacts/model.hlo.txt";
 
 /// XLA-backed queue scorer (PJRT CPU client).
+#[cfg(feature = "xla")]
 pub struct XlaScorer {
     /// Kept alive for the executable's lifetime.
     _client: xla::PjRtClient,
@@ -33,6 +42,7 @@ pub struct XlaScorer {
     pub calls: u64,
 }
 
+#[cfg(feature = "xla")]
 impl XlaScorer {
     /// Load and compile the artifact at `path`.
     pub fn load(path: &str) -> Result<XlaScorer> {
@@ -132,6 +142,7 @@ impl XlaScorer {
     }
 }
 
+#[cfg(feature = "xla")]
 impl QueueScorer for XlaScorer {
     fn score(
         &mut self,
@@ -155,6 +166,7 @@ impl QueueScorer for XlaScorer {
 /// native implementation and only large ones go to the artifact. Both
 /// backends produce identical decisions (xla_parity tests), so the
 /// crossover is purely a latency knob.
+#[cfg(feature = "xla")]
 pub struct HybridScorer {
     native: crate::sched::NativeScorer,
     xla: XlaScorer,
@@ -162,6 +174,7 @@ pub struct HybridScorer {
     pub threshold: usize,
 }
 
+#[cfg(feature = "xla")]
 impl HybridScorer {
     pub fn load_default() -> Result<HybridScorer> {
         Ok(HybridScorer {
@@ -177,6 +190,7 @@ impl HybridScorer {
     }
 }
 
+#[cfg(feature = "xla")]
 impl QueueScorer for HybridScorer {
     fn score(
         &mut self,
@@ -224,6 +238,7 @@ impl std::str::FromStr for Accel {
 }
 
 /// Build a backfill scheduler with the requested scorer backend.
+#[cfg(feature = "xla")]
 pub fn backfill_with_accel(accel: Accel) -> Result<crate::sched::BackfillScheduler> {
     Ok(match accel {
         Accel::Native => crate::sched::BackfillScheduler::new(),
@@ -236,8 +251,49 @@ pub fn backfill_with_accel(accel: Accel) -> Result<crate::sched::BackfillSchedul
     })
 }
 
+/// Without the `xla` feature only the native scorer is available; the
+/// XLA backends fail with an actionable message instead of a link error.
+#[cfg(not(feature = "xla"))]
+pub fn backfill_with_accel(accel: Accel) -> Result<crate::sched::BackfillScheduler> {
+    match accel {
+        Accel::Native => Ok(crate::sched::BackfillScheduler::new()),
+        Accel::Xla | Accel::Hybrid => Err(anyhow::anyhow!(
+            "this build has no XLA/PJRT support (rebuild with `--features xla` \
+             and a vendored `xla` crate); use --accel native"
+        )),
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::*;
+
+    #[test]
+    fn accel_parses() {
+        assert_eq!("xla".parse::<Accel>().unwrap(), Accel::Xla);
+        assert_eq!("NATIVE".parse::<Accel>().unwrap(), Accel::Native);
+        assert_eq!("hybrid".parse::<Accel>().unwrap(), Accel::Hybrid);
+        assert!("gpu".parse::<Accel>().is_err());
+    }
+
+    #[test]
+    fn native_backend_always_builds() {
+        let s = backfill_with_accel(Accel::Native).unwrap();
+        assert_eq!(s.scorer_backend(), "native");
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn xla_backend_errors_without_feature() {
+        for accel in [Accel::Xla, Accel::Hybrid] {
+            let err = backfill_with_accel(accel).unwrap_err().to_string();
+            assert!(err.contains("xla"), "{err}");
+        }
+    }
+}
+
+#[cfg(all(test, feature = "xla"))]
+mod xla_tests {
     use super::*;
     use crate::sched::scorer::{NativeScorer, NOFIT};
 
@@ -247,14 +303,6 @@ mod tests {
 
     fn params() -> ScoreParams {
         ScoreParams { shadow_time: 120.0, extra_cores: 8.0, aging_weight: 1.0, waste_weight: 0.5 }
-    }
-
-    #[test]
-    fn accel_parses() {
-        assert_eq!("xla".parse::<Accel>().unwrap(), Accel::Xla);
-        assert_eq!("NATIVE".parse::<Accel>().unwrap(), Accel::Native);
-        assert_eq!("hybrid".parse::<Accel>().unwrap(), Accel::Hybrid);
-        assert!("gpu".parse::<Accel>().is_err());
     }
 
     #[test]

@@ -201,7 +201,7 @@ mod tests {
         // finishes by the shadow time -> backfilled.
         let mut c = Cluster::homogeneous(1, 8, 0);
         let ra = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
-        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100) }];
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100), start: SimTime(0), priority: 0 }];
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(1, 0, 8, 100, 100)); // head, blocked
         q.push(Job::with_estimate(2, 1, 4, 50, 50)); // backfill candidate
@@ -216,7 +216,7 @@ mod tests {
         // extra = 0 (head takes the whole machine) -> must NOT backfill.
         let mut c = Cluster::homogeneous(1, 8, 0);
         let _ra = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
-        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100) }];
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100), start: SimTime(0), priority: 0 }];
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(1, 0, 8, 100, 100));
         q.push(Job::with_estimate(2, 1, 4, 200, 200));
@@ -230,7 +230,7 @@ mod tests {
         // -> extra = 8-6 = 2. A 2-core long job may run indefinitely.
         let mut c = Cluster::homogeneous(1, 8, 0);
         let _ra = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
-        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100) }];
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100), start: SimTime(0), priority: 0 }];
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(1, 0, 6, 100, 100)); // head: blocked (only 4 free)
         q.push(Job::with_estimate(2, 1, 2, 10_000, 10_000)); // long but small
@@ -243,7 +243,7 @@ mod tests {
         // extra = 2; two 2-core long candidates: only the first backfills.
         let mut c = Cluster::homogeneous(1, 8, 0);
         let _ra = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
-        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100) }];
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100), start: SimTime(0), priority: 0 }];
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(1, 0, 6, 100, 100)); // head
         q.push(Job::with_estimate(2, 1, 2, 10_000, 10_000));
@@ -299,7 +299,7 @@ mod tests {
         // older one wins the single slot because aging raises priority.
         let mut c = Cluster::homogeneous(1, 8, 0);
         let _ra = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
-        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100) }];
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100), start: SimTime(0), priority: 0 }];
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(1, 0, 6, 100, 100)); // head
         q.push(Job::with_estimate(3, 50, 2, 10_000, 10_000)); // newer first in queue

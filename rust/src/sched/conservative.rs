@@ -182,7 +182,7 @@ mod tests {
     fn starts_only_jobs_with_immediate_slots() {
         let mut c = Cluster::homogeneous(1, 8, 0);
         let _r = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
-        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100) }];
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100), start: SimTime(0), priority: 0 }];
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(1, 0, 8, 100, 100)); // reserved at t=100
         q.push(Job::with_estimate(2, 1, 4, 50, 50)); // fits now & by t=100
@@ -203,7 +203,7 @@ mod tests {
         // reservation must not start.
         let mut c = Cluster::homogeneous(1, 8, 0);
         let _r = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
-        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100) }];
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100), start: SimTime(0), priority: 0 }];
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(1, 0, 6, 100, 100)); // reserved t=100 (extra 2)
         q.push(Job::with_estimate(2, 1, 2, 300, 300)); // reserved t=100..? fits extra at 100

@@ -14,6 +14,7 @@ pub mod bestfit;
 pub mod conservative;
 pub mod fcfs;
 pub mod ljf;
+pub mod preempt;
 pub mod scorer;
 pub mod sjf;
 
@@ -22,6 +23,7 @@ pub use conservative::ConservativeScheduler;
 pub use bestfit::BestFitScheduler;
 pub use fcfs::FcfsScheduler;
 pub use ljf::LjfScheduler;
+pub use preempt::{PreemptionConfig, PreemptionMode, PreemptiveScheduler};
 pub use scorer::{NativeScorer, QueueScorer, ScoreParams, Scores, NOFIT, SPAN_COST};
 pub use sjf::SjfScheduler;
 
@@ -30,7 +32,8 @@ use crate::job::{JobId, WaitQueue};
 use crate::resources::{Allocation, Cluster};
 use std::str::FromStr;
 
-/// What the scheduler knows about a running job (for shadow-time math).
+/// What the scheduler knows about a running job (for shadow-time math and
+/// eviction decisions).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RunningJob {
     pub id: JobId,
@@ -38,6 +41,11 @@ pub struct RunningJob {
     /// Estimated end = start + user estimate (backfilling trusts estimates,
     /// not actual runtimes — it cannot see the future).
     pub est_end: SimTime,
+    /// Start of the current run segment (eviction prefers the youngest
+    /// segments — least sunk work).
+    pub start: SimTime,
+    /// Job priority; preemption only ever evicts strictly lower values.
+    pub priority: u8,
 }
 
 /// Scheduler input for one invocation.
@@ -54,6 +62,14 @@ pub trait Scheduler {
     /// Decide which queued jobs start now; allocations are committed on
     /// `cluster` and returned in decision order.
     fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation>;
+
+    /// Phase 0 of a dispatch round: running jobs this policy wants
+    /// evicted *before* allocation (preemption-capable policies only —
+    /// see [`PreemptiveScheduler`]). The driver checkpoints/requeues the
+    /// victims, then calls [`Scheduler::schedule`] on the freed cluster.
+    fn preempt(&mut self, _input: &SchedInput<'_>, _cluster: &Cluster) -> Vec<JobId> {
+        Vec::new()
+    }
 
     /// Whether the algorithm reads `SchedInput::running` (backfilling
     /// needs the release profile; the blocking disciplines do not). The

@@ -1,0 +1,311 @@
+//! Preemption-capable policy layer (fault/preemption subsystem).
+//!
+//! Real HPC schedulers bridge batch and interactive workloads by letting
+//! high-priority work evict low-priority work under a checkpoint/restart
+//! contract (Reuther et al. 2017); simulators become research vehicles
+//! once dispatching decisions can be revisited like this (AccaSim,
+//! Galleguillos et al. 2018). [`PreemptiveScheduler`] adds that layer on
+//! top of *any* existing [`Scheduler`] — FCFS, SJF, LJF, BestFit, EASY
+//! and conservative backfilling all compose with it unchanged:
+//!
+//! * the inner policy keeps making the start decisions;
+//! * before each round, the wrapper may name running victims to evict
+//!   (`Scheduler::preempt`) when the oldest eligible waiting job has
+//!   starved past a threshold and strictly lower-priority work occupies
+//!   the cores it needs;
+//! * the simulation driver (not this module) owns the actual eviction:
+//!   checkpoint/requeue the victims, charge the overheads from
+//!   [`PreemptionConfig`], then run the inner policy on the freed
+//!   cluster. The driver reuses the same config to decide what happens
+//!   to jobs hit by node failures and advance reservations.
+
+use crate::core::time::SimDuration;
+use crate::job::JobId;
+use crate::resources::Cluster;
+use crate::sched::{SchedInput, Scheduler};
+
+/// What eviction does to a running job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PreemptionMode {
+    /// No planned eviction; jobs killed by failures lose all progress.
+    #[default]
+    None,
+    /// Evict by killing: the victim requeues and starts over. Failure
+    /// victims also start over.
+    Kill,
+    /// Checkpoint/restart: evicted jobs keep their progress and are
+    /// charged `checkpoint_overhead + restart_overhead` extra ticks;
+    /// failure victims resume from the periodic checkpoint for
+    /// `restart_overhead` (the fault-tolerance contract of Reuther et
+    /// al. 2017's preemption mechanisms).
+    Checkpoint,
+}
+
+impl PreemptionMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PreemptionMode::None => "none",
+            PreemptionMode::Kill => "kill",
+            PreemptionMode::Checkpoint => "checkpoint",
+        }
+    }
+}
+
+impl std::str::FromStr for PreemptionMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" => Ok(PreemptionMode::None),
+            "kill" => Ok(PreemptionMode::Kill),
+            "checkpoint" | "ckpt" => Ok(PreemptionMode::Checkpoint),
+            other => Err(format!(
+                "unknown preemption mode {other:?} (expected none|kill|checkpoint)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for PreemptionMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Knobs of the preemption layer (config surface `preemption.*`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PreemptionConfig {
+    pub mode: PreemptionMode,
+    /// Ticks charged for writing a checkpoint at eviction.
+    pub checkpoint_overhead: SimDuration,
+    /// Ticks charged for restoring from the checkpoint at restart.
+    pub restart_overhead: SimDuration,
+    /// Evict for a waiting job only after it has starved this long
+    /// (ticks); 0 disables starvation-driven eviction, leaving only
+    /// failure- and reservation-driven preemption active.
+    pub starvation_threshold: SimDuration,
+}
+
+impl PreemptionConfig {
+    pub fn enabled(&self) -> bool {
+        self.mode != PreemptionMode::None
+    }
+
+    /// Whether evicted jobs keep their progress.
+    pub fn keeps_progress(&self) -> bool {
+        self.mode == PreemptionMode::Checkpoint
+    }
+
+    /// Total overhead charged per eviction (zero in kill mode — the
+    /// price there is the lost progress itself).
+    pub fn eviction_overhead(&self) -> SimDuration {
+        match self.mode {
+            PreemptionMode::Checkpoint => self.checkpoint_overhead + self.restart_overhead,
+            _ => SimDuration::ZERO,
+        }
+    }
+}
+
+/// Wraps any scheduler with starvation-driven eviction.
+pub struct PreemptiveScheduler {
+    inner: Box<dyn Scheduler>,
+    name: &'static str,
+    cfg: PreemptionConfig,
+    /// Thrash guard: the starver the last eviction round paid for. An
+    /// inner policy that hands the freed cores to *other* jobs (SJF
+    /// restarting the just-evicted shortest victim, say) must not buy
+    /// eviction after eviction for a starver it never starts: one round
+    /// per starvation episode. Cleared once the starver leaves the
+    /// queue (it started), so a later re-queue can earn a new round.
+    last_eviction: Option<JobId>,
+}
+
+impl PreemptiveScheduler {
+    pub fn new(inner: Box<dyn Scheduler>, cfg: PreemptionConfig) -> PreemptiveScheduler {
+        let name = inner.name();
+        PreemptiveScheduler { inner, name, cfg, last_eviction: None }
+    }
+}
+
+impl Scheduler for PreemptiveScheduler {
+    /// The policy identity stays the inner algorithm's; preemption is a
+    /// mode, reported separately by the simulation driver.
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<crate::resources::Allocation> {
+        self.inner.schedule(input, cluster)
+    }
+
+    fn preempt(&mut self, input: &SchedInput<'_>, cluster: &Cluster) -> Vec<JobId> {
+        if !self.cfg.enabled() || self.cfg.starvation_threshold == SimDuration::ZERO {
+            return Vec::new();
+        }
+        // The starving job: oldest waiting job that is feasible on the
+        // machine. (Queue order is arrival order.)
+        let Some(starving) = input.queue.iter().find(|j| cluster.feasible(j)) else {
+            return Vec::new();
+        };
+        if input.now - starving.submit < self.cfg.starvation_threshold {
+            return Vec::new();
+        }
+        if starving.cores <= cluster.free_cores() {
+            return Vec::new(); // it will start this round anyway
+        }
+        if let Some(id) = self.last_eviction {
+            if input.queue.get(id).is_none() {
+                // The job we last evicted for is no longer waiting — the
+                // eviction worked (or it completed); arm a new round.
+                self.last_eviction = None;
+            }
+        }
+        if self.last_eviction == Some(starving.id) {
+            return Vec::new(); // this starvation episode already had its round
+        }
+        // Candidate victims: strictly lower priority, youngest current
+        // segment first (least sunk work), ids as the final tie-break so
+        // the choice is deterministic.
+        let mut victims: Vec<_> = input
+            .running
+            .iter()
+            .filter(|r| r.priority < starving.priority)
+            .collect();
+        victims.sort_by(|a, b| {
+            a.priority
+                .cmp(&b.priority)
+                .then(b.start.cmp(&a.start))
+                .then(b.id.cmp(&a.id))
+        });
+        let mut freed = cluster.free_cores();
+        let mut chosen = Vec::new();
+        for v in victims {
+            if freed >= starving.cores {
+                break;
+            }
+            freed += v.cores;
+            chosen.push(v.id);
+        }
+        if freed >= starving.cores {
+            self.last_eviction = Some(starving.id);
+            chosen
+        } else {
+            Vec::new() // eviction would not unblock the starver; don't thrash
+        }
+    }
+
+    /// The wrapper itself only needs the running set while starvation
+    /// eviction can actually fire; otherwise defer to the inner policy
+    /// so e.g. preemptive FCFS keeps skipping the snapshot (§Perf).
+    fn uses_running_info(&self) -> bool {
+        self.cfg.starvation_threshold > SimDuration::ZERO || self.inner.uses_running_info()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::time::SimTime;
+    use crate::job::{Job, WaitQueue};
+    use crate::sched::{FcfsScheduler, RunningJob};
+
+    fn cfg(threshold: u64) -> PreemptionConfig {
+        PreemptionConfig {
+            mode: PreemptionMode::Checkpoint,
+            checkpoint_overhead: SimDuration(10),
+            restart_overhead: SimDuration(5),
+            starvation_threshold: SimDuration(threshold),
+        }
+    }
+
+    fn running(id: u64, cores: u64, start: u64, priority: u8) -> RunningJob {
+        RunningJob { id, cores, est_end: SimTime(start + 1000), start: SimTime(start), priority }
+    }
+
+    #[test]
+    fn mode_parses_and_roundtrips() {
+        for m in [PreemptionMode::None, PreemptionMode::Kill, PreemptionMode::Checkpoint] {
+            assert_eq!(m.as_str().parse::<PreemptionMode>().unwrap(), m);
+        }
+        assert_eq!("ckpt".parse::<PreemptionMode>().unwrap(), PreemptionMode::Checkpoint);
+        assert!("shoot".parse::<PreemptionMode>().is_err());
+    }
+
+    #[test]
+    fn eviction_overhead_by_mode() {
+        assert_eq!(cfg(1).eviction_overhead(), SimDuration(15));
+        let kill = PreemptionConfig { mode: PreemptionMode::Kill, ..cfg(1) };
+        assert_eq!(kill.eviction_overhead(), SimDuration::ZERO);
+        assert!(!PreemptionConfig::default().enabled());
+    }
+
+    #[test]
+    fn evicts_youngest_lowest_priority_until_starver_fits() {
+        // 8-core machine, fully busy with priority-0 work; a priority-2
+        // job starving past the threshold needs 4 cores.
+        let mut c = crate::resources::Cluster::homogeneous(2, 4, 0);
+        let a1 = c.allocate(&Job::simple(10, 0, 4, 1000), crate::resources::AllocPolicy::FirstFit).unwrap();
+        let a2 = c.allocate(&Job::simple(11, 0, 4, 1000), crate::resources::AllocPolicy::FirstFit).unwrap();
+        let _ = (a1, a2);
+        let mut q = WaitQueue::new();
+        let mut starver = Job::simple(1, 0, 4, 100);
+        starver.priority = 2;
+        q.push(starver);
+        let run = [running(10, 4, 0, 0), running(11, 4, 50, 0)];
+        let input = SchedInput { now: SimTime(500), queue: &q, running: &run };
+        let mut s = PreemptiveScheduler::new(Box::new(FcfsScheduler::new()), cfg(100));
+        // Youngest segment (job 11, started at 50) goes first, and one
+        // victim is enough for a 4-core starver.
+        assert_eq!(s.preempt(&input, &c), vec![11]);
+    }
+
+    #[test]
+    fn does_not_evict_equal_or_higher_priority() {
+        let mut c = crate::resources::Cluster::homogeneous(1, 4, 0);
+        let _a = c.allocate(&Job::simple(10, 0, 4, 1000), crate::resources::AllocPolicy::FirstFit).unwrap();
+        let mut q = WaitQueue::new();
+        q.push(Job::simple(1, 0, 4, 100)); // priority 0, same as victim
+        let run = [running(10, 4, 0, 0)];
+        let input = SchedInput { now: SimTime(500), queue: &q, running: &run };
+        let mut s = PreemptiveScheduler::new(Box::new(FcfsScheduler::new()), cfg(100));
+        assert!(s.preempt(&input, &c).is_empty());
+    }
+
+    #[test]
+    fn no_eviction_below_threshold_or_when_it_cannot_help() {
+        let mut c = crate::resources::Cluster::homogeneous(1, 4, 0);
+        let _a = c.allocate(&Job::simple(10, 0, 4, 1000), crate::resources::AllocPolicy::FirstFit).unwrap();
+        let mut q = WaitQueue::new();
+        let mut j = Job::simple(1, 450, 4, 100);
+        j.priority = 2;
+        q.push(j);
+        let run = [running(10, 4, 0, 0)];
+        let input = SchedInput { now: SimTime(500), queue: &q, running: &run };
+        let mut s = PreemptiveScheduler::new(Box::new(FcfsScheduler::new()), cfg(100));
+        // Waited only 50 < 100 threshold.
+        assert!(s.preempt(&input, &c).is_empty());
+
+        // Starved, but victims cannot free enough cores: 8-core ask on a
+        // 4-core machine is infeasible and must be skipped entirely.
+        let mut q2 = WaitQueue::new();
+        let mut big = Job::simple(2, 0, 8, 100);
+        big.priority = 2;
+        q2.push(big);
+        let input2 = SchedInput { now: SimTime(500), queue: &q2, running: &run };
+        assert!(s.preempt(&input2, &c).is_empty());
+    }
+
+    #[test]
+    fn wrapper_keeps_inner_name_and_decisions() {
+        let mut s = PreemptiveScheduler::new(Box::new(FcfsScheduler::new()), cfg(0));
+        assert_eq!(s.name(), "fcfs");
+        let mut c = crate::resources::Cluster::homogeneous(1, 4, 0);
+        let mut q = WaitQueue::new();
+        q.push(Job::simple(1, 0, 2, 10));
+        let input = SchedInput { now: SimTime(0), queue: &q, running: &[] };
+        // Threshold 0 disables starvation eviction entirely.
+        assert!(s.preempt(&input, &c).is_empty());
+        let allocs = s.schedule(&input, &mut c);
+        assert_eq!(allocs.len(), 1);
+    }
+}

@@ -1,12 +1,17 @@
-//! The simulation components (paper Fig 1).
+//! The simulation components (paper Fig 1), extended with the
+//! fault/preemption/reservation subsystem: the scheduler component owns
+//! every capacity transition (node failure/repair, reservation claims)
+//! and the job-interruption bookkeeping, while `sim::faults` only
+//! generates the timed stimuli.
 
 use crate::core::component::{Component, Ctx};
 use crate::core::event::{ComponentId, Priority};
 use crate::core::stats::TimeSeries;
-use crate::core::time::SimTime;
+use crate::core::time::{SimDuration, SimTime};
 use crate::job::{Job, JobId, WaitQueue};
-use crate::resources::{Allocation, Cluster};
-use crate::sched::{RunningJob, SchedInput, Scheduler};
+use crate::resources::{Allocation, Cluster, NodeState};
+use crate::sched::{PreemptionConfig, RunningJob, SchedInput, Scheduler};
+use crate::sim::faults::ReservationSpec;
 use crate::sim::Ev;
 use std::any::Any;
 use std::collections::HashMap;
@@ -73,9 +78,47 @@ impl Component<Ev> for JobSource {
     }
 }
 
+/// Counters of the fault/preemption/reservation subsystem, all zero for
+/// fault-free runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Node failures applied.
+    pub failures: u64,
+    /// Node repairs applied.
+    pub repairs: u64,
+    /// Planned evictions (policy- or reservation-driven).
+    pub preemptions: u64,
+    /// Failure kills that sent a running job back to the queue.
+    pub requeues: u64,
+    /// Reservations that came due.
+    pub reservations_started: u64,
+    /// Claimed nodes that had to drain because preemption was off.
+    pub reservations_degraded: u64,
+    /// Requested reservation nodes that could not be claimed at all
+    /// (not enough Up, unclaimed nodes when the reservation came due).
+    pub reservations_short_nodes: u64,
+    /// Times a running job was observed on a non-`Up` node (must stay 0;
+    /// audited after every capacity transition).
+    pub invariant_violations: u64,
+}
+
+/// Why a running job is being interrupted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum InterruptReason {
+    /// Node failure. Under `PreemptionMode::Checkpoint` jobs are
+    /// periodically checkpointed, so the victim resumes with its progress
+    /// intact for a `restart_overhead` charge; under any other mode the
+    /// unplanned kill loses all progress.
+    Failure,
+    /// Planned eviction: checkpointed under `PreemptionMode::Checkpoint`
+    /// (checkpoint + restart overhead), killed under `PreemptionMode::Kill`.
+    Eviction,
+}
+
 /// Job Scheduling + Resource Management (paper Fig 1): wait queue, the
 /// scheduling algorithm, cluster accounting, lifecycle bookkeeping and
-/// event-driven metric recording.
+/// event-driven metric recording — plus node lifecycle transitions and
+/// preemption for the fault subsystem.
 pub struct SchedulerComponent {
     pub cluster: Cluster,
     scheduler: Box<dyn Scheduler>,
@@ -90,6 +133,26 @@ pub struct SchedulerComponent {
     pub occupancy: TimeSeries,
     pub running_series: TimeSeries,
     pub util_series: TimeSeries,
+    /// (t, busy / non-failed cores) — fault subsystem metric.
+    pub effective_util_series: TimeSeries,
+    /// (t, non-failed cores) — denominator series for the goodput-based
+    /// mean effective utilization.
+    pub avail_series: TimeSeries,
+    /// Preemption knobs; also applied to failure and reservation kills.
+    pub preemption: PreemptionConfig,
+    /// Advance reservations (specs; claims happen when each comes due).
+    pub reservations: Vec<ReservationSpec>,
+    /// node id -> reservation index that currently claims it.
+    claimed: HashMap<usize, usize>,
+    pub fault_counters: FaultCounters,
+    /// Core-seconds of progress discarded by kills/failures.
+    pub lost_work: f64,
+    /// Core-seconds of checkpoint/restart overhead charged.
+    pub overhead_work: f64,
+    /// Earliest pending starvation-deadline dispatch timer (dispatches
+    /// are event-driven, so a starving job needs a timed wake-up for its
+    /// eviction round).
+    starvation_timer: Option<SimTime>,
 }
 
 impl SchedulerComponent {
@@ -107,6 +170,15 @@ impl SchedulerComponent {
             occupancy: TimeSeries::new(),
             running_series: TimeSeries::new(),
             util_series: TimeSeries::new(),
+            effective_util_series: TimeSeries::new(),
+            avail_series: TimeSeries::new(),
+            preemption: PreemptionConfig::default(),
+            reservations: Vec::new(),
+            claimed: HashMap::new(),
+            fault_counters: FaultCounters::default(),
+            lost_work: 0.0,
+            overhead_work: 0.0,
+            starvation_timer: None,
         }
     }
 
@@ -133,20 +205,233 @@ impl SchedulerComponent {
         self.occupancy.record(now, self.cluster.occupied_nodes() as f64);
         self.running_series.record(now, self.running.len() as f64);
         self.util_series.record(now, self.cluster.utilization());
+        self.effective_util_series.record(now, self.cluster.effective_utilization());
+        self.avail_series.record(now, self.cluster.available_cores() as f64);
+    }
+
+    fn snapshot_running(&self) -> Vec<RunningJob> {
+        self.running
+            .values()
+            .map(|(j, a, est_end)| RunningJob {
+                id: j.id,
+                cores: a.cores(),
+                est_end: *est_end,
+                start: j.last_start.unwrap_or(SimTime::ZERO),
+                priority: j.priority,
+            })
+            .collect()
+    }
+
+    /// Ids of running jobs whose allocation touches any node in `nodes`,
+    /// ascending (deterministic kill order).
+    fn occupants_of(&self, nodes: &[usize]) -> Vec<JobId> {
+        let mut ids: Vec<JobId> = self
+            .running
+            .iter()
+            .filter(|(_, (_, a, _))| a.taken.iter().any(|&(nid, _, _)| nodes.contains(&nid)))
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Interrupt a running job: release its cores, charge the accounting
+    /// for `reason`, and put it back in the wait queue (at the tail — a
+    /// preempted job re-queues like a fresh submission, as in AccaSim).
+    fn interrupt_job(&mut self, id: JobId, reason: InterruptReason, ctx: &mut Ctx<Ev>) {
+        let Some((mut job, alloc, _est)) = self.running.remove(&id) else {
+            return;
+        };
+        let now = ctx.now();
+        let cores = alloc.cores() as f64;
+        let elapsed = job.last_start.map(|s| now - s).unwrap_or(SimDuration::ZERO);
+        self.cluster.release(&alloc);
+        let keep_progress = self.preemption.keeps_progress();
+        let overhead = match (keep_progress, reason) {
+            (true, InterruptReason::Eviction) => self.preemption.eviction_overhead(),
+            // The periodic checkpoint already exists when a node dies;
+            // the resumed segment only pays the restore cost.
+            (true, InterruptReason::Failure) => self.preemption.restart_overhead,
+            (false, _) => SimDuration::ZERO,
+        };
+        job.record_interruption(now, keep_progress, overhead);
+        match reason {
+            InterruptReason::Failure => {
+                job.fail_count += 1;
+                self.fault_counters.requeues += 1;
+            }
+            InterruptReason::Eviction => {
+                job.preempt_count += 1;
+                self.fault_counters.preemptions += 1;
+            }
+        }
+        if keep_progress {
+            self.overhead_work += overhead.as_f64() * cores;
+        } else {
+            self.lost_work += elapsed.as_f64() * cores;
+        }
+        self.queue.push(job);
+        self.request_dispatch(ctx);
+    }
+
+    /// Count running jobs placed on nodes that no longer accept work —
+    /// must always be zero (`Draining` keeps its occupants on purpose;
+    /// only `Down` nodes may never host a running job).
+    fn audit_placements(&mut self) {
+        for (_, (_, a, _)) in self.running.iter() {
+            for &(nid, _, _) in &a.taken {
+                if self.cluster.node_state(nid) == NodeState::Down {
+                    self.fault_counters.invariant_violations += 1;
+                }
+            }
+        }
+    }
+
+    /// Apply a node failure: kill occupants, take the node down, and
+    /// schedule its repair.
+    fn fail_node(&mut self, victim_draw: u64, repair_after: SimDuration, ctx: &mut Ctx<Ev>) {
+        let mut candidates: Vec<usize> = (0..self.cluster.num_nodes())
+            .filter(|&i| self.cluster.node_state(i) != NodeState::Down)
+            .collect();
+        if candidates.is_empty() {
+            return; // whole machine already down; nothing to fail
+        }
+        let node = candidates.swap_remove((victim_draw % candidates.len() as u64) as usize);
+        self.fault_counters.failures += 1;
+        self.cluster.set_node_state(node, NodeState::Down);
+        for id in self.occupants_of(&[node]) {
+            self.interrupt_job(id, InterruptReason::Failure, ctx);
+        }
+        ctx.schedule_self(repair_after, Priority::COMPLETE, Ev::NodeUp { node });
+        self.audit_placements();
+        self.record_series(ctx.now());
+        if !self.queue.is_empty() {
+            self.request_dispatch(ctx);
+        }
+    }
+
+    /// Apply a node repair: the node rejoins as `Up`, or as `Reserved`
+    /// when a still-active reservation claims it.
+    fn repair_node(&mut self, node: usize, ctx: &mut Ctx<Ev>) {
+        self.fault_counters.repairs += 1;
+        let state = if self.claimed.contains_key(&node) {
+            NodeState::Reserved
+        } else {
+            NodeState::Up
+        };
+        self.cluster.set_node_state(node, state);
+        self.audit_placements();
+        self.record_series(ctx.now());
+        if !self.queue.is_empty() {
+            self.request_dispatch(ctx);
+        }
+    }
+
+    /// A reservation comes due: claim nodes (idle first, then least
+    /// loaded; ids break ties). With preemption the occupants are
+    /// evicted and the nodes go straight to `Reserved`; without it the
+    /// occupied ones drain — they finish their jobs but accept no new
+    /// work, degrading the reservation.
+    fn start_reservation(&mut self, res: usize, ctx: &mut Ctx<Ev>) {
+        self.fault_counters.reservations_started += 1;
+        let want = self.reservations[res].nodes;
+        let mut up: Vec<usize> = (0..self.cluster.num_nodes())
+            .filter(|&i| {
+                self.cluster.node_state(i) == NodeState::Up && !self.claimed.contains_key(&i)
+            })
+            .collect();
+        up.sort_by_key(|&i| (self.cluster.nodes()[i].busy_cores(), i));
+        let claim: Vec<usize> = up.into_iter().take(want).collect();
+        // A shortfall (failed or already-claimed nodes) must be visible
+        // to the operator, not silently truncated.
+        self.fault_counters.reservations_short_nodes += (want - claim.len()) as u64;
+        if self.preemption.enabled() {
+            for id in self.occupants_of(&claim) {
+                self.interrupt_job(id, InterruptReason::Eviction, ctx);
+            }
+        }
+        for &node in &claim {
+            self.claimed.insert(node, res);
+            if self.cluster.nodes()[node].is_idle() {
+                self.cluster.set_node_state(node, NodeState::Reserved);
+            } else {
+                self.cluster.set_node_state(node, NodeState::Draining);
+                self.fault_counters.reservations_degraded += 1;
+            }
+        }
+        self.audit_placements();
+        self.record_series(ctx.now());
+    }
+
+    /// A reservation expires: its nodes (wherever they drained or were
+    /// repaired to) return to service.
+    fn end_reservation(&mut self, res: usize, ctx: &mut Ctx<Ev>) {
+        let nodes: Vec<usize> = self
+            .claimed
+            .iter()
+            .filter(|&(_, &r)| r == res)
+            .map(|(&n, _)| n)
+            .collect();
+        for node in nodes {
+            self.claimed.remove(&node);
+            if self.cluster.node_state(node) != NodeState::Down {
+                self.cluster.set_node_state(node, NodeState::Up);
+            }
+        }
+        self.audit_placements();
+        self.record_series(ctx.now());
+        if !self.queue.is_empty() {
+            self.request_dispatch(ctx);
+        }
+    }
+
+    /// A draining node whose last occupant left flips to `Reserved` for
+    /// the reservation that claimed it.
+    fn settle_drained_nodes(&mut self, alloc_nodes: &[usize]) {
+        for &node in alloc_nodes {
+            if self.claimed.contains_key(&node)
+                && self.cluster.node_state(node) == NodeState::Draining
+                && self.cluster.nodes()[node].is_idle()
+            {
+                self.cluster.set_node_state(node, NodeState::Reserved);
+            }
+        }
     }
 
     fn dispatch(&mut self, ctx: &mut Ctx<Ev>) {
         self.dispatch_pending = false;
         self.dispatches += 1;
         let now = ctx.now();
-        let running_info: Vec<RunningJob> = if self.scheduler.uses_running_info() {
-            self.running
-                .values()
-                .map(|(j, a, est_end)| RunningJob { id: j.id, cores: a.cores(), est_end: *est_end })
-                .collect()
-        } else {
-            Vec::new()
-        };
+        // Phase 0 — policy-driven preemption (fault subsystem): the
+        // scheduler may evict strictly lower-priority running jobs for a
+        // starving waiting job before the allocation pass. The snapshot
+        // is built at most once per round and reused by the allocation
+        // pass unless evictions invalidated it (snapshots are O(running)
+        // on the DES hot path).
+        let evictions_possible = self.preemption.enabled()
+            && self.preemption.starvation_threshold > SimDuration::ZERO;
+        let mut running_info: Vec<RunningJob> =
+            if evictions_possible || self.scheduler.uses_running_info() {
+                self.snapshot_running()
+            } else {
+                Vec::new()
+            };
+        if evictions_possible {
+            let victims = {
+                let input = SchedInput { now, queue: &self.queue, running: &running_info };
+                self.scheduler.preempt(&input, &self.cluster)
+            };
+            if !victims.is_empty() {
+                for id in victims {
+                    self.interrupt_job(id, InterruptReason::Eviction, ctx);
+                }
+                running_info = if self.scheduler.uses_running_info() {
+                    self.snapshot_running()
+                } else {
+                    Vec::new()
+                };
+            }
+        }
         let allocations = {
             let input = SchedInput { now, queue: &self.queue, running: &running_info };
             self.scheduler.schedule(&input, &mut self.cluster)
@@ -157,20 +442,52 @@ impl SchedulerComponent {
                 .remove(alloc.job_id)
                 .expect("scheduler allocated a job not in the queue");
             job.mark_started(now);
-            let est_end = now + job.est_runtime;
+            let est_end = now + job.est_remaining();
             ctx.send(
                 self.executor,
                 Priority::DEFAULT,
-                Ev::Start { job_id: job.id, runtime: job.runtime },
+                Ev::Start {
+                    job_id: job.id,
+                    runtime: job.remaining,
+                    incarnation: job.incarnation,
+                },
             );
             self.running.insert(job.id, (job, alloc, est_end));
+        }
+        // Starvation timer: wake up when the oldest feasible waiter
+        // crosses the threshold so its eviction round actually runs.
+        if self.starvation_timer == Some(now) {
+            self.starvation_timer = None;
+        }
+        if self.preemption.enabled()
+            && self.preemption.starvation_threshold > SimDuration::ZERO
+        {
+            let deadline = self
+                .queue
+                .iter()
+                .find(|j| self.cluster.feasible(j))
+                .map(|j| j.submit + self.preemption.starvation_threshold);
+            if let Some(deadline) = deadline {
+                let timer_ok =
+                    self.starvation_timer.map_or(true, |t| t > deadline || t <= now);
+                if deadline > now && timer_ok {
+                    self.starvation_timer = Some(deadline);
+                    ctx.schedule_self(deadline - now, Priority::SCHEDULE, Ev::Dispatch);
+                }
+            }
         }
         self.record_series(now);
         // Sanity: cached aggregates stay consistent (cheap check).
         debug_assert!(self.cluster.check_invariants());
     }
 
-    fn complete(&mut self, job_id: JobId, ctx: &mut Ctx<Ev>) {
+    fn complete(&mut self, job_id: JobId, incarnation: u32, ctx: &mut Ctx<Ev>) {
+        // Stale completions are expected under preemption: the segment
+        // that scheduled them was interrupted and the job re-queued.
+        let current = self.running.get(&job_id).map(|(j, _, _)| j.incarnation);
+        if current != Some(incarnation) {
+            return;
+        }
         let now = ctx.now();
         let (mut job, alloc, _) = self
             .running
@@ -179,6 +496,7 @@ impl SchedulerComponent {
         self.cluster.release(&alloc);
         job.mark_completed(now);
         self.completed.push(job);
+        self.settle_drained_nodes(&alloc.node_ids());
         self.record_series(now);
         if !self.queue.is_empty() {
             self.request_dispatch(ctx);
@@ -202,7 +520,13 @@ impl Component<Ev> for SchedulerComponent {
                 self.request_dispatch(ctx);
             }
             Ev::Dispatch => self.dispatch(ctx),
-            Ev::Complete { job_id } => self.complete(job_id, ctx),
+            Ev::Complete { job_id, incarnation } => self.complete(job_id, incarnation, ctx),
+            Ev::NodeFail { victim_draw, repair_after } => {
+                self.fail_node(victim_draw, repair_after, ctx)
+            }
+            Ev::NodeUp { node } => self.repair_node(node, ctx),
+            Ev::ReserveStart { res } => self.start_reservation(res, ctx),
+            Ev::ReserveEnd { res } => self.end_reservation(res, ctx),
             other => panic!("scheduler got unexpected event {other:?}"),
         }
     }
@@ -222,7 +546,8 @@ impl Component<Ev> for SchedulerComponent {
 }
 
 /// Job Executor (paper Fig 1): turns a dispatched job into a completion
-/// after its actual runtime.
+/// after its actual remaining runtime, echoing the segment incarnation so
+/// the scheduler can discard completions of preempted segments.
 pub struct JobExecutor {
     pub scheduler: ComponentId,
     pub executed: u64,
@@ -241,13 +566,13 @@ impl Component<Ev> for JobExecutor {
 
     fn handle(&mut self, ev: Ev, ctx: &mut Ctx<Ev>) {
         match ev {
-            Ev::Start { job_id, runtime } => {
+            Ev::Start { job_id, runtime, incarnation } => {
                 self.executed += 1;
                 ctx.send_after(
                     self.scheduler,
                     runtime,
                     Priority::COMPLETE,
-                    Ev::Complete { job_id },
+                    Ev::Complete { job_id, incarnation },
                 );
             }
             other => panic!("executor got unexpected event {other:?}"),

@@ -1,0 +1,204 @@
+//! Fault injection and advance reservations (fault/preemption subsystem).
+//!
+//! [`FaultInjector`] is a first-class simulation component wired next to
+//! the job source: it turns a seeded exponential MTBF/MTTR model and a
+//! list of [`ReservationSpec`]s into timed engine events for the
+//! scheduler. The injector owns a *private* RNG stream seeded from
+//! [`FaultConfig::seed`], so the failure trace — failure instants, victim
+//! draws, repair durations — is identical across scheduling policies and
+//! preemption modes. That is what makes "policy A vs policy B under the
+//! same failure trace" comparisons (examples/fault_tolerance.rs)
+//! meaningful, and it keeps seeded runs bit-reproducible across runs and
+//! rank counts (rust/tests/integration.rs, rust/tests/prop_faults.rs).
+//!
+//! The injector generates *timing*; the scheduler component owns all
+//! state transitions (which node goes down, which jobs die, when the
+//! node returns) so capacity bookkeeping lives in exactly one place.
+
+use crate::core::component::{Component, Ctx};
+use crate::core::event::{ComponentId, Priority};
+use crate::core::rng::Rng;
+use crate::core::time::{SimDuration, SimTime};
+use crate::sim::Ev;
+use std::any::Any;
+
+/// Failure-model knobs (config surface `faults.*`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultConfig {
+    /// Mean time between cluster-wide failure events, in ticks
+    /// (exponential inter-failure gaps). 0 disables fault injection.
+    pub mtbf: f64,
+    /// Mean time to repair a failed node, in ticks (exponential).
+    pub mttr: f64,
+    /// Seed of the injector's private RNG stream.
+    pub seed: u64,
+    /// Stop injecting new failures after this tick; `None` lets the
+    /// simulation builder derive a horizon from the workload (last
+    /// submission plus a few repair times), which keeps the event queue
+    /// finite — failures chain repair and next-failure events forever
+    /// otherwise.
+    pub until: Option<u64>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig { mtbf: 0.0, mttr: 3_600.0, seed: 0xFA017, until: None }
+    }
+}
+
+impl FaultConfig {
+    pub fn enabled(&self) -> bool {
+        self.mtbf > 0.0
+    }
+}
+
+/// One advance reservation: `nodes` whole nodes held from `start` for
+/// `duration` ticks (config surface `reservations[]`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReservationSpec {
+    pub start: u64,
+    pub duration: u64,
+    pub nodes: usize,
+}
+
+/// The fault-injection component.
+pub struct FaultInjector {
+    /// Where capacity events go (the scheduler). Set by the builder.
+    pub scheduler: ComponentId,
+    cfg: FaultConfig,
+    until: SimTime,
+    rng: Rng,
+    reservations: Vec<ReservationSpec>,
+    /// Failure events injected (for reporting).
+    pub injected: u64,
+}
+
+impl FaultInjector {
+    pub fn new(
+        cfg: FaultConfig,
+        until: SimTime,
+        reservations: Vec<ReservationSpec>,
+    ) -> FaultInjector {
+        let rng = Rng::new(cfg.seed);
+        FaultInjector { scheduler: 0, cfg, until, rng, reservations, injected: 0 }
+    }
+
+    /// Exponential draw in whole ticks, at least 1.
+    fn draw(&mut self, mean: f64) -> SimDuration {
+        let d = SimDuration::from_f64(self.rng.exponential(1.0 / mean.max(1e-9)));
+        if d == SimDuration::ZERO {
+            SimDuration(1)
+        } else {
+            d
+        }
+    }
+
+    fn schedule_next_failure(&mut self, ctx: &mut Ctx<Ev>) {
+        if !self.cfg.enabled() {
+            return;
+        }
+        let gap = self.draw(self.cfg.mtbf);
+        if ctx.now() + gap > self.until {
+            return; // injection horizon reached; let the queue drain
+        }
+        ctx.schedule_self(gap, Priority::COMPLETE, Ev::NextFault);
+    }
+}
+
+impl Component<Ev> for FaultInjector {
+    fn name(&self) -> &str {
+        "faults"
+    }
+
+    fn init(&mut self, ctx: &mut Ctx<Ev>) {
+        // Reservations are part of the experiment definition: emit their
+        // start/end transitions up front (they are few and fixed).
+        for (idx, r) in self.reservations.iter().enumerate() {
+            ctx.send_after(
+                self.scheduler,
+                SimDuration(r.start),
+                Priority::COMPLETE,
+                Ev::ReserveStart { res: idx },
+            );
+            ctx.send_after(
+                self.scheduler,
+                SimDuration(r.start.saturating_add(r.duration)),
+                Priority::COMPLETE,
+                Ev::ReserveEnd { res: idx },
+            );
+        }
+        self.schedule_next_failure(ctx);
+    }
+
+    fn handle(&mut self, ev: Ev, ctx: &mut Ctx<Ev>) {
+        match ev {
+            Ev::NextFault => {
+                self.injected += 1;
+                // The victim draw rides along so the scheduler (which
+                // knows the current node states) can pick deterministically
+                // without consuming shared engine randomness.
+                let victim_draw = self.rng.next_u64();
+                let repair_after = self.draw(self.cfg.mttr);
+                ctx.send(
+                    self.scheduler,
+                    Priority::COMPLETE,
+                    Ev::NodeFail { victim_draw, repair_after },
+                );
+                self.schedule_next_failure(ctx);
+            }
+            other => panic!("fault injector got unexpected event {other:?}"),
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_config_injects_nothing() {
+        let cfg = FaultConfig::default();
+        assert!(!cfg.enabled());
+        let mut engine: crate::core::engine::Engine<Ev> = crate::core::engine::Engine::new(1);
+        let id = engine.add(Box::new(FaultInjector::new(cfg, SimTime(10_000), Vec::new())));
+        let r = engine.run(None);
+        assert_eq!(r.events, 0);
+        assert_eq!(engine.get::<FaultInjector>(id).unwrap().injected, 0);
+    }
+
+    #[test]
+    fn failure_trace_is_seed_deterministic() {
+        let trace = |seed: u64| {
+            let mut inj = FaultInjector::new(
+                FaultConfig { mtbf: 500.0, mttr: 100.0, seed, until: None },
+                SimTime(1_000_000),
+                Vec::new(),
+            );
+            let gaps: Vec<u64> = (0..16).map(|_| inj.draw(500.0).ticks()).collect();
+            gaps
+        };
+        assert_eq!(trace(7), trace(7));
+        assert_ne!(trace(7), trace(8));
+    }
+
+    #[test]
+    fn draws_are_positive_and_mean_scaled() {
+        let mut inj = FaultInjector::new(
+            FaultConfig { mtbf: 1000.0, mttr: 50.0, seed: 3, until: None },
+            SimTime::MAX,
+            Vec::new(),
+        );
+        let n = 4000;
+        let sum: u64 = (0..n).map(|_| inj.draw(1000.0).ticks()).sum();
+        let mean = sum as f64 / n as f64;
+        assert!((700.0..1300.0).contains(&mean), "mean {mean}");
+        assert!((0..200).all(|_| inj.draw(0.5).ticks() >= 1), "draws must be >= 1 tick");
+    }
+}

@@ -13,9 +13,11 @@
 //! times) are recorded event-driven — no sampling error.
 
 pub mod components;
+pub mod faults;
 pub mod multicluster;
 
-pub use components::{JobExecutor, JobSource, SchedulerComponent};
+pub use components::{FaultCounters, JobExecutor, JobSource, SchedulerComponent};
+pub use faults::{FaultConfig, FaultInjector, ReservationSpec};
 pub use multicluster::{ClusterSpec, MetaScheduler, MultiClusterReport, Routing};
 
 use crate::core::engine::Engine;
@@ -24,24 +26,38 @@ use crate::core::time::{SimDuration, SimTime};
 use crate::job::Job;
 use crate::metrics::{wait_stats, WaitStats};
 use crate::resources::Cluster;
-use crate::sched::{Policy, Scheduler};
+use crate::sched::{Policy, PreemptionConfig, PreemptiveScheduler, Scheduler};
 use crate::trace::Workload;
 
 /// Event payload exchanged between simulation components.
 #[derive(Debug, Clone)]
 pub enum Ev {
-    /// Source -> scheduler: a job arrives (paper: TaskEvent). Boxed so
-    /// the event enum stays 16 bytes — heap sift copies are the DES hot
-    /// path (§Perf: +9% throughput).
+    /// Source -> scheduler: a job arrives (paper: TaskEvent). Boxed to
+    /// keep the event enum small — heap sift copies are the DES hot path
+    /// (§Perf: +9% throughput).
     Submit(Box<Job>),
     /// Source self-event: emit the next arrival.
     NextArrival,
     /// Scheduler self-event: run the scheduling algorithm.
     Dispatch,
     /// Scheduler -> executor: job started; executor simulates runtime.
-    Start { job_id: u64, runtime: SimDuration },
+    /// `incarnation` tags the run segment so a completion from a segment
+    /// that was later preempted is recognizably stale.
+    Start { job_id: u64, runtime: SimDuration, incarnation: u32 },
     /// Executor -> scheduler: job finished; release resources.
-    Complete { job_id: u64 },
+    Complete { job_id: u64, incarnation: u32 },
+    /// Injector self-event: emit the next failure.
+    NextFault,
+    /// Injector -> scheduler: fail one node now. `victim_draw` picks the
+    /// victim among currently failable nodes; `repair_after` is the
+    /// pre-drawn repair duration.
+    NodeFail { victim_draw: u64, repair_after: SimDuration },
+    /// Scheduler self-event: a failed node comes back.
+    NodeUp { node: usize },
+    /// Injector -> scheduler: reservation `res` comes due.
+    ReserveStart { res: usize },
+    /// Injector -> scheduler: reservation `res` expires.
+    ReserveEnd { res: usize },
 }
 
 /// Completed-run report.
@@ -54,7 +70,8 @@ pub struct SimReport {
     pub rejected: u64,
     /// DES events processed.
     pub events: u64,
-    /// Simulated end time (last completion).
+    /// Simulated end time (last event; with fault injection this may
+    /// trail the last completion by pending repairs).
     pub end_time: SimTime,
     /// (t, occupied nodes) — paper Fig 3(a).
     pub occupancy: TimeSeries,
@@ -64,8 +81,26 @@ pub struct SimReport {
     pub utilization: TimeSeries,
     /// Time-weighted mean utilization over the run.
     pub mean_utilization: f64,
+    /// (t, busy cores / non-failed cores) — the operator's instantaneous
+    /// view during outages (fault/preemption subsystem).
+    pub effective_utilization: TimeSeries,
+    /// *Effective* (goodput) utilization: useful core-seconds delivered
+    /// (each completed job's runtime x cores, once — redone work and
+    /// checkpoint overhead do not count) per available core-second
+    /// (non-failed capacity integrated from the first event to the last
+    /// completion). Raw busy-time utilization rewards failure-induced
+    /// rework; this metric measures what the machine actually delivered.
+    pub mean_effective_utilization: f64,
     /// Scheduler invocations (dispatch rounds).
     pub dispatches: u64,
+    /// Fault/preemption/reservation counters (all zero for fault-free runs).
+    pub faults: FaultCounters,
+    /// Core-seconds of progress discarded by kills and failures.
+    pub lost_work: f64,
+    /// Core-seconds of checkpoint/restart overhead charged.
+    pub overhead_work: f64,
+    /// Preemption mode the run used (reporting only).
+    pub preemption_mode: &'static str,
 }
 
 impl SimReport {
@@ -76,7 +111,55 @@ impl SimReport {
     /// Makespan: last completion minus first submission.
     pub fn makespan(&self) -> SimDuration {
         let first = self.completed.iter().map(|j| j.submit).min().unwrap_or(SimTime::ZERO);
-        self.end_time - first
+        let last = self.completed.iter().filter_map(|j| j.end).max().unwrap_or(self.end_time);
+        last - first
+    }
+
+    /// Canonical byte-exact digest of everything the run measured:
+    /// per-job lifecycle tuples plus every counter and float (as IEEE
+    /// bits). Two runs are "the same" iff their fingerprints match —
+    /// the determinism regression tests compare these strings.
+    pub fn fingerprint(&self) -> String {
+        use std::fmt::Write as _;
+        let mut jobs: Vec<&Job> = self.completed.iter().collect();
+        jobs.sort_by_key(|j| j.id);
+        let mut out = String::with_capacity(64 + jobs.len() * 32);
+        let _ = write!(
+            out,
+            "policy={} wl={} rejected={} end={} dispatches={} \
+             failures={} repairs={} preemptions={} requeues={} reservations={} \
+             lost={:016x} overhead={:016x} util={:016x} eutil={:016x}",
+            self.policy,
+            self.workload,
+            self.rejected,
+            self.end_time.ticks(),
+            self.dispatches,
+            self.faults.failures,
+            self.faults.repairs,
+            self.faults.preemptions,
+            self.faults.requeues,
+            self.faults.reservations_started,
+            self.lost_work.to_bits(),
+            self.overhead_work.to_bits(),
+            self.mean_utilization.to_bits(),
+            self.mean_effective_utilization.to_bits(),
+        );
+        for j in jobs {
+            let _ = write!(
+                out,
+                "\n{}:{}:{}:{}:{}:{}:{}:{}:{}",
+                j.id,
+                j.start.map(|t| t.ticks()).unwrap_or(u64::MAX),
+                j.end.map(|t| t.ticks()).unwrap_or(u64::MAX),
+                j.executed.ticks(),
+                j.overhead.ticks(),
+                j.lost.ticks(),
+                j.preempt_count,
+                j.fail_count,
+                j.cores,
+            );
+        }
+        out
     }
 }
 
@@ -92,6 +175,12 @@ pub struct Simulation {
     pub seed: u64,
     /// Memory per node (MB); 0 disables memory accounting.
     pub mem_per_node: u64,
+    /// Node failure model; `FaultConfig::default()` injects nothing.
+    pub faults: FaultConfig,
+    /// Preemption layer; `PreemptionConfig::default()` is mode `none`.
+    pub preemption: PreemptionConfig,
+    /// Advance reservations, applied in declaration order.
+    pub reservations: Vec<ReservationSpec>,
 }
 
 impl Simulation {
@@ -103,6 +192,9 @@ impl Simulation {
             dispatch_latency: 0,
             seed: 1,
             mem_per_node: 0,
+            faults: FaultConfig::default(),
+            preemption: PreemptionConfig::default(),
+            reservations: Vec::new(),
         }
     }
 
@@ -116,15 +208,51 @@ impl Simulation {
         self
     }
 
+    pub fn with_faults(mut self, faults: FaultConfig) -> Simulation {
+        self.faults = faults;
+        self
+    }
+
+    pub fn with_preemption(mut self, cfg: PreemptionConfig) -> Simulation {
+        self.preemption = cfg;
+        self
+    }
+
+    pub fn with_reservations(mut self, reservations: Vec<ReservationSpec>) -> Simulation {
+        self.reservations = reservations;
+        self
+    }
+
     /// Wire the component graph without running (windowed/parallel use).
     pub fn build(self) -> SimInstance {
-        let Simulation { workload, policy, scheduler, dispatch_latency, seed, mem_per_node } =
-            self;
+        let Simulation {
+            workload,
+            policy,
+            scheduler,
+            dispatch_latency,
+            seed,
+            mem_per_node,
+            faults,
+            preemption,
+            reservations,
+        } = self;
         let cluster =
             Cluster::homogeneous(workload.nodes, workload.cores_per_node, mem_per_node);
-        let scheduler = scheduler.unwrap_or_else(|| policy.build());
+        let mut scheduler = scheduler.unwrap_or_else(|| policy.build());
+        if preemption.enabled() {
+            scheduler = Box::new(PreemptiveScheduler::new(scheduler, preemption));
+        }
         let policy_name = scheduler.name();
         let wl_name = workload.name.clone();
+        // Fault-injection horizon: explicit, or last submission plus a
+        // few repair times so late-running jobs still see failures but
+        // the failure/repair chain terminates.
+        let last_submit = workload.jobs.iter().map(|j| j.submit).max().unwrap_or(SimTime::ZERO);
+        let until = match faults.until {
+            Some(t) => SimTime(t),
+            None => last_submit + SimDuration::from_f64(4.0 * faults.mttr),
+        };
+        let wire_injector = faults.enabled() || !reservations.is_empty();
 
         let mut engine: Engine<Ev> = Engine::new(seed);
         let source = engine.add(Box::new(JobSource::new(workload.jobs)));
@@ -137,7 +265,17 @@ impl Simulation {
         // Tell source + executor where to send.
         engine.get_mut::<JobSource>(source).unwrap().target = sched;
         engine.get_mut::<JobExecutor>(exec).unwrap().scheduler = sched;
-        engine.get_mut::<SchedulerComponent>(sched).unwrap().executor = exec;
+        {
+            let s = engine.get_mut::<SchedulerComponent>(sched).unwrap();
+            s.executor = exec;
+            s.preemption = preemption;
+            s.reservations = reservations.clone();
+        }
+        if wire_injector {
+            let inj = engine.add(Box::new(FaultInjector::new(faults, until, reservations)));
+            engine.connect(inj, sched, SimDuration(0));
+            engine.get_mut::<FaultInjector>(inj).unwrap().scheduler = sched;
+        }
         SimInstance { engine, sched_id: sched, policy_name, workload_name: wl_name }
     }
 
@@ -182,10 +320,22 @@ impl SimInstance {
         let s = self.engine.get_mut::<SchedulerComponent>(sched).unwrap();
         let utilization = std::mem::take(&mut s.util_series);
         let mean_utilization = utilization.time_weighted_mean(end_time);
+        let effective_utilization = std::mem::take(&mut s.effective_util_series);
+        let completed = std::mem::take(&mut s.completed);
+        // Goodput: useful core-seconds / available core-seconds up to
+        // the last completion (see the SimReport field docs).
+        let last_completion =
+            completed.iter().filter_map(|j| j.end).max().unwrap_or(end_time);
+        let useful: f64 =
+            completed.iter().map(|j| j.runtime.as_f64() * j.cores as f64).sum();
+        let avail_series = std::mem::take(&mut s.avail_series);
+        let avail_integral = series_integral(&avail_series, last_completion);
+        let mean_effective_utilization =
+            if avail_integral > 0.0 { useful / avail_integral } else { 0.0 };
         SimReport {
             policy: self.policy_name,
             workload: self.workload_name.clone(),
-            completed: std::mem::take(&mut s.completed),
+            completed,
             rejected: s.rejected,
             events,
             end_time,
@@ -193,9 +343,37 @@ impl SimInstance {
             running: std::mem::take(&mut s.running_series),
             utilization,
             mean_utilization,
+            effective_utilization,
+            mean_effective_utilization,
             dispatches: s.dispatches,
+            faults: s.fault_counters,
+            lost_work: s.lost_work,
+            overhead_work: s.overhead_work,
+            preemption_mode: s.preemption.mode.as_str(),
         }
     }
+}
+
+/// Integral of a step-function series from its first point to `until`
+/// (samples hold until the next one; points at or past `until` are
+/// clipped — unlike `time_weighted_mean`, which assumes the horizon is
+/// past the last sample).
+fn series_integral(series: &TimeSeries, until: SimTime) -> f64 {
+    let pts = series.points();
+    let mut total = 0.0;
+    for w in pts.windows(2) {
+        if w[0].0 >= until {
+            break;
+        }
+        let hi = w[1].0.min(until);
+        total += w[0].1 * (hi - w[0].0).as_f64();
+    }
+    if let Some(&(t, v)) = pts.last() {
+        if until > t {
+            total += v * (until - t).as_f64();
+        }
+    }
+    total
 }
 
 /// Convenience: run `workload` under `policy` with defaults.

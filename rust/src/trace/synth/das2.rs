@@ -87,7 +87,7 @@ impl Das2Model {
             };
             let est = user_estimate(&mut rng, runtime, self.max_runtime);
             let user = rng.below(self.users as u64) as u32;
-            jobs.push(Job::new(
+            let mut job = Job::new(
                 id as u64 + 1,
                 SimTime(t),
                 cores,
@@ -96,7 +96,14 @@ impl Das2Model {
                 SimDuration(runtime),
                 user,
                 user % 8,
-            ));
+            );
+            // Deterministic per-user priority band (0..=2) so the
+            // preemption subsystem's priority-aware policies are
+            // exercisable on synthetic workloads. Derived from the user
+            // id — no extra RNG draws, so seeded workloads are unchanged
+            // and priority is inert unless preemption is enabled.
+            job.priority = (user % 3) as u8;
+            jobs.push(job);
         }
         Workload::new("das2-synth", jobs, self.nodes, self.cores_per_node)
     }

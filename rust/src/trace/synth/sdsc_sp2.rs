@@ -85,7 +85,7 @@ impl SdscSp2Model {
             };
             let est = user_estimate(&mut rng, runtime, self.max_runtime);
             let user = rng.below(self.users as u64) as u32;
-            jobs.push(Job::new(
+            let mut job = Job::new(
                 id as u64 + 1,
                 SimTime(t),
                 cores,
@@ -94,7 +94,11 @@ impl SdscSp2Model {
                 SimDuration(runtime),
                 user,
                 user % 16,
-            ));
+            );
+            // Per-user priority band (0..=2); see das2.rs — derived, not
+            // drawn, so seeded workloads are byte-identical to before.
+            job.priority = (user % 3) as u8;
+            jobs.push(job);
         }
         Workload::new("sdsc-sp2-synth", jobs, self.nodes, self.cores_per_node)
     }

@@ -1,9 +1,13 @@
 //! Figure-shape regression tests: fast versions of every paper figure,
 //! asserting the qualitative results the paper reports (who wins, what
 //! tracks what, what scales) so refactors cannot silently break the
-//! reproduction.
+//! reproduction — plus golden-figure smoke tests that lock seeded
+//! summary statistics byte-exactly.
 
 use sst_sched::harness::*;
+use sst_sched::sched::Policy;
+use sst_sched::sim::{SimReport, Simulation};
+use sst_sched::trace::{Das2Model, SdscSp2Model};
 
 #[test]
 fn fig3a_occupancy_tracks_baseline() {
@@ -81,6 +85,116 @@ fn fig6_workflow_scales() {
     let rows = fig6_wide(17, 128, &[1, 4], 1);
     assert!(rows[1].speedup > 1.3, "workflow speedup {}", rows[1].speedup);
     assert_eq!(rows[0].jobs, rows[1].jobs);
+}
+
+// ---------------------------------------------------------------------
+// Golden-figure smoke tests: seeded scenarios whose summary statistics
+// are locked into tests/golden/*.txt so perf refactors cannot silently
+// change simulation results. On a checkout without the golden file the
+// test blesses it (and still verifies the scenario is internally
+// reproducible); commit the blessed files to pin the numbers. After an
+// *intentional* semantic change, re-bless with `BLESS=1 cargo test`.
+// ---------------------------------------------------------------------
+
+/// Compact, byte-exact summary: headline stats in decimal plus IEEE bit
+/// patterns, and the job-level fingerprint hash.
+fn summarize(r: &SimReport) -> String {
+    let s = r.wait_stats();
+    let fp = sst_sched::parallel::fnv1a(r.fingerprint().as_bytes());
+    format!(
+        "policy={} workload={}\n\
+         completed={} rejected={} events={} dispatches={}\n\
+         mean_wait={:.6} bits={:016x}\n\
+         median_wait={:.6} bits={:016x}\n\
+         p95_wait={:.6} bits={:016x}\n\
+         mean_utilization={:.6} bits={:016x}\n\
+         effective_utilization={:.6} bits={:016x}\n\
+         makespan={} end_time={}\n\
+         failures={} repairs={} preemptions={} requeues={}\n\
+         lost_work_bits={:016x} overhead_work_bits={:016x}\n\
+         job_fingerprint={:016x}\n",
+        r.policy,
+        r.workload,
+        r.completed.len(),
+        r.rejected,
+        r.events,
+        r.dispatches,
+        s.mean_wait,
+        s.mean_wait.to_bits(),
+        s.median_wait,
+        s.median_wait.to_bits(),
+        s.p95_wait,
+        s.p95_wait.to_bits(),
+        r.mean_utilization,
+        r.mean_utilization.to_bits(),
+        r.mean_effective_utilization,
+        r.mean_effective_utilization.to_bits(),
+        r.makespan().ticks(),
+        r.end_time.ticks(),
+        r.faults.failures,
+        r.faults.repairs,
+        r.faults.preemptions,
+        r.faults.requeues,
+        r.lost_work.to_bits(),
+        r.overhead_work.to_bits(),
+        fp,
+    )
+}
+
+fn golden_check(name: &str, summary: &str) {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
+    let path = dir.join(format!("{name}.txt"));
+    if !path.exists() || std::env::var("BLESS").is_ok() {
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(&path, summary).unwrap();
+        eprintln!("golden: blessed {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        summary,
+        want.as_str(),
+        "golden mismatch for {name}: simulation results changed.\n\
+         If intentional, re-bless with `BLESS=1 cargo test --test figures`."
+    );
+}
+
+fn golden_sdsc_sp2() -> SimReport {
+    let w = SdscSp2Model::default().generate(1_200, 7).drop_infeasible();
+    Simulation::new(w, Policy::FcfsBackfill).with_seed(7).run(None)
+}
+
+fn golden_das2_faulty() -> SimReport {
+    use sst_sched::core::time::SimDuration;
+    use sst_sched::sched::{PreemptionConfig, PreemptionMode};
+    use sst_sched::sim::FaultConfig;
+    let w = Das2Model::default().generate(1_500, 7).scale_arrivals(0.45).drop_infeasible();
+    Simulation::new(w, Policy::FcfsBackfill)
+        .with_seed(7)
+        .with_faults(FaultConfig { mtbf: 9_000.0, mttr: 2_500.0, seed: 7, until: None })
+        .with_preemption(PreemptionConfig {
+            mode: PreemptionMode::Checkpoint,
+            checkpoint_overhead: SimDuration(60),
+            restart_overhead: SimDuration(30),
+            starvation_threshold: SimDuration(0),
+        })
+        .run(None)
+}
+
+#[test]
+fn golden_sdsc_sp2_summary_locked() {
+    let a = summarize(&golden_sdsc_sp2());
+    let b = summarize(&golden_sdsc_sp2());
+    assert_eq!(a, b, "SDSC-SP2 golden scenario not even run-to-run reproducible");
+    golden_check("sdsc_sp2_backfill", &a);
+}
+
+#[test]
+fn golden_das2_fault_summary_locked() {
+    let a = summarize(&golden_das2_faulty());
+    let b = summarize(&golden_das2_faulty());
+    assert_eq!(a, b, "DAS-2 fault golden scenario not even run-to-run reproducible");
+    golden_check("das2_faulty_backfill_ckpt", &a);
 }
 
 #[test]

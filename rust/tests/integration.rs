@@ -3,8 +3,10 @@
 //! binary itself.
 
 use sst_sched::config::ExperimentConfig;
-use sst_sched::sched::Policy;
-use sst_sched::sim::run_policy;
+use sst_sched::core::time::SimDuration;
+use sst_sched::parallel::{run_jobs_parallel_opts, RankSimOpts};
+use sst_sched::sched::{Policy, PreemptionConfig, PreemptionMode};
+use sst_sched::sim::{run_policy, FaultConfig, SimReport, Simulation};
 use sst_sched::trace::{parse_swf, write_swf, Das2Model, SdscSp2Model};
 
 #[test]
@@ -75,6 +77,97 @@ fn occupancy_ends_at_zero_when_queue_drains() {
     let r = run_policy(w, Policy::Fcfs);
     assert_eq!(r.occupancy.points().last().unwrap().1, 0.0);
     assert_eq!(r.running.points().last().unwrap().1, 0.0);
+}
+
+fn fault_sim(policy: Policy) -> SimReport {
+    let w = SdscSp2Model::default().generate(800, 13).drop_infeasible();
+    let faults = FaultConfig { mtbf: 20_000.0, mttr: 4_000.0, seed: 77, until: None };
+    let preemption = PreemptionConfig {
+        mode: PreemptionMode::Checkpoint,
+        checkpoint_overhead: SimDuration(60),
+        restart_overhead: SimDuration(30),
+        starvation_threshold: SimDuration(0),
+    };
+    Simulation::new(w, policy)
+        .with_seed(5)
+        .with_faults(faults)
+        .with_preemption(preemption)
+        .run(None)
+}
+
+/// Determinism regression (fault subsystem): with a fixed seed, a
+/// fault-injected simulation produces byte-identical metrics across
+/// repeated runs, for every policy.
+#[test]
+fn fault_injected_runs_are_bit_reproducible() {
+    for policy in Policy::ALL {
+        let a = fault_sim(policy).fingerprint();
+        let b = fault_sim(policy).fingerprint();
+        assert_eq!(a, b, "{policy} fault run not reproducible");
+        assert!(a.contains("failures="), "fingerprint missing counters: {a}");
+    }
+    // And the fingerprint actually distinguishes different runs.
+    let base = fault_sim(Policy::Fcfs).fingerprint();
+    let other = {
+        let w = SdscSp2Model::default().generate(800, 13).drop_infeasible();
+        let faults = FaultConfig { mtbf: 20_000.0, mttr: 4_000.0, seed: 78, until: None };
+        Simulation::new(w, Policy::Fcfs).with_seed(5).with_faults(faults).run(None).fingerprint()
+    };
+    assert_ne!(base, other, "different fault seeds must change the fingerprint");
+}
+
+/// Determinism across the parallel engine: at every rank count, the
+/// threaded run equals the serially-modeled run (thread interleaving
+/// cannot change results) and repeated threaded runs are byte-identical
+/// — including per-rank result digests — with fault injection active.
+#[test]
+fn parallel_fault_runs_deterministic_across_thread_counts() {
+    let w = Das2Model::default().generate(600, 9).drop_infeasible();
+    let opts = RankSimOpts {
+        seed: 3,
+        faults: FaultConfig { mtbf: 15_000.0, mttr: 3_000.0, seed: 21, until: None },
+        preemption: PreemptionConfig::default(),
+        reservations: Vec::new(),
+    };
+    for ranks in [1usize, 2, 4] {
+        let threaded1 =
+            run_jobs_parallel_opts(&w, Policy::FcfsBackfill, ranks, 3_600, &opts, true);
+        let threaded2 =
+            run_jobs_parallel_opts(&w, Policy::FcfsBackfill, ranks, 3_600, &opts, true);
+        let modeled =
+            run_jobs_parallel_opts(&w, Policy::FcfsBackfill, ranks, 3_600, &opts, false);
+        assert_eq!(
+            threaded1.summaries, threaded2.summaries,
+            "ranks={ranks}: repeated threaded runs differ"
+        );
+        assert_eq!(
+            threaded1.summaries, modeled.summaries,
+            "ranks={ranks}: threads changed simulation results"
+        );
+        assert!(
+            threaded1.summaries.iter().all(|s| s.fingerprint != 0),
+            "ranks={ranks}: missing per-rank digests"
+        );
+        assert_eq!(threaded1.total_completed(), w.jobs.len() as u64, "ranks={ranks} lost jobs");
+    }
+}
+
+#[test]
+fn cli_run_with_faults_reports_subsystem() {
+    let exe = env!("CARGO_BIN_EXE_sst-sched");
+    let out = std::process::Command::new(exe)
+        .args([
+            "run", "--workload", "das2", "--jobs", "400", "--policy", "fcfs-backfill",
+            "--mtbf", "8000", "--mttr", "2000", "--faults-seed", "5",
+            "--preemption", "checkpoint", "--ckpt-overhead", "30", "--restart-overhead", "30",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("preemption mode   checkpoint"), "{text}");
+    assert!(text.contains("node failures"), "{text}");
+    assert!(text.contains("effective util"), "{text}");
 }
 
 #[test]

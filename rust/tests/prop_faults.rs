@@ -1,0 +1,326 @@
+//! Property tests for the fault/preemption/reservation subsystem: random
+//! workloads under random failure models, preemption modes, priorities
+//! and reservations, checking the invariants the subsystem promises:
+//!
+//! * no job ever occupies a `Down` node (audited after every capacity
+//!   transition; `Draining` keeps its occupants by design, and the
+//!   allocation planner refuses `Draining`/`Reserved`/`Down` nodes);
+//! * core accounting is conserved across fail -> preempt -> requeue ->
+//!   repair cycles: at the end of every run the cluster is pristine;
+//! * runtime accounting is exact: a completed job's total charged
+//!   machine time equals its runtime plus checkpoint/restart overhead
+//!   plus lost (redone) work, and a checkpoint-evicted, never-failed
+//!   job's total is exactly `runtime + preemptions * (ckpt + restart)`;
+//! * no job is ever lost: everything admitted eventually completes.
+
+use sst_sched::core::rng::Rng;
+use sst_sched::core::time::SimDuration;
+use sst_sched::job::Job;
+use sst_sched::resources::NodeState;
+use sst_sched::sched::{Policy, PreemptionConfig, PreemptionMode};
+use sst_sched::sim::{FaultConfig, ReservationSpec, SchedulerComponent, Simulation};
+use sst_sched::trace::Workload;
+use sst_sched::util::prop::check_n;
+
+fn random_workload(rng: &mut Rng) -> Workload {
+    let nodes = rng.range(2, 12) as usize;
+    let cores = rng.range(1, 8);
+    let total = nodes as u64 * cores;
+    let jobs: Vec<Job> = (0..rng.range(20, 120))
+        .map(|i| {
+            let mut j = Job::with_estimate(
+                i,
+                rng.range(0, 20_000),
+                rng.range(1, total),
+                rng.range(10, 2_000),
+                rng.range(10, 4_000),
+            );
+            j.priority = rng.range(0, 3) as u8;
+            j
+        })
+        .collect();
+    Workload::new("fault-prop", jobs, nodes, cores)
+}
+
+fn random_mode(rng: &mut Rng) -> PreemptionConfig {
+    let mode = match rng.below(3) {
+        0 => PreemptionMode::None,
+        1 => PreemptionMode::Kill,
+        _ => PreemptionMode::Checkpoint,
+    };
+    PreemptionConfig {
+        mode,
+        checkpoint_overhead: SimDuration(rng.range(0, 120)),
+        restart_overhead: SimDuration(rng.range(0, 120)),
+        starvation_threshold: SimDuration(if rng.chance(0.5) { 0 } else { rng.range(500, 5_000) }),
+    }
+}
+
+fn random_policy(rng: &mut Rng) -> Policy {
+    Policy::ALL[rng.below(Policy::ALL.len() as u64) as usize]
+}
+
+/// Run one random fault-injected scenario and check every invariant on
+/// the final component state. Returns an error string on violation.
+fn run_and_audit(rng: &mut Rng, with_reservations: bool) -> Result<(), String> {
+    let w = random_workload(rng);
+    let n_jobs = w.jobs.len();
+    let policy = random_policy(rng);
+    let preemption = random_mode(rng);
+    let faults = FaultConfig {
+        mtbf: rng.range(500, 20_000) as f64,
+        mttr: rng.range(100, 5_000) as f64,
+        seed: rng.next_u64(),
+        until: None,
+    };
+    let reservations = if with_reservations {
+        (0..rng.range(1, 3))
+            .map(|_| ReservationSpec {
+                start: rng.range(100, 25_000),
+                duration: rng.range(500, 8_000),
+                nodes: rng.range(1, w.nodes as u64) as usize,
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let total_cores = w.total_cores();
+    let num_nodes = w.nodes;
+    let mut inst = Simulation::new(w, policy)
+        .with_seed(rng.next_u64())
+        .with_faults(faults)
+        .with_preemption(preemption)
+        .with_reservations(reservations)
+        .build();
+    inst.engine.run(None);
+    let sched_id = inst.engine.id_of("scheduler").ok_or("no scheduler component")?;
+    let s = inst.engine.get::<SchedulerComponent>(sched_id).ok_or("bad downcast")?;
+
+    // Invariant: the placement audit never saw a job on a Down node.
+    if s.fault_counters.invariant_violations != 0 {
+        return Err(format!(
+            "{} placements observed on Down nodes",
+            s.fault_counters.invariant_violations
+        ));
+    }
+    // Invariant: nothing lost — every admitted job completed.
+    if s.completed.len() != n_jobs {
+        return Err(format!(
+            "completed {} of {n_jobs} jobs (queue={}, running={})",
+            s.completed.len(),
+            s.queue_len(),
+            s.running_len()
+        ));
+    }
+    // Invariant: conservation — the cluster ends pristine: every core
+    // free again, every node repaired (repair chain always terminates)
+    // and returned to service (reservations all expired).
+    if !s.cluster.check_invariants() {
+        return Err("cluster cached aggregates inconsistent at end".into());
+    }
+    if s.cluster.free_cores() != total_cores {
+        return Err(format!(
+            "core leak: {} of {total_cores} free at end",
+            s.cluster.free_cores()
+        ));
+    }
+    for state in [NodeState::Down, NodeState::Draining, NodeState::Reserved] {
+        let stuck = s.cluster.nodes_in_state(state);
+        if !stuck.is_empty() {
+            return Err(format!("nodes stuck in {state:?} at end: {stuck:?}"));
+        }
+    }
+    if s.cluster.nodes().len() != num_nodes {
+        return Err("node count changed".into());
+    }
+    // Invariant: exact runtime accounting on every completed job.
+    for j in &s.completed {
+        if j.executed.ticks() != j.runtime.ticks() + j.overhead.ticks() + j.lost.ticks() {
+            return Err(format!(
+                "job {}: executed {} != runtime {} + overhead {} + lost {}",
+                j.id,
+                j.executed.ticks(),
+                j.runtime.ticks(),
+                j.overhead.ticks(),
+                j.lost.ticks()
+            ));
+        }
+        if j.start.is_none() || j.end.is_none() {
+            return Err(format!("job {} completed without timestamps", j.id));
+        }
+        // Never-interrupted jobs are charged exactly their runtime.
+        if j.preempt_count == 0 && j.fail_count == 0 && j.executed != j.runtime {
+            return Err(format!("untouched job {} charged {:?}", j.id, j.executed));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn fault_runs_preserve_every_invariant() {
+    check_n("fault invariants", 60, |rng| run_and_audit(rng, false));
+}
+
+#[test]
+fn reservation_runs_preserve_every_invariant() {
+    check_n("reservation invariants", 40, |rng| run_and_audit(rng, true));
+}
+
+#[test]
+fn checkpoint_eviction_charges_exactly_runtime_plus_overheads() {
+    // Deterministic scenario: one low-priority hog, one high-priority
+    // starver that forces exactly one checkpointed eviction.
+    // Machine: 1 node x 4 cores.
+    let ckpt = 25u64;
+    let restart = 15u64;
+    let hog = {
+        let mut j = Job::with_estimate(1, 0, 4, 10_000, 10_000);
+        j.priority = 0;
+        j
+    };
+    let vip = {
+        let mut j = Job::with_estimate(2, 10, 4, 500, 500);
+        j.priority = 5;
+        j
+    };
+    let w = Workload::new("evict-once", vec![hog, vip], 1, 4);
+    let cfg = PreemptionConfig {
+        mode: PreemptionMode::Checkpoint,
+        checkpoint_overhead: SimDuration(ckpt),
+        restart_overhead: SimDuration(restart),
+        starvation_threshold: SimDuration(100),
+    };
+    let r = Simulation::new(w, Policy::Fcfs).with_preemption(cfg).run(None);
+    assert_eq!(r.completed.len(), 2);
+    assert_eq!(r.faults.preemptions, 1, "expected exactly one eviction");
+    let hog = r.completed.iter().find(|j| j.id == 1).unwrap();
+    assert_eq!(hog.preempt_count, 1);
+    assert_eq!(hog.fail_count, 0);
+    assert_eq!(hog.lost, SimDuration::ZERO, "checkpoint keeps progress");
+    // The tentpole invariant: total charged runtime is exactly
+    // original runtime + preemptions * (checkpoint + restart).
+    assert_eq!(
+        hog.executed.ticks(),
+        hog.runtime.ticks() + u64::from(hog.preempt_count) * (ckpt + restart)
+    );
+    // The VIP ran clean.
+    let vip = r.completed.iter().find(|j| j.id == 2).unwrap();
+    assert_eq!(vip.executed, vip.runtime);
+    assert_eq!(r.overhead_work, (ckpt + restart) as f64 * 4.0);
+}
+
+#[test]
+fn kill_mode_eviction_redoes_work() {
+    let hog = {
+        let mut j = Job::with_estimate(1, 0, 4, 1_000, 1_000);
+        j.priority = 0;
+        j
+    };
+    let vip = {
+        let mut j = Job::with_estimate(2, 10, 4, 200, 200);
+        j.priority = 5;
+        j
+    };
+    let w = Workload::new("kill-once", vec![hog, vip], 1, 4);
+    let cfg = PreemptionConfig {
+        mode: PreemptionMode::Kill,
+        checkpoint_overhead: SimDuration(0),
+        restart_overhead: SimDuration(0),
+        starvation_threshold: SimDuration(100),
+    };
+    let r = Simulation::new(w, Policy::Fcfs).with_preemption(cfg).run(None);
+    assert_eq!(r.completed.len(), 2);
+    let hog = r.completed.iter().find(|j| j.id == 1).unwrap();
+    assert_eq!(hog.preempt_count, 1);
+    assert!(hog.lost > SimDuration::ZERO, "kill must discard progress");
+    assert_eq!(
+        hog.executed.ticks(),
+        hog.runtime.ticks() + hog.lost.ticks(),
+        "executed = runtime + redone work"
+    );
+    assert!(r.lost_work > 0.0);
+    assert_eq!(r.overhead_work, 0.0);
+}
+
+#[test]
+fn failed_node_kills_only_its_occupants() {
+    // 2 nodes x 4 cores; two 4-core jobs, one per node. Fail node 0 at
+    // t=50 (explicit trace via a 1-event MTBF window is fiddly, so use
+    // the deterministic reservation-free injection seed and assert via
+    // counters instead): here we instead drive the component through a
+    // tiny fault model with mtbf small and until tight, then check that
+    // exactly the jobs with fail_count > 0 redid work.
+    let jobs = vec![Job::simple(1, 0, 4, 5_000), Job::simple(2, 0, 4, 5_000)];
+    let w = Workload::new("fail-kill", jobs, 2, 4);
+    let faults = FaultConfig { mtbf: 1_000.0, mttr: 500.0, seed: 42, until: Some(4_000) };
+    let r = Simulation::new(w, Policy::Fcfs).with_faults(faults).run(None);
+    assert_eq!(r.completed.len(), 2, "both jobs must finish after repairs");
+    assert!(r.faults.failures > 0, "seeded model must inject at least one failure");
+    assert_eq!(r.faults.failures, r.faults.repairs, "every failure repairs");
+    for j in &r.completed {
+        if j.fail_count == 0 {
+            assert_eq!(j.lost, SimDuration::ZERO);
+            assert_eq!(j.executed, j.runtime);
+        } else {
+            assert_eq!(j.executed.ticks(), j.runtime.ticks() + j.lost.ticks());
+        }
+    }
+}
+
+#[test]
+fn reservation_holds_nodes_and_releases_them() {
+    // Empty workload except one long job; reserve both nodes mid-run
+    // under checkpoint preemption: the job must be evicted, wait out the
+    // reservation, then finish — and charge exactly one overhead.
+    let job = Job::simple(1, 0, 8, 2_000);
+    let w = Workload::new("resv", vec![job], 2, 4);
+    let cfg = PreemptionConfig {
+        mode: PreemptionMode::Checkpoint,
+        checkpoint_overhead: SimDuration(10),
+        restart_overhead: SimDuration(10),
+        starvation_threshold: SimDuration(0),
+    };
+    let resv = vec![ReservationSpec { start: 500, duration: 1_000, nodes: 2 }];
+    let r = Simulation::new(w, Policy::FcfsBackfill)
+        .with_preemption(cfg)
+        .with_reservations(resv)
+        .run(None);
+    assert_eq!(r.completed.len(), 1);
+    assert_eq!(r.faults.reservations_started, 1);
+    assert_eq!(r.faults.preemptions, 1);
+    let j = &r.completed[0];
+    assert_eq!(j.preempt_count, 1);
+    // Evicted at 500 (ran 500 of 2000), resumes at 1500 with
+    // 1500 + 20 overhead to go => ends at 3020.
+    assert_eq!(j.end.unwrap().ticks(), 3_020);
+    assert_eq!(j.executed.ticks(), 2_000 + 20);
+}
+
+#[test]
+fn degraded_reservation_drains_without_preemption() {
+    // Same scenario, preemption off: the job keeps running (drains) and
+    // the reservation is recorded as degraded; the job is never killed.
+    let job = Job::simple(1, 0, 8, 2_000);
+    let w = Workload::new("resv-drain", vec![job], 2, 4);
+    let resv = vec![ReservationSpec { start: 500, duration: 1_000, nodes: 2 }];
+    let r = Simulation::new(w, Policy::Fcfs).with_reservations(resv).run(None);
+    assert_eq!(r.completed.len(), 1);
+    assert_eq!(r.faults.preemptions, 0);
+    assert_eq!(r.faults.reservations_degraded, 2, "both nodes drained");
+    let j = &r.completed[0];
+    assert_eq!(j.end.unwrap().ticks(), 2_000, "drain does not disturb the job");
+    assert_eq!(j.executed, j.runtime);
+    assert_eq!(r.faults.reservations_short_nodes, 0, "full claim has no shortfall");
+}
+
+#[test]
+fn oversized_reservation_reports_its_shortfall() {
+    // Ask for 5 nodes on a 2-node machine: the claim truncates and the
+    // 3-node shortfall must be visible in the counters.
+    let w = Workload::new("resv-short", vec![Job::simple(1, 0, 1, 100)], 2, 4);
+    let resv = vec![ReservationSpec { start: 10, duration: 100, nodes: 5 }];
+    let r = Simulation::new(w, Policy::Fcfs).with_reservations(resv).run(None);
+    assert_eq!(r.faults.reservations_started, 1);
+    assert_eq!(r.faults.reservations_short_nodes, 3);
+    assert_eq!(r.completed.len(), 1);
+}

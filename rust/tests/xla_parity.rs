@@ -3,7 +3,11 @@
 //! choice is a performance knob, never a semantics knob.
 //!
 //! Requires `make artifacts`; tests self-skip when the artifact is
-//! missing so `cargo test` stays green on fresh checkouts.
+//! missing so `cargo test` stays green on fresh checkouts. The whole
+//! suite needs the `xla` cargo feature (PJRT bindings are not in the
+//! offline crate set).
+
+#![cfg(feature = "xla")]
 
 use sst_sched::core::rng::Rng;
 use sst_sched::runtime::{backfill_with_accel, Accel, XlaScorer, DEFAULT_ARTIFACT};

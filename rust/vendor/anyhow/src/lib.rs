@@ -1,0 +1,161 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The repository builds without network access, so instead of the real
+//! crate this vendored shim provides exactly the surface `sst_sched`
+//! uses: [`Error`], [`Result`], the [`Context`] extension trait for
+//! `Result`/`Option`, and the [`anyhow!`]/[`bail!`] macros. Context is
+//! joined eagerly into the message (`"context: cause"`), so both `{}`
+//! and `{:#}` display the full chain — the crate only ever formats
+//! errors for terminal output and substring assertions.
+
+use std::fmt;
+
+/// A string-backed error value.
+///
+/// Like `anyhow::Error`, this deliberately does **not** implement
+/// `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` conversion below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer: `"context: cause"`.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(&$err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        let text = format!("{e:#}");
+        assert!(text.contains("reading file"), "{text}");
+        assert!(text.contains("gone"), "{text}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+        assert_eq!(Some(5u32).context("ok").unwrap(), 5);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let mut called = false;
+        let _ = Ok::<_, Error>(1).with_context(|| {
+            called = true;
+            "never"
+        });
+        assert!(!called);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn fails(x: u32) -> Result<()> {
+            if x > 1 {
+                bail!("x too big: {x}");
+            }
+            Err(anyhow!("fallthrough"))
+        }
+        assert!(fails(5).unwrap_err().to_string().contains("x too big: 5"));
+        assert_eq!(fails(0).unwrap_err().to_string(), "fallthrough");
+        let owned = String::from("owned message");
+        let e = anyhow!(owned);
+        assert_eq!(e.to_string(), "owned message");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here/xyz")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}
