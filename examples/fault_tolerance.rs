@@ -45,7 +45,7 @@ fn workload() -> Workload {
 }
 
 fn main() {
-    let faults = FaultConfig { mtbf: 6_000.0, mttr: 1_500.0, seed: 2026, until: None };
+    let faults = FaultConfig { mtbf: 6_000.0, mttr: 1_500.0, seed: 2026, ..FaultConfig::default() };
     let ckpt = PreemptionConfig {
         mode: PreemptionMode::Checkpoint,
         checkpoint_overhead: SimDuration(60),
@@ -67,7 +67,7 @@ fn main() {
         (Policy::FcfsBackfill, none),
         (Policy::FcfsBackfill, ckpt),
     ];
-    let rows = fault_comparison(&w, faults, &[], &cases);
+    let rows = fault_comparison(&w, faults, &[], 0, &cases);
     print_fault_rows(&rows);
 
     let fcfs = &rows[0];

@@ -54,6 +54,9 @@ pub struct ExperimentConfig {
     pub priority_bands: u8,
     /// Advance reservations (`reservations[]`).
     pub reservations: Vec<ReservationSpec>,
+    /// Availability-timeline planning horizon in ticks
+    /// (`planning.horizon`); 0 = unlimited (exact timeline).
+    pub planning_horizon: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -74,6 +77,7 @@ impl Default for ExperimentConfig {
             preemption: PreemptionConfig::default(),
             priority_bands: 0,
             reservations: Vec::new(),
+            planning_horizon: 0,
         }
     }
 }
@@ -130,9 +134,23 @@ impl ExperimentConfig {
             cfg.faults.mttr = fj.get_f64_or("mttr", cfg.faults.mttr);
             cfg.faults.seed = fj.get_u64_or("seed", cfg.faults.seed);
             cfg.faults.until = fj.get("until").and_then(|x| x.as_u64());
+            cfg.faults.distribution = fj
+                .get_str_or("distribution", cfg.faults.distribution.as_str())
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!(e))?;
+            cfg.faults.shape = fj.get_f64_or("shape", cfg.faults.shape);
             if cfg.faults.mtbf < 0.0 || cfg.faults.mttr <= 0.0 {
                 bail!("faults.mtbf must be >= 0 and faults.mttr > 0");
             }
+            // Below ~0.1 the derived Weibull scale (mtbf / Γ(1 + 1/k))
+            // collapses toward zero and the 1-tick gap floor turns the
+            // model into a failure storm; real HPC fits are ~0.7-0.8.
+            if cfg.faults.shape < 0.1 {
+                bail!("faults.shape must be >= 0.1 (got {})", cfg.faults.shape);
+            }
+        }
+        if let Some(pl) = v.get("planning") {
+            cfg.planning_horizon = pl.get_u64_or("horizon", cfg.planning_horizon);
         }
         if let Some(pj) = v.get("preemption") {
             cfg.preemption.mode = pj
@@ -217,11 +235,19 @@ impl ExperimentConfig {
                 ("mtbf", Json::num(self.faults.mtbf)),
                 ("mttr", Json::num(self.faults.mttr)),
                 ("seed", Json::num(self.faults.seed as f64)),
+                ("distribution", Json::str(self.faults.distribution.as_str())),
+                ("shape", Json::num(self.faults.shape)),
             ];
             if let Some(u) = self.faults.until {
                 fj.push(("until", Json::num(u as f64)));
             }
             top.push(("faults", Json::obj(fj)));
+        }
+        if self.planning_horizon > 0 {
+            top.push((
+                "planning",
+                Json::obj(vec![("horizon", Json::num(self.planning_horizon as f64))]),
+            ));
         }
         if self.preemption.enabled() {
             top.push((
@@ -376,11 +402,13 @@ mod tests {
 
     const FAULTY: &str = r#"{
         "workload": {"kind": "sdsc-sp2", "jobs": 200, "seed": 3},
-        "faults": {"mtbf": 40000, "mttr": 1800, "seed": 99, "until": 500000},
+        "faults": {"mtbf": 40000, "mttr": 1800, "seed": 99, "until": 500000,
+                   "distribution": "weibull", "shape": 0.8},
         "preemption": {"mode": "checkpoint", "checkpoint_overhead": 60,
                        "restart_overhead": 30, "starvation_threshold": 7200,
                        "priority_bands": 4},
-        "reservations": [{"start": 1000, "duration": 5000, "nodes": 8}]
+        "reservations": [{"start": 1000, "duration": 5000, "nodes": 8}],
+        "planning": {"horizon": 86400}
     }"#;
 
     #[test]
@@ -391,6 +419,9 @@ mod tests {
         assert_eq!(c.faults.mttr, 1800.0);
         assert_eq!(c.faults.seed, 99);
         assert_eq!(c.faults.until, Some(500000));
+        assert_eq!(c.faults.distribution, crate::sim::FaultDistribution::Weibull);
+        assert_eq!(c.faults.shape, 0.8);
+        assert_eq!(c.planning_horizon, 86400);
         assert_eq!(c.preemption.mode, crate::sched::PreemptionMode::Checkpoint);
         assert_eq!(c.preemption.checkpoint_overhead, SimDuration(60));
         assert_eq!(c.preemption.restart_overhead, SimDuration(30));
@@ -413,6 +444,27 @@ mod tests {
         assert_eq!(back.faults, c.faults);
         assert_eq!(back.preemption, c.preemption);
         assert_eq!(back.reservations, c.reservations);
+        assert_eq!(back.planning_horizon, c.planning_horizon);
+    }
+
+    #[test]
+    fn weibull_shape_validated_and_defaults_exp() {
+        let c = ExperimentConfig::parse(r#"{"faults": {"mtbf": 10, "mttr": 5}}"#).unwrap();
+        assert_eq!(c.faults.distribution, crate::sim::FaultDistribution::Exp);
+        assert_eq!(c.faults.shape, 1.0);
+        assert_eq!(c.planning_horizon, 0, "horizon defaults to unlimited");
+        assert!(ExperimentConfig::parse(
+            r#"{"faults": {"mtbf": 10, "mttr": 5, "shape": 0}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"faults": {"mtbf": 10, "mttr": 5, "shape": 0.05}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"faults": {"mtbf": 10, "mttr": 5, "distribution": "pareto"}}"#
+        )
+        .is_err());
     }
 
     #[test]

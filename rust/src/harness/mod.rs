@@ -413,6 +413,7 @@ pub fn fault_comparison(
     workload: &Workload,
     faults: crate::sim::FaultConfig,
     reservations: &[crate::sim::ReservationSpec],
+    planning_horizon: u64,
     cases: &[(Policy, crate::sched::PreemptionConfig)],
 ) -> Vec<FaultRow> {
     cases
@@ -422,6 +423,7 @@ pub fn fault_comparison(
                 .with_faults(faults)
                 .with_preemption(preemption)
                 .with_reservations(reservations.to_vec())
+                .with_planning_horizon(planning_horizon)
                 .run(None);
             FaultRow {
                 policy: r.policy,
@@ -569,7 +571,7 @@ mod tests {
         use crate::sched::{PreemptionConfig, PreemptionMode};
         let w = Das2Model::default().generate(500, 5).scale_arrivals(0.5).drop_infeasible();
         let faults =
-            crate::sim::FaultConfig { mtbf: 5_000.0, mttr: 2_000.0, seed: 11, until: None };
+            crate::sim::FaultConfig { mtbf: 5_000.0, mttr: 2_000.0, seed: 11, ..crate::sim::FaultConfig::default() };
         let ckpt = PreemptionConfig {
             mode: PreemptionMode::Checkpoint,
             checkpoint_overhead: SimDuration(30),
@@ -580,6 +582,7 @@ mod tests {
             &w,
             faults,
             &[],
+            0,
             &[(Policy::Fcfs, PreemptionConfig::default()), (Policy::FcfsBackfill, ckpt)],
         );
         assert_eq!(rows.len(), 2);

@@ -14,6 +14,21 @@
 //!   job lifecycle, per-node core/memory accounting (paper Algorithm 1),
 //!   and the five scheduling algorithms (FCFS, SJF, LJF, FCFS+BestFit,
 //!   FCFS+Backfilling/EASY).
+//! * **planning layer** ([`resources::profile::AvailabilityProfile`]) —
+//!   the unified availability timeline: one incremental free-core step
+//!   function from now into the future, with binary-searched
+//!   O(log n + k) slot queries. Writers: the simulation core only —
+//!   `sim::SchedulerComponent` subtracts a hold at every job start,
+//!   releases the remainder at completion/eviction, feeds reservation
+//!   windows and failure/repair capacity transitions in, and resyncs
+//!   from authoritative cluster state on the rare capacity events.
+//!   Readers: every planning policy, through `sched::SchedInput::
+//!   profile` — EASY derives its shadow time/extra cores from it and
+//!   admission-checks candidates against it (so backfill respects
+//!   *future* advance reservations and outage windows), and
+//!   conservative backfilling clones it into a per-round scratch plan.
+//!   Policies never mutate the shared timeline. The `planning.horizon`
+//!   config knob bounds timeline fidelity; 0 (default) is exact.
 //! * fault/preemption/reservation subsystem (beyond the paper; AccaSim-
 //!   and Reuther-et-al-style scenario diversity): node lifecycle states
 //!   (`Up`/`Draining`/`Down`/`Reserved`) with seeded exponential

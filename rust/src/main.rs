@@ -34,8 +34,10 @@ USAGE:
                 [--accel native|xla] [--ranks R] [--lookahead SECONDS]
                 [--seed S] [--arrival-scale F] [--config experiment.json]
                 [--mtbf S] [--mttr S] [--faults-seed S] [--faults-until T]
+                [--faults-dist exp|weibull] [--faults-shape K]
                 [--preemption none|kill|checkpoint] [--ckpt-overhead S]
                 [--restart-overhead S] [--starvation S] [--priority-bands N]
+                [--horizon TICKS]   # availability-planning horizon (0 = exact)
   sst-sched faults [--workload ...] [--jobs N] [--mtbf S] [--mttr S] ...
                 # policy x preemption-mode comparison on one failure trace
   sst-sched fig <3a|3b|4a|4b|5a|5b|6|7> [--jobs N] [--seed S]
@@ -125,6 +127,14 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     if let Some(u) = args.get("faults-until") {
         cfg.faults.until = Some(u.parse().context("--faults-until expects an integer")?);
     }
+    if let Some(d) = args.get("faults-dist") {
+        cfg.faults.distribution = d.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    }
+    cfg.faults.shape = args.f64_or("faults-shape", cfg.faults.shape)?;
+    if cfg.faults.shape < 0.1 {
+        bail!("--faults-shape must be >= 0.1 (tiny shapes collapse the gap scale)");
+    }
+    cfg.planning_horizon = args.u64_or("horizon", cfg.planning_horizon)?;
     if let Some(m) = args.get("preemption") {
         cfg.preemption.mode = m.parse().map_err(|e: String| anyhow::anyhow!(e))?;
     }
@@ -156,6 +166,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             faults: cfg.faults,
             preemption: cfg.preemption,
             reservations: cfg.reservations.clone(),
+            planning_horizon: cfg.planning_horizon,
         };
         let rep = sst_sched::parallel::run_jobs_parallel_opts(
             &workload,
@@ -179,7 +190,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         .with_seed(cfg.seed)
         .with_faults(cfg.faults)
         .with_preemption(cfg.preemption)
-        .with_reservations(cfg.reservations.clone());
+        .with_reservations(cfg.reservations.clone())
+        .with_planning_horizon(cfg.planning_horizon);
     if cfg.policy == Policy::FcfsBackfill {
         let sched = sst_sched::runtime::backfill_with_accel(accel)?;
         println!("scorer backend    {}", sched.scorer_backend());
@@ -238,7 +250,13 @@ fn cmd_faults(args: &Args) -> Result<()> {
         cases.push((cfg.policy, PreemptionConfig::default()));
         cases.push((cfg.policy, ckpt));
     }
-    let rows = harness::fault_comparison(&workload, cfg.faults, &cfg.reservations, &cases);
+    let rows = harness::fault_comparison(
+        &workload,
+        cfg.faults,
+        &cfg.reservations,
+        cfg.planning_horizon,
+        &cases,
+    );
     harness::print_fault_rows(&rows);
     Ok(())
 }

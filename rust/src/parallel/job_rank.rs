@@ -25,6 +25,10 @@ pub struct RankSimOpts {
     pub faults: FaultConfig,
     pub preemption: PreemptionConfig,
     pub reservations: Vec<ReservationSpec>,
+    /// Availability-timeline planning horizon (ticks; 0 = unlimited).
+    /// Applied per rank unchanged — the horizon is a fidelity knob, not
+    /// a capacity, so it does not rescale with the rank count.
+    pub planning_horizon: u64,
 }
 
 impl RankSimOpts {
@@ -52,6 +56,7 @@ impl Default for RankSimOpts {
             faults: FaultConfig::default(),
             preemption: PreemptionConfig::default(),
             reservations: Vec::new(),
+            planning_horizon: 0,
         }
     }
 }
@@ -192,6 +197,7 @@ pub fn run_jobs_parallel_opts(
                     .with_faults(opts.faults)
                     .with_preemption(opts.preemption)
                     .with_reservations(opts.reservations)
+                    .with_planning_horizon(opts.planning_horizon)
                     .build(),
             }
         })

@@ -7,8 +7,10 @@
 //! is always exact (conservation invariant, property-tested in
 //! `rust/tests/prop_resources.rs`).
 
+pub mod profile;
 pub mod topology;
 
+pub use profile::AvailabilityProfile;
 pub use topology::Topology;
 
 use crate::job::{Job, JobId};
@@ -207,9 +209,24 @@ impl Cluster {
         self.nodes[id].state
     }
 
-    /// Node ids currently in `state`.
-    pub fn nodes_in_state(&self, state: NodeState) -> Vec<usize> {
-        self.nodes.iter().filter(|n| n.state == state).map(|n| n.id).collect()
+    /// Node ids currently in `state`. Lazy — hot paths iterate without
+    /// allocating; collect only when a snapshot is needed.
+    pub fn nodes_in_state(&self, state: NodeState) -> impl Iterator<Item = usize> + '_ {
+        self.nodes.iter().filter(move |n| n.state == state).map(|n| n.id)
+    }
+
+    /// Cores an advance reservation of `nodes` whole nodes will take out
+    /// of service, for the availability planner. Which nodes the claim
+    /// actually picks depends on load at claim time, so the planner uses
+    /// the largest `nodes` capacities — it must not understate the hold
+    /// (on the homogeneous machines the simulator builds this is exact).
+    pub fn reservation_plan_cores(&self, nodes: usize) -> u64 {
+        if nodes >= self.nodes.len() {
+            return self.total_cores;
+        }
+        let mut caps: Vec<u64> = self.nodes.iter().map(|n| n.cores).collect();
+        caps.sort_unstable_by(|a, b| b.cmp(a));
+        caps[..nodes].iter().sum()
     }
 
     /// Nodes with at least one busy core (paper Fig 3(a) metric).
@@ -543,6 +560,15 @@ mod tests {
         c.set_node_state(3, NodeState::Down);
         assert_eq!(c.utilization(), 0.25);
         assert!((c.effective_utilization() - 4.0 / 12.0).abs() < 1e-12);
-        assert_eq!(c.nodes_in_state(NodeState::Down), vec![3]);
+        assert_eq!(c.nodes_in_state(NodeState::Down).collect::<Vec<_>>(), vec![3]);
+    }
+
+    #[test]
+    fn reservation_plan_cores_uses_largest_capacities() {
+        let c = Cluster::heterogeneous(&[(4, 0), (16, 0), (8, 0)]);
+        assert_eq!(c.reservation_plan_cores(1), 16);
+        assert_eq!(c.reservation_plan_cores(2), 24);
+        assert_eq!(c.reservation_plan_cores(3), 28);
+        assert_eq!(c.reservation_plan_cores(99), 28);
     }
 }

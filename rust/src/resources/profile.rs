@@ -1,0 +1,429 @@
+//! The availability timeline — the planning core every forward-looking
+//! scheduling decision reads from (tentpole of the unified planning
+//! refactor).
+//!
+//! [`AvailabilityProfile`] is an incremental, time-indexed free-core
+//! step function: a breakpoint list `(time, free)` where `free` holds
+//! until the next breakpoint and the last segment extends to infinity.
+//! It is owned by the simulation core (`sim::SchedulerComponent`), which
+//! updates it *incrementally* on job start/finish, reservation
+//! claim/release and node failure/repair instead of rebuilding it from
+//! sorted release vectors every scheduling round. Policies receive it
+//! read-only through `sched::SchedInput::profile`:
+//!
+//! * EASY backfilling derives its shadow time and extra cores from
+//!   [`AvailabilityProfile::earliest_slot`] and admission-checks
+//!   candidates with [`AvailabilityProfile::can_place`] — which is what
+//!   makes backfill respect *future* advance reservations and
+//!   down/draining capacity windows;
+//! * conservative backfilling clones the profile into a per-round
+//!   scratch plan and lays every queued job's reservation onto it;
+//! * the preemption layer and the fault injector feed capacity windows
+//!   in through the mutators ([`AvailabilityProfile::hold`],
+//!   [`AvailabilityProfile::add_reservation_hold`],
+//!   [`AvailabilityProfile::remove_node_capacity`] /
+//!   [`AvailabilityProfile::restore_node_capacity`]).
+//!
+//! `free` is stored *signed*: planning holds (e.g. an advance
+//! reservation over a window where jobs are still draining) may
+//! transiently over-commit a window. Readers clamp to zero — an
+//! over-committed window simply offers no cores — while the signed
+//! algebra keeps every `hold`/`release` pair an exact inverse, the
+//! invariant the incremental maintenance relies on
+//! (property-tested in rust/tests/prop_profile.rs).
+//!
+//! The profile is a *planning estimate*, trusted the way backfilling
+//! trusts user runtime estimates: a job that overruns its estimate
+//! appears free in the profile before its cores actually return
+//! (exactly as the per-round rebuild it replaces behaved). Admission is
+//! therefore always re-checked against the exact [`super::Cluster`]
+//! accounting; the profile only decides what is *worth* checking.
+
+/// Incremental future free-core timeline.
+///
+/// Complexity: `earliest_slot`/`can_place` are O(log n + k) in the
+/// number of breakpoints (k = segments actually inspected); the
+/// mutators are O(n) worst case for the breakpoint insert but touch
+/// only the affected span — there is no per-round sort or rebuild.
+#[derive(Debug, Clone)]
+pub struct AvailabilityProfile {
+    /// `(time, free)` breakpoints; times strictly increasing, adjacent
+    /// `free` values distinct (canonical form), last segment open-ended.
+    points: Vec<(u64, i64)>,
+    /// Physical capacity bound (for invariant checks only).
+    total: u64,
+}
+
+impl AvailabilityProfile {
+    /// A profile carrying no planning information (policies that ignore
+    /// the timeline — FCFS/SJF/LJF/BestFit — and their unit tests).
+    /// Every query reports zero availability.
+    pub const EMPTY: AvailabilityProfile = AvailabilityProfile { points: Vec::new(), total: 0 };
+
+    /// Flat profile: `free` cores from `now` on, on a machine with
+    /// `total` physical cores.
+    pub fn new(now: u64, free: u64, total: u64) -> AvailabilityProfile {
+        AvailabilityProfile { points: vec![(now, free as i64)], total }
+    }
+
+    /// Rebuild from scratch: `free_now` cores at `now` plus signed
+    /// capacity deltas at future instants (a running job's release is
+    /// `(est_end, +cores)`, a pending reservation is `(start, -cores)`
+    /// and `(end, +cores)`, a failed node's repair is `(t, +cores)`).
+    /// Deltas at or before `now` merge into the base value, mirroring
+    /// the per-round rebuild this structure replaces. This is the
+    /// resync path for rare capacity transitions and the oracle the
+    /// incremental maintenance is property-tested against.
+    pub fn rebuild(&mut self, now: u64, free_now: u64, mut deltas: Vec<(u64, i64)>) {
+        deltas.retain(|d| d.1 != 0);
+        deltas.sort_unstable();
+        self.points.clear();
+        self.points.push((now, free_now as i64));
+        for (t, d) in deltas {
+            let t = t.max(now);
+            let last = *self.points.last().unwrap();
+            if t == last.0 {
+                self.points.last_mut().unwrap().1 = last.1 + d;
+            } else {
+                self.points.push((t, last.1 + d));
+            }
+        }
+        self.points.dedup_by(|a, b| a.1 == b.1);
+    }
+
+    /// Convenience constructor from `(release_time, cores)` pairs — the
+    /// shape scheduler unit tests and benches speak.
+    pub fn from_releases(
+        now: u64,
+        free_now: u64,
+        total: u64,
+        releases: &[(u64, u64)],
+    ) -> AvailabilityProfile {
+        let mut p = AvailabilityProfile::new(now, free_now, total);
+        p.rebuild(now, free_now, releases.iter().map(|&(t, c)| (t, c as i64)).collect());
+        p
+    }
+
+    /// Physical capacity bound.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Number of breakpoints (memory/perf observability).
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Raw breakpoints (tests and benches).
+    pub fn points(&self) -> &[(u64, i64)] {
+        &self.points
+    }
+
+    /// Drop history before `now`: breakpoints at or before `now` merge
+    /// into the head segment. O(k) in the breakpoints trimmed.
+    pub fn advance(&mut self, now: u64) {
+        let i = self.seg_at(now);
+        if i > 0 {
+            self.points.drain(..i);
+        }
+        if let Some(p) = self.points.first_mut() {
+            if p.0 < now {
+                p.0 = now;
+            }
+        }
+    }
+
+    /// Index of the segment containing `t` (the last breakpoint at or
+    /// before `t`); the first segment when `t` precedes the profile.
+    fn seg_at(&self, t: u64) -> usize {
+        match self.points.binary_search_by_key(&t, |p| p.0) {
+            Ok(i) => i,
+            Err(0) => 0,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Insert a breakpoint at `t` (no-op if present or out of range).
+    fn split_at(&mut self, t: u64) {
+        if t == u64::MAX {
+            return;
+        }
+        match self.points.binary_search_by_key(&t, |p| p.0) {
+            Ok(_) => {}
+            Err(0) => {} // before the profile origin; `apply` clips instead
+            Err(i) => {
+                let f = self.points[i - 1].1;
+                self.points.insert(i, (t, f));
+            }
+        }
+    }
+
+    /// Add `delta` to every instant in `[from, until)`, keeping the
+    /// breakpoint list canonical. Interior points shift together, so
+    /// only the two window boundaries can need coalescing — the whole
+    /// operation touches O(log n + window) points, never the full list.
+    fn apply(&mut self, from: u64, until: u64, delta: i64) {
+        if delta == 0 || self.points.is_empty() {
+            return;
+        }
+        let from = from.max(self.points[0].0);
+        if from >= until {
+            return;
+        }
+        self.split_at(from);
+        self.split_at(until);
+        let a = match self.points.binary_search_by_key(&from, |p| p.0) {
+            Ok(i) => i,
+            Err(_) => unreachable!("split_at(from) must leave a breakpoint at from"),
+        };
+        let mut b = a;
+        while b < self.points.len() && self.points[b].0 < until {
+            self.points[b].1 += delta;
+            b += 1;
+        }
+        // Coalesce the `until` boundary first (does not shift `a`),
+        // then the `from` boundary.
+        if b < self.points.len() && self.points[b].1 == self.points[b - 1].1 {
+            self.points.remove(b);
+        }
+        if a > 0 && self.points[a].1 == self.points[a - 1].1 {
+            self.points.remove(a);
+        }
+    }
+
+    /// A job (or any occupant) takes `cores` over `[from, until)`.
+    pub fn hold(&mut self, from: u64, until: u64, cores: u64) {
+        self.apply(from, until, -(cores as i64));
+    }
+
+    /// Exact inverse of [`AvailabilityProfile::hold`] over the remaining
+    /// window: the occupant left at `from`, earlier than planned.
+    pub fn release(&mut self, from: u64, until: u64, cores: u64) {
+        self.apply(from, until, cores as i64);
+    }
+
+    /// Plan a future advance reservation: `cores` unavailable over
+    /// `[start, end)`.
+    pub fn add_reservation_hold(&mut self, start: u64, end: u64, cores: u64) {
+        self.apply(start, end, -(cores as i64));
+    }
+
+    /// Capacity leaves service over `[from, until)` (node failure with a
+    /// known repair time, a draining window, ...).
+    pub fn remove_node_capacity(&mut self, from: u64, until: u64, cores: u64) {
+        self.apply(from, until, -(cores as i64));
+    }
+
+    /// Exact inverse of [`AvailabilityProfile::remove_node_capacity`]
+    /// over the remaining window (e.g. a node repaired earlier than the
+    /// drawn repair time).
+    pub fn restore_node_capacity(&mut self, from: u64, until: u64, cores: u64) {
+        self.apply(from, until, cores as i64);
+    }
+
+    /// Free cores at instant `t`, clamped at zero. Instants before the
+    /// profile origin read the origin segment (the timeline carries no
+    /// history — callers plan from `now` forward).
+    pub fn free_at(&self, t: u64) -> u64 {
+        if self.points.is_empty() {
+            return 0;
+        }
+        self.points[self.seg_at(t)].1.max(0) as u64
+    }
+
+    /// Whether `cores` are free throughout `[from, from + duration)`.
+    /// The pre-origin part of the window, if any, is the past and is
+    /// ignored — only the portion the timeline covers is checked
+    /// (mirrors `earliest_slot`'s origin clamp).
+    pub fn can_place(&self, from: u64, duration: u64, cores: u64) -> bool {
+        if duration == 0 {
+            return true;
+        }
+        if self.points.is_empty() {
+            return false;
+        }
+        let end = from.saturating_add(duration);
+        let from = from.max(self.points[0].0);
+        if from >= end {
+            return true; // window entirely before the origin
+        }
+        let c = cores as i64;
+        let mut i = self.seg_at(from);
+        loop {
+            if self.points[i].1 < c {
+                return false;
+            }
+            let seg_end = self.points.get(i + 1).map(|p| p.0).unwrap_or(u64::MAX);
+            if seg_end >= end {
+                return true;
+            }
+            i += 1;
+        }
+    }
+
+    /// Earliest time >= `from` at which `cores` are free continuously
+    /// for `duration`. Binary-searches to the starting segment and scans
+    /// forward — O(log n + k) — instead of the quadratic
+    /// candidate-times-x-segments scan the old per-policy profile used.
+    /// `None` only when the request exceeds the profile's eventual
+    /// capacity (infeasible job).
+    pub fn earliest_slot(&self, from: u64, cores: u64, duration: u64) -> Option<u64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let c = cores as i64;
+        let duration = duration.max(1);
+        let mut candidate = from.max(self.points[0].0);
+        let mut i = self.seg_at(candidate);
+        loop {
+            let free = self.points[i].1;
+            let seg_end = self.points.get(i + 1).map(|p| p.0).unwrap_or(u64::MAX);
+            if free < c {
+                if seg_end == u64::MAX {
+                    return None; // blocked forever: infeasible request
+                }
+                candidate = seg_end;
+            } else if seg_end == u64::MAX || seg_end >= candidate.saturating_add(duration) {
+                return Some(candidate);
+            }
+            i += 1;
+            debug_assert!(i < self.points.len(), "open-ended tail must terminate the scan");
+        }
+    }
+
+    /// Structural invariants (tests): strictly increasing times,
+    /// canonical (no adjacent equal frees), free never above physical
+    /// capacity.
+    pub fn check_invariants(&self) -> bool {
+        !self.points.is_empty()
+            && self.points.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 != w[1].1)
+            && self.points.iter().all(|p| p.1 <= self.total as i64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_profile_reads_everywhere() {
+        let p = AvailabilityProfile::new(10, 6, 8);
+        assert_eq!(p.free_at(10), 6);
+        assert_eq!(p.free_at(1_000_000), 6);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn releases_accumulate() {
+        let p = AvailabilityProfile::from_releases(0, 4, 12, &[(100, 4), (50, 2), (100, 2)]);
+        assert_eq!(p.free_at(0), 4);
+        assert_eq!(p.free_at(50), 6);
+        assert_eq!(p.free_at(99), 6);
+        assert_eq!(p.free_at(100), 12);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn hold_and_release_are_inverse() {
+        let mut p = AvailabilityProfile::from_releases(0, 4, 8, &[(100, 4)]);
+        let before = p.points().to_vec();
+        p.hold(0, 60, 3);
+        assert_eq!(p.free_at(0), 1);
+        assert_eq!(p.free_at(59), 1);
+        assert_eq!(p.free_at(60), 4);
+        p.release(0, 60, 3);
+        assert_eq!(p.points(), &before[..]);
+    }
+
+    #[test]
+    fn signed_over_commit_clamps_on_read() {
+        let mut p = AvailabilityProfile::new(0, 4, 8);
+        p.add_reservation_hold(10, 20, 8); // more than is free: window over-committed
+        assert_eq!(p.free_at(10), 0);
+        assert_eq!(p.points()[1].1, -4, "algebra stays exact internally");
+        p.restore_node_capacity(10, 20, 8);
+        assert_eq!(p.free_at(10), 4);
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn earliest_slot_basic() {
+        // 4 free now, +4 at t=100 (mirrors the old conservative profile test).
+        let p = AvailabilityProfile::from_releases(0, 4, 8, &[(100, 4)]);
+        assert_eq!(p.earliest_slot(0, 6, 50), Some(100));
+        assert_eq!(p.earliest_slot(0, 4, 1000), Some(0));
+        assert_eq!(p.earliest_slot(0, 100, 10), None);
+    }
+
+    #[test]
+    fn earliest_slot_skips_windows() {
+        // Free 8, but a reservation takes everything over [50, 150).
+        let mut p = AvailabilityProfile::new(0, 8, 8);
+        p.add_reservation_hold(50, 150, 8);
+        // A 10-tick 4-core job fits before the window...
+        assert_eq!(p.earliest_slot(0, 4, 10), Some(0));
+        // ...but a 60-tick job would collide: earliest slot is after it.
+        assert_eq!(p.earliest_slot(0, 4, 60), Some(150));
+        // From inside the window, everything waits for its end.
+        assert_eq!(p.earliest_slot(70, 1, 1), Some(150));
+    }
+
+    #[test]
+    fn earliest_slot_needs_contiguous_window() {
+        // Free dips at [30, 40): a 35-tick window starting at 0 fails,
+        // the next candidate is 40.
+        let mut p = AvailabilityProfile::new(0, 8, 8);
+        p.hold(30, 40, 6);
+        assert_eq!(p.earliest_slot(0, 4, 35), Some(40));
+        assert_eq!(p.earliest_slot(0, 2, 35), Some(0));
+    }
+
+    #[test]
+    fn can_place_matches_earliest_slot_at_from() {
+        let mut p = AvailabilityProfile::new(0, 8, 8);
+        p.add_reservation_hold(30, 130, 8);
+        assert!(p.can_place(0, 30, 8));
+        assert!(!p.can_place(0, 31, 1));
+        assert!(p.can_place(130, 1_000_000, 8));
+        assert!(p.can_place(0, 0, 99), "empty window always fits");
+    }
+
+    #[test]
+    fn advance_trims_history() {
+        let mut p = AvailabilityProfile::from_releases(0, 2, 8, &[(10, 2), (20, 4)]);
+        p.advance(15);
+        assert_eq!(p.points()[0], (15, 4));
+        assert_eq!(p.free_at(15), 4);
+        assert_eq!(p.free_at(20), 8);
+        assert!(p.check_invariants());
+        // Advancing before the first point is a no-op.
+        p.advance(3);
+        assert_eq!(p.points()[0], (15, 4));
+    }
+
+    #[test]
+    fn rebuild_merges_past_deltas_into_base() {
+        let mut p = AvailabilityProfile::new(0, 0, 8);
+        p.rebuild(100, 4, vec![(50, 4), (200, 4), (200, -2)]);
+        assert_eq!(p.free_at(100), 8, "past release merges into the base");
+        assert_eq!(p.free_at(200), 10);
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn split_reserve_is_stable() {
+        // Mirrors the old conservative profile split test.
+        let mut p = AvailabilityProfile::from_releases(10, 8, 16, &[(20, 4), (30, 4)]);
+        p.hold(15, 25, 2);
+        assert_eq!(p.free_at(10), 8);
+        assert_eq!(p.free_at(15), 6);
+        assert_eq!(p.free_at(20), 10);
+        assert_eq!(p.free_at(25), 12);
+        assert_eq!(p.free_at(30), 16);
+        assert!(p.check_invariants());
+    }
+}

@@ -4,6 +4,18 @@
 //! that reservation — they either finish before the shadow time or use
 //! only the *extra* cores the head will not need.
 //!
+//! Planning runs against the shared availability timeline
+//! ([`AvailabilityProfile`], `SchedInput::profile`): the shadow time is
+//! the head's earliest contiguous slot and every candidate is checked
+//! against the timeline for its whole estimated run, so backfill now
+//! respects *future* advance reservations and down/draining capacity
+//! windows instead of only walking running-job releases. On a profile
+//! with no such windows (monotone releases) the decisions match the
+//! classic release-walk, with one deliberate exception: when several
+//! releases share the shadow instant, `extra` now counts all of them —
+//! the textbook EASY definition (free cores at the shadow time minus
+//! the head's request); the old walk stopped mid-tick and undercounted.
+//!
 //! Candidate ranking and feasibility pre-filtering run through a
 //! [`QueueScorer`] — the batched O(Q x N) computation that the L1 Pallas
 //! kernel implements. The default is the pure-Rust [`NativeScorer`];
@@ -11,8 +23,7 @@
 //! re-checked in exact integer arithmetic, so scorer backend choice can
 //! never change a scheduling decision (asserted by rust/tests/xla_parity).
 
-use crate::core::time::SimTime;
-use crate::resources::{AllocPolicy, Allocation, Cluster};
+use crate::resources::{AllocPolicy, Allocation, AvailabilityProfile, Cluster};
 use crate::sched::scorer::{NativeScorer, QueueScorer, ScoreParams};
 use crate::sched::{SchedInput, Scheduler};
 
@@ -47,30 +58,6 @@ impl BackfillScheduler {
     pub fn scorer_backend(&self) -> &'static str {
         self.scorer.backend()
     }
-
-    /// Shadow-time computation: walk running-job releases (by *estimated*
-    /// end) until the head job fits. Returns (shadow_time, extra_cores):
-    /// the head's reservation start and the cores it leaves unused then.
-    fn reservation(
-        head_cores: u64,
-        free_now: u64,
-        releases: &mut Vec<(SimTime, u64)>,
-        now: SimTime,
-    ) -> Option<(SimTime, u64)> {
-        releases.sort();
-        let mut avail = free_now;
-        let mut shadow = now;
-        let mut i = 0;
-        while avail < head_cores {
-            if i >= releases.len() {
-                return None; // head can never fit (infeasible)
-            }
-            avail += releases[i].1;
-            shadow = releases[i].0;
-            i += 1;
-        }
-        Some((shadow, avail - head_cores))
-    }
 }
 
 impl Scheduler for BackfillScheduler {
@@ -78,14 +65,22 @@ impl Scheduler for BackfillScheduler {
         "fcfs-backfill"
     }
 
+    /// Future availability comes from `SchedInput::profile`; the
+    /// running-job snapshot is not needed (§Perf: the driver skips it).
+    fn uses_running_info(&self) -> bool {
+        false
+    }
+
     fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
+        let now = input.now.ticks();
         let mut out = Vec::new();
 
         // Phase 1 — plain FCFS from the head while jobs fit. Lazy single
         // pass: under a blocked head this touches only the prefix, never
-        // the whole queue (§Perf).
+        // the whole queue (§Perf). Starts are only noted here; the
+        // planning clone below is paid solely when the head blocks.
         let mut queue_iter = input.queue.iter();
-        let mut phase1_releases: Vec<(SimTime, u64)> = Vec::new();
+        let mut phase1: Vec<(u64, u64)> = Vec::new();
         let mut head = None;
         for job in queue_iter.by_ref() {
             if !cluster.feasible(job) {
@@ -93,7 +88,7 @@ impl Scheduler for BackfillScheduler {
             }
             match cluster.allocate(job, AllocPolicy::FirstFit) {
                 Some(a) => {
-                    phase1_releases.push((input.now + job.est_runtime, a.cores()));
+                    phase1.push((now + job.est_runtime.ticks(), a.cores()));
                     out.push(a);
                 }
                 None => {
@@ -104,17 +99,30 @@ impl Scheduler for BackfillScheduler {
         }
         let Some(head) = head else { return out };
 
-        // Phase 2 — the head is blocked: compute its reservation from
-        // running jobs plus phase-1 starts (both hold cores until their
-        // estimated ends).
-        let mut releases: Vec<(SimTime, u64)> =
-            input.running.iter().map(|r| (r.est_end, r.cores)).collect();
-        releases.extend(phase1_releases);
-        let Some((shadow, extra)) =
-            Self::reservation(head.cores, cluster.free_cores(), &mut releases, input.now)
-        else {
-            return out; // head infeasible; nothing more to do
+        // Scratch plan for this round: the shared timeline plus this
+        // round's own starts. Cloning is O(breakpoints) — no sort, no
+        // rebuild from raw release vectors.
+        let mut plan: AvailabilityProfile = input.profile.clone();
+        for &(end, cores) in &phase1 {
+            plan.hold(now, end, cores);
+        }
+
+        // Phase 2 — the head is blocked: its reservation starts at the
+        // earliest slot where it can run its whole estimate (with future
+        // reservation/outage windows, the first instant enough cores
+        // free up is no longer necessarily a slot it can keep).
+        let head_est = head.est_runtime.ticks().max(1);
+        let Some(shadow) = plan.earliest_slot(now, head.cores, head_est) else {
+            return out; // head exceeds eventual capacity; nothing more to do
         };
+        let extra = plan.free_at(shadow).saturating_sub(head.cores);
+        // Lay the head's own reservation into the plan: with capacity
+        // windows after the shadow (non-monotone profiles), a candidate
+        // fitting the classic extra budget could still collide with
+        // head + window later — can_place below must see the head's
+        // claim. On monotone profiles this changes no decision (a
+        // within-extra candidate always clears it).
+        plan.hold(shadow, shadow.saturating_add(head_est), head.cores);
 
         // Phase 3 — score the candidates behind the head (the batched
         // O(Q x N) inner loop -> scorer / Pallas kernel).
@@ -131,7 +139,7 @@ impl Scheduler for BackfillScheduler {
             wait.push((input.now - j.submit).as_f64() as f32);
         }
         let params = ScoreParams {
-            shadow_time: (shadow - input.now).as_f64() as f32,
+            shadow_time: (shadow - now) as f32,
             extra_cores: extra as f32,
             aging_weight: self.aging_weight,
             waste_weight: self.waste_weight,
@@ -158,15 +166,24 @@ impl Scheduler for BackfillScheduler {
             if job.cores > cluster.free_cores() {
                 continue;
             }
-            let finishes_by_shadow = input.now + job.est_runtime <= shadow;
+            let cand_est = job.est_runtime.ticks().max(1);
+            let finishes_by_shadow = now + cand_est <= shadow;
             let within_extra = job.cores <= remaining_extra;
             if !finishes_by_shadow && !within_extra {
+                continue;
+            }
+            // The candidate must fit the availability timeline for its
+            // whole estimated run — this is what makes EASY refuse a
+            // start that would collide with a future advance reservation
+            // or a planned capacity outage.
+            if !plan.can_place(now, cand_est, job.cores) {
                 continue;
             }
             if let Some(a) = cluster.allocate(job, AllocPolicy::FirstFit) {
                 if !finishes_by_shadow {
                     remaining_extra -= job.cores;
                 }
+                plan.hold(now, now + cand_est, a.cores());
                 out.push(a);
             }
         }
@@ -177,8 +194,22 @@ impl Scheduler for BackfillScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::time::SimTime;
     use crate::job::{Job, JobId, WaitQueue};
     use crate::sched::RunningJob;
+
+    /// Profile matching a cluster with `running` holding cores until
+    /// their estimated ends (what the simulation core maintains).
+    fn profile_of(cluster: &Cluster, running: &[RunningJob], now: u64) -> AvailabilityProfile {
+        let releases: Vec<(u64, u64)> =
+            running.iter().map(|r| (r.est_end.ticks(), r.cores)).collect();
+        AvailabilityProfile::from_releases(
+            now,
+            cluster.free_cores(),
+            cluster.total_cores(),
+            &releases,
+        )
+    }
 
     fn run(
         queue: &WaitQueue,
@@ -186,7 +217,8 @@ mod tests {
         cluster: &mut Cluster,
         now: u64,
     ) -> Vec<JobId> {
-        let input = SchedInput { now: SimTime(now), queue, running };
+        let profile = profile_of(cluster, running, now);
+        let input = SchedInput { now: SimTime(now), queue, running, profile: &profile };
         BackfillScheduler::new()
             .schedule(&input, cluster)
             .iter()
@@ -278,19 +310,25 @@ mod tests {
     }
 
     #[test]
-    fn reservation_math() {
-        let mut rel = vec![(SimTime(50), 2u64), (SimTime(30), 2), (SimTime(90), 4)];
-        let (shadow, extra) =
-            BackfillScheduler::reservation(6, 2, &mut rel, SimTime(0)).unwrap();
-        // avail: 2 -> +2@30 -> +2@50 = 6 >= 6 at t=50.
-        assert_eq!(shadow, SimTime(50));
-        assert_eq!(extra, 0);
-        let mut rel2 = vec![(SimTime(10), 8u64)];
-        let (shadow2, extra2) =
-            BackfillScheduler::reservation(4, 0, &mut rel2, SimTime(0)).unwrap();
-        assert_eq!(shadow2, SimTime(10));
-        assert_eq!(extra2, 4);
-        assert!(BackfillScheduler::reservation(100, 0, &mut vec![], SimTime(0)).is_none());
+    fn reservation_math_via_profile() {
+        // The shadow/extra pair now comes from the availability profile.
+        let p = AvailabilityProfile::from_releases(
+            0,
+            2,
+            8,
+            &[(50, 2), (30, 2), (90, 2)],
+        );
+        // avail: 2 -> 4@30 -> 6@50 >= 6 at t=50.
+        assert_eq!(p.earliest_slot(0, 6, 1), Some(50));
+        assert_eq!(p.free_at(50).saturating_sub(6), 0);
+        let p2 = AvailabilityProfile::from_releases(0, 0, 8, &[(10, 8)]);
+        assert_eq!(p2.earliest_slot(0, 4, 1), Some(10));
+        assert_eq!(p2.free_at(10).saturating_sub(4), 4);
+        // Infeasible request never finds a slot.
+        assert_eq!(
+            AvailabilityProfile::from_releases(0, 0, 8, &[]).earliest_slot(0, 100, 1),
+            None
+        );
     }
 
     #[test]
@@ -306,5 +344,55 @@ mod tests {
         q.push(Job::with_estimate(2, 1, 2, 10_000, 10_000)); // older but later slot
         let started = run(&q, &running, &mut c, 60);
         assert_eq!(started, vec![2]);
+    }
+
+    #[test]
+    fn refuses_candidate_colliding_with_future_reservation() {
+        // 8-core machine, 4 running until t=100, head wants 8. A future
+        // advance reservation holds the whole machine over [30, 130).
+        // Candidate (4c, est 50) finishes by the classic shadow and fits
+        // free cores now — the release-walk EASY admitted it — but its
+        // run [0, 50) collides with the reservation window: refused.
+        let mut c = Cluster::homogeneous(2, 4, 0);
+        let _ra = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100), start: SimTime(0), priority: 0 }];
+        let mut profile = profile_of(&c, &running, 0);
+        profile.add_reservation_hold(30, 130, 8);
+        let mut q = WaitQueue::new();
+        q.push(Job::with_estimate(1, 0, 8, 100, 100)); // head, blocked
+        q.push(Job::with_estimate(2, 1, 4, 50, 50)); // would collide
+        let input = SchedInput { now: SimTime(0), queue: &q, running: &running, profile: &profile };
+        let started: Vec<JobId> = BackfillScheduler::new()
+            .schedule(&input, &mut c)
+            .iter()
+            .map(|a| a.job_id)
+            .collect();
+        assert!(started.is_empty(), "candidate must not collide with the reservation");
+
+        // A short candidate that clears the window start is still fine.
+        let mut q2 = WaitQueue::new();
+        q2.push(Job::with_estimate(1, 0, 8, 100, 100));
+        q2.push(Job::with_estimate(3, 1, 4, 30, 30)); // done exactly at t=30
+        let input = SchedInput { now: SimTime(0), queue: &q2, running: &running, profile: &profile };
+        let started: Vec<JobId> = BackfillScheduler::new()
+            .schedule(&input, &mut c)
+            .iter()
+            .map(|a| a.job_id)
+            .collect();
+        assert_eq!(started, vec![3]);
+    }
+
+    #[test]
+    fn shadow_respects_reservation_window() {
+        // Head's reservation lands after the hold window, not at the
+        // first instant enough cores free up inside it.
+        let mut c = Cluster::homogeneous(1, 8, 0);
+        let _ra = c.allocate(&Job::simple(99, 0, 4, 100), AllocPolicy::FirstFit).unwrap();
+        let running = [RunningJob { id: 99, cores: 4, est_end: SimTime(100), start: SimTime(0), priority: 0 }];
+        let mut profile = profile_of(&c, &running, 0);
+        profile.add_reservation_hold(120, 200, 8);
+        // Head (8c, est 100): release at 100 gives 8 free, but only for
+        // 20 ticks before the reservation window — slot slides to 200.
+        assert_eq!(profile.earliest_slot(0, 8, 100), Some(200));
     }
 }

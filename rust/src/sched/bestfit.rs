@@ -39,7 +39,12 @@ mod tests {
     use crate::job::{Job, WaitQueue};
 
     fn input<'a>(queue: &'a WaitQueue) -> SchedInput<'a> {
-        SchedInput { now: SimTime(0), queue, running: &[] }
+        SchedInput {
+            now: SimTime(0),
+            queue,
+            running: &[],
+            profile: &crate::resources::AvailabilityProfile::EMPTY,
+        }
     }
 
     #[test]

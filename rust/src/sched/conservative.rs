@@ -6,108 +6,16 @@
 //! techniques its simulator is meant to host; this is the classic
 //! comparator (Mu'alem & Feitelson 2001) and an ablation point for the
 //! EASY scheduler.
+//!
+//! Planning runs on the shared availability timeline
+//! ([`AvailabilityProfile`], `SchedInput::profile`): the round clones it
+//! into a scratch plan and lays one reservation per queued job with the
+//! binary-searched `earliest_slot` — the private per-policy profile and
+//! its quadratic slot scan are gone, and reservations/outage windows the
+//! simulation core feeds into the timeline bound every slot.
 
-use crate::resources::{AllocPolicy, Allocation, Cluster};
+use crate::resources::{AllocPolicy, Allocation, AvailabilityProfile, Cluster};
 use crate::sched::{SchedInput, Scheduler};
-
-/// Future free-core profile: breakpoints (time, free) with free constant
-/// until the next breakpoint; last entry extends to infinity.
-#[derive(Debug, Clone)]
-pub(crate) struct Profile {
-    points: Vec<(u64, u64)>,
-}
-
-impl Profile {
-    /// Build from current free cores and (est_end, cores) releases.
-    pub fn new(now: u64, free_now: u64, releases: &mut Vec<(u64, u64)>) -> Profile {
-        releases.sort_unstable();
-        let mut points = vec![(now, free_now)];
-        for &(t, c) in releases.iter() {
-            let last = *points.last().unwrap();
-            let t = t.max(now);
-            if t == last.0 {
-                points.last_mut().unwrap().1 = last.1 + c;
-            } else {
-                points.push((t, last.1 + c));
-            }
-        }
-        Profile { points }
-    }
-
-    /// Earliest time >= `from` at which `cores` are free continuously for
-    /// `duration`. The profile is finite and ends at full capacity, so a
-    /// feasible job always finds a slot.
-    pub fn earliest_slot(&self, from: u64, cores: u64, duration: u64) -> Option<u64> {
-        let n = self.points.len();
-        for i in 0..n {
-            let (t_i, _) = self.points[i];
-            let start = t_i.max(from);
-            // Check [start, start+duration) against every overlapping
-            // segment.
-            let end = start.saturating_add(duration);
-            let ok = self
-                .points
-                .iter()
-                .enumerate()
-                .all(|(j, &(t_j, free_j))| {
-                    let seg_start = t_j;
-                    let seg_end =
-                        self.points.get(j + 1).map(|p| p.0).unwrap_or(u64::MAX);
-                    // Segment overlaps the candidate interval?
-                    if seg_end <= start || seg_start >= end {
-                        true
-                    } else {
-                        free_j >= cores
-                    }
-                });
-            if ok {
-                return Some(start);
-            }
-        }
-        None
-    }
-
-    /// Reserve `cores` over [start, start+duration): subtract from every
-    /// overlapping segment, splitting breakpoints as needed.
-    pub fn reserve(&mut self, start: u64, cores: u64, duration: u64) {
-        let end = start.saturating_add(duration);
-        self.split_at(start);
-        self.split_at(end);
-        for p in self.points.iter_mut() {
-            if p.0 >= start && p.0 < end {
-                debug_assert!(p.1 >= cores, "reservation over-subscribes profile");
-                p.1 -= cores;
-            }
-        }
-    }
-
-    fn split_at(&mut self, t: u64) {
-        if t == u64::MAX {
-            return;
-        }
-        match self.points.binary_search_by_key(&t, |p| p.0) {
-            Ok(_) => {}
-            Err(idx) => {
-                if idx == 0 {
-                    return; // before profile start: nothing to split
-                }
-                let free = self.points[idx - 1].1;
-                self.points.insert(idx, (t, free));
-            }
-        }
-    }
-
-    #[cfg(test)]
-    fn free_at(&self, t: u64) -> u64 {
-        let mut free = self.points[0].1;
-        for &(pt, pf) in &self.points {
-            if pt <= t {
-                free = pf;
-            }
-        }
-        free
-    }
-}
 
 /// Conservative backfilling scheduler.
 #[derive(Debug, Default)]
@@ -124,28 +32,32 @@ impl Scheduler for ConservativeScheduler {
         "cons-backfill"
     }
 
+    /// Future availability comes from `SchedInput::profile`; the
+    /// running-job snapshot is not needed (§Perf: the driver skips it).
+    fn uses_running_info(&self) -> bool {
+        false
+    }
+
     fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
         let now = input.now.ticks();
-        let mut releases: Vec<(u64, u64)> =
-            input.running.iter().map(|r| (r.est_end.ticks(), r.cores)).collect();
-        let mut profile = Profile::new(now, cluster.free_cores(), &mut releases);
+        let mut plan: AvailabilityProfile = input.profile.clone();
         let mut out = Vec::new();
         for job in input.queue.iter() {
             if !cluster.feasible(job) {
                 continue;
             }
             let est = job.est_runtime.ticks().max(1);
-            let Some(start) = profile.earliest_slot(now, job.cores, est) else {
-                continue; // cannot happen for feasible jobs (profile ends full)
+            let Some(start) = plan.earliest_slot(now, job.cores, est) else {
+                continue; // cannot happen for feasible jobs (timeline ends full)
             };
-            profile.reserve(start, job.cores, est);
+            plan.hold(start, start.saturating_add(est), job.cores);
             if start == now {
                 if let Some(a) = cluster.allocate(job, AllocPolicy::FirstFit) {
                     out.push(a);
                 } else {
-                    // Profile said "fits now" but placement failed — can
-                    // only happen on per-node memory constraints; treat
-                    // as reserved-for-later.
+                    // The timeline said "fits now" but placement failed —
+                    // per-node memory constraints or a job overrunning
+                    // its estimate; its reservation stays in the plan.
                 }
             }
         }
@@ -160,17 +72,44 @@ mod tests {
     use crate::job::{Job, WaitQueue};
     use crate::sched::{Policy, RunningJob};
 
+    fn profile_of(cluster: &Cluster, running: &[RunningJob], now: u64) -> AvailabilityProfile {
+        let releases: Vec<(u64, u64)> =
+            running.iter().map(|r| (r.est_end.ticks(), r.cores)).collect();
+        AvailabilityProfile::from_releases(
+            now,
+            cluster.free_cores(),
+            cluster.total_cores(),
+            &releases,
+        )
+    }
+
+    fn run(
+        queue: &WaitQueue,
+        running: &[RunningJob],
+        cluster: &mut Cluster,
+        now: u64,
+    ) -> Vec<u64> {
+        let profile = profile_of(cluster, running, now);
+        let input = SchedInput { now: SimTime(now), queue, running, profile: &profile };
+        ConservativeScheduler::new()
+            .schedule(&input, cluster)
+            .iter()
+            .map(|a| a.job_id)
+            .collect()
+    }
+
     #[test]
     fn profile_slots_and_reservations() {
-        // 4 free now, +4 at t=100.
-        let mut p = Profile::new(0, 4, &mut vec![(100, 4)]);
+        // 4 free now, +4 at t=100 (the old private-profile smoke test,
+        // now exercising the shared planner).
+        let mut p = AvailabilityProfile::from_releases(0, 4, 8, &[(100, 4)]);
         assert_eq!(p.free_at(0), 4);
         assert_eq!(p.free_at(100), 8);
         // 6 cores for 50: earliest at t=100.
         assert_eq!(p.earliest_slot(0, 6, 50), Some(100));
         // 4 cores for 1000: now.
         assert_eq!(p.earliest_slot(0, 4, 1000), Some(0));
-        p.reserve(0, 4, 1000);
+        p.hold(0, 1000, 4);
         assert_eq!(p.free_at(0), 0);
         assert_eq!(p.free_at(100), 4);
         assert_eq!(p.free_at(1000), 8);
@@ -186,12 +125,7 @@ mod tests {
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(1, 0, 8, 100, 100)); // reserved at t=100
         q.push(Job::with_estimate(2, 1, 4, 50, 50)); // fits now & by t=100
-        let input = SchedInput { now: SimTime(0), queue: &q, running: &running };
-        let started: Vec<u64> = ConservativeScheduler::new()
-            .schedule(&input, &mut c)
-            .iter()
-            .map(|a| a.job_id)
-            .collect();
+        let started = run(&q, &running, &mut c, 0);
         assert_eq!(started, vec![2]);
     }
 
@@ -208,21 +142,10 @@ mod tests {
         q.push(Job::with_estimate(1, 0, 6, 100, 100)); // reserved t=100 (extra 2)
         q.push(Job::with_estimate(2, 1, 2, 300, 300)); // reserved t=100..? fits extra at 100
         q.push(Job::with_estimate(3, 2, 2, 10_000, 10_000));
-        let input = SchedInput { now: SimTime(0), queue: &q, running: &running };
-        let started: Vec<u64> = ConservativeScheduler::new()
-            .schedule(&input, &mut c)
-            .iter()
-            .map(|a| a.job_id)
-            .collect();
-        // Job 2's reservation lands at t=100 on the extra cores; job 3
-        // would then collide with it until t=400, and with the full
-        // machine being busy, its earliest slot is not "now": nothing
-        // starts... unless a slot exists now: 4 cores free now; job 2
-        // needs 2 for 300 -> interval [0,300) has 4 free until 100 then
-        // depends on reservations: job 1 reserved [100,200) on 6 cores
-        // leaves 2; job 2 CAN run [0,300)? [100,200) has 8-6=2 free, job
-        // 2 takes them -> yes, job 2 starts now. Job 3 then finds zero
-        // free in [100,200): waits.
+        // Job 2's reservation lands on the extra cores; job 3 would then
+        // collide with it and with job 1's window — only job 2 can start
+        // now (4 free; its whole [0,300) window keeps >= 2 free).
+        let started = run(&q, &running, &mut c, 0);
         assert_eq!(started, vec![2]);
     }
 
@@ -233,13 +156,30 @@ mod tests {
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(1, 0, 4, 100, 100));
         q.push(Job::with_estimate(2, 1, 4, 100, 100));
-        let input = SchedInput { now: SimTime(0), queue: &q, running: &[] };
+        let started = run(&q, &[], &mut c, 0);
+        assert_eq!(started, vec![1]);
+    }
+
+    #[test]
+    fn plans_around_future_reservation() {
+        // 8 free cores, but an advance reservation holds the whole
+        // machine over [40, 140): a 100-tick job cannot start now even
+        // though the cores are free at this instant.
+        let mut c = Cluster::homogeneous(1, 8, 0);
+        let mut profile = AvailabilityProfile::new(0, 8, 8);
+        profile.add_reservation_hold(40, 140, 8);
+        let mut q = WaitQueue::new();
+        q.push(Job::with_estimate(1, 0, 8, 100, 100)); // collides: waits for 140
+        q.push(Job::with_estimate(2, 1, 8, 40, 40)); // exactly clears the window start
+        let input = SchedInput { now: SimTime(0), queue: &q, running: &[], profile: &profile };
         let started: Vec<u64> = ConservativeScheduler::new()
             .schedule(&input, &mut c)
             .iter()
             .map(|a| a.job_id)
             .collect();
-        assert_eq!(started, vec![1]);
+        // Job 1 is reserved at t=140; job 2 fits [0, 40) *and* does not
+        // collide with job 1's reservation -> starts now.
+        assert_eq!(started, vec![2]);
     }
 
     #[test]
@@ -257,16 +197,5 @@ mod tests {
         // Conservative is more cautious: mean wait at least EASY's minus
         // noise (it cannot beat EASY by much on this workload family).
         assert!(mw(&cons) + 1e-9 >= mw(&easy) * 0.8, "cons {} easy {}", mw(&cons), mw(&easy));
-    }
-
-    #[test]
-    fn profile_split_is_stable() {
-        let mut p = Profile::new(10, 8, &mut vec![(20, 4), (30, 4)]);
-        p.reserve(15, 2, 10); // splits at 15 and 25
-        assert_eq!(p.free_at(10), 8);
-        assert_eq!(p.free_at(15), 6);
-        assert_eq!(p.free_at(20), 10);
-        assert_eq!(p.free_at(25), 12);
-        assert_eq!(p.free_at(30), 16);
     }
 }

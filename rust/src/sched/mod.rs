@@ -3,11 +3,13 @@
 //! The paper's five policies — FCFS, SJF, LJF, FCFS+BestFit,
 //! FCFS+Backfilling (EASY) — plus conservative backfilling as the
 //! classic ablation comparator. A scheduler is a pure decision procedure: given
-//! the wait queue (arrival order), the set of running jobs and the cluster,
-//! it performs allocations and returns them. It never mutates jobs or the
-//! queue — the simulation driver owns lifecycle transitions — so the same
-//! scheduler implementations run unchanged inside the event-driven
-//! simulator, the CQsim-like baseline, and the parallel engine.
+//! the wait queue (arrival order), the shared availability timeline
+//! ([`crate::resources::AvailabilityProfile`], future free cores) and the
+//! cluster, it performs allocations and returns them. It never mutates jobs,
+//! the queue or the shared profile — the simulation driver owns lifecycle
+//! transitions and profile maintenance — so the same scheduler
+//! implementations run unchanged inside the event-driven simulator, the
+//! CQsim-like baseline, and the parallel engine.
 
 pub mod backfill;
 pub mod bestfit;
@@ -29,7 +31,7 @@ pub use sjf::SjfScheduler;
 
 use crate::core::time::SimTime;
 use crate::job::{JobId, WaitQueue};
-use crate::resources::{Allocation, Cluster};
+use crate::resources::{Allocation, AvailabilityProfile, Cluster};
 use std::str::FromStr;
 
 /// What the scheduler knows about a running job (for shadow-time math and
@@ -52,7 +54,16 @@ pub struct RunningJob {
 pub struct SchedInput<'a> {
     pub now: SimTime,
     pub queue: &'a WaitQueue,
+    /// Running-job identities — read by the preemption layer for victim
+    /// selection. Planning policies do not walk this: future
+    /// availability comes from `profile`.
     pub running: &'a [RunningJob],
+    /// The shared availability timeline (free cores from `now` into the
+    /// future), maintained incrementally by the simulation core. This is
+    /// how backfilling sees future reservations and down/draining
+    /// windows; policies must not mutate it — clone into a scratch plan
+    /// to lay tentative reservations.
+    pub profile: &'a AvailabilityProfile,
 }
 
 /// A scheduling algorithm.
@@ -71,9 +82,11 @@ pub trait Scheduler {
         Vec::new()
     }
 
-    /// Whether the algorithm reads `SchedInput::running` (backfilling
-    /// needs the release profile; the blocking disciplines do not). The
-    /// driver skips building the running-job snapshot when false (§Perf).
+    /// Whether the algorithm reads `SchedInput::running`. Since the
+    /// availability-profile refactor only the preemption layer does —
+    /// planning policies read `SchedInput::profile` instead — so the
+    /// driver skips building the running-job snapshot for every stock
+    /// policy (§Perf). Defaults to true for third-party schedulers.
     fn uses_running_info(&self) -> bool {
         true
     }

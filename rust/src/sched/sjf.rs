@@ -54,7 +54,12 @@ mod tests {
     use crate::job::{Job, WaitQueue};
 
     fn input<'a>(queue: &'a WaitQueue) -> SchedInput<'a> {
-        SchedInput { now: SimTime(100), queue, running: &[] }
+        SchedInput {
+            now: SimTime(100),
+            queue,
+            running: &[],
+            profile: &crate::resources::AvailabilityProfile::EMPTY,
+        }
     }
 
     #[test]

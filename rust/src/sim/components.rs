@@ -3,13 +3,22 @@
 //! every capacity transition (node failure/repair, reservation claims)
 //! and the job-interruption bookkeeping, while `sim::faults` only
 //! generates the timed stimuli.
+//!
+//! The component also owns the *availability timeline*
+//! ([`AvailabilityProfile`]): the free-core step function from now into
+//! the future that every planning policy reads. It is maintained
+//! incrementally on the hot path (job start subtracts a hold until the
+//! estimated end, completion/eviction releases the remainder) and
+//! resynced from authoritative cluster state only on the rare capacity
+//! transitions (node failure/repair, reservation claim/expiry), so
+//! scheduling rounds no longer sort and rebuild release vectors.
 
 use crate::core::component::{Component, Ctx};
 use crate::core::event::{ComponentId, Priority};
 use crate::core::stats::TimeSeries;
 use crate::core::time::{SimDuration, SimTime};
 use crate::job::{Job, JobId, WaitQueue};
-use crate::resources::{Allocation, Cluster, NodeState};
+use crate::resources::{Allocation, AvailabilityProfile, Cluster, NodeState};
 use crate::sched::{PreemptionConfig, RunningJob, SchedInput, Scheduler};
 use crate::sim::faults::ReservationSpec;
 use crate::sim::Ev;
@@ -115,6 +124,20 @@ enum InterruptReason {
     Eviction,
 }
 
+/// One running job with its exact profile footprint.
+struct RunningEntry {
+    job: Job,
+    alloc: Allocation,
+    /// Estimated end of the current segment (start + estimate).
+    est_end: SimTime,
+    /// The `(release_time, cores)` deltas this job currently contributes
+    /// to the availability timeline — released verbatim when the job
+    /// leaves, so incremental maintenance is an exact inverse of the
+    /// holds it placed. Rewritten by `resync_profile` on capacity
+    /// transitions (a draining node hands its portion back later).
+    hold: Vec<(u64, u64)>,
+}
+
 /// Job Scheduling + Resource Management (paper Fig 1): wait queue, the
 /// scheduling algorithm, cluster accounting, lifecycle bookkeeping and
 /// event-driven metric recording — plus node lifecycle transitions and
@@ -123,8 +146,34 @@ pub struct SchedulerComponent {
     pub cluster: Cluster,
     scheduler: Box<dyn Scheduler>,
     queue: WaitQueue,
-    /// Running jobs: id -> (job, allocation, estimated end).
-    running: HashMap<JobId, (Job, Allocation, SimTime)>,
+    /// Running jobs by id, with their availability-timeline footprint.
+    running: HashMap<JobId, RunningEntry>,
+    /// The shared availability timeline every planning policy reads
+    /// (`SchedInput::profile`).
+    profile: AvailabilityProfile,
+    /// Planning horizon in ticks (`planning.horizon`): hold releases are
+    /// coalesced to at most `now + horizon`, bounding timeline length on
+    /// huge running sets at the cost of fidelity past the horizon.
+    /// 0 = unlimited (exact timeline, the default).
+    pub planning_horizon: u64,
+    /// Failed node -> known repair instant (the timeline promises the
+    /// capacity back at that time).
+    pending_repairs: HashMap<usize, u64>,
+    /// Reservations whose start has not fired yet still hold planned
+    /// capacity windows in the timeline.
+    resv_pending: Vec<bool>,
+    /// Planned hold size per reservation, computed once (node capacities
+    /// are immutable after construction).
+    resv_plan_cores: Vec<u64>,
+    /// When the timeline was last rebuilt from authoritative state. With
+    /// a finite horizon, events clamped away at one resync must re-enter
+    /// as time approaches them, so dispatch refreshes every horizon/2
+    /// ticks of simulated progress.
+    last_resync: u64,
+    /// Set while a capacity transition interrupts several occupants so
+    /// each departure does not trigger its own full resync — the
+    /// transition handler rebuilds once at the end.
+    defer_resync: bool,
     pub completed: Vec<Job>,
     pub rejected: u64,
     pub executor: ComponentId,
@@ -157,11 +206,19 @@ pub struct SchedulerComponent {
 
 impl SchedulerComponent {
     pub fn new(cluster: Cluster, scheduler: Box<dyn Scheduler>) -> SchedulerComponent {
+        let profile = AvailabilityProfile::new(0, cluster.free_cores(), cluster.total_cores());
         SchedulerComponent {
             cluster,
             scheduler,
             queue: WaitQueue::new(),
             running: HashMap::new(),
+            profile,
+            planning_horizon: 0,
+            pending_repairs: HashMap::new(),
+            resv_pending: Vec::new(),
+            resv_plan_cores: Vec::new(),
+            last_resync: 0,
+            defer_resync: false,
             completed: Vec::new(),
             rejected: 0,
             executor: 0,
@@ -209,15 +266,20 @@ impl SchedulerComponent {
         self.avail_series.record(now, self.cluster.available_cores() as f64);
     }
 
+    /// The availability timeline (read-only view for tests/tools).
+    pub fn profile(&self) -> &AvailabilityProfile {
+        &self.profile
+    }
+
     fn snapshot_running(&self) -> Vec<RunningJob> {
         self.running
             .values()
-            .map(|(j, a, est_end)| RunningJob {
-                id: j.id,
-                cores: a.cores(),
-                est_end: *est_end,
-                start: j.last_start.unwrap_or(SimTime::ZERO),
-                priority: j.priority,
+            .map(|e| RunningJob {
+                id: e.job.id,
+                cores: e.alloc.cores(),
+                est_end: e.est_end,
+                start: e.job.last_start.unwrap_or(SimTime::ZERO),
+                priority: e.job.priority,
             })
             .collect()
     }
@@ -228,24 +290,45 @@ impl SchedulerComponent {
         let mut ids: Vec<JobId> = self
             .running
             .iter()
-            .filter(|(_, (_, a, _))| a.taken.iter().any(|&(nid, _, _)| nodes.contains(&nid)))
+            .filter(|(_, e)| e.alloc.taken.iter().any(|&(nid, _, _)| nodes.contains(&nid)))
             .map(|(&id, _)| id)
             .collect();
         ids.sort_unstable();
         ids
     }
 
+    /// Hand a departing job's timeline footprint back. When every node
+    /// of the allocation is `Up`, the stored hold deltas are reversed
+    /// exactly (hot path); otherwise part of the cores return to a
+    /// drained/failed node instead of the schedulable pool, so the
+    /// timeline is resynced from authoritative state (rare path).
+    fn release_profile_hold(&mut self, alloc: &Allocation, hold: &[(u64, u64)], now: SimTime) {
+        let all_up = alloc
+            .taken
+            .iter()
+            .all(|&(nid, _, _)| self.cluster.node_state(nid) == NodeState::Up);
+        if all_up {
+            let nowt = now.ticks();
+            for &(end, cores) in hold {
+                self.profile.release(nowt, end, cores);
+            }
+        } else if !self.defer_resync {
+            self.resync_profile(now);
+        }
+    }
+
     /// Interrupt a running job: release its cores, charge the accounting
     /// for `reason`, and put it back in the wait queue (at the tail — a
     /// preempted job re-queues like a fresh submission, as in AccaSim).
     fn interrupt_job(&mut self, id: JobId, reason: InterruptReason, ctx: &mut Ctx<Ev>) {
-        let Some((mut job, alloc, _est)) = self.running.remove(&id) else {
+        let Some(RunningEntry { mut job, alloc, hold, .. }) = self.running.remove(&id) else {
             return;
         };
         let now = ctx.now();
         let cores = alloc.cores() as f64;
         let elapsed = job.last_start.map(|s| now - s).unwrap_or(SimDuration::ZERO);
         self.cluster.release(&alloc);
+        self.release_profile_hold(&alloc, &hold, now);
         let keep_progress = self.preemption.keeps_progress();
         let overhead = match (keep_progress, reason) {
             (true, InterruptReason::Eviction) => self.preemption.eviction_overhead(),
@@ -278,13 +361,125 @@ impl SchedulerComponent {
     /// must always be zero (`Draining` keeps its occupants on purpose;
     /// only `Down` nodes may never host a running job).
     fn audit_placements(&mut self) {
-        for (_, (_, a, _)) in self.running.iter() {
-            for &(nid, _, _) in &a.taken {
+        for e in self.running.values() {
+            for &(nid, _, _) in &e.alloc.taken {
                 if self.cluster.node_state(nid) == NodeState::Down {
                     self.fault_counters.invariant_violations += 1;
                 }
             }
         }
+    }
+
+    /// End instant of reservation `res` (fixed by its spec).
+    fn resv_end(reservations: &[ReservationSpec], res: usize) -> u64 {
+        let r = &reservations[res];
+        r.start.saturating_add(r.duration)
+    }
+
+    /// The single clamp rule for the planning horizon — used by both the
+    /// incremental hold on job start and the resync re-encoding, which
+    /// must agree for stored holds to reverse exactly. (Associated fn,
+    /// not a method: resync calls it while `running` is mutably
+    /// borrowed.)
+    fn clamp_to_horizon(horizon: u64, now: u64, t: u64) -> u64 {
+        if horizon == 0 {
+            t
+        } else {
+            t.min(now.saturating_add(horizon))
+        }
+    }
+
+    /// Rebuild the availability timeline from authoritative state: the
+    /// cluster's current free pool plus every known future capacity
+    /// delta. Called on capacity transitions (node failure/repair,
+    /// reservation claim/expiry, departures touching non-`Up` nodes) —
+    /// the rare path; steady-state rounds maintain the timeline
+    /// incrementally. Also rewrites each running entry's hold deltas so
+    /// later incremental releases reverse exactly what this encoding
+    /// promised.
+    fn resync_profile(&mut self, now: SimTime) {
+        let nowt = now.ticks();
+        let horizon = self.planning_horizon;
+        let clamp = |t: u64| Self::clamp_to_horizon(horizon, nowt, t);
+        let resv_ends: Vec<u64> =
+            (0..self.reservations.len()).map(|r| Self::resv_end(&self.reservations, r)).collect();
+        let mut deltas: Vec<(u64, i64)> = Vec::with_capacity(self.running.len() + 8);
+        // Running jobs: cores rejoin the pool at the estimated end —
+        // per node, because a draining node hands its portion back only
+        // once both the job and the claiming reservation are done.
+        for entry in self.running.values_mut() {
+            entry.hold.clear();
+            let est = entry.est_end.ticks();
+            for &(nid, c, _m) in &entry.alloc.taken {
+                let t = match self.cluster.node_state(nid) {
+                    NodeState::Up => est,
+                    NodeState::Draining => match self.claimed.get(&nid) {
+                        Some(&res) => est.max(resv_ends[res]),
+                        None => est,
+                    },
+                    // Occupants never survive on `Down` nodes (killed
+                    // first) and `Reserved` nodes are idle by
+                    // construction; their cores never rejoin via the job.
+                    NodeState::Down | NodeState::Reserved => continue,
+                };
+                let t = clamp(t);
+                if t > nowt {
+                    match entry.hold.iter_mut().find(|h| h.0 == t) {
+                        Some(h) => h.1 += c,
+                        None => entry.hold.push((t, c)),
+                    }
+                } else {
+                    // Overrun past the estimate: the timeline already
+                    // counts these cores free (planning estimate
+                    // semantics — same as the rebuild it replaces).
+                    deltas.push((nowt, c as i64));
+                }
+            }
+            deltas.extend(entry.hold.iter().map(|&(t, c)| (t, c as i64)));
+        }
+        // Claimed nodes: the unoccupied portion returns when the
+        // reservation expires.
+        for (&nid, &res) in &self.claimed {
+            let node = &self.cluster.nodes()[nid];
+            match node.state {
+                NodeState::Reserved | NodeState::Draining => {
+                    let t = clamp(resv_ends[res]);
+                    if t > nowt && node.free_cores > 0 {
+                        deltas.push((t, node.free_cores as i64));
+                    }
+                }
+                // Down claimed nodes return via their repair below.
+                NodeState::Down | NodeState::Up => {}
+            }
+        }
+        // Failed nodes: full capacity back at the known repair instant
+        // (or at reservation expiry when a claim will grab the node on
+        // repair, whichever is later).
+        for (&nid, &t_repair) in &self.pending_repairs {
+            let t = match self.claimed.get(&nid) {
+                Some(&res) => t_repair.max(resv_ends[res]),
+                None => t_repair,
+            };
+            let t = clamp(t);
+            if t > nowt {
+                deltas.push((t, self.cluster.nodes()[nid].cores as i64));
+            }
+        }
+        // Future reservations: planned capacity windows.
+        for (res, spec) in self.reservations.iter().enumerate() {
+            if !self.resv_pending.get(res).copied().unwrap_or(false) {
+                continue;
+            }
+            let cores = self.resv_plan_cores.get(res).copied().unwrap_or(0);
+            let start = clamp(spec.start.max(nowt));
+            let end = clamp(resv_ends[res]);
+            if start < end && cores > 0 {
+                deltas.push((start, -(cores as i64)));
+                deltas.push((end, cores as i64));
+            }
+        }
+        self.profile.rebuild(nowt, self.cluster.free_cores(), deltas);
+        self.last_resync = nowt;
     }
 
     /// Apply a node failure: kill occupants, take the node down, and
@@ -299,9 +494,15 @@ impl SchedulerComponent {
         let node = candidates.swap_remove((victim_draw % candidates.len() as u64) as usize);
         self.fault_counters.failures += 1;
         self.cluster.set_node_state(node, NodeState::Down);
+        self.pending_repairs.insert(node, (ctx.now() + repair_after).ticks());
+        // One rebuild covers every occupant kill: suppress the
+        // per-departure resync inside the loop.
+        self.defer_resync = true;
         for id in self.occupants_of(&[node]) {
             self.interrupt_job(id, InterruptReason::Failure, ctx);
         }
+        self.defer_resync = false;
+        self.resync_profile(ctx.now());
         ctx.schedule_self(repair_after, Priority::COMPLETE, Ev::NodeUp { node });
         self.audit_placements();
         self.record_series(ctx.now());
@@ -314,12 +515,14 @@ impl SchedulerComponent {
     /// when a still-active reservation claims it.
     fn repair_node(&mut self, node: usize, ctx: &mut Ctx<Ev>) {
         self.fault_counters.repairs += 1;
+        self.pending_repairs.remove(&node);
         let state = if self.claimed.contains_key(&node) {
             NodeState::Reserved
         } else {
             NodeState::Up
         };
         self.cluster.set_node_state(node, state);
+        self.resync_profile(ctx.now());
         self.audit_placements();
         self.record_series(ctx.now());
         if !self.queue.is_empty() {
@@ -334,6 +537,9 @@ impl SchedulerComponent {
     /// work, degrading the reservation.
     fn start_reservation(&mut self, res: usize, ctx: &mut Ctx<Ev>) {
         self.fault_counters.reservations_started += 1;
+        if let Some(p) = self.resv_pending.get_mut(res) {
+            *p = false; // the planned window becomes an actual claim
+        }
         let want = self.reservations[res].nodes;
         let mut up: Vec<usize> = (0..self.cluster.num_nodes())
             .filter(|&i| {
@@ -346,9 +552,12 @@ impl SchedulerComponent {
         // to the operator, not silently truncated.
         self.fault_counters.reservations_short_nodes += (want - claim.len()) as u64;
         if self.preemption.enabled() {
+            // The post-claim resync below covers these departures too.
+            self.defer_resync = true;
             for id in self.occupants_of(&claim) {
                 self.interrupt_job(id, InterruptReason::Eviction, ctx);
             }
+            self.defer_resync = false;
         }
         for &node in &claim {
             self.claimed.insert(node, res);
@@ -359,6 +568,7 @@ impl SchedulerComponent {
                 self.fault_counters.reservations_degraded += 1;
             }
         }
+        self.resync_profile(ctx.now());
         self.audit_placements();
         self.record_series(ctx.now());
     }
@@ -378,6 +588,10 @@ impl SchedulerComponent {
                 self.cluster.set_node_state(node, NodeState::Up);
             }
         }
+        if let Some(p) = self.resv_pending.get_mut(res) {
+            *p = false; // defensive: an end without a start is spent too
+        }
+        self.resync_profile(ctx.now());
         self.audit_placements();
         self.record_series(ctx.now());
         if !self.queue.is_empty() {
@@ -402,12 +616,26 @@ impl SchedulerComponent {
         self.dispatch_pending = false;
         self.dispatches += 1;
         let now = ctx.now();
+        // The availability timeline tracks "from now on"; drop history.
+        self.profile.advance(now.ticks());
+        // Finite horizon: events clamped away at the last resync
+        // (reservation windows, far-out releases) must re-enter the
+        // timeline as time approaches them. Refreshing every horizon/2
+        // ticks of progress guarantees at least half a horizon of
+        // advance notice while keeping resyncs rare.
+        if self.planning_horizon > 0
+            && now.ticks().saturating_sub(self.last_resync)
+                >= (self.planning_horizon / 2).max(1)
+        {
+            self.resync_profile(now);
+        }
         // Phase 0 — policy-driven preemption (fault subsystem): the
         // scheduler may evict strictly lower-priority running jobs for a
         // starving waiting job before the allocation pass. The snapshot
         // is built at most once per round and reused by the allocation
         // pass unless evictions invalidated it (snapshots are O(running)
-        // on the DES hot path).
+        // on the DES hot path). Planning policies read the timeline
+        // instead and skip the snapshot entirely.
         let evictions_possible = self.preemption.enabled()
             && self.preemption.starvation_threshold > SimDuration::ZERO;
         let mut running_info: Vec<RunningJob> =
@@ -418,7 +646,12 @@ impl SchedulerComponent {
             };
         if evictions_possible {
             let victims = {
-                let input = SchedInput { now, queue: &self.queue, running: &running_info };
+                let input = SchedInput {
+                    now,
+                    queue: &self.queue,
+                    running: &running_info,
+                    profile: &self.profile,
+                };
                 self.scheduler.preempt(&input, &self.cluster)
             };
             if !victims.is_empty() {
@@ -433,7 +666,12 @@ impl SchedulerComponent {
             }
         }
         let allocations = {
-            let input = SchedInput { now, queue: &self.queue, running: &running_info };
+            let input = SchedInput {
+                now,
+                queue: &self.queue,
+                running: &running_info,
+                profile: &self.profile,
+            };
             self.scheduler.schedule(&input, &mut self.cluster)
         };
         for alloc in allocations {
@@ -443,6 +681,15 @@ impl SchedulerComponent {
                 .expect("scheduler allocated a job not in the queue");
             job.mark_started(now);
             let est_end = now + job.est_remaining();
+            // Incremental timeline update: the job holds its cores until
+            // the estimated end (clamped to the planning horizon).
+            let nowt = now.ticks();
+            let planned = Self::clamp_to_horizon(self.planning_horizon, nowt, est_end.ticks());
+            let mut hold = Vec::new();
+            if planned > nowt {
+                self.profile.hold(nowt, planned, alloc.cores());
+                hold.push((planned, alloc.cores()));
+            }
             ctx.send(
                 self.executor,
                 Priority::DEFAULT,
@@ -452,7 +699,7 @@ impl SchedulerComponent {
                     incarnation: job.incarnation,
                 },
             );
-            self.running.insert(job.id, (job, alloc, est_end));
+            self.running.insert(job.id, RunningEntry { job, alloc, est_end, hold });
         }
         // Starvation timer: wake up when the oldest feasible waiter
         // crosses the threshold so its eviction round actually runs.
@@ -484,16 +731,17 @@ impl SchedulerComponent {
     fn complete(&mut self, job_id: JobId, incarnation: u32, ctx: &mut Ctx<Ev>) {
         // Stale completions are expected under preemption: the segment
         // that scheduled them was interrupted and the job re-queued.
-        let current = self.running.get(&job_id).map(|(j, _, _)| j.incarnation);
+        let current = self.running.get(&job_id).map(|e| e.job.incarnation);
         if current != Some(incarnation) {
             return;
         }
         let now = ctx.now();
-        let (mut job, alloc, _) = self
+        let RunningEntry { mut job, alloc, hold, .. } = self
             .running
             .remove(&job_id)
             .expect("completion for unknown job");
         self.cluster.release(&alloc);
+        self.release_profile_hold(&alloc, &hold, now);
         job.mark_completed(now);
         self.completed.push(job);
         self.settle_drained_nodes(&alloc.node_ids());
@@ -507,6 +755,19 @@ impl SchedulerComponent {
 impl Component<Ev> for SchedulerComponent {
     fn name(&self) -> &str {
         "scheduler"
+    }
+
+    fn init(&mut self, ctx: &mut Ctx<Ev>) {
+        // Seed the availability timeline: declared reservations hold
+        // planned capacity windows from the start, which is how backfill
+        // plans around them before they claim a single node.
+        self.resv_pending = vec![true; self.reservations.len()];
+        self.resv_plan_cores = self
+            .reservations
+            .iter()
+            .map(|r| self.cluster.reservation_plan_cores(r.nodes))
+            .collect();
+        self.resync_profile(ctx.now());
     }
 
     fn handle(&mut self, ev: Ev, ctx: &mut Ctx<Ev>) {

@@ -22,11 +22,55 @@ use crate::core::time::{SimDuration, SimTime};
 use crate::sim::Ev;
 use std::any::Any;
 
+/// Inter-failure gap distribution (`faults.distribution`).
+///
+/// `Exp` is the classic memoryless MTBF model and the bit-identical
+/// default. `Weibull` adds a shape knob: HPC failure studies (Schroeder
+/// & Gibson 2006) fit Weibull shapes of ~0.7–0.8 — a decreasing hazard
+/// where failures cluster after each failure — while shape > 1 models
+/// wear-out. Shape 1 reduces to the exponential. Repairs stay
+/// exponential under either model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FaultDistribution {
+    #[default]
+    Exp,
+    Weibull,
+}
+
+impl FaultDistribution {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultDistribution::Exp => "exp",
+            FaultDistribution::Weibull => "weibull",
+        }
+    }
+}
+
+impl std::str::FromStr for FaultDistribution {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "exp" | "exponential" => Ok(FaultDistribution::Exp),
+            "weibull" => Ok(FaultDistribution::Weibull),
+            other => Err(format!(
+                "unknown failure distribution {other:?} (expected exp|weibull)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for FaultDistribution {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Failure-model knobs (config surface `faults.*`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultConfig {
-    /// Mean time between cluster-wide failure events, in ticks
-    /// (exponential inter-failure gaps). 0 disables fault injection.
+    /// Mean time between cluster-wide failure events, in ticks.
+    /// 0 disables fault injection.
     pub mtbf: f64,
     /// Mean time to repair a failed node, in ticks (exponential).
     pub mttr: f64,
@@ -38,17 +82,61 @@ pub struct FaultConfig {
     /// finite — failures chain repair and next-failure events forever
     /// otherwise.
     pub until: Option<u64>,
+    /// Inter-failure gap distribution; `Exp` keeps the seeded trace
+    /// bit-identical to the pre-Weibull model.
+    pub distribution: FaultDistribution,
+    /// Weibull shape k (`faults.shape`); the scale is derived so the
+    /// mean gap stays `mtbf` (scale = mtbf / Γ(1 + 1/k)). Ignored by
+    /// `Exp`.
+    pub shape: f64,
 }
 
 impl Default for FaultConfig {
     fn default() -> Self {
-        FaultConfig { mtbf: 0.0, mttr: 3_600.0, seed: 0xFA017, until: None }
+        FaultConfig {
+            mtbf: 0.0,
+            mttr: 3_600.0,
+            seed: 0xFA017,
+            until: None,
+            distribution: FaultDistribution::Exp,
+            shape: 1.0,
+        }
     }
 }
 
 impl FaultConfig {
     pub fn enabled(&self) -> bool {
         self.mtbf > 0.0
+    }
+}
+
+/// Γ(x) for x > 0 (Lanczos approximation, g = 7): scales the Weibull so
+/// its mean equals the configured MTBF.
+fn gamma_fn(x: f64) -> f64 {
+    use std::f64::consts::PI;
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection; shapes >= ~0.67 never reach this branch.
+        PI / ((PI * x).sin() * gamma_fn(1.0 - x))
+    } else {
+        let x = x - 1.0;
+        let mut a = C[0];
+        for (i, &c) in C.iter().enumerate().skip(1) {
+            a += c / (x + i as f64);
+        }
+        let t = x + G + 0.5;
+        (2.0 * PI).sqrt() * t.powf(x + 0.5) * (-t).exp() * a
     }
 }
 
@@ -83,7 +171,8 @@ impl FaultInjector {
         FaultInjector { scheduler: 0, cfg, until, rng, reservations, injected: 0 }
     }
 
-    /// Exponential draw in whole ticks, at least 1.
+    /// Exponential draw in whole ticks, at least 1 (repairs, and the
+    /// `exp` failure model).
     fn draw(&mut self, mean: f64) -> SimDuration {
         let d = SimDuration::from_f64(self.rng.exponential(1.0 / mean.max(1e-9)));
         if d == SimDuration::ZERO {
@@ -93,11 +182,32 @@ impl FaultInjector {
         }
     }
 
+    /// Inter-failure gap under the configured distribution, at least 1
+    /// tick. Both arms consume exactly one uniform draw, so switching
+    /// distributions never desynchronizes the victim/repair stream.
+    fn draw_gap(&mut self) -> SimDuration {
+        match self.cfg.distribution {
+            FaultDistribution::Exp => self.draw(self.cfg.mtbf),
+            FaultDistribution::Weibull => {
+                // Config/CLI enforce shape >= 0.1; this floor only
+                // guards programmatic construction from a scale collapse.
+                let k = self.cfg.shape.max(0.1);
+                let scale = self.cfg.mtbf.max(1e-9) / gamma_fn(1.0 + 1.0 / k);
+                let d = SimDuration::from_f64(self.rng.weibull(k, scale));
+                if d == SimDuration::ZERO {
+                    SimDuration(1)
+                } else {
+                    d
+                }
+            }
+        }
+    }
+
     fn schedule_next_failure(&mut self, ctx: &mut Ctx<Ev>) {
         if !self.cfg.enabled() {
             return;
         }
-        let gap = self.draw(self.cfg.mtbf);
+        let gap = self.draw_gap();
         if ctx.now() + gap > self.until {
             return; // injection horizon reached; let the queue drain
         }
@@ -177,7 +287,7 @@ mod tests {
     fn failure_trace_is_seed_deterministic() {
         let trace = |seed: u64| {
             let mut inj = FaultInjector::new(
-                FaultConfig { mtbf: 500.0, mttr: 100.0, seed, until: None },
+                FaultConfig { mtbf: 500.0, mttr: 100.0, seed, ..FaultConfig::default() },
                 SimTime(1_000_000),
                 Vec::new(),
             );
@@ -191,7 +301,7 @@ mod tests {
     #[test]
     fn draws_are_positive_and_mean_scaled() {
         let mut inj = FaultInjector::new(
-            FaultConfig { mtbf: 1000.0, mttr: 50.0, seed: 3, until: None },
+            FaultConfig { mtbf: 1000.0, mttr: 50.0, seed: 3, ..FaultConfig::default() },
             SimTime::MAX,
             Vec::new(),
         );
@@ -200,5 +310,94 @@ mod tests {
         let mean = sum as f64 / n as f64;
         assert!((700.0..1300.0).contains(&mean), "mean {mean}");
         assert!((0..200).all(|_| inj.draw(0.5).ticks() >= 1), "draws must be >= 1 tick");
+    }
+
+    #[test]
+    fn distribution_parses_and_roundtrips() {
+        for d in [FaultDistribution::Exp, FaultDistribution::Weibull] {
+            assert_eq!(d.as_str().parse::<FaultDistribution>().unwrap(), d);
+        }
+        assert_eq!(
+            "exponential".parse::<FaultDistribution>().unwrap(),
+            FaultDistribution::Exp
+        );
+        assert!("pareto".parse::<FaultDistribution>().is_err());
+    }
+
+    #[test]
+    fn exp_path_is_bit_identical_with_distribution_field_defaulted() {
+        // The Weibull option must not perturb existing exponential
+        // seeds: draw_gap under `Exp` consumes the same stream as the
+        // pre-Weibull draw().
+        let gaps = |cfg: FaultConfig| {
+            let mut inj = FaultInjector::new(cfg, SimTime::MAX, Vec::new());
+            (0..64).map(|_| inj.draw_gap().ticks()).collect::<Vec<u64>>()
+        };
+        let base = FaultConfig { mtbf: 700.0, mttr: 100.0, seed: 9, ..FaultConfig::default() };
+        let via_draw = {
+            let mut inj = FaultInjector::new(base, SimTime::MAX, Vec::new());
+            (0..64).map(|_| inj.draw(700.0).ticks()).collect::<Vec<u64>>()
+        };
+        assert_eq!(gaps(base), via_draw, "exp gap stream changed");
+        // And an explicit shape knob on the exp path changes nothing.
+        assert_eq!(gaps(FaultConfig { shape: 3.0, ..base }), via_draw);
+    }
+
+    #[test]
+    fn weibull_gaps_mean_matches_mtbf() {
+        let mut inj = FaultInjector::new(
+            FaultConfig {
+                mtbf: 1000.0,
+                mttr: 50.0,
+                seed: 11,
+                distribution: FaultDistribution::Weibull,
+                shape: 0.7,
+                ..FaultConfig::default()
+            },
+            SimTime::MAX,
+            Vec::new(),
+        );
+        let n = 6000;
+        let sum: u64 = (0..n).map(|_| inj.draw_gap().ticks()).sum();
+        let mean = sum as f64 / n as f64;
+        // Shape 0.7 is heavy-tailed; allow a generous band around the
+        // configured mean.
+        assert!((600.0..1500.0).contains(&mean), "weibull mean {mean}");
+        assert!((0..200).all(|_| inj.draw_gap().ticks() >= 1));
+    }
+
+    #[test]
+    fn weibull_shape_one_approximates_exponential() {
+        // k = 1 reduces the Weibull to the exponential with the same
+        // mean (scale = mtbf / Γ(2) = mtbf); sample means must agree.
+        let mean_of = |distribution, shape| {
+            let mut inj = FaultInjector::new(
+                FaultConfig {
+                    mtbf: 800.0,
+                    mttr: 50.0,
+                    seed: 5,
+                    distribution,
+                    shape,
+                    ..FaultConfig::default()
+                },
+                SimTime::MAX,
+                Vec::new(),
+            );
+            (0..6000).map(|_| inj.draw_gap().ticks()).sum::<u64>() as f64 / 6000.0
+        };
+        let e = mean_of(FaultDistribution::Exp, 1.0);
+        let w = mean_of(FaultDistribution::Weibull, 1.0);
+        assert!((e - w).abs() < 60.0, "exp {e} vs weibull(k=1) {w}");
+    }
+
+    #[test]
+    fn gamma_fn_known_values() {
+        for (x, want) in [(1.0, 1.0), (2.0, 1.0), (3.0, 2.0), (4.0, 6.0), (0.5, 1.7724538509055159)] {
+            let got = gamma_fn(x);
+            assert!((got - want).abs() < 1e-9 * want.max(1.0), "Γ({x}) = {got}, want {want}");
+        }
+        // Γ(1 + 1/0.7) ≈ Γ(2.42857) ≈ 1.26607.
+        let g = gamma_fn(1.0 + 1.0 / 0.7);
+        assert!((g - 1.266).abs() < 0.01, "Γ(2.4286) = {g}");
     }
 }

@@ -17,7 +17,7 @@ pub mod faults;
 pub mod multicluster;
 
 pub use components::{FaultCounters, JobExecutor, JobSource, SchedulerComponent};
-pub use faults::{FaultConfig, FaultInjector, ReservationSpec};
+pub use faults::{FaultConfig, FaultDistribution, FaultInjector, ReservationSpec};
 pub use multicluster::{ClusterSpec, MetaScheduler, MultiClusterReport, Routing};
 
 use crate::core::engine::Engine;
@@ -181,6 +181,11 @@ pub struct Simulation {
     pub preemption: PreemptionConfig,
     /// Advance reservations, applied in declaration order.
     pub reservations: Vec<ReservationSpec>,
+    /// Planning horizon for the availability timeline
+    /// (`planning.horizon`, ticks): hold releases beyond `now + horizon`
+    /// coalesce to the horizon, bounding timeline length at the cost of
+    /// fidelity past it. 0 = unlimited (exact timeline, the default).
+    pub planning_horizon: u64,
 }
 
 impl Simulation {
@@ -195,6 +200,7 @@ impl Simulation {
             faults: FaultConfig::default(),
             preemption: PreemptionConfig::default(),
             reservations: Vec::new(),
+            planning_horizon: 0,
         }
     }
 
@@ -223,6 +229,11 @@ impl Simulation {
         self
     }
 
+    pub fn with_planning_horizon(mut self, horizon: u64) -> Simulation {
+        self.planning_horizon = horizon;
+        self
+    }
+
     /// Wire the component graph without running (windowed/parallel use).
     pub fn build(self) -> SimInstance {
         let Simulation {
@@ -235,6 +246,7 @@ impl Simulation {
             faults,
             preemption,
             reservations,
+            planning_horizon,
         } = self;
         let cluster =
             Cluster::homogeneous(workload.nodes, workload.cores_per_node, mem_per_node);
@@ -270,6 +282,7 @@ impl Simulation {
             s.executor = exec;
             s.preemption = preemption;
             s.reservations = reservations.clone();
+            s.planning_horizon = planning_horizon;
         }
         if wire_injector {
             let inj = engine.add(Box::new(FaultInjector::new(faults, until, reservations)));

@@ -171,7 +171,7 @@ fn golden_das2_faulty() -> SimReport {
     let w = Das2Model::default().generate(1_500, 7).scale_arrivals(0.45).drop_infeasible();
     Simulation::new(w, Policy::FcfsBackfill)
         .with_seed(7)
-        .with_faults(FaultConfig { mtbf: 9_000.0, mttr: 2_500.0, seed: 7, until: None })
+        .with_faults(FaultConfig { mtbf: 9_000.0, mttr: 2_500.0, seed: 7, ..FaultConfig::default() })
         .with_preemption(PreemptionConfig {
             mode: PreemptionMode::Checkpoint,
             checkpoint_overhead: SimDuration(60),

@@ -6,7 +6,7 @@ use sst_sched::config::ExperimentConfig;
 use sst_sched::core::time::SimDuration;
 use sst_sched::parallel::{run_jobs_parallel_opts, RankSimOpts};
 use sst_sched::sched::{Policy, PreemptionConfig, PreemptionMode};
-use sst_sched::sim::{run_policy, FaultConfig, SimReport, Simulation};
+use sst_sched::sim::{run_policy, FaultConfig, ReservationSpec, SimReport, Simulation};
 use sst_sched::trace::{parse_swf, write_swf, Das2Model, SdscSp2Model};
 
 #[test]
@@ -81,7 +81,7 @@ fn occupancy_ends_at_zero_when_queue_drains() {
 
 fn fault_sim(policy: Policy) -> SimReport {
     let w = SdscSp2Model::default().generate(800, 13).drop_infeasible();
-    let faults = FaultConfig { mtbf: 20_000.0, mttr: 4_000.0, seed: 77, until: None };
+    let faults = FaultConfig { mtbf: 20_000.0, mttr: 4_000.0, seed: 77, ..FaultConfig::default() };
     let preemption = PreemptionConfig {
         mode: PreemptionMode::Checkpoint,
         checkpoint_overhead: SimDuration(60),
@@ -110,7 +110,7 @@ fn fault_injected_runs_are_bit_reproducible() {
     let base = fault_sim(Policy::Fcfs).fingerprint();
     let other = {
         let w = SdscSp2Model::default().generate(800, 13).drop_infeasible();
-        let faults = FaultConfig { mtbf: 20_000.0, mttr: 4_000.0, seed: 78, until: None };
+        let faults = FaultConfig { mtbf: 20_000.0, mttr: 4_000.0, seed: 78, ..FaultConfig::default() };
         Simulation::new(w, Policy::Fcfs).with_seed(5).with_faults(faults).run(None).fingerprint()
     };
     assert_ne!(base, other, "different fault seeds must change the fingerprint");
@@ -125,9 +125,8 @@ fn parallel_fault_runs_deterministic_across_thread_counts() {
     let w = Das2Model::default().generate(600, 9).drop_infeasible();
     let opts = RankSimOpts {
         seed: 3,
-        faults: FaultConfig { mtbf: 15_000.0, mttr: 3_000.0, seed: 21, until: None },
-        preemption: PreemptionConfig::default(),
-        reservations: Vec::new(),
+        faults: FaultConfig { mtbf: 15_000.0, mttr: 3_000.0, seed: 21, ..FaultConfig::default() },
+        ..RankSimOpts::default()
     };
     for ranks in [1usize, 2, 4] {
         let threaded1 =
@@ -150,6 +149,135 @@ fn parallel_fault_runs_deterministic_across_thread_counts() {
         );
         assert_eq!(threaded1.total_completed(), w.jobs.len() as u64, "ranks={ranks} lost jobs");
     }
+}
+
+/// Acceptance test of the availability-timeline refactor: EASY must
+/// refuse a backfill candidate whose run would collide with a *future*
+/// advance reservation. Before the shared profile, reservations only
+/// claimed nodes at their start time, so the release-walk backfill
+/// admitted the candidate at t=0 (it "finished by the shadow time") and
+/// the reservation then had to drain around it.
+#[test]
+fn backfill_plans_around_future_reservation() {
+    use sst_sched::job::Job;
+    use sst_sched::trace::Workload;
+    // 2 nodes x 4 cores. j1 occupies half the machine until t=100; j2
+    // (head) wants everything; j3 is classic backfill fodder (4 cores,
+    // 50 ticks). A reservation takes the whole machine over [30, 130).
+    let jobs = vec![
+        Job::with_estimate(1, 0, 4, 100, 100),
+        Job::with_estimate(2, 0, 8, 100, 100),
+        Job::with_estimate(3, 0, 4, 50, 50),
+    ];
+    let w = Workload::new("resv-aware", jobs, 2, 4);
+    let resv = vec![ReservationSpec { start: 30, duration: 100, nodes: 2 }];
+    let r = Simulation::new(w, Policy::FcfsBackfill).with_reservations(resv).run(None);
+    assert_eq!(r.completed.len(), 3);
+    let start =
+        |id: u64| r.completed.iter().find(|j| j.id == id).unwrap().start.unwrap().ticks();
+    assert_eq!(start(1), 0, "phase-1 start untouched");
+    // The candidate's [0, 50) run collides with the reservation window:
+    // the release-walk EASY started it at t=0, the planner must not.
+    assert!(start(3) > 0, "j3 must not backfill into the reservation window");
+    // Head waits out the reservation (it needs the whole machine), then
+    // the candidate runs after it.
+    assert_eq!(start(2), 130);
+    assert_eq!(start(3), 230);
+    // Nobody was running on reserved nodes except the pre-existing j1,
+    // which drained (reservation degraded on exactly its node).
+    assert_eq!(r.faults.preemptions, 0);
+    assert_eq!(r.faults.reservations_degraded, 1);
+    assert_eq!(r.faults.reservations_short_nodes, 0);
+}
+
+/// Finite-horizon refresh: a reservation whose window lies *beyond* the
+/// planning horizon at simulation start is clamped out of the initial
+/// timeline, but must re-enter as time approaches it (the dispatch
+/// refresh every horizon/2 ticks) — a candidate colliding with it is
+/// still refused. If the refresh regresses, the window stays invisible,
+/// the candidate backfills at t=95, and the start-time assertions fail.
+#[test]
+fn horizon_refresh_replans_far_reservations() {
+    use sst_sched::job::Job;
+    use sst_sched::trace::Workload;
+    // 2 nodes x 4 cores, horizon 60 ticks. Reservation [130, 230) over
+    // the whole machine — invisible at t=0 (0 + 60 < 130).
+    let jobs = vec![
+        Job::with_estimate(1, 0, 4, 200, 200),  // runs [0, 200) on node 0
+        Job::with_estimate(2, 0, 8, 100, 100),  // head: blocked behind j1
+        Job::with_estimate(3, 95, 4, 50, 50),   // candidate at t=95
+    ];
+    let w = Workload::new("horizon-refresh", jobs, 2, 4);
+    let resv = vec![ReservationSpec { start: 130, duration: 100, nodes: 2 }];
+    let r = Simulation::new(w, Policy::FcfsBackfill)
+        .with_reservations(resv)
+        .with_planning_horizon(60)
+        .run(None);
+    assert_eq!(r.completed.len(), 3);
+    let start =
+        |id: u64| r.completed.iter().find(|j| j.id == id).unwrap().start.unwrap().ticks();
+    assert_eq!(start(1), 0);
+    // At t=95 the refresh has re-planned the window (95 - 0 >= 60/2), so
+    // j3's [95, 145) run collides with [130, 230) and must wait; both
+    // remaining jobs run after the reservation expires at 230.
+    assert_eq!(start(2), 230, "head must wait out the reservation");
+    assert_eq!(start(3), 330, "candidate must not backfill into the window");
+}
+
+/// The planning horizon bounds timeline fidelity, not correctness:
+/// every job still completes, and an unlimited-horizon run of the same
+/// seeded workload matches itself.
+#[test]
+fn planning_horizon_keeps_runs_complete_and_deterministic() {
+    let w = SdscSp2Model::default().generate(600, 5).drop_infeasible();
+    let n = w.jobs.len();
+    for horizon in [0u64, 3_600, 86_400] {
+        let run = |w: sst_sched::trace::Workload| {
+            Simulation::new(w, Policy::FcfsBackfill)
+                .with_planning_horizon(horizon)
+                .run(None)
+        };
+        let a = run(w.clone());
+        assert_eq!(a.completed.len(), n, "horizon {horizon} lost jobs");
+        let b = run(w.clone());
+        assert_eq!(a.fingerprint(), b.fingerprint(), "horizon {horizon} not reproducible");
+    }
+}
+
+#[test]
+fn weibull_faults_run_deterministic_and_complete() {
+    let w = SdscSp2Model::default().generate(500, 9).drop_infeasible();
+    let n = w.jobs.len();
+    let faults = FaultConfig {
+        mtbf: 8_000.0,
+        mttr: 2_000.0,
+        seed: 31,
+        distribution: sst_sched::sim::FaultDistribution::Weibull,
+        shape: 0.7,
+        ..FaultConfig::default()
+    };
+    let preemption = PreemptionConfig {
+        mode: PreemptionMode::Checkpoint,
+        checkpoint_overhead: SimDuration(30),
+        restart_overhead: SimDuration(30),
+        starvation_threshold: SimDuration(0),
+    };
+    let run = |w: sst_sched::trace::Workload| {
+        Simulation::new(w, Policy::FcfsBackfill)
+            .with_faults(faults)
+            .with_preemption(preemption)
+            .run(None)
+    };
+    let a = run(w.clone());
+    assert_eq!(a.completed.len(), n);
+    assert!(a.faults.failures > 0, "weibull trace injected nothing");
+    assert_eq!(a.fingerprint(), run(w.clone()).fingerprint());
+    // A different shape changes the failure trace.
+    let other = Simulation::new(w, Policy::FcfsBackfill)
+        .with_faults(FaultConfig { shape: 3.0, ..faults })
+        .with_preemption(preemption)
+        .run(None);
+    assert_ne!(a.fingerprint(), other.fingerprint(), "shape knob must matter");
 }
 
 #[test]

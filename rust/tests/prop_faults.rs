@@ -71,7 +71,7 @@ fn run_and_audit(rng: &mut Rng, with_reservations: bool) -> Result<(), String> {
         mtbf: rng.range(500, 20_000) as f64,
         mttr: rng.range(100, 5_000) as f64,
         seed: rng.next_u64(),
-        until: None,
+        ..FaultConfig::default()
     };
     let reservations = if with_reservations {
         (0..rng.range(1, 3))
@@ -125,7 +125,7 @@ fn run_and_audit(rng: &mut Rng, with_reservations: bool) -> Result<(), String> {
         ));
     }
     for state in [NodeState::Down, NodeState::Draining, NodeState::Reserved] {
-        let stuck = s.cluster.nodes_in_state(state);
+        let stuck: Vec<usize> = s.cluster.nodes_in_state(state).collect();
         if !stuck.is_empty() {
             return Err(format!("nodes stuck in {state:?} at end: {stuck:?}"));
         }
@@ -252,7 +252,7 @@ fn failed_node_kills_only_its_occupants() {
     // exactly the jobs with fail_count > 0 redid work.
     let jobs = vec![Job::simple(1, 0, 4, 5_000), Job::simple(2, 0, 4, 5_000)];
     let w = Workload::new("fail-kill", jobs, 2, 4);
-    let faults = FaultConfig { mtbf: 1_000.0, mttr: 500.0, seed: 42, until: Some(4_000) };
+    let faults = FaultConfig { mtbf: 1_000.0, mttr: 500.0, seed: 42, until: Some(4_000), ..FaultConfig::default() };
     let r = Simulation::new(w, Policy::Fcfs).with_faults(faults).run(None);
     assert_eq!(r.completed.len(), 2, "both jobs must finish after repairs");
     assert!(r.faults.failures > 0, "seeded model must inject at least one failure");

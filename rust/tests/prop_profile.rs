@@ -1,0 +1,275 @@
+//! Property tests for the availability-timeline planning core
+//! (`resources::profile::AvailabilityProfile`):
+//!
+//! * structural invariants survive random mutation sequences (strictly
+//!   increasing breakpoint times, canonical form, capacity bound);
+//! * incremental maintenance == from-scratch rebuild: laying the same
+//!   holds one by one produces byte-identical breakpoints to sorting
+//!   all deltas and folding them once (the resync path);
+//! * hold/release pairs are exact inverses in any order;
+//! * oracle: `earliest_slot` agrees with the O(segments^2) profile the
+//!   conservative scheduler used before the refactor, on random release
+//!   sets and after random reservations.
+
+use sst_sched::core::rng::Rng;
+use sst_sched::resources::AvailabilityProfile;
+use sst_sched::util::prop::check_n;
+
+// ---------------------------------------------------------------------
+// Oracle: the pre-refactor conservative-backfill profile, reproduced
+// verbatim (breakpoint list, quadratic earliest_slot). The shared
+// planner must make identical slot decisions on identical inputs.
+// ---------------------------------------------------------------------
+
+struct OracleProfile {
+    points: Vec<(u64, u64)>,
+}
+
+impl OracleProfile {
+    fn new(now: u64, free_now: u64, releases: &mut Vec<(u64, u64)>) -> OracleProfile {
+        releases.sort_unstable();
+        let mut points = vec![(now, free_now)];
+        for &(t, c) in releases.iter() {
+            let last = *points.last().unwrap();
+            let t = t.max(now);
+            if t == last.0 {
+                points.last_mut().unwrap().1 = last.1 + c;
+            } else {
+                points.push((t, last.1 + c));
+            }
+        }
+        OracleProfile { points }
+    }
+
+    fn earliest_slot(&self, from: u64, cores: u64, duration: u64) -> Option<u64> {
+        let n = self.points.len();
+        for i in 0..n {
+            let (t_i, _) = self.points[i];
+            let start = t_i.max(from);
+            let end = start.saturating_add(duration);
+            let ok = self.points.iter().enumerate().all(|(j, &(t_j, free_j))| {
+                let seg_start = t_j;
+                let seg_end = self.points.get(j + 1).map(|p| p.0).unwrap_or(u64::MAX);
+                if seg_end <= start || seg_start >= end {
+                    true
+                } else {
+                    free_j >= cores
+                }
+            });
+            if ok {
+                return Some(start);
+            }
+        }
+        None
+    }
+
+    fn reserve(&mut self, start: u64, cores: u64, duration: u64) {
+        let end = start.saturating_add(duration);
+        self.split_at(start);
+        self.split_at(end);
+        for p in self.points.iter_mut() {
+            if p.0 >= start && p.0 < end {
+                assert!(p.1 >= cores, "oracle over-subscribed");
+                p.1 -= cores;
+            }
+        }
+    }
+
+    fn split_at(&mut self, t: u64) {
+        if t == u64::MAX {
+            return;
+        }
+        match self.points.binary_search_by_key(&t, |p| p.0) {
+            Ok(_) => {}
+            Err(idx) => {
+                if idx == 0 {
+                    return;
+                }
+                let free = self.points[idx - 1].1;
+                self.points.insert(idx, (t, free));
+            }
+        }
+    }
+}
+
+fn random_releases(rng: &mut Rng) -> (u64, Vec<(u64, u64)>, u64) {
+    let free_now = rng.range(0, 32);
+    let n = rng.below(12);
+    let releases: Vec<(u64, u64)> =
+        (0..n).map(|_| (rng.range(0, 2_000), rng.range(1, 16))).collect();
+    let total = free_now + releases.iter().map(|r| r.1).sum::<u64>();
+    (free_now, releases, total)
+}
+
+#[test]
+fn earliest_slot_matches_old_conservative_profile() {
+    check_n("profile oracle", 400, |rng| {
+        let (free_now, releases, total) = random_releases(rng);
+        let profile = AvailabilityProfile::from_releases(0, free_now, total, &releases);
+        let oracle = OracleProfile::new(0, free_now, &mut releases.clone());
+        for _ in 0..24 {
+            let cores = rng.range(1, total.max(1) + 4); // sometimes infeasible
+            let duration = rng.range(1, 500);
+            let from = rng.range(0, 2_500);
+            let got = profile.earliest_slot(from, cores, duration);
+            let want = oracle.earliest_slot(from, cores, duration);
+            if got != want {
+                return Err(format!(
+                    "slot mismatch: from={from} cores={cores} dur={duration}: \
+                     got {got:?}, oracle {want:?} (points {:?})",
+                    profile.points()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn slots_match_oracle_after_reservations() {
+    check_n("profile oracle with reservations", 200, |rng| {
+        let (free_now, releases, total) = random_releases(rng);
+        let mut profile = AvailabilityProfile::from_releases(0, free_now, total, &releases);
+        let mut oracle = OracleProfile::new(0, free_now, &mut releases.clone());
+        // Conservative-backfill workflow: find a slot, reserve it, repeat.
+        for _ in 0..6 {
+            if total == 0 {
+                break;
+            }
+            let cores = rng.range(1, total);
+            let duration = rng.range(1, 400);
+            let from = rng.range(0, 1_000);
+            let got = profile.earliest_slot(from, cores, duration);
+            let want = oracle.earliest_slot(from, cores, duration);
+            if got != want {
+                return Err(format!(
+                    "slot diverged after reservations: got {got:?}, oracle {want:?}"
+                ));
+            }
+            let Some(start) = got else { continue };
+            profile.hold(start, start.saturating_add(duration), cores);
+            oracle.reserve(start, cores, duration);
+            if !profile.check_invariants() {
+                return Err(format!("invariants broken: {:?}", profile.points()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn incremental_equals_from_scratch_rebuild() {
+    check_n("incremental == rebuild", 300, |rng| {
+        let free = rng.range(8, 64);
+        let jobs: Vec<(u64, u64, u64)> = (0..rng.below(16))
+            .map(|_| {
+                let s = rng.range(0, 1_000);
+                (s, s + rng.range(1, 500), rng.range(1, 8))
+            })
+            .collect();
+        // Incremental: lay each hold on its own.
+        let mut inc = AvailabilityProfile::new(0, free, free);
+        for &(s, e, c) in &jobs {
+            inc.hold(s, e, c);
+        }
+        // From scratch: fold all deltas at once (the resync path).
+        let mut deltas = Vec::new();
+        for &(s, e, c) in &jobs {
+            deltas.push((s, -(c as i64)));
+            deltas.push((e, c as i64));
+        }
+        let mut scratch = AvailabilityProfile::new(0, free, free);
+        scratch.rebuild(0, free, deltas);
+        if inc.points() != scratch.points() {
+            return Err(format!(
+                "incremental {:?} != rebuild {:?} (jobs {jobs:?})",
+                inc.points(),
+                scratch.points()
+            ));
+        }
+        if !inc.check_invariants() {
+            return Err(format!("invariants broken: {:?}", inc.points()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hold_release_pairs_are_exact_inverses() {
+    check_n("hold/release inverse", 300, |rng| {
+        let free = rng.range(4, 64);
+        let base = AvailabilityProfile::new(0, free, free);
+        let mut p = base.clone();
+        let mut ops: Vec<(u64, u64, u64)> = (0..rng.range(1, 20))
+            .map(|_| {
+                let s = rng.range(0, 1_500);
+                (s, s + rng.range(1, 600), rng.range(1, 12))
+            })
+            .collect();
+        for &(s, e, c) in &ops {
+            p.hold(s, e, c);
+        }
+        // Release in shuffled order: the algebra must not care.
+        rng.shuffle(&mut ops);
+        for &(s, e, c) in &ops {
+            p.release(s, e, c);
+        }
+        if p.points() != base.points() {
+            return Err(format!("profile did not return to base: {:?}", p.points()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn advance_preserves_future_reads() {
+    check_n("advance preserves future", 200, |rng| {
+        let (free_now, releases, total) = random_releases(rng);
+        let mut p = AvailabilityProfile::from_releases(0, free_now, total, &releases);
+        let q = p.clone();
+        let adv = rng.range(0, 2_500);
+        p.advance(adv);
+        if !p.check_invariants() {
+            return Err(format!("invariants broken after advance: {:?}", p.points()));
+        }
+        for _ in 0..16 {
+            let t = adv + rng.range(0, 1_000);
+            if p.free_at(t) != q.free_at(t) {
+                return Err(format!(
+                    "free_at({t}) changed across advance({adv}): {} != {}",
+                    p.free_at(t),
+                    q.free_at(t)
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn capacity_windows_round_trip() {
+    check_n("capacity windows", 200, |rng| {
+        let free = rng.range(4, 64);
+        let mut p = AvailabilityProfile::new(0, free, free);
+        let start = rng.range(0, 1_000);
+        let end = start + rng.range(1, 1_000);
+        let cores = rng.range(1, 96); // may over-commit on purpose
+        p.add_reservation_hold(start, end, cores);
+        // Reads clamp; the window offers no more than what was free.
+        if p.free_at(start) != free.saturating_sub(cores) {
+            return Err(format!(
+                "window read wrong: {} != {}",
+                p.free_at(start),
+                free.saturating_sub(cores)
+            ));
+        }
+        if p.free_at(end) != free {
+            return Err("capacity did not return after the window".into());
+        }
+        p.restore_node_capacity(start, end, cores);
+        if p.points() != AvailabilityProfile::new(0, free, free).points() {
+            return Err("window removal did not restore the base profile".into());
+        }
+        Ok(())
+    });
+}
