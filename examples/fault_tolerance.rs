@@ -16,7 +16,7 @@
 //! ```
 
 use sst_sched::core::time::SimDuration;
-use sst_sched::harness::{fault_comparison, print_fault_rows};
+use sst_sched::harness::{fault_comparison, print_fault_rows, FaultCompareOpts};
 use sst_sched::job::Job;
 use sst_sched::sched::{Policy, PreemptionConfig, PreemptionMode};
 use sst_sched::sim::FaultConfig;
@@ -67,7 +67,8 @@ fn main() {
         (Policy::FcfsBackfill, none),
         (Policy::FcfsBackfill, ckpt),
     ];
-    let rows = fault_comparison(&w, faults, &[], 0, &cases);
+    let rows =
+        fault_comparison(&w, &FaultCompareOpts { faults, ..FaultCompareOpts::default() }, &cases);
     print_fault_rows(&rows);
 
     let fcfs = &rows[0];

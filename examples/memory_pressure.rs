@@ -1,0 +1,99 @@
+//! Memory pressure: why the planning layer needs a memory dimension.
+//!
+//! A workload where *cores* fit but *memory* doesn't. The cores-only
+//! planner sees free cores at `now`, puts the blocked head's shadow at
+//! `now`, and spends rounds re-proposing starts the resource manager
+//! then refuses (refusal-retry churn); the memory-aware planner knows
+//! when memory actually frees, plans the head's reservation there, and
+//! backfills low-memory work into the gap.
+//!
+//! Run: cargo run --release --example memory_pressure
+
+use sst_sched::job::Job;
+use sst_sched::sched::Policy;
+use sst_sched::sim::{SimReport, Simulation};
+use sst_sched::trace::Workload;
+
+/// One node, 8 cores, 1000 MB.
+///
+/// * j1: 4 cores, 800 MB, 100 s — starts at t=0.
+/// * j2: 4 cores, 800 MB, 100 s — cores fit behind j1, memory doesn't:
+///   blocked until j1 releases its 800 MB at t=100.
+/// * j3: 4 cores, 100 MB, 200 s — fits next to j1 *and* next to j2.
+fn workload() -> Workload {
+    let jobs = vec![
+        Job::with_memory(1, 0, 4, 800, 100),
+        Job::with_memory(2, 1, 4, 800, 100),
+        Job::with_memory(3, 2, 4, 100, 200),
+    ];
+    Workload::new("memory-pressure", jobs, 1, 8)
+}
+
+fn simulate(memory_aware: bool) -> SimReport {
+    Simulation::new(workload(), Policy::FcfsBackfill)
+        .with_mem_per_node(1000)
+        .with_memory_aware(memory_aware)
+        .run(None)
+}
+
+fn start(r: &SimReport, id: u64) -> u64 {
+    r.completed.iter().find(|j| j.id == id).unwrap().start.unwrap().ticks()
+}
+
+fn main() {
+    let cores_only = simulate(false);
+    let mem_aware = simulate(true);
+
+    for (name, r) in [("cores-only", &cores_only), ("memory-aware", &mem_aware)] {
+        println!(
+            "{name:13} starts: j1={} j2={} j3={}  mean wait {:.1}s  dispatch rounds {}",
+            start(r, 1),
+            start(r, 2),
+            start(r, 3),
+            r.wait_stats().mean_wait,
+            r.dispatches,
+        );
+    }
+
+    // Both planners complete everything, and the exact per-node
+    // accounting (u64 free-memory pools + release invariants) means
+    // node memory can never go negative — what differs is decision
+    // quality, not safety.
+    assert_eq!(cores_only.completed.len(), 3);
+    assert_eq!(mem_aware.completed.len(), 3);
+    for r in [&cores_only, &mem_aware] {
+        for &(_, u) in r.memory_utilization.points() {
+            assert!((0.0..=1.0).contains(&u), "memory utilization out of range: {u}");
+        }
+    }
+    assert!(
+        mem_aware.mean_memory_utilization > 0.0,
+        "memory-aware run must record the memory series"
+    );
+
+    // The head j2 cannot start before t=100 either way (the resource
+    // manager refuses the memory oversubscription)...
+    assert_eq!(start(&cores_only, 2), 100);
+    assert_eq!(start(&mem_aware, 2), 100);
+    // ...but the cores-only planner placed j2's shadow at `now` (cores
+    // were free!), so backfill had zero extra budget and j3 waited out
+    // the whole backlog; the memory-aware shadow is t=100, which frees
+    // j3 to backfill immediately.
+    assert_eq!(start(&mem_aware, 3), 2, "memory-aware planner backfills j3 on arrival");
+    assert!(
+        start(&cores_only, 3) > start(&mem_aware, 3),
+        "cores-only planner strands the backfill candidate"
+    );
+    // Wait-time verdict: memory awareness strictly wins on this tape.
+    assert!(
+        mem_aware.wait_stats().mean_wait < cores_only.wait_stats().mean_wait,
+        "memory-aware must beat cores-only refusal-retry churn: {} !< {}",
+        mem_aware.wait_stats().mean_wait,
+        cores_only.wait_stats().mean_wait,
+    );
+
+    println!("\nmemory-aware planning cuts mean wait {:.1}s -> {:.1}s on the pressure tape",
+        cores_only.wait_stats().mean_wait,
+        mem_aware.wait_stats().mean_wait,
+    );
+}

@@ -9,8 +9,8 @@
 use sst_sched::core::time::SimTime;
 use sst_sched::baseline::run_baseline;
 use sst_sched::job::{Job, WaitQueue};
-use sst_sched::resources::{AvailabilityProfile, Cluster};
-use sst_sched::sched::{ConservativeScheduler, Policy, RunningJob, SchedInput, Scheduler};
+use sst_sched::resources::{AvailabilityProfile, Cluster, ResourceVector};
+use sst_sched::sched::{ArrivalOrder, ConservativeScheduler, Policy, RunningJob, SchedInput, Scheduler};
 use sst_sched::sim::run_policy;
 use sst_sched::trace::{Das2Model, SdscSp2Model};
 use sst_sched::util::bench::{section, Bench};
@@ -81,6 +81,7 @@ fn sched_round_cases(b: &mut Bench, queued: usize, running: usize) {
                 queue,
                 running: running_jobs,
                 profile: maintained,
+                order: &ArrivalOrder,
             };
             ConservativeScheduler::new().schedule(&input, &mut cluster).len()
         });
@@ -105,6 +106,76 @@ fn sched_round_cases(b: &mut Bench, queued: usize, running: usize) {
                 queue,
                 running: running_jobs,
                 profile: &rebuilt,
+                order: &ArrivalOrder,
+            };
+            ConservativeScheduler::new().schedule(&input, &mut cluster).len()
+        });
+    }
+}
+
+/// Memory-constrained scheduling round (multi-resource planning API),
+/// plus the lazy-materialization pin: a memory-*tracking* profile over a
+/// trace that carries no memory demands must never materialize its
+/// memory timeline — the cores-only workload pays (near) zero for the
+/// second dimension.
+fn sched_round_mem_cases(b: &mut Bench, queued: usize) {
+    let nodes = 512usize;
+    let cores_per_node = 16u64;
+    let mem_per_node = 4096u64;
+    let cluster = Cluster::homogeneous(nodes, cores_per_node, mem_per_node);
+    let total = ResourceVector::new(cluster.total_cores(), cluster.total_memory_mb());
+
+    let queue_of = |mem: bool| {
+        let mut q = WaitQueue::new();
+        for i in 0..queued {
+            let i = i as u64;
+            let mut j = Job::with_estimate(i, 0, 1 + (i % 64), 100 + i % 900, 100 + i % 900);
+            if mem {
+                j.memory_mb = 256 + (i % 16) * 256;
+            }
+            q.push(j);
+        }
+        q
+    };
+
+    // Shared setup: the whole machine planned busy until t=500 (cores +
+    // memory for the memory-carrying variant), so every slot lands in
+    // the future — rounds pay pure planning cost and never mutate the
+    // cluster between iterations.
+    let profile_of = |mem: bool| {
+        let mut p = AvailabilityProfile::new_v(
+            0,
+            ResourceVector::new(total.cores, total.memory_mb),
+            total,
+        );
+        p.hold_v(
+            0,
+            500,
+            ResourceVector::new(total.cores, if mem { total.memory_mb } else { 0 }),
+        );
+        p
+    };
+
+    // Lazy pin (asserted outside the timed loop): no memory demands ->
+    // no memory timeline, even on a memory-tracking profile.
+    assert!(
+        !profile_of(false).has_memory_dimension(),
+        "cores-only round must not materialize the memory dimension"
+    );
+    assert!(profile_of(true).has_memory_dimension());
+
+    for (label, mem) in [("cores-only", false), ("memory", true)] {
+        let mut cluster = cluster.clone();
+        let queue = queue_of(mem);
+        let profile = profile_of(mem);
+        let label = format!("round/cons-{queued}q-mem/{label}");
+        b.case(&label, move || {
+            let input = SchedInput {
+                now: SimTime(0),
+                queue: &queue,
+                running: &[],
+                profile: &profile,
+                order: &ArrivalOrder,
             };
             ConservativeScheduler::new().schedule(&input, &mut cluster).len()
         });
@@ -150,6 +221,9 @@ fn main() {
         sched_round_cases(&mut b, 10_000, 1_000);
         sched_round_cases(&mut b, 10_000, 5_000);
     }
+
+    section("memory-constrained round (lazy second dimension)");
+    sched_round_mem_cases(&mut b, if smoke { 2_000 } else { 10_000 });
 
     section("baseline (CQsim-like) for comparison");
     let w = das2.clone();

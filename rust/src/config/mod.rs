@@ -4,8 +4,8 @@
 //! and reproducible (`sst-sched run --config experiment.json`).
 
 use crate::core::time::SimDuration;
-use crate::sched::{Policy, PreemptionConfig};
-use crate::sim::{FaultConfig, ReservationSpec};
+use crate::sched::{OrderKind, Policy, PreemptionConfig};
+use crate::sim::{FaultConfig, ReservationSpec, DEFAULT_FAIRSHARE_HALF_LIFE};
 use crate::trace::{Das2Model, SdscSp2Model, Workload};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -37,6 +37,16 @@ pub struct ExperimentConfig {
     pub cores_per_node: Option<u64>,
     pub mem_per_node: u64,
     pub policy: Policy,
+    /// Queue-ordering override (`scheduler.order`); `None` = the
+    /// policy's natural order (SJF = shortest-first, everything else =
+    /// arrival).
+    pub order: Option<OrderKind>,
+    /// Fair-share usage-decay half-life in ticks (`fairshare.half_life`).
+    pub fairshare_half_life: u64,
+    /// Plan memory as a second availability-timeline dimension
+    /// (`scheduler.memory_aware` / `--memory-aware`); needs
+    /// `mem_per_node > 0` to have any effect.
+    pub memory_aware: bool,
     /// "native" or "xla".
     pub accel: String,
     /// Parallel-run parameters.
@@ -70,6 +80,9 @@ impl Default for ExperimentConfig {
             cores_per_node: None,
             mem_per_node: 0,
             policy: Policy::FcfsBackfill,
+            order: None,
+            fairshare_half_life: DEFAULT_FAIRSHARE_HALF_LIFE,
+            memory_aware: false,
             accel: "native".to_string(),
             ranks: 1,
             lookahead: 3600,
@@ -120,9 +133,19 @@ impl ExperimentConfig {
                 .get_str_or("policy", cfg.policy.as_str())
                 .parse()
                 .map_err(|e: String| anyhow::anyhow!(e))?;
+            if let Some(o) = s.get("order").and_then(|x| x.as_str()) {
+                cfg.order = Some(o.parse().map_err(|e: String| anyhow::anyhow!(e))?);
+            }
+            cfg.memory_aware = s.get_bool_or("memory_aware", cfg.memory_aware);
             cfg.accel = s.get_str_or("accel", &cfg.accel).to_string();
             if !matches!(cfg.accel.as_str(), "native" | "xla" | "hybrid") {
                 bail!("scheduler.accel must be native|xla|hybrid, got {:?}", cfg.accel);
+            }
+        }
+        if let Some(fs) = v.get("fairshare") {
+            cfg.fairshare_half_life = fs.get_u64_or("half_life", cfg.fairshare_half_life);
+            if cfg.fairshare_half_life == 0 {
+                bail!("fairshare.half_life must be > 0 (0 would disable usage decay entirely)");
             }
         }
         if let Some(p) = v.get("parallel") {
@@ -212,16 +235,20 @@ impl ExperimentConfig {
         if let Some(c) = self.cores_per_node {
             platform.push(("cores_per_node", Json::num(c as f64)));
         }
+        let mut sched = vec![
+            ("policy", Json::str(self.policy.as_str())),
+            ("accel", Json::str(self.accel.clone())),
+        ];
+        if let Some(o) = self.order {
+            sched.push(("order", Json::str(o.as_str())));
+        }
+        if self.memory_aware {
+            sched.push(("memory_aware", Json::Bool(true)));
+        }
         let mut top = vec![
             ("workload", Json::obj(wl)),
             ("platform", Json::obj(platform)),
-            (
-                "scheduler",
-                Json::obj(vec![
-                    ("policy", Json::str(self.policy.as_str())),
-                    ("accel", Json::str(self.accel.clone())),
-                ]),
-            ),
+            ("scheduler", Json::obj(sched)),
             (
                 "parallel",
                 Json::obj(vec![
@@ -247,6 +274,12 @@ impl ExperimentConfig {
             top.push((
                 "planning",
                 Json::obj(vec![("horizon", Json::num(self.planning_horizon as f64))]),
+            ));
+        }
+        if self.fairshare_half_life != DEFAULT_FAIRSHARE_HALF_LIFE {
+            top.push((
+                "fairshare",
+                Json::obj(vec![("half_life", Json::num(self.fairshare_half_life as f64))]),
             ));
         }
         if self.preemption.enabled() {
@@ -382,6 +415,35 @@ mod tests {
         assert_eq!(w.cores_per_node, 2);
         assert!(w.jobs.len() <= 500);
         assert!(!w.jobs.is_empty());
+    }
+
+    #[test]
+    fn order_and_memory_surface_roundtrips() {
+        let c = ExperimentConfig::parse(
+            r#"{
+                "platform": {"mem_per_node": 4096},
+                "scheduler": {"policy": "cons-backfill", "order": "fair-share",
+                              "memory_aware": true},
+                "fairshare": {"half_life": 7200}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.order, Some(OrderKind::FairShare));
+        assert!(c.memory_aware);
+        assert_eq!(c.fairshare_half_life, 7200);
+        let back = ExperimentConfig::parse(&c.to_json().to_pretty()).unwrap();
+        assert_eq!(back.order, c.order);
+        assert_eq!(back.memory_aware, c.memory_aware);
+        assert_eq!(back.fairshare_half_life, c.fairshare_half_life);
+        assert_eq!(back.mem_per_node, 4096);
+        // Defaults: no override, no memory awareness, day half-life.
+        let d = ExperimentConfig::parse("{}").unwrap();
+        assert_eq!(d.order, None);
+        assert!(!d.memory_aware);
+        assert_eq!(d.fairshare_half_life, DEFAULT_FAIRSHARE_HALF_LIFE);
+        // Validation.
+        assert!(ExperimentConfig::parse(r#"{"scheduler": {"order": "random"}}"#).is_err());
+        assert!(ExperimentConfig::parse(r#"{"fairshare": {"half_life": 0}}"#).is_err());
     }
 
     #[test]

@@ -404,6 +404,23 @@ pub struct FaultRow {
     pub makespan: u64,
 }
 
+/// Shared environment of a `fault_comparison`: everything about the run
+/// that is *not* the (policy, preemption) case under comparison — the
+/// failure model, reservations, planning knobs, queue ordering and
+/// memory awareness all apply to every case identically (so a CLI
+/// `--order fair-share` or `--memory-aware` is honored by `sst-sched
+/// faults` instead of silently ignored).
+#[derive(Debug, Clone, Default)]
+pub struct FaultCompareOpts<'a> {
+    pub faults: crate::sim::FaultConfig,
+    pub reservations: &'a [crate::sim::ReservationSpec],
+    pub planning_horizon: u64,
+    pub order: Option<crate::sched::OrderKind>,
+    pub fairshare_half_life: u64,
+    pub mem_per_node: u64,
+    pub memory_aware: bool,
+}
+
 /// Run every `(policy, preemption)` case against the *same* failure
 /// trace (the injector stream is seeded per-run, not shared, so every
 /// case sees identical failure instants, victims and repair times) and
@@ -411,20 +428,26 @@ pub struct FaultRow {
 /// examples/fault_tolerance.rs and the `faults` CLI command).
 pub fn fault_comparison(
     workload: &Workload,
-    faults: crate::sim::FaultConfig,
-    reservations: &[crate::sim::ReservationSpec],
-    planning_horizon: u64,
+    opts: &FaultCompareOpts<'_>,
     cases: &[(Policy, crate::sched::PreemptionConfig)],
 ) -> Vec<FaultRow> {
     cases
         .iter()
         .map(|&(policy, preemption)| {
-            let r = crate::sim::Simulation::new(workload.clone(), policy)
-                .with_faults(faults)
+            let mut sim = crate::sim::Simulation::new(workload.clone(), policy)
+                .with_faults(opts.faults)
                 .with_preemption(preemption)
-                .with_reservations(reservations.to_vec())
-                .with_planning_horizon(planning_horizon)
-                .run(None);
+                .with_reservations(opts.reservations.to_vec())
+                .with_planning_horizon(opts.planning_horizon)
+                .with_mem_per_node(opts.mem_per_node)
+                .with_memory_aware(opts.memory_aware);
+            if opts.fairshare_half_life > 0 {
+                sim = sim.with_fairshare_half_life(opts.fairshare_half_life);
+            }
+            if let Some(order) = opts.order {
+                sim = sim.with_order(order);
+            }
+            let r = sim.run(None);
             FaultRow {
                 policy: r.policy,
                 mode: r.preemption_mode,
@@ -480,6 +503,9 @@ pub fn print_run_report(r: &crate::sim::SimReport) {
     let s = wait_stats(&r.completed);
     println!("workload          {}", r.workload);
     println!("policy            {}", r.policy);
+    if r.order != "arrival" {
+        println!("queue order       {}", r.order);
+    }
     println!("jobs completed    {}", s.jobs);
     println!("jobs rejected     {}", r.rejected);
     println!("DES events        {}", r.events);
@@ -490,6 +516,16 @@ pub fn print_run_report(r: &crate::sim::SimReport) {
     println!("p95 wait          {:.1} s", s.p95_wait);
     println!("mean slowdown     {:.2}", s.mean_slowdown);
     println!("mean utilization  {:.3}", r.mean_utilization);
+    if !r.memory_utilization.points().is_empty() {
+        println!("mean memory util  {:.3}", r.mean_memory_utilization);
+    }
+    if !r.user_shares.is_empty() {
+        let s = crate::metrics::share_stats(&r.user_shares);
+        println!(
+            "fair-share users  {} (max {:.0} core-s decayed, imbalance {:.2})",
+            s.users, s.max_usage, s.imbalance
+        );
+    }
     // Fault/preemption outputs, only when the subsystem was active.
     if r.faults != crate::sim::FaultCounters::default() || r.preemption_mode != "none" {
         println!("preemption mode   {}", r.preemption_mode);
@@ -580,9 +616,7 @@ mod tests {
         };
         let rows = fault_comparison(
             &w,
-            faults,
-            &[],
-            0,
+            &FaultCompareOpts { faults, ..FaultCompareOpts::default() },
             &[(Policy::Fcfs, PreemptionConfig::default()), (Policy::FcfsBackfill, ckpt)],
         );
         assert_eq!(rows.len(), 2);

@@ -153,6 +153,26 @@ impl Job {
         )
     }
 
+    /// Same as [`simple`] but with a memory demand (tests and examples).
+    pub fn with_memory(id: JobId, submit: u64, cores: u64, memory_mb: u64, runtime: u64) -> Job {
+        Job::new(
+            id,
+            SimTime(submit),
+            cores,
+            memory_mb,
+            SimDuration(runtime),
+            SimDuration(runtime),
+            0,
+            0,
+        )
+    }
+
+    /// The aggregate multi-resource demand this job places on the
+    /// machine — what the planning layer plans in.
+    pub fn demand(&self) -> crate::resources::ResourceVector {
+        crate::resources::ResourceVector::new(self.cores, self.memory_mb)
+    }
+
     /// Wait time: start - submit. None if not started.
     pub fn wait_time(&self) -> Option<SimDuration> {
         self.start.map(|s| s - self.submit)

@@ -12,23 +12,37 @@
 //!   reproducible RNG.
 //! * [`job`], [`resources`], [`sched`] — the job-scheduling component:
 //!   job lifecycle, per-node core/memory accounting (paper Algorithm 1),
-//!   and the five scheduling algorithms (FCFS, SJF, LJF, FCFS+BestFit,
-//!   FCFS+Backfilling/EASY).
-//! * **planning layer** ([`resources::profile::AvailabilityProfile`]) —
-//!   the unified availability timeline: one incremental free-core step
-//!   function from now into the future, with binary-searched
-//!   O(log n + k) slot queries. Writers: the simulation core only —
-//!   `sim::SchedulerComponent` subtracts a hold at every job start,
-//!   releases the remainder at completion/eviction, feeds reservation
-//!   windows and failure/repair capacity transitions in, and resyncs
-//!   from authoritative cluster state on the rare capacity events.
-//!   Readers: every planning policy, through `sched::SchedInput::
-//!   profile` — EASY derives its shadow time/extra cores from it and
-//!   admission-checks candidates against it (so backfill respects
-//!   *future* advance reservations and outage windows), and
+//!   and the scheduling algorithms. Since the multi-resource/ordering
+//!   redesign a policy is two orthogonal choices: a *planner*
+//!   (`sched::BlockingScheduler` for FCFS/SJF/LJF/BestFit, EASY
+//!   backfill, conservative backfill) and a *queue ordering*
+//!   ([`sched::QueueOrder`], `sched::order`: arrival, shortest,
+//!   longest, usage-decayed fair share keyed on `Job::user`/`group`
+//!   with a configurable half-life). `--order fair-share` composes
+//!   with every planner.
+//! * **planning layer** ([`resources::profile::AvailabilityProfile`],
+//!   [`resources::ResourceVector`]) — the unified availability
+//!   timeline, generalized to multi-resource demands: one incremental
+//!   free-capacity step function *per active dimension* (cores always;
+//!   memory lazily materialized, so cores-only workloads pay nothing),
+//!   sharing one signed breakpoint algebra with binary-searched
+//!   O(log n + k) slot queries (`earliest_slot_v`/`can_place_v`).
+//!   Writers: the simulation core only — `sim::SchedulerComponent`
+//!   subtracts a vector hold at every job start, releases the remainder
+//!   at completion/eviction, feeds reservation windows and
+//!   failure/repair capacity transitions in, and resyncs both
+//!   dimensions from authoritative cluster state on the rare capacity
+//!   events. Readers: every policy, through `sched::SchedInput::
+//!   profile` — *all* head admission routes through one `can_place_v`
+//!   query (so even the blocking disciplines refuse to start into a
+//!   future reservation or outage window; on monotone timelines the
+//!   check is elided and decisions are bit-identical to the scalar
+//!   planner), EASY derives its shadow time/extra cores from it, and
 //!   conservative backfilling clones it into a per-round scratch plan.
 //!   Policies never mutate the shared timeline. The `planning.horizon`
-//!   config knob bounds timeline fidelity; 0 (default) is exact.
+//!   config knob bounds timeline fidelity; 0 (default) is exact;
+//!   `--memory-aware` (with `mem_per_node > 0`) turns on the memory
+//!   dimension.
 //! * fault/preemption/reservation subsystem (beyond the paper; AccaSim-
 //!   and Reuther-et-al-style scenario diversity): node lifecycle states
 //!   (`Up`/`Draining`/`Down`/`Reserved`) with seeded exponential

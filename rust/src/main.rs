@@ -31,6 +31,9 @@ sst-sched — scalable HPC job scheduling & resource management simulator
 USAGE:
   sst-sched run [--workload das2|sdsc-sp2] [--trace file.swf|file.gwf]
                 [--jobs N] [--policy fcfs|sjf|ljf|fcfs-bestfit|fcfs-backfill|cons-backfill]
+                [--order arrival|shortest|longest|fair-share]  # queue ordering
+                [--half-life TICKS]  # fair-share usage-decay half-life
+                [--mem MB] [--memory-aware]  # per-node memory + memory planning
                 [--accel native|xla] [--ranks R] [--lookahead SECONDS]
                 [--seed S] [--arrival-scale F] [--config experiment.json]
                 [--mtbf S] [--mttr S] [--faults-seed S] [--faults-until T]
@@ -74,6 +77,13 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
             t.row(&["fcfs-bestfit".into(), "FCFS order, tightest-node placement".into()]);
             t.row(&["fcfs-backfill".into(), "EASY backfilling (default)".into()]);
             t.row(&["cons-backfill".into(), "conservative backfilling (all-job reservations)".into()]);
+            t.print();
+            println!();
+            let mut t = Table::new(&["order (--order)", "description"]);
+            t.row(&["arrival".into(), "queue order (every policy's default except sjf/ljf)".into()]);
+            t.row(&["shortest".into(), "ascending runtime estimate (sjf's default)".into()]);
+            t.row(&["longest".into(), "descending runtime estimate (ljf's default)".into()]);
+            t.row(&["fair-share".into(), "usage-decayed per-user share (--half-life)".into()]);
             t.print();
             Ok(())
         }
@@ -119,6 +129,18 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(c) = args.get("cores") {
         cfg.cores_per_node = Some(c.parse().context("--cores expects an integer")?);
+    }
+    cfg.mem_per_node = args.u64_or("mem", cfg.mem_per_node)?;
+    // Queue-ordering seam: ordering composes with every policy.
+    if let Some(o) = args.get("order") {
+        cfg.order = Some(o.parse().map_err(|e: String| anyhow::anyhow!(e))?);
+    }
+    cfg.fairshare_half_life = args.u64_or("half-life", cfg.fairshare_half_life)?;
+    if cfg.fairshare_half_life == 0 {
+        bail!("--half-life must be > 0");
+    }
+    if args.flag("memory-aware") {
+        cfg.memory_aware = true;
     }
     // Fault/preemption knobs (fault subsystem).
     cfg.faults.mtbf = args.f64_or("mtbf", cfg.faults.mtbf)?;
@@ -167,6 +189,10 @@ fn cmd_run(args: &Args) -> Result<()> {
             preemption: cfg.preemption,
             reservations: cfg.reservations.clone(),
             planning_horizon: cfg.planning_horizon,
+            order: cfg.order,
+            fairshare_half_life: cfg.fairshare_half_life,
+            mem_per_node: cfg.mem_per_node,
+            memory_aware: cfg.memory_aware,
         };
         let rep = sst_sched::parallel::run_jobs_parallel_opts(
             &workload,
@@ -191,7 +217,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         .with_faults(cfg.faults)
         .with_preemption(cfg.preemption)
         .with_reservations(cfg.reservations.clone())
-        .with_planning_horizon(cfg.planning_horizon);
+        .with_planning_horizon(cfg.planning_horizon)
+        .with_mem_per_node(cfg.mem_per_node)
+        .with_memory_aware(cfg.memory_aware)
+        .with_fairshare_half_life(cfg.fairshare_half_life);
+    if let Some(order) = cfg.order {
+        sim = sim.with_order(order);
+    }
     if cfg.policy == Policy::FcfsBackfill {
         let sched = sst_sched::runtime::backfill_with_accel(accel)?;
         println!("scorer backend    {}", sched.scorer_backend());
@@ -252,9 +284,15 @@ fn cmd_faults(args: &Args) -> Result<()> {
     }
     let rows = harness::fault_comparison(
         &workload,
-        cfg.faults,
-        &cfg.reservations,
-        cfg.planning_horizon,
+        &harness::FaultCompareOpts {
+            faults: cfg.faults,
+            reservations: &cfg.reservations,
+            planning_horizon: cfg.planning_horizon,
+            order: cfg.order,
+            fairshare_half_life: cfg.fairshare_half_life,
+            mem_per_node: cfg.mem_per_node,
+            memory_aware: cfg.memory_aware,
+        },
         &cases,
     );
     harness::print_fault_rows(&rows);

@@ -8,6 +8,36 @@
 use crate::core::stats::TimeSeries;
 use crate::core::time::SimTime;
 use crate::job::Job;
+use crate::sched::UserShare;
+
+/// Summary of a fair-share usage snapshot (`SimReport::user_shares`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ShareStats {
+    pub users: usize,
+    /// Largest decayed usage across users (core-seconds).
+    pub max_usage: f64,
+    /// Sum of decayed usage across users.
+    pub total_usage: f64,
+    /// max / mean usage — 1.0 is perfectly even, large values mean one
+    /// user dominates the decayed-usage ledger.
+    pub imbalance: f64,
+}
+
+/// Summarize a per-user share snapshot.
+pub fn share_stats(shares: &[UserShare]) -> ShareStats {
+    if shares.is_empty() {
+        return ShareStats::default();
+    }
+    let total: f64 = shares.iter().map(|s| s.usage).sum();
+    let max = shares.iter().map(|s| s.usage).fold(0.0, f64::max);
+    let mean = total / shares.len() as f64;
+    ShareStats {
+        users: shares.len(),
+        max_usage: max,
+        total_usage: total,
+        imbalance: if mean > 0.0 { max / mean } else { 1.0 },
+    }
+}
 
 /// Wait/turnaround summary over completed jobs.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -207,6 +237,20 @@ mod tests {
         let neg: Vec<f64> = a.iter().map(|x| -x).collect();
         assert!((correlation(&a, &neg) + 1.0).abs() < 1e-12);
         assert_eq!(correlation(&a, &[1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn share_stats_summarizes() {
+        assert_eq!(share_stats(&[]), ShareStats::default());
+        let shares = [
+            UserShare { user: 1, group: 0, usage: 300.0 },
+            UserShare { user: 2, group: 0, usage: 100.0 },
+        ];
+        let s = share_stats(&shares);
+        assert_eq!(s.users, 2);
+        assert_eq!(s.max_usage, 300.0);
+        assert_eq!(s.total_usage, 400.0);
+        assert!((s.imbalance - 1.5).abs() < 1e-12);
     }
 
     #[test]

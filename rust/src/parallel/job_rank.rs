@@ -7,8 +7,8 @@
 //! (windows x barriers) is what limits speedup, as in SST.
 
 use crate::parallel::{fnv1a, run_parallel, run_parallel_modeled, ParallelReport, RankLogic, RankSummary, BARRIER_COST};
-use crate::sched::{Policy, PreemptionConfig};
-use crate::sim::{FaultConfig, ReservationSpec, SimInstance, Simulation};
+use crate::sched::{OrderKind, Policy, PreemptionConfig};
+use crate::sim::{FaultConfig, ReservationSpec, SimInstance, Simulation, DEFAULT_FAIRSHARE_HALF_LIFE};
 use crate::trace::Workload;
 
 /// Per-rank simulation options for fault-aware parallel runs.
@@ -29,6 +29,17 @@ pub struct RankSimOpts {
     /// Applied per rank unchanged — the horizon is a fidelity knob, not
     /// a capacity, so it does not rescale with the rank count.
     pub planning_horizon: u64,
+    /// Queue-ordering override; applied per rank unchanged (fair-share
+    /// usage is per-rank state, exactly like the per-cluster queues the
+    /// partitioning models).
+    pub order: Option<OrderKind>,
+    /// Fair-share usage-decay half-life (ticks).
+    pub fairshare_half_life: u64,
+    /// Per-node memory (MB); identical on every rank (nodes are divided,
+    /// not shrunk).
+    pub mem_per_node: u64,
+    /// Plan memory as a second timeline dimension.
+    pub memory_aware: bool,
 }
 
 impl RankSimOpts {
@@ -57,6 +68,10 @@ impl Default for RankSimOpts {
             preemption: PreemptionConfig::default(),
             reservations: Vec::new(),
             planning_horizon: 0,
+            order: None,
+            fairshare_half_life: DEFAULT_FAIRSHARE_HALF_LIFE,
+            mem_per_node: 0,
+            memory_aware: false,
         }
     }
 }
@@ -191,14 +206,20 @@ pub fn run_jobs_parallel_opts(
         .enumerate()
         .map(|(i, part)| {
             let opts = opts.for_rank(i, n_parts);
-            move |_i: usize| JobRank {
-                inst: Simulation::new(part, policy)
+            move |_i: usize| {
+                let mut sim = Simulation::new(part, policy)
                     .with_seed(opts.seed)
                     .with_faults(opts.faults)
                     .with_preemption(opts.preemption)
                     .with_reservations(opts.reservations)
                     .with_planning_horizon(opts.planning_horizon)
-                    .build(),
+                    .with_fairshare_half_life(opts.fairshare_half_life)
+                    .with_mem_per_node(opts.mem_per_node)
+                    .with_memory_aware(opts.memory_aware);
+                if let Some(order) = opts.order {
+                    sim = sim.with_order(order);
+                }
+                JobRank { inst: sim.build() }
             }
         })
         .collect();

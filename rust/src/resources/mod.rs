@@ -9,9 +9,11 @@
 
 pub mod profile;
 pub mod topology;
+pub mod vector;
 
 pub use profile::AvailabilityProfile;
 pub use topology::Topology;
+pub use vector::ResourceVector;
 
 use crate::job::{Job, JobId};
 
@@ -90,6 +92,17 @@ pub struct Allocation {
 impl Allocation {
     pub fn cores(&self) -> u64 {
         self.taken.iter().map(|t| t.1).sum()
+    }
+
+    /// Memory actually taken, summed over nodes (>= the job's request:
+    /// per-node shares round up).
+    pub fn memory_mb(&self) -> u64 {
+        self.taken.iter().map(|t| t.2).sum()
+    }
+
+    /// Aggregate footprint of this allocation as a planning vector.
+    pub fn demand(&self) -> ResourceVector {
+        ResourceVector::new(self.cores(), self.memory_mb())
     }
 
     pub fn node_ids(&self) -> Vec<usize> {
@@ -227,6 +240,49 @@ impl Cluster {
         let mut caps: Vec<u64> = self.nodes.iter().map(|n| n.cores).collect();
         caps.sort_unstable_by(|a, b| b.cmp(a));
         caps[..nodes].iter().sum()
+    }
+
+    /// Memory analogue of [`Cluster::reservation_plan_cores`]: the
+    /// largest `nodes` node memories (must not understate the hold).
+    pub fn reservation_plan_mem(&self, nodes: usize) -> u64 {
+        let mut caps: Vec<u64> = self.nodes.iter().map(|n| n.memory_mb).collect();
+        if nodes >= caps.len() {
+            return caps.iter().sum();
+        }
+        caps.sort_unstable_by(|a, b| b.cmp(a));
+        caps[..nodes].iter().sum()
+    }
+
+    /// Physical memory across all nodes.
+    pub fn total_memory_mb(&self) -> u64 {
+        self.nodes.iter().map(|n| n.memory_mb).sum()
+    }
+
+    /// Free memory on `Up` nodes (the schedulable memory pool). Computed
+    /// on demand — callers are the rare resync path and reporting, not
+    /// the per-event hot path.
+    pub fn free_memory_mb(&self) -> u64 {
+        self.nodes
+            .iter()
+            .filter(|n| n.state == NodeState::Up)
+            .map(|n| n.free_memory_mb)
+            .sum()
+    }
+
+    /// Memory allocated to jobs (on any node).
+    pub fn busy_memory_mb(&self) -> u64 {
+        self.nodes.iter().map(|n| n.memory_mb - n.free_memory_mb).sum()
+    }
+
+    /// Fraction of physical memory busy, in [0, 1]; 0 when the machine
+    /// tracks no memory.
+    pub fn memory_utilization(&self) -> f64 {
+        let total = self.total_memory_mb();
+        if total == 0 {
+            0.0
+        } else {
+            self.busy_memory_mb() as f64 / total as f64
+        }
     }
 
     /// Nodes with at least one busy core (paper Fig 3(a) metric).
@@ -570,5 +626,29 @@ mod tests {
         assert_eq!(c.reservation_plan_cores(2), 24);
         assert_eq!(c.reservation_plan_cores(3), 28);
         assert_eq!(c.reservation_plan_cores(99), 28);
+    }
+
+    #[test]
+    fn memory_pools_track_allocations() {
+        let mut c = Cluster::heterogeneous(&[(8, 1000), (8, 500)]);
+        assert_eq!(c.total_memory_mb(), 1500);
+        assert_eq!(c.free_memory_mb(), 1500);
+        assert_eq!(c.reservation_plan_mem(1), 1000);
+        assert_eq!(c.reservation_plan_mem(9), 1500);
+        let mut j = job(1, 8);
+        j.memory_mb = 800;
+        let a = c.allocate(&j, AllocPolicy::FirstFit).unwrap();
+        assert_eq!(a.memory_mb(), 800);
+        assert_eq!(a.demand(), ResourceVector::new(8, 800));
+        assert_eq!(c.busy_memory_mb(), 800);
+        assert_eq!(c.free_memory_mb(), 700);
+        assert!((c.memory_utilization() - 800.0 / 1500.0).abs() < 1e-12);
+        // A non-Up node's free memory leaves the schedulable pool.
+        c.set_node_state(1, NodeState::Down);
+        assert_eq!(c.free_memory_mb(), 200);
+        c.set_node_state(1, NodeState::Up);
+        c.release(&a);
+        assert_eq!(c.free_memory_mb(), 1500);
+        assert_eq!(c.memory_utilization(), 0.0);
     }
 }

@@ -1,84 +1,75 @@
 //! The availability timeline — the planning core every forward-looking
 //! scheduling decision reads from (tentpole of the unified planning
-//! refactor).
+//! refactor), generalized to multi-resource demands.
 //!
-//! [`AvailabilityProfile`] is an incremental, time-indexed free-core
-//! step function: a breakpoint list `(time, free)` where `free` holds
-//! until the next breakpoint and the last segment extends to infinity.
-//! It is owned by the simulation core (`sim::SchedulerComponent`), which
-//! updates it *incrementally* on job start/finish, reservation
+//! [`AvailabilityProfile`] is an incremental, time-indexed free-resource
+//! step function: one breakpoint list `(time, free)` per *active
+//! dimension*, where `free` holds until the next breakpoint and the last
+//! segment extends to infinity. The cores dimension always exists; the
+//! memory dimension is **lazily materialized** — it is allocated the
+//! first time a memory-carrying hold or rebuild touches the profile, so
+//! cores-only workloads pay zero extra cost (pinned by the
+//! `engine_throughput` bench). Both dimensions share the same signed
+//! breakpoint algebra ([`Timeline`], private).
+//!
+//! The profile is owned by the simulation core (`sim::SchedulerComponent`),
+//! which updates it *incrementally* on job start/finish, reservation
 //! claim/release and node failure/repair instead of rebuilding it from
 //! sorted release vectors every scheduling round. Policies receive it
 //! read-only through `sched::SchedInput::profile`:
 //!
+//! * every blocking discipline (FCFS/SJF/LJF/BestFit head admission)
+//!   routes through [`AvailabilityProfile::can_place_v`], which is what
+//!   makes a blocked head refuse to start into a *future* advance
+//!   reservation or outage window;
 //! * EASY backfilling derives its shadow time and extra cores from
-//!   [`AvailabilityProfile::earliest_slot`] and admission-checks
-//!   candidates with [`AvailabilityProfile::can_place`] — which is what
-//!   makes backfill respect *future* advance reservations and
-//!   down/draining capacity windows;
+//!   [`AvailabilityProfile::earliest_slot_v`] and admission-checks
+//!   candidates with `can_place_v`;
 //! * conservative backfilling clones the profile into a per-round
-//!   scratch plan and lays every queued job's reservation onto it;
-//! * the preemption layer and the fault injector feed capacity windows
-//!   in through the mutators ([`AvailabilityProfile::hold`],
-//!   [`AvailabilityProfile::add_reservation_hold`],
-//!   [`AvailabilityProfile::remove_node_capacity`] /
-//!   [`AvailabilityProfile::restore_node_capacity`]).
+//!   scratch plan and lays every queued job's reservation onto it with
+//!   [`AvailabilityProfile::hold_v`].
 //!
 //! `free` is stored *signed*: planning holds (e.g. an advance
 //! reservation over a window where jobs are still draining) may
 //! transiently over-commit a window. Readers clamp to zero — an
-//! over-committed window simply offers no cores — while the signed
+//! over-committed window simply offers no capacity — while the signed
 //! algebra keeps every `hold`/`release` pair an exact inverse, the
 //! invariant the incremental maintenance relies on
 //! (property-tested in rust/tests/prop_profile.rs).
 //!
 //! The profile is a *planning estimate*, trusted the way backfilling
 //! trusts user runtime estimates: a job that overruns its estimate
-//! appears free in the profile before its cores actually return
+//! appears free in the profile before its resources actually return
 //! (exactly as the per-round rebuild it replaces behaved). Admission is
 //! therefore always re-checked against the exact [`super::Cluster`]
 //! accounting; the profile only decides what is *worth* checking.
 
-/// Incremental future free-core timeline.
-///
-/// Complexity: `earliest_slot`/`can_place` are O(log n + k) in the
-/// number of breakpoints (k = segments actually inspected); the
-/// mutators are O(n) worst case for the breakpoint insert but touch
-/// only the affected span — there is no per-round sort or rebuild.
-#[derive(Debug, Clone)]
-pub struct AvailabilityProfile {
+use super::vector::ResourceVector;
+
+/// One dimension of the availability timeline: the breakpoint list and
+/// its signed algebra. Cores and memory are both instances of this.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Timeline {
     /// `(time, free)` breakpoints; times strictly increasing, adjacent
     /// `free` values distinct (canonical form), last segment open-ended.
     points: Vec<(u64, i64)>,
-    /// Physical capacity bound (for invariant checks only).
-    total: u64,
 }
 
-impl AvailabilityProfile {
-    /// A profile carrying no planning information (policies that ignore
-    /// the timeline — FCFS/SJF/LJF/BestFit — and their unit tests).
-    /// Every query reports zero availability.
-    pub const EMPTY: AvailabilityProfile = AvailabilityProfile { points: Vec::new(), total: 0 };
+impl Timeline {
+    const EMPTY: Timeline = Timeline { points: Vec::new() };
 
-    /// Flat profile: `free` cores from `now` on, on a machine with
-    /// `total` physical cores.
-    pub fn new(now: u64, free: u64, total: u64) -> AvailabilityProfile {
-        AvailabilityProfile { points: vec![(now, free as i64)], total }
+    fn new(now: u64, free: i64) -> Timeline {
+        Timeline { points: vec![(now, free)] }
     }
 
-    /// Rebuild from scratch: `free_now` cores at `now` plus signed
-    /// capacity deltas at future instants (a running job's release is
-    /// `(est_end, +cores)`, a pending reservation is `(start, -cores)`
-    /// and `(end, +cores)`, a failed node's repair is `(t, +cores)`).
-    /// Deltas at or before `now` merge into the base value, mirroring
-    /// the per-round rebuild this structure replaces. This is the
-    /// resync path for rare capacity transitions and the oracle the
-    /// incremental maintenance is property-tested against.
-    pub fn rebuild(&mut self, now: u64, free_now: u64, mut deltas: Vec<(u64, i64)>) {
+    /// Rebuild from scratch: `base` at `now` plus signed deltas at
+    /// future instants. Deltas at or before `now` merge into the base
+    /// value, mirroring the per-round rebuild this structure replaces.
+    fn rebuild(&mut self, now: u64, base: i64, mut deltas: Vec<(u64, i64)>) {
         deltas.retain(|d| d.1 != 0);
         deltas.sort_unstable();
         self.points.clear();
-        self.points.push((now, free_now as i64));
+        self.points.push((now, base));
         for (t, d) in deltas {
             let t = t.max(now);
             let last = *self.points.last().unwrap();
@@ -91,41 +82,9 @@ impl AvailabilityProfile {
         self.points.dedup_by(|a, b| a.1 == b.1);
     }
 
-    /// Convenience constructor from `(release_time, cores)` pairs — the
-    /// shape scheduler unit tests and benches speak.
-    pub fn from_releases(
-        now: u64,
-        free_now: u64,
-        total: u64,
-        releases: &[(u64, u64)],
-    ) -> AvailabilityProfile {
-        let mut p = AvailabilityProfile::new(now, free_now, total);
-        p.rebuild(now, free_now, releases.iter().map(|&(t, c)| (t, c as i64)).collect());
-        p
-    }
-
-    /// Physical capacity bound.
-    pub fn total(&self) -> u64 {
-        self.total
-    }
-
-    /// Number of breakpoints (memory/perf observability).
-    pub fn len(&self) -> usize {
-        self.points.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.points.is_empty()
-    }
-
-    /// Raw breakpoints (tests and benches).
-    pub fn points(&self) -> &[(u64, i64)] {
-        &self.points
-    }
-
     /// Drop history before `now`: breakpoints at or before `now` merge
     /// into the head segment. O(k) in the breakpoints trimmed.
-    pub fn advance(&mut self, now: u64) {
+    fn advance(&mut self, now: u64) {
         let i = self.seg_at(now);
         if i > 0 {
             self.points.drain(..i);
@@ -138,7 +97,7 @@ impl AvailabilityProfile {
     }
 
     /// Index of the segment containing `t` (the last breakpoint at or
-    /// before `t`); the first segment when `t` precedes the profile.
+    /// before `t`); the first segment when `t` precedes the timeline.
     fn seg_at(&self, t: u64) -> usize {
         match self.points.binary_search_by_key(&t, |p| p.0) {
             Ok(i) => i,
@@ -154,7 +113,7 @@ impl AvailabilityProfile {
         }
         match self.points.binary_search_by_key(&t, |p| p.0) {
             Ok(_) => {}
-            Err(0) => {} // before the profile origin; `apply` clips instead
+            Err(0) => {} // before the timeline origin; `apply` clips instead
             Err(i) => {
                 let f = self.points[i - 1].1;
                 self.points.insert(i, (t, f));
@@ -195,51 +154,18 @@ impl AvailabilityProfile {
         }
     }
 
-    /// A job (or any occupant) takes `cores` over `[from, until)`.
-    pub fn hold(&mut self, from: u64, until: u64, cores: u64) {
-        self.apply(from, until, -(cores as i64));
-    }
-
-    /// Exact inverse of [`AvailabilityProfile::hold`] over the remaining
-    /// window: the occupant left at `from`, earlier than planned.
-    pub fn release(&mut self, from: u64, until: u64, cores: u64) {
-        self.apply(from, until, cores as i64);
-    }
-
-    /// Plan a future advance reservation: `cores` unavailable over
-    /// `[start, end)`.
-    pub fn add_reservation_hold(&mut self, start: u64, end: u64, cores: u64) {
-        self.apply(start, end, -(cores as i64));
-    }
-
-    /// Capacity leaves service over `[from, until)` (node failure with a
-    /// known repair time, a draining window, ...).
-    pub fn remove_node_capacity(&mut self, from: u64, until: u64, cores: u64) {
-        self.apply(from, until, -(cores as i64));
-    }
-
-    /// Exact inverse of [`AvailabilityProfile::remove_node_capacity`]
-    /// over the remaining window (e.g. a node repaired earlier than the
-    /// drawn repair time).
-    pub fn restore_node_capacity(&mut self, from: u64, until: u64, cores: u64) {
-        self.apply(from, until, cores as i64);
-    }
-
-    /// Free cores at instant `t`, clamped at zero. Instants before the
-    /// profile origin read the origin segment (the timeline carries no
-    /// history — callers plan from `now` forward).
-    pub fn free_at(&self, t: u64) -> u64 {
+    /// Free amount at instant `t`, clamped at zero.
+    fn free_at(&self, t: u64) -> u64 {
         if self.points.is_empty() {
             return 0;
         }
         self.points[self.seg_at(t)].1.max(0) as u64
     }
 
-    /// Whether `cores` are free throughout `[from, from + duration)`.
+    /// Whether `amount` is free throughout `[from, from + duration)`.
     /// The pre-origin part of the window, if any, is the past and is
-    /// ignored — only the portion the timeline covers is checked
-    /// (mirrors `earliest_slot`'s origin clamp).
-    pub fn can_place(&self, from: u64, duration: u64, cores: u64) -> bool {
+    /// ignored — only the portion the timeline covers is checked.
+    fn can_place(&self, from: u64, duration: u64, amount: u64) -> bool {
         if duration == 0 {
             return true;
         }
@@ -251,7 +177,7 @@ impl AvailabilityProfile {
         if from >= end {
             return true; // window entirely before the origin
         }
-        let c = cores as i64;
+        let c = amount as i64;
         let mut i = self.seg_at(from);
         loop {
             if self.points[i].1 < c {
@@ -265,17 +191,15 @@ impl AvailabilityProfile {
         }
     }
 
-    /// Earliest time >= `from` at which `cores` are free continuously
+    /// Earliest time >= `from` at which `amount` is free continuously
     /// for `duration`. Binary-searches to the starting segment and scans
-    /// forward — O(log n + k) — instead of the quadratic
-    /// candidate-times-x-segments scan the old per-policy profile used.
-    /// `None` only when the request exceeds the profile's eventual
-    /// capacity (infeasible job).
-    pub fn earliest_slot(&self, from: u64, cores: u64, duration: u64) -> Option<u64> {
+    /// forward — O(log n + k). `None` only when the request exceeds the
+    /// timeline's eventual capacity (infeasible).
+    fn earliest_slot(&self, from: u64, amount: u64, duration: u64) -> Option<u64> {
         if self.points.is_empty() {
             return None;
         }
-        let c = cores as i64;
+        let c = amount as i64;
         let duration = duration.max(1);
         let mut candidate = from.max(self.points[0].0);
         let mut i = self.seg_at(candidate);
@@ -295,13 +219,336 @@ impl AvailabilityProfile {
         }
     }
 
-    /// Structural invariants (tests): strictly increasing times,
-    /// canonical (no adjacent equal frees), free never above physical
-    /// capacity.
-    pub fn check_invariants(&self) -> bool {
+    /// Whether free never decreases over the timeline (no capacity
+    /// windows ahead: pure release streams).
+    fn is_monotone(&self) -> bool {
+        self.points.windows(2).all(|w| w[0].1 <= w[1].1)
+    }
+
+    /// Structural invariants: strictly increasing times, canonical (no
+    /// adjacent equal frees), free never above `cap`.
+    fn check(&self, cap: u64) -> bool {
         !self.points.is_empty()
             && self.points.windows(2).all(|w| w[0].0 < w[1].0 && w[0].1 != w[1].1)
-            && self.points.iter().all(|p| p.1 <= self.total as i64)
+            && self.points.iter().all(|p| p.1 <= cap as i64)
+    }
+}
+
+/// Incremental future free-resource timeline (cores always; memory as a
+/// lazily materialized second dimension).
+///
+/// Complexity: `earliest_slot`/`can_place` are O(log n + k) in the
+/// number of breakpoints per active dimension (k = segments actually
+/// inspected); the mutators are O(n) worst case for the breakpoint
+/// insert but touch only the affected span — there is no per-round sort
+/// or rebuild.
+#[derive(Debug, Clone)]
+pub struct AvailabilityProfile {
+    cores: Timeline,
+    /// The memory dimension; `None` until the first memory-carrying
+    /// operation (lazy materialization — cores-only workloads never
+    /// allocate it).
+    mem: Option<Timeline>,
+    /// Free memory while the dimension is unmaterialized (constant
+    /// everywhere), and the base the dimension materializes from.
+    mem_base: i64,
+    /// Physical capacity bounds (invariant checks; `total_mem == 0`
+    /// means the profile does not track memory at all and every
+    /// vector operation degenerates to its scalar cores form).
+    total: u64,
+    total_mem: u64,
+}
+
+impl AvailabilityProfile {
+    /// A profile carrying no planning information (unit tests of
+    /// policies that want the legacy allocate-only admission). Every
+    /// query reports zero availability and schedulers skip admission
+    /// checks against it entirely.
+    pub const EMPTY: AvailabilityProfile = AvailabilityProfile {
+        cores: Timeline::EMPTY,
+        mem: None,
+        mem_base: 0,
+        total: 0,
+        total_mem: 0,
+    };
+
+    /// Flat cores-only profile: `free` cores from `now` on, on a machine
+    /// with `total` physical cores. Memory is untracked.
+    pub fn new(now: u64, free: u64, total: u64) -> AvailabilityProfile {
+        AvailabilityProfile {
+            cores: Timeline::new(now, free as i64),
+            mem: None,
+            mem_base: 0,
+            total,
+            total_mem: 0,
+        }
+    }
+
+    /// Flat multi-resource profile. A nonzero `total.memory_mb` turns
+    /// memory tracking on; the memory timeline itself stays
+    /// unmaterialized until the first memory-carrying hold.
+    pub fn new_v(now: u64, free: ResourceVector, total: ResourceVector) -> AvailabilityProfile {
+        AvailabilityProfile {
+            cores: Timeline::new(now, free.cores as i64),
+            mem: None,
+            mem_base: free.memory_mb as i64,
+            total: total.cores,
+            total_mem: total.memory_mb,
+        }
+    }
+
+    /// Rebuild the cores dimension from scratch: `free_now` cores at
+    /// `now` plus signed capacity deltas at future instants (a running
+    /// job's release is `(est_end, +cores)`, a pending reservation is
+    /// `(start, -cores)` and `(end, +cores)`, a failed node's repair is
+    /// `(t, +cores)`). This is the resync path for rare capacity
+    /// transitions and the oracle the incremental maintenance is
+    /// property-tested against. Any materialized memory dimension is
+    /// dropped (cores-only resync).
+    pub fn rebuild(&mut self, now: u64, free_now: u64, deltas: Vec<(u64, i64)>) {
+        self.cores.rebuild(now, free_now as i64, deltas);
+        self.mem = None;
+    }
+
+    /// Multi-resource resync: both dimensions from authoritative state.
+    /// The memory dimension materializes only when `mem_deltas` carries
+    /// a nonzero entry — a memory-tracking profile over a workload with
+    /// no memory demands keeps paying nothing.
+    pub fn rebuild_v(
+        &mut self,
+        now: u64,
+        free: ResourceVector,
+        deltas: Vec<(u64, i64)>,
+        mem_deltas: Vec<(u64, i64)>,
+    ) {
+        self.cores.rebuild(now, free.cores as i64, deltas);
+        self.mem_base = free.memory_mb as i64;
+        if self.total_mem > 0 && mem_deltas.iter().any(|d| d.1 != 0) {
+            let tl = self.mem.get_or_insert(Timeline::EMPTY);
+            tl.rebuild(now, free.memory_mb as i64, mem_deltas);
+        } else {
+            self.mem = None;
+        }
+    }
+
+    /// Convenience constructor from `(release_time, cores)` pairs — the
+    /// shape scheduler unit tests and benches speak.
+    pub fn from_releases(
+        now: u64,
+        free_now: u64,
+        total: u64,
+        releases: &[(u64, u64)],
+    ) -> AvailabilityProfile {
+        let mut p = AvailabilityProfile::new(now, free_now, total);
+        p.rebuild(now, free_now, releases.iter().map(|&(t, c)| (t, c as i64)).collect());
+        p
+    }
+
+    /// Physical core-capacity bound.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Whether the profile tracks a memory dimension at all (set by
+    /// [`AvailabilityProfile::new_v`] with nonzero total memory). When
+    /// false, every `_v` operation ignores `memory_mb` — the guarantee
+    /// that keeps cores-only configurations bit-identical to the scalar
+    /// planner.
+    pub fn tracks_memory(&self) -> bool {
+        self.total_mem > 0
+    }
+
+    /// Whether the lazy memory timeline has actually been materialized
+    /// (observability for the zero-cost pin in the bench and tests).
+    pub fn has_memory_dimension(&self) -> bool {
+        self.mem.is_some()
+    }
+
+    /// Number of cores-dimension breakpoints (memory/perf observability).
+    pub fn len(&self) -> usize {
+        self.cores.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cores.points.is_empty()
+    }
+
+    /// Raw cores-dimension breakpoints (tests and benches).
+    pub fn points(&self) -> &[(u64, i64)] {
+        &self.cores.points
+    }
+
+    /// Raw memory-dimension breakpoints, if materialized.
+    pub fn mem_points(&self) -> Option<&[(u64, i64)]> {
+        self.mem.as_ref().map(|t| t.points.as_slice())
+    }
+
+    /// Drop history before `now` in every active dimension.
+    pub fn advance(&mut self, now: u64) {
+        self.cores.advance(now);
+        if let Some(m) = self.mem.as_mut() {
+            m.advance(now);
+        }
+    }
+
+    // ----- scalar (cores-dimension) API, unchanged from the scalar
+    // planner: every caller that speaks cores keeps compiling and
+    // behaving identically -----
+
+    /// A job (or any occupant) takes `cores` over `[from, until)`.
+    pub fn hold(&mut self, from: u64, until: u64, cores: u64) {
+        self.cores.apply(from, until, -(cores as i64));
+    }
+
+    /// Exact inverse of [`AvailabilityProfile::hold`] over the remaining
+    /// window: the occupant left at `from`, earlier than planned.
+    pub fn release(&mut self, from: u64, until: u64, cores: u64) {
+        self.cores.apply(from, until, cores as i64);
+    }
+
+    /// Plan a future advance reservation: `cores` unavailable over
+    /// `[start, end)`.
+    pub fn add_reservation_hold(&mut self, start: u64, end: u64, cores: u64) {
+        self.cores.apply(start, end, -(cores as i64));
+    }
+
+    /// Capacity leaves service over `[from, until)` (node failure with a
+    /// known repair time, a draining window, ...).
+    pub fn remove_node_capacity(&mut self, from: u64, until: u64, cores: u64) {
+        self.cores.apply(from, until, -(cores as i64));
+    }
+
+    /// Exact inverse of [`AvailabilityProfile::remove_node_capacity`]
+    /// over the remaining window (e.g. a node repaired earlier than the
+    /// drawn repair time).
+    pub fn restore_node_capacity(&mut self, from: u64, until: u64, cores: u64) {
+        self.cores.apply(from, until, cores as i64);
+    }
+
+    /// Free cores at instant `t`, clamped at zero. Instants before the
+    /// profile origin read the origin segment (the timeline carries no
+    /// history — callers plan from `now` forward).
+    pub fn free_at(&self, t: u64) -> u64 {
+        self.cores.free_at(t)
+    }
+
+    /// Free memory at instant `t` (clamped at zero). `u64::MAX` when the
+    /// profile does not track memory — an untracked dimension never
+    /// constrains.
+    pub fn free_memory_at(&self, t: u64) -> u64 {
+        if !self.tracks_memory() {
+            return u64::MAX;
+        }
+        match &self.mem {
+            Some(m) => m.free_at(t),
+            None => self.mem_base.max(0) as u64,
+        }
+    }
+
+    /// Whether `cores` are free throughout `[from, from + duration)`.
+    pub fn can_place(&self, from: u64, duration: u64, cores: u64) -> bool {
+        self.cores.can_place(from, duration, cores)
+    }
+
+    /// Earliest time >= `from` at which `cores` are free continuously
+    /// for `duration`. `None` only when the request exceeds the
+    /// profile's eventual capacity (infeasible job).
+    pub fn earliest_slot(&self, from: u64, cores: u64, duration: u64) -> Option<u64> {
+        self.cores.earliest_slot(from, cores, duration)
+    }
+
+    // ----- vector API: the same four verbs over multi-resource
+    // demands. With memory untracked (or a zero memory demand) each is
+    // exactly its scalar counterpart. -----
+
+    /// The memory timeline, materializing it on first use.
+    fn mem_timeline(&mut self) -> &mut Timeline {
+        let origin = self.cores.points.first().map(|p| p.0).unwrap_or(0);
+        let base = self.mem_base;
+        self.mem.get_or_insert_with(|| Timeline::new(origin, base))
+    }
+
+    /// A demand takes `d` over `[from, until)` — the vector form of
+    /// [`AvailabilityProfile::hold`] (also used for reservation and
+    /// capacity-outage windows, which are algebraically identical).
+    pub fn hold_v(&mut self, from: u64, until: u64, d: ResourceVector) {
+        self.cores.apply(from, until, -(d.cores as i64));
+        if self.total_mem > 0 && d.memory_mb > 0 {
+            self.mem_timeline().apply(from, until, -(d.memory_mb as i64));
+        }
+    }
+
+    /// Exact inverse of [`AvailabilityProfile::hold_v`] over the
+    /// remaining window.
+    pub fn release_v(&mut self, from: u64, until: u64, d: ResourceVector) {
+        self.cores.apply(from, until, d.cores as i64);
+        if self.total_mem > 0 && d.memory_mb > 0 {
+            self.mem_timeline().apply(from, until, d.memory_mb as i64);
+        }
+    }
+
+    /// Whether demand `d` fits throughout `[from, from + duration)` in
+    /// every active dimension.
+    pub fn can_place_v(&self, from: u64, duration: u64, d: ResourceVector) -> bool {
+        if !self.cores.can_place(from, duration, d.cores) {
+            return false;
+        }
+        if !self.tracks_memory() || d.memory_mb == 0 {
+            return true;
+        }
+        match &self.mem {
+            Some(m) => m.can_place(from, duration, d.memory_mb),
+            None => d.memory_mb as i64 <= self.mem_base,
+        }
+    }
+
+    /// Earliest time >= `from` at which demand `d` fits continuously for
+    /// `duration` in every active dimension. Alternates between the
+    /// per-dimension `earliest_slot` queries until they agree — each
+    /// step jumps to a later breakpoint, so the loop is bounded by the
+    /// total breakpoint count.
+    pub fn earliest_slot_v(&self, from: u64, d: ResourceVector, duration: u64) -> Option<u64> {
+        if !self.tracks_memory() || d.memory_mb == 0 {
+            return self.cores.earliest_slot(from, d.cores, duration);
+        }
+        let mem = match &self.mem {
+            Some(m) => m,
+            None => {
+                return if d.memory_mb as i64 <= self.mem_base {
+                    self.cores.earliest_slot(from, d.cores, duration)
+                } else {
+                    None // constant memory shortfall: never fits
+                };
+            }
+        };
+        let mut t = from;
+        loop {
+            let a = self.cores.earliest_slot(t, d.cores, duration)?;
+            let b = mem.earliest_slot(a, d.memory_mb, duration)?;
+            if a == b {
+                return Some(a);
+            }
+            debug_assert!(b > a, "earliest_slot went backwards");
+            t = b;
+        }
+    }
+
+    /// Whether no active dimension ever *loses* capacity over the
+    /// timeline (pure release streams — no pending reservation or
+    /// outage windows). On a monotone profile, fitting at `now` implies
+    /// fitting forever, so blocking admission can skip the planning
+    /// checks entirely and stay bit-identical to the classic
+    /// allocate-only loop.
+    pub fn is_monotone(&self) -> bool {
+        self.cores.is_monotone() && self.mem.as_ref().map_or(true, |m| m.is_monotone())
+    }
+
+    /// Structural invariants (tests): strictly increasing times,
+    /// canonical (no adjacent equal frees), free never above physical
+    /// capacity — per active dimension.
+    pub fn check_invariants(&self) -> bool {
+        self.cores.check(self.total)
+            && self.mem.as_ref().map_or(true, |m| m.check(self.total_mem))
     }
 }
 
@@ -325,6 +572,7 @@ mod tests {
         assert_eq!(p.free_at(99), 6);
         assert_eq!(p.free_at(100), 12);
         assert!(p.check_invariants());
+        assert!(p.is_monotone());
     }
 
     #[test]
@@ -345,6 +593,7 @@ mod tests {
         p.add_reservation_hold(10, 20, 8); // more than is free: window over-committed
         assert_eq!(p.free_at(10), 0);
         assert_eq!(p.points()[1].1, -4, "algebra stays exact internally");
+        assert!(!p.is_monotone(), "a pending window is a capacity dip");
         p.restore_node_capacity(10, 20, 8);
         assert_eq!(p.free_at(10), 4);
         assert_eq!(p.len(), 1);
@@ -424,6 +673,99 @@ mod tests {
         assert_eq!(p.free_at(20), 10);
         assert_eq!(p.free_at(25), 12);
         assert_eq!(p.free_at(30), 16);
+        assert!(p.check_invariants());
+    }
+
+    // ----- multi-resource behaviour -----
+
+    fn mem_profile(free_c: u64, free_m: u64) -> AvailabilityProfile {
+        AvailabilityProfile::new_v(
+            0,
+            ResourceVector::new(free_c, free_m),
+            ResourceVector::new(free_c, free_m),
+        )
+    }
+
+    #[test]
+    fn memory_dimension_is_lazy() {
+        let mut p = mem_profile(8, 1000);
+        assert!(p.tracks_memory());
+        assert!(!p.has_memory_dimension());
+        // Cores-only holds never materialize it.
+        p.hold_v(0, 50, ResourceVector::cores_only(4));
+        assert!(!p.has_memory_dimension());
+        assert_eq!(p.free_memory_at(10), 1000);
+        // The first memory-carrying hold does.
+        p.hold_v(0, 50, ResourceVector::new(2, 600));
+        assert!(p.has_memory_dimension());
+        assert_eq!(p.free_memory_at(10), 400);
+        assert_eq!(p.free_memory_at(50), 1000);
+        assert!(p.check_invariants());
+    }
+
+    #[test]
+    fn untracked_memory_never_constrains() {
+        let p = AvailabilityProfile::new(0, 8, 8);
+        assert!(!p.tracks_memory());
+        let d = ResourceVector::new(4, 1_000_000);
+        assert!(p.can_place_v(0, 100, d));
+        assert_eq!(p.earliest_slot_v(0, d, 100), Some(0));
+        assert_eq!(p.free_memory_at(0), u64::MAX);
+    }
+
+    #[test]
+    fn earliest_slot_v_waits_for_memory() {
+        // 8 cores free throughout; memory blocked until t=100.
+        let mut p = mem_profile(8, 1000);
+        p.hold_v(0, 100, ResourceVector::new(0, 900));
+        let d = ResourceVector::new(4, 500);
+        assert!(!p.can_place_v(0, 50, d));
+        assert_eq!(p.earliest_slot_v(0, d, 50), Some(100));
+        // A low-memory demand fits immediately.
+        assert_eq!(p.earliest_slot_v(0, ResourceVector::new(4, 100), 50), Some(0));
+        // More memory than the machine has: infeasible.
+        assert_eq!(p.earliest_slot_v(0, ResourceVector::new(1, 2000), 1), None);
+    }
+
+    #[test]
+    fn earliest_slot_v_intersects_dimensions() {
+        // Cores free at t=50, memory free at t=80: joint slot is 80.
+        let mut p = mem_profile(8, 1000);
+        p.hold_v(0, 50, ResourceVector::cores_only(8));
+        p.hold_v(0, 80, ResourceVector::new(0, 800));
+        let d = ResourceVector::new(4, 500);
+        assert_eq!(p.earliest_slot_v(0, d, 10), Some(80));
+        // And the other way round (memory frees first).
+        let mut q = mem_profile(8, 1000);
+        q.hold_v(0, 80, ResourceVector::cores_only(8));
+        q.hold_v(0, 50, ResourceVector::new(0, 800));
+        assert_eq!(q.earliest_slot_v(0, d, 10), Some(80));
+    }
+
+    #[test]
+    fn vector_hold_release_inverse_restores_both_dims() {
+        let mut p = mem_profile(8, 1000);
+        let before = p.points().to_vec();
+        let d = ResourceVector::new(4, 600);
+        p.hold_v(10, 60, d);
+        assert!(!p.can_place_v(10, 10, ResourceVector::new(0, 500)));
+        p.release_v(10, 60, d);
+        assert_eq!(p.points(), &before[..]);
+        // The materialized dimension coalesces back to a flat line.
+        assert_eq!(p.mem_points().unwrap().len(), 1);
+        assert_eq!(p.free_memory_at(10), 1000);
+    }
+
+    #[test]
+    fn rebuild_v_materializes_only_on_memory_deltas() {
+        let mut p = mem_profile(8, 1000);
+        p.rebuild_v(0, ResourceVector::new(4, 1000), vec![(100, 4)], Vec::new());
+        assert!(!p.has_memory_dimension(), "no memory deltas: stay lazy");
+        assert_eq!(p.free_at(100), 8);
+        p.rebuild_v(0, ResourceVector::new(4, 200), vec![(100, 4)], vec![(100, 800)]);
+        assert!(p.has_memory_dimension());
+        assert_eq!(p.free_memory_at(0), 200);
+        assert_eq!(p.free_memory_at(100), 1000);
         assert!(p.check_invariants());
     }
 }

@@ -1,0 +1,94 @@
+//! Multi-resource demands: the vector the planning layer plans in.
+//!
+//! The paper's resource-management component tracks both processors and
+//! memory per node; [`ResourceVector`] is the aggregate demand a job (or
+//! an allocation, or a reservation) places on the machine — one value
+//! per tracked dimension, compared and combined component-wise. It is
+//! deliberately a plain-old-data struct: adding a dimension (GPUs,
+//! burst-buffer slots, ...) means adding a field here and a lazily
+//! materialized timeline in `profile` — nothing in the scheduler seam
+//! changes shape.
+
+/// Aggregate multi-resource demand: cores plus memory (MB).
+///
+/// `memory_mb == 0` means "no memory demand" everywhere in the planning
+/// layer; a profile that does not track memory ignores the field
+/// entirely, which is what keeps cores-only workloads bit-identical to
+/// the scalar planner this type generalizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct ResourceVector {
+    pub cores: u64,
+    pub memory_mb: u64,
+}
+
+impl ResourceVector {
+    pub const ZERO: ResourceVector = ResourceVector { cores: 0, memory_mb: 0 };
+
+    pub fn new(cores: u64, memory_mb: u64) -> ResourceVector {
+        ResourceVector { cores, memory_mb }
+    }
+
+    /// A demand with no memory component (the scalar-planner shape).
+    pub fn cores_only(cores: u64) -> ResourceVector {
+        ResourceVector { cores, memory_mb: 0 }
+    }
+
+    /// Component-wise `<=`: whether this demand fits inside `avail`.
+    pub fn fits(self, avail: ResourceVector) -> bool {
+        self.cores <= avail.cores && self.memory_mb <= avail.memory_mb
+    }
+
+    /// Component-wise sum.
+    pub fn add(self, other: ResourceVector) -> ResourceVector {
+        ResourceVector {
+            cores: self.cores + other.cores,
+            memory_mb: self.memory_mb + other.memory_mb,
+        }
+    }
+
+    /// Component-wise difference; panics (debug) on underflow — use
+    /// [`ResourceVector::saturating_sub`] when the argument may exceed.
+    pub fn sub(self, other: ResourceVector) -> ResourceVector {
+        debug_assert!(other.fits(self), "ResourceVector underflow: {self:?} - {other:?}");
+        ResourceVector {
+            cores: self.cores - other.cores,
+            memory_mb: self.memory_mb - other.memory_mb,
+        }
+    }
+
+    /// Component-wise saturating difference.
+    pub fn saturating_sub(self, other: ResourceVector) -> ResourceVector {
+        ResourceVector {
+            cores: self.cores.saturating_sub(other.cores),
+            memory_mb: self.memory_mb.saturating_sub(other.memory_mb),
+        }
+    }
+
+    pub fn is_zero(self) -> bool {
+        self == ResourceVector::ZERO
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fits_is_component_wise() {
+        let avail = ResourceVector::new(8, 1024);
+        assert!(ResourceVector::new(8, 1024).fits(avail));
+        assert!(ResourceVector::new(0, 0).fits(avail));
+        assert!(!ResourceVector::new(9, 0).fits(avail), "cores alone can fail");
+        assert!(!ResourceVector::new(0, 2048).fits(avail), "memory alone can fail");
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let a = ResourceVector::new(4, 512);
+        let b = ResourceVector::new(2, 128);
+        assert_eq!(a.add(b).sub(b), a);
+        assert_eq!(b.saturating_sub(a), ResourceVector::ZERO);
+        assert!(ResourceVector::ZERO.is_zero());
+        assert!(!ResourceVector::cores_only(1).is_zero());
+    }
+}

@@ -1,20 +1,26 @@
 //! FCFS with EASY Backfilling (paper §2.1): the head of the queue gets a
-//! reservation at the earliest time enough cores free up (the *shadow
+//! reservation at the earliest time enough resources free up (the *shadow
 //! time*); jobs behind it may start out of order iff they cannot delay
 //! that reservation — they either finish before the shadow time or use
-//! only the *extra* cores the head will not need.
+//! only the *extra* cores the head will not need. "Head" and "behind"
+//! are defined by `SchedInput::order`, so any [`QueueOrder`] — including
+//! usage-decayed fair share — composes with the backfill machinery
+//! unchanged.
 //!
 //! Planning runs against the shared availability timeline
-//! ([`AvailabilityProfile`], `SchedInput::profile`): the shadow time is
-//! the head's earliest contiguous slot and every candidate is checked
-//! against the timeline for its whole estimated run, so backfill now
-//! respects *future* advance reservations and down/draining capacity
-//! windows instead of only walking running-job releases. On a profile
-//! with no such windows (monotone releases) the decisions match the
-//! classic release-walk, with one deliberate exception: when several
-//! releases share the shadow instant, `extra` now counts all of them —
-//! the textbook EASY definition (free cores at the shadow time minus
-//! the head's request); the old walk stopped mid-tick and undercounted.
+//! ([`AvailabilityProfile`], `SchedInput::profile`), multi-resource
+//! since the `ResourceVector` redesign: the shadow time is the head's
+//! earliest contiguous slot across *every tracked dimension*
+//! (`earliest_slot_v` — a memory-blocked head no longer reserves "now"),
+//! and every candidate is checked against the timeline for its whole
+//! estimated run (`can_place_v`), so backfill respects future advance
+//! reservations, down/draining capacity windows and planned memory
+//! pressure. On a cores-only profile with no such windows (monotone
+//! releases) the decisions match the classic release-walk, with one
+//! deliberate exception: when several releases share the shadow instant,
+//! `extra` counts all of them — the textbook EASY definition (free cores
+//! at the shadow time minus the head's request); the old walk stopped
+//! mid-tick and undercounted.
 //!
 //! Candidate ranking and feasibility pre-filtering run through a
 //! [`QueueScorer`] — the batched O(Q x N) computation that the L1 Pallas
@@ -24,8 +30,9 @@
 //! never change a scheduling decision (asserted by rust/tests/xla_parity).
 
 use crate::resources::{AllocPolicy, Allocation, AvailabilityProfile, Cluster};
+use crate::sched::fcfs::run_ordered;
 use crate::sched::scorer::{NativeScorer, QueueScorer, ScoreParams};
-use crate::sched::{SchedInput, Scheduler};
+use crate::sched::{QueueOrder, SchedInput, Scheduler};
 
 /// EASY backfilling scheduler.
 pub struct BackfillScheduler {
@@ -73,46 +80,39 @@ impl Scheduler for BackfillScheduler {
 
     fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
         let now = input.now.ticks();
-        let mut out = Vec::new();
 
-        // Phase 1 — plain FCFS from the head while jobs fit. Lazy single
-        // pass: under a blocked head this touches only the prefix, never
-        // the whole queue (§Perf). Starts are only noted here; the
-        // planning clone below is paid solely when the head blocks.
-        let mut queue_iter = input.queue.iter();
-        let mut phase1: Vec<(u64, u64)> = Vec::new();
-        let mut head = None;
-        for job in queue_iter.by_ref() {
-            if !cluster.feasible(job) {
-                continue;
-            }
-            match cluster.allocate(job, AllocPolicy::FirstFit) {
-                Some(a) => {
-                    phase1.push((now + job.est_runtime.ticks(), a.cores()));
-                    out.push(a);
-                }
-                None => {
-                    head = Some(job);
-                    break;
-                }
-            }
-        }
-        let Some(head) = head else { return out };
+        // Phase 1 — the blocking pass in queue order while jobs fit
+        // (shared with the blocking disciplines: profile-admitted, so a
+        // would-be starter colliding with a future window blocks here).
+        // Lazy single pass: under a blocked head this touches only the
+        // prefix, never the whole queue (§Perf).
+        let view = input.order.view(input.queue, input.now);
+        let mut queue_iter = view.iter(input.queue);
+        let run = run_ordered(&mut queue_iter, input, cluster, AllocPolicy::FirstFit);
+        let mut out = run.allocs;
+        let Some(head_id) = run.blocked else { return out };
+        let head = input.queue.get(head_id).expect("blocked head not in queue");
 
         // Scratch plan for this round: the shared timeline plus this
-        // round's own starts. Cloning is O(breakpoints) — no sort, no
-        // rebuild from raw release vectors.
-        let mut plan: AvailabilityProfile = input.profile.clone();
-        for &(end, cores) in &phase1 {
-            plan.hold(now, end, cores);
-        }
+        // round's own starts. `run_ordered` already built it in strict
+        // mode; otherwise lay the phase-1 holds now — cloning is
+        // O(breakpoints), paid only when the head actually blocks.
+        let mut plan: AvailabilityProfile = run.plan.unwrap_or_else(|| {
+            let mut p = input.profile.clone();
+            for a in &out {
+                let job = input.queue.get(a.job_id).expect("phase-1 start not in queue");
+                p.hold_v(now, now.saturating_add(job.est_runtime.ticks().max(1)), a.demand());
+            }
+            p
+        });
 
         // Phase 2 — the head is blocked: its reservation starts at the
-        // earliest slot where it can run its whole estimate (with future
-        // reservation/outage windows, the first instant enough cores
-        // free up is no longer necessarily a slot it can keep).
+        // earliest slot where it can run its whole estimate in every
+        // tracked dimension (with future reservation/outage windows or
+        // planned memory pressure, the first instant enough cores free
+        // up is no longer necessarily a slot it can keep).
         let head_est = head.est_runtime.ticks().max(1);
-        let Some(shadow) = plan.earliest_slot(now, head.cores, head_est) else {
+        let Some(shadow) = plan.earliest_slot_v(now, head.demand(), head_est) else {
             return out; // head exceeds eventual capacity; nothing more to do
         };
         let extra = plan.free_at(shadow).saturating_sub(head.cores);
@@ -122,7 +122,7 @@ impl Scheduler for BackfillScheduler {
         // head + window later — can_place below must see the head's
         // claim. On monotone profiles this changes no decision (a
         // within-extra candidate always clears it).
-        plan.hold(shadow, shadow.saturating_add(head_est), head.cores);
+        plan.hold_v(shadow, shadow.saturating_add(head_est), head.demand());
 
         // Phase 3 — score the candidates behind the head (the batched
         // O(Q x N) inner loop -> scorer / Pallas kernel).
@@ -146,7 +146,7 @@ impl Scheduler for BackfillScheduler {
         };
         let scores = self.scorer.score(&req, &est, &wait, &cluster.free_vec(), params);
 
-        // Rank candidates by priority (desc); ties keep arrival order.
+        // Rank candidates by priority (desc); ties keep queue order.
         let mut order: Vec<usize> = (0..cands.len()).collect();
         order.sort_by(|&a, &b| {
             scores.priority[b]
@@ -173,17 +173,18 @@ impl Scheduler for BackfillScheduler {
                 continue;
             }
             // The candidate must fit the availability timeline for its
-            // whole estimated run — this is what makes EASY refuse a
-            // start that would collide with a future advance reservation
-            // or a planned capacity outage.
-            if !plan.can_place(now, cand_est, job.cores) {
+            // whole estimated run in every tracked dimension — this is
+            // what makes EASY refuse a start that would collide with a
+            // future advance reservation, a planned capacity outage, or
+            // the head's own memory claim.
+            if !plan.can_place_v(now, cand_est, job.demand()) {
                 continue;
             }
             if let Some(a) = cluster.allocate(job, AllocPolicy::FirstFit) {
                 if !finishes_by_shadow {
                     remaining_extra -= job.cores;
                 }
-                plan.hold(now, now + cand_est, a.cores());
+                plan.hold_v(now, now + cand_est, a.demand());
                 out.push(a);
             }
         }
@@ -196,7 +197,7 @@ mod tests {
     use super::*;
     use crate::core::time::SimTime;
     use crate::job::{Job, JobId, WaitQueue};
-    use crate::sched::RunningJob;
+    use crate::sched::{ArrivalOrder, RunningJob};
 
     /// Profile matching a cluster with `running` holding cores until
     /// their estimated ends (what the simulation core maintains).
@@ -218,7 +219,13 @@ mod tests {
         now: u64,
     ) -> Vec<JobId> {
         let profile = profile_of(cluster, running, now);
-        let input = SchedInput { now: SimTime(now), queue, running, profile: &profile };
+        let input = SchedInput {
+            now: SimTime(now),
+            queue,
+            running,
+            profile: &profile,
+            order: &ArrivalOrder,
+        };
         BackfillScheduler::new()
             .schedule(&input, cluster)
             .iter()
@@ -361,7 +368,13 @@ mod tests {
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(1, 0, 8, 100, 100)); // head, blocked
         q.push(Job::with_estimate(2, 1, 4, 50, 50)); // would collide
-        let input = SchedInput { now: SimTime(0), queue: &q, running: &running, profile: &profile };
+        let input = SchedInput {
+            now: SimTime(0),
+            queue: &q,
+            running: &running,
+            profile: &profile,
+            order: &ArrivalOrder,
+        };
         let started: Vec<JobId> = BackfillScheduler::new()
             .schedule(&input, &mut c)
             .iter()
@@ -373,7 +386,13 @@ mod tests {
         let mut q2 = WaitQueue::new();
         q2.push(Job::with_estimate(1, 0, 8, 100, 100));
         q2.push(Job::with_estimate(3, 1, 4, 30, 30)); // done exactly at t=30
-        let input = SchedInput { now: SimTime(0), queue: &q2, running: &running, profile: &profile };
+        let input = SchedInput {
+            now: SimTime(0),
+            queue: &q2,
+            running: &running,
+            profile: &profile,
+            order: &ArrivalOrder,
+        };
         let started: Vec<JobId> = BackfillScheduler::new()
             .schedule(&input, &mut c)
             .iter()
@@ -394,5 +413,74 @@ mod tests {
         // Head (8c, est 100): release at 100 gives 8 free, but only for
         // 20 ticks before the reservation window — slot slides to 200.
         assert_eq!(profile.earliest_slot(0, 8, 100), Some(200));
+    }
+
+    #[test]
+    fn memory_blocked_head_gets_true_shadow() {
+        // Single node: 8 cores, 1000 MB. j1 runs [0, 100) with 4 cores
+        // and 800 MB. Head j2 (4c, 800 MB) fits cores now but not
+        // memory: the memory-aware shadow is 100, so candidate j3
+        // (4c, 100 MB, est 200) fits the head's extra cores AND the
+        // memory timeline -> backfilled at t=0. A cores-only planner put
+        // the shadow at `now` and refused it (extra = 0).
+        use crate::resources::ResourceVector;
+        let mut c = Cluster::homogeneous(1, 8, 1000);
+        let j1 = Job::with_memory(99, 0, 4, 800, 100);
+        let ra = c.allocate(&j1, AllocPolicy::FirstFit).unwrap();
+        let mut profile = AvailabilityProfile::new_v(
+            0,
+            ResourceVector::new(c.free_cores(), c.free_memory_mb()),
+            ResourceVector::new(c.total_cores(), c.total_memory_mb()),
+        );
+        profile.hold_v(0, 100, ra.demand());
+        let mut q = WaitQueue::new();
+        q.push(Job::with_memory(1, 0, 4, 800, 100)); // head: memory-blocked
+        q.push(Job::with_memory(2, 1, 4, 100, 200)); // fits extra + memory
+        let input = SchedInput {
+            now: SimTime(0),
+            queue: &q,
+            running: &[],
+            profile: &profile,
+            order: &ArrivalOrder,
+        };
+        let started: Vec<JobId> = BackfillScheduler::new()
+            .schedule(&input, &mut c)
+            .iter()
+            .map(|a| a.job_id)
+            .collect();
+        assert_eq!(started, vec![2]);
+
+        // A long candidate whose memory would collide with the head's
+        // future memory claim is refused even though it fits right now:
+        // free memory is 400 at t=0 (enough for its 300), but at the
+        // shadow the head holds 800 MB, leaving 200 < 300.
+        let mut c2 = Cluster::homogeneous(1, 8, 1000);
+        let j1b = Job::with_memory(98, 0, 4, 600, 100);
+        let ra2 = c2.allocate(&j1b, AllocPolicy::FirstFit).unwrap();
+        let mut profile2 = AvailabilityProfile::new_v(
+            0,
+            ResourceVector::new(c2.free_cores(), c2.free_memory_mb()),
+            ResourceVector::new(c2.total_cores(), c2.total_memory_mb()),
+        );
+        profile2.hold_v(0, 100, ra2.demand());
+        let mut q2 = WaitQueue::new();
+        q2.push(Job::with_memory(1, 0, 4, 800, 100)); // head: memory-blocked
+        q2.push(Job::with_memory(4, 1, 2, 300, 10_000)); // long; 300 MB > 200 free after shadow
+        let input2 = SchedInput {
+            now: SimTime(0),
+            queue: &q2,
+            running: &[],
+            profile: &profile2,
+            order: &ArrivalOrder,
+        };
+        let started2: Vec<JobId> = BackfillScheduler::new()
+            .schedule(&input2, &mut c2)
+            .iter()
+            .map(|a| a.job_id)
+            .collect();
+        assert!(
+            started2.is_empty(),
+            "long candidate must not squat on memory the head will claim"
+        );
     }
 }

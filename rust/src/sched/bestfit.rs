@@ -3,40 +3,18 @@
 //! fragmentation. Completion-time behaviour stays FCFS-like (the paper
 //! notes Best Fit "does not significantly improve job completion times");
 //! what improves is resource matching.
-
-use crate::resources::{AllocPolicy, Allocation, Cluster};
-use crate::sched::fcfs::run_ordered;
-use crate::sched::{SchedInput, Scheduler};
-
-/// FCFS order + best-fit placement, blocking discipline.
-#[derive(Debug, Default)]
-pub struct BestFitScheduler;
-
-impl BestFitScheduler {
-    pub fn new() -> Self {
-        BestFitScheduler
-    }
-}
-
-impl Scheduler for BestFitScheduler {
-    fn uses_running_info(&self) -> bool {
-        false
-    }
-
-    fn name(&self) -> &'static str {
-        "fcfs-bestfit"
-    }
-
-    fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
-        run_ordered(input.queue.iter(), cluster, AllocPolicy::BestFit)
-    }
-}
+//!
+//! Since the queue-ordering redesign this too is the
+//! [`BlockingScheduler`](crate::sched::BlockingScheduler) — arrival order
+//! plus `AllocPolicy::BestFit` placement; this module keeps its
+//! behavioural tests.
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::core::time::SimTime;
     use crate::job::{Job, WaitQueue};
+    use crate::resources::{AllocPolicy, Cluster};
+    use crate::sched::{ArrivalOrder, Policy, SchedInput, Scheduler};
 
     fn input<'a>(queue: &'a WaitQueue) -> SchedInput<'a> {
         SchedInput {
@@ -44,6 +22,7 @@ mod tests {
             queue,
             running: &[],
             profile: &crate::resources::AvailabilityProfile::EMPTY,
+            order: &ArrivalOrder,
         }
     }
 
@@ -52,7 +31,7 @@ mod tests {
         let mut q = WaitQueue::new();
         q.push(Job::simple(1, 0, 4, 10));
         let mut c = Cluster::heterogeneous(&[(16, 0), (4, 0), (8, 0)]);
-        let allocs = BestFitScheduler::new().schedule(&input(&q), &mut c);
+        let allocs = Policy::FcfsBestFit.build().schedule(&input(&q), &mut c);
         assert_eq!(allocs.len(), 1);
         // Node 1 has exactly 4 free cores: the tightest fit.
         assert_eq!(allocs[0].taken, vec![(1, 4, 0)]);
@@ -64,7 +43,7 @@ mod tests {
         q.push(Job::with_estimate(1, 0, 2, 10, 1000)); // long, first
         q.push(Job::with_estimate(2, 1, 2, 10, 1)); // short, second
         let mut c = Cluster::homogeneous(1, 2, 0);
-        let allocs = BestFitScheduler::new().schedule(&input(&q), &mut c);
+        let allocs = Policy::FcfsBestFit.build().schedule(&input(&q), &mut c);
         // Only room for one: the FIRST, not the shortest.
         assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![1]);
     }
@@ -76,7 +55,7 @@ mod tests {
         q.push(Job::simple(2, 1, 1, 10));
         let mut c = Cluster::homogeneous(2, 4, 0);
         let blocker = c.allocate(&Job::simple(99, 0, 1, 1), AllocPolicy::FirstFit).unwrap();
-        let allocs = BestFitScheduler::new().schedule(&input(&q), &mut c);
+        let allocs = Policy::FcfsBestFit.build().schedule(&input(&q), &mut c);
         assert!(allocs.is_empty());
         c.release(&blocker);
     }

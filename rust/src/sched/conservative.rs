@@ -1,21 +1,23 @@
 //! Conservative backfilling: every queued job gets a reservation (not
 //! just the head, as in EASY). A job may start now only if its earliest
-//! feasible slot *is* now given all earlier arrivals' reservations — so
-//! no job is ever delayed by a later arrival, at the cost of fewer
-//! backfill opportunities. The paper lists richer backfilling among the
-//! techniques its simulator is meant to host; this is the classic
-//! comparator (Mu'alem & Feitelson 2001) and an ablation point for the
-//! EASY scheduler.
+//! feasible slot *is* now given all earlier jobs' reservations — so no
+//! job is ever delayed by one the ordering ranks behind it, at the cost
+//! of fewer backfill opportunities. "Earlier" is `SchedInput::order`:
+//! under fair share the reservation ladder is built in decayed-usage
+//! order, so light users reserve first. The paper lists richer
+//! backfilling among the techniques its simulator is meant to host; this
+//! is the classic comparator (Mu'alem & Feitelson 2001) and an ablation
+//! point for the EASY scheduler.
 //!
 //! Planning runs on the shared availability timeline
 //! ([`AvailabilityProfile`], `SchedInput::profile`): the round clones it
-//! into a scratch plan and lays one reservation per queued job with the
-//! binary-searched `earliest_slot` — the private per-policy profile and
-//! its quadratic slot scan are gone, and reservations/outage windows the
-//! simulation core feeds into the timeline bound every slot.
+//! into a scratch plan and lays one multi-resource reservation per
+//! queued job with the binary-searched `earliest_slot_v` — so
+//! reservations, outage windows and (on memory-aware machines) planned
+//! memory pressure bound every slot.
 
 use crate::resources::{AllocPolicy, Allocation, AvailabilityProfile, Cluster};
-use crate::sched::{SchedInput, Scheduler};
+use crate::sched::{QueueOrder, SchedInput, Scheduler};
 
 /// Conservative backfilling scheduler.
 #[derive(Debug, Default)]
@@ -42,21 +44,22 @@ impl Scheduler for ConservativeScheduler {
         let now = input.now.ticks();
         let mut plan: AvailabilityProfile = input.profile.clone();
         let mut out = Vec::new();
-        for job in input.queue.iter() {
+        let view = input.order.view(input.queue, input.now);
+        for job in view.iter(input.queue) {
             if !cluster.feasible(job) {
                 continue;
             }
             let est = job.est_runtime.ticks().max(1);
-            let Some(start) = plan.earliest_slot(now, job.cores, est) else {
+            let Some(start) = plan.earliest_slot_v(now, job.demand(), est) else {
                 continue; // cannot happen for feasible jobs (timeline ends full)
             };
-            plan.hold(start, start.saturating_add(est), job.cores);
+            plan.hold_v(start, start.saturating_add(est), job.demand());
             if start == now {
                 if let Some(a) = cluster.allocate(job, AllocPolicy::FirstFit) {
                     out.push(a);
                 } else {
                     // The timeline said "fits now" but placement failed —
-                    // per-node memory constraints or a job overrunning
+                    // per-node memory fragmentation or a job overrunning
                     // its estimate; its reservation stays in the plan.
                 }
             }
@@ -70,7 +73,7 @@ mod tests {
     use super::*;
     use crate::core::time::SimTime;
     use crate::job::{Job, WaitQueue};
-    use crate::sched::{Policy, RunningJob};
+    use crate::sched::{ArrivalOrder, Policy, RunningJob};
 
     fn profile_of(cluster: &Cluster, running: &[RunningJob], now: u64) -> AvailabilityProfile {
         let releases: Vec<(u64, u64)> =
@@ -90,7 +93,13 @@ mod tests {
         now: u64,
     ) -> Vec<u64> {
         let profile = profile_of(cluster, running, now);
-        let input = SchedInput { now: SimTime(now), queue, running, profile: &profile };
+        let input = SchedInput {
+            now: SimTime(now),
+            queue,
+            running,
+            profile: &profile,
+            order: &ArrivalOrder,
+        };
         ConservativeScheduler::new()
             .schedule(&input, cluster)
             .iter()
@@ -171,7 +180,13 @@ mod tests {
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(1, 0, 8, 100, 100)); // collides: waits for 140
         q.push(Job::with_estimate(2, 1, 8, 40, 40)); // exactly clears the window start
-        let input = SchedInput { now: SimTime(0), queue: &q, running: &[], profile: &profile };
+        let input = SchedInput {
+            now: SimTime(0),
+            queue: &q,
+            running: &[],
+            profile: &profile,
+            order: &ArrivalOrder,
+        };
         let started: Vec<u64> = ConservativeScheduler::new()
             .schedule(&input, &mut c)
             .iter()
@@ -180,6 +195,38 @@ mod tests {
         // Job 1 is reserved at t=140; job 2 fits [0, 40) *and* does not
         // collide with job 1's reservation -> starts now.
         assert_eq!(started, vec![2]);
+    }
+
+    #[test]
+    fn memory_bounds_reservation_slots() {
+        use crate::resources::ResourceVector;
+        // Single node, 8 cores, 1000 MB; 700 MB held until t=100. A
+        // 500 MB job's slot is t=100 even though its cores are free now.
+        let mut c = Cluster::homogeneous(1, 8, 1000);
+        let running = Job::with_memory(99, 0, 2, 700, 100);
+        let _r = c.allocate(&running, AllocPolicy::FirstFit).unwrap();
+        let mut profile = AvailabilityProfile::new_v(
+            0,
+            ResourceVector::new(c.free_cores(), c.free_memory_mb()),
+            ResourceVector::new(c.total_cores(), c.total_memory_mb()),
+        );
+        profile.hold_v(0, 100, ResourceVector::new(2, 700));
+        let mut q = WaitQueue::new();
+        q.push(Job::with_memory(1, 0, 2, 500, 50)); // memory-blocked until 100
+        q.push(Job::with_memory(2, 1, 2, 100, 50)); // fits both dims now
+        let input = SchedInput {
+            now: SimTime(0),
+            queue: &q,
+            running: &[],
+            profile: &profile,
+            order: &ArrivalOrder,
+        };
+        let started: Vec<u64> = ConservativeScheduler::new()
+            .schedule(&input, &mut c)
+            .iter()
+            .map(|a| a.job_id)
+            .collect();
+        assert_eq!(started, vec![2], "memory-blocked job must wait for its slot");
     }
 
     #[test]

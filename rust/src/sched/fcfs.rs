@@ -1,72 +1,129 @@
-//! First-Come-First-Served (paper §2.1): jobs start strictly in arrival
-//! order; a head job that does not fit blocks everything behind it.
+//! The blocking discipline (paper §2.1): jobs start strictly in queue
+//! order; a head that cannot start blocks everything behind it. FCFS,
+//! SJF, LJF and FCFS+BestFit are all this one scheduler — they differ
+//! only in the [`QueueOrder`](crate::sched::QueueOrder) the round walks
+//! the queue in (`SchedInput::order`) and, for BestFit, the placement
+//! policy.
+//!
+//! Head admission routes through the shared availability timeline
+//! (`SchedInput::profile`): on a timeline with capacity windows ahead
+//! (pending advance reservations, planned outages) a head whose whole
+//! estimated run would collide is *blocked*, not started — the blocking
+//! disciplines are reservation- and outage-aware exactly like the
+//! backfilling planners. On a monotone timeline (pure release streams,
+//! i.e. every fault-free and reservation-free run) the admission check
+//! is implied by the exact `Cluster::allocate` check, so the round runs
+//! the classic allocate-only loop and is bit-identical to — and as fast
+//! as — the scalar-era scheduler.
 
 use crate::job::{Job, JobId};
-use crate::resources::{AllocPolicy, Allocation, Cluster};
-use crate::sched::{SchedInput, Scheduler};
+use crate::resources::{AllocPolicy, Allocation, AvailabilityProfile, Cluster};
+use crate::sched::{QueueOrder, SchedInput, Scheduler};
 
-/// Start jobs following `order`; stop at the first one that does not fit
-/// (blocking discipline shared by FCFS / SJF / LJF / BestFit). Jobs that
-/// can never fit the machine are skipped, not blocked on — the driver
-/// rejects them at submission, but a defensive skip keeps the scheduler
-/// total.
+/// Result of one ordered admission pass.
+pub(crate) struct OrderedRun {
+    /// Allocations committed, in decision order.
+    pub allocs: Vec<Allocation>,
+    /// Scratch plan with this round's starts laid in — built lazily and
+    /// only in strict (non-monotone timeline) mode; backfill reuses it
+    /// for its shadow math instead of re-cloning.
+    pub plan: Option<AvailabilityProfile>,
+    /// The job that blocked the pass (the backfill head), if any.
+    pub blocked: Option<JobId>,
+}
+
+/// Start jobs following `order`; stop at the first one that cannot start
+/// (blocking discipline shared by FCFS / SJF / LJF / BestFit and the
+/// backfill phase 1). Jobs that can never fit the machine are skipped,
+/// not blocked on — the driver rejects them at submission, but a
+/// defensive skip keeps the scheduler total.
 ///
 /// Lazy over the order iterator: under a blocked head the scheduler does
 /// O(1) work instead of materializing the whole queue (the difference is
 /// ~1.6x end-to-end on queue-heavy SP2 workloads — EXPERIMENTS.md §Perf).
+/// The iterator is left positioned just past the blocked head so
+/// backfill can keep consuming candidates from it.
 pub(crate) fn run_ordered<'a>(
-    order: impl IntoIterator<Item = &'a Job>,
+    order: &mut dyn Iterator<Item = &'a Job>,
+    input: &SchedInput<'_>,
     cluster: &mut Cluster,
     policy: AllocPolicy,
-) -> Vec<Allocation> {
-    let mut out = Vec::new();
+) -> OrderedRun {
+    let profile = input.profile;
+    // Strict admission only when the timeline carries capacity windows
+    // ahead (non-monotone). On monotone timelines fitting now implies
+    // fitting forever, so `Cluster::allocate` alone decides — the
+    // classic loop, no clone, no scan beyond this one monotone check.
+    let strict = !profile.is_empty() && !profile.is_monotone();
+    let now = input.now.ticks();
+    let mut allocs = Vec::new();
+    let mut plan: Option<AvailabilityProfile> = None;
+    let mut blocked = None;
     for job in order {
         if !cluster.feasible(job) {
             continue;
         }
+        // Plan with at least one tick, like every other planner path —
+        // a zero-estimate job must still be admission-checked at `now`
+        // and leave a footprint the rest of the round can see.
+        let est = job.est_runtime.ticks().max(1);
+        if strict
+            && !plan.as_ref().unwrap_or(profile).can_place_v(now, est, job.demand())
+        {
+            blocked = Some(job.id);
+            break;
+        }
         match cluster.allocate(job, policy) {
-            Some(a) => out.push(a),
-            None => break,
+            Some(a) => {
+                if strict {
+                    let p = plan.get_or_insert_with(|| profile.clone());
+                    p.hold_v(now, now.saturating_add(est), a.demand());
+                }
+                allocs.push(a);
+            }
+            None => {
+                blocked = Some(job.id);
+                break;
+            }
         }
     }
-    out
+    OrderedRun { allocs, plan, blocked }
 }
 
-/// Materialized-id variant for schedulers that must sort first (SJF/LJF).
-pub(crate) fn run_ordered_ids(
-    order: &[JobId],
-    input: &SchedInput<'_>,
-    cluster: &mut Cluster,
-    policy: AllocPolicy,
-) -> Vec<Allocation> {
-    run_ordered(
-        order.iter().map(|id| input.queue.get(*id).expect("scheduler got id not in queue")),
-        cluster,
-        policy,
-    )
+/// The blocking scheduler: queue order in, allocations out, stop at the
+/// first blocked job. `name` is the policy identity it reports (FCFS,
+/// SJF and LJF differ only in `SchedInput::order`).
+#[derive(Debug)]
+pub struct BlockingScheduler {
+    name: &'static str,
+    alloc: AllocPolicy,
 }
 
-/// Strict FCFS with first-fit placement.
-#[derive(Debug, Default)]
-pub struct FcfsScheduler;
-
-impl FcfsScheduler {
-    pub fn new() -> Self {
-        FcfsScheduler
+impl BlockingScheduler {
+    pub fn new(name: &'static str, alloc: AllocPolicy) -> Self {
+        BlockingScheduler { name, alloc }
     }
 }
 
-impl Scheduler for FcfsScheduler {
+impl Default for BlockingScheduler {
+    fn default() -> Self {
+        BlockingScheduler::new("fcfs", AllocPolicy::FirstFit)
+    }
+}
+
+impl Scheduler for BlockingScheduler {
     fn uses_running_info(&self) -> bool {
         false
     }
 
     fn name(&self) -> &'static str {
-        "fcfs"
+        self.name
     }
 
     fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
-        run_ordered(input.queue.iter(), cluster, AllocPolicy::FirstFit)
+        let view = input.order.view(input.queue, input.now);
+        let mut it = view.iter(input.queue);
+        run_ordered(&mut it, input, cluster, self.alloc).allocs
     }
 }
 
@@ -75,6 +132,7 @@ mod tests {
     use super::*;
     use crate::core::time::SimTime;
     use crate::job::{Job, WaitQueue};
+    use crate::sched::ArrivalOrder;
 
     pub(crate) fn input<'a>(queue: &'a WaitQueue) -> SchedInput<'a> {
         SchedInput {
@@ -82,7 +140,12 @@ mod tests {
             queue,
             running: &[],
             profile: &crate::resources::AvailabilityProfile::EMPTY,
+            order: &ArrivalOrder,
         }
+    }
+
+    fn fcfs() -> BlockingScheduler {
+        BlockingScheduler::new("fcfs", AllocPolicy::FirstFit)
     }
 
     #[test]
@@ -91,8 +154,7 @@ mod tests {
         q.push(Job::simple(1, 0, 4, 10));
         q.push(Job::simple(2, 1, 4, 10));
         let mut c = Cluster::homogeneous(2, 4, 0);
-        let mut s = FcfsScheduler::new();
-        let allocs = s.schedule(&input(&q), &mut c);
+        let allocs = fcfs().schedule(&input(&q), &mut c);
         assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![1, 2]);
         assert_eq!(c.free_cores(), 0);
     }
@@ -105,7 +167,7 @@ mod tests {
         let mut c = Cluster::homogeneous(2, 4, 0);
         // Occupy one core so job 1 cannot start.
         let blocker = c.allocate(&Job::simple(99, 0, 1, 1), AllocPolicy::FirstFit).unwrap();
-        let mut s = FcfsScheduler::new();
+        let mut s = fcfs();
         let allocs = s.schedule(&input(&q), &mut c);
         assert!(allocs.is_empty(), "FCFS must not leapfrog the head");
         c.release(&blocker);
@@ -119,8 +181,7 @@ mod tests {
         q.push(Job::simple(1, 0, 1000, 10)); // bigger than machine
         q.push(Job::simple(2, 1, 2, 10));
         let mut c = Cluster::homogeneous(2, 4, 0);
-        let mut s = FcfsScheduler::new();
-        let allocs = s.schedule(&input(&q), &mut c);
+        let allocs = fcfs().schedule(&input(&q), &mut c);
         assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![2]);
     }
 
@@ -128,6 +189,63 @@ mod tests {
     fn empty_queue_no_allocs() {
         let q = WaitQueue::new();
         let mut c = Cluster::homogeneous(2, 4, 0);
-        assert!(FcfsScheduler::new().schedule(&input(&q), &mut c).is_empty());
+        assert!(fcfs().schedule(&input(&q), &mut c).is_empty());
+    }
+
+    #[test]
+    fn head_refuses_future_reservation_window() {
+        // 8 cores all free *now*, but a reservation takes the machine
+        // over [130, 230): a 100-tick head starting at 100 would collide
+        // and must wait — the reservation-aware blocking discipline.
+        let mut profile = AvailabilityProfile::new(100, 8, 8);
+        profile.add_reservation_hold(130, 230, 8);
+        let mut q = WaitQueue::new();
+        q.push(Job::with_estimate(1, 0, 8, 100, 100));
+        q.push(Job::with_estimate(2, 1, 1, 5, 5)); // blocked behind the head
+        let mut c = Cluster::homogeneous(2, 4, 0);
+        let inp = SchedInput {
+            now: SimTime(100),
+            queue: &q,
+            running: &[],
+            profile: &profile,
+            order: &ArrivalOrder,
+        };
+        assert!(fcfs().schedule(&inp, &mut c).is_empty(), "head must wait out the window");
+        assert_eq!(c.free_cores(), 8, "cluster untouched");
+        // A head that clears the window start is admitted.
+        let mut q2 = WaitQueue::new();
+        q2.push(Job::with_estimate(3, 0, 8, 30, 30)); // done exactly at 130
+        let inp = SchedInput {
+            now: SimTime(100),
+            queue: &q2,
+            running: &[],
+            profile: &profile,
+            order: &ArrivalOrder,
+        };
+        let allocs = fcfs().schedule(&inp, &mut c);
+        assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![3]);
+    }
+
+    #[test]
+    fn strict_admission_sees_same_round_starts() {
+        // 8 free, window [110, 120) holds 4 (4 stay free inside it).
+        // Two 4-core 50-tick jobs: the first fits through the window's
+        // residual capacity, the second would need 8 inside it — the
+        // scratch plan with the first start laid in must refuse it.
+        let mut profile = AvailabilityProfile::new(100, 8, 8);
+        profile.add_reservation_hold(110, 120, 4);
+        let mut q = WaitQueue::new();
+        q.push(Job::with_estimate(1, 0, 4, 50, 50));
+        q.push(Job::with_estimate(2, 1, 4, 50, 50));
+        let mut c = Cluster::homogeneous(1, 8, 0);
+        let inp = SchedInput {
+            now: SimTime(100),
+            queue: &q,
+            running: &[],
+            profile: &profile,
+            order: &ArrivalOrder,
+        };
+        let allocs = fcfs().schedule(&inp, &mut c);
+        assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![1]);
     }
 }

@@ -1,43 +1,19 @@
 //! Longest Job First (paper §2.1): expedites long jobs at the cost of
 //! short-job wait times; included as the deliberately-worse comparator in
 //! Fig 4(b).
-
-use crate::resources::{AllocPolicy, Allocation, Cluster};
-use crate::sched::fcfs::run_ordered_ids;
-use crate::sched::sjf::order_by_estimate;
-use crate::sched::{SchedInput, Scheduler};
-
-/// LJF: queue viewed in descending estimated-runtime order, blocking
-/// discipline. Ties break by (submit, id).
-#[derive(Debug, Default)]
-pub struct LjfScheduler;
-
-impl LjfScheduler {
-    pub fn new() -> Self {
-        LjfScheduler
-    }
-}
-
-impl Scheduler for LjfScheduler {
-    fn uses_running_info(&self) -> bool {
-        false
-    }
-
-    fn name(&self) -> &'static str {
-        "ljf"
-    }
-
-    fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
-        let order = order_by_estimate(input, true);
-        run_ordered_ids(&order, input, cluster, AllocPolicy::FirstFit)
-    }
-}
+//!
+//! Like SJF, LJF is the [`BlockingScheduler`](crate::sched::BlockingScheduler)
+//! under [`LongestFirst`](crate::sched::LongestFirst)
+//! (`Policy::Ljf.default_order()`); this module keeps its behavioural
+//! tests.
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::core::time::SimTime;
     use crate::job::{Job, WaitQueue};
+    use crate::resources::Cluster;
+    use crate::sched::order::order_by_estimate;
+    use crate::sched::{LongestFirst, Policy, SchedInput, Scheduler};
 
     fn input<'a>(queue: &'a WaitQueue) -> SchedInput<'a> {
         SchedInput {
@@ -45,6 +21,7 @@ mod tests {
             queue,
             running: &[],
             profile: &crate::resources::AvailabilityProfile::EMPTY,
+            order: &LongestFirst,
         }
     }
 
@@ -55,7 +32,7 @@ mod tests {
         q.push(Job::with_estimate(2, 1, 2, 100, 10));
         q.push(Job::with_estimate(3, 2, 2, 100, 50));
         let mut c = Cluster::homogeneous(1, 4, 0);
-        let allocs = LjfScheduler::new().schedule(&input(&q), &mut c);
+        let allocs = Policy::Ljf.build().schedule(&input(&q), &mut c);
         assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![1, 3]);
     }
 
@@ -65,8 +42,8 @@ mod tests {
         for (id, est) in [(1u64, 10u64), (2, 20), (3, 30)] {
             q.push(Job::with_estimate(id, id, 1, 5, est));
         }
-        let sjf = order_by_estimate(&input(&q), false);
-        let ljf = order_by_estimate(&input(&q), true);
+        let sjf = order_by_estimate(&q, false);
+        let ljf = order_by_estimate(&q, true);
         let mut rev = ljf.clone();
         rev.reverse();
         assert_eq!(sjf, rev);
@@ -77,7 +54,6 @@ mod tests {
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(9, 5, 1, 10, 42));
         q.push(Job::with_estimate(3, 1, 1, 10, 42));
-        let order = order_by_estimate(&input(&q), true);
-        assert_eq!(order, vec![3, 9]);
+        assert_eq!(order_by_estimate(&q, true), vec![3, 9]);
     }
 }

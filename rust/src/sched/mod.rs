@@ -1,13 +1,25 @@
-//! Job scheduling algorithms (paper §2.1).
+//! Job scheduling algorithms (paper §2.1), redesigned around two
+//! orthogonal seams:
 //!
-//! The paper's five policies — FCFS, SJF, LJF, FCFS+BestFit,
-//! FCFS+Backfilling (EASY) — plus conservative backfilling as the
-//! classic ablation comparator. A scheduler is a pure decision procedure: given
-//! the wait queue (arrival order), the shared availability timeline
-//! ([`crate::resources::AvailabilityProfile`], future free cores) and the
-//! cluster, it performs allocations and returns them. It never mutates jobs,
-//! the queue or the shared profile — the simulation driver owns lifecycle
-//! transitions and profile maintenance — so the same scheduler
+//! * **ordering** — *who is considered first*: a [`QueueOrder`]
+//!   ([`order`] module) handed to every round through
+//!   [`SchedInput::order`]. FCFS/SJF/LJF are one [`BlockingScheduler`]
+//!   under three orderings, and the backfilling planners accept any
+//!   ordering for head selection — so usage-decayed [`FairShare`]
+//!   composes with every planner.
+//! * **planning** — *what may start now*: the shared availability
+//!   timeline ([`crate::resources::AvailabilityProfile`], multi-resource
+//!   since the `ResourceVector` redesign) through
+//!   [`SchedInput::profile`]. Every policy's head admission routes
+//!   through one `can_place_v` query, which is what makes even the
+//!   blocking disciplines refuse to start into a future advance
+//!   reservation or outage window.
+//!
+//! A scheduler is a pure decision procedure: given the wait queue, the
+//! ordering, the timeline and the cluster, it performs allocations and
+//! returns them. It never mutates jobs, the queue or the shared profile
+//! — the simulation driver owns lifecycle transitions, profile
+//! maintenance and fair-share usage accounting — so the same scheduler
 //! implementations run unchanged inside the event-driven simulator, the
 //! CQsim-like baseline, and the parallel engine.
 
@@ -16,22 +28,24 @@ pub mod bestfit;
 pub mod conservative;
 pub mod fcfs;
 pub mod ljf;
+pub mod order;
 pub mod preempt;
 pub mod scorer;
 pub mod sjf;
 
 pub use backfill::BackfillScheduler;
 pub use conservative::ConservativeScheduler;
-pub use bestfit::BestFitScheduler;
-pub use fcfs::FcfsScheduler;
-pub use ljf::LjfScheduler;
+pub use fcfs::BlockingScheduler;
+pub use order::{
+    ArrivalOrder, FairShare, LongestFirst, OrderKind, QueueOrder, QueueView, ShortestFirst,
+    UserShare,
+};
 pub use preempt::{PreemptionConfig, PreemptionMode, PreemptiveScheduler};
 pub use scorer::{NativeScorer, QueueScorer, ScoreParams, Scores, NOFIT, SPAN_COST};
-pub use sjf::SjfScheduler;
 
 use crate::core::time::SimTime;
 use crate::job::{JobId, WaitQueue};
-use crate::resources::{Allocation, AvailabilityProfile, Cluster};
+use crate::resources::{AllocPolicy, Allocation, AvailabilityProfile, Cluster};
 use std::str::FromStr;
 
 /// What the scheduler knows about a running job (for shadow-time math and
@@ -58,12 +72,15 @@ pub struct SchedInput<'a> {
     /// selection. Planning policies do not walk this: future
     /// availability comes from `profile`.
     pub running: &'a [RunningJob],
-    /// The shared availability timeline (free cores from `now` into the
-    /// future), maintained incrementally by the simulation core. This is
-    /// how backfilling sees future reservations and down/draining
+    /// The shared availability timeline (free resources from `now` into
+    /// the future), maintained incrementally by the simulation core. This
+    /// is how every policy sees future reservations and down/draining
     /// windows; policies must not mutate it — clone into a scratch plan
     /// to lay tentative reservations.
     pub profile: &'a AvailabilityProfile,
+    /// The queue ordering this round dispatches under (resolved by the
+    /// driver: the CLI/config override, or the policy's natural order).
+    pub order: &'a dyn QueueOrder,
 }
 
 /// A scheduling algorithm.
@@ -126,14 +143,28 @@ impl Policy {
         }
     }
 
+    /// The ordering this policy dispatches under when the user does not
+    /// override it (`--order` / `scheduler.order`). SJF/LJF *are* the
+    /// blocking planner under a non-arrival ordering.
+    pub fn default_order(self) -> OrderKind {
+        match self {
+            Policy::Sjf => OrderKind::ShortestFirst,
+            Policy::Ljf => OrderKind::LongestFirst,
+            _ => OrderKind::Arrival,
+        }
+    }
+
     /// Instantiate the scheduler for this policy with the default
-    /// (native) scorer.
+    /// (native) scorer. The ordering is orthogonal: pair with
+    /// [`Policy::default_order`] (or an override) when driving it.
     pub fn build(self) -> Box<dyn Scheduler> {
         match self {
-            Policy::Fcfs => Box::new(FcfsScheduler::new()),
-            Policy::Sjf => Box::new(SjfScheduler::new()),
-            Policy::Ljf => Box::new(LjfScheduler::new()),
-            Policy::FcfsBestFit => Box::new(BestFitScheduler::new()),
+            Policy::Fcfs => Box::new(BlockingScheduler::new("fcfs", AllocPolicy::FirstFit)),
+            Policy::Sjf => Box::new(BlockingScheduler::new("sjf", AllocPolicy::FirstFit)),
+            Policy::Ljf => Box::new(BlockingScheduler::new("ljf", AllocPolicy::FirstFit)),
+            Policy::FcfsBestFit => {
+                Box::new(BlockingScheduler::new("fcfs-bestfit", AllocPolicy::BestFit))
+            }
             Policy::FcfsBackfill => Box::new(BackfillScheduler::new()),
             Policy::ConservativeBackfill => Box::new(ConservativeScheduler::new()),
         }
@@ -151,9 +182,13 @@ impl FromStr for Policy {
             "fcfs-bestfit" | "bestfit" | "best-fit" => Ok(Policy::FcfsBestFit),
             "fcfs-backfill" | "backfill" | "easy" => Ok(Policy::FcfsBackfill),
             "cons-backfill" | "conservative" => Ok(Policy::ConservativeBackfill),
-            other => Err(format!(
-                "unknown policy {other:?} (expected fcfs|sjf|ljf|fcfs-bestfit|fcfs-backfill)"
-            )),
+            other => {
+                // Keep the expected-values list in lockstep with
+                // `Policy::ALL` — a hand-written list drifted once
+                // (cons-backfill was missing).
+                let expected: Vec<&str> = Policy::ALL.iter().map(|p| p.as_str()).collect();
+                Err(format!("unknown policy {other:?} (expected {})", expected.join("|")))
+            }
         }
     }
 }
@@ -183,6 +218,18 @@ mod tests {
     }
 
     #[test]
+    fn policy_error_lists_every_policy() {
+        let err = "magic".parse::<Policy>().unwrap_err();
+        for p in Policy::ALL {
+            assert!(
+                err.contains(p.as_str()),
+                "error message must list {} (stay in sync with Policy::ALL): {err}",
+                p.as_str()
+            );
+        }
+    }
+
+    #[test]
     fn build_matches_name() {
         assert_eq!(Policy::Fcfs.build().name(), "fcfs");
         assert_eq!(Policy::Sjf.build().name(), "sjf");
@@ -190,5 +237,14 @@ mod tests {
         assert_eq!(Policy::FcfsBestFit.build().name(), "fcfs-bestfit");
         assert_eq!(Policy::FcfsBackfill.build().name(), "fcfs-backfill");
         assert_eq!(Policy::ConservativeBackfill.build().name(), "cons-backfill");
+    }
+
+    #[test]
+    fn default_orders_reflect_policy_identity() {
+        assert_eq!(Policy::Fcfs.default_order(), OrderKind::Arrival);
+        assert_eq!(Policy::Sjf.default_order(), OrderKind::ShortestFirst);
+        assert_eq!(Policy::Ljf.default_order(), OrderKind::LongestFirst);
+        assert_eq!(Policy::FcfsBackfill.default_order(), OrderKind::Arrival);
+        assert_eq!(Policy::ConservativeBackfill.default_order(), OrderKind::Arrival);
     }
 }

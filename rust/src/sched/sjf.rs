@@ -1,57 +1,20 @@
 //! Shortest Job First (paper §2.1): minimizes average wait time by
 //! prioritizing short jobs; hinges on the user runtime *estimate* (the
 //! scheduler cannot see actual runtimes — Smith 1978).
-
-use crate::job::JobId;
-use crate::resources::{AllocPolicy, Allocation, Cluster};
-use crate::sched::fcfs::run_ordered_ids;
-use crate::sched::{SchedInput, Scheduler};
-
-/// SJF: queue viewed in ascending estimated-runtime order, blocking
-/// discipline. Ties break by (submit, id) so runs are deterministic.
-#[derive(Debug, Default)]
-pub struct SjfScheduler;
-
-impl SjfScheduler {
-    pub fn new() -> Self {
-        SjfScheduler
-    }
-}
-
-pub(crate) fn order_by_estimate(input: &SchedInput<'_>, longest_first: bool) -> Vec<JobId> {
-    let mut jobs: Vec<(u64, u64, JobId)> = input
-        .queue
-        .iter()
-        .map(|j| (j.est_runtime.ticks(), j.submit.ticks(), j.id))
-        .collect();
-    if longest_first {
-        jobs.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
-    } else {
-        jobs.sort();
-    }
-    jobs.into_iter().map(|(_, _, id)| id).collect()
-}
-
-impl Scheduler for SjfScheduler {
-    fn uses_running_info(&self) -> bool {
-        false
-    }
-
-    fn name(&self) -> &'static str {
-        "sjf"
-    }
-
-    fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
-        let order = order_by_estimate(input, false);
-        run_ordered_ids(&order, input, cluster, AllocPolicy::FirstFit)
-    }
-}
+//!
+//! Since the queue-ordering redesign SJF is not a separate algorithm:
+//! it is the [`BlockingScheduler`](crate::sched::BlockingScheduler)
+//! walking the queue under [`ShortestFirst`](crate::sched::ShortestFirst)
+//! (`Policy::Sjf.default_order()`). This module keeps the policy's
+//! behavioural tests against the collapsed implementation.
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::core::time::SimTime;
     use crate::job::{Job, WaitQueue};
+    use crate::resources::Cluster;
+    use crate::sched::order::order_by_estimate;
+    use crate::sched::{Policy, SchedInput, Scheduler, ShortestFirst};
 
     fn input<'a>(queue: &'a WaitQueue) -> SchedInput<'a> {
         SchedInput {
@@ -59,6 +22,7 @@ mod tests {
             queue,
             running: &[],
             profile: &crate::resources::AvailabilityProfile::EMPTY,
+            order: &ShortestFirst,
         }
     }
 
@@ -69,7 +33,7 @@ mod tests {
         q.push(Job::with_estimate(2, 1, 2, 100, 10));
         q.push(Job::with_estimate(3, 2, 2, 100, 50));
         let mut c = Cluster::homogeneous(1, 4, 0);
-        let allocs = SjfScheduler::new().schedule(&input(&q), &mut c);
+        let allocs = Policy::Sjf.build().schedule(&input(&q), &mut c);
         // Only 4 cores: shortest two (jobs 2 and 3) start, blocking at job 1.
         assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![2, 3]);
     }
@@ -79,8 +43,7 @@ mod tests {
         let mut q = WaitQueue::new();
         q.push(Job::with_estimate(9, 5, 1, 10, 42));
         q.push(Job::with_estimate(3, 1, 1, 10, 42));
-        let order = order_by_estimate(&input(&q), false);
-        assert_eq!(order, vec![3, 9]);
+        assert_eq!(order_by_estimate(&q, false), vec![3, 9]);
     }
 
     #[test]
@@ -90,7 +53,7 @@ mod tests {
         q.push(Job::with_estimate(2, 1, 1, 10, 1000));
         let mut c = Cluster::homogeneous(2, 4, 0);
         // Job 1 infeasible (100 > 8 total) -> skipped; job 2 starts.
-        let allocs = SjfScheduler::new().schedule(&input(&q), &mut c);
+        let allocs = Policy::Sjf.build().schedule(&input(&q), &mut c);
         assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![2]);
     }
 }

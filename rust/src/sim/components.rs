@@ -18,8 +18,8 @@ use crate::core::event::{ComponentId, Priority};
 use crate::core::stats::TimeSeries;
 use crate::core::time::{SimDuration, SimTime};
 use crate::job::{Job, JobId, WaitQueue};
-use crate::resources::{Allocation, AvailabilityProfile, Cluster, NodeState};
-use crate::sched::{PreemptionConfig, RunningJob, SchedInput, Scheduler};
+use crate::resources::{Allocation, AvailabilityProfile, Cluster, NodeState, ResourceVector};
+use crate::sched::{ArrivalOrder, PreemptionConfig, QueueOrder, RunningJob, SchedInput, Scheduler, UserShare};
 use crate::sim::faults::ReservationSpec;
 use crate::sim::Ev;
 use std::any::Any;
@@ -130,12 +130,13 @@ struct RunningEntry {
     alloc: Allocation,
     /// Estimated end of the current segment (start + estimate).
     est_end: SimTime,
-    /// The `(release_time, cores)` deltas this job currently contributes
+    /// The `(release_time, demand)` deltas this job currently contributes
     /// to the availability timeline — released verbatim when the job
     /// leaves, so incremental maintenance is an exact inverse of the
     /// holds it placed. Rewritten by `resync_profile` on capacity
-    /// transitions (a draining node hands its portion back later).
-    hold: Vec<(u64, u64)>,
+    /// transitions (a draining node hands its portion back later). The
+    /// memory component is zero unless the run is memory-aware.
+    hold: Vec<(u64, ResourceVector)>,
 }
 
 /// Job Scheduling + Resource Management (paper Fig 1): wait queue, the
@@ -145,6 +146,14 @@ struct RunningEntry {
 pub struct SchedulerComponent {
     pub cluster: Cluster,
     scheduler: Box<dyn Scheduler>,
+    /// The queue ordering every round dispatches under (the policy's
+    /// natural order, or the `--order` override); also the sink for
+    /// fair-share usage accounting on segment end.
+    queue_order: Box<dyn QueueOrder>,
+    /// Plan memory as a second timeline dimension (holds carry the
+    /// allocation's memory footprint; resync encodes memory deltas).
+    /// Forced off when the machine tracks no memory.
+    pub memory_aware: bool,
     queue: WaitQueue,
     /// Running jobs by id, with their availability-timeline footprint.
     running: HashMap<JobId, RunningEntry>,
@@ -165,6 +174,8 @@ pub struct SchedulerComponent {
     /// Planned hold size per reservation, computed once (node capacities
     /// are immutable after construction).
     resv_plan_cores: Vec<u64>,
+    /// Memory analogue of `resv_plan_cores` (memory-aware runs only).
+    resv_plan_mem: Vec<u64>,
     /// When the timeline was last rebuilt from authoritative state. With
     /// a finite horizon, events clamped away at one resync must re-enter
     /// as time approaches them, so dispatch refreshes every horizon/2
@@ -182,6 +193,9 @@ pub struct SchedulerComponent {
     pub occupancy: TimeSeries,
     pub running_series: TimeSeries,
     pub util_series: TimeSeries,
+    /// (t, busy memory / total memory) — recorded only on memory-aware
+    /// runs (empty otherwise).
+    pub mem_util_series: TimeSeries,
     /// (t, busy / non-failed cores) — fault subsystem metric.
     pub effective_util_series: TimeSeries,
     /// (t, non-failed cores) — denominator series for the goodput-based
@@ -210,6 +224,8 @@ impl SchedulerComponent {
         SchedulerComponent {
             cluster,
             scheduler,
+            queue_order: Box::new(ArrivalOrder),
+            memory_aware: false,
             queue: WaitQueue::new(),
             running: HashMap::new(),
             profile,
@@ -217,6 +233,7 @@ impl SchedulerComponent {
             pending_repairs: HashMap::new(),
             resv_pending: Vec::new(),
             resv_plan_cores: Vec::new(),
+            resv_plan_mem: Vec::new(),
             last_resync: 0,
             defer_resync: false,
             completed: Vec::new(),
@@ -227,6 +244,7 @@ impl SchedulerComponent {
             occupancy: TimeSeries::new(),
             running_series: TimeSeries::new(),
             util_series: TimeSeries::new(),
+            mem_util_series: TimeSeries::new(),
             effective_util_series: TimeSeries::new(),
             avail_series: TimeSeries::new(),
             preemption: PreemptionConfig::default(),
@@ -264,11 +282,26 @@ impl SchedulerComponent {
         self.util_series.record(now, self.cluster.utilization());
         self.effective_util_series.record(now, self.cluster.effective_utilization());
         self.avail_series.record(now, self.cluster.available_cores() as f64);
+        if self.memory_aware {
+            self.mem_util_series.record(now, self.cluster.memory_utilization());
+        }
     }
 
     /// The availability timeline (read-only view for tests/tools).
     pub fn profile(&self) -> &AvailabilityProfile {
         &self.profile
+    }
+
+    /// Install the queue ordering (the builder resolves override vs
+    /// policy default).
+    pub fn set_queue_order(&mut self, order: Box<dyn QueueOrder>) {
+        self.queue_order = order;
+    }
+
+    /// Decayed per-user usage at `now` (empty unless the ordering
+    /// tracks usage — fair share).
+    pub fn user_shares(&self, now: SimTime) -> Vec<UserShare> {
+        self.queue_order.usage_snapshot(now)
     }
 
     fn snapshot_running(&self) -> Vec<RunningJob> {
@@ -302,15 +335,20 @@ impl SchedulerComponent {
     /// exactly (hot path); otherwise part of the cores return to a
     /// drained/failed node instead of the schedulable pool, so the
     /// timeline is resynced from authoritative state (rare path).
-    fn release_profile_hold(&mut self, alloc: &Allocation, hold: &[(u64, u64)], now: SimTime) {
+    fn release_profile_hold(
+        &mut self,
+        alloc: &Allocation,
+        hold: &[(u64, ResourceVector)],
+        now: SimTime,
+    ) {
         let all_up = alloc
             .taken
             .iter()
             .all(|&(nid, _, _)| self.cluster.node_state(nid) == NodeState::Up);
         if all_up {
             let nowt = now.ticks();
-            for &(end, cores) in hold {
-                self.profile.release(nowt, end, cores);
+            for &(end, d) in hold {
+                self.profile.release_v(nowt, end, d);
             }
         } else if !self.defer_resync {
             self.resync_profile(now);
@@ -329,6 +367,10 @@ impl SchedulerComponent {
         let elapsed = job.last_start.map(|s| now - s).unwrap_or(SimDuration::ZERO);
         self.cluster.release(&alloc);
         self.release_profile_hold(&alloc, &hold, now);
+        // Fair-share accounting: the interrupted segment consumed real
+        // machine time even if its progress is later discarded.
+        self.queue_order
+            .record_usage(job.user, job.group, alloc.cores(), elapsed.ticks(), now);
         let keep_progress = self.preemption.keeps_progress();
         let overhead = match (keep_progress, reason) {
             (true, InterruptReason::Eviction) => self.preemption.eviction_overhead(),
@@ -400,17 +442,19 @@ impl SchedulerComponent {
     fn resync_profile(&mut self, now: SimTime) {
         let nowt = now.ticks();
         let horizon = self.planning_horizon;
+        let mem_aware = self.memory_aware;
         let clamp = |t: u64| Self::clamp_to_horizon(horizon, nowt, t);
         let resv_ends: Vec<u64> =
             (0..self.reservations.len()).map(|r| Self::resv_end(&self.reservations, r)).collect();
         let mut deltas: Vec<(u64, i64)> = Vec::with_capacity(self.running.len() + 8);
-        // Running jobs: cores rejoin the pool at the estimated end —
+        let mut mem_deltas: Vec<(u64, i64)> = Vec::new();
+        // Running jobs: resources rejoin the pool at the estimated end —
         // per node, because a draining node hands its portion back only
         // once both the job and the claiming reservation are done.
         for entry in self.running.values_mut() {
             entry.hold.clear();
             let est = entry.est_end.ticks();
-            for &(nid, c, _m) in &entry.alloc.taken {
+            for &(nid, c, m) in &entry.alloc.taken {
                 let t = match self.cluster.node_state(nid) {
                     NodeState::Up => est,
                     NodeState::Draining => match self.claimed.get(&nid) {
@@ -423,19 +467,26 @@ impl SchedulerComponent {
                     NodeState::Down | NodeState::Reserved => continue,
                 };
                 let t = clamp(t);
+                let m = if mem_aware { m } else { 0 };
                 if t > nowt {
                     match entry.hold.iter_mut().find(|h| h.0 == t) {
-                        Some(h) => h.1 += c,
-                        None => entry.hold.push((t, c)),
+                        Some(h) => h.1 = h.1.add(ResourceVector::new(c, m)),
+                        None => entry.hold.push((t, ResourceVector::new(c, m))),
                     }
                 } else {
                     // Overrun past the estimate: the timeline already
-                    // counts these cores free (planning estimate
+                    // counts these resources free (planning estimate
                     // semantics — same as the rebuild it replaces).
                     deltas.push((nowt, c as i64));
+                    if m > 0 {
+                        mem_deltas.push((nowt, m as i64));
+                    }
                 }
             }
-            deltas.extend(entry.hold.iter().map(|&(t, c)| (t, c as i64)));
+            deltas.extend(entry.hold.iter().map(|&(t, d)| (t, d.cores as i64)));
+            mem_deltas.extend(
+                entry.hold.iter().filter(|h| h.1.memory_mb > 0).map(|&(t, d)| (t, d.memory_mb as i64)),
+            );
         }
         // Claimed nodes: the unoccupied portion returns when the
         // reservation expires.
@@ -444,8 +495,13 @@ impl SchedulerComponent {
             match node.state {
                 NodeState::Reserved | NodeState::Draining => {
                     let t = clamp(resv_ends[res]);
-                    if t > nowt && node.free_cores > 0 {
-                        deltas.push((t, node.free_cores as i64));
+                    if t > nowt {
+                        if node.free_cores > 0 {
+                            deltas.push((t, node.free_cores as i64));
+                        }
+                        if mem_aware && node.free_memory_mb > 0 {
+                            mem_deltas.push((t, node.free_memory_mb as i64));
+                        }
                     }
                 }
                 // Down claimed nodes return via their repair below.
@@ -463,6 +519,9 @@ impl SchedulerComponent {
             let t = clamp(t);
             if t > nowt {
                 deltas.push((t, self.cluster.nodes()[nid].cores as i64));
+                if mem_aware && self.cluster.nodes()[nid].memory_mb > 0 {
+                    mem_deltas.push((t, self.cluster.nodes()[nid].memory_mb as i64));
+                }
             }
         }
         // Future reservations: planned capacity windows.
@@ -477,8 +536,22 @@ impl SchedulerComponent {
                 deltas.push((start, -(cores as i64)));
                 deltas.push((end, cores as i64));
             }
+            let mem = if mem_aware { self.resv_plan_mem.get(res).copied().unwrap_or(0) } else { 0 };
+            if start < end && mem > 0 {
+                mem_deltas.push((start, -(mem as i64)));
+                mem_deltas.push((end, mem as i64));
+            }
         }
-        self.profile.rebuild(nowt, self.cluster.free_cores(), deltas);
+        if mem_aware {
+            self.profile.rebuild_v(
+                nowt,
+                ResourceVector::new(self.cluster.free_cores(), self.cluster.free_memory_mb()),
+                deltas,
+                mem_deltas,
+            );
+        } else {
+            self.profile.rebuild(nowt, self.cluster.free_cores(), deltas);
+        }
         self.last_resync = nowt;
     }
 
@@ -651,6 +724,7 @@ impl SchedulerComponent {
                     queue: &self.queue,
                     running: &running_info,
                     profile: &self.profile,
+                    order: &*self.queue_order,
                 };
                 self.scheduler.preempt(&input, &self.cluster)
             };
@@ -671,6 +745,7 @@ impl SchedulerComponent {
                 queue: &self.queue,
                 running: &running_info,
                 profile: &self.profile,
+                order: &*self.queue_order,
             };
             self.scheduler.schedule(&input, &mut self.cluster)
         };
@@ -681,14 +756,18 @@ impl SchedulerComponent {
                 .expect("scheduler allocated a job not in the queue");
             job.mark_started(now);
             let est_end = now + job.est_remaining();
-            // Incremental timeline update: the job holds its cores until
-            // the estimated end (clamped to the planning horizon).
+            // Incremental timeline update: the job holds its resources
+            // until the estimated end (clamped to the planning horizon).
             let nowt = now.ticks();
             let planned = Self::clamp_to_horizon(self.planning_horizon, nowt, est_end.ticks());
             let mut hold = Vec::new();
             if planned > nowt {
-                self.profile.hold(nowt, planned, alloc.cores());
-                hold.push((planned, alloc.cores()));
+                let d = ResourceVector::new(
+                    alloc.cores(),
+                    if self.memory_aware { alloc.memory_mb() } else { 0 },
+                );
+                self.profile.hold_v(nowt, planned, d);
+                hold.push((planned, d));
             }
             ctx.send(
                 self.executor,
@@ -742,6 +821,11 @@ impl SchedulerComponent {
             .expect("completion for unknown job");
         self.cluster.release(&alloc);
         self.release_profile_hold(&alloc, &hold, now);
+        // Fair-share accounting on job end: charge the machine time the
+        // final segment actually consumed.
+        let elapsed = job.last_start.map(|s| now - s).unwrap_or(SimDuration::ZERO);
+        self.queue_order
+            .record_usage(job.user, job.group, alloc.cores(), elapsed.ticks(), now);
         job.mark_completed(now);
         self.completed.push(job);
         self.settle_drained_nodes(&alloc.node_ids());
@@ -758,6 +842,16 @@ impl Component<Ev> for SchedulerComponent {
     }
 
     fn init(&mut self, ctx: &mut Ctx<Ev>) {
+        // Memory awareness is inert on machines that track no memory —
+        // that (and only that) keeps cores-only runs on the scalar path.
+        self.memory_aware = self.memory_aware && self.cluster.total_memory_mb() > 0;
+        if self.memory_aware {
+            self.profile = AvailabilityProfile::new_v(
+                ctx.now().ticks(),
+                ResourceVector::new(self.cluster.free_cores(), self.cluster.free_memory_mb()),
+                ResourceVector::new(self.cluster.total_cores(), self.cluster.total_memory_mb()),
+            );
+        }
         // Seed the availability timeline: declared reservations hold
         // planned capacity windows from the start, which is how backfill
         // plans around them before they claim a single node.
@@ -766,6 +860,11 @@ impl Component<Ev> for SchedulerComponent {
             .reservations
             .iter()
             .map(|r| self.cluster.reservation_plan_cores(r.nodes))
+            .collect();
+        self.resv_plan_mem = self
+            .reservations
+            .iter()
+            .map(|r| self.cluster.reservation_plan_mem(r.nodes))
             .collect();
         self.resync_profile(ctx.now());
     }

@@ -26,8 +26,12 @@ use crate::core::time::{SimDuration, SimTime};
 use crate::job::Job;
 use crate::metrics::{wait_stats, WaitStats};
 use crate::resources::Cluster;
-use crate::sched::{Policy, PreemptionConfig, PreemptiveScheduler, Scheduler};
+use crate::sched::{OrderKind, Policy, PreemptionConfig, PreemptiveScheduler, Scheduler, UserShare};
 use crate::trace::Workload;
+
+/// Default fair-share half-life (ticks =~ seconds): one day, the order
+/// of magnitude production schedulers use for usage decay.
+pub const DEFAULT_FAIRSHARE_HALF_LIFE: u64 = 86_400;
 
 /// Event payload exchanged between simulation components.
 #[derive(Debug, Clone)]
@@ -81,6 +85,16 @@ pub struct SimReport {
     pub utilization: TimeSeries,
     /// Time-weighted mean utilization over the run.
     pub mean_utilization: f64,
+    /// (t, busy memory / total memory) — empty unless the run was
+    /// memory-aware.
+    pub memory_utilization: TimeSeries,
+    /// Time-weighted mean memory utilization (0 when untracked).
+    pub mean_memory_utilization: f64,
+    /// The queue ordering the run dispatched under.
+    pub order: &'static str,
+    /// Decayed per-user usage at the end of the run (empty unless the
+    /// ordering tracks usage — fair share).
+    pub user_shares: Vec<UserShare>,
     /// (t, busy cores / non-failed cores) — the operator's instantaneous
     /// view during outages (fault/preemption subsystem).
     pub effective_utilization: TimeSeries,
@@ -186,6 +200,14 @@ pub struct Simulation {
     /// coalesce to the horizon, bounding timeline length at the cost of
     /// fidelity past it. 0 = unlimited (exact timeline, the default).
     pub planning_horizon: u64,
+    /// Queue-ordering override (`scheduler.order` / `--order`); `None`
+    /// uses the policy's natural order (SJF = shortest-first, etc.).
+    pub order: Option<OrderKind>,
+    /// Fair-share usage-decay half-life in ticks (`fairshare.half_life`).
+    pub fairshare_half_life: u64,
+    /// Plan memory as a second availability-timeline dimension
+    /// (`--memory-aware`); inert unless `mem_per_node > 0`.
+    pub memory_aware: bool,
 }
 
 impl Simulation {
@@ -201,11 +223,34 @@ impl Simulation {
             preemption: PreemptionConfig::default(),
             reservations: Vec::new(),
             planning_horizon: 0,
+            order: None,
+            fairshare_half_life: DEFAULT_FAIRSHARE_HALF_LIFE,
+            memory_aware: false,
         }
     }
 
     pub fn with_scheduler(mut self, s: Box<dyn Scheduler>) -> Simulation {
         self.scheduler = Some(s);
+        self
+    }
+
+    pub fn with_order(mut self, order: OrderKind) -> Simulation {
+        self.order = Some(order);
+        self
+    }
+
+    pub fn with_fairshare_half_life(mut self, half_life: u64) -> Simulation {
+        self.fairshare_half_life = half_life;
+        self
+    }
+
+    pub fn with_mem_per_node(mut self, mem_per_node: u64) -> Simulation {
+        self.mem_per_node = mem_per_node;
+        self
+    }
+
+    pub fn with_memory_aware(mut self, on: bool) -> Simulation {
+        self.memory_aware = on;
         self
     }
 
@@ -247,6 +292,9 @@ impl Simulation {
             preemption,
             reservations,
             planning_horizon,
+            order,
+            fairshare_half_life,
+            memory_aware,
         } = self;
         let cluster =
             Cluster::homogeneous(workload.nodes, workload.cores_per_node, mem_per_node);
@@ -277,19 +325,28 @@ impl Simulation {
         // Tell source + executor where to send.
         engine.get_mut::<JobSource>(source).unwrap().target = sched;
         engine.get_mut::<JobExecutor>(exec).unwrap().scheduler = sched;
+        let order_kind = order.unwrap_or_else(|| policy.default_order());
         {
             let s = engine.get_mut::<SchedulerComponent>(sched).unwrap();
             s.executor = exec;
             s.preemption = preemption;
             s.reservations = reservations.clone();
             s.planning_horizon = planning_horizon;
+            s.memory_aware = memory_aware;
+            s.set_queue_order(order_kind.build(fairshare_half_life));
         }
         if wire_injector {
             let inj = engine.add(Box::new(FaultInjector::new(faults, until, reservations)));
             engine.connect(inj, sched, SimDuration(0));
             engine.get_mut::<FaultInjector>(inj).unwrap().scheduler = sched;
         }
-        SimInstance { engine, sched_id: sched, policy_name, workload_name: wl_name }
+        SimInstance {
+            engine,
+            sched_id: sched,
+            policy_name,
+            workload_name: wl_name,
+            order_name: order_kind.as_str(),
+        }
     }
 
     /// Run to completion (or `horizon`) and report.
@@ -307,6 +364,7 @@ pub struct SimInstance {
     sched_id: crate::core::event::ComponentId,
     policy_name: &'static str,
     workload_name: String,
+    order_name: &'static str,
 }
 
 impl SimInstance {
@@ -333,6 +391,13 @@ impl SimInstance {
         let s = self.engine.get_mut::<SchedulerComponent>(sched).unwrap();
         let utilization = std::mem::take(&mut s.util_series);
         let mean_utilization = utilization.time_weighted_mean(end_time);
+        let memory_utilization = std::mem::take(&mut s.mem_util_series);
+        let mean_memory_utilization = if memory_utilization.points().is_empty() {
+            0.0
+        } else {
+            memory_utilization.time_weighted_mean(end_time)
+        };
+        let user_shares = s.user_shares(end_time);
         let effective_utilization = std::mem::take(&mut s.effective_util_series);
         let completed = std::mem::take(&mut s.completed);
         // Goodput: useful core-seconds / available core-seconds up to
@@ -356,6 +421,10 @@ impl SimInstance {
             running: std::mem::take(&mut s.running_series),
             utilization,
             mean_utilization,
+            memory_utilization,
+            mean_memory_utilization,
+            order: self.order_name,
+            user_shares,
             effective_utilization,
             mean_effective_utilization,
             dispatches: s.dispatches,

@@ -102,7 +102,7 @@ fn summarize(r: &SimReport) -> String {
     let s = r.wait_stats();
     let fp = sst_sched::parallel::fnv1a(r.fingerprint().as_bytes());
     format!(
-        "policy={} workload={}\n\
+        "policy={} order={} workload={}\n\
          completed={} rejected={} events={} dispatches={}\n\
          mean_wait={:.6} bits={:016x}\n\
          median_wait={:.6} bits={:016x}\n\
@@ -114,6 +114,7 @@ fn summarize(r: &SimReport) -> String {
          lost_work_bits={:016x} overhead_work_bits={:016x}\n\
          job_fingerprint={:016x}\n",
         r.policy,
+        r.order,
         r.workload,
         r.completed.len(),
         r.rejected,
@@ -195,6 +196,31 @@ fn golden_das2_fault_summary_locked() {
     let b = summarize(&golden_das2_faulty());
     assert_eq!(a, b, "DAS-2 fault golden scenario not even run-to-run reproducible");
     golden_check("das2_faulty_backfill_ckpt", &a);
+}
+
+/// Fair-share golden scenario (queue-ordering seam): EASY backfilling
+/// dispatching under usage-decayed fair share on a contended SP2-like
+/// workload. Bless-on-first-run like the others; the blessed file pins
+/// both the ordering determinism and the usage-accounting stream.
+fn golden_fairshare() -> SimReport {
+    use sst_sched::sched::OrderKind;
+    let w = SdscSp2Model::default().generate(1_200, 11).scale_arrivals(0.5).drop_infeasible();
+    Simulation::new(w, Policy::FcfsBackfill)
+        .with_seed(11)
+        .with_order(OrderKind::FairShare)
+        .with_fairshare_half_life(14_400)
+        .run(None)
+}
+
+#[test]
+fn golden_fairshare_summary_locked() {
+    let r = golden_fairshare();
+    assert_eq!(r.order, "fair-share");
+    assert!(!r.user_shares.is_empty(), "fair share must have charged usage");
+    let a = summarize(&r);
+    let b = summarize(&golden_fairshare());
+    assert_eq!(a, b, "fair-share golden scenario not even run-to-run reproducible");
+    golden_check("sdsc_sp2_fairshare_backfill", &a);
 }
 
 #[test]

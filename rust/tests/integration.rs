@@ -151,17 +151,20 @@ fn parallel_fault_runs_deterministic_across_thread_counts() {
     }
 }
 
-/// Acceptance test of the availability-timeline refactor: EASY must
-/// refuse a backfill candidate whose run would collide with a *future*
-/// advance reservation. Before the shared profile, reservations only
-/// claimed nodes at their start time, so the release-walk backfill
-/// admitted the candidate at t=0 (it "finished by the shadow time") and
-/// the reservation then had to drain around it.
+/// Acceptance test of the availability-timeline refactor (updated for
+/// the multi-resource/ordering redesign): every start — phase-1 FCFS
+/// starts included — must clear a *future* advance reservation window.
+/// Before the shared profile, reservations only claimed nodes at their
+/// start time, so backfill admitted colliding candidates; before the
+/// ordering redesign, phase-1/blocking starts still ran into the window
+/// (the reservation had to degrade around them). Now the whole queue
+/// waits, the reservation claims an idle machine cleanly, and backfill
+/// resumes on the far side of the window.
 #[test]
 fn backfill_plans_around_future_reservation() {
     use sst_sched::job::Job;
     use sst_sched::trace::Workload;
-    // 2 nodes x 4 cores. j1 occupies half the machine until t=100; j2
+    // 2 nodes x 4 cores. j1 wants half the machine for 100 ticks; j2
     // (head) wants everything; j3 is classic backfill fodder (4 cores,
     // 50 ticks). A reservation takes the whole machine over [30, 130).
     let jobs = vec![
@@ -175,18 +178,17 @@ fn backfill_plans_around_future_reservation() {
     assert_eq!(r.completed.len(), 3);
     let start =
         |id: u64| r.completed.iter().find(|j| j.id == id).unwrap().start.unwrap().ticks();
-    assert_eq!(start(1), 0, "phase-1 start untouched");
-    // The candidate's [0, 50) run collides with the reservation window:
-    // the release-walk EASY started it at t=0, the planner must not.
-    assert!(start(3) > 0, "j3 must not backfill into the reservation window");
-    // Head waits out the reservation (it needs the whole machine), then
-    // the candidate runs after it.
-    assert_eq!(start(2), 130);
-    assert_eq!(start(3), 230);
-    // Nobody was running on reserved nodes except the pre-existing j1,
-    // which drained (reservation degraded on exactly its node).
+    // j1's [0, 100) run would collide with the window: it waits too
+    // (this is the blocking-discipline half of the redesign).
+    assert_eq!(start(1), 130, "phase-1 start must clear the reservation window");
+    // Once the window passes, j2 is the blocked head (j1 holds half the
+    // machine) and j3 backfills beside j1 without delaying j2.
+    assert_eq!(start(3), 130, "j3 backfills right after the window");
+    assert_eq!(start(2), 230, "head runs when j1 releases");
+    // The machine was idle at claim time: clean claim, no draining, no
+    // preemption.
     assert_eq!(r.faults.preemptions, 0);
-    assert_eq!(r.faults.reservations_degraded, 1);
+    assert_eq!(r.faults.reservations_degraded, 0);
     assert_eq!(r.faults.reservations_short_nodes, 0);
 }
 
@@ -222,6 +224,149 @@ fn horizon_refresh_replans_far_reservations() {
     // remaining jobs run after the reservation expires at 230.
     assert_eq!(start(2), 230, "head must wait out the reservation");
     assert_eq!(start(3), 330, "candidate must not backfill into the window");
+}
+
+/// Acceptance test of the queue-ordering/multi-resource redesign, part
+/// 1: plain FCFS (a blocking discipline that never read the timeline
+/// before) now *waits* instead of starting into a future reservation
+/// window. Pre-redesign the head started at t=0 because the cores were
+/// free at that instant, and the reservation then had to degrade.
+#[test]
+fn fcfs_head_waits_for_future_reservation() {
+    use sst_sched::job::Job;
+    use sst_sched::trace::Workload;
+    // 2 nodes x 4 cores, all idle. Head j1 wants the whole machine for
+    // 50 ticks; a reservation takes both nodes over [30, 130). j2 fits
+    // trivially but must stay blocked behind the head (FCFS).
+    let jobs = vec![
+        Job::with_estimate(1, 0, 8, 50, 50),
+        Job::with_estimate(2, 1, 1, 10, 10),
+    ];
+    let w = Workload::new("fcfs-resv", jobs, 2, 4);
+    let resv = vec![ReservationSpec { start: 30, duration: 100, nodes: 2 }];
+    let r = Simulation::new(w, Policy::Fcfs).with_reservations(resv).run(None);
+    assert_eq!(r.completed.len(), 2);
+    let start =
+        |id: u64| r.completed.iter().find(|j| j.id == id).unwrap().start.unwrap().ticks();
+    assert_eq!(start(1), 130, "blocked head must wait out the reservation window");
+    assert!(start(2) >= 130, "FCFS discipline: nothing leapfrogs the blocked head");
+    // The machine was idle when the reservation came due: a clean claim,
+    // no draining, no degradation — the whole point of waiting.
+    assert_eq!(r.faults.reservations_degraded, 0);
+    assert_eq!(r.faults.reservations_short_nodes, 0);
+}
+
+/// Part 2: `--order fair-share` composes with every policy and stays
+/// byte-deterministic across repeat runs (acceptance criterion).
+#[test]
+fn fairshare_order_composes_with_all_policies_deterministically() {
+    use sst_sched::sched::OrderKind;
+    let w = SdscSp2Model::default().generate(500, 17).scale_arrivals(0.6).drop_infeasible();
+    let n = w.jobs.len();
+    for policy in Policy::ALL {
+        let run = |w: sst_sched::trace::Workload| {
+            Simulation::new(w, policy)
+                .with_order(OrderKind::FairShare)
+                .with_fairshare_half_life(7_200)
+                .run(None)
+        };
+        let a = run(w.clone());
+        assert_eq!(a.completed.len(), n, "{policy} lost jobs under fair-share");
+        assert_eq!(a.order, "fair-share");
+        assert!(!a.user_shares.is_empty(), "{policy}: no usage charged");
+        let b = run(w.clone());
+        assert_eq!(a.fingerprint(), b.fingerprint(), "{policy} fair-share not reproducible");
+    }
+}
+
+/// Part 3: fair share actually redistributes — a user who has consumed
+/// heavily yields the machine to a light user, where arrival order
+/// would make the newcomer wait behind the hog's whole backlog.
+#[test]
+fn fairshare_prioritizes_light_users() {
+    use sst_sched::job::Job;
+    use sst_sched::sched::OrderKind;
+    use sst_sched::trace::Workload;
+    // 1 node x 4 cores. User 1 submits four machine-filling jobs at
+    // t=0..3; user 2 submits one at t=4. FCFS runs user 1's backlog
+    // first (user 2 starts at t=300); fair share lets user 2 in right
+    // after user 1's first job completes.
+    let jobs = || -> Vec<Job> {
+        let mut out: Vec<Job> = (0..4)
+            .map(|i| {
+                let mut j = Job::simple(i + 1, i, 4, 100);
+                j.user = 1;
+                j
+            })
+            .collect();
+        let mut late = Job::simple(9, 4, 4, 100);
+        late.user = 2;
+        out.push(late);
+        out
+    };
+    let wait9 = |r: &SimReport| {
+        r.completed.iter().find(|j| j.id == 9).unwrap().wait_time().unwrap().ticks()
+    };
+    let fcfs = run_policy(Workload::new("hog", jobs(), 1, 4), Policy::Fcfs);
+    let fair = Simulation::new(Workload::new("hog", jobs(), 1, 4), Policy::Fcfs)
+        .with_order(OrderKind::FairShare)
+        .with_fairshare_half_life(86_400)
+        .run(None);
+    assert!(
+        wait9(&fair) < wait9(&fcfs),
+        "fair share must cut the light user's wait: {} !< {}",
+        wait9(&fair),
+        wait9(&fcfs)
+    );
+    assert_eq!(fair.completed.len(), 5);
+    // The ledger knows both users.
+    assert!(fair.user_shares.iter().any(|s| s.user == 1));
+    assert!(fair.user_shares.iter().any(|s| s.user == 2));
+}
+
+/// Part 4: memory-aware planning is exactly inert when no job carries a
+/// memory demand — bit-identical fingerprints with the flag on and off
+/// (the lazy second dimension never materializes), the acceptance
+/// criterion for cores-only configurations.
+#[test]
+fn memory_awareness_is_inert_without_memory_demands() {
+    let w = SdscSp2Model::default().generate(600, 23).drop_infeasible();
+    let run = |memory_aware: bool| {
+        Simulation::new(w.clone(), Policy::FcfsBackfill)
+            .with_mem_per_node(4096)
+            .with_memory_aware(memory_aware)
+            .run(None)
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.fingerprint(), on.fingerprint(), "memory awareness changed a cores-only run");
+    assert!(on.mean_memory_utilization >= 0.0);
+}
+
+/// Part 5: with memory demands present, the memory-aware run completes
+/// everything, never over-plans aggregate memory (utilization bounded),
+/// and stays deterministic.
+#[test]
+fn memory_aware_runs_complete_and_bound_memory() {
+    let mut w = SdscSp2Model::default().generate(600, 29).drop_infeasible();
+    // Attach synthetic memory demands: heavier for wider jobs, never
+    // exceeding the per-node share the placement needs.
+    for j in w.jobs.iter_mut() {
+        j.memory_mb = (j.cores % 8 + 1) * 400;
+    }
+    let run = || {
+        Simulation::new(w.clone(), Policy::ConservativeBackfill)
+            .with_mem_per_node(16_384)
+            .with_memory_aware(true)
+            .run(None)
+    };
+    let r = run();
+    assert_eq!(r.completed.len(), w.jobs.len(), "memory-aware run lost jobs");
+    for &(_, u) in r.memory_utilization.points() {
+        assert!((0.0..=1.0).contains(&u), "memory utilization {u} out of range");
+    }
+    assert!(r.mean_memory_utilization > 0.0, "memory series never recorded");
+    assert_eq!(r.fingerprint(), run().fingerprint());
 }
 
 /// The planning horizon bounds timeline fidelity, not correctness:
@@ -333,6 +478,31 @@ fn cli_run_and_trace_info() {
         .unwrap();
     assert!(out.status.success());
     assert!(String::from_utf8_lossy(&out.stdout).contains("128 nodes"));
+}
+
+#[test]
+fn cli_order_and_memory_flags() {
+    let exe = env!("CARGO_BIN_EXE_sst-sched");
+    let out = std::process::Command::new(exe)
+        .args([
+            "run", "--workload", "sdsc-sp2", "--jobs", "300", "--policy", "cons-backfill",
+            "--order", "fair-share", "--half-life", "7200",
+            "--mem", "4096", "--memory-aware",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("queue order       fair-share"), "{text}");
+    assert!(text.contains("fair-share users"), "{text}");
+
+    // Unknown order values fail loudly and name the valid set.
+    let out = std::process::Command::new(exe)
+        .args(["run", "--workload", "das2", "--jobs", "10", "--order", "random"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("fair-share"));
 }
 
 #[test]

@@ -269,10 +269,14 @@ fn failed_node_kills_only_its_occupants() {
 
 #[test]
 fn reservation_holds_nodes_and_releases_them() {
-    // Empty workload except one long job; reserve both nodes mid-run
-    // under checkpoint preemption: the job must be evicted, wait out the
-    // reservation, then finish — and charge exactly one overhead.
-    let job = Job::simple(1, 0, 8, 2_000);
+    // One long job; reserve both nodes mid-run under checkpoint
+    // preemption: the job must be evicted, wait out the reservation,
+    // then finish — and charge exactly one overhead. The job *under-
+    // estimates* its runtime (400 of 2000): with an honest estimate the
+    // reservation-aware admission would hold it back until the window
+    // passes (see fcfs_head_waits_for_future_reservation), so the
+    // mid-run eviction path is exactly the estimate-overrun path.
+    let job = Job::with_estimate(1, 0, 8, 2_000, 400);
     let w = Workload::new("resv", vec![job], 2, 4);
     let cfg = PreemptionConfig {
         mode: PreemptionMode::Checkpoint,
@@ -300,7 +304,9 @@ fn reservation_holds_nodes_and_releases_them() {
 fn degraded_reservation_drains_without_preemption() {
     // Same scenario, preemption off: the job keeps running (drains) and
     // the reservation is recorded as degraded; the job is never killed.
-    let job = Job::simple(1, 0, 8, 2_000);
+    // Again an under-estimate — honestly-estimated heads now wait out
+    // declared reservation windows instead of running into them.
+    let job = Job::with_estimate(1, 0, 8, 2_000, 400);
     let w = Workload::new("resv-drain", vec![job], 2, 4);
     let resv = vec![ReservationSpec { start: 500, duration: 1_000, nodes: 2 }];
     let r = Simulation::new(w, Policy::Fcfs).with_reservations(resv).run(None);

@@ -11,8 +11,16 @@
 //!   conservative scheduler used before the refactor, on random release
 //!   sets and after random reservations.
 
+//! Multi-dimension additions (ResourceVector redesign): per-dimension
+//! incremental == rebuild, vector hold/release exact inverses, and the
+//! cores-only path bit-identical to the scalar profile. Plus the
+//! fair-share ordering properties (determinism, monotone decay,
+//! starvation recovery) — the other half of the planning-API redesign.
+
 use sst_sched::core::rng::Rng;
-use sst_sched::resources::AvailabilityProfile;
+use sst_sched::core::time::SimTime;
+use sst_sched::resources::{AvailabilityProfile, ResourceVector};
+use sst_sched::sched::{FairShare, QueueOrder};
 use sst_sched::util::prop::check_n;
 
 // ---------------------------------------------------------------------
@@ -241,6 +249,249 @@ fn advance_preserves_future_reads() {
                     q.free_at(t)
                 ));
             }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Multi-dimension properties (ResourceVector redesign)
+// ---------------------------------------------------------------------
+
+fn random_vector_jobs(rng: &mut Rng) -> Vec<(u64, u64, ResourceVector)> {
+    (0..rng.below(16))
+        .map(|_| {
+            let s = rng.range(0, 1_000);
+            let e = s + rng.range(1, 500);
+            // Roughly half the jobs carry memory (the mixed case).
+            let mem = if rng.below(2) == 0 { rng.range(1, 2_000) } else { 0 };
+            (s, e, ResourceVector::new(rng.range(1, 8), mem))
+        })
+        .collect()
+}
+
+#[test]
+fn per_dimension_incremental_equals_rebuild() {
+    check_n("vector incremental == rebuild", 300, |rng| {
+        let free = ResourceVector::new(rng.range(8, 64), rng.range(4_000, 64_000));
+        let jobs = random_vector_jobs(rng);
+        // Incremental: lay each vector hold on its own.
+        let mut inc = AvailabilityProfile::new_v(0, free, free);
+        for &(s, e, d) in &jobs {
+            inc.hold_v(s, e, d);
+        }
+        // From scratch: fold all per-dimension deltas at once (resync).
+        let mut deltas = Vec::new();
+        let mut mem_deltas = Vec::new();
+        for &(s, e, d) in &jobs {
+            deltas.push((s, -(d.cores as i64)));
+            deltas.push((e, d.cores as i64));
+            if d.memory_mb > 0 {
+                mem_deltas.push((s, -(d.memory_mb as i64)));
+                mem_deltas.push((e, d.memory_mb as i64));
+            }
+        }
+        let mut scratch = AvailabilityProfile::new_v(0, free, free);
+        scratch.rebuild_v(0, free, deltas, mem_deltas);
+        if inc.points() != scratch.points() {
+            return Err(format!(
+                "cores dim: incremental {:?} != rebuild {:?}",
+                inc.points(),
+                scratch.points()
+            ));
+        }
+        if inc.mem_points() != scratch.mem_points() {
+            return Err(format!(
+                "mem dim: incremental {:?} != rebuild {:?} (jobs {jobs:?})",
+                inc.mem_points(),
+                scratch.mem_points()
+            ));
+        }
+        if !inc.check_invariants() {
+            return Err("invariants broken".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn vector_hold_release_pairs_are_exact_inverses() {
+    check_n("vector hold/release inverse", 300, |rng| {
+        let free = ResourceVector::new(rng.range(4, 64), rng.range(2_000, 32_000));
+        let base = AvailabilityProfile::new_v(0, free, free);
+        let mut p = base.clone();
+        let mut ops = random_vector_jobs(rng);
+        for &(s, e, d) in &ops {
+            p.hold_v(s, e, d);
+        }
+        // Release in shuffled order: the algebra must not care.
+        rng.shuffle(&mut ops);
+        for &(s, e, d) in &ops {
+            p.release_v(s, e, d);
+        }
+        if p.points() != base.points() {
+            return Err(format!("cores dim did not return to base: {:?}", p.points()));
+        }
+        // The memory dimension (if it ever materialized) must read flat
+        // at the base value everywhere.
+        for _ in 0..16 {
+            let t = rng.range(0, 3_000);
+            if p.free_memory_at(t) != free.memory_mb {
+                return Err(format!(
+                    "mem dim did not return to base at t={t}: {} != {}",
+                    p.free_memory_at(t),
+                    free.memory_mb
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cores_only_vector_path_is_bit_identical_to_scalar() {
+    check_n("cores-only _v == scalar", 300, |rng| {
+        let free = rng.range(8, 64);
+        let ops: Vec<(u64, u64, u64, bool)> = (0..rng.below(20))
+            .map(|_| {
+                let s = rng.range(0, 1_500);
+                (s, s + rng.range(1, 600), rng.range(1, 12), rng.below(2) == 0)
+            })
+            .collect();
+        let mut scalar = AvailabilityProfile::new(0, free, free);
+        // The vector profile TRACKS memory, but the workload carries no
+        // memory demands — the lazy dimension must never materialize and
+        // the cores dimension must be byte-identical.
+        let mut vector = AvailabilityProfile::new_v(
+            0,
+            ResourceVector::new(free, 100_000),
+            ResourceVector::new(free, 100_000),
+        );
+        for &(s, e, c, hold) in &ops {
+            if hold {
+                scalar.hold(s, e, c);
+                vector.hold_v(s, e, ResourceVector::cores_only(c));
+            } else {
+                scalar.release(s, e, c);
+                vector.release_v(s, e, ResourceVector::cores_only(c));
+            }
+        }
+        if vector.has_memory_dimension() {
+            return Err("memory dimension materialized on a cores-only workload".into());
+        }
+        if scalar.points() != vector.points() {
+            return Err(format!(
+                "cores dim diverged: scalar {:?} vector {:?}",
+                scalar.points(),
+                vector.points()
+            ));
+        }
+        for _ in 0..16 {
+            let from = rng.range(0, 2_000);
+            let cores = rng.range(1, free + 4);
+            let dur = rng.range(1, 400);
+            let d = ResourceVector::cores_only(cores);
+            if scalar.earliest_slot(from, cores, dur) != vector.earliest_slot_v(from, d, dur) {
+                return Err("earliest_slot diverged on cores-only demand".into());
+            }
+            if scalar.can_place(from, dur, cores) != vector.can_place_v(from, dur, d) {
+                return Err("can_place diverged on cores-only demand".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Fair-share ordering properties (queue-ordering seam)
+// ---------------------------------------------------------------------
+
+#[test]
+fn fairshare_is_deterministic_and_order_preserving() {
+    check_n("fair-share determinism", 200, |rng| {
+        let half_life = rng.range(100, 10_000);
+        let mut a = FairShare::new(half_life);
+        let mut b = FairShare::new(half_life);
+        let events: Vec<(u32, u32, u64, u64, u64)> = (0..rng.range(1, 30))
+            .map(|_| {
+                (
+                    rng.below(6) as u32,
+                    rng.below(3) as u32,
+                    rng.range(1, 32),
+                    rng.range(1, 5_000),
+                    rng.range(0, 50_000),
+                )
+            })
+            .collect();
+        let mut times: Vec<u64> = events.iter().map(|e| e.4).collect();
+        times.sort_unstable();
+        for (&(user, group, cores, secs, _), &t) in events.iter().zip(&times) {
+            a.record_usage(user, group, cores, secs, SimTime(t));
+            b.record_usage(user, group, cores, secs, SimTime(t));
+        }
+        let now = SimTime(times.last().copied().unwrap_or(0) + rng.range(0, 10_000));
+        // Identical histories => identical snapshots, bit for bit.
+        let (sa, sb) = (a.usage_snapshot(now), b.usage_snapshot(now));
+        if sa.len() != sb.len()
+            || sa.iter().zip(&sb).any(|(x, y)| {
+                x.user != y.user || x.group != y.group || x.usage.to_bits() != y.usage.to_bits()
+            })
+        {
+            return Err("identical usage histories diverged".into());
+        }
+        // Decay never changes the relative order of two users' usage
+        // (same decay factor law), so fair-share never flip-flops
+        // between rounds without new usage.
+        // Stay within ~20 half-lives so values keep full float precision
+        // (deeper decay drifts into subnormals where ordering noise is
+        // expected and meaningless).
+        let later = SimTime(now.ticks() + rng.range(1, 20 * half_life));
+        let s2 = a.usage_snapshot(later);
+        for (x, y) in sa.iter().zip(sa.iter().skip(1)) {
+            // Decay multiplies every user by the same 2^{-t/h} law, so
+            // clearly-separated usages can never swap sides (near-ties
+            // are excused: float rounding may order them either way).
+            let clearly_apart = (x.usage - y.usage).abs()
+                > 1e-9 * x.usage.abs().max(y.usage.abs()).max(1.0);
+            let x2 = s2.iter().find(|s| (s.user, s.group) == (x.user, x.group)).unwrap();
+            let y2 = s2.iter().find(|s| (s.user, s.group) == (y.user, y.group)).unwrap();
+            if clearly_apart && (x.usage < y.usage) != (x2.usage <= y2.usage) {
+                return Err(format!(
+                    "relative order flipped under pure decay: {x:?}/{y:?} -> {x2:?}/{y2:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fairshare_starvation_decay_recovers_heavy_users() {
+    check_n("fair-share starvation decay", 200, |rng| {
+        let half_life = rng.range(100, 5_000);
+        let mut fs = FairShare::new(half_life);
+        let charged = rng.range(1, 64) * rng.range(1, 3_600);
+        fs.record_usage(1, 0, 1, charged, SimTime(0));
+        // Decayed usage is monotone non-increasing in time...
+        let mut last = f64::INFINITY;
+        for k in 0..12 {
+            let u = fs.effective_usage(1, 0, SimTime(k * half_life));
+            if u > last + 1e-9 {
+                return Err(format!("usage rose under decay: {u} > {last}"));
+            }
+            last = u;
+        }
+        // ...halves every half-life...
+        let one = fs.effective_usage(1, 0, SimTime(half_life));
+        let expect = charged as f64 / 2.0;
+        if (one - expect).abs() > 1e-6 * expect.max(1.0) {
+            return Err(format!("half-life decay wrong: {one} vs {expect}"));
+        }
+        // ...and after 60 half-lives the penalty is gone for practical
+        // purposes: the once-greedy user cannot be starved forever.
+        let cold = fs.effective_usage(1, 0, SimTime(60 * half_life));
+        if cold > charged as f64 * 1e-15 {
+            return Err(format!("penalty never fades: {cold}"));
         }
         Ok(())
     });
