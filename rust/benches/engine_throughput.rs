@@ -1,235 +1,18 @@
 //! Bench: core engine + simulator throughput (events/second) — the L3
 //! hot-path numbers tracked in EXPERIMENTS.md §Perf — plus the
-//! scheduling-round planning cost at deep queues (availability-timeline
-//! refactor): incremental shared profile vs rebuild-per-round baseline.
+//! scheduling-round planning cost at deep queues and the streamed
+//! million-job ingestion case.
+//!
+//! The suite itself lives in `sst_sched::harness::bench_suite` so the
+//! `sst-sched bench` subcommand can run the same cases and emit the
+//! machine-readable `BENCH_engine.json` the CI perf trajectory consumes;
+//! this binary stays the classic `cargo bench` entry point.
 //!
 //! `--smoke` (or SMOKE=1) runs small sizes with one iteration so CI can
-//! surface profile-regression perf breakage without multi-second runs.
-
-use sst_sched::core::time::SimTime;
-use sst_sched::baseline::run_baseline;
-use sst_sched::job::{Job, WaitQueue};
-use sst_sched::resources::{AvailabilityProfile, Cluster, ResourceVector};
-use sst_sched::sched::{ArrivalOrder, ConservativeScheduler, Policy, RunningJob, SchedInput, Scheduler};
-use sst_sched::sim::run_policy;
-use sst_sched::trace::{Das2Model, SdscSp2Model};
-use sst_sched::util::bench::{section, Bench};
-
-/// Scheduling-round planning cost at a deep queue: `queued` waiting jobs
-/// on a fully busy machine with `running` release points. Measures one
-/// conservative-backfill round (the planning-heaviest policy: one slot
-/// search + reservation per queued job).
-///
-/// `incremental` clones the maintained profile per round (what the
-/// simulation core does now); the baseline re-sorts the raw release
-/// vector and folds it into a fresh profile every round (what every
-/// round paid before the refactor).
-fn sched_round_cases(b: &mut Bench, queued: usize, running: usize) {
-    let nodes = 512usize;
-    let cores_per_node = 16u64;
-    let mut cluster = Cluster::homogeneous(nodes, cores_per_node, 0);
-    let total = cluster.total_cores();
-    // Fill the machine completely so no candidate can start: rounds pay
-    // pure planning cost, and the cluster needs no reset between runs.
-    let mut running_jobs: Vec<RunningJob> = Vec::with_capacity(running);
-    let cores_each = total / running as u64;
-    for i in 0..running {
-        let j = Job::simple(1_000_000 + i as u64, 0, cores_each.max(1), 10);
-        if let Some(a) = cluster.allocate(&j, sst_sched::resources::AllocPolicy::FirstFit) {
-            running_jobs.push(RunningJob {
-                id: j.id,
-                cores: a.cores(),
-                est_end: SimTime(100 + (i as u64 % 97) * 50),
-                start: SimTime(0),
-                priority: 0,
-            });
-        }
-    }
-    // Mop up any remainder so free_cores == 0.
-    while cluster.free_cores() > 0 {
-        let j = Job::simple(2_000_000, 0, cluster.free_cores(), 10);
-        let a = cluster.allocate(&j, sst_sched::resources::AllocPolicy::FirstFit).unwrap();
-        running_jobs.push(RunningJob {
-            id: j.id,
-            cores: a.cores(),
-            est_end: SimTime(5_000),
-            start: SimTime(0),
-            priority: 0,
-        });
-    }
-    let mut queue = WaitQueue::new();
-    for i in 0..queued {
-        let i = i as u64;
-        queue.push(Job::with_estimate(i, 0, 1 + (i % 64), 100 + i % 900, 100 + i % 900));
-    }
-    let releases: Vec<(u64, u64)> =
-        running_jobs.iter().map(|r| (r.est_end.ticks(), r.cores)).collect();
-    let maintained =
-        AvailabilityProfile::from_releases(0, cluster.free_cores(), total, &releases);
-
-    let label = format!("round/cons-{queued}q-{running}r/incremental");
-    {
-        let mut cluster = cluster.clone();
-        let queue = &queue;
-        let running_jobs = &running_jobs;
-        let maintained = &maintained;
-        b.case(&label, move || {
-            // What a dispatch round costs now: clone the maintained
-            // timeline, plan every queued job onto it.
-            let input = SchedInput {
-                now: SimTime(0),
-                queue,
-                running: running_jobs,
-                profile: maintained,
-                order: &ArrivalOrder,
-            };
-            ConservativeScheduler::new().schedule(&input, &mut cluster).len()
-        });
-    }
-    let label = format!("round/cons-{queued}q-{running}r/rebuild-per-round");
-    {
-        let mut cluster = cluster.clone();
-        let queue = &queue;
-        let running_jobs = &running_jobs;
-        let releases = &releases;
-        b.case(&label, move || {
-            // What a dispatch round cost before: gather + sort the raw
-            // release vector and fold a fresh profile, then plan.
-            let rebuilt = AvailabilityProfile::from_releases(
-                0,
-                cluster.free_cores(),
-                total,
-                releases,
-            );
-            let input = SchedInput {
-                now: SimTime(0),
-                queue,
-                running: running_jobs,
-                profile: &rebuilt,
-                order: &ArrivalOrder,
-            };
-            ConservativeScheduler::new().schedule(&input, &mut cluster).len()
-        });
-    }
-}
-
-/// Memory-constrained scheduling round (multi-resource planning API),
-/// plus the lazy-materialization pin: a memory-*tracking* profile over a
-/// trace that carries no memory demands must never materialize its
-/// memory timeline — the cores-only workload pays (near) zero for the
-/// second dimension.
-fn sched_round_mem_cases(b: &mut Bench, queued: usize) {
-    let nodes = 512usize;
-    let cores_per_node = 16u64;
-    let mem_per_node = 4096u64;
-    let cluster = Cluster::homogeneous(nodes, cores_per_node, mem_per_node);
-    let total = ResourceVector::new(cluster.total_cores(), cluster.total_memory_mb());
-
-    let queue_of = |mem: bool| {
-        let mut q = WaitQueue::new();
-        for i in 0..queued {
-            let i = i as u64;
-            let mut j = Job::with_estimate(i, 0, 1 + (i % 64), 100 + i % 900, 100 + i % 900);
-            if mem {
-                j.memory_mb = 256 + (i % 16) * 256;
-            }
-            q.push(j);
-        }
-        q
-    };
-
-    // Shared setup: the whole machine planned busy until t=500 (cores +
-    // memory for the memory-carrying variant), so every slot lands in
-    // the future — rounds pay pure planning cost and never mutate the
-    // cluster between iterations.
-    let profile_of = |mem: bool| {
-        let mut p = AvailabilityProfile::new_v(
-            0,
-            ResourceVector::new(total.cores, total.memory_mb),
-            total,
-        );
-        p.hold_v(
-            0,
-            500,
-            ResourceVector::new(total.cores, if mem { total.memory_mb } else { 0 }),
-        );
-        p
-    };
-
-    // Lazy pin (asserted outside the timed loop): no memory demands ->
-    // no memory timeline, even on a memory-tracking profile.
-    assert!(
-        !profile_of(false).has_memory_dimension(),
-        "cores-only round must not materialize the memory dimension"
-    );
-    assert!(profile_of(true).has_memory_dimension());
-
-    for (label, mem) in [("cores-only", false), ("memory", true)] {
-        let mut cluster = cluster.clone();
-        let queue = queue_of(mem);
-        let profile = profile_of(mem);
-        let label = format!("round/cons-{queued}q-mem/{label}");
-        b.case(&label, move || {
-            let input = SchedInput {
-                now: SimTime(0),
-                queue: &queue,
-                running: &[],
-                profile: &profile,
-                order: &ArrivalOrder,
-            };
-            ConservativeScheduler::new().schedule(&input, &mut cluster).len()
-        });
-    }
-}
+//! surface perf breakage without multi-second runs.
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke")
         || std::env::var("SMOKE").map(|v| v == "1").unwrap_or(false);
-    let (das2_n, sp2_n, runs) = if smoke { (5_000, 3_000, 1) } else { (100_000, 50_000, 5) };
-
-    section("event-driven simulator throughput");
-    let das2 = Das2Model::default().generate(das2_n, 1).drop_infeasible();
-    let sp2 = SdscSp2Model::default().generate(sp2_n, 1).drop_infeasible();
-    let mut b = Bench::new(if smoke { 0 } else { 1 }, runs);
-
-    let w = das2.clone();
-    let r = b.case("sim/das2/fcfs", move || run_policy(w.clone(), Policy::Fcfs).events);
-    let median = r.median();
-    let events = run_policy(das2.clone(), Policy::Fcfs).events;
-    println!(
-        "  -> {:.2} M events/s",
-        events as f64 / median.as_secs_f64() / 1e6
-    );
-
-    let w = das2.clone();
-    b.case("sim/das2/backfill", move || {
-        run_policy(w.clone(), Policy::FcfsBackfill).events
-    });
-    let w = das2.clone();
-    b.case("sim/das2/cons-backfill", move || {
-        run_policy(w.clone(), Policy::ConservativeBackfill).events
-    });
-    let w = sp2.clone();
-    b.case("sim/sp2/backfill", move || {
-        run_policy(w.clone(), Policy::FcfsBackfill).events
-    });
-
-    section("scheduling-round planning cost (availability profile)");
-    if smoke {
-        sched_round_cases(&mut b, 2_000, 200);
-    } else {
-        sched_round_cases(&mut b, 10_000, 1_000);
-        sched_round_cases(&mut b, 10_000, 5_000);
-    }
-
-    section("memory-constrained round (lazy second dimension)");
-    sched_round_mem_cases(&mut b, if smoke { 2_000 } else { 10_000 });
-
-    section("baseline (CQsim-like) for comparison");
-    let w = das2.clone();
-    b.case("baseline/das2/fcfs", move || run_baseline(&w, Policy::Fcfs).events);
-
-    section("workload generation");
-    b.case("gen/das2", move || Das2Model::default().generate(das2_n, 1).jobs.len());
-    b.case("gen/sp2", move || SdscSp2Model::default().generate(sp2_n, 1).jobs.len());
+    sst_sched::harness::bench_suite::engine_throughput_suite(smoke);
 }

@@ -5,7 +5,7 @@
 
 use crate::core::time::SimDuration;
 use crate::sched::{OrderKind, Policy, PreemptionConfig};
-use crate::sim::{FaultConfig, ReservationSpec, DEFAULT_FAIRSHARE_HALF_LIFE};
+use crate::sim::{FaultConfig, Horizon, ReservationSpec, DEFAULT_FAIRSHARE_HALF_LIFE};
 use crate::trace::{Das2Model, SdscSp2Model, Workload};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -64,9 +64,11 @@ pub struct ExperimentConfig {
     pub priority_bands: u8,
     /// Advance reservations (`reservations[]`).
     pub reservations: Vec<ReservationSpec>,
-    /// Availability-timeline planning horizon in ticks
-    /// (`planning.horizon`); 0 = unlimited (exact timeline).
-    pub planning_horizon: u64,
+    /// Availability-timeline planning-horizon policy
+    /// (`planning.horizon`): a tick count (0 = unlimited, exact
+    /// timeline), `"exact"`, or `"auto"` (clamp derived from live queue
+    /// depth and median runtime estimate).
+    pub planning_horizon: Horizon,
 }
 
 impl Default for ExperimentConfig {
@@ -90,7 +92,7 @@ impl Default for ExperimentConfig {
             preemption: PreemptionConfig::default(),
             priority_bands: 0,
             reservations: Vec::new(),
-            planning_horizon: 0,
+            planning_horizon: Horizon::Exact,
         }
     }
 }
@@ -173,7 +175,15 @@ impl ExperimentConfig {
             }
         }
         if let Some(pl) = v.get("planning") {
-            cfg.planning_horizon = pl.get_u64_or("horizon", cfg.planning_horizon);
+            if let Some(h) = pl.get("horizon") {
+                cfg.planning_horizon = match h {
+                    Json::Num(_) => Horizon::fixed(h.as_u64().context(
+                        "planning.horizon must be a non-negative integer, \"auto\" or \"exact\"",
+                    )?),
+                    Json::Str(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
+                    _ => bail!("planning.horizon must be a number or \"auto\"/\"exact\""),
+                };
+            }
         }
         if let Some(pj) = v.get("preemption") {
             cfg.preemption.mode = pj
@@ -270,11 +280,14 @@ impl ExperimentConfig {
             }
             top.push(("faults", Json::obj(fj)));
         }
-        if self.planning_horizon > 0 {
-            top.push((
-                "planning",
-                Json::obj(vec![("horizon", Json::num(self.planning_horizon as f64))]),
-            ));
+        match self.planning_horizon {
+            Horizon::Exact => {}
+            Horizon::Fixed(t) => {
+                top.push(("planning", Json::obj(vec![("horizon", Json::num(t as f64))])));
+            }
+            Horizon::Auto => {
+                top.push(("planning", Json::obj(vec![("horizon", Json::str("auto"))])));
+            }
         }
         if self.fairshare_half_life != DEFAULT_FAIRSHARE_HALF_LIFE {
             top.push((
@@ -483,7 +496,7 @@ mod tests {
         assert_eq!(c.faults.until, Some(500000));
         assert_eq!(c.faults.distribution, crate::sim::FaultDistribution::Weibull);
         assert_eq!(c.faults.shape, 0.8);
-        assert_eq!(c.planning_horizon, 86400);
+        assert_eq!(c.planning_horizon, Horizon::Fixed(86400));
         assert_eq!(c.preemption.mode, crate::sched::PreemptionMode::Checkpoint);
         assert_eq!(c.preemption.checkpoint_overhead, SimDuration(60));
         assert_eq!(c.preemption.restart_overhead, SimDuration(30));
@@ -514,7 +527,7 @@ mod tests {
         let c = ExperimentConfig::parse(r#"{"faults": {"mtbf": 10, "mttr": 5}}"#).unwrap();
         assert_eq!(c.faults.distribution, crate::sim::FaultDistribution::Exp);
         assert_eq!(c.faults.shape, 1.0);
-        assert_eq!(c.planning_horizon, 0, "horizon defaults to unlimited");
+        assert_eq!(c.planning_horizon, Horizon::Exact, "horizon defaults to unlimited");
         assert!(ExperimentConfig::parse(
             r#"{"faults": {"mtbf": 10, "mttr": 5, "shape": 0}}"#
         )
@@ -527,6 +540,21 @@ mod tests {
             r#"{"faults": {"mtbf": 10, "mttr": 5, "distribution": "pareto"}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn planning_horizon_accepts_auto_and_exact() {
+        let auto = ExperimentConfig::parse(r#"{"planning": {"horizon": "auto"}}"#).unwrap();
+        assert_eq!(auto.planning_horizon, Horizon::Auto);
+        let back = ExperimentConfig::parse(&auto.to_json().to_pretty()).unwrap();
+        assert_eq!(back.planning_horizon, Horizon::Auto, "auto must survive a roundtrip");
+        let exact = ExperimentConfig::parse(r#"{"planning": {"horizon": "exact"}}"#).unwrap();
+        assert_eq!(exact.planning_horizon, Horizon::Exact);
+        // A zero tick count normalizes to exact planning.
+        let zero = ExperimentConfig::parse(r#"{"planning": {"horizon": 0}}"#).unwrap();
+        assert_eq!(zero.planning_horizon, Horizon::Exact);
+        assert!(ExperimentConfig::parse(r#"{"planning": {"horizon": "soonish"}}"#).is_err());
+        assert!(ExperimentConfig::parse(r#"{"planning": {"horizon": -5}}"#).is_err());
     }
 
     #[test]

@@ -1,0 +1,303 @@
+//! The engine-throughput benchmark suite, as a library function so two
+//! entry points share one set of cases:
+//!
+//! * `cargo bench --bench engine_throughput` — the classic, human-read
+//!   bench binary;
+//! * `sst-sched bench [--smoke] [--out BENCH_engine.json]` — the same
+//!   suite, plus a machine-readable dump ([`crate::util::bench::Bench::
+//!   to_json`]) that CI uploads on every run and the perf trajectory
+//!   compares against the committed baseline.
+//!
+//! `--smoke` runs small sizes with one iteration so CI surfaces perf
+//! breakage without multi-second runs; the full suite adds the
+//! million-job streamed-SWF ingestion case (constant-memory scale path).
+
+use crate::baseline::run_baseline;
+use crate::core::time::SimTime;
+use crate::job::{Job, WaitQueue};
+use crate::resources::{AvailabilityProfile, Cluster, ResourceVector};
+use crate::sched::{
+    ArrivalOrder, ConservativeScheduler, Policy, RoundScratch, RunningJob, SchedInput, Scheduler,
+};
+use crate::sim::{run_policy, Simulation};
+use crate::trace::{stream_trace_file, Das2Model, SdscSp2Model, Workload};
+use crate::util::bench::{section, Bench};
+use std::cell::RefCell;
+use std::io::Write as _;
+
+/// Scheduling-round planning cost at a deep queue: `queued` waiting jobs
+/// on a fully busy machine with `running` release points. Measures one
+/// conservative-backfill round (the planning-heaviest policy: one slot
+/// search + reservation per queued job).
+///
+/// `incremental` reuses the maintained profile through the round scratch
+/// (what the simulation core does now — allocation-free rounds); the
+/// baseline re-sorts the raw release vector and folds it into a fresh
+/// profile every round (what every round paid before the refactor).
+fn sched_round_cases(b: &mut Bench, queued: usize, running: usize) {
+    let nodes = 512usize;
+    let cores_per_node = 16u64;
+    let mut cluster = Cluster::homogeneous(nodes, cores_per_node, 0);
+    let total = cluster.total_cores();
+    // Fill the machine completely so no candidate can start: rounds pay
+    // pure planning cost, and the cluster needs no reset between runs.
+    let mut running_jobs: Vec<RunningJob> = Vec::with_capacity(running);
+    let cores_each = total / running as u64;
+    for i in 0..running {
+        let j = Job::simple(1_000_000 + i as u64, 0, cores_each.max(1), 10);
+        if let Some(a) = cluster.allocate(&j, crate::resources::AllocPolicy::FirstFit) {
+            running_jobs.push(RunningJob {
+                id: j.id,
+                cores: a.cores(),
+                est_end: SimTime(100 + (i as u64 % 97) * 50),
+                start: SimTime(0),
+                priority: 0,
+            });
+        }
+    }
+    // Mop up any remainder so free_cores == 0.
+    while cluster.free_cores() > 0 {
+        let j = Job::simple(2_000_000, 0, cluster.free_cores(), 10);
+        let a = cluster.allocate(&j, crate::resources::AllocPolicy::FirstFit).unwrap();
+        running_jobs.push(RunningJob {
+            id: j.id,
+            cores: a.cores(),
+            est_end: SimTime(5_000),
+            start: SimTime(0),
+            priority: 0,
+        });
+    }
+    let mut queue = WaitQueue::new();
+    for i in 0..queued {
+        let i = i as u64;
+        queue.push(Job::with_estimate(i, 0, 1 + (i % 64), 100 + i % 900, 100 + i % 900));
+    }
+    let releases: Vec<(u64, u64)> =
+        running_jobs.iter().map(|r| (r.est_end.ticks(), r.cores)).collect();
+    let maintained =
+        AvailabilityProfile::from_releases(0, cluster.free_cores(), total, &releases);
+
+    let label = format!("round/cons-{queued}q-{running}r/incremental");
+    {
+        let mut cluster = cluster.clone();
+        let queue = &queue;
+        let running_jobs = &running_jobs;
+        let maintained = &maintained;
+        // The driver-owned scratch: after the first round, planning runs
+        // allocation-free off these reused buffers.
+        let scratch = RefCell::new(RoundScratch::default());
+        b.case(&label, move || {
+            // What a dispatch round costs now: overwrite the scratch
+            // plan from the maintained timeline, plan every queued job.
+            let input = SchedInput {
+                now: SimTime(0),
+                queue,
+                running: running_jobs,
+                profile: maintained,
+                order: &ArrivalOrder,
+                scratch: Some(&scratch),
+            };
+            ConservativeScheduler::new().schedule(&input, &mut cluster).len()
+        });
+    }
+    let label = format!("round/cons-{queued}q-{running}r/rebuild-per-round");
+    {
+        let mut cluster = cluster.clone();
+        let queue = &queue;
+        let running_jobs = &running_jobs;
+        let releases = &releases;
+        b.case(&label, move || {
+            // What a dispatch round cost before: gather + sort the raw
+            // release vector and fold a fresh profile, then plan.
+            let rebuilt = AvailabilityProfile::from_releases(
+                0,
+                cluster.free_cores(),
+                total,
+                releases,
+            );
+            let input = SchedInput {
+                now: SimTime(0),
+                queue,
+                running: running_jobs,
+                profile: &rebuilt,
+                order: &ArrivalOrder,
+                scratch: None,
+            };
+            ConservativeScheduler::new().schedule(&input, &mut cluster).len()
+        });
+    }
+}
+
+/// Memory-constrained scheduling round (multi-resource planning API),
+/// plus the lazy-materialization pin: a memory-*tracking* profile over a
+/// trace that carries no memory demands must never materialize its
+/// memory timeline — the cores-only workload pays (near) zero for the
+/// second dimension.
+fn sched_round_mem_cases(b: &mut Bench, queued: usize) {
+    let nodes = 512usize;
+    let cores_per_node = 16u64;
+    let mem_per_node = 4096u64;
+    let cluster = Cluster::homogeneous(nodes, cores_per_node, mem_per_node);
+    let total = ResourceVector::new(cluster.total_cores(), cluster.total_memory_mb());
+
+    let queue_of = |mem: bool| {
+        let mut q = WaitQueue::new();
+        for i in 0..queued {
+            let i = i as u64;
+            let mut j = Job::with_estimate(i, 0, 1 + (i % 64), 100 + i % 900, 100 + i % 900);
+            if mem {
+                j.memory_mb = 256 + (i % 16) * 256;
+            }
+            q.push(j);
+        }
+        q
+    };
+
+    // Shared setup: the whole machine planned busy until t=500 (cores +
+    // memory for the memory-carrying variant), so every slot lands in
+    // the future — rounds pay pure planning cost and never mutate the
+    // cluster between iterations.
+    let profile_of = |mem: bool| {
+        let mut p = AvailabilityProfile::new_v(
+            0,
+            ResourceVector::new(total.cores, total.memory_mb),
+            total,
+        );
+        p.hold_v(
+            0,
+            500,
+            ResourceVector::new(total.cores, if mem { total.memory_mb } else { 0 }),
+        );
+        p
+    };
+
+    // Lazy pin (asserted outside the timed loop): no memory demands ->
+    // no memory timeline, even on a memory-tracking profile.
+    assert!(
+        !profile_of(false).has_memory_dimension(),
+        "cores-only round must not materialize the memory dimension"
+    );
+    assert!(profile_of(true).has_memory_dimension());
+
+    for (label, mem) in [("cores-only", false), ("memory", true)] {
+        let mut cluster = cluster.clone();
+        let queue = queue_of(mem);
+        let profile = profile_of(mem);
+        let scratch = RefCell::new(RoundScratch::default());
+        let label = format!("round/cons-{queued}q-mem/{label}");
+        b.case(&label, move || {
+            let input = SchedInput {
+                now: SimTime(0),
+                queue: &queue,
+                running: &[],
+                profile: &profile,
+                order: &ArrivalOrder,
+                scratch: Some(&scratch),
+            };
+            ConservativeScheduler::new().schedule(&input, &mut cluster).len()
+        });
+    }
+}
+
+/// Streamed-SWF ingestion at scale: write `n` synthetic jobs as SWF to a
+/// temp file line by line (never materializing a `Vec<Job>` on either
+/// side), then run the simulator off a `JobStream` with per-job record
+/// retention off — peak memory stays O(active jobs) regardless of `n`.
+/// The non-smoke suite runs this at one million jobs.
+fn streamed_swf_case(b: &mut Bench, n: usize) {
+    let path = std::env::temp_dir().join(format!("sst_sched_bench_stream_{n}.swf"));
+    {
+        let f = std::fs::File::create(&path).expect("create bench trace");
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "; synthetic streamed-ingestion bench trace ({n} jobs)").unwrap();
+        let mut submit = 0u64;
+        for i in 0..n as u64 {
+            submit += i % 7; // bursty-ish, nondecreasing arrivals
+            let cores = 1 + (i % 16);
+            let run = 60 + (i % 97) * 30;
+            let est = run + (i % 5) * 60;
+            writeln!(
+                w,
+                "{} {} -1 {} {} -1 -1 {} {} -1 1 {} {} -1 -1 -1 -1 -1",
+                i + 1,
+                submit,
+                run,
+                cores,
+                cores,
+                est,
+                i % 100,
+                i % 10
+            )
+            .unwrap();
+        }
+    }
+    let label = format!("stream/swf-{n}-jobs/fcfs");
+    let path_str = path.to_string_lossy().to_string();
+    let expected = n as u64;
+    b.case(&label, move || {
+        let stream = stream_trace_file(&path_str).expect("open bench trace");
+        let rep = Simulation::new(Workload::machine("stream-bench", 512, 16), Policy::Fcfs)
+            .with_job_stream(Box::new(stream.map(|j| j.expect("bench trace parses"))))
+            .with_retain_completed(false)
+            .run(None);
+        assert_eq!(rep.completed_count, expected, "streamed case lost jobs");
+        rep.events
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Build and run the whole suite; the caller reads/serializes
+/// [`Bench::results`].
+pub fn engine_throughput_suite(smoke: bool) -> Bench {
+    let (das2_n, sp2_n, runs) = if smoke { (5_000, 3_000, 1) } else { (100_000, 50_000, 5) };
+
+    section("event-driven simulator throughput");
+    let das2 = Das2Model::default().generate(das2_n, 1).drop_infeasible();
+    let sp2 = SdscSp2Model::default().generate(sp2_n, 1).drop_infeasible();
+    let mut b = Bench::new(if smoke { 0 } else { 1 }, runs);
+
+    let w = das2.clone();
+    let r = b.case("sim/das2/fcfs", move || run_policy(w.clone(), Policy::Fcfs).events);
+    let median = r.median();
+    let events = run_policy(das2.clone(), Policy::Fcfs).events;
+    println!(
+        "  -> {:.2} M events/s",
+        events as f64 / median.as_secs_f64().max(1e-12) / 1e6
+    );
+
+    let w = das2.clone();
+    b.case("sim/das2/backfill", move || {
+        run_policy(w.clone(), Policy::FcfsBackfill).events
+    });
+    let w = das2.clone();
+    b.case("sim/das2/cons-backfill", move || {
+        run_policy(w.clone(), Policy::ConservativeBackfill).events
+    });
+    let w = sp2.clone();
+    b.case("sim/sp2/backfill", move || {
+        run_policy(w.clone(), Policy::FcfsBackfill).events
+    });
+
+    section("scheduling-round planning cost (availability profile)");
+    if smoke {
+        sched_round_cases(&mut b, 2_000, 200);
+    } else {
+        sched_round_cases(&mut b, 10_000, 1_000);
+        sched_round_cases(&mut b, 10_000, 5_000);
+    }
+
+    section("memory-constrained round (lazy second dimension)");
+    sched_round_mem_cases(&mut b, if smoke { 2_000 } else { 10_000 });
+
+    section("streamed trace ingestion (constant-memory scale path)");
+    streamed_swf_case(&mut b, if smoke { 20_000 } else { 1_000_000 });
+
+    section("baseline (CQsim-like) for comparison");
+    let w = das2.clone();
+    b.case("baseline/das2/fcfs", move || run_baseline(&w, Policy::Fcfs).events);
+
+    section("workload generation");
+    b.case("gen/das2", move || Das2Model::default().generate(das2_n, 1).jobs.len());
+    b.case("gen/sp2", move || SdscSp2Model::default().generate(sp2_n, 1).jobs.len());
+    b
+}

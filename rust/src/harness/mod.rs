@@ -7,6 +7,8 @@
 //! hardware) but the *shapes* are asserted in rust/tests/figures.rs:
 //! who wins, by what rough factor, where the crossovers fall.
 
+pub mod bench_suite;
+
 use crate::baseline::run_baseline;
 use crate::core::time::SimTime;
 use crate::metrics::{correlation, mae, nmae, resample, wait_stats};
@@ -414,7 +416,7 @@ pub struct FaultRow {
 pub struct FaultCompareOpts<'a> {
     pub faults: crate::sim::FaultConfig,
     pub reservations: &'a [crate::sim::ReservationSpec],
-    pub planning_horizon: u64,
+    pub planning_horizon: crate::sim::Horizon,
     pub order: Option<crate::sched::OrderKind>,
     pub fairshare_half_life: u64,
     pub mem_per_node: u64,
@@ -438,7 +440,7 @@ pub fn fault_comparison(
                 .with_faults(opts.faults)
                 .with_preemption(preemption)
                 .with_reservations(opts.reservations.to_vec())
-                .with_planning_horizon(opts.planning_horizon)
+                .with_horizon(opts.planning_horizon)
                 .with_mem_per_node(opts.mem_per_node)
                 .with_memory_aware(opts.memory_aware);
             if opts.fairshare_half_life > 0 {

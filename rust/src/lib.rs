@@ -56,6 +56,35 @@
 //!   New outputs: preemption/requeue/failure/repair counts, lost and
 //!   checkpointed work (core-seconds), and goodput-based effective
 //!   utilization (see `sim::SimReport`).
+//! * **scale path** (million-job throughput): three coordinated pieces
+//!   keep single-rank runs fast and bounded-memory at archive scale.
+//!   (1) *Streaming ingestion* — [`trace::JobStream`] parses one SWF/GWF
+//!   record at a time off any `BufRead` (the eager `parse_swf`/
+//!   `parse_gwf` are thin collects over the same per-line parsers;
+//!   property-tested equal), and `Simulation::with_job_stream` +
+//!   [`trace::Workload::machine`] feed the arrival queue incrementally
+//!   with a one-job lookahead, so peak RSS is O(active jobs), not
+//!   O(trace); `with_retain_completed(false)` drops per-job records AND
+//!   the unbounded per-event metric series, keeping scalar aggregates
+//!   (`SimReport::completed_count`, `mean_wait_overall`, incremental
+//!   time-weighted utilization/goodput means). (2) *Auto-horizon* —
+//!   `planning.horizon`
+//!   accepts `"auto"` ([`sim::Horizon::Auto`]): exact planning while the
+//!   queue is shallow, and at deep queues the timeline clamp is derived
+//!   from live queue depth and the median runtime estimate each resync,
+//!   bounding breakpoint count without a hand-tuned tick value.
+//!   (3) *Allocation-free rounds* — [`sched::RoundScratch`], owned by
+//!   the scheduler component and threaded through `SchedInput::scratch`,
+//!   hosts the order views, backfill candidate columns and the scratch
+//!   plan (overwritten via `AvailabilityProfile::copy_from`), so
+//!   steady-state dispatch rounds reuse buffers instead of allocating.
+//!   The numbers are durable: `sst-sched bench [--smoke]` runs the
+//!   engine_throughput suite (including a million-job streamed-SWF case
+//!   in full mode) and writes `BENCH_engine.json` — schema
+//!   `sst-sched-bench-v1`: `{schema, suite, smoke, cases: [{name, runs,
+//!   median_ns, mean_ns, min_ns, p10_ns, p90_ns}]}` — which CI uploads
+//!   on every run and diffs against the committed baseline (advisory
+//!   >25% warning).
 //! * [`workflow`] — the workflow-management component (paper §3): DAG task
 //!   dependencies, JSON input spec, ready-set scheduling, and generators
 //!   for the Pegasus workflows the paper evaluates (Montage/Galactic

@@ -30,6 +30,7 @@ sst-sched — scalable HPC job scheduling & resource management simulator
 
 USAGE:
   sst-sched run [--workload das2|sdsc-sp2] [--trace file.swf|file.gwf]
+                [--stream]  # constant-memory trace ingestion (--trace only)
                 [--jobs N] [--policy fcfs|sjf|ljf|fcfs-bestfit|fcfs-backfill|cons-backfill]
                 [--order arrival|shortest|longest|fair-share]  # queue ordering
                 [--half-life TICKS]  # fair-share usage-decay half-life
@@ -40,9 +41,11 @@ USAGE:
                 [--faults-dist exp|weibull] [--faults-shape K]
                 [--preemption none|kill|checkpoint] [--ckpt-overhead S]
                 [--restart-overhead S] [--starvation S] [--priority-bands N]
-                [--horizon TICKS]   # availability-planning horizon (0 = exact)
+                [--horizon TICKS|auto|exact]  # availability-planning horizon
   sst-sched faults [--workload ...] [--jobs N] [--mtbf S] [--mttr S] ...
                 # policy x preemption-mode comparison on one failure trace
+  sst-sched bench [--smoke] [--out BENCH_engine.json]
+                # engine_throughput suite -> machine-readable perf JSON
   sst-sched fig <3a|3b|4a|4b|5a|5b|6|7> [--jobs N] [--seed S]
   sst-sched workflow (--spec wf.json | --gen sipht|montage|galactic|
                       epigenomics|cybershake|ligo) [--scale K] [--cpu C]
@@ -65,6 +68,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
+        "bench" => cmd_bench(&args),
         "faults" => cmd_faults(&args),
         "fig" => cmd_fig(&args),
         "workflow" => cmd_workflow(&args),
@@ -156,7 +160,9 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     if cfg.faults.shape < 0.1 {
         bail!("--faults-shape must be >= 0.1 (tiny shapes collapse the gap scale)");
     }
-    cfg.planning_horizon = args.u64_or("horizon", cfg.planning_horizon)?;
+    if let Some(h) = args.get("horizon") {
+        cfg.planning_horizon = h.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    }
     if let Some(m) = args.get("preemption") {
         cfg.preemption.mode = m.parse().map_err(|e: String| anyhow::anyhow!(e))?;
     }
@@ -170,9 +176,137 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
+/// Run the engine_throughput suite and write machine-readable results —
+/// the `BENCH_engine.json` file the perf trajectory and the CI perf gate
+/// consume.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let smoke = args.flag("smoke");
+    let out = args.str_or("out", "BENCH_engine.json");
+    args.reject_unknown()?;
+    let b = harness::bench_suite::engine_throughput_suite(smoke);
+    let json = b.to_json("engine_throughput", smoke);
+    std::fs::write(&out, json.to_pretty()).with_context(|| format!("writing {out:?}"))?;
+    println!("\nwrote {} ({} cases)", out, b.results().len());
+    Ok(())
+}
+
+/// Apply every config knob shared by the eager and streamed run paths —
+/// one chain, so a future knob cannot silently apply to only one of
+/// them.
+fn configure_sim(sim: Simulation, cfg: &ExperimentConfig) -> Simulation {
+    let mut sim = sim
+        .with_seed(cfg.seed)
+        .with_faults(cfg.faults)
+        .with_preemption(cfg.preemption)
+        .with_reservations(cfg.reservations.clone())
+        .with_horizon(cfg.planning_horizon)
+        .with_mem_per_node(cfg.mem_per_node)
+        .with_memory_aware(cfg.memory_aware)
+        .with_fairshare_half_life(cfg.fairshare_half_life);
+    if let Some(order) = cfg.order {
+        sim = sim.with_order(order);
+    }
+    sim
+}
+
+/// Constant-memory run: the trace is parsed one record at a time and fed
+/// to the simulator as simulated time reaches each arrival — peak RSS is
+/// O(active jobs), not O(trace). Per-job lifecycle records are dropped
+/// (scalar aggregates survive), which is what makes million-job traces
+/// practical.
+fn cmd_run_streamed(cfg: &ExperimentConfig) -> Result<()> {
+    let (path, def_nodes, def_cores) = match &cfg.source {
+        WorkloadSource::Swf(p) => (p.clone(), 128usize, 1u64),
+        WorkloadSource::Gwf(p) => (p.clone(), 72usize, 2u64),
+        _ => bail!("--stream needs --trace FILE (streaming reads a trace incrementally)"),
+    };
+    if cfg.ranks > 1 {
+        bail!("--stream is single-rank (partitioning needs the whole trace up front)");
+    }
+    if (cfg.arrival_scale - 1.0).abs() > 1e-12 {
+        bail!("--arrival-scale needs the eager path (it rewrites every submit time)");
+    }
+    if cfg.faults.enabled() && cfg.faults.until.is_none() {
+        // The injector horizon is derived from the eager job list, which
+        // a stream does not have — refuse rather than silently stop
+        // injecting at t = 4 x mttr.
+        bail!("streamed fault runs need --faults-until (the injector horizon cannot be \
+               derived from a stream)");
+    }
+    let nodes = cfg.nodes.unwrap_or(def_nodes);
+    let cores = cfg.cores_per_node.unwrap_or(def_cores);
+    let take = if cfg.jobs > 0 { cfg.jobs } else { usize::MAX };
+    // A mid-stream parse error cannot abort the running simulation, so
+    // it ends the stream and is re-raised after the run — a corrupt
+    // trace must fail the command, not exit 0 with partial results.
+    let ingest_error = std::sync::Arc::new(std::sync::Mutex::new(None::<String>));
+    let ingest_flag = ingest_error.clone();
+    // Same derived priority bands the eager path applies in
+    // build_workload — `--priority-bands` must not be silently ignored.
+    let bands = cfg.priority_bands;
+    let stream = sst_sched::trace::stream_trace_file(&path)?
+        .map_while(move |r| match r {
+            Ok(job) => Some(job),
+            Err(e) => {
+                *ingest_flag.lock().unwrap() = Some(format!("{e:#}"));
+                None
+            }
+        })
+        .map(move |mut job| {
+            if bands > 0 {
+                job.priority = (job.user % bands as u32) as u8;
+            }
+            job
+        })
+        .take(take);
+    print!("workload {path}: streamed onto {nodes} nodes x {cores} cores");
+    if cfg.jobs > 0 {
+        print!(" (first {} jobs)", cfg.jobs);
+    }
+    println!();
+    let accel: Accel = cfg.accel.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let mut sim = configure_sim(
+        Simulation::new(sst_sched::trace::Workload::machine(&path, nodes, cores), cfg.policy),
+        cfg,
+    )
+    .with_job_stream(Box::new(stream))
+    .with_retain_completed(false);
+    if cfg.policy == Policy::FcfsBackfill {
+        // Same scorer-backend plumbing as the eager path — `--accel`
+        // must not be silently ignored here.
+        let sched = sst_sched::runtime::backfill_with_accel(accel)?;
+        println!("scorer backend    {}", sched.scorer_backend());
+        sim = sim.with_scheduler(Box::new(sched));
+    }
+    let t0 = std::time::Instant::now();
+    let rep = sim.run(None);
+    let wall = t0.elapsed();
+    if let Some(e) = ingest_error.lock().unwrap().take() {
+        bail!(
+            "trace ingestion failed after {} completed jobs: {e}",
+            rep.completed_count
+        );
+    }
+    println!("policy            {}", rep.policy);
+    println!("jobs completed    {}", rep.completed_count);
+    println!("jobs rejected     {}", rep.rejected);
+    println!("DES events        {}", rep.events);
+    println!("dispatch rounds   {}", rep.dispatches);
+    println!("sim end time      {} s", rep.end_time.ticks());
+    println!("mean wait         {:.1} s", rep.mean_wait_overall());
+    println!("mean utilization  {:.3}", rep.mean_utilization);
+    println!("wall time         {:.1} ms", wall.as_secs_f64() * 1e3);
+    println!("event rate        {:.0} ev/s", rep.events as f64 / wall.as_secs_f64().max(1e-9));
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
+    let stream = args.flag("stream");
     args.reject_unknown()?;
+    if stream {
+        return cmd_run_streamed(&cfg);
+    }
     let workload = cfg.build_workload()?;
     println!(
         "workload {}: {} jobs on {} nodes x {} cores (offered load {:.2})",
@@ -212,18 +346,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         return Ok(());
     }
     let accel: Accel = cfg.accel.parse().map_err(|e: String| anyhow::anyhow!(e))?;
-    let mut sim = Simulation::new(workload, cfg.policy)
-        .with_seed(cfg.seed)
-        .with_faults(cfg.faults)
-        .with_preemption(cfg.preemption)
-        .with_reservations(cfg.reservations.clone())
-        .with_planning_horizon(cfg.planning_horizon)
-        .with_mem_per_node(cfg.mem_per_node)
-        .with_memory_aware(cfg.memory_aware)
-        .with_fairshare_half_life(cfg.fairshare_half_life);
-    if let Some(order) = cfg.order {
-        sim = sim.with_order(order);
-    }
+    let mut sim = configure_sim(Simulation::new(workload, cfg.policy), &cfg);
     if cfg.policy == Policy::FcfsBackfill {
         let sched = sst_sched::runtime::backfill_with_accel(accel)?;
         println!("scorer backend    {}", sched.scorer_backend());

@@ -6,9 +6,14 @@
 //! conservative runner provides the barrier-window execution whose cost
 //! (windows x barriers) is what limits speedup, as in SST.
 
-use crate::parallel::{fnv1a, run_parallel, run_parallel_modeled, ParallelReport, RankLogic, RankSummary, BARRIER_COST};
+use crate::parallel::{
+    fnv1a, run_parallel, run_parallel_modeled, ParallelReport, RankLogic, RankSummary,
+    BARRIER_COST,
+};
 use crate::sched::{OrderKind, Policy, PreemptionConfig};
-use crate::sim::{FaultConfig, ReservationSpec, SimInstance, Simulation, DEFAULT_FAIRSHARE_HALF_LIFE};
+use crate::sim::{
+    FaultConfig, Horizon, ReservationSpec, SimInstance, Simulation, DEFAULT_FAIRSHARE_HALF_LIFE,
+};
 use crate::trace::Workload;
 
 /// Per-rank simulation options for fault-aware parallel runs.
@@ -25,10 +30,11 @@ pub struct RankSimOpts {
     pub faults: FaultConfig,
     pub preemption: PreemptionConfig,
     pub reservations: Vec<ReservationSpec>,
-    /// Availability-timeline planning horizon (ticks; 0 = unlimited).
-    /// Applied per rank unchanged — the horizon is a fidelity knob, not
-    /// a capacity, so it does not rescale with the rank count.
-    pub planning_horizon: u64,
+    /// Availability-timeline planning-horizon policy. Applied per rank
+    /// unchanged — the horizon is a fidelity knob, not a capacity, so it
+    /// does not rescale with the rank count (auto derives from each
+    /// rank's own queue).
+    pub planning_horizon: Horizon,
     /// Queue-ordering override; applied per rank unchanged (fair-share
     /// usage is per-rank state, exactly like the per-cluster queues the
     /// partitioning models).
@@ -67,7 +73,7 @@ impl Default for RankSimOpts {
             faults: FaultConfig::default(),
             preemption: PreemptionConfig::default(),
             reservations: Vec::new(),
-            planning_horizon: 0,
+            planning_horizon: Horizon::Exact,
             order: None,
             fairshare_half_life: DEFAULT_FAIRSHARE_HALF_LIFE,
             mem_per_node: 0,
@@ -212,7 +218,7 @@ pub fn run_jobs_parallel_opts(
                     .with_faults(opts.faults)
                     .with_preemption(opts.preemption)
                     .with_reservations(opts.reservations)
-                    .with_planning_horizon(opts.planning_horizon)
+                    .with_horizon(opts.planning_horizon)
                     .with_fairshare_half_life(opts.fairshare_half_life)
                     .with_mem_per_node(opts.mem_per_node)
                     .with_memory_aware(opts.memory_aware);

@@ -259,6 +259,15 @@ pub struct AvailabilityProfile {
     total_mem: u64,
 }
 
+impl Default for AvailabilityProfile {
+    /// The empty profile (see [`AvailabilityProfile::EMPTY`]) — what a
+    /// fresh [`crate::sched::RoundScratch`] plan starts as before its
+    /// first `copy_from`.
+    fn default() -> AvailabilityProfile {
+        AvailabilityProfile::EMPTY
+    }
+}
+
 impl AvailabilityProfile {
     /// A profile carrying no planning information (unit tests of
     /// policies that want the legacy allocate-only admission). Every
@@ -271,6 +280,27 @@ impl AvailabilityProfile {
         total: 0,
         total_mem: 0,
     };
+
+    /// Overwrite `self` with `src`, reusing the existing breakpoint
+    /// allocations — the per-round scratch-plan path: after warmup a
+    /// dispatch round's "clone" of the shared timeline allocates nothing
+    /// (the buffers only ever grow to the high-water mark). Semantically
+    /// identical to `*self = src.clone()`.
+    pub fn copy_from(&mut self, src: &AvailabilityProfile) {
+        self.cores.points.clone_from(&src.cores.points);
+        if let Some(s) = &src.mem {
+            if let Some(d) = &mut self.mem {
+                d.points.clone_from(&s.points);
+            } else {
+                self.mem = Some(s.clone());
+            }
+        } else {
+            self.mem = None;
+        }
+        self.mem_base = src.mem_base;
+        self.total = src.total;
+        self.total_mem = src.total_mem;
+    }
 
     /// Flat cores-only profile: `free` cores from `now` on, on a machine
     /// with `total` physical cores. Memory is untracked.
@@ -754,6 +784,24 @@ mod tests {
         // The materialized dimension coalesces back to a flat line.
         assert_eq!(p.mem_points().unwrap().len(), 1);
         assert_eq!(p.free_memory_at(10), 1000);
+    }
+
+    #[test]
+    fn copy_from_matches_clone_semantics() {
+        let mut src = mem_profile(8, 1000);
+        src.hold_v(10, 60, ResourceVector::new(4, 600));
+        let mut dst = AvailabilityProfile::EMPTY;
+        dst.copy_from(&src);
+        assert_eq!(dst.points(), src.points());
+        assert_eq!(dst.mem_points(), src.mem_points());
+        assert_eq!(dst.free_memory_at(20), src.free_memory_at(20));
+        assert!(dst.check_invariants());
+        // Overwriting with a memory-free profile drops the dimension.
+        let flat = AvailabilityProfile::new(0, 4, 8);
+        dst.copy_from(&flat);
+        assert!(!dst.has_memory_dimension());
+        assert_eq!(dst.points(), flat.points());
+        assert_eq!(dst.total(), 8);
     }
 
     #[test]

@@ -29,10 +29,11 @@
 //! re-checked in exact integer arithmetic, so scorer backend choice can
 //! never change a scheduling decision (asserted by rust/tests/xla_parity).
 
+use crate::job::{Job, JobId};
 use crate::resources::{AllocPolicy, Allocation, AvailabilityProfile, Cluster};
-use crate::sched::fcfs::run_ordered;
+use crate::sched::fcfs::{borrow_scratch, run_ordered};
 use crate::sched::scorer::{NativeScorer, QueueScorer, ScoreParams};
-use crate::sched::{QueueOrder, SchedInput, Scheduler};
+use crate::sched::{QueueOrder, RoundScratch, SchedInput, Scheduler};
 
 /// EASY backfilling scheduler.
 pub struct BackfillScheduler {
@@ -79,6 +80,39 @@ impl Scheduler for BackfillScheduler {
     }
 
     fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
+        let mut local = RoundScratch::default();
+        let mut guard = None;
+        let scratch = borrow_scratch(input, &mut guard, &mut local);
+        let RoundScratch { order_ids, cand_ids, req, est, wait, rank, plan } = scratch;
+        if input.order.order_into(input.queue, input.now, order_ids) {
+            let mut it =
+                order_ids.iter().map(|id| input.queue.get(*id).expect("ordered id not in queue"));
+            self.run_round(input, cluster, &mut it, cand_ids, req, est, wait, rank, plan)
+        } else {
+            let mut it = input.queue.iter();
+            self.run_round(input, cluster, &mut it, cand_ids, req, est, wait, rank, plan)
+        }
+    }
+}
+
+impl BackfillScheduler {
+    /// One EASY round over an already-resolved queue order. The buffer
+    /// arguments are the round scratch ([`RoundScratch`] fields): every
+    /// one is cleared (or overwritten via `copy_from`) before use, so
+    /// reuse cannot leak state between rounds.
+    #[allow(clippy::too_many_arguments)]
+    fn run_round<'a>(
+        &mut self,
+        input: &SchedInput<'a>,
+        cluster: &mut Cluster,
+        queue_iter: &mut dyn Iterator<Item = &'a Job>,
+        cand_ids: &mut Vec<JobId>,
+        req: &mut Vec<f32>,
+        est: &mut Vec<f32>,
+        wait: &mut Vec<f32>,
+        rank: &mut Vec<usize>,
+        plan: &mut AvailabilityProfile,
+    ) -> Vec<Allocation> {
         let now = input.now.ticks();
 
         // Phase 1 — the blocking pass in queue order while jobs fit
@@ -86,25 +120,22 @@ impl Scheduler for BackfillScheduler {
         // would-be starter colliding with a future window blocks here).
         // Lazy single pass: under a blocked head this touches only the
         // prefix, never the whole queue (§Perf).
-        let view = input.order.view(input.queue, input.now);
-        let mut queue_iter = view.iter(input.queue);
-        let run = run_ordered(&mut queue_iter, input, cluster, AllocPolicy::FirstFit);
+        let run = run_ordered(&mut *queue_iter, input, cluster, AllocPolicy::FirstFit, plan);
         let mut out = run.allocs;
         let Some(head_id) = run.blocked else { return out };
         let head = input.queue.get(head_id).expect("blocked head not in queue");
 
         // Scratch plan for this round: the shared timeline plus this
         // round's own starts. `run_ordered` already built it in strict
-        // mode; otherwise lay the phase-1 holds now — cloning is
+        // mode; otherwise lay the phase-1 holds now — the copy is
         // O(breakpoints), paid only when the head actually blocks.
-        let mut plan: AvailabilityProfile = run.plan.unwrap_or_else(|| {
-            let mut p = input.profile.clone();
+        if !run.plan_built {
+            plan.copy_from(input.profile);
             for a in &out {
                 let job = input.queue.get(a.job_id).expect("phase-1 start not in queue");
-                p.hold_v(now, now.saturating_add(job.est_runtime.ticks().max(1)), a.demand());
+                plan.hold_v(now, now.saturating_add(job.est_runtime.ticks().max(1)), a.demand());
             }
-            p
-        });
+        }
 
         // Phase 2 — the head is blocked: its reservation starts at the
         // earliest slot where it can run its whole estimate in every
@@ -125,18 +156,20 @@ impl Scheduler for BackfillScheduler {
         plan.hold_v(shadow, shadow.saturating_add(head_est), head.demand());
 
         // Phase 3 — score the candidates behind the head (the batched
-        // O(Q x N) inner loop -> scorer / Pallas kernel).
-        let cands: Vec<&crate::job::Job> = queue_iter.collect();
-        if cands.is_empty() {
-            return out;
-        }
-        let mut req = Vec::with_capacity(cands.len());
-        let mut est = Vec::with_capacity(cands.len());
-        let mut wait = Vec::with_capacity(cands.len());
-        for j in &cands {
+        // O(Q x N) inner loop -> scorer / Pallas kernel). The candidate
+        // columns live in the round scratch.
+        cand_ids.clear();
+        req.clear();
+        est.clear();
+        wait.clear();
+        for j in queue_iter {
+            cand_ids.push(j.id);
             req.push(j.cores as f32);
             est.push(j.est_runtime.as_f64() as f32);
             wait.push((input.now - j.submit).as_f64() as f32);
+        }
+        if cand_ids.is_empty() {
+            return out;
         }
         let params = ScoreParams {
             shadow_time: (shadow - now) as f32,
@@ -144,11 +177,13 @@ impl Scheduler for BackfillScheduler {
             aging_weight: self.aging_weight,
             waste_weight: self.waste_weight,
         };
-        let scores = self.scorer.score(&req, &est, &wait, &cluster.free_vec(), params);
+        let scores =
+            self.scorer.score(&req[..], &est[..], &wait[..], &cluster.free_vec(), params);
 
         // Rank candidates by priority (desc); ties keep queue order.
-        let mut order: Vec<usize> = (0..cands.len()).collect();
-        order.sort_by(|&a, &b| {
+        rank.clear();
+        rank.extend(0..cand_ids.len());
+        rank.sort_by(|&a, &b| {
             scores.priority[b]
                 .partial_cmp(&scores.priority[a])
                 .unwrap_or(std::cmp::Ordering::Equal)
@@ -158,11 +193,11 @@ impl Scheduler for BackfillScheduler {
         // Phase 4 — admit candidates; exact integer re-check is
         // authoritative so f32 scoring can never change a decision.
         let mut remaining_extra = extra;
-        for &ci in &order {
+        for &ci in rank.iter() {
             if scores.backfill_ok[ci] != 1.0 {
                 continue;
             }
-            let job = cands[ci];
+            let job = input.queue.get(cand_ids[ci]).expect("candidate not in queue");
             if job.cores > cluster.free_cores() {
                 continue;
             }
@@ -225,6 +260,7 @@ mod tests {
             running,
             profile: &profile,
             order: &ArrivalOrder,
+            scratch: None,
         };
         BackfillScheduler::new()
             .schedule(&input, cluster)
@@ -374,6 +410,7 @@ mod tests {
             running: &running,
             profile: &profile,
             order: &ArrivalOrder,
+            scratch: None,
         };
         let started: Vec<JobId> = BackfillScheduler::new()
             .schedule(&input, &mut c)
@@ -392,6 +429,7 @@ mod tests {
             running: &running,
             profile: &profile,
             order: &ArrivalOrder,
+            scratch: None,
         };
         let started: Vec<JobId> = BackfillScheduler::new()
             .schedule(&input, &mut c)
@@ -442,6 +480,7 @@ mod tests {
             running: &[],
             profile: &profile,
             order: &ArrivalOrder,
+            scratch: None,
         };
         let started: Vec<JobId> = BackfillScheduler::new()
             .schedule(&input, &mut c)
@@ -472,6 +511,7 @@ mod tests {
             running: &[],
             profile: &profile2,
             order: &ArrivalOrder,
+            scratch: None,
         };
         let started2: Vec<JobId> = BackfillScheduler::new()
             .schedule(&input2, &mut c2)

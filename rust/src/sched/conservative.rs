@@ -16,8 +16,10 @@
 //! reservations, outage windows and (on memory-aware machines) planned
 //! memory pressure bound every slot.
 
+use crate::job::Job;
 use crate::resources::{AllocPolicy, Allocation, AvailabilityProfile, Cluster};
-use crate::sched::{QueueOrder, SchedInput, Scheduler};
+use crate::sched::fcfs::borrow_scratch;
+use crate::sched::{QueueOrder, RoundScratch, SchedInput, Scheduler};
 
 /// Conservative backfilling scheduler.
 #[derive(Debug, Default)]
@@ -41,11 +43,35 @@ impl Scheduler for ConservativeScheduler {
     }
 
     fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
+        let mut local = RoundScratch::default();
+        let mut guard = None;
+        let scratch = borrow_scratch(input, &mut guard, &mut local);
+        let RoundScratch { order_ids, plan, .. } = scratch;
+        // Scratch plan: the shared timeline overwritten in place (no
+        // per-round clone — the reservation-ladder holds below land on
+        // the reusable buffer).
+        plan.copy_from(input.profile);
+        if input.order.order_into(input.queue, input.now, order_ids) {
+            let mut it =
+                order_ids.iter().map(|id| input.queue.get(*id).expect("ordered id not in queue"));
+            Self::run_round(input, cluster, &mut it, plan)
+        } else {
+            let mut it = input.queue.iter();
+            Self::run_round(input, cluster, &mut it, plan)
+        }
+    }
+}
+
+impl ConservativeScheduler {
+    fn run_round<'a>(
+        input: &SchedInput<'a>,
+        cluster: &mut Cluster,
+        order: &mut dyn Iterator<Item = &'a Job>,
+        plan: &mut AvailabilityProfile,
+    ) -> Vec<Allocation> {
         let now = input.now.ticks();
-        let mut plan: AvailabilityProfile = input.profile.clone();
         let mut out = Vec::new();
-        let view = input.order.view(input.queue, input.now);
-        for job in view.iter(input.queue) {
+        for job in order {
             if !cluster.feasible(job) {
                 continue;
             }
@@ -99,6 +125,7 @@ mod tests {
             running,
             profile: &profile,
             order: &ArrivalOrder,
+            scratch: None,
         };
         ConservativeScheduler::new()
             .schedule(&input, cluster)
@@ -186,6 +213,7 @@ mod tests {
             running: &[],
             profile: &profile,
             order: &ArrivalOrder,
+            scratch: None,
         };
         let started: Vec<u64> = ConservativeScheduler::new()
             .schedule(&input, &mut c)
@@ -220,6 +248,7 @@ mod tests {
             running: &[],
             profile: &profile,
             order: &ArrivalOrder,
+            scratch: None,
         };
         let started: Vec<u64> = ConservativeScheduler::new()
             .schedule(&input, &mut c)

@@ -18,16 +18,17 @@
 
 use crate::job::{Job, JobId};
 use crate::resources::{AllocPolicy, Allocation, AvailabilityProfile, Cluster};
-use crate::sched::{QueueOrder, SchedInput, Scheduler};
+use crate::sched::{QueueOrder, RoundScratch, SchedInput, Scheduler};
 
 /// Result of one ordered admission pass.
 pub(crate) struct OrderedRun {
     /// Allocations committed, in decision order.
     pub allocs: Vec<Allocation>,
-    /// Scratch plan with this round's starts laid in — built lazily and
-    /// only in strict (non-monotone timeline) mode; backfill reuses it
-    /// for its shadow math instead of re-cloning.
-    pub plan: Option<AvailabilityProfile>,
+    /// Whether the scratch plan was built (strict / non-monotone mode):
+    /// the caller's `plan` buffer then holds the shared timeline with
+    /// this round's starts laid in — backfill reuses it for its shadow
+    /// math instead of re-cloning.
+    pub plan_built: bool,
     /// The job that blocked the pass (the backfill head), if any.
     pub blocked: Option<JobId>,
 }
@@ -42,22 +43,24 @@ pub(crate) struct OrderedRun {
 /// O(1) work instead of materializing the whole queue (the difference is
 /// ~1.6x end-to-end on queue-heavy SP2 workloads — EXPERIMENTS.md §Perf).
 /// The iterator is left positioned just past the blocked head so
-/// backfill can keep consuming candidates from it.
+/// backfill can keep consuming candidates from it. `plan` is the round's
+/// reusable scratch buffer; it is overwritten (not cloned) on demand.
 pub(crate) fn run_ordered<'a>(
     order: &mut dyn Iterator<Item = &'a Job>,
     input: &SchedInput<'_>,
     cluster: &mut Cluster,
     policy: AllocPolicy,
+    plan: &mut AvailabilityProfile,
 ) -> OrderedRun {
     let profile = input.profile;
     // Strict admission only when the timeline carries capacity windows
     // ahead (non-monotone). On monotone timelines fitting now implies
     // fitting forever, so `Cluster::allocate` alone decides — the
-    // classic loop, no clone, no scan beyond this one monotone check.
+    // classic loop, no plan copy, no scan beyond this one monotone check.
     let strict = !profile.is_empty() && !profile.is_monotone();
     let now = input.now.ticks();
     let mut allocs = Vec::new();
-    let mut plan: Option<AvailabilityProfile> = None;
+    let mut plan_built = false;
     let mut blocked = None;
     for job in order {
         if !cluster.feasible(job) {
@@ -67,17 +70,21 @@ pub(crate) fn run_ordered<'a>(
         // a zero-estimate job must still be admission-checked at `now`
         // and leave a footprint the rest of the round can see.
         let est = job.est_runtime.ticks().max(1);
-        if strict
-            && !plan.as_ref().unwrap_or(profile).can_place_v(now, est, job.demand())
-        {
-            blocked = Some(job.id);
-            break;
+        if strict {
+            let admit: &AvailabilityProfile = if plan_built { plan } else { profile };
+            if !admit.can_place_v(now, est, job.demand()) {
+                blocked = Some(job.id);
+                break;
+            }
         }
         match cluster.allocate(job, policy) {
             Some(a) => {
                 if strict {
-                    let p = plan.get_or_insert_with(|| profile.clone());
-                    p.hold_v(now, now.saturating_add(est), a.demand());
+                    if !plan_built {
+                        plan.copy_from(profile);
+                        plan_built = true;
+                    }
+                    plan.hold_v(now, now.saturating_add(est), a.demand());
                 }
                 allocs.push(a);
             }
@@ -87,7 +94,23 @@ pub(crate) fn run_ordered<'a>(
             }
         }
     }
-    OrderedRun { allocs, plan, blocked }
+    OrderedRun { allocs, plan_built, blocked }
+}
+
+/// Borrow the driver's round scratch, or fall back to `local` when the
+/// input carries none (unit tests, ad-hoc callers). Returns a guard that
+/// must stay alive while the `&mut RoundScratch` is used — callers write
+/// `let mut guard = ...; let scratch = borrow_scratch(input, &mut guard, &mut local);`.
+pub(crate) fn borrow_scratch<'a, 's>(
+    input: &SchedInput<'a>,
+    guard: &'s mut Option<std::cell::RefMut<'a, RoundScratch>>,
+    local: &'s mut RoundScratch,
+) -> &'s mut RoundScratch {
+    *guard = input.scratch.map(|c| c.borrow_mut());
+    match guard.as_deref_mut() {
+        Some(s) => s,
+        None => local,
+    }
 }
 
 /// The blocking scheduler: queue order in, allocations out, stop at the
@@ -121,9 +144,18 @@ impl Scheduler for BlockingScheduler {
     }
 
     fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
-        let view = input.order.view(input.queue, input.now);
-        let mut it = view.iter(input.queue);
-        run_ordered(&mut it, input, cluster, self.alloc).allocs
+        let mut local = RoundScratch::default();
+        let mut guard = None;
+        let scratch = borrow_scratch(input, &mut guard, &mut local);
+        let RoundScratch { order_ids, plan, .. } = scratch;
+        if input.order.order_into(input.queue, input.now, order_ids) {
+            let mut it =
+                order_ids.iter().map(|id| input.queue.get(*id).expect("ordered id not in queue"));
+            run_ordered(&mut it, input, cluster, self.alloc, plan).allocs
+        } else {
+            let mut it = input.queue.iter();
+            run_ordered(&mut it, input, cluster, self.alloc, plan).allocs
+        }
     }
 }
 
@@ -141,6 +173,7 @@ mod tests {
             running: &[],
             profile: &crate::resources::AvailabilityProfile::EMPTY,
             order: &ArrivalOrder,
+            scratch: None,
         }
     }
 
@@ -209,6 +242,7 @@ mod tests {
             running: &[],
             profile: &profile,
             order: &ArrivalOrder,
+            scratch: None,
         };
         assert!(fcfs().schedule(&inp, &mut c).is_empty(), "head must wait out the window");
         assert_eq!(c.free_cores(), 8, "cluster untouched");
@@ -221,6 +255,7 @@ mod tests {
             running: &[],
             profile: &profile,
             order: &ArrivalOrder,
+            scratch: None,
         };
         let allocs = fcfs().schedule(&inp, &mut c);
         assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![3]);
@@ -244,6 +279,7 @@ mod tests {
             running: &[],
             profile: &profile,
             order: &ArrivalOrder,
+            scratch: None,
         };
         let allocs = fcfs().schedule(&inp, &mut c);
         assert_eq!(allocs.iter().map(|a| a.job_id).collect::<Vec<_>>(), vec![1]);

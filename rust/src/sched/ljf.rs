@@ -22,6 +22,7 @@ mod tests {
             running: &[],
             profile: &crate::resources::AvailabilityProfile::EMPTY,
             order: &LongestFirst,
+            scratch: None,
         }
     }
 

@@ -64,6 +64,34 @@ pub struct RunningJob {
     pub priority: u8,
 }
 
+/// Reusable per-round scratch space, owned by the simulation driver and
+/// threaded to every policy through [`SchedInput::scratch`].
+///
+/// Before this existed, every dispatch round re-materialized its order
+/// view, re-collected the backfill candidate arrays and re-cloned the
+/// availability timeline into a scratch plan — pure allocator churn on
+/// the DES hot path at deep queues. Every buffer here is *cleared* (or
+/// overwritten via [`AvailabilityProfile::copy_from`]), never shrunk, at
+/// the start of the round that uses it, so reuse is pure plumbing:
+/// decisions are bit-identical to fresh allocations (pinned by the
+/// determinism regressions).
+#[derive(Default)]
+pub struct RoundScratch {
+    /// Materialized queue order (non-arrival orderings).
+    pub order_ids: Vec<JobId>,
+    /// Backfill candidates behind the blocked head.
+    pub cand_ids: Vec<JobId>,
+    /// Scorer input columns: requested cores / runtime estimates / waits.
+    pub req: Vec<f32>,
+    pub est: Vec<f32>,
+    pub wait: Vec<f32>,
+    /// Candidate indices ranked by score.
+    pub rank: Vec<usize>,
+    /// The round's scratch plan: the shared timeline plus this round's
+    /// tentative holds, overwritten in place instead of cloned.
+    pub plan: AvailabilityProfile,
+}
+
 /// Scheduler input for one invocation.
 pub struct SchedInput<'a> {
     pub now: SimTime,
@@ -75,12 +103,16 @@ pub struct SchedInput<'a> {
     /// The shared availability timeline (free resources from `now` into
     /// the future), maintained incrementally by the simulation core. This
     /// is how every policy sees future reservations and down/draining
-    /// windows; policies must not mutate it — clone into a scratch plan
-    /// to lay tentative reservations.
+    /// windows; policies must not mutate it — lay tentative reservations
+    /// on the scratch plan instead.
     pub profile: &'a AvailabilityProfile,
     /// The queue ordering this round dispatches under (resolved by the
     /// driver: the CLI/config override, or the policy's natural order).
     pub order: &'a dyn QueueOrder,
+    /// Driver-owned per-round scratch ([`RoundScratch`]); `None` (unit
+    /// tests, ad-hoc callers) makes the scheduler fall back to a fresh
+    /// local scratch for the round.
+    pub scratch: Option<&'a std::cell::RefCell<RoundScratch>>,
 }
 
 /// A scheduling algorithm.

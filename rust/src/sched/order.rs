@@ -61,8 +61,26 @@ pub struct UserShare {
 pub trait QueueOrder {
     fn name(&self) -> &'static str;
 
-    /// The order this round walks the queue in.
-    fn view(&self, queue: &WaitQueue, now: SimTime) -> QueueView;
+    /// Write this round's dispatch order into `ids` (cleared first).
+    /// Returns `false` when the queue should be walked in place (arrival
+    /// order — the lazy path where a blocked head costs O(1)); `ids` is
+    /// left empty in that case. The buffer comes from the driver's
+    /// per-round scratch ([`crate::sched::RoundScratch`]), so ordered
+    /// rounds reuse one allocation instead of materializing a fresh id
+    /// vector every dispatch.
+    fn order_into(&self, queue: &WaitQueue, now: SimTime, ids: &mut Vec<JobId>) -> bool;
+
+    /// Allocating convenience wrapper around [`QueueOrder::order_into`]
+    /// (tests and one-shot callers; the simulator threads a reusable
+    /// buffer through `SchedInput::scratch` instead).
+    fn view(&self, queue: &WaitQueue, now: SimTime) -> QueueView {
+        let mut ids = Vec::new();
+        if self.order_into(queue, now, &mut ids) {
+            QueueView::Ids(ids)
+        } else {
+            QueueView::Arrival
+        }
+    }
 
     /// Driver callback: a run segment of a job owned by `user`/`group`
     /// ended at `now` after consuming `cores` for `seconds` ticks.
@@ -84,8 +102,9 @@ impl QueueOrder for ArrivalOrder {
         "arrival"
     }
 
-    fn view(&self, _queue: &WaitQueue, _now: SimTime) -> QueueView {
-        QueueView::Arrival
+    fn order_into(&self, _queue: &WaitQueue, _now: SimTime, ids: &mut Vec<JobId>) -> bool {
+        ids.clear();
+        false
     }
 }
 
@@ -98,8 +117,11 @@ pub struct ShortestFirst;
 #[derive(Debug, Default, Clone, Copy)]
 pub struct LongestFirst;
 
-/// Queue ids sorted by estimate (shared by SJF/LJF and their tests).
-pub(crate) fn order_by_estimate(queue: &WaitQueue, longest_first: bool) -> Vec<JobId> {
+/// Fill `ids` with queue ids sorted by estimate (shared by SJF/LJF).
+/// The sort-key tuples live in a transient local buffer; only the id
+/// buffer itself is reused across rounds.
+fn order_by_estimate_into(queue: &WaitQueue, longest_first: bool, ids: &mut Vec<JobId>) {
+    ids.clear();
     let mut jobs: Vec<(u64, u64, JobId)> = queue
         .iter()
         .map(|j| (j.est_runtime.ticks(), j.submit.ticks(), j.id))
@@ -109,7 +131,14 @@ pub(crate) fn order_by_estimate(queue: &WaitQueue, longest_first: bool) -> Vec<J
     } else {
         jobs.sort();
     }
-    jobs.into_iter().map(|(_, _, id)| id).collect()
+    ids.extend(jobs.into_iter().map(|(_, _, id)| id));
+}
+
+/// Queue ids sorted by estimate (tests and one-shot callers).
+pub(crate) fn order_by_estimate(queue: &WaitQueue, longest_first: bool) -> Vec<JobId> {
+    let mut ids = Vec::new();
+    order_by_estimate_into(queue, longest_first, &mut ids);
+    ids
 }
 
 impl QueueOrder for ShortestFirst {
@@ -117,8 +146,9 @@ impl QueueOrder for ShortestFirst {
         "shortest"
     }
 
-    fn view(&self, queue: &WaitQueue, _now: SimTime) -> QueueView {
-        QueueView::Ids(order_by_estimate(queue, false))
+    fn order_into(&self, queue: &WaitQueue, _now: SimTime, ids: &mut Vec<JobId>) -> bool {
+        order_by_estimate_into(queue, false, ids);
+        true
     }
 }
 
@@ -127,8 +157,9 @@ impl QueueOrder for LongestFirst {
         "longest"
     }
 
-    fn view(&self, queue: &WaitQueue, _now: SimTime) -> QueueView {
-        QueueView::Ids(order_by_estimate(queue, true))
+    fn order_into(&self, queue: &WaitQueue, _now: SimTime, ids: &mut Vec<JobId>) -> bool {
+        order_by_estimate_into(queue, true, ids);
+        true
     }
 }
 
@@ -176,13 +207,15 @@ impl QueueOrder for FairShare {
         "fair-share"
     }
 
-    fn view(&self, queue: &WaitQueue, now: SimTime) -> QueueView {
+    fn order_into(&self, queue: &WaitQueue, now: SimTime, ids: &mut Vec<JobId>) -> bool {
+        ids.clear();
         let mut jobs: Vec<(f64, u64, JobId)> = queue
             .iter()
             .map(|j| (self.effective_usage(j.user, j.group, now), j.submit.ticks(), j.id))
             .collect();
         jobs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
-        QueueView::Ids(jobs.into_iter().map(|(_, _, id)| id).collect())
+        ids.extend(jobs.into_iter().map(|(_, _, id)| id));
+        true
     }
 
     fn record_usage(&mut self, user: u32, group: u32, cores: u64, seconds: u64, now: SimTime) {

@@ -252,7 +252,14 @@ mod tests {
         starver.priority = 2;
         q.push(starver);
         let run = [running(10, 4, 0, 0), running(11, 4, 50, 0)];
-        let input = SchedInput { now: SimTime(500), queue: &q, running: &run , profile: &crate::resources::AvailabilityProfile::EMPTY, order: &crate::sched::ArrivalOrder };
+        let input = SchedInput {
+            now: SimTime(500),
+            queue: &q,
+            running: &run,
+            profile: &crate::resources::AvailabilityProfile::EMPTY,
+            order: &crate::sched::ArrivalOrder,
+            scratch: None,
+        };
         let mut s = PreemptiveScheduler::new(Policy::Fcfs.build(), cfg(100));
         // Youngest segment (job 11, started at 50) goes first, and one
         // victim is enough for a 4-core starver.
@@ -266,7 +273,14 @@ mod tests {
         let mut q = WaitQueue::new();
         q.push(Job::simple(1, 0, 4, 100)); // priority 0, same as victim
         let run = [running(10, 4, 0, 0)];
-        let input = SchedInput { now: SimTime(500), queue: &q, running: &run , profile: &crate::resources::AvailabilityProfile::EMPTY, order: &crate::sched::ArrivalOrder };
+        let input = SchedInput {
+            now: SimTime(500),
+            queue: &q,
+            running: &run,
+            profile: &crate::resources::AvailabilityProfile::EMPTY,
+            order: &crate::sched::ArrivalOrder,
+            scratch: None,
+        };
         let mut s = PreemptiveScheduler::new(Policy::Fcfs.build(), cfg(100));
         assert!(s.preempt(&input, &c).is_empty());
     }
@@ -280,7 +294,14 @@ mod tests {
         j.priority = 2;
         q.push(j);
         let run = [running(10, 4, 0, 0)];
-        let input = SchedInput { now: SimTime(500), queue: &q, running: &run , profile: &crate::resources::AvailabilityProfile::EMPTY, order: &crate::sched::ArrivalOrder };
+        let input = SchedInput {
+            now: SimTime(500),
+            queue: &q,
+            running: &run,
+            profile: &crate::resources::AvailabilityProfile::EMPTY,
+            order: &crate::sched::ArrivalOrder,
+            scratch: None,
+        };
         let mut s = PreemptiveScheduler::new(Policy::Fcfs.build(), cfg(100));
         // Waited only 50 < 100 threshold.
         assert!(s.preempt(&input, &c).is_empty());
@@ -291,7 +312,14 @@ mod tests {
         let mut big = Job::simple(2, 0, 8, 100);
         big.priority = 2;
         q2.push(big);
-        let input2 = SchedInput { now: SimTime(500), queue: &q2, running: &run , profile: &crate::resources::AvailabilityProfile::EMPTY, order: &crate::sched::ArrivalOrder };
+        let input2 = SchedInput {
+            now: SimTime(500),
+            queue: &q2,
+            running: &run,
+            profile: &crate::resources::AvailabilityProfile::EMPTY,
+            order: &crate::sched::ArrivalOrder,
+            scratch: None,
+        };
         assert!(s.preempt(&input2, &c).is_empty());
     }
 
@@ -302,7 +330,14 @@ mod tests {
         let mut c = crate::resources::Cluster::homogeneous(1, 4, 0);
         let mut q = WaitQueue::new();
         q.push(Job::simple(1, 0, 2, 10));
-        let input = SchedInput { now: SimTime(0), queue: &q, running: &[] , profile: &crate::resources::AvailabilityProfile::EMPTY, order: &crate::sched::ArrivalOrder };
+        let input = SchedInput {
+            now: SimTime(0),
+            queue: &q,
+            running: &[],
+            profile: &crate::resources::AvailabilityProfile::EMPTY,
+            order: &crate::sched::ArrivalOrder,
+            scratch: None,
+        };
         // Threshold 0 disables starvation eviction entirely.
         assert!(s.preempt(&input, &c).is_empty());
         let allocs = s.schedule(&input, &mut c);

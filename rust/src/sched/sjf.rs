@@ -23,6 +23,7 @@ mod tests {
             running: &[],
             profile: &crate::resources::AvailabilityProfile::EMPTY,
             order: &ShortestFirst,
+            scratch: None,
         }
     }
 

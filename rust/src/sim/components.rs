@@ -19,18 +19,49 @@ use crate::core::stats::TimeSeries;
 use crate::core::time::{SimDuration, SimTime};
 use crate::job::{Job, JobId, WaitQueue};
 use crate::resources::{Allocation, AvailabilityProfile, Cluster, NodeState, ResourceVector};
-use crate::sched::{ArrivalOrder, PreemptionConfig, QueueOrder, RunningJob, SchedInput, Scheduler, UserShare};
+use crate::sched::{
+    ArrivalOrder, PreemptionConfig, QueueOrder, RoundScratch, RunningJob, SchedInput, Scheduler,
+    UserShare,
+};
 use crate::sim::faults::ReservationSpec;
-use crate::sim::Ev;
+use crate::sim::{Ev, Horizon};
 use std::any::Any;
+use std::cell::RefCell;
 use std::collections::HashMap;
+
+/// Queue depth at or below which `Horizon::Auto` plans exactly — the
+/// timeline stays short on its own when few jobs wait, so clamping
+/// would only cost fidelity.
+pub const AUTO_SHALLOW_QUEUE: usize = 256;
+/// Auto clamp length: this many *median queue runtime estimates* of
+/// lookahead. Deep enough that shadow times and candidate admission
+/// windows stay faithful (estimates beyond the clamp are the heavy
+/// tail no backfill decision reaches), shallow enough to bound
+/// breakpoint count at million-job queue depths.
+pub const AUTO_HORIZON_ESTIMATES: u64 = 32;
+/// Auto clamp floor in ticks (one simulated hour) — degenerate queues
+/// of sub-minute jobs must not collapse the timeline to a sliver.
+pub const AUTO_MIN_HORIZON: u64 = 3_600;
+
+/// Where a [`JobSource`]'s jobs come from.
+enum JobFeed {
+    /// Eagerly loaded jobs in *reverse* submit order (O(1) pop off the
+    /// back) — the classic path.
+    Eager(Vec<Job>),
+    /// Pull-based stream with a one-job lookahead: the constant-memory
+    /// ingestion path for million-job traces. The stream must yield jobs
+    /// in nondecreasing submit order (archive traces are submit-sorted);
+    /// a late record is emitted immediately rather than reordered.
+    Stream { next: Option<Box<Job>>, iter: Box<dyn Iterator<Item = Job> + Send> },
+}
 
 /// Replays a workload as timed `Submit` events (incremental: one
 /// self-event per distinct arrival time, so memory stays O(1) in the
-/// event queue even for million-job traces).
+/// event queue even for million-job traces). With a streamed feed
+/// ([`JobSource::from_stream`]) the *trace* stays out of memory too:
+/// at most one job is buffered ahead of the simulation clock.
 pub struct JobSource {
-    /// Jobs in submit order (reversed internally for O(1) pop).
-    jobs: Vec<Job>,
+    feed: JobFeed,
     /// Where submissions go (the scheduler). Set by the builder.
     pub target: ComponentId,
     emitted: u64,
@@ -40,21 +71,70 @@ impl JobSource {
     pub fn new(mut jobs: Vec<Job>) -> JobSource {
         jobs.sort_by_key(|j| (j.submit, j.id));
         jobs.reverse();
-        JobSource { jobs, target: 0, emitted: 0 }
+        JobSource { feed: JobFeed::Eager(jobs), target: 0, emitted: 0 }
+    }
+
+    /// Streamed feed: jobs are pulled one at a time as simulated time
+    /// reaches them — the trace is never materialized (type-level: the
+    /// lookahead is an `Option<Box<Job>>`, there is no `Vec<Job>` to
+    /// grow). The stream must be sorted by submit time.
+    pub fn from_stream(iter: Box<dyn Iterator<Item = Job> + Send>) -> JobSource {
+        JobSource { feed: JobFeed::Stream { next: None, iter }, target: 0, emitted: 0 }
+    }
+
+    /// Jobs emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Jobs currently buffered outside the engine: the whole remaining
+    /// trace on the eager path, at most one on the streamed path — the
+    /// bounded-memory pin the scale tests assert.
+    pub fn buffered(&self) -> usize {
+        match &self.feed {
+            JobFeed::Eager(v) => v.len(),
+            JobFeed::Stream { next, .. } => usize::from(next.is_some()),
+        }
+    }
+
+    /// Submit time of the next job, pulling the stream's lookahead if
+    /// needed. `None` when the feed is exhausted.
+    fn peek_submit(&mut self) -> Option<SimTime> {
+        match &mut self.feed {
+            JobFeed::Eager(v) => v.last().map(|j| j.submit),
+            JobFeed::Stream { next, iter } => {
+                if next.is_none() {
+                    *next = iter.next().map(Box::new);
+                }
+                next.as_ref().map(|j| j.submit)
+            }
+        }
+    }
+
+    fn pop_next(&mut self) -> Option<Box<Job>> {
+        match &mut self.feed {
+            JobFeed::Eager(v) => v.pop().map(Box::new),
+            JobFeed::Stream { next, iter } => {
+                if next.is_none() {
+                    *next = iter.next().map(Box::new);
+                }
+                next.take()
+            }
+        }
     }
 
     fn emit_due(&mut self, ctx: &mut Ctx<Ev>) {
         let now = ctx.now();
-        while let Some(j) = self.jobs.last() {
-            if j.submit > now {
+        while let Some(submit) = self.peek_submit() {
+            if submit > now {
                 break;
             }
-            let job = self.jobs.pop().unwrap();
+            let job = self.pop_next().unwrap();
             self.emitted += 1;
-            ctx.send(self.target, Priority::ARRIVE, Ev::Submit(Box::new(job)));
+            ctx.send(self.target, Priority::ARRIVE, Ev::Submit(job));
         }
-        if let Some(next) = self.jobs.last() {
-            let delay = next.submit - now;
+        if let Some(next) = self.peek_submit() {
+            let delay = next - now;
             ctx.schedule_self(delay, Priority::ARRIVE, Ev::NextArrival);
         }
     }
@@ -66,8 +146,9 @@ impl Component<Ev> for JobSource {
     }
 
     fn init(&mut self, ctx: &mut Ctx<Ev>) {
-        if let Some(first) = self.jobs.last() {
-            let delay = first.submit - ctx.now();
+        let now = ctx.now();
+        if let Some(first) = self.peek_submit() {
+            let delay = first - now;
             ctx.schedule_self(delay, Priority::ARRIVE, Ev::NextArrival);
         }
     }
@@ -160,11 +241,25 @@ pub struct SchedulerComponent {
     /// The shared availability timeline every planning policy reads
     /// (`SchedInput::profile`).
     profile: AvailabilityProfile,
-    /// Planning horizon in ticks (`planning.horizon`): hold releases are
-    /// coalesced to at most `now + horizon`, bounding timeline length on
-    /// huge running sets at the cost of fidelity past the horizon.
-    /// 0 = unlimited (exact timeline, the default).
-    pub planning_horizon: u64,
+    /// Planning-horizon policy (`planning.horizon`): hold releases are
+    /// coalesced to at most `now + effective_horizon`, bounding timeline
+    /// length on huge running sets at the cost of fidelity past the
+    /// horizon. `Exact` = unlimited timeline (the default); `Auto`
+    /// derives the clamp from live queue state (see
+    /// [`SchedulerComponent::derive_auto_horizon`]).
+    horizon: Horizon,
+    /// The clamp currently in force, in ticks (0 = exact). Equals the
+    /// fixed horizon, or the last auto derivation.
+    effective_horizon: u64,
+    /// Queue depth when the auto horizon was last derived (staleness
+    /// check — re-derive when the depth halves or doubles).
+    auto_depth: usize,
+    /// Reusable per-round scratch (order views, candidate buffers, the
+    /// scratch plan) — threaded to every policy via `SchedInput::scratch`
+    /// so steady-state dispatch rounds allocate nothing.
+    scratch: RefCell<RoundScratch>,
+    /// Reusable running-jobs snapshot buffer (preemption layer only).
+    running_scratch: Vec<RunningJob>,
     /// Failed node -> known repair instant (the timeline promises the
     /// capacity back at that time).
     pending_repairs: HashMap<usize, u64>,
@@ -185,7 +280,37 @@ pub struct SchedulerComponent {
     /// each departure does not trigger its own full resync — the
     /// transition handler rebuilds once at the end.
     defer_resync: bool,
+    /// Completed jobs with their full lifecycle records. Streaming-scale
+    /// runs turn retention off (`retain_completed = false`) so memory
+    /// stays O(active jobs); the scalar aggregates below survive either
+    /// way.
     pub completed: Vec<Job>,
+    /// Whether completed jobs (and the unbounded per-event metric
+    /// series) are retained. When off — the streaming-scale mode — the
+    /// incremental time-weighted aggregates below are the durable
+    /// output, so nothing in the component grows with trace length.
+    pub retain_completed: bool,
+    /// Jobs completed over the run (counted even when not retained).
+    pub completed_count: u64,
+    /// Sum of completed jobs' wait times in ticks (streaming aggregate).
+    pub wait_ticks_total: f64,
+    /// Useful core-seconds delivered (runtime x cores per completion) —
+    /// the goodput numerator, O(1) memory.
+    pub useful_work: f64,
+    /// Incremental time-weighted aggregates, maintained in lock-step
+    /// with the metric series: integral of utilization resp. available
+    /// cores over time, the step values last recorded, the first/last
+    /// record instants, and the availability integral snapshotted at the
+    /// most recent completion (the goodput denominator).
+    first_record_t: Option<u64>,
+    last_record_t: u64,
+    last_util: f64,
+    last_mem_util: f64,
+    last_avail: f64,
+    util_integral: f64,
+    mem_util_integral: f64,
+    avail_integral: f64,
+    avail_integral_at_completion: f64,
     pub rejected: u64,
     pub executor: ComponentId,
     dispatch_pending: bool,
@@ -229,7 +354,11 @@ impl SchedulerComponent {
             queue: WaitQueue::new(),
             running: HashMap::new(),
             profile,
-            planning_horizon: 0,
+            horizon: Horizon::Exact,
+            effective_horizon: 0,
+            auto_depth: 0,
+            scratch: RefCell::new(RoundScratch::default()),
+            running_scratch: Vec::new(),
             pending_repairs: HashMap::new(),
             resv_pending: Vec::new(),
             resv_plan_cores: Vec::new(),
@@ -237,6 +366,19 @@ impl SchedulerComponent {
             last_resync: 0,
             defer_resync: false,
             completed: Vec::new(),
+            retain_completed: true,
+            completed_count: 0,
+            wait_ticks_total: 0.0,
+            useful_work: 0.0,
+            first_record_t: None,
+            last_record_t: 0,
+            last_util: 0.0,
+            last_mem_util: 0.0,
+            last_avail: 0.0,
+            util_integral: 0.0,
+            mem_util_integral: 0.0,
+            avail_integral: 0.0,
+            avail_integral_at_completion: 0.0,
             rejected: 0,
             executor: 0,
             dispatch_pending: false,
@@ -277,6 +419,27 @@ impl SchedulerComponent {
     }
 
     fn record_series(&mut self, now: SimTime) {
+        // Incremental time-weighted aggregates first (O(1) memory): the
+        // previous step value held from `last_record_t` until now.
+        let nowt = now.ticks();
+        if self.first_record_t.is_none() {
+            self.first_record_t = Some(nowt);
+        }
+        let dt = nowt.saturating_sub(self.last_record_t) as f64;
+        self.util_integral += self.last_util * dt;
+        self.mem_util_integral += self.last_mem_util * dt;
+        self.avail_integral += self.last_avail * dt;
+        self.last_record_t = nowt;
+        self.last_util = self.cluster.utilization();
+        self.last_mem_util =
+            if self.memory_aware { self.cluster.memory_utilization() } else { 0.0 };
+        self.last_avail = self.cluster.available_cores() as f64;
+        if !self.retain_completed {
+            // Streaming-scale mode: the per-event series would grow
+            // O(events) with the trace; the aggregates above are the
+            // durable output instead.
+            return;
+        }
         self.occupancy.record(now, self.cluster.occupied_nodes() as f64);
         self.running_series.record(now, self.running.len() as f64);
         self.util_series.record(now, self.cluster.utilization());
@@ -284,6 +447,44 @@ impl SchedulerComponent {
         self.avail_series.record(now, self.cluster.available_cores() as f64);
         if self.memory_aware {
             self.mem_util_series.record(now, self.cluster.memory_utilization());
+        }
+    }
+
+    /// Time-weighted mean utilization from the incremental aggregates —
+    /// same law as `TimeSeries::time_weighted_mean` (integral from the
+    /// first record to `end`, over that span). Streaming-scale runs read
+    /// this; retained runs read their full series.
+    pub fn streaming_mean_utilization(&self, end: SimTime) -> f64 {
+        let Some(first) = self.first_record_t else { return 0.0 };
+        let endt = end.ticks();
+        let span = endt.saturating_sub(first) as f64;
+        if span == 0.0 {
+            return self.last_util;
+        }
+        let tail = endt.saturating_sub(self.last_record_t) as f64 * self.last_util;
+        (self.util_integral + tail) / span
+    }
+
+    /// Memory analogue of [`SchedulerComponent::streaming_mean_utilization`]
+    /// (0 on runs that never tracked memory).
+    pub fn streaming_mean_memory_utilization(&self, end: SimTime) -> f64 {
+        let Some(first) = self.first_record_t else { return 0.0 };
+        let endt = end.ticks();
+        let span = endt.saturating_sub(first) as f64;
+        if span == 0.0 {
+            return self.last_mem_util;
+        }
+        let tail = endt.saturating_sub(self.last_record_t) as f64 * self.last_mem_util;
+        (self.mem_util_integral + tail) / span
+    }
+
+    /// Goodput from the incremental aggregates: useful core-seconds per
+    /// available core-second up to the last completion.
+    pub fn streaming_effective_utilization(&self) -> f64 {
+        if self.avail_integral_at_completion > 0.0 {
+            self.useful_work / self.avail_integral_at_completion
+        } else {
+            0.0
         }
     }
 
@@ -298,23 +499,73 @@ impl SchedulerComponent {
         self.queue_order = order;
     }
 
+    /// Install the planning-horizon policy (builder).
+    pub fn set_horizon(&mut self, horizon: Horizon) {
+        self.horizon = horizon;
+        self.effective_horizon = match horizon {
+            Horizon::Fixed(t) => t,
+            Horizon::Exact | Horizon::Auto => 0,
+        };
+    }
+
+    /// The clamp currently in force, in ticks (0 = exact) — tests and
+    /// observability.
+    pub fn effective_horizon(&self) -> u64 {
+        self.effective_horizon
+    }
+
+    /// Auto-horizon law (`planning.horizon = "auto"`): exact planning
+    /// while the queue is shallow; past [`AUTO_SHALLOW_QUEUE`] waiters
+    /// the timeline is clamped to [`AUTO_HORIZON_ESTIMATES`] median
+    /// runtime estimates (floored at [`AUTO_MIN_HORIZON`]), so timeline
+    /// length tracks the depth of planning the rounds actually exploit
+    /// instead of the tail of every running job's estimate. Derived from
+    /// queue state only — byte-deterministic across runs.
+    fn derive_auto_horizon(&mut self) {
+        self.auto_depth = self.queue.len();
+        if self.auto_depth <= AUTO_SHALLOW_QUEUE {
+            self.effective_horizon = 0;
+            return;
+        }
+        let mut ests: Vec<u64> =
+            self.queue.iter().map(|j| j.est_runtime.ticks().max(1)).collect();
+        let mid = ests.len() / 2;
+        let (_, median, _) = ests.select_nth_unstable(mid);
+        self.effective_horizon =
+            (*median).saturating_mul(AUTO_HORIZON_ESTIMATES).max(AUTO_MIN_HORIZON);
+    }
+
+    /// Whether the auto horizon should be re-derived: the queue depth
+    /// has halved or doubled since the last derivation (amortized O(1)
+    /// triggers per queue push, so the O(queue) median stays off the
+    /// steady-state dispatch path).
+    fn auto_horizon_stale(&self) -> bool {
+        if self.horizon != Horizon::Auto {
+            return false;
+        }
+        let depth = self.queue.len().max(1);
+        let last = self.auto_depth.max(1);
+        depth >= last * 2 || depth * 2 <= last
+    }
+
     /// Decayed per-user usage at `now` (empty unless the ordering
     /// tracks usage — fair share).
     pub fn user_shares(&self, now: SimTime) -> Vec<UserShare> {
         self.queue_order.usage_snapshot(now)
     }
 
-    fn snapshot_running(&self) -> Vec<RunningJob> {
-        self.running
-            .values()
-            .map(|e| RunningJob {
-                id: e.job.id,
-                cores: e.alloc.cores(),
-                est_end: e.est_end,
-                start: e.job.last_start.unwrap_or(SimTime::ZERO),
-                priority: e.job.priority,
-            })
-            .collect()
+    /// Fill `out` with the running-set snapshot (cleared first). An
+    /// associated fn over the map so the caller can hold the reusable
+    /// buffer (`running_scratch`) while `self.running` stays borrowed.
+    fn fill_running_snapshot(running: &HashMap<JobId, RunningEntry>, out: &mut Vec<RunningJob>) {
+        out.clear();
+        out.extend(running.values().map(|e| RunningJob {
+            id: e.job.id,
+            cores: e.alloc.cores(),
+            est_end: e.est_end,
+            start: e.job.last_start.unwrap_or(SimTime::ZERO),
+            priority: e.job.priority,
+        }));
     }
 
     /// Ids of running jobs whose allocation touches any node in `nodes`,
@@ -441,7 +692,16 @@ impl SchedulerComponent {
     /// promised.
     fn resync_profile(&mut self, now: SimTime) {
         let nowt = now.ticks();
-        let horizon = self.planning_horizon;
+        // Auto horizon: a resync re-derives the clamp when queue depth
+        // has drifted (the staleness law), so the re-encoding below and
+        // all later incremental holds agree on one horizon until the
+        // next derivation. Gated on staleness because fault-heavy runs
+        // resync often — an O(queue) median on every repair would put
+        // the cost right back on the path this mode optimizes.
+        if self.auto_horizon_stale() {
+            self.derive_auto_horizon();
+        }
+        let horizon = self.effective_horizon;
         let mem_aware = self.memory_aware;
         let clamp = |t: u64| Self::clamp_to_horizon(horizon, nowt, t);
         let resv_ends: Vec<u64> =
@@ -691,32 +951,36 @@ impl SchedulerComponent {
         let now = ctx.now();
         // The availability timeline tracks "from now on"; drop history.
         self.profile.advance(now.ticks());
-        // Finite horizon: events clamped away at the last resync
-        // (reservation windows, far-out releases) must re-enter the
-        // timeline as time approaches them. Refreshing every horizon/2
-        // ticks of progress guarantees at least half a horizon of
-        // advance notice while keeping resyncs rare.
-        if self.planning_horizon > 0
-            && now.ticks().saturating_sub(self.last_resync)
-                >= (self.planning_horizon / 2).max(1)
+        // Auto horizon: re-derive (and re-encode the timeline under the
+        // new clamp) when queue depth has drifted a factor of two from
+        // the last derivation. Finite horizons also refresh on time:
+        // events clamped away at the last resync (reservation windows,
+        // far-out releases) must re-enter the timeline as time
+        // approaches them — every horizon/2 ticks of progress guarantees
+        // at least half a horizon of advance notice while keeping
+        // resyncs rare.
+        if self.auto_horizon_stale()
+            || (self.effective_horizon > 0
+                && now.ticks().saturating_sub(self.last_resync)
+                    >= (self.effective_horizon / 2).max(1))
         {
             self.resync_profile(now);
         }
         // Phase 0 — policy-driven preemption (fault subsystem): the
         // scheduler may evict strictly lower-priority running jobs for a
         // starving waiting job before the allocation pass. The snapshot
-        // is built at most once per round and reused by the allocation
-        // pass unless evictions invalidated it (snapshots are O(running)
-        // on the DES hot path). Planning policies read the timeline
-        // instead and skip the snapshot entirely.
+        // is filled into a reusable buffer at most once per round and
+        // reused by the allocation pass unless evictions invalidated it
+        // (snapshots are O(running) on the DES hot path). Planning
+        // policies read the timeline instead and skip the snapshot
+        // entirely.
         let evictions_possible = self.preemption.enabled()
             && self.preemption.starvation_threshold > SimDuration::ZERO;
-        let mut running_info: Vec<RunningJob> =
-            if evictions_possible || self.scheduler.uses_running_info() {
-                self.snapshot_running()
-            } else {
-                Vec::new()
-            };
+        let mut running_info = std::mem::take(&mut self.running_scratch);
+        running_info.clear();
+        if evictions_possible || self.scheduler.uses_running_info() {
+            Self::fill_running_snapshot(&self.running, &mut running_info);
+        }
         if evictions_possible {
             let victims = {
                 let input = SchedInput {
@@ -725,6 +989,7 @@ impl SchedulerComponent {
                     running: &running_info,
                     profile: &self.profile,
                     order: &*self.queue_order,
+                    scratch: Some(&self.scratch),
                 };
                 self.scheduler.preempt(&input, &self.cluster)
             };
@@ -732,11 +997,10 @@ impl SchedulerComponent {
                 for id in victims {
                     self.interrupt_job(id, InterruptReason::Eviction, ctx);
                 }
-                running_info = if self.scheduler.uses_running_info() {
-                    self.snapshot_running()
-                } else {
-                    Vec::new()
-                };
+                running_info.clear();
+                if self.scheduler.uses_running_info() {
+                    Self::fill_running_snapshot(&self.running, &mut running_info);
+                }
             }
         }
         let allocations = {
@@ -746,9 +1010,11 @@ impl SchedulerComponent {
                 running: &running_info,
                 profile: &self.profile,
                 order: &*self.queue_order,
+                scratch: Some(&self.scratch),
             };
             self.scheduler.schedule(&input, &mut self.cluster)
         };
+        self.running_scratch = running_info;
         for alloc in allocations {
             let mut job = self
                 .queue
@@ -759,7 +1025,7 @@ impl SchedulerComponent {
             // Incremental timeline update: the job holds its resources
             // until the estimated end (clamped to the planning horizon).
             let nowt = now.ticks();
-            let planned = Self::clamp_to_horizon(self.planning_horizon, nowt, est_end.ticks());
+            let planned = Self::clamp_to_horizon(self.effective_horizon, nowt, est_end.ticks());
             let mut hold = Vec::new();
             if planned > nowt {
                 let d = ResourceVector::new(
@@ -827,9 +1093,19 @@ impl SchedulerComponent {
         self.queue_order
             .record_usage(job.user, job.group, alloc.cores(), elapsed.ticks(), now);
         job.mark_completed(now);
-        self.completed.push(job);
+        self.completed_count += 1;
+        if let Some(wt) = job.wait_time() {
+            self.wait_ticks_total += wt.as_f64();
+        }
+        self.useful_work += job.runtime.as_f64() * job.cores as f64;
+        if self.retain_completed {
+            self.completed.push(job);
+        }
         self.settle_drained_nodes(&alloc.node_ids());
         self.record_series(now);
+        // Goodput denominator: available core-seconds up to this (the
+        // latest) completion.
+        self.avail_integral_at_completion = self.avail_integral;
         if !self.queue.is_empty() {
             self.request_dispatch(ctx);
         }
@@ -958,10 +1234,29 @@ mod tests {
             Job::simple(1, 10, 1, 5),
             Job::simple(3, 20, 1, 5),
         ];
-        let s = JobSource::new(jobs);
-        // Reversed internal order: last = earliest (id 1 at t=10).
-        assert_eq!(s.jobs.last().unwrap().id, 1);
-        assert_eq!(s.jobs.first().unwrap().id, 3);
+        let mut s = JobSource::new(jobs);
+        assert_eq!(s.buffered(), 3, "eager feed holds the whole trace");
+        // Sorted feed: earliest (id 1 at t=10) pops first.
+        assert_eq!(s.peek_submit(), Some(SimTime(10)));
+        assert_eq!(s.pop_next().unwrap().id, 1);
+        assert_eq!(s.pop_next().unwrap().id, 2);
+        assert_eq!(s.pop_next().unwrap().id, 3);
+        assert!(s.pop_next().is_none());
+    }
+
+    #[test]
+    fn streamed_source_buffers_exactly_one_job() {
+        let jobs = vec![Job::simple(1, 0, 1, 5), Job::simple(2, 10, 1, 5)];
+        let mut s = JobSource::from_stream(Box::new(jobs.into_iter()));
+        assert_eq!(s.buffered(), 0);
+        assert_eq!(s.peek_submit(), Some(SimTime(0)));
+        assert_eq!(s.buffered(), 1, "streamed lookahead is exactly one job");
+        assert_eq!(s.pop_next().unwrap().id, 1);
+        assert_eq!(s.peek_submit(), Some(SimTime(10)));
+        assert_eq!(s.buffered(), 1);
+        assert_eq!(s.pop_next().unwrap().id, 2);
+        assert_eq!(s.peek_submit(), None);
+        assert_eq!(s.buffered(), 0);
     }
 
     #[test]

@@ -33,6 +33,65 @@ use crate::trace::Workload;
 /// of magnitude production schedulers use for usage decay.
 pub const DEFAULT_FAIRSHARE_HALF_LIFE: u64 = 86_400;
 
+/// Planning-horizon policy for the availability timeline
+/// (`planning.horizon` / `--horizon`).
+///
+/// The horizon clamps how far into the future the timeline encodes
+/// capacity changes: hold releases beyond `now + horizon` coalesce onto
+/// the horizon breakpoint, bounding timeline length at the cost of
+/// fidelity past it. `Auto` is the scale mode: the component derives the
+/// clamp from live queue depth and the median runtime estimate each
+/// resync — exact planning when the queue is shallow, bounded timeline
+/// length when millions of jobs pile up (see
+/// [`components::AUTO_SHALLOW_QUEUE`] and friends for the law).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Horizon {
+    /// Unlimited timeline — exact planning (the default; config `0` or
+    /// `"exact"`).
+    #[default]
+    Exact,
+    /// Fixed clamp in ticks.
+    Fixed(u64),
+    /// Clamp derived from live queue state (config `"auto"`).
+    Auto,
+}
+
+impl Horizon {
+    /// Normalize a tick count: a zero fixed horizon *is* exact planning.
+    pub fn fixed(ticks: u64) -> Horizon {
+        if ticks == 0 {
+            Horizon::Exact
+        } else {
+            Horizon::Fixed(ticks)
+        }
+    }
+}
+
+impl std::str::FromStr for Horizon {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Horizon, String> {
+        let t = s.trim();
+        match t.to_ascii_lowercase().as_str() {
+            "auto" => Ok(Horizon::Auto),
+            "exact" => Ok(Horizon::Exact),
+            other => other.parse::<u64>().map(Horizon::fixed).map_err(|_| {
+                format!("planning horizon must be a tick count, \"auto\" or \"exact\" (got {t:?})")
+            }),
+        }
+    }
+}
+
+impl std::fmt::Display for Horizon {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Horizon::Exact => f.write_str("exact"),
+            Horizon::Fixed(t) => write!(f, "{t}"),
+            Horizon::Auto => f.write_str("auto"),
+        }
+    }
+}
+
 /// Event payload exchanged between simulation components.
 #[derive(Debug, Clone)]
 pub enum Ev {
@@ -69,8 +128,16 @@ pub enum Ev {
 pub struct SimReport {
     pub policy: &'static str,
     pub workload: String,
-    /// All jobs that completed, with timestamps.
+    /// All jobs that completed, with timestamps. Empty (regardless of
+    /// how many jobs ran) when the simulation dropped per-job records
+    /// (`retain_completed = false`, the streaming-scale path) — use
+    /// `completed_count` and [`SimReport::mean_wait_overall`] there.
     pub completed: Vec<Job>,
+    /// Jobs completed over the run, counted even when not retained.
+    pub completed_count: u64,
+    /// Sum of completed jobs' wait times in ticks (streaming aggregate —
+    /// survives `retain_completed = false`).
+    pub wait_ticks_total: f64,
     pub rejected: u64,
     /// DES events processed.
     pub events: u64,
@@ -120,6 +187,18 @@ pub struct SimReport {
 impl SimReport {
     pub fn wait_stats(&self) -> WaitStats {
         wait_stats(&self.completed)
+    }
+
+    /// Mean wait over *every* completed job, from the streaming
+    /// aggregates — identical to `wait_stats().mean_wait` on runs that
+    /// retained per-job records, and the only wait metric available on
+    /// streaming-scale runs that did not.
+    pub fn mean_wait_overall(&self) -> f64 {
+        if self.completed_count == 0 {
+            0.0
+        } else {
+            self.wait_ticks_total / self.completed_count as f64
+        }
     }
 
     /// Makespan: last completion minus first submission.
@@ -195,11 +274,22 @@ pub struct Simulation {
     pub preemption: PreemptionConfig,
     /// Advance reservations, applied in declaration order.
     pub reservations: Vec<ReservationSpec>,
-    /// Planning horizon for the availability timeline
-    /// (`planning.horizon`, ticks): hold releases beyond `now + horizon`
-    /// coalesce to the horizon, bounding timeline length at the cost of
-    /// fidelity past it. 0 = unlimited (exact timeline, the default).
-    pub planning_horizon: u64,
+    /// Planning-horizon policy for the availability timeline
+    /// (`planning.horizon`): see [`Horizon`].
+    pub planning_horizon: Horizon,
+    /// Streamed job feed (constant-memory million-job ingestion): when
+    /// set, the source pulls jobs from this iterator one at a time as
+    /// simulated time reaches them instead of replaying
+    /// `workload.jobs` — pair with [`crate::trace::Workload::machine`].
+    /// The stream must yield jobs in nondecreasing submit order. Fault
+    /// injection cannot see the last submission of a stream, so streamed
+    /// fault runs should set `faults.until` explicitly.
+    pub job_stream: Option<Box<dyn Iterator<Item = Job> + Send>>,
+    /// Whether completed jobs keep their per-job lifecycle records in
+    /// the report (default). Streaming-scale runs turn this off so peak
+    /// memory is O(active jobs); scalar aggregates
+    /// (`SimReport::completed_count`, mean wait) survive either way.
+    pub retain_completed: bool,
     /// Queue-ordering override (`scheduler.order` / `--order`); `None`
     /// uses the policy's natural order (SJF = shortest-first, etc.).
     pub order: Option<OrderKind>,
@@ -222,7 +312,9 @@ impl Simulation {
             faults: FaultConfig::default(),
             preemption: PreemptionConfig::default(),
             reservations: Vec::new(),
-            planning_horizon: 0,
+            planning_horizon: Horizon::Exact,
+            job_stream: None,
+            retain_completed: true,
             order: None,
             fairshare_half_life: DEFAULT_FAIRSHARE_HALF_LIFE,
             memory_aware: false,
@@ -274,8 +366,29 @@ impl Simulation {
         self
     }
 
+    /// Fixed planning horizon in ticks (0 = exact) — the classic knob;
+    /// see [`Simulation::with_horizon`] for the full policy surface.
     pub fn with_planning_horizon(mut self, horizon: u64) -> Simulation {
+        self.planning_horizon = Horizon::fixed(horizon);
+        self
+    }
+
+    pub fn with_horizon(mut self, horizon: Horizon) -> Simulation {
         self.planning_horizon = horizon;
+        self
+    }
+
+    /// Feed jobs from a stream instead of `workload.jobs` (see the
+    /// [`Simulation::job_stream`] field docs).
+    pub fn with_job_stream(mut self, stream: Box<dyn Iterator<Item = Job> + Send>) -> Simulation {
+        self.job_stream = Some(stream);
+        self
+    }
+
+    /// Toggle per-job record retention (see
+    /// [`Simulation::retain_completed`]).
+    pub fn with_retain_completed(mut self, retain: bool) -> Simulation {
+        self.retain_completed = retain;
         self
     }
 
@@ -292,6 +405,8 @@ impl Simulation {
             preemption,
             reservations,
             planning_horizon,
+            job_stream,
+            retain_completed,
             order,
             fairshare_half_life,
             memory_aware,
@@ -315,7 +430,10 @@ impl Simulation {
         let wire_injector = faults.enabled() || !reservations.is_empty();
 
         let mut engine: Engine<Ev> = Engine::new(seed);
-        let source = engine.add(Box::new(JobSource::new(workload.jobs)));
+        let source = match job_stream {
+            Some(stream) => engine.add(Box::new(JobSource::from_stream(stream))),
+            None => engine.add(Box::new(JobSource::new(workload.jobs))),
+        };
         let sched = engine.add(Box::new(SchedulerComponent::new(cluster, scheduler)));
         let exec = engine.add(Box::new(JobExecutor::new(sched)));
         // Wiring (paper Fig 1): source -> scheduler -> executor -> scheduler.
@@ -331,8 +449,9 @@ impl Simulation {
             s.executor = exec;
             s.preemption = preemption;
             s.reservations = reservations.clone();
-            s.planning_horizon = planning_horizon;
+            s.set_horizon(planning_horizon);
             s.memory_aware = memory_aware;
+            s.retain_completed = retain_completed;
             s.set_queue_order(order_kind.build(fairshare_half_life));
         }
         if wire_injector {
@@ -390,10 +509,18 @@ impl SimInstance {
         let sched = self.sched_id;
         let s = self.engine.get_mut::<SchedulerComponent>(sched).unwrap();
         let utilization = std::mem::take(&mut s.util_series);
-        let mean_utilization = utilization.time_weighted_mean(end_time);
+        // Streaming-scale runs record no series; their incremental
+        // aggregates carry the same time-weighted law.
+        let mean_utilization = if utilization.points().is_empty() {
+            s.streaming_mean_utilization(end_time)
+        } else {
+            utilization.time_weighted_mean(end_time)
+        };
         let memory_utilization = std::mem::take(&mut s.mem_util_series);
         let mean_memory_utilization = if memory_utilization.points().is_empty() {
-            0.0
+            // Zero for untracked memory; the incremental aggregate for
+            // memory-aware streaming-scale runs.
+            s.streaming_mean_memory_utilization(end_time)
         } else {
             memory_utilization.time_weighted_mean(end_time)
         };
@@ -408,12 +535,21 @@ impl SimInstance {
             completed.iter().map(|j| j.runtime.as_f64() * j.cores as f64).sum();
         let avail_series = std::mem::take(&mut s.avail_series);
         let avail_integral = series_integral(&avail_series, last_completion);
-        let mean_effective_utilization =
-            if avail_integral > 0.0 { useful / avail_integral } else { 0.0 };
+        let mean_effective_utilization = if completed.is_empty() && s.completed_count > 0 {
+            // Streaming-scale run: per-job records were dropped; the
+            // component accumulated the goodput terms incrementally.
+            s.streaming_effective_utilization()
+        } else if avail_integral > 0.0 {
+            useful / avail_integral
+        } else {
+            0.0
+        };
         SimReport {
             policy: self.policy_name,
             workload: self.workload_name.clone(),
             completed,
+            completed_count: s.completed_count,
+            wait_ticks_total: s.wait_ticks_total,
             rejected: s.rejected,
             events,
             end_time,

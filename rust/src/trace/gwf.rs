@@ -10,58 +10,71 @@ use crate::core::time::{SimDuration, SimTime};
 use crate::job::Job;
 use anyhow::{bail, Context, Result};
 
-/// Parse GWF text into jobs; records with non-positive runtime/processor
-/// counts (cancelled or failed grid submissions) are skipped.
+/// Parse one GWF line. `Ok(None)` for comments, blanks and skipped
+/// records (cancelled or failed grid submissions with non-positive
+/// runtime/processor counts); `Err` only for structurally broken lines.
+/// `lineno` is 1-based. Shared by the eager [`parse_gwf`] and the
+/// streaming [`crate::trace::JobStream`].
+pub fn parse_gwf_line(line: &str, lineno: usize) -> Result<Option<Job>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return Ok(None);
+    }
+    let f: Vec<&str> = line.split_whitespace().collect();
+    if f.len() < 13 {
+        bail!("gwf line {}: expected >= 13 fields, got {}", lineno, f.len());
+    }
+    let num = |idx: usize| -> Result<f64> {
+        f[idx]
+            .parse::<f64>()
+            .with_context(|| format!("gwf line {}: field {} = {:?}", lineno, idx + 1, f[idx]))
+    };
+    let id = num(0)?;
+    let submit = num(1)?;
+    let run = num(3)?;
+    let nproc = num(4)?;
+    let req_n = num(7)?;
+    let req_time = num(8)?;
+    let req_mem = num(9)?;
+    let user = num(11)?;
+    let group = num(12)?;
+
+    let procs = if req_n > 0.0 { req_n } else { nproc };
+    if run <= 0.0 || procs <= 0.0 || id < 0.0 || submit < 0.0 {
+        return Ok(None);
+    }
+    let est = if req_time > 0.0 { req_time } else { run };
+    Ok(Some(Job::new(
+        id as u64,
+        SimTime(submit as u64),
+        procs as u64,
+        req_mem.max(0.0) as u64,
+        SimDuration(est.round() as u64),
+        SimDuration(run.round() as u64),
+        user.max(0.0) as u32,
+        group.max(0.0) as u32,
+    )))
+}
+
+/// Parse GWF text into jobs (eager path: a thin collect over
+/// [`parse_gwf_line`]).
 pub fn parse_gwf(text: &str) -> Result<Vec<Job>> {
     let mut jobs = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
+        if let Some(job) = parse_gwf_line(line, lineno + 1)? {
+            jobs.push(job);
         }
-        let f: Vec<&str> = line.split_whitespace().collect();
-        if f.len() < 13 {
-            bail!("gwf line {}: expected >= 13 fields, got {}", lineno + 1, f.len());
-        }
-        let num = |idx: usize| -> Result<f64> {
-            f[idx]
-                .parse::<f64>()
-                .with_context(|| format!("gwf line {}: field {} = {:?}", lineno + 1, idx + 1, f[idx]))
-        };
-        let id = num(0)?;
-        let submit = num(1)?;
-        let run = num(3)?;
-        let nproc = num(4)?;
-        let req_n = num(7)?;
-        let req_time = num(8)?;
-        let req_mem = num(9)?;
-        let user = num(11)?;
-        let group = num(12)?;
-
-        let procs = if req_n > 0.0 { req_n } else { nproc };
-        if run <= 0.0 || procs <= 0.0 || id < 0.0 || submit < 0.0 {
-            continue;
-        }
-        let est = if req_time > 0.0 { req_time } else { run };
-        jobs.push(Job::new(
-            id as u64,
-            SimTime(submit as u64),
-            procs as u64,
-            req_mem.max(0.0) as u64,
-            SimDuration(est.round() as u64),
-            SimDuration(run.round() as u64),
-            user.max(0.0) as u32,
-            group.max(0.0) as u32,
-        ));
     }
     Ok(jobs)
 }
 
-/// Read and parse a GWF file.
+/// Read and parse a GWF file (eager: collects the stream — use
+/// [`crate::trace::stream_trace_file`] to keep memory O(1) in the trace
+/// length).
 pub fn load_gwf_file(path: &str) -> Result<Vec<Job>> {
-    let text =
-        std::fs::read_to_string(path).with_context(|| format!("reading GWF file {path:?}"))?;
-    parse_gwf(&text)
+    crate::trace::stream::stream_gwf_file(path)?
+        .collect::<Result<Vec<Job>>>()
+        .with_context(|| format!("reading GWF file {path:?}"))
 }
 
 #[cfg(test)]

@@ -14,14 +14,17 @@
 //! simulates them directly; all experiments fall back to the generators.
 
 pub mod gwf;
+pub mod stream;
 pub mod swf;
 pub mod synth;
 
 pub use gwf::parse_gwf;
+pub use stream::{stream_trace_file, JobStream, TraceFormat};
 pub use swf::{parse_swf, write_swf};
 pub use synth::{das2::Das2Model, sdsc_sp2::SdscSp2Model};
 
 use crate::job::Job;
+use anyhow::Result;
 
 /// A workload: jobs sorted by submit time plus the machine they target.
 #[derive(Debug, Clone)]
@@ -38,6 +41,28 @@ impl Workload {
     pub fn new(name: &str, mut jobs: Vec<Job>, nodes: usize, cores_per_node: u64) -> Workload {
         jobs.sort_by_key(|j| (j.submit, j.id));
         Workload { name: name.to_string(), jobs, nodes, cores_per_node }
+    }
+
+    /// A machine-only workload shell (no eager job list): what a
+    /// streamed run pairs with
+    /// ([`crate::sim::Simulation::with_job_stream`]) — the jobs arrive
+    /// through the stream, this only describes the machine.
+    pub fn machine(name: &str, nodes: usize, cores_per_node: u64) -> Workload {
+        Workload::new(name, Vec::new(), nodes, cores_per_node)
+    }
+
+    /// Collect a job stream into an eager workload. The streaming path
+    /// feeds the simulator directly and never materializes the trace;
+    /// this wrapper keeps every collect-style caller (tools, analysis)
+    /// on the same per-line parsers.
+    pub fn from_stream(
+        name: &str,
+        stream: impl Iterator<Item = Result<Job>>,
+        nodes: usize,
+        cores_per_node: u64,
+    ) -> Result<Workload> {
+        let jobs = stream.collect::<Result<Vec<Job>>>()?;
+        Ok(Workload::new(name, jobs, nodes, cores_per_node))
     }
 
     pub fn total_cores(&self) -> u64 {
@@ -130,6 +155,19 @@ mod tests {
         // 2 jobs x 4 cores x 100s = 800 core-s over 100s span x 8 cores = 1.0
         let w = wl(vec![Job::simple(1, 0, 4, 100), Job::simple(2, 100, 4, 100)]);
         assert!((w.offered_load() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_stream_collects_and_sorts() {
+        let text = "2 30 -1 60 2 -1 -1 2 100 -1 1 7 1 -1 -1 -1 -1 -1\n\
+                    1 0 10 120 4 -1 -1 4 600 -1 1 12 3 -1 -1 -1 -1 -1\n";
+        let s = JobStream::new(std::io::Cursor::new(text.as_bytes().to_vec()), TraceFormat::Swf);
+        let w = Workload::from_stream("s", s, 4, 2).unwrap();
+        assert_eq!(w.jobs.len(), 2);
+        assert_eq!(w.jobs[0].id, 1, "from_stream sorts by submit like the eager path");
+        let m = Workload::machine("m", 8, 4);
+        assert!(m.jobs.is_empty());
+        assert_eq!(m.total_cores(), 32);
     }
 
     #[test]

@@ -1,0 +1,195 @@
+//! Streaming trace ingestion — the constant-memory half of the
+//! million-job scale path.
+//!
+//! [`JobStream`] parses one archive record at a time off any
+//! [`BufRead`]: the trace is never materialized as a `Vec<Job>` (the
+//! eager `parse_swf`/`parse_gwf` collectors are now thin wrappers over
+//! the same per-line parsers), so peak memory is one line buffer plus
+//! one `Job`, independent of trace length. Pair it with
+//! [`crate::sim::Simulation::with_job_stream`] to feed the simulator's
+//! arrival queue incrementally: the source pulls the next record only
+//! when simulated time reaches it, keeping peak RSS O(active jobs).
+//!
+//! Both archive formats guarantee submit-sorted records (the Parallel
+//! Workloads Archive and Grid Workloads Archive sort their logs), which
+//! is what lets the source run off a one-job lookahead instead of a
+//! reorder buffer; a late record is emitted immediately rather than
+//! reordered.
+
+use crate::job::Job;
+use crate::trace::{gwf, swf};
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+
+/// Which archive format a stream parses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceFormat {
+    Swf,
+    Gwf,
+}
+
+impl TraceFormat {
+    /// Pick the format from a file name (`.gwf` = GWF, anything else =
+    /// SWF — the same rule the CLI `--trace` flag applies).
+    pub fn from_path(path: &str) -> TraceFormat {
+        if path.ends_with(".gwf") {
+            TraceFormat::Gwf
+        } else {
+            TraceFormat::Swf
+        }
+    }
+
+    fn parse_line(self, line: &str, lineno: usize) -> Result<Option<Job>> {
+        match self {
+            TraceFormat::Swf => swf::parse_swf_line(line, lineno),
+            TraceFormat::Gwf => gwf::parse_gwf_line(line, lineno),
+        }
+    }
+}
+
+/// A line-buffered job stream over any reader. Yields `Ok(job)` per
+/// valid record, skips comments/blanks/cancelled records silently, and
+/// yields one `Err` (then ends) on the first structurally broken line —
+/// exactly the records and the error the eager parser produces, in the
+/// same order.
+pub struct JobStream<R: BufRead> {
+    reader: R,
+    format: TraceFormat,
+    lineno: usize,
+    /// Reused line buffer — the only per-record allocation high-water
+    /// mark in the stream.
+    line: String,
+    yielded: u64,
+    done: bool,
+}
+
+impl<R: BufRead> JobStream<R> {
+    pub fn new(reader: R, format: TraceFormat) -> JobStream<R> {
+        JobStream { reader, format, lineno: 0, line: String::new(), yielded: 0, done: false }
+    }
+
+    /// Records yielded so far (observability; the debug-counter tests).
+    pub fn yielded(&self) -> u64 {
+        self.yielded
+    }
+}
+
+impl<R: BufRead> Iterator for JobStream<R> {
+    type Item = Result<Job>;
+
+    fn next(&mut self) -> Option<Result<Job>> {
+        while !self.done {
+            self.line.clear();
+            match self.reader.read_line(&mut self.line) {
+                Ok(0) => self.done = true,
+                Ok(_) => {
+                    self.lineno += 1;
+                    match self.format.parse_line(&self.line, self.lineno) {
+                        Ok(None) => {}
+                        Ok(Some(job)) => {
+                            self.yielded += 1;
+                            return Some(Ok(job));
+                        }
+                        Err(e) => {
+                            self.done = true;
+                            return Some(Err(e));
+                        }
+                    }
+                }
+                Err(e) => {
+                    self.done = true;
+                    let err = anyhow::Error::from(e)
+                        .context(format!("reading trace line {}", self.lineno + 1));
+                    return Some(Err(err));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Open `path` as a job stream, auto-detecting the format from the
+/// extension.
+pub fn stream_trace_file(path: &str) -> Result<JobStream<BufReader<File>>> {
+    let file = File::open(path).with_context(|| format!("opening trace file {path:?}"))?;
+    Ok(JobStream::new(BufReader::new(file), TraceFormat::from_path(path)))
+}
+
+/// Open `path` as an SWF job stream.
+pub fn stream_swf_file(path: &str) -> Result<JobStream<BufReader<File>>> {
+    let file = File::open(path).with_context(|| format!("opening SWF file {path:?}"))?;
+    Ok(JobStream::new(BufReader::new(file), TraceFormat::Swf))
+}
+
+/// Open `path` as a GWF job stream.
+pub fn stream_gwf_file(path: &str) -> Result<JobStream<BufReader<File>>> {
+    let file = File::open(path).with_context(|| format!("opening GWF file {path:?}"))?;
+    Ok(JobStream::new(BufReader::new(file), TraceFormat::Gwf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    const SWF_SAMPLE: &str = "\
+; header comment
+1 0 10 120 4 -1 -1 4 600 -1 1 12 3 -1 -1 -1 -1 -1
+
+2 30 -1 60 -1 -1 -1 8 100 2048 1 7 1 -1 -1 -1 -1 -1
+3 60 5 -1 4 -1 -1 4 600 -1 0 2 1 -1 -1 -1 -1 -1
+";
+
+    fn stream(text: &str, format: TraceFormat) -> JobStream<Cursor<Vec<u8>>> {
+        JobStream::new(Cursor::new(text.as_bytes().to_vec()), format)
+    }
+
+    #[test]
+    fn stream_yields_what_eager_parses() {
+        let streamed: Vec<Job> =
+            stream(SWF_SAMPLE, TraceFormat::Swf).map(|j| j.unwrap()).collect();
+        let eager = crate::trace::parse_swf(SWF_SAMPLE).unwrap();
+        assert_eq!(streamed.len(), eager.len());
+        for (a, b) in streamed.iter().zip(&eager) {
+            assert_eq!(
+                (a.id, a.submit, a.cores, a.memory_mb),
+                (b.id, b.submit, b.cores, b.memory_mb)
+            );
+            assert_eq!(
+                (a.est_runtime, a.runtime, a.user, a.group),
+                (b.est_runtime, b.runtime, b.user, b.group)
+            );
+        }
+    }
+
+    #[test]
+    fn stream_counts_yielded_records() {
+        let mut s = stream(SWF_SAMPLE, TraceFormat::Swf);
+        assert_eq!(s.yielded(), 0);
+        for r in s.by_ref() {
+            r.unwrap();
+        }
+        assert_eq!(s.yielded(), 2, "jobs 1 and 2 parse; job 3 is cancelled");
+    }
+
+    #[test]
+    fn broken_line_errors_once_then_ends() {
+        let text = "1 0 10 120 4 -1 -1 4 600 -1 1 12 3 -1 -1 -1 -1 -1\n1 2 3\n";
+        let mut s = stream(text, TraceFormat::Swf);
+        assert!(s.next().unwrap().is_ok());
+        assert!(s.next().unwrap().is_err());
+        assert!(s.next().is_none(), "a broken stream must end after its error");
+    }
+
+    #[test]
+    fn gwf_format_detected_and_parsed() {
+        assert_eq!(TraceFormat::from_path("x.gwf"), TraceFormat::Gwf);
+        assert_eq!(TraceFormat::from_path("x.swf"), TraceFormat::Swf);
+        assert_eq!(TraceFormat::from_path("plain"), TraceFormat::Swf);
+        let text = "# c\n0 0 2 33.0 1 32.9 -1 1 900 -1 1 3 1 14 -1\n";
+        let jobs: Vec<Job> = stream(text, TraceFormat::Gwf).map(|j| j.unwrap()).collect();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].runtime.ticks(), 33);
+    }
+}

@@ -13,50 +13,62 @@ use crate::core::time::{SimDuration, SimTime};
 use crate::job::Job;
 use anyhow::{bail, Context, Result};
 
-/// Parse SWF text into jobs. Jobs with non-positive runtime or processor
-/// count are skipped (cancelled/failed records), matching how CQsim-style
-/// simulators consume these logs.
+/// Parse one SWF line. `Ok(None)` for comments, blanks and skipped
+/// records (cancelled/failed entries with non-positive runtime or
+/// processor count, matching how CQsim-style simulators consume these
+/// logs); `Err` only for structurally broken lines. `lineno` is 1-based
+/// (error context). This is the single record parser both the eager
+/// [`parse_swf`] and the streaming [`crate::trace::JobStream`] share —
+/// what makes stream == eager hold by construction.
+pub fn parse_swf_line(line: &str, lineno: usize) -> Result<Option<Job>> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with(';') {
+        return Ok(None);
+    }
+    let f: Vec<&str> = line.split_whitespace().collect();
+    if f.len() < 11 {
+        bail!("swf line {}: expected >= 11 fields, got {}", lineno, f.len());
+    }
+    let get_i64 = |idx: usize| -> Result<i64> {
+        f[idx]
+            .parse::<i64>()
+            .with_context(|| format!("swf line {}: field {} = {:?}", lineno, idx + 1, f[idx]))
+    };
+    let id = get_i64(0)?;
+    let submit = get_i64(1)?;
+    let run = get_i64(3)?;
+    let used_procs = get_i64(4)?;
+    let req_procs = get_i64(7)?;
+    let req_time = get_i64(8)?;
+    let req_mem = get_i64(9)?;
+    let user = if f.len() > 11 { get_i64(11)? } else { -1 };
+    let group = if f.len() > 12 { get_i64(12)? } else { -1 };
+
+    let procs = if req_procs > 0 { req_procs } else { used_procs };
+    if run <= 0 || procs <= 0 || id < 0 || submit < 0 {
+        return Ok(None); // cancelled / failed / malformed record
+    }
+    let est = if req_time > 0 { req_time } else { run };
+    Ok(Some(Job::new(
+        id as u64,
+        SimTime(submit as u64),
+        procs as u64,
+        req_mem.max(0) as u64,
+        SimDuration(est as u64),
+        SimDuration(run as u64),
+        user.max(0) as u32,
+        group.max(0) as u32,
+    )))
+}
+
+/// Parse SWF text into jobs (eager path: a thin collect over
+/// [`parse_swf_line`]).
 pub fn parse_swf(text: &str) -> Result<Vec<Job>> {
     let mut jobs = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with(';') {
-            continue;
+        if let Some(job) = parse_swf_line(line, lineno + 1)? {
+            jobs.push(job);
         }
-        let f: Vec<&str> = line.split_whitespace().collect();
-        if f.len() < 11 {
-            bail!("swf line {}: expected >= 11 fields, got {}", lineno + 1, f.len());
-        }
-        let get_i64 = |idx: usize| -> Result<i64> {
-            f[idx]
-                .parse::<i64>()
-                .with_context(|| format!("swf line {}: field {} = {:?}", lineno + 1, idx + 1, f[idx]))
-        };
-        let id = get_i64(0)?;
-        let submit = get_i64(1)?;
-        let run = get_i64(3)?;
-        let used_procs = get_i64(4)?;
-        let req_procs = get_i64(7)?;
-        let req_time = get_i64(8)?;
-        let req_mem = get_i64(9)?;
-        let user = if f.len() > 11 { get_i64(11)? } else { -1 };
-        let group = if f.len() > 12 { get_i64(12)? } else { -1 };
-
-        let procs = if req_procs > 0 { req_procs } else { used_procs };
-        if run <= 0 || procs <= 0 || id < 0 || submit < 0 {
-            continue; // cancelled / failed / malformed record
-        }
-        let est = if req_time > 0 { req_time } else { run };
-        jobs.push(Job::new(
-            id as u64,
-            SimTime(submit as u64),
-            procs as u64,
-            req_mem.max(0) as u64,
-            SimDuration(est as u64),
-            SimDuration(run as u64),
-            user.max(0) as u32,
-            group.max(0) as u32,
-        ));
     }
     Ok(jobs)
 }
@@ -89,11 +101,13 @@ pub fn write_swf(jobs: &[Job], header_comment: &str) -> String {
     out
 }
 
-/// Read and parse an SWF file.
+/// Read and parse an SWF file (eager: collects the stream — use
+/// [`crate::trace::stream_trace_file`] to keep memory O(1) in the trace
+/// length).
 pub fn load_swf_file(path: &str) -> Result<Vec<Job>> {
-    let text =
-        std::fs::read_to_string(path).with_context(|| format!("reading SWF file {path:?}"))?;
-    parse_swf(&text)
+    crate::trace::stream::stream_swf_file(path)?
+        .collect::<Result<Vec<Job>>>()
+        .with_context(|| format!("reading SWF file {path:?}"))
 }
 
 #[cfg(test)]

@@ -1,7 +1,10 @@
 //! Micro-benchmark harness used by `rust/benches/*` (criterion is not in
 //! the offline crate set; this provides the part of it we need: warmup,
-//! repeated timed runs, and robust summary statistics).
+//! repeated timed runs, robust summary statistics, and a
+//! machine-readable JSON dump — the `BENCH_engine.json` schema the CI
+//! perf trajectory consumes).
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 /// Result of one benchmark case.
@@ -16,7 +19,12 @@ impl BenchResult {
         self.runs.iter().copied().min().unwrap_or_default()
     }
 
+    /// Median run time; `Duration::ZERO` on an empty result set (like
+    /// every other statistic here — an unguarded index panicked once).
     pub fn median(&self) -> Duration {
+        if self.runs.is_empty() {
+            return Duration::ZERO;
+        }
         let mut r = self.runs.clone();
         r.sort();
         r[r.len() / 2]
@@ -25,6 +33,40 @@ impl BenchResult {
     pub fn mean(&self) -> Duration {
         let total: Duration = self.runs.iter().sum();
         total / self.runs.len().max(1) as u32
+    }
+
+    /// Nearest-rank percentile (`pct` in 0..=100); `Duration::ZERO` on
+    /// an empty result set.
+    fn percentile(&self, pct: usize) -> Duration {
+        if self.runs.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut r = self.runs.clone();
+        r.sort();
+        r[(r.len() - 1) * pct / 100]
+    }
+
+    pub fn p10(&self) -> Duration {
+        self.percentile(10)
+    }
+
+    pub fn p90(&self) -> Duration {
+        self.percentile(90)
+    }
+
+    /// Machine-readable summary of this case. Schema: `name`, `runs`
+    /// (count), and `median_ns`/`mean_ns`/`min_ns`/`p10_ns`/`p90_ns`
+    /// in nanoseconds.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("runs", Json::num(self.runs.len() as f64)),
+            ("median_ns", Json::num(self.median().as_nanos() as f64)),
+            ("mean_ns", Json::num(self.mean().as_nanos() as f64)),
+            ("min_ns", Json::num(self.min().as_nanos() as f64)),
+            ("p10_ns", Json::num(self.p10().as_nanos() as f64)),
+            ("p90_ns", Json::num(self.p90().as_nanos() as f64)),
+        ])
     }
 
     /// Pretty line, e.g. `fig5/ranks=4   median 12.3ms  min 11.9ms  (5 runs)`.
@@ -91,6 +133,18 @@ impl Bench {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Machine-readable dump of every case — the `BENCH_engine.json`
+    /// schema (`sst-sched bench` writes it, the CI perf gate and the
+    /// perf trajectory consume it).
+    pub fn to_json(&self, suite: &str, smoke: bool) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("sst-sched-bench-v1")),
+            ("suite", Json::str(suite)),
+            ("smoke", Json::Bool(smoke)),
+            ("cases", Json::Arr(self.results.iter().map(|r| r.to_json()).collect())),
+        ])
+    }
 }
 
 /// Print a section header in bench output.
@@ -145,5 +199,47 @@ mod tests {
         };
         assert_eq!(r.min(), Duration::from_millis(1));
         assert_eq!(r.median(), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn empty_result_set_reports_zero_everywhere() {
+        // `median` indexed r[len/2] unguarded and panicked on an empty
+        // result set; every statistic must degrade to zero instead.
+        let r = BenchResult { name: "empty".into(), runs: Vec::new() };
+        assert_eq!(r.median(), Duration::ZERO);
+        assert_eq!(r.mean(), Duration::ZERO);
+        assert_eq!(r.min(), Duration::ZERO);
+        assert_eq!(r.p10(), Duration::ZERO);
+        assert_eq!(r.p90(), Duration::ZERO);
+        assert!(r.line().contains("0 runs"));
+    }
+
+    #[test]
+    fn percentiles_order_and_json_schema() {
+        let r = BenchResult {
+            name: "x".into(),
+            runs: (1..=10u64).map(Duration::from_millis).collect(),
+        };
+        assert_eq!(r.p10(), Duration::from_millis(1));
+        assert_eq!(r.p90(), Duration::from_millis(9));
+        assert!(r.p10() <= r.median() && r.median() <= r.p90());
+        let j = r.to_json();
+        assert_eq!(j.get("name").and_then(|v| v.as_str()), Some("x"));
+        assert_eq!(j.get("runs").and_then(|v| v.as_u64()), Some(10));
+        for key in ["median_ns", "mean_ns", "min_ns", "p10_ns", "p90_ns"] {
+            assert!(j.get(key).and_then(|v| v.as_f64()).unwrap() > 0.0, "missing {key}");
+        }
+    }
+
+    #[test]
+    fn suite_json_wraps_cases() {
+        let mut b = Bench::new(0, 2);
+        b.case("a", || 1u64);
+        b.case("b", || 2u64);
+        let j = b.to_json("engine_throughput", true);
+        assert_eq!(j.get("schema").and_then(|v| v.as_str()), Some("sst-sched-bench-v1"));
+        assert_eq!(j.get("suite").and_then(|v| v.as_str()), Some("engine_throughput"));
+        assert_eq!(j.get("smoke").and_then(|v| v.as_bool()), Some(true));
+        assert_eq!(j.get("cases").and_then(|v| v.as_arr()).unwrap().len(), 2);
     }
 }

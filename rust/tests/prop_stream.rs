@@ -1,0 +1,161 @@
+//! Property suite for streaming trace ingestion: `JobStream` over any
+//! generated SWF/GWF body must reproduce the eager parser exactly —
+//! same records in the same order (including `-1` sentinel handling,
+//! comment/header lines, blanks and skipped cancelled records), and an
+//! error on exactly the bodies the eager parser rejects (short lines).
+
+use sst_sched::core::rng::Rng;
+use sst_sched::job::Job;
+use sst_sched::trace::{parse_gwf, parse_swf, JobStream, TraceFormat};
+use sst_sched::util::prop::check_n;
+use std::io::Cursor;
+
+fn sentinel_or(rng: &mut Rng, val: u64) -> String {
+    if rng.below(4) == 0 {
+        "-1".to_string()
+    } else {
+        val.to_string()
+    }
+}
+
+/// One record line with randomized `-1` sentinels and occasional
+/// cancelled entries (non-positive runtime / processor count).
+fn gen_record(rng: &mut Rng, format: TraceFormat, id: u64, submit: u64) -> String {
+    let run = if rng.below(8) == 0 {
+        "-1".to_string()
+    } else {
+        (1 + rng.below(5_000)).to_string()
+    };
+    let used = if rng.below(8) == 0 {
+        "0".to_string()
+    } else {
+        (1 + rng.below(64)).to_string()
+    };
+    let req_procs = sentinel_or(rng, 1 + rng.below(64));
+    let req_time = sentinel_or(rng, 1 + rng.below(9_000));
+    let req_mem = sentinel_or(rng, 128 + rng.below(4_096));
+    let user = rng.below(50);
+    let group = rng.below(8);
+    match format {
+        TraceFormat::Swf => format!(
+            "{id} {submit} -1 {run} {used} -1 -1 {req_procs} {req_time} {req_mem} 1 \
+             {user} {group} -1 -1 -1 -1 -1"
+        ),
+        TraceFormat::Gwf => format!(
+            "{id} {submit} 0 {run}.0 {used} -1 -1 {req_procs} {req_time} {req_mem} 1 \
+             {user} {group} 14 -1"
+        ),
+    }
+}
+
+/// A whole trace body: header comments, blanks, records, and (when
+/// `with_bad` draws true) one short line somewhere in the middle.
+fn gen_body(rng: &mut Rng, format: TraceFormat, with_bad: bool) -> String {
+    let comment = match format {
+        TraceFormat::Swf => ';',
+        TraceFormat::Gwf => '#',
+    };
+    let mut out = format!("{comment} generated header\n{comment} UnixStartTime: 0\n");
+    let records = 1 + rng.below(40);
+    let bad_at = if with_bad { rng.below(records) } else { u64::MAX };
+    let mut submit = 0u64;
+    for i in 0..records {
+        submit += rng.below(500);
+        if rng.below(10) == 0 {
+            out.push('\n'); // blank line
+        }
+        if rng.below(10) == 0 {
+            out.push_str(&format!("{comment} interleaved comment {i}\n"));
+        }
+        if i == bad_at {
+            out.push_str("7 42 3\n"); // short line: structurally broken
+        } else {
+            out.push_str(&gen_record(rng, format, i + 1, submit));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+fn stream_collect(body: &str, format: TraceFormat) -> anyhow::Result<Vec<Job>> {
+    JobStream::new(Cursor::new(body.as_bytes().to_vec()), format).collect()
+}
+
+fn eager_parse(body: &str, format: TraceFormat) -> anyhow::Result<Vec<Job>> {
+    match format {
+        TraceFormat::Swf => parse_swf(body),
+        TraceFormat::Gwf => parse_gwf(body),
+    }
+}
+
+fn jobs_equal(a: &Job, b: &Job) -> bool {
+    a.id == b.id
+        && a.submit == b.submit
+        && a.cores == b.cores
+        && a.memory_mb == b.memory_mb
+        && a.est_runtime == b.est_runtime
+        && a.runtime == b.runtime
+        && a.user == b.user
+        && a.group == b.group
+}
+
+#[test]
+fn stream_parse_equals_eager_parse() {
+    for format in [TraceFormat::Swf, TraceFormat::Gwf] {
+        check_n(&format!("stream==eager/{format:?}"), 200, |rng| {
+            let body = gen_body(rng, format, false);
+            let streamed = stream_collect(&body, format)
+                .map_err(|e| format!("stream failed on a clean body: {e:#}"))?;
+            let eager = eager_parse(&body, format)
+                .map_err(|e| format!("eager failed on a clean body: {e:#}"))?;
+            if streamed.len() != eager.len() {
+                return Err(format!(
+                    "record counts differ: streamed {} vs eager {}\n{body}",
+                    streamed.len(),
+                    eager.len()
+                ));
+            }
+            for (a, b) in streamed.iter().zip(&eager) {
+                if !jobs_equal(a, b) {
+                    return Err(format!("record {} differs between paths\n{body}", a.id));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn stream_errors_exactly_where_eager_errors() {
+    for format in [TraceFormat::Swf, TraceFormat::Gwf] {
+        check_n(&format!("stream-errs/{format:?}"), 100, |rng| {
+            let body = gen_body(rng, format, true);
+            let streamed = stream_collect(&body, format);
+            let eager = eager_parse(&body, format);
+            match (streamed.is_err(), eager.is_err()) {
+                (true, true) => Ok(()),
+                (s, e) => Err(format!(
+                    "error disagreement: streamed err={s}, eager err={e}\n{body}"
+                )),
+            }
+        });
+    }
+}
+
+/// The stream is single-pass and bounded: records arrive one at a time
+/// (the `yielded` counter ticks with each) — no internal batching.
+#[test]
+fn stream_is_incremental() {
+    let mut rng = Rng::new(0xBEEF);
+    let body = gen_body(&mut rng, TraceFormat::Swf, false);
+    let expected = parse_swf(&body).unwrap().len() as u64;
+    let mut s = JobStream::new(Cursor::new(body.into_bytes()), TraceFormat::Swf);
+    let mut seen = 0u64;
+    loop {
+        let Some(r) = s.next() else { break };
+        r.unwrap();
+        seen += 1;
+        assert_eq!(s.yielded(), seen, "yielded counter must tick per record");
+    }
+    assert_eq!(seen, expected);
+}
