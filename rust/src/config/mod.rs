@@ -5,7 +5,9 @@
 
 use crate::core::time::SimDuration;
 use crate::sched::{OrderKind, Policy, PreemptionConfig};
-use crate::sim::{FaultConfig, Horizon, ReservationSpec, DEFAULT_FAIRSHARE_HALF_LIFE};
+use crate::sim::{
+    AutoHorizonParams, FaultConfig, Horizon, ReservationSpec, DEFAULT_FAIRSHARE_HALF_LIFE,
+};
 use crate::trace::{Das2Model, SdscSp2Model, Workload};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -69,6 +71,11 @@ pub struct ExperimentConfig {
     /// timeline), `"exact"`, or `"auto"` (clamp derived from live queue
     /// depth and median runtime estimate).
     pub planning_horizon: Horizon,
+    /// `Horizon::Auto` tunables (`planning.auto_shallow_queue`,
+    /// `planning.auto_horizon_estimates`, `planning.auto_min_horizon`);
+    /// defaults are the engine constants. Inert unless
+    /// `planning.horizon` is `"auto"`.
+    pub auto_horizon: AutoHorizonParams,
 }
 
 impl Default for ExperimentConfig {
@@ -93,6 +100,7 @@ impl Default for ExperimentConfig {
             priority_bands: 0,
             reservations: Vec::new(),
             planning_horizon: Horizon::Exact,
+            auto_horizon: AutoHorizonParams::default(),
         }
     }
 }
@@ -183,6 +191,19 @@ impl ExperimentConfig {
                     Json::Str(s) => s.parse().map_err(|e: String| anyhow::anyhow!(e))?,
                     _ => bail!("planning.horizon must be a number or \"auto\"/\"exact\""),
                 };
+            }
+            // Auto-horizon tunables; the engine constants stay the
+            // defaults (they were engineering picks — see ROADMAP).
+            cfg.auto_horizon.shallow_queue =
+                pl.get_u64_or("auto_shallow_queue", cfg.auto_horizon.shallow_queue as u64)
+                    as usize;
+            cfg.auto_horizon.estimates =
+                pl.get_u64_or("auto_horizon_estimates", cfg.auto_horizon.estimates);
+            cfg.auto_horizon.min_horizon =
+                pl.get_u64_or("auto_min_horizon", cfg.auto_horizon.min_horizon);
+            if cfg.auto_horizon.estimates == 0 {
+                bail!("planning.auto_horizon_estimates must be >= 1 (0 would clamp the \
+                       timeline to the floor alone)");
             }
         }
         if let Some(pj) = v.get("preemption") {
@@ -280,14 +301,28 @@ impl ExperimentConfig {
             }
             top.push(("faults", Json::obj(fj)));
         }
+        let mut planning = Vec::new();
         match self.planning_horizon {
             Horizon::Exact => {}
-            Horizon::Fixed(t) => {
-                top.push(("planning", Json::obj(vec![("horizon", Json::num(t as f64))])));
-            }
-            Horizon::Auto => {
-                top.push(("planning", Json::obj(vec![("horizon", Json::str("auto"))])));
-            }
+            Horizon::Fixed(t) => planning.push(("horizon", Json::num(t as f64))),
+            Horizon::Auto => planning.push(("horizon", Json::str("auto"))),
+        }
+        let auto_defaults = AutoHorizonParams::default();
+        if self.auto_horizon.shallow_queue != auto_defaults.shallow_queue {
+            planning.push((
+                "auto_shallow_queue",
+                Json::num(self.auto_horizon.shallow_queue as f64),
+            ));
+        }
+        if self.auto_horizon.estimates != auto_defaults.estimates {
+            planning
+                .push(("auto_horizon_estimates", Json::num(self.auto_horizon.estimates as f64)));
+        }
+        if self.auto_horizon.min_horizon != auto_defaults.min_horizon {
+            planning.push(("auto_min_horizon", Json::num(self.auto_horizon.min_horizon as f64)));
+        }
+        if !planning.is_empty() {
+            top.push(("planning", Json::obj(planning)));
         }
         if self.fairshare_half_life != DEFAULT_FAIRSHARE_HALF_LIFE {
             top.push((
@@ -555,6 +590,45 @@ mod tests {
         assert_eq!(zero.planning_horizon, Horizon::Exact);
         assert!(ExperimentConfig::parse(r#"{"planning": {"horizon": "soonish"}}"#).is_err());
         assert!(ExperimentConfig::parse(r#"{"planning": {"horizon": -5}}"#).is_err());
+    }
+
+    #[test]
+    fn auto_horizon_params_roundtrip_and_defaults() {
+        // Defaults are the engine constants; absent keys leave them.
+        let d = ExperimentConfig::parse(r#"{"planning": {"horizon": "auto"}}"#).unwrap();
+        assert_eq!(d.auto_horizon, AutoHorizonParams::default());
+        assert_eq!(d.auto_horizon.shallow_queue, crate::sim::components::AUTO_SHALLOW_QUEUE);
+        assert_eq!(d.auto_horizon.estimates, crate::sim::components::AUTO_HORIZON_ESTIMATES);
+        assert_eq!(d.auto_horizon.min_horizon, crate::sim::components::AUTO_MIN_HORIZON);
+        // Overrides parse and survive a serialize/parse round-trip.
+        let c = ExperimentConfig::parse(
+            r#"{
+                "planning": {"horizon": "auto", "auto_shallow_queue": 64,
+                             "auto_horizon_estimates": 16, "auto_min_horizon": 600}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.planning_horizon, Horizon::Auto);
+        assert_eq!(
+            c.auto_horizon,
+            AutoHorizonParams { shallow_queue: 64, estimates: 16, min_horizon: 600 }
+        );
+        let back = ExperimentConfig::parse(&c.to_json().to_pretty()).unwrap();
+        assert_eq!(back.planning_horizon, c.planning_horizon);
+        assert_eq!(back.auto_horizon, c.auto_horizon);
+        // Auto keys round-trip even without a horizon entry (inert but
+        // preserved), and a default config emits no planning object.
+        let only_auto =
+            ExperimentConfig::parse(r#"{"planning": {"auto_min_horizon": 120}}"#).unwrap();
+        assert_eq!(only_auto.planning_horizon, Horizon::Exact);
+        let back = ExperimentConfig::parse(&only_auto.to_json().to_pretty()).unwrap();
+        assert_eq!(back.auto_horizon.min_horizon, 120);
+        assert!(ExperimentConfig::parse("{}").unwrap().to_json().get("planning").is_none());
+        // Validation: zero estimates would clamp planning to the floor.
+        assert!(ExperimentConfig::parse(
+            r#"{"planning": {"auto_horizon_estimates": 0}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -3,6 +3,13 @@
 //! Owns the component table, link table, event queue, statistics registry
 //! and RNG. Delivery order is deterministic: (time, priority, sequence).
 //! The parallel engine in `crate::parallel` runs one of these per rank.
+//!
+//! The tick loop runs off the ladder queue's prepared bottom rung
+//! ([`crate::core::event::EventQueue`]): a pop is one cached time
+//! compare plus `Vec::pop` — no heap sift, no tuple-key re-comparison —
+//! and same-timestamp runs drain off the back of one sorted batch. The
+//! inclusive/exclusive window mode is folded into a single half-open
+//! cut *before* the loop, so the per-event path has exactly one branch.
 
 use crate::core::component::{Component, Ctx, Emit};
 use crate::core::event::{ComponentId, EventQueue, Priority};
@@ -146,7 +153,7 @@ impl<P> Engine<P> {
         self.init_components();
         let bound = horizon.unwrap_or(SimTime::MAX);
         let mut stopped_early = self.drain_until(bound, true);
-        if !stopped_early && self.queue.peek_time().is_some() {
+        if !stopped_early && !self.queue.is_empty() {
             // Horizon cut the run short.
             stopped_early = true;
             self.now = bound;
@@ -198,16 +205,18 @@ impl<P> Engine<P> {
     }
 
     /// Inclusive-bound event loop shared by `run`; returns true if a
-    /// component requested stop.
+    /// component requested stop. The window mode is normalized to one
+    /// half-open cut up front so each pop is a single time compare on
+    /// the ladder queue's prepared bottom — the tick loop never
+    /// re-evaluates the mode or re-compares tuple keys. (An inclusive
+    /// bound of `SimTime::MAX` saturates: an event at exactly
+    /// `u64::MAX` ticks is unreachable by construction — links and
+    /// runtimes would overflow long before.)
     fn drain_until(&mut self, bound: SimTime, inclusive: bool) -> bool {
+        let cut = if inclusive { SimTime(bound.ticks().saturating_add(1)) } else { bound };
         let mut stop = false;
         loop {
-            let ev = if inclusive {
-                self.queue.pop_at_or_before(bound)
-            } else {
-                self.queue.pop_before(bound)
-            };
-            let Some(ev) = ev else { break };
+            let Some(ev) = self.queue.pop_before(cut) else { break };
             debug_assert!(ev.time >= self.now, "time went backwards");
             self.now = ev.time;
             self.events_processed += 1;

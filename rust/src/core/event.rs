@@ -4,10 +4,54 @@
 //! component at a simulated time. Ordering is total and deterministic:
 //! (time, priority, sequence-number), so two runs of the same simulation
 //! process events in exactly the same order.
+//!
+//! # The ladder queue
+//!
+//! [`EventQueue`] is a ladder-queue-style tiered structure (Tang, Goh &
+//! Thng 2005 — the classic amortized-O(1) DES priority queue) rather
+//! than a binary heap. At million-event scale the heap's O(log n) sift
+//! over `(time, priority, seq)` tuple keys *is* the engine hot path;
+//! the ladder replaces it with bucketed batching:
+//!
+//! * **bottom rung** — the near future, a `Vec` sorted in *descending*
+//!   key order so the next event to deliver is `bottom.last()` and a pop
+//!   is `Vec::pop`. Filled a batch at a time by one unstable sort on the
+//!   full `(time, priority, seq)` key. Same-tick self-sends (the
+//!   engine's dispatch/submit chains) land here via a binary-searched
+//!   insert whose memmove spans only the handful of same-tick events.
+//! * **rungs** — the farther future, bucketed by time. Rungs nest:
+//!   when a bucket comes due with more events than one batch sort
+//!   should swallow, it spawns a child rung subdividing exactly that
+//!   bucket's time range, innermost last. Each event is appended to a
+//!   bucket in O(1) and is re-bucketed at most `O(log span)` times
+//!   before its final batch sort.
+//! * **top** — an unsorted overflow tail holding everything beyond the
+//!   outermost rung; it is carved into a rung (or sorted straight into
+//!   the bottom when small) only when the clock reaches it.
+//!
+//! ## Determinism contract
+//!
+//! Every event key `(time, priority, seq)` is unique (`seq` is a
+//! per-queue monotone counter), so the total order is strict and the
+//! pop sequence of *any* correct priority queue over these keys is
+//! identical — including FIFO among equal `(time, priority)` pairs.
+//! The ladder therefore produces byte-for-byte the event order the old
+//! `BinaryHeap` produced; `rust/tests/prop_queue.rs` drives it against
+//! a heap oracle to pin exactly that, and the engine fingerprints stay
+//! byte-identical.
+//!
+//! ## Degeneration
+//!
+//! Two shapes collapse the ladder into plain sorted-`Vec` behavior, by
+//! design: batches at or below [`SORT_THRESHOLD`] events skip the rung
+//! machinery entirely (one sort into the bottom — the common case for
+//! the sparse tail of a draining simulation), and a batch whose events
+//! all share one timestamp is sorted directly no matter its size, since
+//! time-bucketing cannot split it further (the `(priority, seq)` sort
+//! is the only order left to establish).
 
 use crate::core::time::SimTime;
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
 /// Index of a component registered with an engine.
 pub type ComponentId = usize;
@@ -63,22 +107,113 @@ impl<P> PartialOrd for Scheduled<P> {
 }
 
 impl<P> Ord for Scheduled<P> {
+    /// Natural delivery order: earliest (time, priority, seq) first.
+    /// (The heap era reversed this for `BinaryHeap`'s max-heap; the
+    /// ladder compares keys directly, so the order is the natural one.)
     fn cmp(&self, other: &Self) -> Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest first.
-        other.key().cmp(&self.key())
+        self.key().cmp(&other.key())
     }
 }
 
-/// Min-heap of scheduled events with deterministic total order.
+/// Largest batch sorted straight into the bottom rung; bigger batches
+/// spawn a refining child rung instead (unless single-timestamp — see
+/// the module docs on degeneration).
+const SORT_THRESHOLD: usize = 64;
+
+/// One refinement rung: a bucket array subdividing `[start, end)` into
+/// `width`-tick slots. `cur` is the first bucket that may still hold
+/// events; earlier buckets were consumed (their range belongs to the
+/// bottom rung now) or handed to a child rung.
+#[derive(Debug)]
+struct Rung<P> {
+    /// Absolute time of bucket 0's left edge.
+    start: u64,
+    /// Bucket width in ticks (>= 1).
+    width: u64,
+    /// Exclusive end of the range this rung owns. For a child rung this
+    /// is exactly the parent bucket's right edge — `start + width *
+    /// buckets.len()` may overshoot it, and events beyond `end` belong
+    /// to the parent, so routing checks `end`, never the bucket math.
+    end: u64,
+    /// First possibly-live bucket.
+    cur: usize,
+    buckets: Vec<Vec<Scheduled<P>>>,
+}
+
+impl<P> Rung<P> {
+    /// Build a rung over `[start, end)` and distribute `events` (each
+    /// with `start <= time < end`) into its buckets.
+    fn from_events(start: u64, end: u64, events: Vec<Scheduled<P>>) -> Rung<P> {
+        debug_assert!(end > start);
+        let span = end - start;
+        // ~8 events per bucket on average, so most buckets sort straight
+        // into the bottom; bounded so a rung never allocates absurdly
+        // (deep nesting carries the rest).
+        let nb = ((events.len() / 8).clamp(16, 4096) as u64).min(span).max(1);
+        let width = span.div_ceil(nb);
+        let mut buckets: Vec<Vec<Scheduled<P>>> = Vec::with_capacity(nb as usize);
+        buckets.resize_with(nb as usize, Vec::new);
+        let mut rung = Rung { start, width, end, cur: 0, buckets };
+        for ev in events {
+            let idx = rung.bucket_of(ev.time.ticks());
+            rung.buckets[idx].push(ev);
+        }
+        rung
+    }
+
+    #[inline]
+    fn bucket_of(&self, t: u64) -> usize {
+        debug_assert!(t >= self.start && t < self.end);
+        let idx = ((t - self.start) / self.width) as usize;
+        debug_assert!(idx < self.buckets.len());
+        idx
+    }
+}
+
+/// The deterministic central event queue (see the module docs for the
+/// ladder structure). Every pending event lives in exactly one of
+/// `bottom` / `rungs` / `top`, and the time axis is partitioned:
+///
+/// * `[0, bottom_until)` — bottom (sorted; includes anything pushed
+///   into the past, which the engine never does but the queue tolerates),
+/// * each rung's `[start, end)`, innermost (last) lowest,
+/// * everything above the outermost rung — top.
+///
+/// `bottom_until` only grows: it is the right edge of the last bucket
+/// batch the bottom absorbed, so every event still in rungs/top has
+/// `time >= bottom_until` and `bottom.last()` is always the global
+/// minimum. That single invariant is what makes `pop`/`peek` O(1) after
+/// an amortized-O(1) `prepare_bottom`.
 #[derive(Debug)]
 pub struct EventQueue<P> {
-    heap: BinaryHeap<Scheduled<P>>,
+    /// Near-future events in *descending* key order (next event last).
+    bottom: Vec<Scheduled<P>>,
+    /// Exclusive time bound of the bottom: pushes below it insert into
+    /// `bottom`; everything at or above routes to rungs/top.
+    bottom_until: u64,
+    /// Nested refinement rungs, outermost first, innermost last.
+    rungs: Vec<Rung<P>>,
+    /// Unsorted far-future overflow (beyond the outermost rung).
+    top: Vec<Scheduled<P>>,
+    /// Min/max event time in `top` (meaningful only when non-empty).
+    top_min: u64,
+    top_max: u64,
     next_seq: u64,
+    len: usize,
 }
 
 impl<P> Default for EventQueue<P> {
     fn default() -> Self {
-        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+        EventQueue {
+            bottom: Vec::new(),
+            bottom_until: 0,
+            rungs: Vec::new(),
+            top: Vec::new(),
+            top_min: 0,
+            top_max: 0,
+            next_seq: 0,
+            len: 0,
+        }
     }
 }
 
@@ -88,49 +223,198 @@ impl<P> EventQueue<P> {
     }
 
     pub fn with_capacity(cap: usize) -> Self {
-        EventQueue { heap: BinaryHeap::with_capacity(cap), next_seq: 0 }
+        let mut q = Self::default();
+        // New events land in `top` (far future) or `bottom` (near);
+        // reserving the tail covers the bulk-load pattern.
+        q.top.reserve(cap);
+        q
     }
 
     /// Schedule `payload` for `target` at absolute `time`.
     pub fn push(&mut self, time: SimTime, priority: Priority, target: ComponentId, payload: P) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Scheduled { time, priority, seq, target, payload });
+        self.route(Scheduled { time, priority, seq, target, payload });
+    }
+
+    /// File one event into the tier that owns its timestamp.
+    fn route(&mut self, ev: Scheduled<P>) {
+        self.len += 1;
+        let t = ev.time.ticks();
+        if t < self.bottom_until {
+            return self.insert_bottom(ev);
+        }
+        // Innermost rung first: rung ranges nest, so the first rung whose
+        // `end` exceeds `t` owns it — unless `t` falls below its live
+        // region (the gap left by skipped empty buckets, or below a
+        // tightened child start), which means nothing pending precedes
+        // it there and it belongs in the bottom.
+        let mut i = self.rungs.len();
+        while i > 0 {
+            i -= 1;
+            let rung = &mut self.rungs[i];
+            if t < rung.end {
+                if t >= rung.start {
+                    let idx = rung.bucket_of(t);
+                    if idx >= rung.cur {
+                        rung.buckets[idx].push(ev);
+                        return;
+                    }
+                }
+                self.insert_bottom(ev);
+                return;
+            }
+        }
+        if self.top.is_empty() {
+            self.top_min = t;
+            self.top_max = t;
+        } else {
+            self.top_min = self.top_min.min(t);
+            self.top_max = self.top_max.max(t);
+        }
+        self.top.push(ev);
+    }
+
+    /// Sorted insert into the descending bottom rung. The memmove spans
+    /// only events with a *smaller* key — for the engine's same-tick
+    /// self-sends that is the few same-tick events still pending.
+    fn insert_bottom(&mut self, ev: Scheduled<P>) {
+        let k = ev.key();
+        let idx = self.bottom.partition_point(|e| e.key() > k);
+        self.bottom.insert(idx, ev);
+    }
+
+    /// Move the next batch of events into the bottom rung so that
+    /// `bottom.last()` is the global minimum (no-op while the bottom is
+    /// non-empty). Amortized O(1) per event: each event is re-bucketed
+    /// at most O(log span) times and batch-sorted once.
+    fn prepare_bottom(&mut self) {
+        while self.bottom.is_empty() {
+            if !self.rungs.is_empty() {
+                let last = self.rungs.len() - 1;
+                let rung = &mut self.rungs[last];
+                // Advance to the first live bucket; an exhausted rung
+                // pops off the ladder and its parent resumes.
+                while rung.cur < rung.buckets.len() && rung.buckets[rung.cur].is_empty() {
+                    rung.cur += 1;
+                }
+                if rung.cur == rung.buckets.len() {
+                    self.rungs.pop();
+                    continue;
+                }
+                let lo = rung.start + rung.cur as u64 * rung.width;
+                let hi = lo.saturating_add(rung.width).min(rung.end);
+                let batch = std::mem::take(&mut rung.buckets[rung.cur]);
+                rung.cur += 1;
+                if let Some((mn, mx)) = refine_range(&batch) {
+                    // Oversized multi-timestamp bucket: subdivide it.
+                    // The child owns through `hi` (future pushes in the
+                    // bucket's range must land in it), but its start is
+                    // tightened to the earliest actual event — pushes
+                    // below that precede everything and go to bottom.
+                    debug_assert!(lo <= mn && mx < hi);
+                    self.rungs.push(Rung::from_events(mn, hi, batch));
+                    continue;
+                }
+                // Consumed range: future pushes below `hi` go to bottom.
+                self.bottom_until = self.bottom_until.max(hi);
+                self.fill_bottom(batch);
+            } else if !self.top.is_empty() {
+                let batch = std::mem::take(&mut self.top);
+                let (mn, mx) = (self.top_min, self.top_max);
+                if refine_range(&batch).is_some() && mx < u64::MAX {
+                    self.rungs.push(Rung::from_events(mn, mx + 1, batch));
+                    continue;
+                }
+                self.bottom_until = self.bottom_until.max(mx.saturating_add(1));
+                self.fill_bottom(batch);
+            } else {
+                return; // queue empty
+            }
+        }
+    }
+
+    /// One batched unstable sort on the full key, descending, so pops
+    /// come off the back. Called only with an empty bottom.
+    fn fill_bottom(&mut self, mut batch: Vec<Scheduled<P>>) {
+        debug_assert!(self.bottom.is_empty());
+        batch.sort_unstable_by(|a, b| b.key().cmp(&a.key()));
+        self.bottom = batch;
     }
 
     /// Earliest pending timestamp, if any.
-    pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|e| e.time)
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        self.prepare_bottom();
+        self.bottom.last().map(|e| e.time)
     }
 
     pub fn pop(&mut self) -> Option<Scheduled<P>> {
-        self.heap.pop()
+        self.prepare_bottom();
+        let ev = self.bottom.pop();
+        if ev.is_some() {
+            self.len -= 1;
+        }
+        ev
     }
 
-    /// Pop the next event only if it is at or before `bound` (conservative
-    /// window execution in the parallel engine).
+    /// Pop the next event only if it is at or before `bound` (inclusive
+    /// window execution in the sequential engine). One time compare on
+    /// the prepared bottom — no key re-comparison, no sift.
+    #[inline]
     pub fn pop_at_or_before(&mut self, bound: SimTime) -> Option<Scheduled<P>> {
-        match self.heap.peek() {
-            Some(e) if e.time <= bound => self.heap.pop(),
+        self.prepare_bottom();
+        match self.bottom.last() {
+            Some(e) if e.time <= bound => {
+                self.len -= 1;
+                self.bottom.pop()
+            }
             _ => None,
         }
     }
 
     /// Pop the next event only if it is strictly before `bound` (YAWNS
     /// windows are half-open: [start, bound)).
+    #[inline]
     pub fn pop_before(&mut self, bound: SimTime) -> Option<Scheduled<P>> {
-        match self.heap.peek() {
-            Some(e) if e.time < bound => self.heap.pop(),
+        self.prepare_bottom();
+        match self.bottom.last() {
+            Some(e) if e.time < bound => {
+                self.len -= 1;
+                self.bottom.pop()
+            }
             _ => None,
         }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
+    }
+}
+
+/// `Some((min, max))` when `events` is worth refining into a child rung:
+/// more than [`SORT_THRESHOLD`] events spread over more than one
+/// timestamp. `None` means "sort it into the bottom now" — the
+/// sorted-vec degeneration (small batch, or a single-timestamp storm
+/// that bucketing cannot split).
+fn refine_range<P>(events: &[Scheduled<P>]) -> Option<(u64, u64)> {
+    if events.len() <= SORT_THRESHOLD {
+        return None;
+    }
+    let mut mn = u64::MAX;
+    let mut mx = 0u64;
+    for e in events {
+        let t = e.time.ticks();
+        mn = mn.min(t);
+        mx = mx.max(t);
+    }
+    if mn < mx {
+        Some((mn, mx))
+    } else {
+        None
     }
 }
 
@@ -186,5 +470,106 @@ mod tests {
         q.push(SimTime(9), Priority::DEFAULT, 1, ());
         q.push(SimTime(4), Priority::DEFAULT, 1, ());
         assert_eq!(q.peek_time(), Some(SimTime(4)));
+    }
+
+    /// Enough far-future events to force rung spawning (and nesting),
+    /// then a full drain: order must be exactly ascending by key.
+    #[test]
+    fn rung_spawning_preserves_total_order() {
+        let mut q = EventQueue::new();
+        // Deterministic scattered times over a wide range, with dense
+        // clusters (forces child rungs) and unique payload = push index.
+        let mut s = 0x12345678u64;
+        let n = 5_000u64;
+        for i in 0..n {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            let t = match s % 4 {
+                0 => s % 50,                  // near cluster
+                1 => 10_000 + s % 100,        // dense mid cluster
+                2 => 10_000 + s % 1_000_000,  // broad mid range
+                _ => s % 1_000_000_000,       // far tail
+            };
+            q.push(SimTime(t), Priority(((s >> 32) % 4) as u8), 0, i);
+        }
+        assert_eq!(q.len(), n as usize);
+        let mut last: Option<(SimTime, Priority, u64)> = None;
+        let mut popped = 0;
+        while let Some(e) = q.pop() {
+            let k = (e.time, e.priority, e.seq);
+            if let Some(prev) = last {
+                assert!(prev < k, "order violation: {prev:?} then {k:?}");
+            }
+            last = Some(k);
+            popped += 1;
+        }
+        assert_eq!(popped, n);
+        assert!(q.is_empty());
+    }
+
+    /// Interleaved push/pop with pushes into the already-consumed range
+    /// (the engine's same-tick self-sends) keeps the order total.
+    #[test]
+    fn same_tick_pushes_during_drain_pop_in_order() {
+        let mut q = EventQueue::new();
+        for i in 0..200u64 {
+            q.push(SimTime(i * 10), Priority::COMPLETE, 0, i);
+        }
+        let mut popped = Vec::new();
+        while let Some(e) = q.pop() {
+            // Every third pop schedules a same-tick follow-up (higher
+            // priority value — runs after all same-tick COMPLETEs).
+            if e.payload % 3 == 0 && e.payload < 1_000 {
+                q.push(e.time, Priority::SCHEDULE, 0, 10_000 + e.payload);
+            }
+            popped.push((e.time.ticks(), e.priority.0, e.payload));
+        }
+        // Follow-ups pop at their tick, after the COMPLETE that spawned
+        // them, and the whole sequence is sorted by (time, priority, seq
+        // as reflected in push order).
+        let mut sorted = popped.clone();
+        sorted.sort();
+        assert_eq!(popped, sorted);
+        assert_eq!(popped.len(), 200 + popped.iter().filter(|p| p.2 >= 10_000).count());
+    }
+
+    /// A single-timestamp storm larger than any batch threshold must
+    /// degenerate to one sort (not recurse) and stay FIFO.
+    #[test]
+    fn same_time_storm_degenerates_to_sorted_vec() {
+        let mut q = EventQueue::new();
+        // Push a far-future marker so the storm lands in rungs/top.
+        q.push(SimTime(1_000_000), Priority::DEFAULT, 0, u64::MAX);
+        for i in 0..1_000u64 {
+            q.push(SimTime(777), Priority::DEFAULT, 0, i);
+        }
+        let order: Vec<u64> =
+            std::iter::from_fn(|| q.pop()).map(|e| e.payload).take(1_000).collect();
+        assert_eq!(order, (0..1_000).collect::<Vec<_>>(), "same-key FIFO broken");
+        assert_eq!(q.pop().unwrap().payload, u64::MAX);
+    }
+
+    #[test]
+    fn len_tracks_push_pop_across_tiers() {
+        let mut q = EventQueue::new();
+        for i in 0..300u64 {
+            q.push(SimTime(i * 997 % 5_000), Priority::DEFAULT, 0, i);
+        }
+        assert_eq!(q.len(), 300);
+        for _ in 0..120 {
+            q.pop().unwrap();
+        }
+        assert_eq!(q.len(), 180);
+        q.push(SimTime(0), Priority::DEFAULT, 0, 999); // into the past
+        assert_eq!(q.len(), 181);
+        assert_eq!(q.pop().unwrap().payload, 999, "past push pops first");
+        let mut rest = 0;
+        while q.pop().is_some() {
+            rest += 1;
+        }
+        assert_eq!(rest, 180);
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
     }
 }

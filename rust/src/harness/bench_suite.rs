@@ -13,6 +13,7 @@
 //! million-job streamed-SWF ingestion case (constant-memory scale path).
 
 use crate::baseline::run_baseline;
+use crate::core::event::{EventQueue, Priority};
 use crate::core::time::SimTime;
 use crate::job::{Job, WaitQueue};
 use crate::resources::{AvailabilityProfile, Cluster, ResourceVector};
@@ -24,6 +25,81 @@ use crate::trace::{stream_trace_file, Das2Model, SdscSp2Model, Workload};
 use crate::util::bench::{section, Bench};
 use std::cell::RefCell;
 use std::io::Write as _;
+
+/// Deterministic xorshift stream of (gap, priority) pairs shaped like a
+/// fault+reservation job sim's event mix: mostly near-future holds
+/// (completions, dispatches), a medium band (arrival batches), and a
+/// far tail (long runtimes, repair instants, reservation windows) —
+/// the mixed near/far horizon profile where bucketed queues earn their
+/// keep and heaps pay a full sift per event.
+fn queue_gap(state: &mut u64) -> (u64, u8) {
+    *state ^= *state << 13;
+    *state ^= *state >> 7;
+    *state ^= *state << 17;
+    let s = *state;
+    let gap = match s % 16 {
+        0..=9 => s % 64,
+        10..=13 => 1_000 + s % 30_000,
+        _ => 100_000 + s % 2_000_000,
+    };
+    (gap, ((s >> 33) % 4) as u8)
+}
+
+/// The DES core's event queue in isolation, ladder vs the binary heap
+/// it replaced, on identical deterministic workloads: a scattered
+/// pre-fill burst of `n/2` events, then hold-model churn (each pop
+/// schedules one successor) until `n` events have passed through, then
+/// a drain. 100k runs in the `--smoke` tier; the full suite adds 1M.
+fn event_queue_cases(b: &mut Bench, n: usize) {
+    let label = format!("queue/{}k-events/ladder", n / 1_000);
+    b.case(&label, move || {
+        let mut q: EventQueue<()> = EventQueue::new();
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        for _ in 0..n / 2 {
+            let (gap, pri) = queue_gap(&mut state);
+            q.push(SimTime(gap), Priority(pri), 0, ());
+        }
+        let mut pushed = n / 2;
+        let mut pops = 0usize;
+        while let Some(ev) = q.pop() {
+            pops += 1;
+            if pushed < n {
+                let (gap, pri) = queue_gap(&mut state);
+                q.push(SimTime(ev.time.ticks() + gap), Priority(pri), 0, ());
+                pushed += 1;
+            }
+        }
+        assert_eq!(pops, n, "ladder queue case lost events");
+        pops
+    });
+    let label = format!("queue/{}k-events/heap", n / 1_000);
+    b.case(&label, move || {
+        // The seed engine's structure: a min-heap over the same
+        // (time, priority, seq) total order.
+        let mut q: std::collections::BinaryHeap<std::cmp::Reverse<(u64, u8, u64)>> =
+            std::collections::BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        for _ in 0..n / 2 {
+            let (gap, pri) = queue_gap(&mut state);
+            q.push(std::cmp::Reverse((gap, pri, seq)));
+            seq += 1;
+        }
+        let mut pushed = n / 2;
+        let mut pops = 0usize;
+        while let Some(std::cmp::Reverse((t, _, _))) = q.pop() {
+            pops += 1;
+            if pushed < n {
+                let (gap, pri) = queue_gap(&mut state);
+                q.push(std::cmp::Reverse((t + gap, pri, seq)));
+                seq += 1;
+                pushed += 1;
+            }
+        }
+        assert_eq!(pops, n, "heap queue case lost events");
+        pops
+    });
+}
 
 /// Scheduling-round planning cost at a deep queue: `queued` waiting jobs
 /// on a fully busy machine with `running` release points. Measures one
@@ -277,6 +353,12 @@ pub fn engine_throughput_suite(smoke: bool) -> Bench {
     b.case("sim/sp2/backfill", move || {
         run_policy(w.clone(), Policy::FcfsBackfill).events
     });
+
+    section("event-queue throughput (ladder vs binary heap)");
+    event_queue_cases(&mut b, 100_000);
+    if !smoke {
+        event_queue_cases(&mut b, 1_000_000);
+    }
 
     section("scheduling-round planning cost (availability profile)");
     if smoke {

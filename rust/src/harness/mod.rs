@@ -417,6 +417,7 @@ pub struct FaultCompareOpts<'a> {
     pub faults: crate::sim::FaultConfig,
     pub reservations: &'a [crate::sim::ReservationSpec],
     pub planning_horizon: crate::sim::Horizon,
+    pub auto_horizon: crate::sim::AutoHorizonParams,
     pub order: Option<crate::sched::OrderKind>,
     pub fairshare_half_life: u64,
     pub mem_per_node: u64,
@@ -441,6 +442,7 @@ pub fn fault_comparison(
                 .with_preemption(preemption)
                 .with_reservations(opts.reservations.to_vec())
                 .with_horizon(opts.planning_horizon)
+                .with_auto_horizon_params(opts.auto_horizon)
                 .with_mem_per_node(opts.mem_per_node)
                 .with_memory_aware(opts.memory_aware);
             if opts.fairshare_half_life > 0 {

@@ -7,9 +7,29 @@
 //!
 //! The crate is layered like the paper's system:
 //!
-//! * [`core`] — payload-generic discrete-event engine (SST-Core analogue):
-//!   deterministic event queue, components, latency links, statistics,
-//!   reproducible RNG.
+//! * [`core`] — payload-generic discrete-event engine (SST-Core
+//!   analogue): deterministic event queue, components, latency links,
+//!   statistics, reproducible RNG. The queue
+//!   ([`core::event::EventQueue`]) is a **ladder queue** (tiered
+//!   calendar structure, amortized O(1) push/pop) rather than a binary
+//!   heap: a sorted *bottom* rung for the near future drained by
+//!   `Vec::pop` and filled by one batched unstable sort per bucket;
+//!   bucketed upper *rungs* for the far future that nest — an
+//!   oversized bucket spawns a child rung subdividing exactly its time
+//!   range; and an unsorted *top* tail beyond the outermost rung.
+//!   **Determinism contract**: every event key `(time, priority, seq)`
+//!   is unique, so the total order is strict and the ladder's pop
+//!   sequence is byte-identical to the heap it replaced — same-key
+//!   FIFO included (`rust/tests/prop_queue.rs` pins it against a heap
+//!   oracle; the golden fault+reservation fingerprint pins the engine
+//!   end to end). **Degeneration**: small batches and single-timestamp
+//!   storms skip the rung machinery and sort straight into the bottom —
+//!   plain sorted-vec behavior, which is also the whole story for tiny
+//!   simulations. The engine tick loop (`core::engine`) and both
+//!   parallel rank drivers ride the prepared bottom: window pops
+//!   (`pop_before`/`pop_at_or_before`) are one cached time compare, no
+//!   sift, no tuple re-comparison, and `parallel::workflow_rank` shares
+//!   the same queue type instead of a private heap.
 //! * [`job`], [`resources`], [`sched`] — the job-scheduling component:
 //!   job lifecycle, per-node core/memory accounting (paper Algorithm 1),
 //!   and the scheduling algorithms. Since the multi-resource/ordering
@@ -80,7 +100,9 @@
 //!   steady-state dispatch rounds reuse buffers instead of allocating.
 //!   The numbers are durable: `sst-sched bench [--smoke]` runs the
 //!   engine_throughput suite (including a million-job streamed-SWF case
-//!   in full mode) and writes `BENCH_engine.json` — schema
+//!   in full mode, and ladder-vs-heap event-queue cases at 100k smoke /
+//!   1M full over mixed near/far horizons) and writes
+//!   `BENCH_engine.json` — schema
 //!   `sst-sched-bench-v1`: `{schema, suite, smoke, cases: [{name, runs,
 //!   median_ns, mean_ns, min_ns, p10_ns, p90_ns}]}` — which CI uploads
 //!   on every run and diffs against the committed baseline (advisory

@@ -200,6 +200,7 @@ fn configure_sim(sim: Simulation, cfg: &ExperimentConfig) -> Simulation {
         .with_preemption(cfg.preemption)
         .with_reservations(cfg.reservations.clone())
         .with_horizon(cfg.planning_horizon)
+        .with_auto_horizon_params(cfg.auto_horizon)
         .with_mem_per_node(cfg.mem_per_node)
         .with_memory_aware(cfg.memory_aware)
         .with_fairshare_half_life(cfg.fairshare_half_life);
@@ -227,11 +228,17 @@ fn cmd_run_streamed(cfg: &ExperimentConfig) -> Result<()> {
         bail!("--arrival-scale needs the eager path (it rewrites every submit time)");
     }
     if cfg.faults.enabled() && cfg.faults.until.is_none() {
-        // The injector horizon is derived from the eager job list, which
-        // a stream does not have — refuse rather than silently stop
-        // injecting at t = 4 x mttr.
-        bail!("streamed fault runs need --faults-until (the injector horizon cannot be \
-               derived from a stream)");
+        // The eager path derives the injector horizon from the full job
+        // list; a stream cannot, so the builder watches the stream's
+        // last-seen submission and the injector stops 4 x mttr past it
+        // (this command used to refuse outright). One caveat worth a
+        // warning: a mid-trace arrival drought longer than 4 x mttr
+        // looks like end-of-trace and ends injection early.
+        eprintln!(
+            "warning: streamed fault run without --faults-until — deriving the injector \
+             horizon from the stream's last-seen submission (+ 4 x mttr slack); pass \
+             --faults-until explicitly if the trace has arrival gaps longer than that"
+        );
     }
     let nodes = cfg.nodes.unwrap_or(def_nodes);
     let cores = cfg.cores_per_node.unwrap_or(def_cores);
@@ -323,6 +330,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             preemption: cfg.preemption,
             reservations: cfg.reservations.clone(),
             planning_horizon: cfg.planning_horizon,
+            auto_horizon: cfg.auto_horizon,
             order: cfg.order,
             fairshare_half_life: cfg.fairshare_half_life,
             mem_per_node: cfg.mem_per_node,
@@ -411,6 +419,7 @@ fn cmd_faults(args: &Args) -> Result<()> {
             faults: cfg.faults,
             reservations: &cfg.reservations,
             planning_horizon: cfg.planning_horizon,
+            auto_horizon: cfg.auto_horizon,
             order: cfg.order,
             fairshare_half_life: cfg.fairshare_half_life,
             mem_per_node: cfg.mem_per_node,

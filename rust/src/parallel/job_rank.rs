@@ -12,7 +12,8 @@ use crate::parallel::{
 };
 use crate::sched::{OrderKind, Policy, PreemptionConfig};
 use crate::sim::{
-    FaultConfig, Horizon, ReservationSpec, SimInstance, Simulation, DEFAULT_FAIRSHARE_HALF_LIFE,
+    AutoHorizonParams, FaultConfig, Horizon, ReservationSpec, SimInstance, Simulation,
+    DEFAULT_FAIRSHARE_HALF_LIFE,
 };
 use crate::trace::Workload;
 
@@ -35,6 +36,9 @@ pub struct RankSimOpts {
     /// does not rescale with the rank count (auto derives from each
     /// rank's own queue).
     pub planning_horizon: Horizon,
+    /// `Horizon::Auto` tunables (`planning.auto_*`); per rank unchanged
+    /// for the same reason.
+    pub auto_horizon: AutoHorizonParams,
     /// Queue-ordering override; applied per rank unchanged (fair-share
     /// usage is per-rank state, exactly like the per-cluster queues the
     /// partitioning models).
@@ -74,6 +78,7 @@ impl Default for RankSimOpts {
             preemption: PreemptionConfig::default(),
             reservations: Vec::new(),
             planning_horizon: Horizon::Exact,
+            auto_horizon: AutoHorizonParams::default(),
             order: None,
             fairshare_half_life: DEFAULT_FAIRSHARE_HALF_LIFE,
             mem_per_node: 0,
@@ -219,6 +224,7 @@ pub fn run_jobs_parallel_opts(
                     .with_preemption(opts.preemption)
                     .with_reservations(opts.reservations)
                     .with_horizon(opts.planning_horizon)
+                    .with_auto_horizon_params(opts.auto_horizon)
                     .with_fairshare_half_life(opts.fairshare_half_life)
                     .with_mem_per_node(opts.mem_per_node)
                     .with_memory_aware(opts.memory_aware);

@@ -3,13 +3,14 @@
 //! components); dependency edges that cross ranks become real
 //! conservative messages with the link latency as lookahead.
 
+use crate::core::event::{EventQueue, Priority};
+use crate::core::time::SimTime;
 use crate::parallel::{run_parallel, run_parallel_modeled, ParallelReport, RankLogic, RankSummary, BARRIER_COST};
 use crate::workflow::task::TaskId;
 use crate::workflow::Workflow;
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum LEv {
     /// A running task finished.
     Done(TaskId),
@@ -24,8 +25,12 @@ struct WorkflowRank {
     wf: Workflow,
     /// Remaining dependency count for owned tasks.
     pending: BTreeMap<TaskId, usize>,
-    heap: BinaryHeap<Reverse<(u64, u64, LEv)>>,
-    seq: u64,
+    /// The shared ladder event queue — same `(time, priority, seq)`
+    /// total order the sequential engine uses (the rank's old private
+    /// `BinaryHeap<Reverse<(t, seq, ev)>>` keyed identically: one
+    /// priority level, FIFO by push order, so the migration is
+    /// order-preserving by construction).
+    queue: EventQueue<LEv>,
     /// (task, became ready at) in FIFO order.
     ready: VecDeque<(TaskId, u64)>,
     free_cpu: u64,
@@ -38,8 +43,7 @@ struct WorkflowRank {
 impl WorkflowRank {
     fn new(wf: Workflow, me: usize, ranks: usize, cpu: u64, latency: u64) -> WorkflowRank {
         let mut pending = BTreeMap::new();
-        let mut heap = BinaryHeap::new();
-        let mut seq = 0u64;
+        let mut queue = EventQueue::new();
         for (&id, task) in &wf.tasks {
             if id as usize % ranks != me {
                 continue;
@@ -52,8 +56,7 @@ impl WorkflowRank {
             let deg = task.dependencies.len();
             pending.insert(id, deg);
             if deg == 0 {
-                heap.push(Reverse((0, seq, LEv::Ready(id))));
-                seq += 1;
+                queue.push(SimTime(0), Priority::DEFAULT, 0, LEv::Ready(id));
             }
         }
         WorkflowRank {
@@ -62,8 +65,7 @@ impl WorkflowRank {
             latency,
             wf,
             pending,
-            heap,
-            seq,
+            queue,
             ready: VecDeque::new(),
             free_cpu: cpu,
             clock: 0,
@@ -78,8 +80,7 @@ impl WorkflowRank {
     }
 
     fn push(&mut self, t: u64, ev: LEv) {
-        self.heap.push(Reverse((t, self.seq, ev)));
-        self.seq += 1;
+        self.queue.push(SimTime(t), Priority::DEFAULT, 0, ev);
     }
 
     /// Start every ready task that fits, FIFO (list scheduling, same
@@ -113,15 +114,15 @@ impl RankLogic for WorkflowRank {
     type Msg = TaskId;
 
     fn next_time(&mut self) -> Option<u64> {
-        self.heap.peek().map(|Reverse((t, _, _))| *t)
+        self.queue.peek_time().map(|t| t.ticks())
     }
 
     fn run_window(&mut self, bound: u64, outbox: &mut Vec<(usize, u64, TaskId)>) {
-        while let Some(Reverse((t, _, ev))) = self.heap.peek().copied() {
-            if t >= bound {
-                break;
-            }
-            self.heap.pop();
+        // Rung-local scan: the half-open window pops straight off the
+        // ladder's prepared bottom — one time compare per event, no
+        // peek/pop double traversal.
+        while let Some(sched) = self.queue.pop_before(SimTime(bound)) {
+            let (t, ev) = (sched.time.ticks(), sched.payload);
             debug_assert!(t >= self.clock);
             self.clock = t;
             self.events += 1;

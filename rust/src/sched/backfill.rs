@@ -83,8 +83,8 @@ impl Scheduler for BackfillScheduler {
         let mut local = RoundScratch::default();
         let mut guard = None;
         let scratch = borrow_scratch(input, &mut guard, &mut local);
-        let RoundScratch { order_ids, cand_ids, req, est, wait, rank, plan } = scratch;
-        if input.order.order_into(input.queue, input.now, order_ids) {
+        let RoundScratch { order_ids, order_keys, cand_ids, req, est, wait, rank, plan } = scratch;
+        if input.order.order_into(input.queue, input.now, order_ids, order_keys) {
             let mut it =
                 order_ids.iter().map(|id| input.queue.get(*id).expect("ordered id not in queue"));
             self.run_round(input, cluster, &mut it, cand_ids, req, est, wait, rank, plan)

@@ -46,12 +46,12 @@ impl Scheduler for ConservativeScheduler {
         let mut local = RoundScratch::default();
         let mut guard = None;
         let scratch = borrow_scratch(input, &mut guard, &mut local);
-        let RoundScratch { order_ids, plan, .. } = scratch;
+        let RoundScratch { order_ids, order_keys, plan, .. } = scratch;
         // Scratch plan: the shared timeline overwritten in place (no
         // per-round clone — the reservation-ladder holds below land on
         // the reusable buffer).
         plan.copy_from(input.profile);
-        if input.order.order_into(input.queue, input.now, order_ids) {
+        if input.order.order_into(input.queue, input.now, order_ids, order_keys) {
             let mut it =
                 order_ids.iter().map(|id| input.queue.get(*id).expect("ordered id not in queue"));
             Self::run_round(input, cluster, &mut it, plan)

@@ -147,8 +147,8 @@ impl Scheduler for BlockingScheduler {
         let mut local = RoundScratch::default();
         let mut guard = None;
         let scratch = borrow_scratch(input, &mut guard, &mut local);
-        let RoundScratch { order_ids, plan, .. } = scratch;
-        if input.order.order_into(input.queue, input.now, order_ids) {
+        let RoundScratch { order_ids, order_keys, plan, .. } = scratch;
+        if input.order.order_into(input.queue, input.now, order_ids, order_keys) {
             let mut it =
                 order_ids.iter().map(|id| input.queue.get(*id).expect("ordered id not in queue"));
             run_ordered(&mut it, input, cluster, self.alloc, plan).allocs

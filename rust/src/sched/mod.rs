@@ -79,6 +79,13 @@ pub struct RunningJob {
 pub struct RoundScratch {
     /// Materialized queue order (non-arrival orderings).
     pub order_ids: Vec<JobId>,
+    /// Sort-key column the ordered views sort in place of a transient
+    /// per-round tuple vector: `(primary key, submit, id)`. SJF/LJF use
+    /// the runtime estimate as primary key; fair share uses the decayed
+    /// usage's IEEE bit pattern (order-identical to `total_cmp` for the
+    /// non-negative values usage can take). Arrival order leaves it
+    /// untouched.
+    pub order_keys: Vec<(u64, u64, JobId)>,
     /// Backfill candidates behind the blocked head.
     pub cand_ids: Vec<JobId>,
     /// Scorer input columns: requested cores / runtime estimates / waits.

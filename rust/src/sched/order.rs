@@ -64,18 +64,26 @@ pub trait QueueOrder {
     /// Write this round's dispatch order into `ids` (cleared first).
     /// Returns `false` when the queue should be walked in place (arrival
     /// order — the lazy path where a blocked head costs O(1)); `ids` is
-    /// left empty in that case. The buffer comes from the driver's
-    /// per-round scratch ([`crate::sched::RoundScratch`]), so ordered
-    /// rounds reuse one allocation instead of materializing a fresh id
-    /// vector every dispatch.
-    fn order_into(&self, queue: &WaitQueue, now: SimTime, ids: &mut Vec<JobId>) -> bool;
+    /// left empty in that case. Both buffers come from the driver's
+    /// per-round scratch ([`crate::sched::RoundScratch`]): `ids` is the
+    /// materialized order, `keys` the sort-key column the ordering sorts
+    /// in — so ordered rounds are zero-alloc like the arrival path
+    /// instead of materializing a fresh tuple vector every dispatch.
+    fn order_into(
+        &self,
+        queue: &WaitQueue,
+        now: SimTime,
+        ids: &mut Vec<JobId>,
+        keys: &mut Vec<(u64, u64, JobId)>,
+    ) -> bool;
 
     /// Allocating convenience wrapper around [`QueueOrder::order_into`]
-    /// (tests and one-shot callers; the simulator threads a reusable
-    /// buffer through `SchedInput::scratch` instead).
+    /// (tests and one-shot callers; the simulator threads reusable
+    /// buffers through `SchedInput::scratch` instead).
     fn view(&self, queue: &WaitQueue, now: SimTime) -> QueueView {
         let mut ids = Vec::new();
-        if self.order_into(queue, now, &mut ids) {
+        let mut keys = Vec::new();
+        if self.order_into(queue, now, &mut ids, &mut keys) {
             QueueView::Ids(ids)
         } else {
             QueueView::Arrival
@@ -102,7 +110,13 @@ impl QueueOrder for ArrivalOrder {
         "arrival"
     }
 
-    fn order_into(&self, _queue: &WaitQueue, _now: SimTime, ids: &mut Vec<JobId>) -> bool {
+    fn order_into(
+        &self,
+        _queue: &WaitQueue,
+        _now: SimTime,
+        ids: &mut Vec<JobId>,
+        _keys: &mut Vec<(u64, u64, JobId)>,
+    ) -> bool {
         ids.clear();
         false
     }
@@ -118,26 +132,32 @@ pub struct ShortestFirst;
 pub struct LongestFirst;
 
 /// Fill `ids` with queue ids sorted by estimate (shared by SJF/LJF).
-/// The sort-key tuples live in a transient local buffer; only the id
-/// buffer itself is reused across rounds.
-fn order_by_estimate_into(queue: &WaitQueue, longest_first: bool, ids: &mut Vec<JobId>) {
+/// `keys` is the reusable sort-key column from the round scratch —
+/// ordered rounds build and sort it in place, allocating nothing in
+/// steady state (keys are unique in `id`, so the unstable sort is a
+/// total order).
+fn order_by_estimate_into(
+    queue: &WaitQueue,
+    longest_first: bool,
+    ids: &mut Vec<JobId>,
+    keys: &mut Vec<(u64, u64, JobId)>,
+) {
     ids.clear();
-    let mut jobs: Vec<(u64, u64, JobId)> = queue
-        .iter()
-        .map(|j| (j.est_runtime.ticks(), j.submit.ticks(), j.id))
-        .collect();
+    keys.clear();
+    keys.extend(queue.iter().map(|j| (j.est_runtime.ticks(), j.submit.ticks(), j.id)));
     if longest_first {
-        jobs.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+        keys.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
     } else {
-        jobs.sort();
+        keys.sort_unstable();
     }
-    ids.extend(jobs.into_iter().map(|(_, _, id)| id));
+    ids.extend(keys.iter().map(|&(_, _, id)| id));
 }
 
 /// Queue ids sorted by estimate (tests and one-shot callers).
 pub(crate) fn order_by_estimate(queue: &WaitQueue, longest_first: bool) -> Vec<JobId> {
     let mut ids = Vec::new();
-    order_by_estimate_into(queue, longest_first, &mut ids);
+    let mut keys = Vec::new();
+    order_by_estimate_into(queue, longest_first, &mut ids, &mut keys);
     ids
 }
 
@@ -146,8 +166,14 @@ impl QueueOrder for ShortestFirst {
         "shortest"
     }
 
-    fn order_into(&self, queue: &WaitQueue, _now: SimTime, ids: &mut Vec<JobId>) -> bool {
-        order_by_estimate_into(queue, false, ids);
+    fn order_into(
+        &self,
+        queue: &WaitQueue,
+        _now: SimTime,
+        ids: &mut Vec<JobId>,
+        keys: &mut Vec<(u64, u64, JobId)>,
+    ) -> bool {
+        order_by_estimate_into(queue, false, ids, keys);
         true
     }
 }
@@ -157,8 +183,14 @@ impl QueueOrder for LongestFirst {
         "longest"
     }
 
-    fn order_into(&self, queue: &WaitQueue, _now: SimTime, ids: &mut Vec<JobId>) -> bool {
-        order_by_estimate_into(queue, true, ids);
+    fn order_into(
+        &self,
+        queue: &WaitQueue,
+        _now: SimTime,
+        ids: &mut Vec<JobId>,
+        keys: &mut Vec<(u64, u64, JobId)>,
+    ) -> bool {
+        order_by_estimate_into(queue, true, ids, keys);
         true
     }
 }
@@ -207,14 +239,28 @@ impl QueueOrder for FairShare {
         "fair-share"
     }
 
-    fn order_into(&self, queue: &WaitQueue, now: SimTime, ids: &mut Vec<JobId>) -> bool {
+    fn order_into(
+        &self,
+        queue: &WaitQueue,
+        now: SimTime,
+        ids: &mut Vec<JobId>,
+        keys: &mut Vec<(u64, u64, JobId)>,
+    ) -> bool {
         ids.clear();
-        let mut jobs: Vec<(f64, u64, JobId)> = queue
-            .iter()
-            .map(|j| (self.effective_usage(j.user, j.group, now), j.submit.ticks(), j.id))
-            .collect();
-        jobs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
-        ids.extend(jobs.into_iter().map(|(_, _, id)| id));
+        keys.clear();
+        keys.extend(queue.iter().map(|j| {
+            let usage = self.effective_usage(j.user, j.group, now);
+            // Decayed usage is finite and non-negative (sums and
+            // positive scalings of non-negative charges), and for such
+            // values the IEEE bit pattern orders exactly like
+            // `total_cmp` — so the reusable u64 key column serves the
+            // float ordering too. `<= 0.0` also folds a (theoretical)
+            // -0.0 onto the zero key.
+            let key = if usage <= 0.0 { 0 } else { usage.to_bits() };
+            (key, j.submit.ticks(), j.id)
+        }));
+        keys.sort_unstable();
+        ids.extend(keys.iter().map(|&(_, _, id)| id));
         true
     }
 
@@ -378,6 +424,26 @@ mod tests {
         let snap = fs.usage_snapshot(SimTime(1_100));
         assert_eq!(snap.len(), 1);
         assert_eq!(snap[0].user, 7);
+    }
+
+    #[test]
+    fn fairshare_bit_key_orders_like_total_cmp() {
+        // The reusable u64 key column sorts usages by IEEE bit pattern;
+        // for the non-negative finite values fair share produces that
+        // must order exactly like `total_cmp` (with -0.0 folded onto 0).
+        let key = |u: f64| if u <= 0.0 { 0u64 } else { u.to_bits() };
+        let vals = [0.0, 1e-300, 1e-9, 0.5, 1.0, 1.5, 400.0, 3.7e5, 1e12, f64::MAX];
+        for &a in &vals {
+            for &b in &vals {
+                assert_eq!(
+                    key(a).cmp(&key(b)),
+                    a.total_cmp(&b),
+                    "bit key diverged from total_cmp for ({a}, {b})"
+                );
+            }
+        }
+        // A (theoretical) negative zero folds onto the zero key.
+        assert_eq!(key(-0.0), key(0.0));
     }
 
     #[test]

@@ -31,17 +31,45 @@ use std::collections::HashMap;
 
 /// Queue depth at or below which `Horizon::Auto` plans exactly — the
 /// timeline stays short on its own when few jobs wait, so clamping
-/// would only cost fidelity.
+/// would only cost fidelity. Default of `planning.auto_shallow_queue`.
 pub const AUTO_SHALLOW_QUEUE: usize = 256;
 /// Auto clamp length: this many *median queue runtime estimates* of
 /// lookahead. Deep enough that shadow times and candidate admission
 /// windows stay faithful (estimates beyond the clamp are the heavy
 /// tail no backfill decision reaches), shallow enough to bound
-/// breakpoint count at million-job queue depths.
+/// breakpoint count at million-job queue depths. Default of
+/// `planning.auto_horizon_estimates`.
 pub const AUTO_HORIZON_ESTIMATES: u64 = 32;
 /// Auto clamp floor in ticks (one simulated hour) — degenerate queues
 /// of sub-minute jobs must not collapse the timeline to a sliver.
+/// Default of `planning.auto_min_horizon`.
 pub const AUTO_MIN_HORIZON: u64 = 3_600;
+
+/// Tunables of the [`Horizon::Auto`] law, exposed as the
+/// `planning.auto_*` config keys so the constants above are defaults,
+/// not destiny (they are engineering picks; real archive traces may
+/// want a different depth/lookahead trade).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoHorizonParams {
+    /// Queue depth at or below which auto plans exactly
+    /// (`planning.auto_shallow_queue`).
+    pub shallow_queue: usize,
+    /// Clamp length in median queue runtime estimates
+    /// (`planning.auto_horizon_estimates`, >= 1).
+    pub estimates: u64,
+    /// Clamp floor in ticks (`planning.auto_min_horizon`).
+    pub min_horizon: u64,
+}
+
+impl Default for AutoHorizonParams {
+    fn default() -> Self {
+        AutoHorizonParams {
+            shallow_queue: AUTO_SHALLOW_QUEUE,
+            estimates: AUTO_HORIZON_ESTIMATES,
+            min_horizon: AUTO_MIN_HORIZON,
+        }
+    }
+}
 
 /// Where a [`JobSource`]'s jobs come from.
 enum JobFeed {
@@ -254,6 +282,8 @@ pub struct SchedulerComponent {
     /// Queue depth when the auto horizon was last derived (staleness
     /// check — re-derive when the depth halves or doubles).
     auto_depth: usize,
+    /// `Horizon::Auto` tunables (`planning.auto_*`).
+    auto_params: AutoHorizonParams,
     /// Reusable per-round scratch (order views, candidate buffers, the
     /// scratch plan) — threaded to every policy via `SchedInput::scratch`
     /// so steady-state dispatch rounds allocate nothing.
@@ -276,10 +306,16 @@ pub struct SchedulerComponent {
     /// as time approaches them, so dispatch refreshes every horizon/2
     /// ticks of simulated progress.
     last_resync: u64,
-    /// Set while a capacity transition interrupts several occupants so
-    /// each departure does not trigger its own full resync — the
-    /// transition handler rebuilds once at the end.
-    defer_resync: bool,
+    /// Capacity transitions (node failure/repair, reservation
+    /// claim/expiry, departures touching non-`Up` nodes) no longer
+    /// resync eagerly — they raise this flag, and the next dispatch
+    /// round (the only profile reader) rebuilds once before deciding.
+    /// A same-tick fault/repair storm of k transitions thus pays one
+    /// O(running) resync instead of k, and the decision-time profile is
+    /// identical: resync-from-authoritative-state at the dispatch
+    /// instant sees exactly the state the k eager rebuilds would have
+    /// converged to (pinned by the fault fingerprint regressions).
+    profile_stale: bool,
     /// Completed jobs with their full lifecycle records. Streaming-scale
     /// runs turn retention off (`retain_completed = false`) so memory
     /// stays O(active jobs); the scalar aggregates below survive either
@@ -357,6 +393,7 @@ impl SchedulerComponent {
             horizon: Horizon::Exact,
             effective_horizon: 0,
             auto_depth: 0,
+            auto_params: AutoHorizonParams::default(),
             scratch: RefCell::new(RoundScratch::default()),
             running_scratch: Vec::new(),
             pending_repairs: HashMap::new(),
@@ -364,7 +401,7 @@ impl SchedulerComponent {
             resv_plan_cores: Vec::new(),
             resv_plan_mem: Vec::new(),
             last_resync: 0,
-            defer_resync: false,
+            profile_stale: false,
             completed: Vec::new(),
             retain_completed: true,
             completed_count: 0,
@@ -514,16 +551,24 @@ impl SchedulerComponent {
         self.effective_horizon
     }
 
+    /// Install the `Horizon::Auto` tunables (builder; `planning.auto_*`).
+    pub fn set_auto_params(&mut self, params: AutoHorizonParams) {
+        self.auto_params = params;
+    }
+
     /// Auto-horizon law (`planning.horizon = "auto"`): exact planning
-    /// while the queue is shallow; past [`AUTO_SHALLOW_QUEUE`] waiters
-    /// the timeline is clamped to [`AUTO_HORIZON_ESTIMATES`] median
-    /// runtime estimates (floored at [`AUTO_MIN_HORIZON`]), so timeline
-    /// length tracks the depth of planning the rounds actually exploit
-    /// instead of the tail of every running job's estimate. Derived from
-    /// queue state only — byte-deterministic across runs.
+    /// while the queue is shallow; past `auto_params.shallow_queue`
+    /// waiters the timeline is clamped to `auto_params.estimates`
+    /// median runtime estimates (floored at `auto_params.min_horizon`),
+    /// so timeline length tracks the depth of planning the rounds
+    /// actually exploit instead of the tail of every running job's
+    /// estimate. Derived from queue state only — byte-deterministic
+    /// across runs. Defaults: [`AUTO_SHALLOW_QUEUE`],
+    /// [`AUTO_HORIZON_ESTIMATES`], [`AUTO_MIN_HORIZON`]
+    /// (`planning.auto_*` overrides them).
     fn derive_auto_horizon(&mut self) {
         self.auto_depth = self.queue.len();
-        if self.auto_depth <= AUTO_SHALLOW_QUEUE {
+        if self.auto_depth <= self.auto_params.shallow_queue {
             self.effective_horizon = 0;
             return;
         }
@@ -531,8 +576,9 @@ impl SchedulerComponent {
             self.queue.iter().map(|j| j.est_runtime.ticks().max(1)).collect();
         let mid = ests.len() / 2;
         let (_, median, _) = ests.select_nth_unstable(mid);
-        self.effective_horizon =
-            (*median).saturating_mul(AUTO_HORIZON_ESTIMATES).max(AUTO_MIN_HORIZON);
+        self.effective_horizon = (*median)
+            .saturating_mul(self.auto_params.estimates.max(1))
+            .max(self.auto_params.min_horizon);
     }
 
     /// Whether the auto horizon should be re-derived: the queue depth
@@ -585,7 +631,8 @@ impl SchedulerComponent {
     /// of the allocation is `Up`, the stored hold deltas are reversed
     /// exactly (hot path); otherwise part of the cores return to a
     /// drained/failed node instead of the schedulable pool, so the
-    /// timeline is resynced from authoritative state (rare path).
+    /// timeline must be rebuilt from authoritative state — flagged, and
+    /// performed once by the next dispatch round (rare path).
     fn release_profile_hold(
         &mut self,
         alloc: &Allocation,
@@ -601,8 +648,8 @@ impl SchedulerComponent {
             for &(end, d) in hold {
                 self.profile.release_v(nowt, end, d);
             }
-        } else if !self.defer_resync {
-            self.resync_profile(now);
+        } else {
+            self.profile_stale = true;
         }
     }
 
@@ -813,6 +860,7 @@ impl SchedulerComponent {
             self.profile.rebuild(nowt, self.cluster.free_cores(), deltas);
         }
         self.last_resync = nowt;
+        self.profile_stale = false;
     }
 
     /// Apply a node failure: kill occupants, take the node down, and
@@ -828,14 +876,13 @@ impl SchedulerComponent {
         self.fault_counters.failures += 1;
         self.cluster.set_node_state(node, NodeState::Down);
         self.pending_repairs.insert(node, (ctx.now() + repair_after).ticks());
-        // One rebuild covers every occupant kill: suppress the
-        // per-departure resync inside the loop.
-        self.defer_resync = true;
+        // The occupant kills below mark the profile stale (their nodes
+        // are Down now); the next dispatch rebuilds once — a same-tick
+        // failure storm pays one resync total, not one per transition.
         for id in self.occupants_of(&[node]) {
             self.interrupt_job(id, InterruptReason::Failure, ctx);
         }
-        self.defer_resync = false;
-        self.resync_profile(ctx.now());
+        self.profile_stale = true;
         ctx.schedule_self(repair_after, Priority::COMPLETE, Ev::NodeUp { node });
         self.audit_placements();
         self.record_series(ctx.now());
@@ -855,7 +902,7 @@ impl SchedulerComponent {
             NodeState::Up
         };
         self.cluster.set_node_state(node, state);
-        self.resync_profile(ctx.now());
+        self.profile_stale = true;
         self.audit_placements();
         self.record_series(ctx.now());
         if !self.queue.is_empty() {
@@ -885,12 +932,12 @@ impl SchedulerComponent {
         // to the operator, not silently truncated.
         self.fault_counters.reservations_short_nodes += (want - claim.len()) as u64;
         if self.preemption.enabled() {
-            // The post-claim resync below covers these departures too.
-            self.defer_resync = true;
+            // The deferred resync (next dispatch) covers these
+            // departures too — evicted occupants requeue, so a dispatch
+            // at this tick is guaranteed.
             for id in self.occupants_of(&claim) {
                 self.interrupt_job(id, InterruptReason::Eviction, ctx);
             }
-            self.defer_resync = false;
         }
         for &node in &claim {
             self.claimed.insert(node, res);
@@ -901,7 +948,7 @@ impl SchedulerComponent {
                 self.fault_counters.reservations_degraded += 1;
             }
         }
-        self.resync_profile(ctx.now());
+        self.profile_stale = true;
         self.audit_placements();
         self.record_series(ctx.now());
     }
@@ -924,7 +971,7 @@ impl SchedulerComponent {
         if let Some(p) = self.resv_pending.get_mut(res) {
             *p = false; // defensive: an end without a start is spent too
         }
-        self.resync_profile(ctx.now());
+        self.profile_stale = true;
         self.audit_placements();
         self.record_series(ctx.now());
         if !self.queue.is_empty() {
@@ -951,15 +998,18 @@ impl SchedulerComponent {
         let now = ctx.now();
         // The availability timeline tracks "from now on"; drop history.
         self.profile.advance(now.ticks());
-        // Auto horizon: re-derive (and re-encode the timeline under the
-        // new clamp) when queue depth has drifted a factor of two from
-        // the last derivation. Finite horizons also refresh on time:
-        // events clamped away at the last resync (reservation windows,
-        // far-out releases) must re-enter the timeline as time
-        // approaches them — every horizon/2 ticks of progress guarantees
-        // at least half a horizon of advance notice while keeping
-        // resyncs rare.
-        if self.auto_horizon_stale()
+        // Rebuild the timeline when (a) a capacity transition since the
+        // last round left it stale — the deferred-resync flag, one
+        // rebuild however many same-tick transitions raised it; (b) the
+        // auto horizon must re-derive (queue depth drifted a factor of
+        // two from the last derivation); or (c) a finite horizon is due
+        // its time refresh: events clamped away at the last resync
+        // (reservation windows, far-out releases) must re-enter the
+        // timeline as time approaches them — every horizon/2 ticks of
+        // progress guarantees at least half a horizon of advance notice
+        // while keeping resyncs rare.
+        if self.profile_stale
+            || self.auto_horizon_stale()
             || (self.effective_horizon > 0
                 && now.ticks().saturating_sub(self.last_resync)
                     >= (self.effective_horizon / 2).max(1))
@@ -1000,6 +1050,12 @@ impl SchedulerComponent {
                 running_info.clear();
                 if self.scheduler.uses_running_info() {
                     Self::fill_running_snapshot(&self.running, &mut running_info);
+                }
+                if self.profile_stale {
+                    // A victim sat on a non-`Up` node: its release could
+                    // not be reversed incrementally, and the allocation
+                    // pass below reads the profile — rebuild now.
+                    self.resync_profile(now);
                 }
             }
         }

@@ -21,6 +21,8 @@ use crate::core::rng::Rng;
 use crate::core::time::{SimDuration, SimTime};
 use crate::sim::Ev;
 use std::any::Any;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Inter-failure gap distribution (`faults.distribution`).
 ///
@@ -157,6 +159,22 @@ pub struct FaultInjector {
     until: SimTime,
     rng: Rng,
     reservations: Vec<ReservationSpec>,
+    /// Streamed-run horizon watermark: the stream's last-seen submit
+    /// (advanced by the job source as it pulls records). When set, the
+    /// injection horizon is `watermark + 4 x mttr`, re-read at each
+    /// failure instant — the fixed `until` is ignored. Updates happen
+    /// inside the single-threaded event loop, so reads are
+    /// deterministic. Caveat (documented in the CLI warning): an
+    /// arrival drought longer than `4 x mttr` *mid-trace* ends
+    /// injection early, since the injector cannot distinguish it from
+    /// the end of the stream — set `faults.until` explicitly for such
+    /// traces.
+    stream_watermark: Option<Arc<AtomicU64>>,
+    /// Drawn instant of the next failure (dynamic mode only): wake-ups
+    /// may fire *before* it when the derived horizon clamps the sleep —
+    /// see [`FaultInjector::schedule_dynamic_wake`]. `None` = chain
+    /// ended.
+    next_fault_due: Option<SimTime>,
     /// Failure events injected (for reporting).
     pub injected: u64,
 }
@@ -168,7 +186,36 @@ impl FaultInjector {
         reservations: Vec<ReservationSpec>,
     ) -> FaultInjector {
         let rng = Rng::new(cfg.seed);
-        FaultInjector { scheduler: 0, cfg, until, rng, reservations, injected: 0 }
+        FaultInjector {
+            scheduler: 0,
+            cfg,
+            until,
+            rng,
+            reservations,
+            stream_watermark: None,
+            next_fault_due: None,
+            injected: 0,
+        }
+    }
+
+    /// Derive the injection horizon from a stream watermark instead of
+    /// the fixed `until` (see the field docs; used by the simulation
+    /// builder for streamed runs without `faults.until`).
+    pub fn with_stream_watermark(mut self, watermark: Arc<AtomicU64>) -> FaultInjector {
+        self.stream_watermark = Some(watermark);
+        self
+    }
+
+    /// The injection horizon as of now: fixed, or derived from the
+    /// stream's last-seen submission plus the same `4 x mttr` slack the
+    /// eager path derives from the full job list.
+    fn horizon_now(&self) -> SimTime {
+        match &self.stream_watermark {
+            None => self.until,
+            Some(w) => {
+                SimTime(w.load(Ordering::Relaxed)) + SimDuration::from_f64(4.0 * self.cfg.mttr)
+            }
+        }
     }
 
     /// Exponential draw in whole ticks, at least 1 (repairs, and the
@@ -208,10 +255,45 @@ impl FaultInjector {
             return;
         }
         let gap = self.draw_gap();
+        if self.stream_watermark.is_some() {
+            // Dynamic (streamed) horizon: the bound grows as the stream
+            // is ingested, so the drawn instant cannot be judged at
+            // schedule time. Record it and sleep toward it in
+            // horizon-clamped steps.
+            let due = ctx.now() + gap;
+            self.next_fault_due = Some(due);
+            self.schedule_dynamic_wake(ctx, due);
+            return;
+        }
         if ctx.now() + gap > self.until {
             return; // injection horizon reached; let the queue drain
         }
         ctx.schedule_self(gap, Priority::COMPLETE, Ev::NextFault);
+    }
+
+    /// Dynamic-mode sleep toward `due`, clamped to just past the
+    /// current derived bound: if the stream moves on meanwhile, the
+    /// wake-up re-derives and resumes toward `due`; if not, the chain
+    /// ends having overshot the last activity by at most one tick past
+    /// `watermark + 4 x mttr` (the eager law's endpoint) — never by a
+    /// full unbounded exponential gap, which would drag `end_time` (and
+    /// the streaming utilization means it denominates) past the run.
+    /// Failure *instants* are unaffected: injection only ever happens
+    /// at exactly `due`, and the stop decision matches the unclamped
+    /// fire-time check (a stagnant watermark means the stream is
+    /// exhausted — the one-job lookahead keeps it ahead of the clock
+    /// while arrivals remain).
+    fn schedule_dynamic_wake(&mut self, ctx: &mut Ctx<Ev>, due: SimTime) {
+        let now = ctx.now();
+        let bound = self.horizon_now();
+        if now > bound {
+            self.next_fault_due = None; // past the derived horizon: stop
+            return;
+        }
+        let wake = due.min(SimTime(bound.ticks().saturating_add(1)));
+        // `wake > now`: `due = now + gap` with gap >= 1, and
+        // `bound + 1 > now` since `now <= bound`.
+        ctx.schedule_self(wake - now, Priority::COMPLETE, Ev::NextFault);
     }
 }
 
@@ -243,6 +325,25 @@ impl Component<Ev> for FaultInjector {
     fn handle(&mut self, ev: Ev, ctx: &mut Ctx<Ev>) {
         match ev {
             Ev::NextFault => {
+                if self.stream_watermark.is_some() {
+                    let Some(due) = self.next_fault_due else {
+                        return; // chain already ended
+                    };
+                    if ctx.now() < due {
+                        // Horizon-clamped wake-up, not the drawn
+                        // instant: re-derive and resume or stop.
+                        self.schedule_dynamic_wake(ctx, due);
+                        return;
+                    }
+                    if ctx.now() > self.horizon_now() {
+                        // The drawn instant lies past the derived
+                        // horizon: arrivals are more than 4 x mttr
+                        // behind — stop the chain, let the queue drain.
+                        self.next_fault_due = None;
+                        return;
+                    }
+                    self.next_fault_due = None;
+                }
                 self.injected += 1;
                 // The victim draw rides along so the scheduler (which
                 // knows the current node states) can pick deterministically

@@ -16,7 +16,7 @@ pub mod components;
 pub mod faults;
 pub mod multicluster;
 
-pub use components::{FaultCounters, JobExecutor, JobSource, SchedulerComponent};
+pub use components::{AutoHorizonParams, FaultCounters, JobExecutor, JobSource, SchedulerComponent};
 pub use faults::{FaultConfig, FaultDistribution, FaultInjector, ReservationSpec};
 pub use multicluster::{ClusterSpec, MetaScheduler, MultiClusterReport, Routing};
 
@@ -277,13 +277,20 @@ pub struct Simulation {
     /// Planning-horizon policy for the availability timeline
     /// (`planning.horizon`): see [`Horizon`].
     pub planning_horizon: Horizon,
+    /// `Horizon::Auto` tunables (`planning.auto_*`); inert unless
+    /// `planning_horizon` is [`Horizon::Auto`].
+    pub auto_horizon_params: AutoHorizonParams,
     /// Streamed job feed (constant-memory million-job ingestion): when
     /// set, the source pulls jobs from this iterator one at a time as
     /// simulated time reaches them instead of replaying
     /// `workload.jobs` — pair with [`crate::trace::Workload::machine`].
     /// The stream must yield jobs in nondecreasing submit order. Fault
-    /// injection cannot see the last submission of a stream, so streamed
-    /// fault runs should set `faults.until` explicitly.
+    /// injection cannot see the last submission of a stream up front, so
+    /// a streamed fault run either sets `faults.until` explicitly or
+    /// gets a *derived* horizon: the builder threads the stream's
+    /// last-seen submit to the injector as a watermark, and injection
+    /// stops once the clock passes `watermark + 4 x mttr` — the same
+    /// law the eager path derives from the full job list.
     pub job_stream: Option<Box<dyn Iterator<Item = Job> + Send>>,
     /// Whether completed jobs keep their per-job lifecycle records in
     /// the report (default). Streaming-scale runs turn this off so peak
@@ -313,6 +320,7 @@ impl Simulation {
             preemption: PreemptionConfig::default(),
             reservations: Vec::new(),
             planning_horizon: Horizon::Exact,
+            auto_horizon_params: AutoHorizonParams::default(),
             job_stream: None,
             retain_completed: true,
             order: None,
@@ -378,6 +386,12 @@ impl Simulation {
         self
     }
 
+    /// Override the `Horizon::Auto` tunables (`planning.auto_*`).
+    pub fn with_auto_horizon_params(mut self, params: AutoHorizonParams) -> Simulation {
+        self.auto_horizon_params = params;
+        self
+    }
+
     /// Feed jobs from a stream instead of `workload.jobs` (see the
     /// [`Simulation::job_stream`] field docs).
     pub fn with_job_stream(mut self, stream: Box<dyn Iterator<Item = Job> + Send>) -> Simulation {
@@ -405,6 +419,7 @@ impl Simulation {
             preemption,
             reservations,
             planning_horizon,
+            auto_horizon_params,
             job_stream,
             retain_completed,
             order,
@@ -428,6 +443,26 @@ impl Simulation {
             None => last_submit + SimDuration::from_f64(4.0 * faults.mttr),
         };
         let wire_injector = faults.enabled() || !reservations.is_empty();
+        // Streamed feed with faults but no explicit `faults.until`: the
+        // last submission is unknowable up front, so the injector gets a
+        // *watermark* — the stream's last-seen submit, advanced as jobs
+        // are pulled — and derives its horizon dynamically (same
+        // `+ 4 x mttr` slack as the eager derivation above). The update
+        // happens inside the single-threaded event loop, so runs stay
+        // byte-deterministic.
+        let mut stream_watermark = None;
+        let job_stream = match job_stream {
+            Some(stream) if faults.enabled() && faults.until.is_none() => {
+                let mark = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+                let sink = std::sync::Arc::clone(&mark);
+                stream_watermark = Some(mark);
+                let watched = stream.inspect(move |j: &Job| {
+                    sink.fetch_max(j.submit.ticks(), std::sync::atomic::Ordering::Relaxed);
+                });
+                Some(Box::new(watched) as Box<dyn Iterator<Item = Job> + Send>)
+            }
+            other => other,
+        };
 
         let mut engine: Engine<Ev> = Engine::new(seed);
         let source = match job_stream {
@@ -450,12 +485,17 @@ impl Simulation {
             s.preemption = preemption;
             s.reservations = reservations.clone();
             s.set_horizon(planning_horizon);
+            s.set_auto_params(auto_horizon_params);
             s.memory_aware = memory_aware;
             s.retain_completed = retain_completed;
             s.set_queue_order(order_kind.build(fairshare_half_life));
         }
         if wire_injector {
-            let inj = engine.add(Box::new(FaultInjector::new(faults, until, reservations)));
+            let mut injector = FaultInjector::new(faults, until, reservations);
+            if let Some(mark) = stream_watermark {
+                injector = injector.with_stream_watermark(mark);
+            }
+            let inj = engine.add(Box::new(injector));
             engine.connect(inj, sched, SimDuration(0));
             engine.get_mut::<FaultInjector>(inj).unwrap().scheduler = sched;
         }

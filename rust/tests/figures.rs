@@ -223,6 +223,47 @@ fn golden_fairshare_summary_locked() {
     golden_check("sdsc_sp2_fairshare_backfill", &a);
 }
 
+/// Fault + reservation SDSC-SP2 scenario pinning the DES core's event
+/// order end to end (ladder-event-queue PR): the failure/repair chain,
+/// a claimed-and-expired reservation window and checkpoint preemption
+/// exercise every event priority class at shared timestamps, so the
+/// summary (which folds in the full per-job fingerprint) is
+/// byte-identical iff the ladder queue pops the exact
+/// `(time, priority, seq)` order the heap-based seed engine popped.
+fn golden_sp2_faults_resv() -> SimReport {
+    use sst_sched::core::time::SimDuration;
+    use sst_sched::sched::{PreemptionConfig, PreemptionMode};
+    use sst_sched::sim::{FaultConfig, ReservationSpec};
+    let w = SdscSp2Model::default().generate(1_000, 23).scale_arrivals(0.6).drop_infeasible();
+    Simulation::new(w, Policy::FcfsBackfill)
+        .with_seed(23)
+        .with_faults(FaultConfig {
+            mtbf: 15_000.0,
+            mttr: 2_000.0,
+            seed: 23,
+            ..FaultConfig::default()
+        })
+        .with_preemption(PreemptionConfig {
+            mode: PreemptionMode::Checkpoint,
+            checkpoint_overhead: SimDuration(60),
+            restart_overhead: SimDuration(30),
+            starvation_threshold: SimDuration(0),
+        })
+        .with_reservations(vec![ReservationSpec { start: 40_000, duration: 20_000, nodes: 16 }])
+        .run(None)
+}
+
+#[test]
+fn golden_sp2_fault_reservation_fingerprint_locked() {
+    let r = golden_sp2_faults_resv();
+    assert!(r.faults.failures > 0, "scenario must actually inject failures");
+    assert!(r.faults.reservations_started >= 1, "reservation must come due");
+    let a = summarize(&r);
+    let b = summarize(&golden_sp2_faults_resv());
+    assert_eq!(a, b, "fault+reservation scenario not even run-to-run reproducible");
+    golden_check("sdsc_sp2_faults_resv_fingerprint", &a);
+}
+
 #[test]
 fn fig7_sipht_waits_match_reference() {
     let v = fig7(4, 8, 1);

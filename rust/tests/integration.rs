@@ -513,6 +513,87 @@ fn auto_horizon_tracks_exact_planning_quality() {
     assert_eq!(b1.fingerprint(), b2.fingerprint(), "deep-queue auto run not reproducible");
 }
 
+/// `planning.auto_*` knobs actually steer the auto-horizon law: default
+/// params are byte-identical to the constants they replaced, and a
+/// deliberately tiny shallow-queue threshold flips a shallow run onto
+/// the clamped path while staying complete and deterministic.
+#[test]
+fn auto_horizon_params_default_identical_and_override_effective() {
+    use sst_sched::sim::{AutoHorizonParams, Horizon};
+    let w = SdscSp2Model::default().generate(1_200, 29).scale_arrivals(0.7).drop_infeasible();
+    let n = w.jobs.len();
+    let run = |params: Option<AutoHorizonParams>| {
+        let mut sim =
+            Simulation::new(w.clone(), Policy::FcfsBackfill).with_horizon(Horizon::Auto);
+        if let Some(p) = params {
+            sim = sim.with_auto_horizon_params(p);
+        }
+        sim.run(None)
+    };
+    // Explicit defaults == implicit defaults, bit for bit.
+    assert_eq!(
+        run(None).fingerprint(),
+        run(Some(AutoHorizonParams::default())).fingerprint(),
+        "explicit default auto params changed a run"
+    );
+    // A tiny shallow threshold + floor forces the clamp on where the
+    // defaults would plan exactly; the run must survive it.
+    let tight = AutoHorizonParams { shallow_queue: 4, estimates: 4, min_horizon: 60 };
+    let a = run(Some(tight));
+    assert_eq!(a.completed.len(), n, "tight auto params lost jobs");
+    assert_eq!(a.fingerprint(), run(Some(tight)).fingerprint(), "tight params not reproducible");
+}
+
+/// Streamed fault runs without `faults.until`: the injector horizon is
+/// derived from the stream's last-seen submission (+ 4 x mttr), so
+/// failures are actually injected, the run completes and repeated runs
+/// are byte-identical — and an eager run of the same trace with the
+/// equivalent explicit `until` sees the same failure pressure.
+#[test]
+fn streamed_fault_run_derives_injector_horizon() {
+    use sst_sched::trace::{JobStream, TraceFormat, Workload};
+    use std::io::Cursor;
+    let w = SdscSp2Model::default().generate(1_000, 17).drop_infeasible();
+    let text = write_swf(&w.jobs, "streamed faults");
+    let faults =
+        FaultConfig { mtbf: 20_000.0, mttr: 2_000.0, seed: 33, ..FaultConfig::default() };
+    assert!(faults.until.is_none(), "this test exercises the derived horizon");
+    let streamed = || {
+        let stream =
+            JobStream::new(Cursor::new(text.clone().into_bytes()), TraceFormat::Swf);
+        let machine = Workload::machine("streamed-faults", w.nodes, w.cores_per_node);
+        Simulation::new(machine, Policy::FcfsBackfill)
+            .with_job_stream(Box::new(stream.map(|j| j.unwrap())))
+            .with_faults(faults)
+            .run(None)
+    };
+    let a = streamed();
+    assert_eq!(a.completed_count as usize, w.jobs.len(), "streamed fault run lost jobs");
+    assert!(
+        a.faults.failures > 0,
+        "derived horizon must let the injector fire (failures = 0)"
+    );
+    assert_eq!(a.faults.failures, a.faults.repairs, "every failure must repair");
+    let b = streamed();
+    assert_eq!(a.fingerprint(), b.fingerprint(), "derived-horizon run not reproducible");
+    // The derived bound tracks the stream: it can only stop the chain
+    // once arrivals are more than 4 x mttr behind the clock, so the
+    // eager run of the same trace with an explicit horizon at the same
+    // law's endpoint injects at least as many failures (arrival
+    // droughts may stop the streamed chain early, never late).
+    let last_submit = w.jobs.iter().map(|j| j.submit.ticks()).max().unwrap();
+    let eager = Simulation::new(w.clone(), Policy::FcfsBackfill)
+        .with_faults(FaultConfig { until: Some(last_submit + 8_000), ..faults })
+        .run(None);
+    assert!(eager.faults.failures > 0);
+    assert!(
+        a.faults.failures <= eager.faults.failures,
+        "streamed ({}) must not inject past the eager law's bound ({})",
+        a.faults.failures,
+        eager.faults.failures
+    );
+}
+
 #[test]
 fn weibull_faults_run_deterministic_and_complete() {
     let w = SdscSp2Model::default().generate(500, 9).drop_infeasible();

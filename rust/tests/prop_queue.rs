@@ -1,0 +1,256 @@
+//! Property suite for the ladder event queue (`core::event::EventQueue`):
+//! its pop sequence must equal a `BinaryHeap` oracle's on arbitrary
+//! `(time, priority)` workloads — the determinism contract that keeps
+//! engine fingerprints byte-identical to the heap-era seed engine.
+//! Covers same-key FIFO, the `pop_before` / `pop_at_or_before` window
+//! semantics the parallel rank loops rely on, and interleaved push/pop
+//! (including pushes into the already-consumed near past, the engine's
+//! same-tick self-send pattern).
+
+use sst_sched::core::event::{EventQueue, Priority};
+use sst_sched::core::rng::Rng;
+use sst_sched::core::time::SimTime;
+use sst_sched::util::prop::check_n;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// The seed engine's structure: a min-heap over the identical
+/// `(time, priority, seq)` key, with payload riding along.
+struct HeapOracle {
+    heap: BinaryHeap<Reverse<(u64, u8, u64, u64)>>,
+    seq: u64,
+}
+
+impl HeapOracle {
+    fn new() -> HeapOracle {
+        HeapOracle { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    fn push(&mut self, time: u64, priority: u8, payload: u64) {
+        self.heap.push(Reverse((time, priority, self.seq, payload)));
+        self.seq += 1;
+    }
+
+    /// Pop the minimum if `pred(time)` holds (mirrors the queue's
+    /// bounded pops; `|_| true` is a plain pop).
+    fn pop_if(&mut self, pred: impl Fn(u64) -> bool) -> Option<(u64, u8, u64)> {
+        match self.heap.peek() {
+            Some(&Reverse((t, _, _, _))) if pred(t) => {
+                let Reverse((t, p, _, payload)) = self.heap.pop().unwrap();
+                Some((t, p, payload))
+            }
+            _ => None,
+        }
+    }
+
+    fn peek_time(&self) -> Option<u64> {
+        self.heap.peek().map(|&Reverse((t, _, _, _))| t)
+    }
+}
+
+/// Draw a timestamp mixing magnitudes so runs exercise the bottom rung,
+/// nested rungs and the top tail (plus dense same-time clusters).
+fn draw_time(rng: &mut Rng) -> u64 {
+    match rng.below(8) {
+        0 | 1 => rng.below(16),                      // dense near cluster
+        2 | 3 => rng.below(2_000),                   // near
+        4 => 50_000 + rng.below(50),                 // dense far cluster
+        5 => rng.below(1_000_000),                   // mid
+        6 => rng.below(1_000_000_000),               // far
+        _ => 10_000_000_000 + rng.below(1_000_000),  // very far band
+    }
+}
+
+fn draw_priority(rng: &mut Rng) -> u8 {
+    rng.below(4) as u8
+}
+
+/// Bulk pushes then a full drain: the pop sequence equals the oracle's
+/// exactly — times, priorities and payload identity.
+#[test]
+fn drain_matches_heap_oracle() {
+    check_n("ladder vs heap: bulk drain", 200, |rng| {
+        let n = rng.range(1, 800);
+        let mut q = EventQueue::new();
+        let mut oracle = HeapOracle::new();
+        for i in 0..n {
+            let (t, p) = (draw_time(rng), draw_priority(rng));
+            q.push(SimTime(t), Priority(p), 0, i);
+            oracle.push(t, p, i);
+        }
+        if q.len() != n as usize {
+            return Err(format!("len {} after {n} pushes", q.len()));
+        }
+        for step in 0..n {
+            let want = oracle.pop_if(|_| true).unwrap();
+            let got = q.pop().ok_or_else(|| format!("queue dry at step {step}"))?;
+            let got = (got.time.ticks(), got.priority.0, got.payload);
+            if got != want {
+                return Err(format!("pop {step}: ladder {got:?} != heap {want:?}"));
+            }
+        }
+        if q.pop().is_some() {
+            return Err("queue still had events after the oracle drained".into());
+        }
+        Ok(())
+    });
+}
+
+/// Interleaved pushes and pops — including pushes at or before the
+/// current minimum (the engine's same-tick self-sends land in the
+/// already-sorted bottom rung) — stay in lock-step with the oracle.
+#[test]
+fn interleaved_ops_match_heap_oracle() {
+    check_n("ladder vs heap: interleaved", 150, |rng| {
+        let mut q = EventQueue::new();
+        let mut oracle = HeapOracle::new();
+        let mut payload = 0u64;
+        let mut last_popped = 0u64;
+        for step in 0..rng.range(50, 1_200) {
+            if rng.chance(0.55) || q.is_empty() {
+                // Mostly future pushes; some land exactly at (or just
+                // after) the last popped time — the same-tick pattern.
+                let t = if rng.chance(0.3) {
+                    last_popped + rng.below(3)
+                } else {
+                    last_popped + draw_time(rng)
+                };
+                let p = draw_priority(rng);
+                q.push(SimTime(t), Priority(p), 0, payload);
+                oracle.push(t, p, payload);
+                payload += 1;
+            } else {
+                let want = oracle.pop_if(|_| true);
+                let got = q.pop().map(|e| (e.time.ticks(), e.priority.0, e.payload));
+                if got != want {
+                    return Err(format!("step {step}: ladder {got:?} != heap {want:?}"));
+                }
+                if let Some((t, _, _)) = got {
+                    last_popped = t;
+                }
+            }
+            if q.len() != oracle.heap.len() {
+                return Err(format!(
+                    "len diverged: ladder {} heap {}",
+                    q.len(),
+                    oracle.heap.len()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `pop_before` / `pop_at_or_before` window semantics: exactly the
+/// oracle's bounded pops, with the boundary event excluded resp.
+/// included, and `peek_time` agreeing after every window.
+#[test]
+fn window_pops_match_heap_oracle() {
+    check_n("ladder vs heap: windows", 150, |rng| {
+        let mut q = EventQueue::new();
+        let mut oracle = HeapOracle::new();
+        let n = rng.range(20, 600);
+        for i in 0..n {
+            let (t, p) = (draw_time(rng), draw_priority(rng));
+            q.push(SimTime(t), Priority(p), 0, i);
+            oracle.push(t, p, i);
+        }
+        let mut bound = 0u64;
+        while !q.is_empty() {
+            bound += rng.below(100_000_000);
+            let inclusive = rng.chance(0.5);
+            loop {
+                let want = if inclusive {
+                    oracle.pop_if(|t| t <= bound)
+                } else {
+                    oracle.pop_if(|t| t < bound)
+                };
+                let got = if inclusive {
+                    q.pop_at_or_before(SimTime(bound))
+                } else {
+                    q.pop_before(SimTime(bound))
+                };
+                let got = got.map(|e| (e.time.ticks(), e.priority.0, e.payload));
+                if got != want {
+                    return Err(format!(
+                        "window(bound={bound}, inclusive={inclusive}): \
+                         ladder {got:?} != heap {want:?}"
+                    ));
+                }
+                if got.is_none() {
+                    break;
+                }
+            }
+            if q.peek_time().map(|t| t.ticks()) != oracle.peek_time() {
+                return Err(format!(
+                    "peek diverged after window at {bound}: ladder {:?} heap {:?}",
+                    q.peek_time(),
+                    oracle.peek_time()
+                ));
+            }
+        }
+        if oracle.heap.pop().is_some() {
+            return Err("oracle still had events after the ladder drained".into());
+        }
+        Ok(())
+    });
+}
+
+/// Same-key FIFO at scale: a storm of events sharing one
+/// `(time, priority)` — far larger than any internal batch threshold —
+/// pops in exact push order, interleaved correctly with neighbors at
+/// adjacent priorities and times.
+#[test]
+fn same_key_fifo_at_scale() {
+    let mut q = EventQueue::new();
+    let mut oracle = HeapOracle::new();
+    let mut payload = 0u64;
+    // Neighbor events bracketing the storm in time and priority.
+    for (t, p) in [(999u64, 1u8), (1_000, 0), (1_000, 2), (1_001, 1), (5_000_000, 1)] {
+        q.push(SimTime(t), Priority(p), 0, payload);
+        oracle.push(t, p, payload);
+        payload += 1;
+    }
+    for _ in 0..5_000 {
+        q.push(SimTime(1_000), Priority(1), 0, payload);
+        oracle.push(1_000, 1, payload);
+        payload += 1;
+    }
+    let mut last_storm_payload = None;
+    while let Some(want) = oracle.pop_if(|_| true) {
+        let got = q.pop().map(|e| (e.time.ticks(), e.priority.0, e.payload)).unwrap();
+        assert_eq!(got, want, "pop diverged from oracle");
+        if got.0 == 1_000 && got.1 == 1 {
+            // FIFO within the storm: payloads strictly ascend.
+            if let Some(prev) = last_storm_payload {
+                assert!(got.2 > prev, "same-key FIFO violated: {prev} then {}", got.2);
+            }
+            last_storm_payload = Some(got.2);
+        }
+    }
+    assert!(q.is_empty());
+}
+
+/// One large deterministic end-to-end drain (hundreds of thousands of
+/// events through nested rung refinement) as a smoke-scale pin on top
+/// of the randomized cases.
+#[test]
+fn large_mixed_horizon_drain_is_totally_ordered() {
+    let mut q = EventQueue::new();
+    let mut rng = Rng::new(0xDE5_1ADDE);
+    let n = 200_000u64;
+    for i in 0..n {
+        q.push(SimTime(draw_time(&mut rng)), Priority(draw_priority(&mut rng)), 0, i);
+    }
+    let mut popped = 0u64;
+    let mut last: Option<(u64, u8, u64)> = None;
+    while let Some(e) = q.pop() {
+        let k = (e.time.ticks(), e.priority.0, e.seq);
+        if let Some(prev) = last {
+            assert!(prev < k, "total order violated: {prev:?} then {k:?}");
+        }
+        last = Some(k);
+        popped += 1;
+    }
+    assert_eq!(popped, n);
+}
