@@ -6,7 +6,8 @@
 use crate::core::time::SimDuration;
 use crate::sched::{OrderKind, Policy, PreemptionConfig};
 use crate::sim::{
-    AutoHorizonParams, FaultConfig, Horizon, ReservationSpec, DEFAULT_FAIRSHARE_HALF_LIFE,
+    AutoHorizonParams, FaultConfig, Horizon, ReservationSpec, Routing,
+    DEFAULT_FAIRSHARE_HALF_LIFE,
 };
 use crate::trace::{Das2Model, SdscSp2Model, Workload};
 use crate::util::json::Json;
@@ -54,6 +55,16 @@ pub struct ExperimentConfig {
     /// Parallel-run parameters.
     pub ranks: usize,
     pub lookahead: u64,
+    /// Sharded federation engine (`federation.shards` / `--shards`):
+    /// worker shards for the multi-domain run; 0 = off (single-cluster
+    /// simulation).
+    pub shards: usize,
+    /// Meta-scheduler routing policy (`federation.routing`).
+    pub routing: Routing,
+    /// Router -> domain delivery latency in ticks
+    /// (`federation.route_latency`); doubles as the conservative
+    /// lookahead, so it must be >= 1.
+    pub route_latency: u64,
     /// Node failure model (`faults.*`); disabled by default.
     pub faults: FaultConfig,
     /// Preemption layer (`preemption.*`); mode `none` by default.
@@ -95,6 +106,9 @@ impl Default for ExperimentConfig {
             accel: "native".to_string(),
             ranks: 1,
             lookahead: 3600,
+            shards: 0,
+            routing: Routing::LeastLoaded,
+            route_latency: 60,
             faults: FaultConfig::default(),
             preemption: PreemptionConfig::default(),
             priority_bands: 0,
@@ -161,6 +175,17 @@ impl ExperimentConfig {
         if let Some(p) = v.get("parallel") {
             cfg.ranks = p.get_u64_or("ranks", 1) as usize;
             cfg.lookahead = p.get_u64_or("lookahead", 3600);
+        }
+        if let Some(fed) = v.get("federation") {
+            cfg.shards = fed.get_u64_or("shards", cfg.shards as u64) as usize;
+            cfg.routing = fed
+                .get_str_or("routing", cfg.routing.as_str())
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!(e))?;
+            cfg.route_latency = fed.get_u64_or("route_latency", cfg.route_latency);
+            if cfg.route_latency == 0 {
+                bail!("federation.route_latency must be >= 1 (it is the conservative lookahead)");
+            }
         }
         if let Some(fj) = v.get("faults") {
             cfg.faults.mtbf = fj.get_f64_or("mtbf", 0.0);
@@ -288,6 +313,16 @@ impl ExperimentConfig {
                 ]),
             ),
         ];
+        if self.shards > 0 {
+            top.push((
+                "federation",
+                Json::obj(vec![
+                    ("shards", Json::num(self.shards as f64)),
+                    ("routing", Json::str(self.routing.as_str())),
+                    ("route_latency", Json::num(self.route_latency as f64)),
+                ]),
+            ));
+        }
         if self.faults.enabled() {
             let mut fj = vec![
                 ("mtbf", Json::num(self.faults.mtbf)),
@@ -627,6 +662,36 @@ mod tests {
         // Validation: zero estimates would clamp planning to the floor.
         assert!(ExperimentConfig::parse(
             r#"{"planning": {"auto_horizon_estimates": 0}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn federation_section_roundtrips_and_validates() {
+        let c = ExperimentConfig::parse(
+            r#"{"federation": {"shards": 4, "routing": "rr", "route_latency": 120}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.routing, Routing::RoundRobin);
+        assert_eq!(c.route_latency, 120);
+        let back = ExperimentConfig::parse(&c.to_json().to_pretty()).unwrap();
+        assert_eq!(back.shards, c.shards);
+        assert_eq!(back.routing, c.routing);
+        assert_eq!(back.route_latency, c.route_latency);
+        // Defaults: engine off, least-loaded routing, no emitted section.
+        let d = ExperimentConfig::parse("{}").unwrap();
+        assert_eq!(d.shards, 0);
+        assert_eq!(d.routing, Routing::LeastLoaded);
+        assert_eq!(d.route_latency, 60);
+        assert!(d.to_json().get("federation").is_none());
+        // Validation: zero latency breaks the conservative contract.
+        assert!(ExperimentConfig::parse(
+            r#"{"federation": {"shards": 2, "route_latency": 0}}"#
+        )
+        .is_err());
+        assert!(ExperimentConfig::parse(
+            r#"{"federation": {"routing": "tarot"}}"#
         )
         .is_err());
     }

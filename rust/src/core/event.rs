@@ -40,6 +40,18 @@
 //! a heap oracle to pin exactly that, and the engine fingerprints stay
 //! byte-identical.
 //!
+//! The contract extends to *externally injected* events — arrivals a
+//! parallel rank pushes into an engine mid-run (`SimInstance::submit`,
+//! used by the sharded federation engine for routed and forwarded
+//! jobs). An injection at time `t` gets the queue's next `seq`, so ties
+//! at the same `(time, priority)` resolve by injection order. The
+//! sharded engine keeps that order shard-count independent by
+//! construction: router deliveries are the only `ARRIVE`-priority
+//! events a federation domain ever sees, the router emits them in one
+//! deterministic sequence, and cross-rank mailboxes are sorted before
+//! draining — so a domain receives the same injections in the same
+//! order whether its router runs on the same thread or another one.
+//!
 //! ## Degeneration
 //!
 //! Two shapes collapse the ladder into plain sorted-`Vec` behavior, by

@@ -322,6 +322,39 @@ fn streamed_swf_case(b: &mut Bench, n: usize) {
     let _ = std::fs::remove_file(&path);
 }
 
+/// Sharded federation engine (Fig 5 on real cores): one DAS-2
+/// federation, the same trace, at 1/2/4 shards — the speedup of the
+/// 4-shard case over the 1-shard case is the paper's multi-core scaling
+/// claim, measured on worker threads rather than modeled. The full
+/// suite's job count puts the 1-shard case above 100k events.
+fn sharded_federation_cases(b: &mut Bench, n: usize) {
+    use crate::parallel::{run_sharded, RankSimOpts, ShardOpts};
+    use crate::sim::{MetaScheduler, Routing};
+    let jobs = Das2Model::default().generate(n, 1).scale_arrivals(0.5).jobs;
+    let expected = jobs.len() as u64;
+    for shards in [1usize, 2, 4] {
+        let label = format!("shard/das2-{}k-jobs/shards-{shards}", n / 1_000);
+        let jobs = jobs.clone();
+        b.case(&label, move || {
+            let opts = ShardOpts {
+                clusters: MetaScheduler::das2_federation(
+                    Routing::LeastLoaded,
+                    Policy::FcfsBackfill,
+                )
+                .clusters,
+                routing: Routing::LeastLoaded,
+                policy: Policy::FcfsBackfill,
+                shards,
+                route_latency: 60,
+                sim: RankSimOpts::default(),
+            };
+            let rep = run_sharded(&opts, jobs.clone(), true);
+            assert_eq!(rep.total_completed() + rep.rejected, expected, "sharded case lost jobs");
+            rep.total_events()
+        });
+    }
+}
+
 /// Build and run the whole suite; the caller reads/serializes
 /// [`Bench::results`].
 pub fn engine_throughput_suite(smoke: bool) -> Bench {
@@ -373,6 +406,9 @@ pub fn engine_throughput_suite(smoke: bool) -> Bench {
 
     section("streamed trace ingestion (constant-memory scale path)");
     streamed_swf_case(&mut b, if smoke { 20_000 } else { 1_000_000 });
+
+    section("sharded federation engine (multi-domain PDES)");
+    sharded_federation_cases(&mut b, if smoke { 8_000 } else { 25_000 });
 
     section("baseline (CQsim-like) for comparison");
     let w = das2.clone();

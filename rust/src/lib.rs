@@ -115,8 +115,13 @@
 //!   synthetic workload models.
 //! * [`baseline`] — an independent CQsim-like flat event-loop simulator
 //!   used as the validation comparator (paper Figs 3, 4a).
-//! * [`parallel`] — conservative parallel engine: rank partitioning with
-//!   lookahead windows (threads stand in for MPI ranks; Figs 5, 6).
+//! * [`parallel`] — conservative parallel engine: YAWNS-style lookahead
+//!   windows over threads standing in for MPI ranks (Figs 5, 6). The
+//!   sharded federation engine (`parallel::shard`) runs each cluster of
+//!   a multi-domain federation as a full simulator instance on a rank,
+//!   with meta-scheduler routing delivered as conservative cross-rank
+//!   messages; decision fingerprints are byte-identical across shard
+//!   counts, so `--shards N` is a speedup knob, never a semantics knob.
 //! * [`runtime`] — PJRT bridge executing the AOT-compiled JAX/Pallas
 //!   queue-scoring artifact from the scheduler hot path (`--accel xla`).
 //! * [`sim`] — the component wiring: job source, scheduler, resource

@@ -36,6 +36,8 @@ USAGE:
                 [--half-life TICKS]  # fair-share usage-decay half-life
                 [--mem MB] [--memory-aware]  # per-node memory + memory planning
                 [--accel native|xla] [--ranks R] [--lookahead SECONDS]
+                [--shards N]  # sharded multi-domain federation engine
+                [--routing rr|ll|bf] [--route-latency S]  # federation knobs
                 [--seed S] [--arrival-scale F] [--config experiment.json]
                 [--mtbf S] [--mttr S] [--faults-seed S] [--faults-until T]
                 [--faults-dist exp|weibull] [--faults-shape K]
@@ -128,6 +130,15 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     cfg.accel = args.str_or("accel", &cfg.accel);
     cfg.ranks = args.usize_or("ranks", cfg.ranks)?;
     cfg.lookahead = args.u64_or("lookahead", cfg.lookahead)?;
+    // Sharded federation engine (`--shards 0` = off).
+    cfg.shards = args.usize_or("shards", cfg.shards)?;
+    if let Some(r) = args.get("routing") {
+        cfg.routing = r.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    }
+    cfg.route_latency = args.u64_or("route-latency", cfg.route_latency)?;
+    if cfg.route_latency == 0 {
+        bail!("--route-latency must be >= 1 (it is the conservative lookahead)");
+    }
     if let Some(n) = args.get("nodes") {
         cfg.nodes = Some(n.parse().context("--nodes expects an integer")?);
     }
@@ -230,14 +241,15 @@ fn cmd_run_streamed(cfg: &ExperimentConfig) -> Result<()> {
     if cfg.faults.enabled() && cfg.faults.until.is_none() {
         // The eager path derives the injector horizon from the full job
         // list; a stream cannot, so the builder watches the stream's
-        // last-seen submission and the injector stops 4 x mttr past it
-        // (this command used to refuse outright). One caveat worth a
-        // warning: a mid-trace arrival drought longer than 4 x mttr
-        // looks like end-of-trace and ends injection early.
+        // last-seen submission AND the scheduler's last-activity time:
+        // the injector stops 4 x mttr past whichever is later. Arrival
+        // droughts with queued or running work therefore keep the fault
+        // chain alive; only a fully idle machine with an exhausted-
+        // looking stream winds it down.
         eprintln!(
-            "warning: streamed fault run without --faults-until — deriving the injector \
-             horizon from the stream's last-seen submission (+ 4 x mttr slack); pass \
-             --faults-until explicitly if the trace has arrival gaps longer than that"
+            "note: streamed fault run without --faults-until — deriving the injector \
+             horizon from max(stream's last-seen submission, last engine activity) \
+             + 4 x mttr slack"
         );
     }
     let nodes = cfg.nodes.unwrap_or(def_nodes);
@@ -323,6 +335,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         workload.cores_per_node,
         workload.offered_load()
     );
+    if cfg.shards > 0 {
+        if cfg.ranks > 1 {
+            bail!("--shards and --ranks are different engines; pick one");
+        }
+        return run_sharded_cli(&cfg, &workload);
+    }
     if cfg.ranks > 1 {
         let opts = sst_sched::parallel::RankSimOpts {
             seed: cfg.seed,
@@ -366,6 +384,62 @@ fn cmd_run(args: &Args) -> Result<()> {
     harness::print_run_report(&rep);
     println!("wall time         {:.1} ms", wall.as_secs_f64() * 1e3);
     println!("event rate        {:.0} ev/s", rep.events as f64 / wall.as_secs_f64().max(1e-9));
+    Ok(())
+}
+
+/// Sharded multi-domain federation run (`--shards N`): the workload's
+/// jobs are routed across the DAS-2 federation, each cluster an
+/// autonomous scheduler domain on the conservative sharded engine. The
+/// decision fingerprint is byte-identical for every shard count; this
+/// command asserts it against a serial (1-shard, single-threaded)
+/// reference run.
+fn run_sharded_cli(cfg: &ExperimentConfig, workload: &sst_sched::trace::Workload) -> Result<()> {
+    use sst_sched::parallel::{run_sharded, RankSimOpts, ShardOpts};
+    use sst_sched::sim::MetaScheduler;
+    let clusters = MetaScheduler::das2_federation(cfg.routing, cfg.policy).clusters;
+    let opts = ShardOpts {
+        clusters,
+        routing: cfg.routing,
+        policy: cfg.policy,
+        shards: cfg.shards,
+        route_latency: cfg.route_latency,
+        sim: RankSimOpts {
+            seed: cfg.seed,
+            faults: cfg.faults,
+            preemption: cfg.preemption,
+            reservations: cfg.reservations.clone(),
+            planning_horizon: cfg.planning_horizon,
+            auto_horizon: cfg.auto_horizon,
+            order: cfg.order,
+            fairshare_half_life: cfg.fairshare_half_life,
+            mem_per_node: cfg.mem_per_node,
+            memory_aware: cfg.memory_aware,
+        },
+    };
+    let rep = run_sharded(&opts, workload.jobs.clone(), true);
+    let serial = run_sharded(&ShardOpts { shards: 1, ..opts.clone() }, workload.jobs.clone(), false);
+    println!("shards            {}", rep.shards);
+    println!("domains           {}", rep.domains.len());
+    println!("routing           {}", rep.routing.as_str());
+    println!("route latency     {} s (= lookahead)", rep.route_latency);
+    println!("windows           {}", rep.windows);
+    println!("wall time         {:.1} ms", rep.wall.as_secs_f64() * 1e3);
+    println!("events            {}", rep.total_events());
+    println!("event rate        {:.0} ev/s", rep.event_rate());
+    println!("jobs routed       {}", rep.routed);
+    println!("jobs rejected     {}", rep.rejected);
+    println!("jobs completed    {}", rep.total_completed());
+    println!("mean wait         {:.1} s", rep.mean_wait());
+    println!("decision fp       {:016x}", rep.fingerprint());
+    let matches = rep.fingerprint() == serial.fingerprint();
+    println!(
+        "serial fp         {:016x} ({})",
+        serial.fingerprint(),
+        if matches { "match" } else { "MISMATCH" }
+    );
+    if !matches {
+        bail!("sharded decisions diverged from the serial engine");
+    }
     Ok(())
 }
 

@@ -54,8 +54,9 @@ pub struct RankSimOpts {
 
 impl RankSimOpts {
     /// The slice of this cluster-wide config that rank `i` of `ranks`
-    /// simulates (see the type docs).
-    fn for_rank(&self, i: usize, ranks: usize) -> RankSimOpts {
+    /// simulates (see the type docs). Also used by the sharded
+    /// federation engine to derive per-domain options.
+    pub(crate) fn for_rank(&self, i: usize, ranks: usize) -> RankSimOpts {
         let r = ranks.max(1);
         let mut o = self.clone();
         o.faults.mtbf *= r as f64;

@@ -11,18 +11,30 @@
 //! 4. cross-rank messages (timestamped `send_time + lookahead`, hence
 //!    provably >= the bound) are exchanged; repeat.
 //!
-//! Each rank's logic is pluggable ([`RankLogic`]): [`job_rank`] runs a
-//! full job-scheduling simulation per rank (multi-cluster workloads, Fig
-//! 5), [`workflow_rank`] distributes one workflow's tasks across ranks
-//! with real cross-rank dependency traffic (Fig 6).
+//! Each rank's logic is pluggable ([`RankLogic`]), and three rank kinds
+//! exist:
+//!
+//! * [`shard`] — the sharded federation engine: every cluster of a
+//!   multi-cluster federation is an autonomous scheduler *domain* (a
+//!   full simulation with its own ladder event queue), domains are
+//!   packed onto shards, and the meta-scheduler router on rank 0 turns
+//!   each routing decision into a conservative cross-rank message
+//!   delivered `route_latency` ticks after submission (the lookahead).
+//!   Decision fingerprints are byte-identical across shard counts.
+//! * [`job_rank`] — partitioned replay (Fig 5): the workload is split
+//!   into independent sub-cluster streams with no cross-rank traffic.
+//! * [`workflow_rank`] — one workflow's tasks distributed across ranks
+//!   with real cross-rank dependency traffic (Fig 6).
 
 pub mod job_rank;
+pub mod shard;
 pub mod workflow_rank;
 
 pub use job_rank::{
     partition_workload, run_jobs_parallel, run_jobs_parallel_modeled, run_jobs_parallel_opts,
     RankSimOpts,
 };
+pub use shard::{run_sharded, DomainOutcome, RouteMsg, ShardOpts, ShardedReport};
 pub use workflow_rank::{run_workflow_parallel, run_workflow_parallel_modeled};
 
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,0 +1,534 @@
+//! Sharded multi-domain federation engine: each cluster of a
+//! [`MetaScheduler`]-style federation becomes an autonomous scheduler
+//! *domain* — a full `SimInstance` with its own ladder event queue —
+//! and domains are packed onto worker *shards* (ranks) driven by the
+//! conservative YAWNS window runner in [`crate::parallel`].
+//!
+//! The meta-scheduler router runs as part of rank 0. Instead of the old
+//! serial route-then-bucket pass, every routing decision happens at the
+//! job's submit time inside a window and becomes a timestamped message:
+//! the job is delivered to its domain at `submit + route_latency`. With
+//! `lookahead == route_latency` the conservative contract holds by
+//! construction — a job routed at `t >= bound - lookahead` is delivered
+//! at `t + route_latency >= bound`, i.e. never inside the current
+//! window.
+//!
+//! Determinism across shard counts is the load-bearing contract (the
+//! paper's "parallel == serial, byte for byte"): router deliveries are
+//! the only `Priority::ARRIVE` events a domain ever sees, so ties at
+//! one timestamp resolve by queue insertion order, which equals routing
+//! order whether the job was injected locally (same rank) or delivered
+//! through a sorted mailbox (cross-rank). The per-domain report
+//! fingerprints — and hence [`ShardedReport::fingerprint`] — are
+//! byte-identical for any `shards` in 1..=domains, asserted by the
+//! shard-count matrix regression tests.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::core::time::{SimDuration, SimTime};
+use crate::job::Job;
+use crate::metrics::wait_stats;
+use crate::parallel::job_rank::RankSimOpts;
+use crate::parallel::{
+    fnv1a, run_parallel, run_parallel_modeled, RankLogic, RankSummary, BARRIER_COST,
+};
+use crate::sched::Policy;
+use crate::sim::multicluster::{ClusterSpec, MultiClusterReport, RouterState, Routing};
+use crate::sim::{SimInstance, SimReport, Simulation};
+use crate::trace::Workload;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+fn fnv_step(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Configuration of a sharded federation run.
+#[derive(Clone)]
+pub struct ShardOpts {
+    /// Federation members; each becomes one scheduler domain.
+    pub clusters: Vec<ClusterSpec>,
+    pub routing: Routing,
+    pub policy: Policy,
+    /// Worker shards (threads). Domains map to shards round-robin
+    /// (`domain % shards`); `1` is the serial engine, values above the
+    /// domain count are clamped.
+    pub shards: usize,
+    /// Meta-scheduler -> domain delivery latency in ticks; doubles as
+    /// the conservative lookahead (must be >= 1).
+    pub route_latency: u64,
+    /// Per-domain simulation options (faults, preemption, reservations,
+    /// planning horizon, ordering); rescaled per domain exactly like
+    /// the partitioned-replay ranks.
+    pub sim: RankSimOpts,
+}
+
+/// A routed job in flight to its domain. Ordered by routing sequence
+/// number so sorted mailbox delivery reproduces routing order exactly
+/// (deliver times tie whenever two jobs are routed in one window).
+pub struct RouteMsg {
+    seq: u64,
+    domain: usize,
+    job: Box<Job>,
+}
+
+impl PartialEq for RouteMsg {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for RouteMsg {}
+impl PartialOrd for RouteMsg {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for RouteMsg {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.seq.cmp(&other.seq)
+    }
+}
+
+/// Rank-0 router component: feeds pending arrivals through a
+/// [`RouterState`] as simulated time reaches them.
+struct Router {
+    /// Reverse-sorted by submit (stable), so `pop()` yields the
+    /// earliest arrival and preserves original order within ties.
+    pending: Vec<Job>,
+    state: RouterState,
+    seq: u64,
+    routed: u64,
+    rejected: u64,
+    /// Incremental FNV-1a over (job id, chosen domain) pairs — the
+    /// routing-decision digest.
+    fp: u64,
+}
+
+/// What the router reports at the end of a run.
+#[derive(Debug, Clone, Copy, Default)]
+struct RouterOutcome {
+    routed: u64,
+    rejected: u64,
+    fingerprint: u64,
+}
+
+/// One domain's complete result.
+#[derive(Debug, Clone)]
+pub struct DomainOutcome {
+    pub domain: usize,
+    pub name: String,
+    pub report: SimReport,
+    /// FNV-1a of [`SimReport::fingerprint`] — the domain's schedule
+    /// digest.
+    pub fingerprint: u64,
+}
+
+struct DomainSim {
+    id: usize,
+    name: String,
+    inst: SimInstance,
+}
+
+/// Blueprint for one shard, built on the coordinating thread; the
+/// simulations themselves are constructed inside the worker thread.
+struct RankPlan {
+    domains: Vec<(usize, ClusterSpec, RankSimOpts)>,
+    router: Option<RouterPlan>,
+}
+
+struct RouterPlan {
+    jobs: Vec<Job>,
+    clusters: Vec<ClusterSpec>,
+    routing: Routing,
+}
+
+struct ShardRank {
+    me: usize,
+    shards: usize,
+    route_latency: u64,
+    router: Option<Router>,
+    domains: Vec<DomainSim>,
+    collector: Arc<Mutex<Vec<Option<DomainOutcome>>>>,
+    router_out: Arc<Mutex<RouterOutcome>>,
+}
+
+impl ShardRank {
+    fn from_plan(
+        plan: RankPlan,
+        policy: Policy,
+        me: usize,
+        shards: usize,
+        route_latency: u64,
+        collector: Arc<Mutex<Vec<Option<DomainOutcome>>>>,
+        router_out: Arc<Mutex<RouterOutcome>>,
+    ) -> ShardRank {
+        let domains = plan
+            .domains
+            .into_iter()
+            .map(|(id, spec, o)| {
+                let w = Workload::machine(&spec.name, spec.nodes, spec.cores_per_node);
+                let mut sim = Simulation::new(w, policy)
+                    .with_seed(o.seed)
+                    .with_faults(o.faults)
+                    .with_preemption(o.preemption)
+                    .with_reservations(o.reservations)
+                    .with_horizon(o.planning_horizon)
+                    .with_auto_horizon_params(o.auto_horizon)
+                    .with_fairshare_half_life(o.fairshare_half_life)
+                    .with_mem_per_node(o.mem_per_node)
+                    .with_memory_aware(o.memory_aware);
+                if let Some(order) = o.order {
+                    sim = sim.with_order(order);
+                }
+                DomainSim { id, name: spec.name, inst: sim.build() }
+            })
+            .collect();
+        let router = plan.router.map(|r| {
+            let state = RouterState::new(&r.clusters, r.routing);
+            Router {
+                pending: r.jobs,
+                state,
+                seq: 0,
+                routed: 0,
+                rejected: 0,
+                fp: FNV_OFFSET,
+            }
+        });
+        ShardRank { me, shards, route_latency, router, domains, collector, router_out }
+    }
+}
+
+impl RankLogic for ShardRank {
+    type Msg = RouteMsg;
+
+    fn next_time(&mut self) -> Option<u64> {
+        let mut min: Option<u64> = None;
+        if let Some(r) = &self.router {
+            if let Some(j) = r.pending.last() {
+                min = Some(j.submit.ticks());
+            }
+        }
+        for d in &mut self.domains {
+            if let Some(t) = d.inst.next_time() {
+                let t = t.ticks();
+                min = Some(min.map_or(t, |m| m.min(t)));
+            }
+        }
+        min
+    }
+
+    fn run_window(&mut self, bound: u64, outbox: &mut Vec<(usize, u64, RouteMsg)>) {
+        let ShardRank { me, shards, route_latency, router, domains, .. } = self;
+        if let Some(r) = router {
+            // Route every arrival inside this window. Delivery at
+            // `t + route_latency >= bound` keeps the send conservative
+            // whether it stays local or crosses shards.
+            while r.pending.last().map_or(false, |j| j.submit.ticks() < bound) {
+                let job = r.pending.pop().unwrap();
+                let t = job.submit.ticks();
+                match r.state.route_one(&job) {
+                    None => r.rejected += 1,
+                    Some(dom) => {
+                        r.routed += 1;
+                        r.fp = fnv_step(r.fp, &job.id.to_le_bytes());
+                        r.fp = fnv_step(r.fp, &(dom as u64).to_le_bytes());
+                        let deliver = t + *route_latency;
+                        let dest = dom % *shards;
+                        if dest == *me {
+                            let d = domains
+                                .iter_mut()
+                                .find(|d| d.id == dom)
+                                .expect("routed domain lives on its mapped shard");
+                            d.inst.submit(SimTime(deliver), job);
+                        } else {
+                            outbox.push((
+                                dest,
+                                deliver,
+                                RouteMsg { seq: r.seq, domain: dom, job: Box::new(job) },
+                            ));
+                        }
+                        r.seq += 1;
+                    }
+                }
+            }
+        }
+        for d in domains {
+            d.inst.run_window(SimTime(bound));
+        }
+    }
+
+    fn receive(&mut self, time: u64, msg: RouteMsg) {
+        let d = self
+            .domains
+            .iter_mut()
+            .find(|d| d.id == msg.domain)
+            .expect("message routed to the shard owning its domain");
+        d.inst.submit(SimTime(time), *msg.job);
+    }
+
+    fn finish(&mut self) -> RankSummary {
+        let mut events = 0u64;
+        let mut end = 0u64;
+        let mut completed = 0u64;
+        let mut wait_sum = 0.0f64;
+        let mut buf = Vec::new();
+        for d in self.domains.drain(..) {
+            let report = d.inst.finalize();
+            let fp = fnv1a(report.fingerprint().as_bytes());
+            events += report.events;
+            end = end.max(report.end_time.ticks());
+            completed += report.completed_count;
+            wait_sum += report.wait_ticks_total;
+            buf.extend_from_slice(&(d.id as u64).to_le_bytes());
+            buf.extend_from_slice(&fp.to_le_bytes());
+            self.collector.lock().unwrap()[d.id] =
+                Some(DomainOutcome { domain: d.id, name: d.name, report, fingerprint: fp });
+        }
+        if let Some(r) = self.router.take() {
+            *self.router_out.lock().unwrap() =
+                RouterOutcome { routed: r.routed, rejected: r.rejected, fingerprint: r.fp };
+        }
+        RankSummary { events, end_time: end, completed, wait_sum, fingerprint: fnv1a(&buf) }
+    }
+}
+
+/// Aggregate result of a sharded federation run.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    pub shards: usize,
+    pub routing: Routing,
+    pub route_latency: u64,
+    pub windows: u64,
+    pub wall: Duration,
+    /// Set by the modeled (non-threaded) runner: single-core time spent
+    /// executing all shards serially.
+    pub serial_wall: Option<Duration>,
+    /// Jobs the router sent to a domain.
+    pub routed: u64,
+    /// Jobs fitting no cluster.
+    pub rejected: u64,
+    /// FNV-1a over (job id, domain) routing decisions in order.
+    pub router_fingerprint: u64,
+    /// Per-domain results, in domain order.
+    pub domains: Vec<DomainOutcome>,
+    pub summaries: Vec<RankSummary>,
+}
+
+impl ShardedReport {
+    pub fn total_events(&self) -> u64 {
+        self.domains.iter().map(|d| d.report.events).sum()
+    }
+
+    pub fn total_completed(&self) -> u64 {
+        self.domains.iter().map(|d| d.report.completed_count).sum()
+    }
+
+    pub fn end_time(&self) -> SimTime {
+        self.domains.iter().map(|d| d.report.end_time).max().unwrap_or(SimTime::ZERO)
+    }
+
+    pub fn mean_wait(&self) -> f64 {
+        let n = self.total_completed();
+        if n == 0 {
+            0.0
+        } else {
+            self.domains.iter().map(|d| d.report.wait_ticks_total).sum::<f64>() / n as f64
+        }
+    }
+
+    /// Events per wall-second (the Fig 5 scaling metric).
+    pub fn event_rate(&self) -> f64 {
+        self.total_events() as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// The decision digest: routing decisions + every domain's schedule
+    /// digest, folded in domain order — independent of how domains were
+    /// mapped onto shards. Byte-identical across shard counts.
+    pub fn fingerprint(&self) -> u64 {
+        let mut buf = Vec::with_capacity(8 + self.domains.len() * 8);
+        buf.extend_from_slice(&self.router_fingerprint.to_le_bytes());
+        for d in &self.domains {
+            buf.extend_from_slice(&d.fingerprint.to_le_bytes());
+        }
+        fnv1a(&buf)
+    }
+
+    /// Downgrade to the legacy federation report shape.
+    pub fn into_multicluster(self) -> MultiClusterReport {
+        let fingerprint = self.fingerprint();
+        let mut per_cluster = Vec::with_capacity(self.domains.len());
+        let mut all_jobs = Vec::new();
+        let mut rejected = self.rejected;
+        let mut end = SimTime::ZERO;
+        for d in self.domains {
+            per_cluster.push((
+                d.name,
+                wait_stats(&d.report.completed),
+                d.report.mean_utilization,
+            ));
+            rejected += d.report.rejected;
+            end = end.max(d.report.end_time);
+            all_jobs.extend(d.report.completed);
+        }
+        MultiClusterReport {
+            routing: self.routing,
+            per_cluster,
+            all_jobs,
+            rejected,
+            end_time: end,
+            fingerprint,
+        }
+    }
+}
+
+/// Run a federation on the sharded conservative engine.
+///
+/// `jobs` may arrive in any order; they are stably sorted by submit
+/// time (the order every router implementation requires). `threaded`
+/// picks real worker threads vs the serial modeled runner — identical
+/// results either way (asserted by the determinism tests).
+pub fn run_sharded(opts: &ShardOpts, mut jobs: Vec<Job>, threaded: bool) -> ShardedReport {
+    assert!(!opts.clusters.is_empty(), "federation needs at least one cluster");
+    let n_domains = opts.clusters.len();
+    let shards = opts.shards.max(1).min(n_domains);
+    let route_latency = opts.route_latency.max(1);
+
+    jobs.sort_by_key(|j| j.submit); // stable: ties keep input order
+    let last_submit = jobs.last().map(|j| j.submit.ticks()).unwrap_or(0);
+    jobs.reverse(); // pop() = earliest
+
+    // Domain workloads are empty machine shells, so the builder's
+    // derived fault horizon (`last submit + 4 x mttr`) would collapse
+    // to `4 x mttr`. Derive it here from the global trace instead —
+    // identically for every domain and every shard count.
+    let derived_until = if opts.sim.faults.enabled() && opts.sim.faults.until.is_none() {
+        Some(
+            (last_submit + route_latency)
+                + SimDuration::from_f64(4.0 * opts.sim.faults.mttr).ticks(),
+        )
+    } else {
+        opts.sim.faults.until
+    };
+
+    let collector: Arc<Mutex<Vec<Option<DomainOutcome>>>> =
+        Arc::new(Mutex::new((0..n_domains).map(|_| None).collect()));
+    let router_out = Arc::new(Mutex::new(RouterOutcome::default()));
+
+    let mut plans: Vec<RankPlan> =
+        (0..shards).map(|_| RankPlan { domains: Vec::new(), router: None }).collect();
+    for (d, spec) in opts.clusters.iter().enumerate() {
+        let mut o = opts.sim.for_rank(d, n_domains);
+        o.faults.until = derived_until;
+        plans[d % shards].domains.push((d, spec.clone(), o));
+    }
+    plans[0].router = Some(RouterPlan {
+        jobs,
+        clusters: opts.clusters.clone(),
+        routing: opts.routing,
+    });
+
+    let policy = opts.policy;
+    let builders: Vec<_> = plans
+        .into_iter()
+        .enumerate()
+        .map(|(i, plan)| {
+            let collector = Arc::clone(&collector);
+            let router_out = Arc::clone(&router_out);
+            move |_i: usize| {
+                ShardRank::from_plan(
+                    plan,
+                    policy,
+                    i,
+                    shards,
+                    route_latency,
+                    collector,
+                    router_out,
+                )
+            }
+        })
+        .collect();
+
+    let par = if threaded {
+        run_parallel(builders, route_latency)
+    } else {
+        run_parallel_modeled(builders, route_latency, BARRIER_COST)
+    };
+
+    let outcome = *router_out.lock().unwrap();
+    let mut domains: Vec<DomainOutcome> = collector
+        .lock()
+        .unwrap()
+        .drain(..)
+        .map(|d| d.expect("every domain reports an outcome"))
+        .collect();
+    domains.sort_by_key(|d| d.domain);
+
+    ShardedReport {
+        shards,
+        routing: opts.routing,
+        route_latency,
+        windows: par.windows,
+        wall: par.wall,
+        serial_wall: par.serial_wall,
+        routed: outcome.routed,
+        rejected: outcome.rejected,
+        router_fingerprint: outcome.fingerprint,
+        domains,
+        summaries: par.summaries,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MetaScheduler;
+    use crate::trace::Das2Model;
+
+    fn opts(routing: Routing, shards: usize) -> ShardOpts {
+        ShardOpts {
+            clusters: MetaScheduler::das2_federation(routing, Policy::FcfsBackfill).clusters,
+            routing,
+            policy: Policy::FcfsBackfill,
+            shards,
+            route_latency: 60,
+            sim: RankSimOpts::default(),
+        }
+    }
+
+    fn jobs(n: usize, seed: u64) -> Vec<Job> {
+        Das2Model::default().generate(n, seed).scale_arrivals(0.3).jobs
+    }
+
+    #[test]
+    fn completes_everything_feasible() {
+        let js = jobs(1_500, 7);
+        let n = js.len() as u64;
+        let r = run_sharded(&opts(Routing::LeastLoaded, 2), js, true);
+        assert_eq!(r.total_completed() + r.rejected, n);
+        assert_eq!(r.routed + r.rejected, n);
+        assert_eq!(r.domains.len(), 5);
+    }
+
+    #[test]
+    fn threaded_matches_modeled() {
+        let js = jobs(800, 8);
+        let a = run_sharded(&opts(Routing::RoundRobin, 3), js.clone(), true);
+        let b = run_sharded(&opts(Routing::RoundRobin, 3), js, false);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.windows, b.windows);
+        assert_eq!(a.total_events(), b.total_events());
+    }
+
+    #[test]
+    fn shards_clamp_to_domain_count() {
+        let js = jobs(200, 9);
+        let r = run_sharded(&opts(Routing::BestFitCluster, 64), js, true);
+        assert_eq!(r.shards, 5);
+        assert_eq!(r.total_completed() + r.rejected, 200);
+    }
+}

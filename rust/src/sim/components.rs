@@ -28,6 +28,8 @@ use crate::sim::{Ev, Horizon};
 use std::any::Any;
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Queue depth at or below which `Horizon::Auto` plans exactly — the
 /// timeline stays short on its own when few jobs wait, so clamping
@@ -377,6 +379,13 @@ pub struct SchedulerComponent {
     /// are event-driven, so a starving job needs a timed wake-up for its
     /// eviction round).
     starvation_timer: Option<SimTime>,
+    /// Last-activity watermark shared with the fault injector on
+    /// streamed runs: advanced to `now` after every handled event that
+    /// leaves the machine non-idle (queued or running work), so the
+    /// derived injection horizon tracks a draining backlog through
+    /// arrival droughts. Written only inside the single-threaded event
+    /// loop — deterministic.
+    pub activity_mark: Option<Arc<AtomicU64>>,
 }
 
 impl SchedulerComponent {
@@ -433,6 +442,7 @@ impl SchedulerComponent {
             lost_work: 0.0,
             overhead_work: 0.0,
             starvation_timer: None,
+            activity_mark: None,
         }
     }
 
@@ -1206,10 +1216,10 @@ impl Component<Ev> for SchedulerComponent {
             Ev::Submit(job) => {
                 if !self.cluster.feasible(&job) {
                     self.rejected += 1;
-                    return;
+                } else {
+                    self.queue.push(*job);
+                    self.request_dispatch(ctx);
                 }
-                self.queue.push(*job);
-                self.request_dispatch(ctx);
             }
             Ev::Dispatch => self.dispatch(ctx),
             Ev::Complete { job_id, incarnation } => self.complete(job_id, incarnation, ctx),
@@ -1220,6 +1230,11 @@ impl Component<Ev> for SchedulerComponent {
             Ev::ReserveStart { res } => self.start_reservation(res, ctx),
             Ev::ReserveEnd { res } => self.end_reservation(res, ctx),
             other => panic!("scheduler got unexpected event {other:?}"),
+        }
+        if let Some(mark) = &self.activity_mark {
+            if !self.queue.is_empty() || !self.running.is_empty() {
+                mark.fetch_max(ctx.now().ticks(), Ordering::Relaxed);
+            }
         }
     }
 

@@ -161,15 +161,19 @@ pub struct FaultInjector {
     reservations: Vec<ReservationSpec>,
     /// Streamed-run horizon watermark: the stream's last-seen submit
     /// (advanced by the job source as it pulls records). When set, the
-    /// injection horizon is `watermark + 4 x mttr`, re-read at each
-    /// failure instant — the fixed `until` is ignored. Updates happen
-    /// inside the single-threaded event loop, so reads are
-    /// deterministic. Caveat (documented in the CLI warning): an
-    /// arrival drought longer than `4 x mttr` *mid-trace* ends
-    /// injection early, since the injector cannot distinguish it from
-    /// the end of the stream — set `faults.until` explicitly for such
-    /// traces.
+    /// injection horizon is `max(watermark, last engine activity) +
+    /// 4 x mttr`, re-read at each failure instant — the fixed `until`
+    /// is ignored. Updates happen inside the single-threaded event
+    /// loop, so reads are deterministic.
     stream_watermark: Option<Arc<AtomicU64>>,
+    /// Last time the scheduler had queued or running work (advanced by
+    /// the scheduler component on every event it handles with a
+    /// non-idle machine). Folded into the dynamic horizon so an
+    /// arrival drought longer than `4 x mttr` mid-trace — or a backlog
+    /// still draining after the stream ends — keeps the fault chain
+    /// alive while the engine has work, instead of ending injection
+    /// early (the pre-fix behavior, carried in ROADMAP since PR 5).
+    activity_mark: Option<Arc<AtomicU64>>,
     /// Drawn instant of the next failure (dynamic mode only): wake-ups
     /// may fire *before* it when the derived horizon clamps the sleep —
     /// see [`FaultInjector::schedule_dynamic_wake`]. `None` = chain
@@ -193,6 +197,7 @@ impl FaultInjector {
             rng,
             reservations,
             stream_watermark: None,
+            activity_mark: None,
             next_fault_due: None,
             injected: 0,
         }
@@ -206,14 +211,28 @@ impl FaultInjector {
         self
     }
 
-    /// The injection horizon as of now: fixed, or derived from the
-    /// stream's last-seen submission plus the same `4 x mttr` slack the
-    /// eager path derives from the full job list.
+    /// Also fold the scheduler's last-activity time into the dynamic
+    /// horizon (see the `activity_mark` field docs); only meaningful
+    /// together with [`FaultInjector::with_stream_watermark`].
+    pub fn with_activity_watermark(mut self, activity: Arc<AtomicU64>) -> FaultInjector {
+        self.activity_mark = Some(activity);
+        self
+    }
+
+    /// The injection horizon as of now: fixed, or derived from
+    /// `max(stream's last-seen submission, scheduler's last activity)`
+    /// plus the same `4 x mttr` slack the eager path derives from the
+    /// full job list. The activity term keeps failures flowing while a
+    /// backlog drains through an arrival drought.
     fn horizon_now(&self) -> SimTime {
         match &self.stream_watermark {
             None => self.until,
             Some(w) => {
-                SimTime(w.load(Ordering::Relaxed)) + SimDuration::from_f64(4.0 * self.cfg.mttr)
+                let mut base = w.load(Ordering::Relaxed);
+                if let Some(a) = &self.activity_mark {
+                    base = base.max(a.load(Ordering::Relaxed));
+                }
+                SimTime(base) + SimDuration::from_f64(4.0 * self.cfg.mttr)
             }
         }
     }
@@ -280,9 +299,10 @@ impl FaultInjector {
     /// the streaming utilization means it denominates) past the run.
     /// Failure *instants* are unaffected: injection only ever happens
     /// at exactly `due`, and the stop decision matches the unclamped
-    /// fire-time check (a stagnant watermark means the stream is
-    /// exhausted — the one-job lookahead keeps it ahead of the clock
-    /// while arrivals remain).
+    /// fire-time check (a stagnant horizon means the stream is
+    /// exhausted *and* the machine has drained — the one-job lookahead
+    /// keeps the watermark ahead of the clock while arrivals remain,
+    /// and the activity term keeps the horizon moving while work does).
     fn schedule_dynamic_wake(&mut self, ctx: &mut Ctx<Ev>, due: SimTime) {
         let now = ctx.now();
         let bound = self.horizon_now();

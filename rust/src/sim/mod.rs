@@ -18,7 +18,7 @@ pub mod multicluster;
 
 pub use components::{AutoHorizonParams, FaultCounters, JobExecutor, JobSource, SchedulerComponent};
 pub use faults::{FaultConfig, FaultDistribution, FaultInjector, ReservationSpec};
-pub use multicluster::{ClusterSpec, MetaScheduler, MultiClusterReport, Routing};
+pub use multicluster::{ClusterSpec, MetaScheduler, MultiClusterReport, RouterState, Routing};
 
 use crate::core::engine::Engine;
 use crate::core::stats::TimeSeries;
@@ -288,9 +288,11 @@ pub struct Simulation {
     /// injection cannot see the last submission of a stream up front, so
     /// a streamed fault run either sets `faults.until` explicitly or
     /// gets a *derived* horizon: the builder threads the stream's
-    /// last-seen submit to the injector as a watermark, and injection
-    /// stops once the clock passes `watermark + 4 x mttr` — the same
-    /// law the eager path derives from the full job list.
+    /// last-seen submit and the scheduler's last-activity time to the
+    /// injector as watermarks, and injection stops once the clock
+    /// passes `max(watermark, last activity) + 4 x mttr` — the eager
+    /// path's law, extended so a backlog draining through an arrival
+    /// drought keeps seeing failures.
     pub job_stream: Option<Box<dyn Iterator<Item = Job> + Send>>,
     /// Whether completed jobs keep their per-job lifecycle records in
     /// the report (default). Streaming-scale runs turn this off so peak
@@ -494,6 +496,15 @@ impl Simulation {
             let mut injector = FaultInjector::new(faults, until, reservations);
             if let Some(mark) = stream_watermark {
                 injector = injector.with_stream_watermark(mark);
+                // Pair the stream watermark with a last-activity mark
+                // from the scheduler, so the derived horizon follows a
+                // backlog draining through an arrival drought instead
+                // of ending injection `4 x mttr` after the last-seen
+                // submission (the drought bug carried since PR 5).
+                let activity = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+                engine.get_mut::<SchedulerComponent>(sched).unwrap().activity_mark =
+                    Some(std::sync::Arc::clone(&activity));
+                injector = injector.with_activity_watermark(activity);
             }
             let inj = engine.add(Box::new(injector));
             engine.connect(inj, sched, SimDuration(0));
@@ -535,6 +546,21 @@ impl SimInstance {
     /// Process all events strictly before `bound`; returns events handled.
     pub fn run_window(&mut self, bound: SimTime) -> u64 {
         self.engine.run_window(bound)
+    }
+
+    /// Inject a job arrival at `time`, exactly as the wired `JobSource`
+    /// would emit it (same target, same `Priority::ARRIVE`), so external
+    /// feeders — the sharded federation router — produce the same event
+    /// order as an in-graph source. `time` must be >= the engine clock;
+    /// within one timestamp, injection order is arrival order (the
+    /// queue's insertion sequence breaks the tie).
+    pub fn submit(&mut self, time: SimTime, job: Job) {
+        self.engine.schedule(
+            time,
+            crate::core::event::Priority::ARRIVE,
+            self.sched_id,
+            Ev::Submit(Box::new(job)),
+        );
     }
 
     /// Close statistics and extract the report.

@@ -2,13 +2,23 @@
 //! multi-cluster operation"): a meta-scheduler routes arriving jobs to
 //! one of several autonomous clusters, each running its own scheduler —
 //! the way DAS-2 itself was operated (five clusters, per-cluster queues).
+//!
+//! Since the sharded-engine PR, `MetaScheduler::run` no longer buckets
+//! jobs up front and simulates each cluster serially: it delegates to
+//! [`crate::parallel::run_sharded`], where the router is a rank-0
+//! component of a conservative PDES and every routing decision becomes
+//! a timestamped cross-rank message. The incremental routing state
+//! lives in [`RouterState`] so the batch `route()` helper and the
+//! sharded engine share one implementation (and one set of fixes).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use crate::core::time::SimTime;
 use crate::job::Job;
 use crate::metrics::{wait_stats, WaitStats};
+use crate::parallel::{run_sharded, RankSimOpts, ShardOpts};
 use crate::sched::Policy;
-use crate::sim::run_policy;
-use crate::trace::Workload;
 
 /// Routing policy of the meta-scheduler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -21,6 +31,17 @@ pub enum Routing {
     /// (best-fit at cluster granularity; keeps big machines free for
     /// big jobs).
     BestFitCluster,
+}
+
+impl Routing {
+    /// Canonical name, matching what `FromStr` accepts.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Routing::RoundRobin => "round-robin",
+            Routing::LeastLoaded => "least-loaded",
+            Routing::BestFitCluster => "best-fit-cluster",
+        }
+    }
 }
 
 impl std::str::FromStr for Routing {
@@ -50,6 +71,127 @@ impl ClusterSpec {
     }
 }
 
+/// Outstanding (not-yet-completed) work charged to one cluster, in
+/// est-based core-seconds. The meta-scheduler cannot see actual
+/// runtimes, so completions are *estimated*: a job charged at time `t`
+/// with estimate `e` is assumed gone at `t + e`.
+///
+/// Represented as `Σ cores·end − busy_cores·now` over unexpired jobs,
+/// which equals the remaining est-based core-ticks at `now` and lets
+/// expiry pop a min-heap instead of rescanning.
+struct ClusterLoad {
+    /// Min-heap of (estimated end, cores) for charged jobs.
+    ends: BinaryHeap<Reverse<(u64, u64)>>,
+    weighted_end: f64,
+    busy_cores: f64,
+}
+
+impl ClusterLoad {
+    fn new() -> ClusterLoad {
+        ClusterLoad { ends: BinaryHeap::new(), weighted_end: 0.0, busy_cores: 0.0 }
+    }
+
+    fn expire(&mut self, now: u64) {
+        while let Some(&Reverse((end, cores))) = self.ends.peek() {
+            if end > now {
+                break;
+            }
+            self.ends.pop();
+            self.weighted_end -= (end as f64) * (cores as f64);
+            self.busy_cores -= cores as f64;
+        }
+    }
+
+    fn outstanding(&mut self, now: u64) -> f64 {
+        self.expire(now);
+        (self.weighted_end - self.busy_cores * now as f64).max(0.0)
+    }
+
+    fn charge(&mut self, now: u64, cores: u64, est_ticks: u64) {
+        let end = now.saturating_add(est_ticks.max(1));
+        self.ends.push(Reverse((end, cores)));
+        self.weighted_end += (end as f64) * (cores as f64);
+        self.busy_cores += cores as f64;
+    }
+}
+
+/// Incremental routing state: feed jobs one at a time (in submit
+/// order) and get a cluster index back. This is the single source of
+/// truth for routing decisions — the batch [`MetaScheduler::route`]
+/// and the sharded engine's rank-0 router both drive it.
+pub struct RouterState {
+    routing: Routing,
+    caps: Vec<u64>,
+    /// Round-robin cursors, one per *fit-set size* (1..=n clusters).
+    /// Fit sets here are determined solely by a core threshold, so two
+    /// fit sets of equal size are the same set — a cursor per size is
+    /// a cursor per distinct set, and mixed big/small traffic no
+    /// longer strides one shared counter (the old bias: step 2 mod an
+    /// even fit-set size starved half the clusters).
+    rr_cursors: Vec<usize>,
+    /// Estimated outstanding load (LeastLoaded only).
+    loads: Vec<ClusterLoad>,
+    now: u64,
+}
+
+impl RouterState {
+    pub fn new(clusters: &[ClusterSpec], routing: Routing) -> RouterState {
+        let caps: Vec<u64> = clusters.iter().map(|c| c.total_cores()).collect();
+        let loads = if routing == Routing::LeastLoaded {
+            caps.iter().map(|_| ClusterLoad::new()).collect()
+        } else {
+            Vec::new()
+        };
+        RouterState {
+            routing,
+            rr_cursors: vec![0usize; caps.len() + 1],
+            caps,
+            loads,
+            now: 0,
+        }
+    }
+
+    /// Route one job (jobs must arrive in nondecreasing submit order
+    /// for LeastLoaded decay to be meaningful). `None` = fits no
+    /// cluster.
+    pub fn route_one(&mut self, j: &Job) -> Option<usize> {
+        self.now = self.now.max(j.submit.ticks());
+        let fits: Vec<usize> =
+            (0..self.caps.len()).filter(|&i| j.cores <= self.caps[i]).collect();
+        if fits.is_empty() {
+            return None;
+        }
+        let pick = match self.routing {
+            Routing::RoundRobin => {
+                let cur = &mut self.rr_cursors[fits.len()];
+                let p = fits[*cur % fits.len()];
+                *cur += 1;
+                p
+            }
+            Routing::LeastLoaded => {
+                // Lowest outstanding-load fraction; ties go to the
+                // lowest index (fits is ascending, strict < keeps the
+                // first minimum).
+                let mut best = fits[0];
+                let mut best_frac = f64::INFINITY;
+                for &i in &fits {
+                    let frac = self.loads[i].outstanding(self.now) / self.caps[i] as f64;
+                    if frac < best_frac {
+                        best_frac = frac;
+                        best = i;
+                    }
+                }
+                self.loads[best].charge(self.now, j.cores, j.est_runtime.ticks());
+                best
+            }
+            Routing::BestFitCluster => {
+                fits.iter().copied().min_by_key(|&i| (self.caps[i], i)).unwrap()
+            }
+        };
+        Some(pick)
+    }
+}
+
 /// Result of a federated run.
 #[derive(Debug, Clone)]
 pub struct MultiClusterReport {
@@ -58,6 +200,9 @@ pub struct MultiClusterReport {
     pub all_jobs: Vec<Job>,
     pub rejected: u64,
     pub end_time: SimTime,
+    /// FNV-1a digest of routing decisions + per-domain schedules —
+    /// byte-identical across shard counts.
+    pub fingerprint: u64,
 }
 
 impl MultiClusterReport {
@@ -66,8 +211,9 @@ impl MultiClusterReport {
     }
 }
 
-/// The meta-scheduler: route then simulate each cluster independently
-/// (clusters are autonomous; no job migration — as on the real DAS-2).
+/// The meta-scheduler: routes jobs to autonomous clusters (no job
+/// migration — as on the real DAS-2) and runs the federation on the
+/// sharded PDES engine.
 pub struct MetaScheduler {
     pub clusters: Vec<ClusterSpec>,
     pub routing: Routing,
@@ -97,73 +243,27 @@ impl MetaScheduler {
     /// Route every job to a cluster index; `None` = rejected (fits no
     /// cluster).
     pub fn route(&self, jobs: &[Job]) -> Vec<Option<usize>> {
-        let caps: Vec<u64> = self.clusters.iter().map(|c| c.total_cores()).collect();
-        let mut rr = 0usize;
-        // Outstanding load per cluster in core-seconds (est based — the
-        // meta-scheduler cannot see actual runtimes).
-        let mut load = vec![0f64; self.clusters.len()];
-        jobs.iter()
-            .map(|j| {
-                let fits: Vec<usize> =
-                    (0..caps.len()).filter(|&i| j.cores <= caps[i]).collect();
-                if fits.is_empty() {
-                    return None;
-                }
-                let pick = match self.routing {
-                    Routing::RoundRobin => {
-                        // Next fitting cluster in cyclic order.
-                        let p = fits[rr % fits.len()];
-                        rr += 1;
-                        p
-                    }
-                    Routing::LeastLoaded => fits
-                        .iter()
-                        .copied()
-                        .min_by(|&a, &b| {
-                            (load[a] / caps[a] as f64)
-                                .partial_cmp(&(load[b] / caps[b] as f64))
-                                .unwrap()
-                                .then(a.cmp(&b))
-                        })
-                        .unwrap(),
-                    Routing::BestFitCluster => fits
-                        .iter()
-                        .copied()
-                        .min_by_key(|&i| (caps[i], i))
-                        .unwrap(),
-                };
-                load[pick] += j.cores as f64 * j.est_runtime.as_f64();
-                Some(pick)
-            })
-            .collect()
+        let mut state = RouterState::new(&self.clusters, self.routing);
+        jobs.iter().map(|j| state.route_one(j)).collect()
     }
 
-    /// Run the full federation on `jobs`.
+    /// Run the full federation on `jobs`, on the sharded engine with
+    /// one shard (serial execution, identical decisions to any other
+    /// shard count).
     pub fn run(&self, jobs: &[Job]) -> MultiClusterReport {
-        let routes = self.route(jobs);
-        let mut buckets: Vec<Vec<Job>> = vec![Vec::new(); self.clusters.len()];
-        let mut rejected = 0u64;
-        for (j, r) in jobs.iter().zip(&routes) {
-            match r {
-                Some(i) => buckets[*i].push(j.clone()),
-                None => rejected += 1,
-            }
-        }
-        let mut per_cluster = Vec::new();
-        let mut all_jobs = Vec::new();
-        let mut end = SimTime::ZERO;
-        for (spec, bucket) in self.clusters.iter().zip(buckets) {
-            let w = Workload::new(&spec.name, bucket, spec.nodes, spec.cores_per_node);
-            let rep = run_policy(w, self.policy);
-            per_cluster.push((
-                spec.name.clone(),
-                wait_stats(&rep.completed),
-                rep.mean_utilization,
-            ));
-            end = end.max(rep.end_time);
-            all_jobs.extend(rep.completed);
-        }
-        MultiClusterReport { routing: self.routing, per_cluster, all_jobs, rejected, end_time: end }
+        run_sharded(
+            &ShardOpts {
+                clusters: self.clusters.clone(),
+                routing: self.routing,
+                policy: self.policy,
+                shards: 1,
+                route_latency: 1,
+                sim: RankSimOpts::default(),
+            },
+            jobs.to_vec(),
+            false,
+        )
+        .into_multicluster()
     }
 }
 
@@ -224,6 +324,68 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_mixed_sizes_feeds_every_fitting_cluster() {
+        // Regression for the rotation bias: with one shared counter,
+        // alternating big (head-only) and small (fits-all) jobs made
+        // the small-job picks stride 2 mod 4 over the site clusters —
+        // half of them never received work. Per-fit-set cursors keep
+        // each rotation dense.
+        let head = ClusterSpec { name: "head".into(), nodes: 128, cores_per_node: 2 };
+        let mut clusters = vec![head];
+        for s in ["s1", "s2", "s3"] {
+            clusters.push(ClusterSpec { name: s.into(), nodes: 32, cores_per_node: 2 });
+        }
+        let m = MetaScheduler::new(clusters, Routing::RoundRobin, Policy::Fcfs);
+        let js: Vec<Job> = (0..80)
+            .map(|i| Job::simple(i, i, if i % 2 == 0 { 128 } else { 2 }, 60))
+            .collect();
+        let routes = m.route(&js);
+        let mut big = vec![0usize; 4];
+        let mut small = vec![0usize; 4];
+        for (j, r) in js.iter().zip(routes) {
+            let i = r.expect("everything fits somewhere");
+            if j.cores == 128 {
+                big[i] += 1;
+            } else {
+                small[i] += 1;
+            }
+        }
+        // 40 big jobs rotate over the one-element fit set {head}; 40
+        // small jobs rotate densely over all four clusters.
+        assert_eq!(big, vec![40, 0, 0, 0], "big jobs only fit the head");
+        assert_eq!(small, vec![10, 10, 10, 10], "small rotation must be dense");
+    }
+
+    #[test]
+    fn least_loaded_decays_past_completions() {
+        // Regression: the old implementation charged load forever, so
+        // a single early job biased routing for the rest of the trace.
+        // With est-based decay, a burst arriving long after the early
+        // job's estimated completion sees two empty clusters and
+        // alternates between them.
+        let clusters = vec![
+            ClusterSpec { name: "a".into(), nodes: 32, cores_per_node: 2 },
+            ClusterSpec { name: "b".into(), nodes: 32, cores_per_node: 2 },
+        ];
+        let m = MetaScheduler::new(clusters, Routing::LeastLoaded, Policy::Fcfs);
+        let mut js = vec![Job::simple(0, 0, 64, 1_000)];
+        for i in 0..10u64 {
+            js.push(Job::simple(1 + i, 50_000 + i, 16, 100));
+        }
+        let routes = m.route(&js);
+        assert_eq!(routes[0], Some(0), "empty tie goes to the lowest index");
+        let mut late = vec![0usize; 2];
+        for r in routes[1..].iter().flatten() {
+            late[*r] += 1;
+        }
+        // Old behavior: the stale 64_000 core-second charge on cluster
+        // 0 pushed all ten late jobs onto cluster 1 ([0, 10]). Decayed:
+        // the early job expired at t=1_000, both clusters are empty at
+        // t=50_000, and the burst alternates.
+        assert_eq!(late, vec![5, 5], "late burst must balance after decay");
+    }
+
+    #[test]
     fn federated_run_completes_everything_feasible() {
         for routing in [Routing::RoundRobin, Routing::LeastLoaded, Routing::BestFitCluster] {
             let m = federation(routing);
@@ -251,5 +413,6 @@ mod tests {
         let b = federation(Routing::LeastLoaded).run(&js);
         assert_eq!(a.wait_stats(), b.wait_stats());
         assert_eq!(a.end_time, b.end_time);
+        assert_eq!(a.fingerprint, b.fingerprint);
     }
 }

@@ -576,22 +576,90 @@ fn streamed_fault_run_derives_injector_horizon() {
     assert_eq!(a.faults.failures, a.faults.repairs, "every failure must repair");
     let b = streamed();
     assert_eq!(a.fingerprint(), b.fingerprint(), "derived-horizon run not reproducible");
-    // The derived bound tracks the stream: it can only stop the chain
-    // once arrivals are more than 4 x mttr behind the clock, so the
-    // eager run of the same trace with an explicit horizon at the same
-    // law's endpoint injects at least as many failures (arrival
-    // droughts may stop the streamed chain early, never late).
+    // The derived bound is max(stream last-seen submission, last engine
+    // activity) + 4 x mttr, so the streamed chain never stops before the
+    // pure stream law's endpoint — it may only extend past it while the
+    // machine is still draining queued work. Bracket it between the two
+    // eager laws.
     let last_submit = w.jobs.iter().map(|j| j.submit.ticks()).max().unwrap();
-    let eager = Simulation::new(w.clone(), Policy::FcfsBackfill)
+    let eager_floor = Simulation::new(w.clone(), Policy::FcfsBackfill)
         .with_faults(FaultConfig { until: Some(last_submit + 8_000), ..faults })
         .run(None);
-    assert!(eager.faults.failures > 0);
+    assert!(eager_floor.faults.failures > 0);
     assert!(
-        a.faults.failures <= eager.faults.failures,
-        "streamed ({}) must not inject past the eager law's bound ({})",
+        a.faults.failures >= eager_floor.faults.failures,
+        "streamed ({}) must not stop before the stream law's bound ({})",
         a.faults.failures,
-        eager.faults.failures
+        eager_floor.faults.failures
     );
+    // And the activity mark can never outlive the run itself, so the
+    // run's own end time + 4 x mttr caps the injected chain.
+    let eager_ceil = Simulation::new(w.clone(), Policy::FcfsBackfill)
+        .with_faults(FaultConfig { until: Some(a.end_time.ticks() + 8_000), ..faults })
+        .run(None);
+    assert!(
+        a.faults.failures <= eager_ceil.faults.failures,
+        "streamed ({}) must not inject past its own activity bound ({})",
+        a.faults.failures,
+        eager_ceil.faults.failures
+    );
+}
+
+/// Regression test for the mid-trace arrival-drought bug: a streamed
+/// fault run whose trace has a gap longer than 4 x mttr between bursts,
+/// followed by a tail of queued work that drains long after the last
+/// submission. Under the old law (stream watermark alone) the injector
+/// horizon froze at `last submit + 4 x mttr` and injection ended while
+/// the machine was still full; the fixed law tracks engine activity, so
+/// failures keep landing until the queue actually drains.
+#[test]
+fn streamed_drought_keeps_injecting_while_machine_drains() {
+    use sst_sched::core::time::SimTime;
+    use sst_sched::job::Job;
+    use sst_sched::trace::Workload;
+    let mut jobs = Vec::new();
+    // Burst 1: ten half-machine jobs in the first ten ticks (~2000 ticks
+    // of work on the 2x2-core machine).
+    for i in 0..10u64 {
+        jobs.push(Job::simple(i, i, 2, 400));
+    }
+    // Drought: nothing arrives until t = 5000 — far beyond 4 x mttr.
+    // Burst 2: forty whole-machine jobs; the queue drains serially until
+    // roughly t = 13_000, long past the last submission at t = 5039.
+    for i in 0..40u64 {
+        jobs.push(Job::simple(100 + i, 5_000 + i, 4, 200));
+    }
+    let n = jobs.len();
+    let faults =
+        FaultConfig { mtbf: 500.0, mttr: 50.0, seed: 7, ..FaultConfig::default() };
+    let dynamic = || {
+        Simulation::new(Workload::machine("drought", 2, 2), Policy::Fcfs)
+            .with_job_stream(Box::new(jobs.clone().into_iter()))
+            .with_faults(faults)
+            .run(None)
+    };
+    let a = dynamic();
+    assert_eq!(a.completed_count as usize, n, "drought run lost jobs");
+    assert_eq!(a.faults.failures, a.faults.repairs);
+    assert_eq!(a.fingerprint(), dynamic().fingerprint(), "drought run not reproducible");
+    // Old law's endpoint: last submission (5039) + 4 x mttr (200). The
+    // eager run with that explicit horizon models the buggy behaviour.
+    let old_law = Simulation::new(
+        Workload::new("drought-eager", jobs.clone(), 2, 2),
+        Policy::Fcfs,
+    )
+    .with_faults(FaultConfig { until: Some(5_039 + 200), ..faults })
+    .run(None);
+    assert_eq!(old_law.completed.len(), n);
+    assert!(
+        a.faults.failures > old_law.faults.failures,
+        "drought fix must keep injecting through the drain: dynamic {} vs old law {}",
+        a.faults.failures,
+        old_law.faults.failures
+    );
+    // The drain runs well past the old bound, so the gap is substantial,
+    // and the activity-extended chain still terminates with the run.
+    assert!(a.end_time > SimTime(5_239), "tail must drain past the old bound");
 }
 
 #[test]

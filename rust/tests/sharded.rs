@@ -1,0 +1,127 @@
+//! Integration tests for the sharded multi-domain federation engine:
+//! the shard-count determinism matrix (the PR's headline contract),
+//! router/batch equivalence, and the faults + reservations + routing
+//! composition test.
+
+use sst_sched::job::Job;
+use sst_sched::parallel::{fnv1a, run_sharded, RankSimOpts, ShardOpts};
+use sst_sched::sched::Policy;
+use sst_sched::sim::{FaultConfig, MetaScheduler, ReservationSpec, Routing};
+use sst_sched::trace::Das2Model;
+
+fn federation_opts(routing: Routing, shards: usize) -> ShardOpts {
+    ShardOpts {
+        clusters: MetaScheduler::das2_federation(routing, Policy::FcfsBackfill).clusters,
+        routing,
+        policy: Policy::FcfsBackfill,
+        shards,
+        route_latency: 60,
+        sim: RankSimOpts::default(),
+    }
+}
+
+fn jobs(n: usize, seed: u64) -> Vec<Job> {
+    Das2Model::default().generate(n, seed).scale_arrivals(0.3).jobs
+}
+
+#[test]
+fn shard_count_matrix_produces_identical_fingerprints() {
+    // The tentpole contract: parallel decisions == serial decisions,
+    // byte for byte, for every shard count (8 clamps to the 5 domains).
+    let js = jobs(2_500, 11);
+    let base = run_sharded(&federation_opts(Routing::LeastLoaded, 1), js.clone(), false);
+    assert!(base.total_completed() > 0);
+    for shards in [1usize, 2, 4, 8] {
+        let threaded =
+            run_sharded(&federation_opts(Routing::LeastLoaded, shards), js.clone(), true);
+        let modeled =
+            run_sharded(&federation_opts(Routing::LeastLoaded, shards), js.clone(), false);
+        assert_eq!(
+            threaded.fingerprint(),
+            base.fingerprint(),
+            "threaded {shards}-shard decisions diverged from serial"
+        );
+        assert_eq!(
+            modeled.fingerprint(),
+            base.fingerprint(),
+            "modeled {shards}-shard decisions diverged from serial"
+        );
+        // The window sequence is a function of event times alone, so it
+        // is shard-count independent too.
+        assert_eq!(threaded.windows, base.windows, "shards={shards}");
+        assert_eq!(threaded.total_completed(), base.total_completed(), "shards={shards}");
+        assert_eq!(threaded.rejected, base.rejected, "shards={shards}");
+        assert_eq!(threaded.router_fingerprint, base.router_fingerprint, "shards={shards}");
+    }
+}
+
+#[test]
+fn router_decisions_match_the_batch_meta_scheduler() {
+    // The in-window router must make exactly the decisions the batch
+    // `MetaScheduler::route` makes on the submit-sorted trace — same
+    // state machine, fed incrementally.
+    for routing in [Routing::RoundRobin, Routing::LeastLoaded, Routing::BestFitCluster] {
+        let mut js = jobs(1_200, 12);
+        js.sort_by_key(|j| j.submit);
+        let m = MetaScheduler::das2_federation(routing, Policy::FcfsBackfill);
+        let routes = m.route(&js);
+        let mut expected_fp = Vec::new();
+        let mut expected_routed = 0u64;
+        let mut expected_rejected = 0u64;
+        for (j, r) in js.iter().zip(&routes) {
+            match r {
+                Some(dom) => {
+                    expected_routed += 1;
+                    expected_fp.extend_from_slice(&j.id.to_le_bytes());
+                    expected_fp.extend_from_slice(&(*dom as u64).to_le_bytes());
+                }
+                None => expected_rejected += 1,
+            }
+        }
+        let rep = run_sharded(&federation_opts(routing, 4), js, true);
+        assert_eq!(rep.routed, expected_routed, "{routing:?}");
+        assert_eq!(rep.rejected, expected_rejected, "{routing:?}");
+        assert_eq!(rep.router_fingerprint, fnv1a(&expected_fp), "{routing:?}");
+    }
+}
+
+#[test]
+fn faults_and_reservations_compose_on_the_sharded_engine() {
+    // Federation run where every domain injects failures and holds a
+    // reservation window: the composition must stay deterministic
+    // across shard counts, and both subsystems must actually fire.
+    let mut opts = federation_opts(Routing::LeastLoaded, 1);
+    opts.sim.faults = FaultConfig { mtbf: 2_000.0, mttr: 600.0, ..FaultConfig::default() };
+    opts.sim.reservations = vec![ReservationSpec { start: 2_000, duration: 4_000, nodes: 8 }];
+    let js = jobs(1_500, 13);
+    let n = js.len() as u64;
+    let serial = run_sharded(&opts, js.clone(), false);
+    let mut opts4 = opts.clone();
+    opts4.shards = 4;
+    let sharded = run_sharded(&opts4, js, true);
+    assert_eq!(sharded.fingerprint(), serial.fingerprint());
+    let failures: u64 = sharded.domains.iter().map(|d| d.report.faults.failures).sum();
+    let resv: u64 =
+        sharded.domains.iter().map(|d| d.report.faults.reservations_started).sum();
+    assert!(failures > 0, "fault injection never fired on the sharded engine");
+    assert!(resv > 0, "reservations never started on the sharded engine");
+    assert_eq!(sharded.total_completed() + sharded.rejected, n);
+}
+
+#[test]
+fn meta_scheduler_run_rides_the_sharded_engine() {
+    // `MetaScheduler::run` is now a 1-shard sharded run; a 4-shard run
+    // with the same route latency must reproduce its fingerprint.
+    let js = jobs(1_000, 14);
+    let m = MetaScheduler::das2_federation(Routing::BestFitCluster, Policy::FcfsBackfill);
+    let legacy = m.run(&js);
+    let mut opts = federation_opts(Routing::BestFitCluster, 4);
+    opts.route_latency = 1; // MetaScheduler::run's latency
+    let sharded = run_sharded(&opts, js, true);
+    assert_eq!(sharded.fingerprint(), legacy.fingerprint);
+    assert_eq!(
+        sharded.total_completed(),
+        legacy.all_jobs.len() as u64,
+        "same completions either way"
+    );
+}
