@@ -24,6 +24,9 @@ pub enum WorkloadSource {
     Swf(String),
     /// Grid Workloads Archive file.
     Gwf(String),
+    /// Compact binary trace (see `crate::trace::stf`); always read
+    /// through the byte scanner, machine taken from the file header.
+    Stf(String),
 }
 
 /// Full experiment configuration.
@@ -69,6 +72,12 @@ pub struct ExperimentConfig {
     pub faults: FaultConfig,
     /// Preemption layer (`preemption.*`); mode `none` by default.
     pub preemption: PreemptionConfig,
+    /// Ingest text traces through the zero-copy byte scanner
+    /// (`workload.fast_parse` / `--fast-parse`) instead of the scalar
+    /// line parser. Same records, same order, same first-error message
+    /// — the differential suite in `tests/prop_fastparse.rs` is the
+    /// contract. `.stf` traces always use the scanner regardless.
+    pub fast_parse: bool,
     /// Assign derived per-user priority bands (`job.user % bands`) to
     /// the loaded workload (`preemption.priority_bands`). Trace formats
     /// (SWF/GWF) carry no priorities, so priority-aware eviction is
@@ -111,6 +120,7 @@ impl Default for ExperimentConfig {
             route_latency: 60,
             faults: FaultConfig::default(),
             preemption: PreemptionConfig::default(),
+            fast_parse: false,
             priority_bands: 0,
             reservations: Vec::new(),
             planning_horizon: Horizon::Exact,
@@ -141,11 +151,18 @@ impl ExperimentConfig {
                         .context("gwf workload needs \"path\"")?
                         .to_string(),
                 ),
+                "stf" => WorkloadSource::Stf(
+                    w.get("path")
+                        .and_then(|p| p.as_str())
+                        .context("stf workload needs \"path\"")?
+                        .to_string(),
+                ),
                 other => bail!("unknown workload kind {other:?}"),
             };
             cfg.jobs = w.get_u64_or("jobs", cfg.jobs as u64) as usize;
             cfg.seed = w.get_u64_or("seed", cfg.seed);
             cfg.arrival_scale = w.get_f64_or("arrival_scale", cfg.arrival_scale);
+            cfg.fast_parse = w.get_bool_or("fast_parse", cfg.fast_parse);
         }
         if let Some(p) = v.get("platform") {
             cfg.nodes = p.get("nodes").and_then(|x| x.as_u64()).map(|x| x as usize);
@@ -274,6 +291,7 @@ impl ExperimentConfig {
             WorkloadSource::SdscSp2 => ("sdsc-sp2", None),
             WorkloadSource::Swf(p) => ("swf", Some(p.clone())),
             WorkloadSource::Gwf(p) => ("gwf", Some(p.clone())),
+            WorkloadSource::Stf(p) => ("stf", Some(p.clone())),
         };
         let mut wl = vec![
             ("kind", Json::str(kind)),
@@ -283,6 +301,9 @@ impl ExperimentConfig {
         ];
         if let Some(p) = path {
             wl.push(("path", Json::str(p)));
+        }
+        if self.fast_parse {
+            wl.push(("fast_parse", Json::Bool(true)));
         }
         let mut platform = vec![("mem_per_node", Json::num(self.mem_per_node as f64))];
         if let Some(n) = self.nodes {
@@ -413,22 +434,9 @@ impl ExperimentConfig {
             WorkloadSource::SdscSp2 => {
                 SdscSp2Model::default().generate(self.jobs.max(1), self.seed)
             }
-            WorkloadSource::Swf(path) => {
-                let jobs = crate::trace::swf::load_swf_file(path)?;
-                let mut wl = Workload::new(path, jobs, 128, 1);
-                if self.jobs > 0 {
-                    wl = wl.truncate(self.jobs);
-                }
-                wl
-            }
-            WorkloadSource::Gwf(path) => {
-                let jobs = crate::trace::gwf::load_gwf_file(path)?;
-                let mut wl = Workload::new(path, jobs, 72, 2);
-                if self.jobs > 0 {
-                    wl = wl.truncate(self.jobs);
-                }
-                wl
-            }
+            WorkloadSource::Swf(path) => self.trace_workload(path, crate::trace::TraceFormat::Swf)?,
+            WorkloadSource::Gwf(path) => self.trace_workload(path, crate::trace::TraceFormat::Gwf)?,
+            WorkloadSource::Stf(path) => self.trace_workload(path, crate::trace::TraceFormat::Stf)?,
         };
         if let Some(n) = self.nodes {
             w.nodes = n;
@@ -445,6 +453,31 @@ impl ExperimentConfig {
             }
         }
         Ok(w.drop_infeasible())
+    }
+
+    /// Load a trace file eagerly. Text formats use the scalar line
+    /// parsers unless `fast_parse` is set; `.stf` always goes through
+    /// the byte scanner and takes its machine from the file header.
+    /// Either way the job sequence is identical (the parity contract).
+    fn trace_workload(&self, path: &str, format: crate::trace::TraceFormat) -> Result<Workload> {
+        use crate::trace::TraceFormat;
+        let (jobs, (nodes, cores)) = if self.fast_parse || format == TraceFormat::Stf {
+            let trace = crate::trace::FastTrace::open_as(path, format)?;
+            let machine = trace.machine();
+            (trace.parse()?, machine)
+        } else {
+            let jobs = match format {
+                TraceFormat::Swf => crate::trace::swf::load_swf_file(path)?,
+                TraceFormat::Gwf => crate::trace::gwf::load_gwf_file(path)?,
+                TraceFormat::Stf => unreachable!("stf is routed to the byte scanner above"),
+            };
+            (jobs, format.default_machine())
+        };
+        let mut wl = Workload::new(path, jobs, nodes, cores);
+        if self.jobs > 0 {
+            wl = wl.truncate(self.jobs);
+        }
+        Ok(wl)
     }
 }
 
@@ -543,6 +576,24 @@ mod tests {
     #[test]
     fn swf_requires_path() {
         assert!(ExperimentConfig::parse(r#"{"workload": {"kind": "swf"}}"#).is_err());
+        assert!(ExperimentConfig::parse(r#"{"workload": {"kind": "stf"}}"#).is_err());
+    }
+
+    #[test]
+    fn stf_and_fast_parse_roundtrip() {
+        let c = ExperimentConfig::parse(
+            r#"{"workload": {"kind": "stf", "path": "t.stf", "fast_parse": true}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.source, WorkloadSource::Stf("t.stf".to_string()));
+        assert!(c.fast_parse);
+        let back = ExperimentConfig::parse(&c.to_json().to_pretty()).unwrap();
+        assert_eq!(back.source, c.source);
+        assert!(back.fast_parse);
+        // Default: scalar parsing, not emitted.
+        let d = ExperimentConfig::parse("{}").unwrap();
+        assert!(!d.fast_parse);
+        assert!(d.to_json().get("workload").unwrap().get("fast_parse").is_none());
     }
 
     const FAULTY: &str = r#"{

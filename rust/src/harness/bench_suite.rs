@@ -21,7 +21,9 @@ use crate::sched::{
     ArrivalOrder, ConservativeScheduler, Policy, RoundScratch, RunningJob, SchedInput, Scheduler,
 };
 use crate::sim::{run_policy, Simulation};
-use crate::trace::{stream_trace_file, Das2Model, SdscSp2Model, Workload};
+use crate::trace::{
+    parse_gwf, parse_swf, stream_trace_file, Das2Model, FastTrace, SdscSp2Model, Workload,
+};
 use crate::util::bench::{section, Bench};
 use std::cell::RefCell;
 use std::io::Write as _;
@@ -322,6 +324,126 @@ fn streamed_swf_case(b: &mut Bench, n: usize) {
     let _ = std::fs::remove_file(&path);
 }
 
+/// The trace-ingestion tier in isolation: one synthetic workload
+/// written as SWF and GWF text and converted to binary stf, then parsed
+/// end to end (file read included) by each reader — the scalar line
+/// parsers, the zero-copy byte scanner, and the stf record decoder. No
+/// simulation runs, so the cases measure pure ingestion cost; the
+/// differential suite (`tests/prop_fastparse.rs`) guarantees all paths
+/// yield the identical job sequence. Prints the stf-vs-scalar speedup —
+/// the ratio the ingestion-tier acceptance bar (>= 3x) tracks.
+fn ingest_cases(b: &mut Bench, n: usize) {
+    let tag = if n >= 1_000_000 {
+        format!("{}m", n / 1_000_000)
+    } else {
+        format!("{}k", n / 1_000)
+    };
+    let dir = std::env::temp_dir();
+    let swf_path = dir.join(format!("sst_sched_bench_ingest_{n}.swf"));
+    let gwf_path = dir.join(format!("sst_sched_bench_ingest_{n}.gwf"));
+    let stf_path = dir.join(format!("sst_sched_bench_ingest_{n}.stf"));
+    {
+        let f = std::fs::File::create(&swf_path).expect("create ingest bench swf");
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "; synthetic ingestion bench trace ({n} jobs)").unwrap();
+        let mut submit = 0u64;
+        for i in 0..n as u64 {
+            submit += i % 7;
+            let cores = 1 + (i % 16);
+            let run = 60 + (i % 97) * 30;
+            let est = run + (i % 5) * 60;
+            writeln!(
+                w,
+                "{} {} -1 {} {} -1 -1 {} {} -1 1 {} {} -1 -1 -1 -1 -1",
+                i + 1,
+                submit,
+                run,
+                cores,
+                cores,
+                est,
+                i % 100,
+                i % 10
+            )
+            .unwrap();
+        }
+    }
+    {
+        let f = std::fs::File::create(&gwf_path).expect("create ingest bench gwf");
+        let mut w = std::io::BufWriter::new(f);
+        writeln!(w, "# synthetic ingestion bench trace ({n} jobs)").unwrap();
+        let mut submit = 0u64;
+        for i in 0..n as u64 {
+            submit += i % 7;
+            let cores = 1 + (i % 16);
+            let run = 60 + (i % 97) * 30;
+            let est = run + (i % 5) * 60;
+            writeln!(
+                w,
+                "{} {} 0 {}.0 {} -1 -1 {} {} -1 1 {} {} 14 -1",
+                i + 1,
+                submit,
+                run,
+                cores,
+                cores,
+                est,
+                i % 100,
+                i % 10
+            )
+            .unwrap();
+        }
+    }
+    let st = crate::trace::stf::convert_trace_file(
+        &swf_path.to_string_lossy(),
+        &stf_path.to_string_lossy(),
+    )
+    .expect("convert ingest bench trace");
+    assert_eq!(st.records as usize, n, "conversion lost records");
+
+    let path = swf_path.to_string_lossy().to_string();
+    let scalar = b
+        .case(&format!("ingest/swf-{tag}-jobs/scalar"), move || {
+            let text = std::fs::read_to_string(&path).expect("read bench swf");
+            let jobs = parse_swf(&text).expect("bench swf parses");
+            assert_eq!(jobs.len(), n, "scalar swf parse lost records");
+            jobs.len()
+        })
+        .median();
+    let path = swf_path.to_string_lossy().to_string();
+    b.case(&format!("ingest/swf-{tag}-jobs/fast"), move || {
+        let jobs = FastTrace::open(&path).and_then(|t| t.parse()).expect("bench swf scans");
+        assert_eq!(jobs.len(), n, "fast swf parse lost records");
+        jobs.len()
+    });
+    let path = gwf_path.to_string_lossy().to_string();
+    b.case(&format!("ingest/gwf-{tag}-jobs/scalar"), move || {
+        let text = std::fs::read_to_string(&path).expect("read bench gwf");
+        let jobs = parse_gwf(&text).expect("bench gwf parses");
+        assert_eq!(jobs.len(), n, "scalar gwf parse lost records");
+        jobs.len()
+    });
+    let path = gwf_path.to_string_lossy().to_string();
+    b.case(&format!("ingest/gwf-{tag}-jobs/fast"), move || {
+        let jobs = FastTrace::open(&path).and_then(|t| t.parse()).expect("bench gwf scans");
+        assert_eq!(jobs.len(), n, "fast gwf parse lost records");
+        jobs.len()
+    });
+    let path = stf_path.to_string_lossy().to_string();
+    let stf = b
+        .case(&format!("ingest/stf-{tag}-jobs"), move || {
+            let jobs = FastTrace::open(&path).and_then(|t| t.parse()).expect("bench stf decodes");
+            assert_eq!(jobs.len(), n, "stf decode lost records");
+            jobs.len()
+        })
+        .median();
+    println!(
+        "  -> stf decode vs scalar swf parse: {:.1}x",
+        scalar.as_secs_f64() / stf.as_secs_f64().max(1e-12)
+    );
+    let _ = std::fs::remove_file(&swf_path);
+    let _ = std::fs::remove_file(&gwf_path);
+    let _ = std::fs::remove_file(&stf_path);
+}
+
 /// Sharded federation engine (Fig 5 on real cores): one DAS-2
 /// federation, the same trace, at 1/2/4 shards — the speedup of the
 /// 4-shard case over the 1-shard case is the paper's multi-core scaling
@@ -406,6 +528,9 @@ pub fn engine_throughput_suite(smoke: bool) -> Bench {
 
     section("streamed trace ingestion (constant-memory scale path)");
     streamed_swf_case(&mut b, if smoke { 20_000 } else { 1_000_000 });
+
+    section("trace-ingestion tier (scalar vs zero-copy vs binary stf)");
+    ingest_cases(&mut b, if smoke { 100_000 } else { 1_000_000 });
 
     section("sharded federation engine (multi-domain PDES)");
     sharded_federation_cases(&mut b, if smoke { 8_000 } else { 25_000 });

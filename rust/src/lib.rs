@@ -76,7 +76,7 @@
 //!   New outputs: preemption/requeue/failure/repair counts, lost and
 //!   checkpointed work (core-seconds), and goodput-based effective
 //!   utilization (see `sim::SimReport`).
-//! * **scale path** (million-job throughput): three coordinated pieces
+//! * **scale path** (million-job throughput): four coordinated pieces
 //!   keep single-rank runs fast and bounded-memory at archive scale.
 //!   (1) *Streaming ingestion* — [`trace::JobStream`] parses one SWF/GWF
 //!   record at a time off any `BufRead` (the eager `parse_swf`/
@@ -87,21 +87,35 @@
 //!   O(trace); `with_retain_completed(false)` drops per-job records AND
 //!   the unbounded per-event metric series, keeping scalar aggregates
 //!   (`SimReport::completed_count`, `mean_wait_overall`, incremental
-//!   time-weighted utilization/goodput means). (2) *Auto-horizon* —
-//!   `planning.horizon`
+//!   time-weighted utilization/goodput means). (2) *Ingestion tier* —
+//!   when even per-line text parsing is the limiter, `--fast-parse`
+//!   switches text traces to [`trace::fast`]: one loaded buffer, SWAR
+//!   newline splitting, branchless ASCII numeric parsing, zero
+//!   per-record allocations; and `sst-sched convert` re-encodes any
+//!   trace as the binary [`trace::stf`] format (fixed 32-byte records,
+//!   submit-sorted checked on write), whose reader is a cast-free field
+//!   decode — the format the bench and serve paths prefer. *Parity
+//!   contract*: scanner and scalar parser yield the identical job
+//!   sequence and identical first-error position (line + byte offset),
+//!   enforced by the differential suite in `tests/prop_fastparse.rs`
+//!   and a cross-format run-fingerprint test — so use text for
+//!   interchange, `--fast-parse` for big text replays, stf for repeated
+//!   replay at scale, and trust the results to be bit-identical either
+//!   way. (3) *Auto-horizon* — `planning.horizon`
 //!   accepts `"auto"` ([`sim::Horizon::Auto`]): exact planning while the
 //!   queue is shallow, and at deep queues the timeline clamp is derived
 //!   from live queue depth and the median runtime estimate each resync,
 //!   bounding breakpoint count without a hand-tuned tick value.
-//!   (3) *Allocation-free rounds* — [`sched::RoundScratch`], owned by
+//!   (4) *Allocation-free rounds* — [`sched::RoundScratch`], owned by
 //!   the scheduler component and threaded through `SchedInput::scratch`,
 //!   hosts the order views, backfill candidate columns and the scratch
 //!   plan (overwritten via `AvailabilityProfile::copy_from`), so
 //!   steady-state dispatch rounds reuse buffers instead of allocating.
 //!   The numbers are durable: `sst-sched bench [--smoke]` runs the
 //!   engine_throughput suite (including a million-job streamed-SWF case
-//!   in full mode, and ladder-vs-heap event-queue cases at 100k smoke /
-//!   1M full over mixed near/far horizons) and writes
+//!   in full mode, ladder-vs-heap event-queue cases at 100k smoke /
+//!   1M full over mixed near/far horizons, and `ingest/*` cases that
+//!   time scalar vs fast vs stf parsing of the same trace) and writes
 //!   `BENCH_engine.json` — schema
 //!   `sst-sched-bench-v1`: `{schema, suite, smoke, cases: [{name, runs,
 //!   median_ns, mean_ns, min_ns, p10_ns, p90_ns}]}` — which CI uploads

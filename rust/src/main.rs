@@ -2,10 +2,12 @@
 //! simulator (see README.md for a tour).
 //!
 //! ```text
-//! sst-sched run   [--workload das2|sdsc-sp2] [--trace f.swf|f.gwf]
+//! sst-sched run   [--workload das2|sdsc-sp2] [--trace f.swf|f.gwf|f.stf]
 //!                 [--jobs N] [--policy P] [--accel native|xla]
 //!                 [--ranks R] [--lookahead S] [--seed S]
+//!                 [--fast-parse]              # zero-copy trace ingestion
 //!                 [--config experiment.json]
+//! sst-sched convert <in.swf|in.gwf> <out.stf> # re-encode a trace as binary stf
 //! sst-sched fig   3a|3b|4a|4b|5a|5b|6|7       # regenerate a paper figure
 //! sst-sched workflow --spec wf.json | --gen sipht|montage|epigenomics|...
 //! sst-sched trace-info --trace f.swf|--workload das2 [--jobs N]
@@ -29,8 +31,9 @@ const USAGE: &str = "\
 sst-sched — scalable HPC job scheduling & resource management simulator
 
 USAGE:
-  sst-sched run [--workload das2|sdsc-sp2] [--trace file.swf|file.gwf]
+  sst-sched run [--workload das2|sdsc-sp2] [--trace file.swf|file.gwf|file.stf]
                 [--stream]  # constant-memory trace ingestion (--trace only)
+                [--fast-parse]  # zero-copy byte-scanner ingestion (--trace only)
                 [--jobs N] [--policy fcfs|sjf|ljf|fcfs-bestfit|fcfs-backfill|cons-backfill]
                 [--order arrival|shortest|longest|fair-share]  # queue ordering
                 [--half-life TICKS]  # fair-share usage-decay half-life
@@ -48,6 +51,8 @@ USAGE:
                 # policy x preemption-mode comparison on one failure trace
   sst-sched bench [--smoke] [--out BENCH_engine.json]
                 # engine_throughput suite -> machine-readable perf JSON
+  sst-sched convert <in.swf|in.gwf|in.stf> <out.stf>
+                # re-encode any readable trace as compact binary stf
   sst-sched fig <3a|3b|4a|4b|5a|5b|6|7> [--jobs N] [--seed S]
   sst-sched workflow (--spec wf.json | --gen sipht|montage|galactic|
                       epigenomics|cybershake|ligo) [--scale K] [--cpu C]
@@ -71,6 +76,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
     match cmd {
         "run" => cmd_run(&args),
         "bench" => cmd_bench(&args),
+        "convert" => cmd_convert(&args),
         "faults" => cmd_faults(&args),
         "fig" => cmd_fig(&args),
         "workflow" => cmd_workflow(&args),
@@ -108,10 +114,13 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
         None => ExperimentConfig::default(),
     };
     if let Some(tr) = args.get("trace") {
-        cfg.source = if tr.ends_with(".gwf") {
-            WorkloadSource::Gwf(tr.to_string())
-        } else {
-            WorkloadSource::Swf(tr.to_string())
+        // Case-insensitive extension routing — the same
+        // `TraceFormat::from_path` rule every trace opener applies, so
+        // `DAS2.GWF` no longer silently parses as SWF.
+        cfg.source = match sst_sched::trace::TraceFormat::from_path(tr) {
+            sst_sched::trace::TraceFormat::Gwf => WorkloadSource::Gwf(tr.to_string()),
+            sst_sched::trace::TraceFormat::Stf => WorkloadSource::Stf(tr.to_string()),
+            sst_sched::trace::TraceFormat::Swf => WorkloadSource::Swf(tr.to_string()),
         };
         cfg.jobs = 0; // whole trace unless --jobs
     } else if let Some(w) = args.get("workload") {
@@ -157,6 +166,9 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     if args.flag("memory-aware") {
         cfg.memory_aware = true;
     }
+    if args.flag("fast-parse") {
+        cfg.fast_parse = true;
+    }
     // Fault/preemption knobs (fault subsystem).
     cfg.faults.mtbf = args.f64_or("mtbf", cfg.faults.mtbf)?;
     cfg.faults.mttr = args.f64_or("mttr", cfg.faults.mttr)?;
@@ -201,6 +213,34 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Re-encode any readable trace (SWF/GWF text, or stf itself) as the
+/// compact binary stf format — the cheapest format to replay (fixed
+/// 32-byte records, no text parsing; see `trace::stf`). Conversion
+/// streams through the byte scanner and checks the submit-sorted
+/// invariant on every record, so a written stf file is replayable by
+/// construction.
+fn cmd_convert(args: &Args) -> Result<()> {
+    let usage = "usage: sst-sched convert <in.swf|in.gwf|in.stf> <out.stf>";
+    let input = args.positional.get(1).cloned().context(usage)?;
+    let output = args.positional.get(2).cloned().context(usage)?;
+    args.reject_unknown()?;
+    if sst_sched::trace::TraceFormat::from_path(&output) != sst_sched::trace::TraceFormat::Stf {
+        bail!("convert writes stf; the output must end in .stf (got {output:?})");
+    }
+    let t0 = std::time::Instant::now();
+    let st = sst_sched::trace::stf::convert_trace_file(&input, &output)?;
+    println!(
+        "wrote {}: {} records, {} bytes, machine {} nodes x {} cores ({:.1} ms)",
+        output,
+        st.records,
+        st.bytes,
+        st.machine.0,
+        st.machine.1,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
 /// Apply every config knob shared by the eager and streamed run paths —
 /// one chain, so a future knob cannot silently apply to only one of
 /// them.
@@ -227,9 +267,8 @@ fn configure_sim(sim: Simulation, cfg: &ExperimentConfig) -> Simulation {
 /// (scalar aggregates survive), which is what makes million-job traces
 /// practical.
 fn cmd_run_streamed(cfg: &ExperimentConfig) -> Result<()> {
-    let (path, def_nodes, def_cores) = match &cfg.source {
-        WorkloadSource::Swf(p) => (p.clone(), 128usize, 1u64),
-        WorkloadSource::Gwf(p) => (p.clone(), 72usize, 2u64),
+    let path = match &cfg.source {
+        WorkloadSource::Swf(p) | WorkloadSource::Gwf(p) | WorkloadSource::Stf(p) => p.clone(),
         _ => bail!("--stream needs --trace FILE (streaming reads a trace incrementally)"),
     };
     if cfg.ranks > 1 {
@@ -252,18 +291,26 @@ fn cmd_run_streamed(cfg: &ExperimentConfig) -> Result<()> {
              + 4 x mttr slack"
         );
     }
+    // One opener for every format: `.stf` and `--fast-parse` take the
+    // byte scanner, plain text takes the scalar line stream; either way
+    // an stf trace's machine comes from its header, text formats from
+    // the format default.
+    let (raw_stream, (def_nodes, def_cores)) =
+        sst_sched::trace::open_trace_stream_with_machine(&path, cfg.fast_parse)?;
     let nodes = cfg.nodes.unwrap_or(def_nodes);
     let cores = cfg.cores_per_node.unwrap_or(def_cores);
     let take = if cfg.jobs > 0 { cfg.jobs } else { usize::MAX };
     // A mid-stream parse error cannot abort the running simulation, so
     // it ends the stream and is re-raised after the run — a corrupt
-    // trace must fail the command, not exit 0 with partial results.
+    // trace must fail the command, not exit 0 with partial results. The
+    // stored message carries the offending line number and byte offset
+    // (the stream wraps its parse errors with both).
     let ingest_error = std::sync::Arc::new(std::sync::Mutex::new(None::<String>));
     let ingest_flag = ingest_error.clone();
     // Same derived priority bands the eager path applies in
     // build_workload — `--priority-bands` must not be silently ignored.
     let bands = cfg.priority_bands;
-    let stream = sst_sched::trace::stream_trace_file(&path)?
+    let stream = raw_stream
         .map_while(move |r| match r {
             Ok(job) => Some(job),
             Err(e) => {

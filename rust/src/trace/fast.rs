@@ -1,0 +1,586 @@
+//! `trace::fast` — the zero-copy byte-level ingestion path.
+//!
+//! The scalar parsers in [`crate::trace::swf`]/[`crate::trace::gwf`]
+//! pay, per record, a `read_line` into a `String`, a Unicode-aware
+//! `split_whitespace` (one `Vec<&str>` per line), and per-field
+//! `str::parse`. At million-job scale that is the replay bottleneck
+//! (the engine itself has been O(1)/event since the ladder-queue PR).
+//! This module scans the raw trace bytes instead:
+//!
+//! * the whole file is read once into a single buffer (the "slice"
+//!   half of mmap-or-slice; an `mmap` would drop even that copy but
+//!   needs a platform dependency this build intentionally avoids);
+//! * records are split with a hand-rolled SWAR memchr — newline search
+//!   eight bytes at a time via the exact zero-byte trick from Bit
+//!   Twiddling Hacks, no per-line allocation;
+//! * ASCII integer fields parse branchlessly (`v = v*10 + d` with a
+//!   running validity mask), no UTF-8 validation on the hot path.
+//!
+//! **Parity is the contract, not speed.** The fast path must yield the
+//! byte-identical job sequence and the identical first-error position
+//! the scalar parsers produce, which it guarantees three ways:
+//!
+//! 1. the *semantic* half of parsing (which fields become which jobs,
+//!    skip rules, rounding) is the shared `job_from_*_fields`
+//!    functions — the paths can only disagree about tokenization;
+//! 2. anything outside the fast grammar falls back to the scalar code:
+//!    non-ASCII lines re-parse through `parse_*_line` wholesale
+//!    (Unicode whitespace semantics), overlong or non-integer numeric
+//!    tokens re-parse through `str::parse` (exact overflow and float
+//!    rounding semantics, exact error text);
+//! 3. the differential property suite in `tests/prop_fastparse.rs`
+//!    drives both parsers over adversarial generated bodies and
+//!    asserts equality of jobs, order, and error positions.
+//!
+//! `.stf` traces (see [`crate::trace::stf`]) skip all of the above:
+//! their records decode at fixed offsets with no parsing at all. One
+//! [`Scanner::step`] function backs the borrowing and owning
+//! iterators, so eager == streamed holds by construction here exactly
+//! as it does for the scalar [`crate::trace::JobStream`].
+
+use crate::job::Job;
+use crate::trace::stf;
+use crate::trace::stream::TraceFormat;
+use crate::trace::{gwf, swf};
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Most fields any parser consumes from one record (SWF group id is
+/// field 13). Later fields are counted but never sliced.
+const MAX_FIELDS: usize = 13;
+
+/// Find the next `\n` at or after `from`, eight bytes at a time.
+///
+/// Uses the exact zero-byte test `(v - 0x01…01) & !v & 0x80…80` on
+/// `v = word ^ 0x0A…0A`: a high bit survives precisely where a byte of
+/// `v` is zero, so `trailing_zeros()/8` is the first newline in the
+/// word — no false positives, no per-byte loop until the short tail.
+pub(crate) fn memchr_newline(hay: &[u8], from: usize) -> Option<usize> {
+    const LO: u64 = 0x0101_0101_0101_0101;
+    const HI: u64 = 0x8080_8080_8080_8080;
+    const NL: u64 = LO * b'\n' as u64;
+    let mut i = from;
+    while i + 8 <= hay.len() {
+        let w = u64::from_le_bytes(hay[i..i + 8].try_into().unwrap());
+        let x = w ^ NL;
+        let hit = x.wrapping_sub(LO) & !x & HI;
+        if hit != 0 {
+            return Some(i + (hit.trailing_zeros() / 8) as usize);
+        }
+        i += 8;
+    }
+    hay[i..].iter().position(|&b| b == b'\n').map(|p| i + p)
+}
+
+/// ASCII whitespace, byte-for-byte what `char::is_whitespace` accepts
+/// in the ASCII range: space, `\t`, `\n`, vertical tab, form feed,
+/// `\r`.
+#[inline]
+fn is_ascii_ws(b: u8) -> bool {
+    matches!(b, b' ' | b'\t' | b'\n' | 0x0B | 0x0C | b'\r')
+}
+
+/// `str::trim` restricted to ASCII input (the fast path never sees a
+/// non-ASCII line — those fall back to the scalar parser).
+fn trim_ascii(mut line: &[u8]) -> &[u8] {
+    while let Some((&b, rest)) = line.split_first() {
+        if !is_ascii_ws(b) {
+            break;
+        }
+        line = rest;
+    }
+    while let Some((&b, rest)) = line.split_last() {
+        if !is_ascii_ws(b) {
+            break;
+        }
+        line = rest;
+    }
+    line
+}
+
+/// Split on ASCII whitespace runs. Fills `out` with the first
+/// [`MAX_FIELDS`] field slices and returns the *total* field count
+/// (the short-line error reports the exact count).
+fn split_fields<'a>(line: &'a [u8], out: &mut [&'a [u8]; MAX_FIELDS]) -> usize {
+    let mut count = 0;
+    let mut i = 0;
+    while i < line.len() {
+        while i < line.len() && is_ascii_ws(line[i]) {
+            i += 1;
+        }
+        if i >= line.len() {
+            break;
+        }
+        let start = i;
+        while i < line.len() && !is_ascii_ws(line[i]) {
+            i += 1;
+        }
+        if count < MAX_FIELDS {
+            out[count] = &line[start..i];
+        }
+        count += 1;
+    }
+    count
+}
+
+/// Branchless accumulate of 1–18 ASCII digits. 18 digits can never
+/// overflow a u64, so the only failure mode is a non-digit byte —
+/// tracked with a validity mask instead of a per-byte branch.
+#[inline]
+fn parse_u64_digits(digits: &[u8]) -> Option<u64> {
+    let mut v: u64 = 0;
+    let mut ok = !digits.is_empty();
+    for &b in digits {
+        let d = b.wrapping_sub(b'0');
+        ok &= d <= 9;
+        v = v.wrapping_mul(10).wrapping_add(u64::from(d));
+    }
+    if ok {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+/// Split an optional ASCII sign off a numeric token.
+#[inline]
+fn split_sign(tok: &[u8]) -> (bool, &[u8]) {
+    match tok.first() {
+        Some(b'-') => (true, &tok[1..]),
+        Some(b'+') => (false, &tok[1..]),
+        _ => (false, tok),
+    }
+}
+
+/// Parse one i64 field. Fast grammar `[+-]?[0-9]{1,18}` (always fits);
+/// anything else — overlong digit runs, junk, empty — takes the cold
+/// path through `str::parse::<i64>` so overflow semantics and the
+/// error text are *exactly* the scalar parser's.
+fn parse_i64_tok(tok: &[u8], kind: &str, lineno: usize, field: usize) -> Result<i64> {
+    let (neg, digits) = split_sign(tok);
+    if (1..=18).contains(&digits.len()) {
+        if let Some(v) = parse_u64_digits(digits) {
+            let v = v as i64;
+            return Ok(if neg { -v } else { v });
+        }
+    }
+    let s = std::str::from_utf8(tok).expect("fast path only tokenizes ASCII lines");
+    s.parse::<i64>()
+        .with_context(|| format!("{kind} line {lineno}: field {field} = {s:?}"))
+}
+
+/// Parse one f64 field. Fast grammar: pure integers of ≤ 15 digits —
+/// below 2^53 every one is exactly representable, so `u64 as f64`
+/// produces the bit the decimal float parser would. Any fractional,
+/// exponent, or overlong token takes `str::parse::<f64>` for exact
+/// rounding parity.
+fn parse_f64_tok(tok: &[u8], lineno: usize, field: usize) -> Result<f64> {
+    let (neg, digits) = split_sign(tok);
+    if (1..=15).contains(&digits.len()) {
+        if let Some(v) = parse_u64_digits(digits) {
+            let v = v as f64;
+            return Ok(if neg { -v } else { v });
+        }
+    }
+    let s = std::str::from_utf8(tok).expect("fast path only tokenizes ASCII lines");
+    s.parse::<f64>()
+        .with_context(|| format!("gwf line {lineno}: field {field} = {s:?}"))
+}
+
+/// Fast SWF line body (already ASCII-trimmed, non-comment, non-blank).
+fn parse_swf_fast(line: &[u8], lineno: usize) -> Result<Option<Job>> {
+    let mut f: [&[u8]; MAX_FIELDS] = [&[]; MAX_FIELDS];
+    let n = split_fields(line, &mut f);
+    if n < 11 {
+        bail!("swf line {}: expected >= 11 fields, got {}", lineno, n);
+    }
+    let g = |idx: usize| parse_i64_tok(f[idx], "swf", lineno, idx + 1);
+    let id = g(0)?;
+    let submit = g(1)?;
+    let run = g(3)?;
+    let used_procs = g(4)?;
+    let req_procs = g(7)?;
+    let req_time = g(8)?;
+    let req_mem = g(9)?;
+    let user = if n > 11 { g(11)? } else { -1 };
+    let group = if n > 12 { g(12)? } else { -1 };
+    Ok(swf::job_from_swf_fields(id, submit, run, used_procs, req_procs, req_time, req_mem, user, group))
+}
+
+/// Fast GWF line body (already ASCII-trimmed, non-comment, non-blank).
+fn parse_gwf_fast(line: &[u8], lineno: usize) -> Result<Option<Job>> {
+    let mut f: [&[u8]; MAX_FIELDS] = [&[]; MAX_FIELDS];
+    let n = split_fields(line, &mut f);
+    if n < 13 {
+        bail!("gwf line {}: expected >= 13 fields, got {}", lineno, n);
+    }
+    let g = |idx: usize| parse_f64_tok(f[idx], lineno, idx + 1);
+    let id = g(0)?;
+    let submit = g(1)?;
+    let run = g(3)?;
+    let nproc = g(4)?;
+    let req_n = g(7)?;
+    let req_time = g(8)?;
+    let req_mem = g(9)?;
+    let user = g(11)?;
+    let group = g(12)?;
+    Ok(gwf::job_from_gwf_fields(id, submit, run, nproc, req_n, req_time, req_mem, user, group))
+}
+
+/// Parse one raw text line (no trailing `\n`; a CRLF's `\r` is still
+/// attached and trimmed here). Pure-ASCII lines take the byte path;
+/// anything with a non-ASCII byte re-parses through the scalar line
+/// parser so Unicode whitespace/digit semantics stay authoritative.
+pub(crate) fn parse_text_record(raw: &[u8], lineno: usize, format: TraceFormat) -> Result<Option<Job>> {
+    if !raw.is_ascii() {
+        let s = std::str::from_utf8(raw)
+            .map_err(|_| anyhow!("trace line {lineno}: invalid UTF-8"))?;
+        return match format {
+            TraceFormat::Swf => swf::parse_swf_line(s, lineno),
+            TraceFormat::Gwf => gwf::parse_gwf_line(s, lineno),
+            TraceFormat::Stf => bail!("stf is binary; it has no text lines"),
+        };
+    }
+    let line = trim_ascii(raw);
+    if line.is_empty() {
+        return Ok(None);
+    }
+    match format {
+        TraceFormat::Swf if line[0] == b';' => Ok(None),
+        TraceFormat::Swf => parse_swf_fast(line, lineno),
+        TraceFormat::Gwf if line[0] == b'#' => Ok(None),
+        TraceFormat::Gwf => parse_gwf_fast(line, lineno),
+        TraceFormat::Stf => bail!("stf is binary; it has no text lines"),
+    }
+}
+
+/// Cursor over a trace body. One `step` function drives both the
+/// borrowing [`ByteRecordSource`] and the owning [`FastJobStream`], so
+/// the two cannot disagree.
+pub(crate) struct Scanner {
+    pos: usize,
+    lineno: usize,
+}
+
+impl Scanner {
+    pub(crate) fn new(body_start: usize) -> Scanner {
+        Scanner { pos: body_start, lineno: 0 }
+    }
+
+    /// Yield the next job, a first error (text formats: wrapped with
+    /// the 1-based line number and the line's byte offset, the same
+    /// envelope the scalar [`crate::trace::JobStream`] applies), or
+    /// `None` at end of input. stf records cannot fail here — image
+    /// validation at open time already checked length, and every bit
+    /// pattern is a legal field value.
+    pub(crate) fn step(&mut self, bytes: &[u8], format: TraceFormat) -> Option<Result<Job>> {
+        if format == TraceFormat::Stf {
+            if self.pos >= bytes.len() {
+                return None;
+            }
+            let rec = &bytes[self.pos..self.pos + stf::RECORD_BYTES];
+            self.pos += stf::RECORD_BYTES;
+            return Some(Ok(stf::decode_record(rec)));
+        }
+        while self.pos < bytes.len() {
+            let start = self.pos;
+            let end = memchr_newline(bytes, start).unwrap_or(bytes.len());
+            self.pos = end + 1;
+            self.lineno += 1;
+            match parse_text_record(&bytes[start..end], self.lineno, format) {
+                Ok(None) => {}
+                Ok(Some(job)) => return Some(Ok(job)),
+                Err(e) => {
+                    return Some(Err(e.context(format!(
+                        "trace line {} at byte offset {}",
+                        self.lineno, start
+                    ))));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// A trace loaded as one byte buffer, ready for zero-copy scanning.
+pub struct FastTrace {
+    name: String,
+    format: TraceFormat,
+    bytes: Vec<u8>,
+    machine: (usize, u64),
+}
+
+impl FastTrace {
+    /// Read `path` into memory, detecting the format from the
+    /// extension. `.stf` images are validated up front (magic, version,
+    /// exact length) and carry their machine in the header; text
+    /// formats use the format's default machine.
+    pub fn open(path: &str) -> Result<FastTrace> {
+        FastTrace::open_as(path, TraceFormat::from_path(path))
+    }
+
+    /// Like [`FastTrace::open`] but with the format declared by the
+    /// caller (a config's `workload.kind` wins over the extension).
+    pub fn open_as(path: &str, format: TraceFormat) -> Result<FastTrace> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading trace file {path:?}"))?;
+        FastTrace::from_bytes(path, format, bytes)
+    }
+
+    /// Wrap an in-memory trace image (tests, benches).
+    pub fn from_bytes(name: &str, format: TraceFormat, bytes: Vec<u8>) -> Result<FastTrace> {
+        let machine = if format == TraceFormat::Stf {
+            let header = stf::validate(&bytes).with_context(|| format!("validating {name:?}"))?;
+            header.machine.unwrap_or_else(|| format.default_machine())
+        } else {
+            format.default_machine()
+        };
+        Ok(FastTrace { name: name.to_string(), format, bytes, machine })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn format(&self) -> TraceFormat {
+        self.format
+    }
+
+    /// `(nodes, cores_per_node)` this trace targets.
+    pub fn machine(&self) -> (usize, u64) {
+        self.machine
+    }
+
+    /// Trace image size (observability; bench reporting).
+    pub fn len_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    fn body_start(&self) -> usize {
+        if self.format == TraceFormat::Stf {
+            stf::HEADER_BYTES
+        } else {
+            0
+        }
+    }
+
+    /// Borrowing record iterator over the loaded bytes.
+    pub fn records(&self) -> ByteRecordSource<'_> {
+        ByteRecordSource {
+            bytes: &self.bytes,
+            format: self.format,
+            scanner: Scanner::new(self.body_start()),
+            yielded: 0,
+            done: false,
+        }
+    }
+
+    /// Eager parse: collect every record (first error aborts) — the
+    /// fast twin of `parse_swf`/`parse_gwf`/an stf body decode.
+    pub fn parse(&self) -> Result<Vec<Job>> {
+        self.records().collect()
+    }
+
+    /// Convert into an owning stream for
+    /// [`crate::sim::Simulation::with_job_stream`] (which needs
+    /// `'static + Send`).
+    pub fn into_stream(self) -> FastJobStream {
+        let body_start = self.body_start();
+        FastJobStream {
+            bytes: self.bytes,
+            format: self.format,
+            scanner: Scanner::new(body_start),
+            yielded: 0,
+            done: false,
+        }
+    }
+}
+
+/// Borrowing iterator over a [`FastTrace`]'s records: yields `Ok(job)`
+/// per valid record, skips comments/blanks/cancelled records silently,
+/// and yields one `Err` (then ends) on the first broken line — the
+/// same contract as the scalar [`crate::trace::JobStream`].
+pub struct ByteRecordSource<'a> {
+    bytes: &'a [u8],
+    format: TraceFormat,
+    scanner: Scanner,
+    yielded: u64,
+    done: bool,
+}
+
+impl ByteRecordSource<'_> {
+    /// Records yielded so far (observability parity with
+    /// [`crate::trace::JobStream::yielded`]).
+    pub fn yielded(&self) -> u64 {
+        self.yielded
+    }
+}
+
+impl Iterator for ByteRecordSource<'_> {
+    type Item = Result<Job>;
+
+    fn next(&mut self) -> Option<Result<Job>> {
+        if self.done {
+            return None;
+        }
+        match self.scanner.step(self.bytes, self.format) {
+            Some(Ok(job)) => {
+                self.yielded += 1;
+                Some(Ok(job))
+            }
+            Some(Err(e)) => {
+                self.done = true;
+                Some(Err(e))
+            }
+            None => {
+                self.done = true;
+                None
+            }
+        }
+    }
+}
+
+/// Owning variant of [`ByteRecordSource`] — same `Scanner`, same
+/// record-for-record behavior, but `'static + Send` so it can feed
+/// [`crate::sim::Simulation::with_job_stream`].
+pub struct FastJobStream {
+    bytes: Vec<u8>,
+    format: TraceFormat,
+    scanner: Scanner,
+    yielded: u64,
+    done: bool,
+}
+
+impl FastJobStream {
+    /// Records yielded so far.
+    pub fn yielded(&self) -> u64 {
+        self.yielded
+    }
+}
+
+impl Iterator for FastJobStream {
+    type Item = Result<Job>;
+
+    fn next(&mut self) -> Option<Result<Job>> {
+        if self.done {
+            return None;
+        }
+        match self.scanner.step(&self.bytes, self.format) {
+            Some(Ok(job)) => {
+                self.yielded += 1;
+                Some(Ok(job))
+            }
+            Some(Err(e)) => {
+                self.done = true;
+                Some(Err(e))
+            }
+            None => {
+                self.done = true;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::time::{SimDuration, SimTime};
+
+    #[test]
+    fn memchr_matches_naive_search() {
+        let mut hay = Vec::new();
+        for i in 0..200u8 {
+            hay.push(if i % 7 == 0 { b'\n' } else { b'a' + (i % 23) });
+        }
+        hay.extend_from_slice(b"tail without newline");
+        let mut from = 0;
+        loop {
+            let naive = hay[from..].iter().position(|&b| b == b'\n').map(|p| from + p);
+            assert_eq!(memchr_newline(&hay, from), naive, "from={from}");
+            match naive {
+                Some(p) => from = p + 1,
+                None => break,
+            }
+        }
+        assert_eq!(memchr_newline(b"", 0), None);
+        assert_eq!(memchr_newline(b"\n", 0), Some(0));
+        assert_eq!(memchr_newline(b"abcdefg\n", 0), Some(7));
+    }
+
+    #[test]
+    fn int_parse_matches_std() {
+        for s in ["0", "-1", "42", "+7", "123456789012345678", "999999999999999999"] {
+            let fast = parse_i64_tok(s.as_bytes(), "swf", 1, 1).unwrap();
+            assert_eq!(fast, s.parse::<i64>().unwrap(), "{s}");
+        }
+        // Cold path: overlong but valid (19 digits), and junk.
+        let big = "9223372036854775807"; // i64::MAX, 19 digits
+        assert_eq!(parse_i64_tok(big.as_bytes(), "swf", 1, 1).unwrap(), i64::MAX);
+        for bad in ["", "-", "+", "x", "1x", "12345678901234567890123"] {
+            assert!(parse_i64_tok(bad.as_bytes(), "swf", 1, 1).is_err(), "{bad:?}");
+            assert!(bad.parse::<i64>().is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn float_parse_matches_std() {
+        for s in ["0", "-1", "33", "61.5", "1e3", "999999999999999", "900.0", "-0.5"] {
+            let fast = parse_f64_tok(s.as_bytes(), 1, 1).unwrap();
+            let std = s.parse::<f64>().unwrap();
+            assert_eq!(fast.to_bits(), std.to_bits(), "{s}");
+        }
+        assert!(parse_f64_tok(b"nope", 1, 1).is_err());
+    }
+
+    #[test]
+    fn swf_fast_matches_scalar_on_sample() {
+        let text = "\
+; header\r\n1 0 10 120 4 -1 -1 4 600 -1 1 12 3 -1 -1 -1 -1 -1\n\
+2 30 -1 60 -1 -1 -1 8 100 2048 1 7 1 -1 -1 -1 -1 -1\r\n\
+3 60 5 -1 4 -1 -1 4 600 -1 0 2 1 -1 -1 -1 -1 -1";
+        let trace =
+            FastTrace::from_bytes("t.swf", TraceFormat::Swf, text.as_bytes().to_vec()).unwrap();
+        let fast = trace.parse().unwrap();
+        let scalar = crate::trace::parse_swf(text).unwrap();
+        assert_eq!(fast.len(), scalar.len());
+        for (a, b) in fast.iter().zip(&scalar) {
+            assert_eq!((a.id, a.submit, a.cores, a.runtime), (b.id, b.submit, b.cores, b.runtime));
+        }
+    }
+
+    #[test]
+    fn error_positions_match_scalar() {
+        let text = "1 0 10 120 4 -1 -1 4 600 -1 1 12 3 -1 -1 -1 -1 -1\n1 2 3\n";
+        let trace =
+            FastTrace::from_bytes("t.swf", TraceFormat::Swf, text.as_bytes().to_vec()).unwrap();
+        let fast_err = trace.parse().unwrap_err().to_string();
+        let scalar_err = crate::trace::parse_swf(text).unwrap_err().to_string();
+        assert!(fast_err.contains(&scalar_err), "{fast_err} vs {scalar_err}");
+        assert!(fast_err.contains("trace line 2 at byte offset 50"), "{fast_err}");
+    }
+
+    #[test]
+    fn stream_iterator_ends_after_error() {
+        let text = "bad line here\n";
+        let trace =
+            FastTrace::from_bytes("t.swf", TraceFormat::Swf, text.as_bytes().to_vec()).unwrap();
+        let mut s = trace.into_stream();
+        assert!(s.next().unwrap().is_err());
+        assert!(s.next().is_none());
+    }
+
+    #[test]
+    fn stf_bytes_scan_back_to_jobs() {
+        let jobs = vec![
+            Job::new(1, SimTime(0), 4, 0, SimDuration(100), SimDuration(90), 1, 1),
+            Job::new(2, SimTime(50), 8, 512, SimDuration(200), SimDuration(200), 2, 1),
+        ];
+        let bytes = stf::write_stf(&jobs, Some((128, 1))).unwrap();
+        let trace = FastTrace::from_bytes("t.stf", TraceFormat::Stf, bytes).unwrap();
+        assert_eq!(trace.machine(), (128, 1));
+        let back = trace.parse().unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].id, 1);
+        assert_eq!(back[1].submit, SimTime(50));
+    }
+}

@@ -10,11 +10,46 @@ use crate::core::time::{SimDuration, SimTime};
 use crate::job::Job;
 use anyhow::{bail, Context, Result};
 
+/// Fold the nine numeric GWF fields into a job, or `None` for a
+/// skipped record (cancelled or failed grid submissions with
+/// non-positive runtime/processor counts). The *semantic* half of
+/// record parsing, shared by the scalar [`parse_gwf_line`] and the
+/// byte scanner in [`crate::trace::fast`], so the two ingestion paths
+/// can only disagree about tokenization, never about rounding or
+/// record skipping.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn job_from_gwf_fields(
+    id: f64,
+    submit: f64,
+    run: f64,
+    nproc: f64,
+    req_n: f64,
+    req_time: f64,
+    req_mem: f64,
+    user: f64,
+    group: f64,
+) -> Option<Job> {
+    let procs = if req_n > 0.0 { req_n } else { nproc };
+    if run <= 0.0 || procs <= 0.0 || id < 0.0 || submit < 0.0 {
+        return None;
+    }
+    let est = if req_time > 0.0 { req_time } else { run };
+    Some(Job::new(
+        id as u64,
+        SimTime(submit as u64),
+        procs as u64,
+        req_mem.max(0.0) as u64,
+        SimDuration(est.round() as u64),
+        SimDuration(run.round() as u64),
+        user.max(0.0) as u32,
+        group.max(0.0) as u32,
+    ))
+}
+
 /// Parse one GWF line. `Ok(None)` for comments, blanks and skipped
-/// records (cancelled or failed grid submissions with non-positive
-/// runtime/processor counts); `Err` only for structurally broken lines.
-/// `lineno` is 1-based. Shared by the eager [`parse_gwf`] and the
-/// streaming [`crate::trace::JobStream`].
+/// records (see [`job_from_gwf_fields`]); `Err` only for structurally
+/// broken lines. `lineno` is 1-based. Shared by the eager [`parse_gwf`]
+/// and the streaming [`crate::trace::JobStream`].
 pub fn parse_gwf_line(line: &str, lineno: usize) -> Result<Option<Job>> {
     let line = line.trim();
     if line.is_empty() || line.starts_with('#') {
@@ -38,22 +73,7 @@ pub fn parse_gwf_line(line: &str, lineno: usize) -> Result<Option<Job>> {
     let req_mem = num(9)?;
     let user = num(11)?;
     let group = num(12)?;
-
-    let procs = if req_n > 0.0 { req_n } else { nproc };
-    if run <= 0.0 || procs <= 0.0 || id < 0.0 || submit < 0.0 {
-        return Ok(None);
-    }
-    let est = if req_time > 0.0 { req_time } else { run };
-    Ok(Some(Job::new(
-        id as u64,
-        SimTime(submit as u64),
-        procs as u64,
-        req_mem.max(0.0) as u64,
-        SimDuration(est.round() as u64),
-        SimDuration(run.round() as u64),
-        user.max(0.0) as u32,
-        group.max(0.0) as u32,
-    )))
+    Ok(job_from_gwf_fields(id, submit, run, nproc, req_n, req_time, req_mem, user, group))
 }
 
 /// Parse GWF text into jobs (eager path: a thin collect over

@@ -1,25 +1,44 @@
 //! Workload traces: parsers for the two public archive formats the paper
-//! uses, plus statistically calibrated synthetic generators standing in
-//! for the actual logs (which are not redistributable with this repo —
-//! see DESIGN.md §Substitutions).
+//! uses, a compact binary format for replay at scale, plus statistically
+//! calibrated synthetic generators standing in for the actual logs
+//! (which are not redistributable with this repo — see DESIGN.md
+//! §Substitutions).
 //!
 //! * [`swf`] — Parallel Workloads Archive "Standard Workload Format"
 //!   (SDSC-SP2 log, paper §4.1).
 //! * [`gwf`] — Grid Workloads Archive format (GWA-DAS2 trace, §4.1).
+//! * [`stf`] — this simulator's binary trace format: a 32-byte header
+//!   (magic `SSTF`, version, flags, record count, target machine)
+//!   followed by fixed 32-byte little-endian records (id, submit,
+//!   cores, runtime estimate, runtime, memory, user, group). Written
+//!   submit-sorted by `sst-sched convert`; reading is a cast-free
+//!   field decode with no text parsing at all.
+//! * [`fast`] — the zero-copy byte scanner: SWAR newline splitting and
+//!   branchless ASCII numeric parsing over one loaded buffer, proven
+//!   record-for-record identical to the scalar parsers by the
+//!   differential suite in `tests/prop_fastparse.rs`.
 //! * [`synth`] — DAS-2-like and SDSC-SP2-like generators with the
 //!   published marginals (arrival burstiness, power-of-two sizes,
 //!   heavy-tailed runtimes, over-estimated user runtimes).
 //!
-//! If you have the real logs, `sst-sched run --trace path.swf` parses and
-//! simulates them directly; all experiments fall back to the generators.
+//! If you have the real logs, `sst-sched run --trace path.swf` parses
+//! and simulates them directly (add `--fast-parse` for the byte
+//! scanner); `sst-sched convert in.swf out.stf` re-encodes any text
+//! trace as stf for the cheapest possible replay. All experiments fall
+//! back to the generators.
 
+pub mod fast;
 pub mod gwf;
+pub mod stf;
 pub mod stream;
 pub mod swf;
 pub mod synth;
 
+pub use fast::{ByteRecordSource, FastJobStream, FastTrace};
 pub use gwf::parse_gwf;
-pub use stream::{stream_trace_file, JobStream, TraceFormat};
+pub use stream::{
+    open_trace_stream_with_machine, stream_trace_file, JobStream, TraceFormat,
+};
 pub use swf::{parse_swf, write_swf};
 pub use synth::{das2::Das2Model, sdsc_sp2::SdscSp2Model};
 

@@ -1,0 +1,360 @@
+//! `stf` — the Simulator Trace Format: a compact little-endian binary
+//! encoding of the job fields the simulator actually consumes, built
+//! for the million-job scale path. Reading an stf trace is a straight
+//! field decode at fixed offsets — no line splitting, no integer
+//! parsing, no record skipping — which is why the bench and serve
+//! paths prefer it over SWF/GWF text.
+//!
+//! ## Layout (all integers little-endian)
+//!
+//! 32-byte header:
+//!
+//! | offset | size | field                                   |
+//! |--------|------|-----------------------------------------|
+//! | 0      | 4    | magic `b"SSTF"`                         |
+//! | 4      | 2    | version (currently 1)                   |
+//! | 6      | 2    | flags (bit 0: machine fields are valid) |
+//! | 8      | 8    | record count                            |
+//! | 16     | 4    | machine nodes                           |
+//! | 20     | 4    | machine cores per node                  |
+//! | 24     | 8    | reserved (zero)                         |
+//!
+//! then `count` fixed 32-byte records:
+//!
+//! | offset | size | field       | offset | size | field     |
+//! |--------|------|-------------|--------|------|-----------|
+//! | 0      | 4    | job id      | 16     | 4    | est. runtime |
+//! | 4      | 8    | submit time | 20     | 4    | runtime   |
+//! | 12     | 4    | cores       | 24     | 4    | memory MB |
+//! |        |      |             | 28     | 2+2  | user, group |
+//!
+//! ## Contract
+//!
+//! * **Submit-sorted on write.** [`StfWriter::push`] rejects a record
+//!   whose submit time precedes its predecessor's, so every stf file
+//!   satisfies the archive-sortedness the streaming job source's
+//!   one-record lookahead depends on — checked at conversion time, not
+//!   trusted at replay time.
+//! * **Converter drops what parsers skip.** `sst-sched convert` writes
+//!   only the records the text parsers yield; comments, blanks and
+//!   cancelled entries are gone. The reader therefore replays *every*
+//!   record, and an stf run is job-for-job identical to the text run
+//!   it was converted from (pinned by the cross-format fingerprint
+//!   integration test).
+//! * **Range-checked encode.** Fields are packed into u32/u16 slots;
+//!   encoding errors out (with the job id) rather than truncating when
+//!   a value cannot fit. Derived fields (priority, lifecycle state)
+//!   are not stored — they are recomputed downstream exactly as they
+//!   are for text traces.
+
+use crate::core::time::{SimDuration, SimTime};
+use crate::job::Job;
+use anyhow::{bail, Context, Result};
+use std::io::{Seek, SeekFrom, Write};
+
+/// File magic: the first four bytes of every stf trace.
+pub const MAGIC: [u8; 4] = *b"SSTF";
+/// Format version this reader/writer speaks.
+pub const VERSION: u16 = 1;
+/// Header size in bytes.
+pub const HEADER_BYTES: usize = 32;
+/// Fixed record size in bytes.
+pub const RECORD_BYTES: usize = 32;
+
+/// Header flag: the machine fields (nodes, cores per node) are valid.
+const FLAG_MACHINE: u16 = 1;
+/// Byte offset of the record count within the header (patched by
+/// [`StfWriter::finish`]).
+const COUNT_OFFSET: u64 = 8;
+
+/// Decoded stf header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StfHeader {
+    /// Number of records the body holds.
+    pub count: u64,
+    /// Target machine recorded at conversion time (`nodes`,
+    /// `cores_per_node`); `None` when the producer did not know it.
+    pub machine: Option<(usize, u64)>,
+}
+
+impl StfHeader {
+    /// Encode to the fixed 32-byte on-disk form.
+    pub fn encode(&self) -> [u8; HEADER_BYTES] {
+        let mut h = [0u8; HEADER_BYTES];
+        h[0..4].copy_from_slice(&MAGIC);
+        h[4..6].copy_from_slice(&VERSION.to_le_bytes());
+        let flags = if self.machine.is_some() { FLAG_MACHINE } else { 0 };
+        h[6..8].copy_from_slice(&flags.to_le_bytes());
+        h[8..16].copy_from_slice(&self.count.to_le_bytes());
+        if let Some((nodes, cores)) = self.machine {
+            h[16..20].copy_from_slice(&(nodes as u32).to_le_bytes());
+            h[20..24].copy_from_slice(&(cores as u32).to_le_bytes());
+        }
+        h
+    }
+
+    /// Decode and validate a header prefix (magic, version).
+    pub fn decode(bytes: &[u8]) -> Result<StfHeader> {
+        if bytes.len() < HEADER_BYTES {
+            bail!("stf: file too short for a header ({} bytes, need {HEADER_BYTES})", bytes.len());
+        }
+        if bytes[0..4] != MAGIC {
+            bail!("stf: bad magic {:?} (not an stf trace)", &bytes[0..4]);
+        }
+        let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+        if version != VERSION {
+            bail!("stf: unsupported version {version} (this reader speaks {VERSION})");
+        }
+        let flags = u16::from_le_bytes([bytes[6], bytes[7]]);
+        let count = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        let machine = if flags & FLAG_MACHINE != 0 {
+            let nodes = u32::from_le_bytes(bytes[16..20].try_into().unwrap()) as usize;
+            let cores = u32::from_le_bytes(bytes[20..24].try_into().unwrap()) as u64;
+            Some((nodes, cores))
+        } else {
+            None
+        };
+        Ok(StfHeader { count, machine })
+    }
+}
+
+/// Validate a whole in-memory stf image: header plus an exact-length
+/// body (`count` promised records, nothing more, nothing less — a
+/// truncated download fails here, before any record is decoded).
+/// Returns the header; records start at byte [`HEADER_BYTES`].
+pub fn validate(bytes: &[u8]) -> Result<StfHeader> {
+    let h = StfHeader::decode(bytes)?;
+    let want = HEADER_BYTES as u64 + h.count * RECORD_BYTES as u64;
+    if bytes.len() as u64 != want {
+        bail!(
+            "stf: header promises {} records ({} bytes), file has {} bytes (truncated or trailing garbage)",
+            h.count,
+            want,
+            bytes.len()
+        );
+    }
+    Ok(h)
+}
+
+fn fit_u32(v: u64, what: &str, id: u64) -> Result<u32> {
+    u32::try_from(v)
+        .ok()
+        .with_context(|| format!("stf: job {id}: {what} {v} exceeds the format's u32 slot"))
+}
+
+fn fit_u16(v: u32, what: &str, id: u64) -> Result<u16> {
+    u16::try_from(v)
+        .ok()
+        .with_context(|| format!("stf: job {id}: {what} {v} exceeds the format's u16 slot"))
+}
+
+/// Pack a job's trace-carried fields into one fixed record.
+pub fn encode_record(job: &Job) -> Result<[u8; RECORD_BYTES]> {
+    let mut r = [0u8; RECORD_BYTES];
+    r[0..4].copy_from_slice(&fit_u32(job.id, "job id", job.id)?.to_le_bytes());
+    r[4..12].copy_from_slice(&job.submit.ticks().to_le_bytes());
+    r[12..16].copy_from_slice(&fit_u32(job.cores, "core count", job.id)?.to_le_bytes());
+    r[16..20]
+        .copy_from_slice(&fit_u32(job.est_runtime.ticks(), "runtime estimate", job.id)?.to_le_bytes());
+    r[20..24].copy_from_slice(&fit_u32(job.runtime.ticks(), "runtime", job.id)?.to_le_bytes());
+    r[24..28].copy_from_slice(&fit_u32(job.memory_mb, "memory", job.id)?.to_le_bytes());
+    r[28..30].copy_from_slice(&fit_u16(job.user, "user id", job.id)?.to_le_bytes());
+    r[30..32].copy_from_slice(&fit_u16(job.group, "group id", job.id)?.to_le_bytes());
+    Ok(r)
+}
+
+/// Unpack one fixed record. Cast-free field decode at fixed offsets:
+/// nothing here can fail — image-level validation ([`validate`])
+/// already guaranteed the length, and every bit pattern is a legal
+/// field value.
+pub fn decode_record(rec: &[u8]) -> Job {
+    debug_assert_eq!(rec.len(), RECORD_BYTES);
+    Job::new(
+        u32::from_le_bytes(rec[0..4].try_into().unwrap()) as u64,
+        SimTime(u64::from_le_bytes(rec[4..12].try_into().unwrap())),
+        u32::from_le_bytes(rec[12..16].try_into().unwrap()) as u64,
+        u32::from_le_bytes(rec[24..28].try_into().unwrap()) as u64,
+        SimDuration(u32::from_le_bytes(rec[16..20].try_into().unwrap()) as u64),
+        SimDuration(u32::from_le_bytes(rec[20..24].try_into().unwrap()) as u64),
+        u16::from_le_bytes(rec[28..30].try_into().unwrap()) as u32,
+        u16::from_le_bytes(rec[30..32].try_into().unwrap()) as u32,
+    )
+}
+
+/// Streaming stf writer over any `Write + Seek` sink. Records are
+/// written as they arrive (the trace is never buffered); the header's
+/// record count starts at zero and is patched by [`StfWriter::finish`],
+/// so the converter stays O(1) in memory.
+pub struct StfWriter<W: Write + Seek> {
+    w: W,
+    count: u64,
+    last_submit: Option<u64>,
+}
+
+impl<W: Write + Seek> StfWriter<W> {
+    /// Write the header (count 0 until [`StfWriter::finish`]) and take
+    /// ownership of the sink.
+    pub fn new(mut w: W, machine: Option<(usize, u64)>) -> Result<StfWriter<W>> {
+        let header = StfHeader { count: 0, machine };
+        w.write_all(&header.encode()).context("stf: writing header")?;
+        Ok(StfWriter { w, count: 0, last_submit: None })
+    }
+
+    /// Append one record, enforcing the submit-sorted invariant.
+    pub fn push(&mut self, job: &Job) -> Result<()> {
+        if let Some(prev) = self.last_submit {
+            if job.submit.ticks() < prev {
+                bail!(
+                    "stf: record {} (job {}) breaks the submit-sorted invariant: submit {} < predecessor's {}",
+                    self.count,
+                    job.id,
+                    job.submit.ticks(),
+                    prev
+                );
+            }
+        }
+        self.w
+            .write_all(&encode_record(job)?)
+            .with_context(|| format!("stf: writing record {}", self.count))?;
+        self.last_submit = Some(job.submit.ticks());
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Patch the record count into the header, flush, and return the
+    /// sink plus the count.
+    pub fn finish(mut self) -> Result<(W, u64)> {
+        self.w.seek(SeekFrom::Start(COUNT_OFFSET)).context("stf: seeking to patch the record count")?;
+        self.w.write_all(&self.count.to_le_bytes()).context("stf: patching the record count")?;
+        self.w.flush().context("stf: flushing")?;
+        Ok((self.w, self.count))
+    }
+}
+
+/// Encode a job slice into a complete in-memory stf image (tests,
+/// benches, tools). The jobs must already be submit-sorted.
+pub fn write_stf(jobs: &[Job], machine: Option<(usize, u64)>) -> Result<Vec<u8>> {
+    let mut w = StfWriter::new(std::io::Cursor::new(Vec::new()), machine)?;
+    for j in jobs {
+        w.push(j)?;
+    }
+    let (sink, _) = w.finish()?;
+    Ok(sink.into_inner())
+}
+
+/// What `sst-sched convert` reports.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvertStats {
+    /// Records written (comments/blanks/cancelled entries from a text
+    /// input are already gone).
+    pub records: u64,
+    /// Machine recorded in the output header.
+    pub machine: (usize, u64),
+    /// Output size in bytes.
+    pub bytes: u64,
+}
+
+/// Convert any readable trace (`.swf`/`.gwf` text through the fast
+/// byte scanner, or `.stf` itself) into an stf file. Streaming: O(1)
+/// memory in the trace length on the write side. The output header
+/// records the machine the input format implies, so a bare
+/// `--trace out.stf` run targets the same platform the text run did.
+pub fn convert_trace_file(input: &str, output: &str) -> Result<ConvertStats> {
+    let (stream, machine) = crate::trace::stream::open_trace_stream_with_machine(input, true)?;
+    let file = std::fs::File::create(output)
+        .with_context(|| format!("creating stf output {output:?}"))?;
+    let mut w = StfWriter::new(std::io::BufWriter::new(file), Some(machine))?;
+    for r in stream {
+        let job = r.with_context(|| format!("converting {input:?}"))?;
+        w.push(&job)?;
+    }
+    let (sink, records) = w.finish()?;
+    drop(sink);
+    let bytes = std::fs::metadata(output).map(|m| m.len()).unwrap_or(0);
+    Ok(ConvertStats { records, machine, bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: u64, submit: u64, cores: u64, mem: u64, est: u64, run: u64) -> Job {
+        Job::new(id, SimTime(submit), cores, mem, SimDuration(est), SimDuration(run), 7, 3)
+    }
+
+    #[test]
+    fn header_roundtrips() {
+        for machine in [None, Some((128usize, 16u64))] {
+            let h = StfHeader { count: 42, machine };
+            let back = StfHeader::decode(&h.encode()).unwrap();
+            assert_eq!(back, h);
+        }
+    }
+
+    #[test]
+    fn record_roundtrips_every_field() {
+        let j = job(9_001, 123_456_789, 64, 2_048, 3_600, 2_977);
+        let back = decode_record(&encode_record(&j).unwrap());
+        assert_eq!(back.id, j.id);
+        assert_eq!(back.submit, j.submit);
+        assert_eq!(back.cores, j.cores);
+        assert_eq!(back.memory_mb, j.memory_mb);
+        assert_eq!(back.est_runtime, j.est_runtime);
+        assert_eq!(back.runtime, j.runtime);
+        assert_eq!(back.user, j.user);
+        assert_eq!(back.group, j.group);
+    }
+
+    #[test]
+    fn write_validate_roundtrip() {
+        let jobs = vec![job(1, 0, 4, 0, 100, 90), job(2, 50, 8, 512, 200, 200)];
+        let bytes = write_stf(&jobs, Some((72, 2))).unwrap();
+        assert_eq!(bytes.len(), HEADER_BYTES + 2 * RECORD_BYTES);
+        let h = validate(&bytes).unwrap();
+        assert_eq!(h.count, 2);
+        assert_eq!(h.machine, Some((72, 2)));
+        let j = decode_record(&bytes[HEADER_BYTES..HEADER_BYTES + RECORD_BYTES]);
+        assert_eq!(j.id, 1);
+    }
+
+    #[test]
+    fn unsorted_input_rejected_on_write() {
+        let jobs = vec![job(1, 100, 1, 0, 10, 10), job(2, 50, 1, 0, 10, 10)];
+        let e = write_stf(&jobs, None).unwrap_err().to_string();
+        assert!(e.contains("submit-sorted"), "{e}");
+        assert!(e.contains("job 2"), "{e}");
+    }
+
+    #[test]
+    fn out_of_range_fields_rejected_on_write() {
+        let mut j = job(1, 0, 1, 0, 10, 10);
+        j.cores = u64::from(u32::MAX) + 1;
+        let e = encode_record(&j).unwrap_err().to_string();
+        assert!(e.contains("core count"), "{e}");
+        let mut j = job(1, 0, 1, 0, 10, 10);
+        j.user = u32::from(u16::MAX) + 1;
+        assert!(encode_record(&j).is_err());
+    }
+
+    #[test]
+    fn corrupt_images_rejected() {
+        let jobs = vec![job(1, 0, 1, 0, 10, 10)];
+        let good = write_stf(&jobs, None).unwrap();
+        // Truncated body.
+        assert!(validate(&good[..good.len() - 1]).unwrap_err().to_string().contains("truncated"));
+        // Trailing garbage.
+        let mut long = good.clone();
+        long.push(0);
+        assert!(validate(&long).is_err());
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(validate(&bad).unwrap_err().to_string().contains("magic"));
+        // Future version.
+        let mut v2 = good.clone();
+        v2[4] = 2;
+        assert!(validate(&v2).unwrap_err().to_string().contains("version"));
+        // Short file.
+        assert!(validate(&good[..10]).unwrap_err().to_string().contains("too short"));
+    }
+}

@@ -17,26 +17,51 @@
 //! reordered.
 
 use crate::job::Job;
-use crate::trace::{gwf, swf};
-use anyhow::{Context, Result};
+use crate::trace::{fast, gwf, swf};
+use anyhow::{bail, Context, Result};
 use std::fs::File;
 use std::io::{BufRead, BufReader};
 
-/// Which archive format a stream parses.
+/// Which trace format a path or stream carries.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TraceFormat {
+    /// Standard Workload Format (Parallel Workloads Archive text).
     Swf,
+    /// Grid Workloads Format (Grid Workloads Archive text).
     Gwf,
+    /// Compact binary format (see [`crate::trace::stf`]); always read
+    /// through the byte scanner, never the line parser.
+    Stf,
 }
 
 impl TraceFormat {
-    /// Pick the format from a file name (`.gwf` = GWF, anything else =
-    /// SWF — the same rule the CLI `--trace` flag applies).
+    /// Pick the format from a file name by its extension,
+    /// case-insensitively: `.gwf` = GWF, `.stf` = binary, anything else
+    /// (including the explicit `.swf`) = SWF — the rule the CLI
+    /// `--trace` flag and `sst-sched convert` both apply. Archives ship
+    /// uppercase names (`DAS2.GWF`), which a case-sensitive match used
+    /// to mis-route into the SWF parser.
     pub fn from_path(path: &str) -> TraceFormat {
-        if path.ends_with(".gwf") {
+        let ext = path.rsplit('.').next().unwrap_or("");
+        if ext.eq_ignore_ascii_case("gwf") {
             TraceFormat::Gwf
+        } else if ext.eq_ignore_ascii_case("stf") {
+            TraceFormat::Stf
         } else {
             TraceFormat::Swf
+        }
+    }
+
+    /// Default `(nodes, cores_per_node)` a bare trace of this format
+    /// targets: SWF defaults to the paper's SDSC-SP2 platform (128
+    /// nodes), GWF to the GWA-DAS2 platform (72 dual-core nodes). An
+    /// stf trace normally carries its machine in the header; this is
+    /// only the fallback when the producer did not record one.
+    pub fn default_machine(self) -> (usize, u64) {
+        match self {
+            TraceFormat::Swf => (128, 1),
+            TraceFormat::Gwf => (72, 2),
+            TraceFormat::Stf => (128, 1),
         }
     }
 
@@ -44,6 +69,9 @@ impl TraceFormat {
         match self {
             TraceFormat::Swf => swf::parse_swf_line(line, lineno),
             TraceFormat::Gwf => gwf::parse_gwf_line(line, lineno),
+            TraceFormat::Stf => {
+                bail!("stf is a binary format; open it through trace::fast, not a line stream")
+            }
         }
     }
 }
@@ -57,6 +85,10 @@ pub struct JobStream<R: BufRead> {
     reader: R,
     format: TraceFormat,
     lineno: usize,
+    /// Byte offset of the next unread line — so a mid-stream parse
+    /// error can report *where* in the file it happened, not just on
+    /// which line.
+    offset: u64,
     /// Reused line buffer — the only per-record allocation high-water
     /// mark in the stream.
     line: String,
@@ -66,7 +98,15 @@ pub struct JobStream<R: BufRead> {
 
 impl<R: BufRead> JobStream<R> {
     pub fn new(reader: R, format: TraceFormat) -> JobStream<R> {
-        JobStream { reader, format, lineno: 0, line: String::new(), yielded: 0, done: false }
+        JobStream {
+            reader,
+            format,
+            lineno: 0,
+            offset: 0,
+            line: String::new(),
+            yielded: 0,
+            done: false,
+        }
     }
 
     /// Records yielded so far (observability; the debug-counter tests).
@@ -83,8 +123,10 @@ impl<R: BufRead> Iterator for JobStream<R> {
             self.line.clear();
             match self.reader.read_line(&mut self.line) {
                 Ok(0) => self.done = true,
-                Ok(_) => {
+                Ok(n) => {
                     self.lineno += 1;
+                    let line_start = self.offset;
+                    self.offset += n as u64;
                     match self.format.parse_line(&self.line, self.lineno) {
                         Ok(None) => {}
                         Ok(Some(job)) => {
@@ -93,7 +135,13 @@ impl<R: BufRead> Iterator for JobStream<R> {
                         }
                         Err(e) => {
                             self.done = true;
-                            return Some(Err(e));
+                            // Same error envelope the byte scanner
+                            // applies — the differential tests compare
+                            // these strings verbatim.
+                            return Some(Err(e.context(format!(
+                                "trace line {} at byte offset {}",
+                                self.lineno, line_start
+                            ))));
                         }
                     }
                 }
@@ -109,11 +157,43 @@ impl<R: BufRead> Iterator for JobStream<R> {
     }
 }
 
-/// Open `path` as a job stream, auto-detecting the format from the
-/// extension.
+/// Open `path` as a *text* job stream, auto-detecting SWF vs GWF from
+/// the extension. Binary `.stf` traces have no line structure — this
+/// returns an error for them; use [`open_trace_stream_with_machine`]
+/// (or [`crate::trace::fast::FastTrace`] directly), which routes every
+/// format.
 pub fn stream_trace_file(path: &str) -> Result<JobStream<BufReader<File>>> {
+    let format = TraceFormat::from_path(path);
+    if format == TraceFormat::Stf {
+        bail!("{path:?} is a binary stf trace; open it through trace::fast, not a line stream");
+    }
     let file = File::open(path).with_context(|| format!("opening trace file {path:?}"))?;
-    Ok(JobStream::new(BufReader::new(file), TraceFormat::from_path(path)))
+    Ok(JobStream::new(BufReader::new(file), format))
+}
+
+/// Open any trace as a boxed job stream plus the `(nodes,
+/// cores_per_node)` machine it targets — the single entry point the
+/// streamed CLI run and `sst-sched convert` share.
+///
+/// Format routing: `.stf` always goes through the byte scanner (its
+/// machine comes from the file header); text formats go through the
+/// scalar [`JobStream`] unless `fast` is set, in which case the whole
+/// file is loaded once and scanned by [`crate::trace::fast`]. Either
+/// way the stream yields the same records in the same order with the
+/// same first-error message — that is the parity contract
+/// `tests/prop_fastparse.rs` enforces.
+pub fn open_trace_stream_with_machine(
+    path: &str,
+    fast: bool,
+) -> Result<(Box<dyn Iterator<Item = Result<Job>> + Send>, (usize, u64))> {
+    let format = TraceFormat::from_path(path);
+    if fast || format == TraceFormat::Stf {
+        let trace = fast::FastTrace::open(path)?;
+        let machine = trace.machine();
+        Ok((Box::new(trace.into_stream()), machine))
+    } else {
+        Ok((Box::new(stream_trace_file(path)?), format.default_machine()))
+    }
 }
 
 /// Open `path` as an SWF job stream.
@@ -178,18 +258,45 @@ mod tests {
         let text = "1 0 10 120 4 -1 -1 4 600 -1 1 12 3 -1 -1 -1 -1 -1\n1 2 3\n";
         let mut s = stream(text, TraceFormat::Swf);
         assert!(s.next().unwrap().is_ok());
-        assert!(s.next().unwrap().is_err());
+        let e = s.next().unwrap().unwrap_err().to_string();
+        assert!(e.contains("trace line 2 at byte offset 50"), "{e}");
+        assert!(e.contains("swf line 2"), "{e}");
         assert!(s.next().is_none(), "a broken stream must end after its error");
     }
 
     #[test]
-    fn gwf_format_detected_and_parsed() {
+    fn format_detected_from_extension_case_insensitively() {
         assert_eq!(TraceFormat::from_path("x.gwf"), TraceFormat::Gwf);
+        assert_eq!(TraceFormat::from_path("DAS2.GWF"), TraceFormat::Gwf);
+        assert_eq!(TraceFormat::from_path("mixed.Gwf"), TraceFormat::Gwf);
         assert_eq!(TraceFormat::from_path("x.swf"), TraceFormat::Swf);
+        assert_eq!(TraceFormat::from_path("SDSC.SWF"), TraceFormat::Swf);
+        assert_eq!(TraceFormat::from_path("x.stf"), TraceFormat::Stf);
+        assert_eq!(TraceFormat::from_path("X.STF"), TraceFormat::Stf);
         assert_eq!(TraceFormat::from_path("plain"), TraceFormat::Swf);
+        assert_eq!(TraceFormat::from_path("dir.gwf/trace"), TraceFormat::Swf);
+        assert_eq!(TraceFormat::from_path(""), TraceFormat::Swf);
+    }
+
+    #[test]
+    fn gwf_stream_parses() {
         let text = "# c\n0 0 2 33.0 1 32.9 -1 1 900 -1 1 3 1 14 -1\n";
         let jobs: Vec<Job> = stream(text, TraceFormat::Gwf).map(|j| j.unwrap()).collect();
         assert_eq!(jobs.len(), 1);
         assert_eq!(jobs[0].runtime.ticks(), 33);
+    }
+
+    #[test]
+    fn default_machines_per_format() {
+        assert_eq!(TraceFormat::Swf.default_machine(), (128, 1));
+        assert_eq!(TraceFormat::Gwf.default_machine(), (72, 2));
+        assert_eq!(TraceFormat::Stf.default_machine(), (128, 1));
+    }
+
+    #[test]
+    fn stf_rejected_by_line_stream() {
+        let e = TraceFormat::Stf.parse_line("anything", 1).unwrap_err().to_string();
+        assert!(e.contains("binary"), "{e}");
+        assert!(stream_trace_file("nonexistent.stf").is_err());
     }
 }

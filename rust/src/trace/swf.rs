@@ -13,13 +13,48 @@ use crate::core::time::{SimDuration, SimTime};
 use crate::job::Job;
 use anyhow::{bail, Context, Result};
 
+/// Fold the nine numeric SWF fields into a job, or `None` for a
+/// skipped record (cancelled/failed entries with non-positive runtime
+/// or processor count, matching how CQsim-style simulators consume
+/// these logs). This is the *semantic* half of record parsing, shared
+/// by the scalar [`parse_swf_line`] and the byte scanner in
+/// [`crate::trace::fast`]: the two ingestion paths can only disagree
+/// about tokenization, never about which fields become which jobs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn job_from_swf_fields(
+    id: i64,
+    submit: i64,
+    run: i64,
+    used_procs: i64,
+    req_procs: i64,
+    req_time: i64,
+    req_mem: i64,
+    user: i64,
+    group: i64,
+) -> Option<Job> {
+    let procs = if req_procs > 0 { req_procs } else { used_procs };
+    if run <= 0 || procs <= 0 || id < 0 || submit < 0 {
+        return None; // cancelled / failed / malformed record
+    }
+    let est = if req_time > 0 { req_time } else { run };
+    Some(Job::new(
+        id as u64,
+        SimTime(submit as u64),
+        procs as u64,
+        req_mem.max(0) as u64,
+        SimDuration(est as u64),
+        SimDuration(run as u64),
+        user.max(0) as u32,
+        group.max(0) as u32,
+    ))
+}
+
 /// Parse one SWF line. `Ok(None)` for comments, blanks and skipped
-/// records (cancelled/failed entries with non-positive runtime or
-/// processor count, matching how CQsim-style simulators consume these
-/// logs); `Err` only for structurally broken lines. `lineno` is 1-based
-/// (error context). This is the single record parser both the eager
-/// [`parse_swf`] and the streaming [`crate::trace::JobStream`] share —
-/// what makes stream == eager hold by construction.
+/// records (see [`job_from_swf_fields`]); `Err` only for structurally
+/// broken lines. `lineno` is 1-based (error context). This is the
+/// single record parser both the eager [`parse_swf`] and the streaming
+/// [`crate::trace::JobStream`] share — what makes stream == eager hold
+/// by construction.
 pub fn parse_swf_line(line: &str, lineno: usize) -> Result<Option<Job>> {
     let line = line.trim();
     if line.is_empty() || line.starts_with(';') {
@@ -43,22 +78,7 @@ pub fn parse_swf_line(line: &str, lineno: usize) -> Result<Option<Job>> {
     let req_mem = get_i64(9)?;
     let user = if f.len() > 11 { get_i64(11)? } else { -1 };
     let group = if f.len() > 12 { get_i64(12)? } else { -1 };
-
-    let procs = if req_procs > 0 { req_procs } else { used_procs };
-    if run <= 0 || procs <= 0 || id < 0 || submit < 0 {
-        return Ok(None); // cancelled / failed / malformed record
-    }
-    let est = if req_time > 0 { req_time } else { run };
-    Ok(Some(Job::new(
-        id as u64,
-        SimTime(submit as u64),
-        procs as u64,
-        req_mem.max(0) as u64,
-        SimDuration(est as u64),
-        SimDuration(run as u64),
-        user.max(0) as u32,
-        group.max(0) as u32,
-    )))
+    Ok(job_from_swf_fields(id, submit, run, used_procs, req_procs, req_time, req_mem, user, group))
 }
 
 /// Parse SWF text into jobs (eager path: a thin collect over

@@ -831,3 +831,119 @@ fn cli_workflow_spec() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("makespan     600 s"), "{text}");
 }
+
+/// The ingestion tier is invisible to the simulation: one SP2 trace run
+/// through (1) the scalar SWF parser, (2) the zero-copy byte scanner on
+/// the same text, (3) the converted binary stf eagerly, and (4) the stf
+/// stream feeding `with_job_stream`, produces one identical run
+/// fingerprint — format and parser are pure I/O choices, never
+/// semantics.
+#[test]
+fn stf_run_matches_swf_run_bit_for_bit() {
+    use sst_sched::trace::{stf, FastTrace, TraceFormat, Workload};
+    let w = SdscSp2Model::default().generate(2_000, 23).drop_infeasible();
+    let text = write_swf(&w.jobs, "cross-format determinism");
+    let dir = std::env::temp_dir();
+    let swf_path = dir.join("sst_sched_xformat.swf");
+    let stf_path = dir.join("sst_sched_xformat.stf");
+    std::fs::write(&swf_path, &text).unwrap();
+    let stats =
+        stf::convert_trace_file(swf_path.to_str().unwrap(), stf_path.to_str().unwrap()).unwrap();
+
+    let run = |jobs: Vec<sst_sched::job::Job>| {
+        run_policy(
+            Workload::new("xformat", jobs, w.nodes, w.cores_per_node),
+            Policy::FcfsBackfill,
+        )
+        .fingerprint()
+    };
+    // (1) scalar text parse.
+    let scalar_jobs = parse_swf(&text).unwrap();
+    assert_eq!(stats.records as usize, scalar_jobs.len());
+    let scalar_fp = run(scalar_jobs);
+    // (2) byte scanner over the same text.
+    let fast_fp = run(FastTrace::open(swf_path.to_str().unwrap()).unwrap().parse().unwrap());
+    // (3) binary stf, eager.
+    let stf_trace = FastTrace::open(stf_path.to_str().unwrap()).unwrap();
+    assert_eq!(stf_trace.format(), TraceFormat::Stf);
+    let stf_fp = run(stf_trace.parse().unwrap());
+    // (4) binary stf, streamed into the simulator.
+    let stream = FastTrace::open(stf_path.to_str().unwrap()).unwrap().into_stream();
+    let streamed_fp = Simulation::new(
+        Workload::machine("xformat", w.nodes, w.cores_per_node),
+        Policy::FcfsBackfill,
+    )
+    .with_job_stream(Box::new(stream.map(|j| j.unwrap())))
+    .run(None)
+    .fingerprint();
+    let _ = std::fs::remove_file(&swf_path);
+    let _ = std::fs::remove_file(&stf_path);
+    assert_eq!(scalar_fp, fast_fp, "byte scanner diverged from the scalar parser");
+    assert_eq!(scalar_fp, stf_fp, "stf conversion changed the run");
+    assert_eq!(scalar_fp, streamed_fp, "streamed stf diverged from the eager run");
+}
+
+/// Satellite pin: a corrupt trace fails a streamed CLI run with the
+/// offending line number and byte offset in the final error.
+#[test]
+fn cli_streamed_error_reports_line_and_offset() {
+    let exe = env!("CARGO_BIN_EXE_sst-sched");
+    let good = "1 0 10 120 4 -1 -1 4 600 -1 1 12 3 -1 -1 -1 -1 -1\n";
+    let body = format!("{good}1 2 3\n");
+    let path = std::env::temp_dir().join("sst_sched_cli_badline.swf");
+    std::fs::write(&path, &body).unwrap();
+    for extra in [&["--stream"][..], &["--stream", "--fast-parse"][..]] {
+        let mut args = vec!["run", "--trace", path.to_str().unwrap(), "--policy", "fcfs"];
+        args.extend_from_slice(extra);
+        let out = std::process::Command::new(exe).args(&args).output().unwrap();
+        assert!(!out.status.success(), "corrupt trace must fail ({extra:?})");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("trace ingestion failed"), "{err}");
+        assert!(
+            err.contains(&format!("trace line 2 at byte offset {}", good.len())),
+            "missing position in: {err}"
+        );
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// CLI round-trip of the converter: convert a text trace, then run the
+/// stf output and get the same completion count as the text run.
+#[test]
+fn cli_convert_and_run_stf() {
+    let exe = env!("CARGO_BIN_EXE_sst-sched");
+    let w = Das2Model::default().generate(200, 17).drop_infeasible();
+    let n = w.jobs.len();
+    let text = write_swf(&w.jobs, "cli convert test");
+    let dir = std::env::temp_dir();
+    let swf_path = dir.join("sst_sched_cli_convert.swf");
+    let stf_path = dir.join("sst_sched_cli_convert.stf");
+    std::fs::write(&swf_path, text).unwrap();
+    let out = std::process::Command::new(exe)
+        .args(["convert", swf_path.to_str().unwrap(), stf_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains(&format!("{n} records")), "{text}");
+    let out = std::process::Command::new(exe)
+        .args([
+            "run", "--trace", stf_path.to_str().unwrap(), "--stream", "--policy", "fcfs",
+            "--nodes", &w.nodes.to_string(), "--cores", &w.cores_per_node.to_string(),
+        ])
+        .output()
+        .unwrap();
+    let _ = std::fs::remove_file(&swf_path);
+    let _ = std::fs::remove_file(&stf_path);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains(&format!("jobs completed    {n}")), "{text}");
+
+    // A non-.stf output is rejected loudly.
+    let out = std::process::Command::new(exe)
+        .args(["convert", "in.swf", "out.swf"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains(".stf"));
+}

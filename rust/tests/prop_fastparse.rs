@@ -1,0 +1,370 @@
+//! Differential property suite for the zero-copy ingestion path
+//! (`trace::fast`) and the binary stf format — the parity proof the
+//! fast path ships with (the estuary/flow simd-doc idiom: a byte-level
+//! scanner is only trusted because a scalar oracle checks it on
+//! adversarial generated inputs).
+//!
+//! Three contracts:
+//! 1. **fast == scalar** on generated SWF/GWF bodies — same records,
+//!    same order, same field values — across CRLF endings, tab/multi-
+//!    space separators, leading/trailing whitespace, `-1` sentinels,
+//!    interleaved comments and blanks, fractional and exponent floats,
+//!    overlong-but-valid numerics, and a truncated (newline-less)
+//!    final line.
+//! 2. **identical error positions** on injected corruption: the fast
+//!    stream's first error carries the same line number and byte
+//!    offset the scalar `JobStream` reports, string-for-string, and
+//!    the eager parser's message is embedded in both.
+//! 3. **stf write → read is identity** on every trace-carried field.
+
+use sst_sched::core::rng::Rng;
+use sst_sched::core::time::{SimDuration, SimTime};
+use sst_sched::job::Job;
+use sst_sched::trace::{parse_gwf, parse_swf, stf, FastTrace, JobStream, TraceFormat};
+use sst_sched::util::prop::check_n;
+use std::io::Cursor;
+
+fn jobs_equal(a: &Job, b: &Job) -> bool {
+    a.id == b.id
+        && a.submit == b.submit
+        && a.cores == b.cores
+        && a.memory_mb == b.memory_mb
+        && a.est_runtime == b.est_runtime
+        && a.runtime == b.runtime
+        && a.user == b.user
+        && a.group == b.group
+}
+
+/// Random inter-field separator: single/double space, tab, tab+space.
+fn sep(rng: &mut Rng) -> &'static str {
+    match rng.below(4) {
+        0 => " ",
+        1 => "\t",
+        2 => "  ",
+        _ => " \t",
+    }
+}
+
+fn sentinel_or(rng: &mut Rng, val: u64) -> String {
+    if rng.below(4) == 0 {
+        "-1".to_string()
+    } else {
+        val.to_string()
+    }
+}
+
+/// A GWF float with randomized spelling: integer, `.0`, `.5`, `e0`,
+/// explicit `+`, or a 16-digit integer (past the fast path's 15-digit
+/// cutoff, forcing the `str::parse` fallback).
+fn gwf_num(rng: &mut Rng, val: u64) -> String {
+    match rng.below(6) {
+        0 => format!("{val}.0"),
+        1 => format!("{val}.5"),
+        2 => format!("{val}e0"),
+        3 => format!("+{val}"),
+        4 => format!("100000000000000{}", rng.below(10)),
+        _ => val.to_string(),
+    }
+}
+
+/// One record line with adversarial separators and sentinels. Valid
+/// (parses or is skipped as cancelled) — corruption is injected
+/// separately.
+fn gen_record(rng: &mut Rng, format: TraceFormat, id: u64, submit: u64) -> String {
+    let run = if rng.below(8) == 0 { 0 } else { 1 + rng.below(5_000) };
+    let used = if rng.below(8) == 0 { 0 } else { 1 + rng.below(64) };
+    let req_procs = sentinel_or(rng, 1 + rng.below(64));
+    let req_time = sentinel_or(rng, 1 + rng.below(9_000));
+    let req_mem = sentinel_or(rng, 128 + rng.below(4_096));
+    let user = rng.below(50);
+    let group = rng.below(8);
+    let fields: Vec<String> = match format {
+        TraceFormat::Swf => {
+            // Occasionally an 18-digit submit (still a valid i64).
+            let submit = if rng.below(16) == 0 {
+                format!("10000000000000000{}", rng.below(10))
+            } else {
+                submit.to_string()
+            };
+            vec![
+                id.to_string(),
+                submit,
+                "-1".into(),
+                run.to_string(),
+                used.to_string(),
+                "-1".into(),
+                "-1".into(),
+                req_procs,
+                req_time,
+                req_mem,
+                "1".into(),
+                user.to_string(),
+                group.to_string(),
+                "-1".into(),
+                "-1".into(),
+                "-1".into(),
+                "-1".into(),
+                "-1".into(),
+            ]
+        }
+        TraceFormat::Gwf => vec![
+            id.to_string(),
+            gwf_num(rng, submit),
+            "0".into(),
+            gwf_num(rng, run),
+            used.to_string(),
+            "-1".into(),
+            "-1".into(),
+            req_procs,
+            req_time,
+            req_mem,
+            "1".into(),
+            user.to_string(),
+            group.to_string(),
+            "14".into(),
+            "-1".into(),
+        ],
+        TraceFormat::Stf => unreachable!("stf is binary; this suite generates text bodies"),
+    };
+    let mut line = String::new();
+    if rng.below(8) == 0 {
+        line.push_str(sep(rng)); // leading whitespace
+    }
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            line.push_str(sep(rng));
+        }
+        line.push_str(f);
+    }
+    if rng.below(8) == 0 {
+        line.push_str(sep(rng)); // trailing whitespace
+    }
+    line
+}
+
+/// A structurally broken line for the error-position contract.
+fn gen_bad_line(rng: &mut Rng, format: TraceFormat) -> &'static str {
+    match rng.below(3) {
+        0 => "7 42 3", // too few fields
+        // Junk token in field 1 — the per-field parse error path.
+        1 => match format {
+            TraceFormat::Swf => "12x7 0 -1 10 2 -1 -1 2 20 -1 1 0 0 -1 -1 -1 -1 -1",
+            _ => "12x7 0 0 10 2 -1 -1 2 20 -1 1 0 0 14 -1",
+        },
+        // Overflowing i64 (SWF) / lone sign (GWF) — the cold-path
+        // fallback must reproduce `str::parse`'s exact verdict.
+        _ => match format {
+            TraceFormat::Swf => {
+                "1 999999999999999999999999 -1 10 2 -1 -1 2 20 -1 1 0 0 -1 -1 -1 -1 -1"
+            }
+            _ => "1 - 0 10 2 -1 -1 2 20 -1 1 0 0 14 -1",
+        },
+    }
+}
+
+/// A whole trace body: header comments, blanks, whitespace-only lines,
+/// records; optionally one corrupted line and a truncated final line.
+/// Returns the body and the chosen line ending.
+fn gen_body(rng: &mut Rng, format: TraceFormat, with_bad: bool) -> String {
+    let comment = match format {
+        TraceFormat::Swf => ';',
+        TraceFormat::Gwf => '#',
+        TraceFormat::Stf => unreachable!("stf is binary; this suite generates text bodies"),
+    };
+    let eol = if rng.below(3) == 0 { "\r\n" } else { "\n" };
+    let mut out = format!("{comment} generated header{eol}{comment} UnixStartTime: 0{eol}");
+    let records = 1 + rng.below(30);
+    let bad_at = if with_bad { rng.below(records) } else { u64::MAX };
+    let mut submit = 0u64;
+    for i in 0..records {
+        submit += rng.below(500);
+        match rng.below(12) {
+            0 => out.push_str(eol),                                       // blank line
+            1 => out.push_str(&format!("  \t{eol}")),                     // whitespace-only
+            2 => out.push_str(&format!("{comment} interleaved {i}{eol}")), // comment
+            _ => {}
+        }
+        if i == bad_at {
+            out.push_str(gen_bad_line(rng, format));
+        } else {
+            out.push_str(&gen_record(rng, format, i + 1, submit));
+        }
+        out.push_str(eol);
+    }
+    if !with_bad && rng.below(4) == 0 {
+        // Truncated final line: strip the trailing newline.
+        out.truncate(out.len() - eol.len());
+    }
+    out
+}
+
+fn eager_parse(body: &str, format: TraceFormat) -> anyhow::Result<Vec<Job>> {
+    match format {
+        TraceFormat::Swf => parse_swf(body),
+        TraceFormat::Gwf => parse_gwf(body),
+        TraceFormat::Stf => unreachable!("stf is binary; this suite generates text bodies"),
+    }
+}
+
+fn fast_parse(body: &str, format: TraceFormat) -> anyhow::Result<Vec<Job>> {
+    FastTrace::from_bytes("prop", format, body.as_bytes().to_vec())?.parse()
+}
+
+#[test]
+fn fast_parse_equals_scalar_parse() {
+    for format in [TraceFormat::Swf, TraceFormat::Gwf] {
+        check_n(&format!("fast==scalar/{format:?}"), 300, |rng| {
+            let body = gen_body(rng, format, false);
+            let fast = fast_parse(&body, format)
+                .map_err(|e| format!("fast failed on a clean body: {e:#}\n{body}"))?;
+            let scalar = eager_parse(&body, format)
+                .map_err(|e| format!("scalar failed on a clean body: {e:#}\n{body}"))?;
+            if fast.len() != scalar.len() {
+                return Err(format!(
+                    "record counts differ: fast {} vs scalar {}\n{body}",
+                    fast.len(),
+                    scalar.len()
+                ));
+            }
+            for (a, b) in fast.iter().zip(&scalar) {
+                if !jobs_equal(a, b) {
+                    return Err(format!(
+                        "record {} differs between fast and scalar\n{a:?}\n{b:?}\n{body}",
+                        a.id
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn fast_error_position_matches_scalar_stream_exactly() {
+    for format in [TraceFormat::Swf, TraceFormat::Gwf] {
+        check_n(&format!("fast-errs/{format:?}"), 200, |rng| {
+            let body = gen_body(rng, format, true);
+            let fast_err = match fast_parse(&body, format) {
+                Err(e) => format!("{e:#}"),
+                Ok(_) => return Err(format!("fast accepted a corrupt body\n{body}")),
+            };
+            let stream_err = match JobStream::new(
+                Cursor::new(body.as_bytes().to_vec()),
+                format,
+            )
+            .collect::<anyhow::Result<Vec<Job>>>()
+            {
+                Err(e) => format!("{e:#}"),
+                Ok(_) => return Err(format!("scalar stream accepted a corrupt body\n{body}")),
+            };
+            // Same line number AND byte offset, string-for-string.
+            if fast_err != stream_err {
+                return Err(format!(
+                    "error envelopes differ:\n fast:   {fast_err}\n stream: {stream_err}\n{body}"
+                ));
+            }
+            // The eager parser's message (line number included) is
+            // embedded verbatim in the fast error.
+            let eager_err = match eager_parse(&body, format) {
+                Err(e) => format!("{e:#}"),
+                Ok(_) => return Err(format!("eager accepted a corrupt body\n{body}")),
+            };
+            if !fast_err.contains(&eager_err) {
+                return Err(format!(
+                    "eager message not embedded:\n fast:  {fast_err}\n eager: {eager_err}\n{body}"
+                ));
+            }
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn stf_roundtrip_is_identity() {
+    check_n("stf-roundtrip", 200, |rng| {
+        let n = rng.below(60) as usize;
+        let mut submit = 0u64;
+        let jobs: Vec<Job> = (0..n)
+            .map(|i| {
+                submit += rng.below(1_000);
+                Job::new(
+                    i as u64 + 1,
+                    SimTime(submit),
+                    1 + rng.below(128),
+                    rng.below(1 << 20),
+                    SimDuration(1 + rng.below(100_000)),
+                    SimDuration(1 + rng.below(100_000)),
+                    rng.below(1 << 16) as u32,
+                    rng.below(1 << 16) as u32,
+                )
+            })
+            .collect();
+        let machine = if rng.below(2) == 0 { Some((128usize, 1u64)) } else { None };
+        let bytes = stf::write_stf(&jobs, machine)
+            .map_err(|e| format!("write_stf failed: {e:#}"))?;
+        if bytes.len() != stf::HEADER_BYTES + n * stf::RECORD_BYTES {
+            return Err(format!("unexpected image size {}", bytes.len()));
+        }
+        let trace = FastTrace::from_bytes("t.stf", TraceFormat::Stf, bytes)
+            .map_err(|e| format!("validate failed: {e:#}"))?;
+        let back = trace.parse().map_err(|e| format!("stf parse failed: {e:#}"))?;
+        if back.len() != jobs.len() {
+            return Err(format!("count changed: {} -> {}", jobs.len(), back.len()));
+        }
+        for (a, b) in jobs.iter().zip(&back) {
+            if !jobs_equal(a, b) {
+                return Err(format!("job {} changed across the roundtrip\n{a:?}\n{b:?}", a.id));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The streamed fast iterator and the borrowing one share a scanner:
+/// identical yields, and the `yielded` counter ticks per record.
+#[test]
+fn fast_stream_is_incremental_and_matches_records() {
+    let mut rng = Rng::new(0xFA57);
+    let body = gen_body(&mut rng, TraceFormat::Swf, false);
+    let trace =
+        FastTrace::from_bytes("t.swf", TraceFormat::Swf, body.as_bytes().to_vec()).unwrap();
+    let eager: Vec<Job> = trace.records().map(|r| r.unwrap()).collect();
+    let mut s = trace.into_stream();
+    let mut seen = 0u64;
+    loop {
+        let Some(r) = s.next() else { break };
+        let job = r.unwrap();
+        assert!(jobs_equal(&job, &eager[seen as usize]));
+        seen += 1;
+        assert_eq!(s.yielded(), seen, "yielded counter must tick per record");
+    }
+    assert_eq!(seen as usize, eager.len());
+}
+
+/// End-to-end converter check: SWF text -> stf file -> jobs is exactly
+/// the scalar parser's job sequence (comments and cancelled records
+/// dropped at conversion, machine recorded in the header).
+#[test]
+fn convert_swf_file_preserves_job_sequence() {
+    let mut rng = Rng::new(0xC04E);
+    let body = gen_body(&mut rng, TraceFormat::Swf, false);
+    let scalar = parse_swf(&body).unwrap();
+    let dir = std::env::temp_dir();
+    let swf_path = dir.join("sst_sched_prop_convert.swf");
+    let stf_path = dir.join("sst_sched_prop_convert.stf");
+    std::fs::write(&swf_path, &body).unwrap();
+    let stats = stf::convert_trace_file(swf_path.to_str().unwrap(), stf_path.to_str().unwrap())
+        .unwrap();
+    assert_eq!(stats.records as usize, scalar.len());
+    assert_eq!(stats.machine, TraceFormat::Swf.default_machine());
+    let trace = FastTrace::open(stf_path.to_str().unwrap()).unwrap();
+    assert_eq!(trace.format(), TraceFormat::Stf);
+    assert_eq!(trace.machine(), (128, 1));
+    let back = trace.parse().unwrap();
+    let _ = std::fs::remove_file(&swf_path);
+    let _ = std::fs::remove_file(&stf_path);
+    assert_eq!(back.len(), scalar.len());
+    for (a, b) in back.iter().zip(&scalar) {
+        assert!(jobs_equal(a, b), "job {} changed through conversion", b.id);
+    }
+}

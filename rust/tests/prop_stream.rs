@@ -45,6 +45,7 @@ fn gen_record(rng: &mut Rng, format: TraceFormat, id: u64, submit: u64) -> Strin
             "{id} {submit} 0 {run}.0 {used} -1 -1 {req_procs} {req_time} {req_mem} 1 \
              {user} {group} 14 -1"
         ),
+        TraceFormat::Stf => unreachable!("stf is binary; this suite generates text bodies"),
     }
 }
 
@@ -54,6 +55,7 @@ fn gen_body(rng: &mut Rng, format: TraceFormat, with_bad: bool) -> String {
     let comment = match format {
         TraceFormat::Swf => ';',
         TraceFormat::Gwf => '#',
+        TraceFormat::Stf => unreachable!("stf is binary; this suite generates text bodies"),
     };
     let mut out = format!("{comment} generated header\n{comment} UnixStartTime: 0\n");
     let records = 1 + rng.below(40);
@@ -85,6 +87,7 @@ fn eager_parse(body: &str, format: TraceFormat) -> anyhow::Result<Vec<Job>> {
     match format {
         TraceFormat::Swf => parse_swf(body),
         TraceFormat::Gwf => parse_gwf(body),
+        TraceFormat::Stf => unreachable!("stf is binary; this suite generates text bodies"),
     }
 }
 
