@@ -1,0 +1,680 @@
+//! Repo-specific determinism lint: a self-contained, dependency-free
+//! line scanner over `rust/src/`.
+//!
+//! This is not a general Rust linter — it knows this crate's
+//! determinism contract and nothing else. Every rule exists because the
+//! hazard it matches has either bitten the repo before or would void
+//! the byte-identical-fingerprint guarantee silently:
+//!
+//! | rule id        | hazard |
+//! |----------------|--------|
+//! | `hash-iter`    | `HashMap`/`HashSet` iteration in a decision-path module (`sched/`, `sim/`, `core/`, `parallel/`, `resources/`, `workflow/`): hasher order leaks into decisions |
+//! | `partial-cmp`  | `.partial_cmp(..)` call sites (typically `.unwrap()`d in comparators): NaN either panics or silently reorders — use `total_cmp` or integer keys |
+//! | `wall-clock`   | `Instant::now` / `SystemTime` outside measurement code (`harness/`, `util/bench.rs`, `parallel/` timing, `main.rs`): wall time must never reach simulation state |
+//! | `ambient-rand` | `thread_rng` / `rand::random` / entropy-seeded state anywhere: all randomness must flow from the seeded simulation RNG |
+//!
+//! # Escapes
+//!
+//! A `hash-iter` site whose result is *demonstrably order-folded* —
+//! a commutative fold (`.sum()`, `.count()`, `.any(..)`, ...) or a sort
+//! within the next few lines — passes automatically. Everything else
+//! needs an explicit escape comment, either trailing the offending line
+//! or on a comment line directly above it:
+//!
+//! ```text
+//! // lint:allow(hash-iter, deltas are sorted inside Timeline rebuild)
+//! for entry in self.running.values_mut() { ... }
+//! ```
+//!
+//! The reason is mandatory and must not contain `)` (the scanner is a
+//! line scanner, not a parser). An allow that names an unknown rule or
+//! carries no reason is itself a finding (`bad-allow`); an allow whose
+//! target line has no matching violation is a finding (`unused-allow`)
+//! so escapes cannot rot in place.
+//!
+//! # Matching model
+//!
+//! The scanner strips `//` comments, tracks which identifiers in a file
+//! are declared as `HashMap`/`HashSet` (struct fields, `let` bindings,
+//! typed parameters), and only flags iteration *on those names* — a
+//! slice parameter that happens to be called `running` is not a hash
+//! map. Method-chain receivers are resolved across line breaks, so
+//! rustfmt's `self\n.usage\n.iter()` shape is still caught.
+
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+/// One determinism rule: stable id (the `lint:allow` key) + contract.
+pub struct Rule {
+    pub id: &'static str,
+    pub doc: &'static str,
+}
+
+/// The rule registry; ids are the only valid `lint:allow` keys.
+pub const RULES: &[Rule] = &[
+    Rule {
+        id: "hash-iter",
+        doc: "no HashMap/HashSet iteration in decision-path modules \
+              (sched/, sim/, core/, parallel/, resources/, workflow/) \
+              unless order-folded, sorted nearby, or lint:allow'd",
+    },
+    Rule {
+        id: "partial-cmp",
+        doc: "no .partial_cmp(..) call sites — comparators must use \
+              total_cmp or integer keys so NaN cannot reorder or panic",
+    },
+    Rule {
+        id: "wall-clock",
+        doc: "no Instant::now/SystemTime outside harness/, util/bench.rs, \
+              parallel/ timing, and main.rs — wall time never reaches \
+              simulation state",
+    },
+    Rule {
+        id: "ambient-rand",
+        doc: "no thread_rng/rand::random/entropy-seeded state anywhere — \
+              randomness flows from the seeded simulation RNG only",
+    },
+];
+
+/// Modules whose iteration order is decision-carrying.
+const DECISION_DIRS: &[&str] =
+    &["sched/", "sim/", "core/", "parallel/", "resources/", "workflow/"];
+
+/// Where wall-clock reads are legitimate (measurement, CLI timing).
+const WALL_CLOCK_DIRS: &[&str] = &["harness/", "parallel/"];
+const WALL_CLOCK_FILES: &[&str] = &["util/bench.rs", "main.rs"];
+
+/// Iteration methods that expose hasher order.
+const ITER_METHODS: &[&str] =
+    &[".iter()", ".iter_mut()", ".values()", ".values_mut()", ".keys()", ".drain("];
+
+/// Tokens that mark a candidate as order-folded when they appear on the
+/// candidate line or within the next few lines of the same expression:
+/// commutative folds, or a sort that canonicalizes the collected result.
+const FOLD_TOKENS: &[&str] =
+    &["sort", ".sum", ".count(", ".fold(", ".any(", ".all(", ".min(", ".max("];
+
+/// How many lines past the candidate the fold heuristic looks.
+const FOLD_WINDOW: usize = 4;
+
+/// Randomness entry points that bypass the seeded RNG.
+const RAND_TOKENS: &[&str] =
+    &["thread_rng", "rand::random", "from_entropy", "RandomState::new"];
+
+/// One lint violation, printable as `file:line: rule-id — message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {} — {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Scan every `.rs` file under this crate's `src/` (except `analysis/`
+/// itself, whose rule fixtures would self-flag). The `tests/lint.rs`
+/// driver fails on any returned finding.
+pub fn run_repo_lint() -> Vec<Finding> {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    collect_rs_files(&root, &root, &mut files);
+    files.sort();
+    let mut findings = Vec::new();
+    for rel in &files {
+        if rel.starts_with("analysis/") {
+            continue;
+        }
+        let content = fs::read_to_string(root.join(rel)).unwrap_or_default();
+        findings.extend(scan_file(rel, &content));
+    }
+    findings
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<String>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            if let Ok(rel) = path.strip_prefix(root) {
+                out.push(rel.to_string_lossy().replace('\\', "/"));
+            }
+        }
+    }
+}
+
+/// An escape comment waiting to be matched against a violation.
+struct Allow {
+    rule: &'static str,
+    line: usize,
+    used: bool,
+}
+
+/// Scan one file's source. `rel` is the path relative to `src/` with
+/// `/` separators — it selects which rules apply.
+pub fn scan_file(rel: &str, content: &str) -> Vec<Finding> {
+    let raw: Vec<&str> = content.lines().collect();
+    let code: Vec<String> = raw.iter().map(|l| strip_comment(l).to_string()).collect();
+    let decision = DECISION_DIRS.iter().any(|d| rel.starts_with(d));
+    let wall_ok = WALL_CLOCK_DIRS.iter().any(|d| rel.starts_with(d))
+        || WALL_CLOCK_FILES.contains(&rel);
+    let hash_names = collect_hash_names(&code);
+
+    let mut findings = Vec::new();
+    let mut pending: Vec<Allow> = Vec::new();
+    for (i, rawline) in raw.iter().enumerate() {
+        let line_no = i + 1;
+        let mut allows = parse_allows(rel, rawline, line_no, &mut findings);
+        let trimmed = rawline.trim_start();
+        if trimmed.is_empty() || trimmed.starts_with("//") {
+            // Comment-only (or blank) line: its allows apply to the
+            // next code line.
+            pending.append(&mut allows);
+            continue;
+        }
+        allows.append(&mut pending);
+
+        let mut candidates: Vec<(&'static str, String)> = Vec::new();
+        let cl = &code[i];
+        if decision {
+            hash_iter_candidates(&code, i, &hash_names, &mut candidates);
+        }
+        if cl.contains(".partial_cmp(") {
+            candidates.push((
+                "partial-cmp",
+                "`.partial_cmp(..)` call site — use `total_cmp` or an integer key \
+                 so NaN cannot reorder or panic"
+                    .to_string(),
+            ));
+        }
+        if !wall_ok && (cl.contains("Instant::now") || cl.contains("SystemTime")) {
+            candidates.push((
+                "wall-clock",
+                "wall-clock read outside measurement code — simulation state must \
+                 only see simulated time"
+                    .to_string(),
+            ));
+        }
+        for tok in RAND_TOKENS {
+            if cl.contains(tok) {
+                candidates.push((
+                    "ambient-rand",
+                    format!("`{tok}` bypasses the seeded simulation RNG"),
+                ));
+            }
+        }
+
+        for (rule, message) in candidates {
+            if let Some(a) = allows.iter_mut().find(|a| a.rule == rule) {
+                a.used = true;
+                continue;
+            }
+            if rule == "hash-iter" && order_folded(&code, i) {
+                continue;
+            }
+            findings.push(Finding { file: rel.to_string(), line: line_no, rule, message });
+        }
+        for a in allows {
+            if !a.used {
+                findings.push(unused_allow(rel, &a));
+            }
+        }
+    }
+    for a in pending {
+        findings.push(unused_allow(rel, &a));
+    }
+    findings
+}
+
+fn unused_allow(rel: &str, a: &Allow) -> Finding {
+    Finding {
+        file: rel.to_string(),
+        line: a.line,
+        rule: "unused-allow",
+        message: format!(
+            "lint:allow({}) matches no violation on its target line — remove it",
+            a.rule
+        ),
+    }
+}
+
+/// Cut a line at its `//` comment (line scanner: string literals that
+/// contain `//` are not handled, which only under-matches).
+fn strip_comment(line: &str) -> &str {
+    match line.find("//") {
+        Some(p) => &line[..p],
+        None => line,
+    }
+}
+
+/// Parse every `lint:allow(rule, reason)` on a raw line. Malformed
+/// escapes (unknown rule, missing reason, unterminated) are reported as
+/// `bad-allow` findings instead of silently suppressing anything.
+fn parse_allows(
+    rel: &str,
+    rawline: &str,
+    line_no: usize,
+    findings: &mut Vec<Finding>,
+) -> Vec<Allow> {
+    const KEY: &str = "lint:allow(";
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = rawline[from..].find(KEY) {
+        let at = from + p + KEY.len();
+        from = at;
+        let bad = |message: String| Finding {
+            file: rel.to_string(),
+            line: line_no,
+            rule: "bad-allow",
+            message,
+        };
+        let Some(close) = rawline[at..].find(')') else {
+            findings.push(bad("unterminated lint:allow escape".to_string()));
+            break;
+        };
+        let inner = &rawline[at..at + close];
+        let (rule_id, reason) = match inner.split_once(',') {
+            Some((r, why)) => (r.trim(), why.trim()),
+            None => (inner.trim(), ""),
+        };
+        let Some(rule) = RULES.iter().find(|r| r.id == rule_id) else {
+            findings.push(bad(format!("unknown rule id `{rule_id}` in lint:allow")));
+            continue;
+        };
+        if reason.is_empty() {
+            findings.push(bad(format!(
+                "lint:allow({rule_id}) needs a reason: lint:allow({rule_id}, why)"
+            )));
+            continue;
+        }
+        out.push(Allow { rule: rule.id, line: line_no, used: false });
+    }
+    out
+}
+
+/// Identifiers declared as `HashMap`/`HashSet` in this file: struct
+/// fields and typed params (`name: [&[mut ]]HashMap<`), plus `let`
+/// bindings (`let [mut] name = HashMap::..`).
+fn collect_hash_names(code: &[String]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    let mut push = |names: &mut Vec<String>, n: String| {
+        if !n.is_empty() && !names.iter().any(|x| x == &n) {
+            names.push(n);
+        }
+    };
+    for l in code {
+        for ty in ["HashMap", "HashSet"] {
+            let mut from = 0;
+            while let Some(p) = l[from..].find(ty) {
+                let at = from + p;
+                from = at + ty.len();
+                let before = &l[..at];
+                let after = &l[at + ty.len()..];
+                if after.starts_with('<') {
+                    if let Some(n) = ident_before_colon(before) {
+                        push(&mut names, n);
+                    }
+                }
+                if before.trim_end().ends_with('=') {
+                    if let Some(n) = let_binding_name(before) {
+                        push(&mut names, n);
+                    }
+                }
+            }
+        }
+    }
+    names
+}
+
+/// `... name: [&[mut ]]` immediately before a `HashMap<`/`HashSet<`.
+fn ident_before_colon(before: &str) -> Option<String> {
+    let mut s = before.trim_end();
+    loop {
+        if let Some(r) = s.strip_suffix('&') {
+            s = r.trim_end();
+        } else if let Some(r) = s.strip_suffix("mut") {
+            // Only the keyword, not an identifier ending in "mut".
+            if r.ends_with(|c: char| c.is_ascii_alphanumeric() || c == '_') {
+                return None;
+            }
+            s = r.trim_end();
+        } else {
+            break;
+        }
+    }
+    let s = s.strip_suffix(':')?.trim_end();
+    let name = trailing_ident(s);
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// `let [mut] name` out of the text before an `=` that introduces a
+/// `HashMap`/`HashSet` value.
+fn let_binding_name(before: &str) -> Option<String> {
+    let p = before.rfind("let ")?;
+    let mut rest = before[p + 4..].trim_start();
+    if let Some(r) = rest.strip_prefix("mut ") {
+        rest = r.trim_start();
+    }
+    let end = rest
+        .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+        .unwrap_or(rest.len());
+    if end == 0 {
+        None
+    } else {
+        Some(rest[..end].to_string())
+    }
+}
+
+/// Trailing identifier of `s` (empty if `s` does not end in one).
+fn trailing_ident(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut j = s.len();
+    while j > 0 && (bytes[j - 1].is_ascii_alphanumeric() || bytes[j - 1] == b'_') {
+        j -= 1;
+    }
+    s[j..].to_string()
+}
+
+/// Receiver identifier of a method call at `code[li][col..]`, resolved
+/// across rustfmt chain breaks: when nothing but whitespace precedes the
+/// `.` on its line, the receiver is the trailing identifier of the
+/// previous non-blank code line (`self\n.usage\n.iter()` -> `usage`).
+fn receiver_ident(code: &[String], li: usize, col: usize) -> String {
+    let mut li = li;
+    let mut s: String = code[li][..col].to_string();
+    loop {
+        let t = s.trim_end();
+        if t.is_empty() {
+            if li == 0 {
+                return String::new();
+            }
+            li -= 1;
+            s = code[li].clone();
+            continue;
+        }
+        return trailing_ident(t);
+    }
+}
+
+/// Collect `hash-iter` candidates on line `i`: iteration methods whose
+/// receiver is a declared hash name, and `for .. in [&]name {` loops.
+fn hash_iter_candidates(
+    code: &[String],
+    i: usize,
+    names: &[String],
+    out: &mut Vec<(&'static str, String)>,
+) {
+    let l = &code[i];
+    for m in ITER_METHODS {
+        let mut from = 0;
+        while let Some(p) = l[from..].find(m) {
+            let at = from + p;
+            from = at + m.len();
+            let recv = receiver_ident(code, i, at);
+            if names.iter().any(|n| n == &recv) {
+                out.push((
+                    "hash-iter",
+                    format!(
+                        "`{recv}{m}..` iterates a HashMap/HashSet in a decision-path \
+                         module — fold the order away, sort the result, or \
+                         lint:allow(hash-iter, reason)"
+                    ),
+                ));
+            }
+        }
+    }
+    let mut from = 0;
+    while let Some(p) = l[from..].find(" in ") {
+        let at = from + p;
+        from = at + 4;
+        if !l[..at].contains("for") {
+            continue;
+        }
+        let mut rest = l[at + 4..].trim_start();
+        while let Some(r) = rest.strip_prefix('&') {
+            rest = r.trim_start();
+        }
+        if let Some(r) = rest.strip_prefix("mut ") {
+            rest = r.trim_start();
+        }
+        if let Some(r) = rest.strip_prefix("self.") {
+            rest = r;
+        }
+        let end = rest
+            .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+            .unwrap_or(rest.len());
+        let (name, tail) = rest.split_at(end);
+        let tail = tail.trim_start();
+        if (tail.is_empty() || tail.starts_with('{')) && names.iter().any(|n| n == name) {
+            out.push((
+                "hash-iter",
+                format!(
+                    "`for .. in {name}` iterates a HashMap/HashSet in a decision-path \
+                     module — fold the order away, sort the result, or \
+                     lint:allow(hash-iter, reason)"
+                ),
+            ));
+        }
+    }
+}
+
+/// Whether a candidate on line `i` is demonstrably order-folded: a
+/// commutative fold or a canonicalizing sort on the candidate line or
+/// within the next [`FOLD_WINDOW`] lines.
+fn order_folded(code: &[String], i: usize) -> bool {
+    code.iter()
+        .skip(i)
+        .take(FOLD_WINDOW + 1)
+        .any(|l| FOLD_TOKENS.iter().any(|t| l.contains(t)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- hash-iter ----
+
+    #[test]
+    fn hash_iter_flags_declared_map_iteration_in_decision_module() {
+        let src = "struct S { running: HashMap<u64, u32> }\n\
+                   fn f(s: &S) -> Vec<u32> {\n\
+                   \x20   s.running.values().cloned().collect()\n\
+                   }\n";
+        let f = scan_file("sched/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["hash-iter"]);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn hash_iter_flags_for_in_loop() {
+        let src = "struct S { claimed: HashMap<usize, usize> }\n\
+                   fn f(s: &S) {\n\
+                   \x20   for (k, v) in &s.claimed {\n\
+                   \x20       drop((k, v));\n\
+                   \x20   }\n\
+                   }\n";
+        // `&s.claimed` ends in ident `claimed` followed by ` {`.
+        let f = scan_file("sim/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["hash-iter"]);
+    }
+
+    #[test]
+    fn hash_iter_resolves_receiver_across_chain_breaks() {
+        let src = "struct S { usage: HashMap<u32, u32> }\n\
+                   fn f(s: &S) -> Vec<u32> {\n\
+                   \x20   s.usage\n\
+                   \x20       .iter()\n\
+                   \x20       .map(|(_, v)| *v)\n\
+                   \x20       .collect()\n\
+                   }\n";
+        let f = scan_file("sched/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["hash-iter"]);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn hash_iter_ignores_non_hash_receivers_with_hashlike_names() {
+        // A slice parameter named like a hash field elsewhere in the
+        // repo must not flag: tracking is per-file.
+        let src = "fn f(running: &[u32]) -> u32 {\n\
+                   \x20   let mut t = 0;\n\
+                   \x20   for r in running.iter() {\n\
+                   \x20       t += *r;\n\
+                   \x20   }\n\
+                   \x20   t\n\
+                   }\n";
+        assert!(scan_file("sched/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_iter_ignores_non_decision_modules() {
+        let src = "struct S { m: HashMap<u64, u32> }\n\
+                   fn f(s: &S) -> Vec<u32> { s.m.values().cloned().collect() }\n";
+        assert!(scan_file("util/x.rs", src).is_empty());
+        assert!(scan_file("trace/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_iter_accepts_order_folded_sites() {
+        let sum = "struct S { m: HashMap<u64, u32> }\n\
+                   fn f(s: &S) -> u32 { s.m.values().sum() }\n";
+        assert!(scan_file("sched/x.rs", sum).is_empty());
+        let sorted = "struct S { m: HashMap<u64, u32> }\n\
+                      fn f(s: &S) -> Vec<u32> {\n\
+                      \x20   let mut v: Vec<u32> = s.m.values().cloned().collect();\n\
+                      \x20   v.sort_unstable();\n\
+                      \x20   v\n\
+                      }\n";
+        assert!(scan_file("sched/x.rs", sorted).is_empty());
+    }
+
+    #[test]
+    fn hash_iter_flags_let_bound_maps() {
+        let src = "fn f() -> Vec<u32> {\n\
+                   \x20   let mut m = HashMap::new();\n\
+                   \x20   m.insert(1u64, 2u32);\n\
+                   \x20   m.values().cloned().collect()\n\
+                   }\n";
+        let f = scan_file("core/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["hash-iter"]);
+        assert_eq!(f[0].line, 4);
+    }
+
+    // ---- lint:allow ----
+
+    #[test]
+    fn allow_on_preceding_comment_line_suppresses() {
+        let src = "struct S { m: HashMap<u64, u32> }\n\
+                   fn f(s: &S) -> Vec<u32> {\n\
+                   \x20   // lint:allow(hash-iter, order folded downstream by caller)\n\
+                   \x20   s.m.values().cloned().collect()\n\
+                   }\n";
+        assert!(scan_file("sched/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn trailing_allow_suppresses() {
+        let src = "fn f(a: f64, b: f64) -> std::cmp::Ordering {\n\
+                   \x20   a.partial_cmp(&b).unwrap() // lint:allow(partial-cmp, fixture)\n\
+                   }\n";
+        assert!(scan_file("metrics/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unused_allow_is_a_finding() {
+        let src = "// lint:allow(hash-iter, nothing here iterates)\n\
+                   fn f() {}\n";
+        let f = scan_file("sched/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["unused-allow"]);
+    }
+
+    #[test]
+    fn bad_allow_unknown_rule_and_missing_reason() {
+        let src = "// lint:allow(no-such-rule, why)\n\
+                   // lint:allow(hash-iter)\n\
+                   fn f() {}\n";
+        let f = scan_file("sched/x.rs", src);
+        assert_eq!(rules_of(&f), vec!["bad-allow", "bad-allow"]);
+    }
+
+    // ---- partial-cmp ----
+
+    #[test]
+    fn partial_cmp_call_sites_flag_everywhere() {
+        let src = "fn f(mut v: Vec<f64>) {\n\
+                   \x20   v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n\
+                   }\n";
+        assert_eq!(rules_of(&scan_file("metrics/x.rs", src)), vec!["partial-cmp"]);
+        assert_eq!(rules_of(&scan_file("harness/x.rs", src)), vec!["partial-cmp"]);
+    }
+
+    #[test]
+    fn partial_cmp_trait_impl_definition_is_not_a_call_site() {
+        let src = "impl PartialOrd for K {\n\
+                   \x20   fn partial_cmp(&self, other: &Self) -> Option<Ordering> {\n\
+                   \x20       Some(self.cmp(other))\n\
+                   \x20   }\n\
+                   }\n";
+        assert!(scan_file("core/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn total_cmp_passes() {
+        let src = "fn f(mut v: Vec<f64>) { v.sort_by(|a, b| a.total_cmp(b)); }\n";
+        assert!(scan_file("sched/x.rs", src).is_empty());
+    }
+
+    // ---- wall-clock ----
+
+    #[test]
+    fn wall_clock_flags_decision_code_but_not_measurement_code() {
+        let src = "fn f() { let t = std::time::Instant::now(); drop(t); }\n";
+        assert_eq!(rules_of(&scan_file("sim/x.rs", src)), vec!["wall-clock"]);
+        assert_eq!(rules_of(&scan_file("trace/x.rs", src)), vec!["wall-clock"]);
+        assert!(scan_file("harness/x.rs", src).is_empty());
+        assert!(scan_file("parallel/x.rs", src).is_empty());
+        assert!(scan_file("util/bench.rs", src).is_empty());
+        assert!(scan_file("main.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_in_comments_is_ignored() {
+        let src = "// Instant::now would be a hazard here\nfn f() {}\n";
+        assert!(scan_file("sim/x.rs", src).is_empty());
+    }
+
+    // ---- ambient-rand ----
+
+    #[test]
+    fn ambient_randomness_flags_everywhere() {
+        let src = "fn f() { let x = rand::random::<u64>(); drop(x); }\n";
+        assert_eq!(rules_of(&scan_file("harness/x.rs", src)), vec!["ambient-rand"]);
+        let src2 = "fn g() { let mut r = thread_rng(); drop(&mut r); }\n";
+        assert_eq!(rules_of(&scan_file("util/x.rs", src2)), vec!["ambient-rand"]);
+    }
+
+    // ---- the repo itself ----
+
+    #[test]
+    fn repo_rule_ids_are_unique_and_documented() {
+        for (i, r) in RULES.iter().enumerate() {
+            assert!(!r.doc.is_empty());
+            assert!(RULES.iter().skip(i + 1).all(|o| o.id != r.id), "dup id {}", r.id);
+        }
+    }
+}

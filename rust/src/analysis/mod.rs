@@ -1,0 +1,22 @@
+//! Correctness tooling for the determinism contract.
+//!
+//! The crate's headline guarantee — byte-identical fingerprints across
+//! runs, shard counts, and ingestion formats — is a *global* property:
+//! one hasher-ordered iteration or NaN-swallowing comparator anywhere in
+//! a decision path silently voids it. This module makes the contract
+//! enforceable instead of aspirational, in two layers:
+//!
+//! * [`lint`] — a dependency-free static pass over `rust/src/` that
+//!   flags determinism hazards at review time (`HashMap`/`HashSet`
+//!   iteration in decision modules, `partial_cmp` comparators,
+//!   wall-clock reads outside measurement code, ambient randomness).
+//!   `rust/tests/lint.rs` runs it as part of `cargo test`.
+//! * [`sanitizer`] — runtime invariant checks threaded through the
+//!   scheduler component, the event queue, the engine tick loop, and
+//!   the sharded rank driver. Always on under `debug_assertions`;
+//!   forced on in release builds with `--features sanitize`. A violated
+//!   invariant panics with a structured report instead of corrupting a
+//!   result.
+
+pub mod lint;
+pub mod sanitizer;

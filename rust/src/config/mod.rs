@@ -9,7 +9,7 @@ use crate::sim::{
     AutoHorizonParams, FaultConfig, Horizon, ReservationSpec, Routing,
     DEFAULT_FAIRSHARE_HALF_LIFE,
 };
-use crate::trace::{Das2Model, SdscSp2Model, Workload};
+use crate::trace::{Das2Model, SdscSp2Model, TraceFormat, Workload};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 
@@ -282,6 +282,146 @@ impl ExperimentConfig {
         let text =
             std::fs::read_to_string(path).with_context(|| format!("reading config {path:?}"))?;
         Self::parse(&text)
+    }
+
+    /// Static semantic validation for `sst-sched check`: problems a
+    /// structurally valid config can still have, collected in one pass
+    /// — every finding is reported at once, never fail-fast, so one
+    /// `check` run fixes one config. Structural errors (unparseable
+    /// JSON, unknown enum values, hard range violations) still surface
+    /// through [`ExperimentConfig::parse`]'s error.
+    pub fn check(text: &str) -> Result<Vec<String>> {
+        let cfg = Self::parse(text)?;
+        let v = Json::parse(text).expect("validated by parse above");
+        let mut findings = Vec::new();
+
+        // -- workload --------------------------------------------------
+        if cfg.arrival_scale <= 0.0 || cfg.arrival_scale.is_nan() {
+            findings.push(format!(
+                "workload.arrival_scale must be > 0 (got {}): scaling arrivals by it \
+                 would collapse every submit time",
+                cfg.arrival_scale
+            ));
+        }
+        let trace = match &cfg.source {
+            WorkloadSource::Swf(p) => Some((p.as_str(), "swf")),
+            WorkloadSource::Gwf(p) => Some((p.as_str(), "gwf")),
+            WorkloadSource::Stf(p) => Some((p.as_str(), "stf")),
+            WorkloadSource::Das2 | WorkloadSource::SdscSp2 => None,
+        };
+        if let Some((path, want)) = trace {
+            let ext = std::path::Path::new(path)
+                .extension()
+                .and_then(|e| e.to_str())
+                .map(|e| e.to_ascii_lowercase());
+            if let Some(ext) = ext {
+                if ext != want && ["swf", "gwf", "stf"].contains(&ext.as_str()) {
+                    findings.push(format!(
+                        "workload: kind is \"{want}\" but path {path:?} ends in .{ext} — \
+                         trace format mismatch?"
+                    ));
+                }
+            }
+            if !std::path::Path::new(path).exists() {
+                findings.push(format!("workload.path {path:?} does not exist"));
+            }
+        }
+
+        // -- reservations vs machine size ------------------------------
+        // `.stf` machines live in the file header, so without a platform
+        // override there is no static size to check against.
+        let machine_nodes = cfg.nodes.or(match &cfg.source {
+            WorkloadSource::Das2 => Some(Das2Model::default().nodes),
+            WorkloadSource::SdscSp2 => Some(SdscSp2Model::default().nodes),
+            WorkloadSource::Swf(_) => Some(TraceFormat::Swf.default_machine().0),
+            WorkloadSource::Gwf(_) => Some(TraceFormat::Gwf.default_machine().0),
+            WorkloadSource::Stf(_) => None,
+        });
+        if let Some(n) = machine_nodes {
+            for (i, r) in cfg.reservations.iter().enumerate() {
+                if r.nodes > n {
+                    findings.push(format!(
+                        "reservations[{i}]: wants {} nodes but the machine has {n}",
+                        r.nodes
+                    ));
+                }
+            }
+            // Sweep the window edges: at any instant the concurrently
+            // reserved node count must fit the machine. Releases sort
+            // before claims at the same tick (windows are end-exclusive).
+            let mut edges: Vec<(u64, i64)> = Vec::new();
+            for r in &cfg.reservations {
+                edges.push((r.start, r.nodes as i64));
+                edges.push((r.start.saturating_add(r.duration), -(r.nodes as i64)));
+            }
+            edges.sort_unstable();
+            let mut active = 0i64;
+            let mut worst = (0u64, 0i64);
+            for (t, d) in edges {
+                active += d;
+                if active > worst.1 {
+                    worst = (t, active);
+                }
+            }
+            if worst.1 > n as i64 {
+                findings.push(format!(
+                    "reservations: {} nodes reserved concurrently at t={} but the \
+                     machine has {n}",
+                    worst.1, worst.0
+                ));
+            }
+        }
+
+        // -- faults ----------------------------------------------------
+        if cfg.faults.enabled() {
+            if cfg.faults.mtbf < cfg.faults.mttr {
+                findings.push(format!(
+                    "faults: mtbf {} < mttr {} — nodes spend more time under repair \
+                     than in service; is this intended?",
+                    cfg.faults.mtbf, cfg.faults.mttr
+                ));
+            }
+            if cfg.faults.until == Some(0) {
+                findings.push(
+                    "faults.until = 0 disables injection entirely; drop the key or the \
+                     faults section"
+                        .to_string(),
+                );
+            }
+        }
+
+        // -- federation ------------------------------------------------
+        if v.get("federation").is_some() && cfg.shards == 0 {
+            findings.push(
+                "federation: section present but shards = 0 keeps the sharded engine \
+                 off; set federation.shards >= 1"
+                    .to_string(),
+            );
+        }
+        if cfg.shards > 0 && cfg.ranks > 1 {
+            findings.push(format!(
+                "federation.shards = {} and parallel.ranks = {} select two different \
+                 parallel engines; pick one",
+                cfg.shards, cfg.ranks
+            ));
+        }
+
+        // -- scheduler knobs that silently do nothing ------------------
+        if cfg.memory_aware && cfg.mem_per_node == 0 {
+            findings.push(
+                "scheduler.memory_aware = true has no effect with \
+                 platform.mem_per_node = 0"
+                    .to_string(),
+            );
+        }
+        if cfg.priority_bands > 0 && !cfg.preemption.enabled() {
+            findings.push(
+                "preemption.priority_bands is set but preemption.mode = \"none\" — \
+                 bands are assigned and never consulted"
+                    .to_string(),
+            );
+        }
+        Ok(findings)
     }
 
     /// Serialize (round-trips through [`ExperimentConfig::parse`]).
@@ -745,6 +885,86 @@ mod tests {
             r#"{"federation": {"routing": "tarot"}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn check_passes_clean_configs() {
+        assert_eq!(ExperimentConfig::check(SAMPLE).unwrap(), Vec::<String>::new());
+        assert_eq!(ExperimentConfig::check(FAULTY).unwrap(), Vec::<String>::new());
+        assert_eq!(ExperimentConfig::check("{}").unwrap(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn check_collects_every_finding_at_once() {
+        let bad = r#"{
+            "workload": {"kind": "swf", "path": "missing.gwf", "arrival_scale": 0},
+            "platform": {"nodes": 16},
+            "scheduler": {"memory_aware": true},
+            "federation": {"shards": 0},
+            "faults": {"mtbf": 100, "mttr": 5000},
+            "reservations": [{"start": 0, "duration": 100, "nodes": 99},
+                             {"start": 50, "duration": 100, "nodes": 10},
+                             {"start": 60, "duration": 100, "nodes": 10}]
+        }"#;
+        let f = ExperimentConfig::check(bad).unwrap();
+        // One pass reports everything — not just the first problem.
+        assert!(f.len() >= 8, "expected all findings at once, got {f:#?}");
+        for needle in [
+            "arrival_scale",
+            "does not exist",
+            "format mismatch",
+            "wants 99 nodes",
+            "reserved concurrently",
+            "mtbf 100 < mttr 5000",
+            "shards = 0",
+            "memory_aware",
+        ] {
+            assert!(
+                f.iter().any(|m| m.contains(needle)),
+                "missing finding about {needle:?} in {f:#?}"
+            );
+        }
+    }
+
+    #[test]
+    fn check_flags_window_overlap_but_not_disjoint_windows() {
+        // Two 10-node reservations on a 16-node machine: fine apart,
+        // flagged when their windows overlap.
+        let disjoint = r#"{
+            "platform": {"nodes": 16},
+            "reservations": [{"start": 0, "duration": 100, "nodes": 10},
+                             {"start": 100, "duration": 100, "nodes": 10}]
+        }"#;
+        assert_eq!(ExperimentConfig::check(disjoint).unwrap(), Vec::<String>::new());
+        let overlapping = r#"{
+            "platform": {"nodes": 16},
+            "reservations": [{"start": 0, "duration": 150, "nodes": 10},
+                             {"start": 100, "duration": 100, "nodes": 10}]
+        }"#;
+        let f = ExperimentConfig::check(overlapping).unwrap();
+        assert_eq!(f.len(), 1, "{f:#?}");
+        assert!(f[0].contains("20 nodes reserved concurrently at t=100"));
+    }
+
+    #[test]
+    fn check_engine_conflict_and_inert_bands() {
+        let f = ExperimentConfig::check(
+            r#"{
+                "parallel": {"ranks": 4},
+                "federation": {"shards": 2},
+                "preemption": {"priority_bands": 3}
+            }"#,
+        )
+        .unwrap();
+        assert!(f.iter().any(|m| m.contains("two different parallel engines")), "{f:#?}");
+        assert!(f.iter().any(|m| m.contains("never consulted")), "{f:#?}");
+        assert_eq!(f.len(), 2, "{f:#?}");
+    }
+
+    #[test]
+    fn check_still_fails_fast_on_structural_errors() {
+        assert!(ExperimentConfig::check("not json").is_err());
+        assert!(ExperimentConfig::check(r#"{"scheduler": {"policy": "magic"}}"#).is_err());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! inclusive/exclusive window mode is folded into a single half-open
 //! cut *before* the loop, so the per-event path has exactly one branch.
 
+use crate::analysis::sanitizer;
 use crate::core::component::{Component, Ctx, Emit};
 use crate::core::event::{ComponentId, EventQueue, Priority};
 use crate::core::link::LinkTable;
@@ -176,7 +177,9 @@ impl<P> Engine<P> {
         let before = self.events_processed;
         let mut stop = false;
         while let Some(ev) = self.queue.pop_before(bound) {
-            debug_assert!(ev.time >= self.now, "time went backwards");
+            if sanitizer::ACTIVE {
+                sanitizer::check_engine_time(self.now.ticks(), ev.time.ticks());
+            }
             self.now = ev.time;
             self.events_processed += 1;
             let mut ctx = Ctx {
@@ -217,7 +220,9 @@ impl<P> Engine<P> {
         let mut stop = false;
         loop {
             let Some(ev) = self.queue.pop_before(cut) else { break };
-            debug_assert!(ev.time >= self.now, "time went backwards");
+            if sanitizer::ACTIVE {
+                sanitizer::check_engine_time(self.now.ticks(), ev.time.ticks());
+            }
             self.now = ev.time;
             self.events_processed += 1;
             let mut ctx = Ctx {

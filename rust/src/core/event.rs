@@ -62,6 +62,7 @@
 //! time-bucketing cannot split it further (the `(priority, seq)` sort
 //! is the only order left to establish).
 
+use crate::analysis::sanitizer;
 use crate::core::time::SimTime;
 use std::cmp::Ordering;
 
@@ -212,6 +213,9 @@ pub struct EventQueue<P> {
     top_max: u64,
     next_seq: u64,
     len: usize,
+    /// Key of the last popped event, for the sanitizer's pop-order
+    /// check (unused when `sanitizer::ACTIVE` is false).
+    san_last_pop: Option<(u64, u8, u64)>,
 }
 
 impl<P> Default for EventQueue<P> {
@@ -225,6 +229,7 @@ impl<P> Default for EventQueue<P> {
             top_max: 0,
             next_seq: 0,
             len: 0,
+            san_last_pop: None,
         }
     }
 }
@@ -360,11 +365,26 @@ impl<P> EventQueue<P> {
         self.bottom.last().map(|e| e.time)
     }
 
+    /// Pop-order sanitizer hook: total-order keys never regress across
+    /// pops (compiles to nothing in ordinary release builds).
+    #[inline]
+    fn note_pop(&mut self, ev: &Scheduled<P>) {
+        if sanitizer::ACTIVE {
+            sanitizer::check_pop_order(
+                &mut self.san_last_pop,
+                ev.time.ticks(),
+                ev.priority.0,
+                ev.seq,
+            );
+        }
+    }
+
     pub fn pop(&mut self) -> Option<Scheduled<P>> {
         self.prepare_bottom();
         let ev = self.bottom.pop();
-        if ev.is_some() {
+        if let Some(e) = &ev {
             self.len -= 1;
+            self.note_pop(e);
         }
         ev
     }
@@ -378,7 +398,9 @@ impl<P> EventQueue<P> {
         match self.bottom.last() {
             Some(e) if e.time <= bound => {
                 self.len -= 1;
-                self.bottom.pop()
+                let ev = self.bottom.pop().expect("peeked event vanished");
+                self.note_pop(&ev);
+                Some(ev)
             }
             _ => None,
         }
@@ -392,7 +414,9 @@ impl<P> EventQueue<P> {
         match self.bottom.last() {
             Some(e) if e.time < bound => {
                 self.len -= 1;
-                self.bottom.pop()
+                let ev = self.bottom.pop().expect("peeked event vanished");
+                self.note_pop(&ev);
+                Some(ev)
             }
             _ => None,
         }

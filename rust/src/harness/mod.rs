@@ -237,7 +237,7 @@ pub fn fig5(sp2: bool, job_scales: &[usize], ranks_list: &[usize], seed: u64) ->
                 walls.push(rep.wall.as_secs_f64() * 1e3);
                 last = Some(rep);
             }
-            walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            walls.sort_by(|a, b| a.total_cmp(b));
             let wall_ms = walls[walls.len() / 2];
             let rep = last.unwrap();
             if ranks == ranks_list[0] {
@@ -301,7 +301,7 @@ pub fn fig6_wide(
             walls.push(rep.wall.as_secs_f64() * 1e3);
             last = Some(rep);
         }
-        walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        walls.sort_by(|a, b| a.total_cmp(b));
         let wall_ms = walls[walls.len() / 2];
         let rep = last.unwrap();
         if base_ms.is_none() {

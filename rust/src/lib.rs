@@ -142,7 +142,43 @@
 //!   manager, executor, statistics collector.
 //! * [`metrics`], [`config`], [`harness`] — reporting, configuration, and
 //!   per-figure experiment runners.
+//!
+//! ## Determinism contract & correctness tooling
+//!
+//! The headline guarantee — byte-identical result fingerprints across
+//! runs, shard counts, and ingestion formats — is enforced by two
+//! always-available layers in [`analysis`], not just by end-to-end
+//! golden tests:
+//!
+//! * **Static lint** ([`analysis::lint`], run by `cargo test` via
+//!   `rust/tests/lint.rs`): flags `HashMap`/`HashSet` iteration in the
+//!   decision-path modules (`sched/`, `sim/`, `core/`, `parallel/`,
+//!   `resources/`, `workflow/`) unless the result is order-folded or
+//!   sorted; `.partial_cmp(..)` call sites anywhere (use `total_cmp` or
+//!   integer keys); `Instant::now`/`SystemTime` outside `harness/`,
+//!   `parallel/` timing, `util/bench.rs`, and `main.rs`; and any
+//!   ambient randomness (`thread_rng` etc. — randomness flows from the
+//!   seeded simulation RNG only). A genuine exception is annotated in
+//!   place as `// lint:allow(<rule-id>, <reason>)` — trailing the line
+//!   or on the comment line directly above it. The reason is mandatory
+//!   and must not contain `)` (the lint is a line scanner); an allow
+//!   that no longer matches a violation is itself an error, so escapes
+//!   cannot rot.
+//! * **Runtime sanitizer** ([`analysis::sanitizer`]): on in every debug
+//!   build, and forced on in release with `--features sanitize`. At
+//!   event boundaries it checks core/memory conservation against
+//!   per-node truth, the incremental [`resources::AvailabilityProfile`]
+//!   against a from-scratch rebuild, event-queue pop-order
+//!   monotonicity with unique `(time, priority, seq)` keys, job
+//!   segment accounting (`executed == runtime + overhead + lost`), and
+//!   sharded delivery against the YAWNS window bound. A violation
+//!   panics with a structured report (tick, site, invariant, expected
+//!   vs got). Run a release scenario under
+//!   `cargo run --release --features sanitize -- run cfg.json` before
+//!   blessing new goldens or landing changes to the scheduler core,
+//!   the event queue, or the profile algebra.
 
+pub mod analysis;
 pub mod baseline;
 pub mod config;
 pub mod core;

@@ -7,6 +7,7 @@
 //!                 [--ranks R] [--lookahead S] [--seed S]
 //!                 [--fast-parse]              # zero-copy trace ingestion
 //!                 [--config experiment.json]
+//! sst-sched check <experiment.json>           # static config validation
 //! sst-sched convert <in.swf|in.gwf> <out.stf> # re-encode a trace as binary stf
 //! sst-sched fig   3a|3b|4a|4b|5a|5b|6|7       # regenerate a paper figure
 //! sst-sched workflow --spec wf.json | --gen sipht|montage|epigenomics|...
@@ -51,6 +52,10 @@ USAGE:
                 # policy x preemption-mode comparison on one failure trace
   sst-sched bench [--smoke] [--out BENCH_engine.json]
                 # engine_throughput suite -> machine-readable perf JSON
+  sst-sched check <experiment.json>
+                # static config validation: reports EVERY semantic finding at
+                # once (reservation overlap/size, fault sanity, federation,
+                # trace path/format) without running anything
   sst-sched convert <in.swf|in.gwf|in.stf> <out.stf>
                 # re-encode any readable trace as compact binary stf
   sst-sched fig <3a|3b|4a|4b|5a|5b|6|7> [--jobs N] [--seed S]
@@ -75,6 +80,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
+        "check" => cmd_check(&args),
         "bench" => cmd_bench(&args),
         "convert" => cmd_convert(&args),
         "faults" => cmd_faults(&args),
@@ -197,6 +203,31 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
         SimDuration(args.u64_or("starvation", cfg.preemption.starvation_threshold.ticks())?);
     cfg.priority_bands = args.u64_or("priority-bands", cfg.priority_bands as u64)? as u8;
     Ok(cfg)
+}
+
+/// Static config validation (`sst-sched check <config.json>`): parse the
+/// experiment file and report every semantic problem in one pass — no
+/// simulation runs. Prints "ok" and exits 0 when clean; lists every
+/// finding and exits nonzero otherwise (never fail-fast, so one check
+/// run fixes one config).
+fn cmd_check(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .cloned()
+        .context("usage: sst-sched check <experiment.json>")?;
+    args.reject_unknown()?;
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("reading config {path:?}"))?;
+    let findings = ExperimentConfig::check(&text)?;
+    if findings.is_empty() {
+        println!("{path}: ok");
+        return Ok(());
+    }
+    for m in &findings {
+        eprintln!("{path}: {m}");
+    }
+    bail!("{} finding(s) in {path}", findings.len());
 }
 
 /// Run the engine_throughput suite and write machine-readable results —

@@ -70,7 +70,7 @@ pub fn wait_stats(jobs: &[Job]) -> WaitStats {
     if waits.is_empty() {
         return WaitStats::default();
     }
-    waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    waits.sort_by(|a, b| a.total_cmp(b));
     let n = waits.len();
     WaitStats {
         jobs: n,

@@ -26,6 +26,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::analysis::sanitizer;
 use crate::core::time::{SimDuration, SimTime};
 use crate::job::Job;
 use crate::metrics::wait_stats;
@@ -155,6 +156,9 @@ struct ShardRank {
     domains: Vec<DomainSim>,
     collector: Arc<Mutex<Vec<Option<DomainOutcome>>>>,
     router_out: Arc<Mutex<RouterOutcome>>,
+    /// Right edge of the last completed YAWNS window, for the
+    /// sanitizer's conservative-delivery check.
+    san_window_bound: u64,
 }
 
 impl ShardRank {
@@ -199,7 +203,16 @@ impl ShardRank {
                 fp: FNV_OFFSET,
             }
         });
-        ShardRank { me, shards, route_latency, router, domains, collector, router_out }
+        ShardRank {
+            me,
+            shards,
+            route_latency,
+            router,
+            domains,
+            collector,
+            router_out,
+            san_window_bound: 0,
+        }
     }
 }
 
@@ -223,7 +236,7 @@ impl RankLogic for ShardRank {
     }
 
     fn run_window(&mut self, bound: u64, outbox: &mut Vec<(usize, u64, RouteMsg)>) {
-        let ShardRank { me, shards, route_latency, router, domains, .. } = self;
+        let ShardRank { me, shards, route_latency, router, domains, san_window_bound, .. } = self;
         if let Some(r) = router {
             // Route every arrival inside this window. Delivery at
             // `t + route_latency >= bound` keeps the send conservative
@@ -260,9 +273,13 @@ impl RankLogic for ShardRank {
         for d in domains {
             d.inst.run_window(SimTime(bound));
         }
+        *san_window_bound = bound;
     }
 
     fn receive(&mut self, time: u64, msg: RouteMsg) {
+        if sanitizer::ACTIVE {
+            sanitizer::check_delivery(time, self.san_window_bound, self.me);
+        }
         let d = self
             .domains
             .iter_mut()

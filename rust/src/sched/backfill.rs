@@ -184,10 +184,7 @@ impl BackfillScheduler {
         rank.clear();
         rank.extend(0..cand_ids.len());
         rank.sort_by(|&a, &b| {
-            scores.priority[b]
-                .partial_cmp(&scores.priority[a])
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(&b))
+            scores.priority[b].total_cmp(&scores.priority[a]).then(a.cmp(&b))
         });
 
         // Phase 4 — admit candidates; exact integer re-check is

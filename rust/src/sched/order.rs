@@ -275,6 +275,7 @@ impl QueueOrder for FairShare {
     fn usage_snapshot(&self, now: SimTime) -> Vec<UserShare> {
         let mut out: Vec<UserShare> = self
             .usage
+            // lint:allow(hash-iter, snapshot sorted by user and group before returning)
             .iter()
             .map(|(&(user, group), &(v, last))| UserShare {
                 user,

@@ -13,6 +13,7 @@
 //! transitions (node failure/repair, reservation claim/expiry), so
 //! scheduling rounds no longer sort and rebuild release vectors.
 
+use crate::analysis::sanitizer;
 use crate::core::component::{Component, Ctx};
 use crate::core::event::{ComponentId, Priority};
 use crate::core::stats::TimeSeries;
@@ -386,6 +387,11 @@ pub struct SchedulerComponent {
     /// arrival droughts. Written only inside the single-threaded event
     /// loop — deterministic.
     pub activity_mark: Option<Arc<AtomicU64>>,
+    /// Runtime sanitizer cadence state (checks are no-ops unless
+    /// `sanitizer::ACTIVE` — every debug build, `--features sanitize`
+    /// in release). The sanitizer only ever *reads* simulation state,
+    /// so sanitize-on and sanitize-off runs make identical decisions.
+    san: sanitizer::SimSanitizer,
 }
 
 impl SchedulerComponent {
@@ -443,6 +449,7 @@ impl SchedulerComponent {
             overhead_work: 0.0,
             starvation_timer: None,
             activity_mark: None,
+            san: sanitizer::SimSanitizer::new(),
         }
     }
 
@@ -615,6 +622,7 @@ impl SchedulerComponent {
     /// buffer (`running_scratch`) while `self.running` stays borrowed.
     fn fill_running_snapshot(running: &HashMap<JobId, RunningEntry>, out: &mut Vec<RunningJob>) {
         out.clear();
+        // lint:allow(hash-iter, snapshot is sorted by job id below so hasher order never escapes)
         out.extend(running.values().map(|e| RunningJob {
             id: e.job.id,
             cores: e.alloc.cores(),
@@ -622,6 +630,9 @@ impl SchedulerComponent {
             start: e.job.last_start.unwrap_or(SimTime::ZERO),
             priority: e.job.priority,
         }));
+        // Consumers (the preemption layer's victim selection) see the
+        // running set in ascending job-id order, never hasher order.
+        out.sort_unstable_by_key(|r| r.id);
     }
 
     /// Ids of running jobs whose allocation touches any node in `nodes`,
@@ -711,6 +722,7 @@ impl SchedulerComponent {
     /// must always be zero (`Draining` keeps its occupants on purpose;
     /// only `Down` nodes may never host a running job).
     fn audit_placements(&mut self) {
+        // lint:allow(hash-iter, commutative violation count - iteration order cannot affect it)
         for e in self.running.values() {
             for &(nid, _, _) in &e.alloc.taken {
                 if self.cluster.node_state(nid) == NodeState::Down {
@@ -768,6 +780,7 @@ impl SchedulerComponent {
         // Running jobs: resources rejoin the pool at the estimated end —
         // per node, because a draining node hands its portion back only
         // once both the job and the claiming reservation are done.
+        // lint:allow(hash-iter, deltas are sorted inside the Timeline rebuild - order never escapes)
         for entry in self.running.values_mut() {
             entry.hold.clear();
             let est = entry.est_end.ticks();
@@ -805,8 +818,39 @@ impl SchedulerComponent {
                 entry.hold.iter().filter(|h| h.1.memory_mb > 0).map(|&(t, d)| (t, d.memory_mb as i64)),
             );
         }
+        self.push_capacity_deltas(nowt, horizon, &mut deltas, &mut mem_deltas);
+        if mem_aware {
+            self.profile.rebuild_v(
+                nowt,
+                ResourceVector::new(self.cluster.free_cores(), self.cluster.free_memory_mb()),
+                deltas,
+                mem_deltas,
+            );
+        } else {
+            self.profile.rebuild(nowt, self.cluster.free_cores(), deltas);
+        }
+        self.last_resync = nowt;
+        self.profile_stale = false;
+    }
+
+    /// Non-running capacity deltas shared by [`Self::resync_profile`]
+    /// and the sanitizer's read-only rebuild oracle: claimed nodes,
+    /// pending repairs, and future reservation windows. Read-only over
+    /// `self`, so the oracle path cannot perturb simulation state.
+    fn push_capacity_deltas(
+        &self,
+        nowt: u64,
+        horizon: u64,
+        deltas: &mut Vec<(u64, i64)>,
+        mem_deltas: &mut Vec<(u64, i64)>,
+    ) {
+        let mem_aware = self.memory_aware;
+        let clamp = |t: u64| Self::clamp_to_horizon(horizon, nowt, t);
+        let resv_ends: Vec<u64> =
+            (0..self.reservations.len()).map(|r| Self::resv_end(&self.reservations, r)).collect();
         // Claimed nodes: the unoccupied portion returns when the
         // reservation expires.
+        // lint:allow(hash-iter, deltas are sorted inside the Timeline rebuild - order never escapes)
         for (&nid, &res) in &self.claimed {
             let node = &self.cluster.nodes()[nid];
             match node.state {
@@ -828,6 +872,7 @@ impl SchedulerComponent {
         // Failed nodes: full capacity back at the known repair instant
         // (or at reservation expiry when a claim will grab the node on
         // repair, whichever is later).
+        // lint:allow(hash-iter, deltas are sorted inside the Timeline rebuild - order never escapes)
         for (&nid, &t_repair) in &self.pending_repairs {
             let t = match self.claimed.get(&nid) {
                 Some(&res) => t_repair.max(resv_ends[res]),
@@ -859,18 +904,87 @@ impl SchedulerComponent {
                 mem_deltas.push((end, mem as i64));
             }
         }
-        if mem_aware {
-            self.profile.rebuild_v(
-                nowt,
-                ResourceVector::new(self.cluster.free_cores(), self.cluster.free_memory_mb()),
-                deltas,
-                mem_deltas,
-            );
-        } else {
-            self.profile.rebuild(nowt, self.cluster.free_cores(), deltas);
+    }
+
+    /// Sanitizer oracle: rebuild an availability profile from scratch —
+    /// re-deriving every running entry's capacity-return deltas from its
+    /// allocation, estimated end and current node states (the exact
+    /// encoding `resync_profile` uses), plus the shared capacity deltas —
+    /// and require it to equal the incrementally maintained one,
+    /// value-wise. Read-only (unlike `resync_profile`, which rewrites
+    /// stored entry holds), so running it cannot change any later
+    /// decision: sanitize-on runs stay byte-identical to sanitize-off
+    /// runs. It must re-derive rather than replay stored holds because a
+    /// resync drops overrun holds from storage (they become immediate
+    /// free capacity); replaying storage would go blind to those. Only
+    /// meaningful on exact-horizon, non-stale profiles — clamped-horizon
+    /// resyncs legitimately re-encode with a fresher clamp (see
+    /// ROADMAP), and a stale profile is rebuilt at dispatch before
+    /// anyone reads it.
+    fn verify_profile_against_rebuild(&self, now: SimTime) {
+        let nowt = now.ticks();
+        let horizon = self.effective_horizon;
+        let clamp = |t: u64| Self::clamp_to_horizon(horizon, nowt, t);
+        let resv_ends: Vec<u64> =
+            (0..self.reservations.len()).map(|r| Self::resv_end(&self.reservations, r)).collect();
+        let mut deltas: Vec<(u64, i64)> = Vec::with_capacity(self.running.len() + 8);
+        let mut mem_deltas: Vec<(u64, i64)> = Vec::new();
+        // lint:allow(hash-iter, deltas are sorted inside the Timeline rebuild - order never escapes)
+        for entry in self.running.values() {
+            let est = entry.est_end.ticks();
+            for &(nid, c, m) in &entry.alloc.taken {
+                let t = match self.cluster.node_state(nid) {
+                    NodeState::Up => est,
+                    NodeState::Draining => match self.claimed.get(&nid) {
+                        Some(&res) => est.max(resv_ends[res]),
+                        None => est,
+                    },
+                    NodeState::Down | NodeState::Reserved => continue,
+                };
+                // Past-the-estimate overruns count free from `now` on
+                // (planning-estimate semantics, same as resync).
+                let t = clamp(t).max(nowt);
+                deltas.push((t, c as i64));
+                let m = if self.memory_aware { m } else { 0 };
+                if m > 0 {
+                    mem_deltas.push((t, m as i64));
+                }
+            }
         }
-        self.last_resync = nowt;
-        self.profile_stale = false;
+        self.push_capacity_deltas(nowt, horizon, &mut deltas, &mut mem_deltas);
+        let total =
+            ResourceVector::new(self.cluster.total_cores(), self.cluster.total_memory_mb());
+        let free =
+            ResourceVector::new(self.cluster.free_cores(), self.cluster.free_memory_mb());
+        let mut expected = if self.memory_aware {
+            AvailabilityProfile::new_v(nowt, free, total)
+        } else {
+            AvailabilityProfile::new(nowt, free.cores, total.cores)
+        };
+        if self.memory_aware {
+            expected.rebuild_v(nowt, free, deltas, mem_deltas);
+        } else {
+            expected.rebuild(nowt, free.cores, deltas);
+        }
+        sanitizer::check_profile_match(&self.profile, &expected, nowt, "dispatch boundary");
+    }
+
+    /// Test-only corruption hook: skew the live timeline by one phantom
+    /// held core so tests can prove the profile invariant actually
+    /// trips. Never called outside tests.
+    #[cfg(any(debug_assertions, feature = "sanitize"))]
+    pub fn sanitizer_skew_hold_for_test(&mut self, now: u64) {
+        self.profile.hold_v(now, now.saturating_add(1_000), ResourceVector::new(1, 0));
+    }
+
+    /// Test-only trigger: run the profile-vs-rebuild oracle right now,
+    /// regardless of the sampling cadence.
+    #[cfg(any(debug_assertions, feature = "sanitize"))]
+    pub fn sanitizer_verify_profile_for_test(&mut self, now: u64) {
+        if self.profile_stale {
+            self.resync_profile(SimTime(now));
+        }
+        self.verify_profile_against_rebuild(SimTime(now));
     }
 
     /// Apply a node failure: kill occupants, take the node down, and
@@ -966,12 +1080,13 @@ impl SchedulerComponent {
     /// A reservation expires: its nodes (wherever they drained or were
     /// repaired to) return to service.
     fn end_reservation(&mut self, res: usize, ctx: &mut Ctx<Ev>) {
-        let nodes: Vec<usize> = self
+        let mut nodes: Vec<usize> = self
             .claimed
             .iter()
             .filter(|&(_, &r)| r == res)
             .map(|(&n, _)| n)
             .collect();
+        nodes.sort_unstable(); // deterministic release order
         for node in nodes {
             self.claimed.remove(&node);
             if self.cluster.node_state(node) != NodeState::Down {
@@ -1137,6 +1252,17 @@ impl SchedulerComponent {
         self.record_series(now);
         // Sanity: cached aggregates stay consistent (cheap check).
         debug_assert!(self.cluster.check_invariants());
+        // Sanitizer: the incremental timeline equals a from-scratch
+        // rebuild. Exact-horizon only — clamped resyncs legitimately
+        // re-encode with a fresher clamp — and never on a stale profile
+        // (it gets rebuilt before the next read anyway).
+        if sanitizer::ACTIVE
+            && self.horizon == Horizon::Exact
+            && !self.profile_stale
+            && self.san.on_dispatch()
+        {
+            self.verify_profile_against_rebuild(now);
+        }
     }
 
     fn complete(&mut self, job_id: JobId, incarnation: u32, ctx: &mut Ctx<Ev>) {
@@ -1159,6 +1285,16 @@ impl SchedulerComponent {
         self.queue_order
             .record_usage(job.user, job.group, alloc.cores(), elapsed.ticks(), now);
         job.mark_completed(now);
+        if sanitizer::ACTIVE {
+            sanitizer::check_segment_accounting(
+                job.id,
+                now.ticks(),
+                job.executed.ticks(),
+                job.runtime.ticks(),
+                job.overhead.ticks(),
+                job.lost.ticks(),
+            );
+        }
         self.completed_count += 1;
         if let Some(wt) = job.wait_time() {
             self.wait_ticks_total += wt.as_f64();
@@ -1230,6 +1366,12 @@ impl Component<Ev> for SchedulerComponent {
             Ev::ReserveStart { res } => self.start_reservation(res, ctx),
             Ev::ReserveEnd { res } => self.end_reservation(res, ctx),
             other => panic!("scheduler got unexpected event {other:?}"),
+        }
+        // Sanitizer: core/memory conservation against per-node truth at
+        // event boundaries (every event early, then sampled).
+        if sanitizer::ACTIVE && self.san.on_event() {
+            let sample = sanitizer::sample_cluster(&self.cluster);
+            sanitizer::check_conservation(&sample, ctx.now().ticks(), "scheduler event boundary");
         }
         if let Some(mark) = &self.activity_mark {
             if !self.queue.is_empty() || !self.running.is_empty() {

@@ -139,7 +139,7 @@ impl DynamicExecutor {
         loop {
             // Pick ready tasks by priority (desc), tie by id (submission
             // order — identical to the static executor under Fcfs).
-            ready.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.2.cmp(&b.2)));
+            ready.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.2.cmp(&b.2)));
             let mut k = 0;
             while k < ready.len() {
                 let (prio, _ready_at, id) = ready[k];
@@ -167,7 +167,7 @@ impl DynamicExecutor {
                         .iter()
                         .enumerate()
                         .filter(|(_, r)| r.cpu >= need)
-                        .min_by(|a, b| a.1.priority.partial_cmp(&b.1.priority).unwrap());
+                        .min_by(|a, b| a.1.priority.total_cmp(&b.1.priority));
                     match victim {
                         // Strict dominance on the non-negative priority
                         // scale; `prio > v.priority` guards the zero case
@@ -183,9 +183,7 @@ impl DynamicExecutor {
                             ready.push((v.priority, now, v.id));
                             events += 1;
                             // Re-sort and retry this slot.
-                            ready.sort_by(|a, b| {
-                                b.0.partial_cmp(&a.0).unwrap().then(a.2.cmp(&b.2))
-                            });
+                            ready.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.2.cmp(&b.2)));
                             continue;
                         }
                         _ => k += 1,

@@ -1,0 +1,41 @@
+//! Repository determinism lint — the blocking gate from the determinism
+//! sentinel PR. Scans every file under `src/` with the self-contained
+//! analyzer in `sst_sched::analysis::lint` and fails if any hazard is
+//! neither fixed nor carrying an explicit
+//! `// lint:allow(<rule-id>, <reason>)` escape. Unused or malformed
+//! escapes fail too, so the allow inventory can never rot.
+//!
+//! Run it alone with `cargo test --test lint`.
+
+use sst_sched::analysis::lint::{run_repo_lint, RULES};
+
+#[test]
+fn repo_is_lint_clean() {
+    let findings = run_repo_lint();
+    if !findings.is_empty() {
+        let mut report = String::new();
+        for f in &findings {
+            report.push_str(&format!("{f}\n"));
+        }
+        panic!(
+            "determinism lint found {} violation(s):\n{report}\n\
+             Fix the hazard or annotate it with \
+             `// lint:allow(<rule-id>, <reason>)` on (or above) the line.",
+            findings.len()
+        );
+    }
+}
+
+#[test]
+fn every_rule_is_documented() {
+    assert!(!RULES.is_empty());
+    for r in RULES {
+        assert!(!r.id.is_empty(), "rule missing id");
+        assert!(
+            r.doc.len() > 20,
+            "rule {} needs a real doc string, got {:?}",
+            r.id,
+            r.doc
+        );
+    }
+}
