@@ -29,6 +29,28 @@ pub enum WorkloadSource {
     Stf(String),
 }
 
+/// `sst-sched serve` daemon parameters (`serve.*` in the config file;
+/// `--socket`, `--max-sims`, `--queue-depth` on the CLI).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeOptions {
+    /// Unix socket path the daemon binds (and unlinks on exit).
+    pub socket: String,
+    /// Admission control: maximum concurrently hosted simulations; a
+    /// request that would create one more is refused with a `sim_limit`
+    /// error instead of growing without bound.
+    pub max_sims: usize,
+    /// Per-connection bounded request-queue depth; when the queue is
+    /// full the daemon replies with an explicit `backpressure` error
+    /// rather than buffering (or silently dropping) the request.
+    pub queue_depth: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { socket: "sst-sched.sock".to_string(), max_sims: 8, queue_depth: 64 }
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -96,6 +118,9 @@ pub struct ExperimentConfig {
     /// defaults are the engine constants. Inert unless
     /// `planning.horizon` is `"auto"`.
     pub auto_horizon: AutoHorizonParams,
+    /// `sst-sched serve` daemon parameters (`serve.*`); inert for every
+    /// other command.
+    pub serve: ServeOptions,
 }
 
 impl Default for ExperimentConfig {
@@ -125,6 +150,7 @@ impl Default for ExperimentConfig {
             reservations: Vec::new(),
             planning_horizon: Horizon::Exact,
             auto_horizon: AutoHorizonParams::default(),
+            serve: ServeOptions::default(),
         }
     }
 }
@@ -259,6 +285,21 @@ impl ExperimentConfig {
             cfg.preemption.starvation_threshold =
                 SimDuration(pj.get_u64_or("starvation_threshold", 0));
             cfg.priority_bands = pj.get_u64_or("priority_bands", 0) as u8;
+        }
+        if let Some(sv) = v.get("serve") {
+            cfg.serve.socket = sv.get_str_or("socket", &cfg.serve.socket).to_string();
+            cfg.serve.max_sims = sv.get_u64_or("max_sims", cfg.serve.max_sims as u64) as usize;
+            cfg.serve.queue_depth =
+                sv.get_u64_or("queue_depth", cfg.serve.queue_depth as u64) as usize;
+            if cfg.serve.max_sims == 0 {
+                bail!("serve.max_sims must be >= 1 (0 would refuse every simulation)");
+            }
+            if cfg.serve.queue_depth == 0 {
+                bail!(
+                    "serve.queue_depth must be >= 1 (it bounds the per-connection \
+                     request queue)"
+                );
+            }
         }
         if let Some(rj) = v.get("reservations").and_then(|r| r.as_arr()) {
             for (i, r) in rj.iter().enumerate() {
@@ -544,6 +585,16 @@ impl ExperimentConfig {
                         Json::num(self.preemption.starvation_threshold.ticks() as f64),
                     ),
                     ("priority_bands", Json::num(self.priority_bands as f64)),
+                ]),
+            ));
+        }
+        if self.serve != ServeOptions::default() {
+            top.push((
+                "serve",
+                Json::obj(vec![
+                    ("max_sims", Json::num(self.serve.max_sims as f64)),
+                    ("queue_depth", Json::num(self.serve.queue_depth as f64)),
+                    ("socket", Json::str(self.serve.socket.clone())),
                 ]),
             ));
         }
@@ -965,6 +1016,26 @@ mod tests {
     fn check_still_fails_fast_on_structural_errors() {
         assert!(ExperimentConfig::check("not json").is_err());
         assert!(ExperimentConfig::check(r#"{"scheduler": {"policy": "magic"}}"#).is_err());
+    }
+
+    #[test]
+    fn serve_block_roundtrips_and_validates() {
+        let c = ExperimentConfig::parse(
+            r#"{"serve": {"socket": "/tmp/s.sock", "max_sims": 3, "queue_depth": 16}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.serve.socket, "/tmp/s.sock");
+        assert_eq!(c.serve.max_sims, 3);
+        assert_eq!(c.serve.queue_depth, 16);
+        let back = ExperimentConfig::parse(&c.to_json().to_pretty()).unwrap();
+        assert_eq!(back.serve, c.serve);
+        // Defaults stay out of the emitted config, and zero limits are
+        // rejected up front rather than refusing every request later.
+        let plain = ExperimentConfig::parse("{}").unwrap();
+        assert_eq!(plain.serve, ServeOptions::default());
+        assert!(plain.to_json().get("serve").is_none());
+        assert!(ExperimentConfig::parse(r#"{"serve": {"max_sims": 0}}"#).is_err());
+        assert!(ExperimentConfig::parse(r#"{"serve": {"queue_depth": 0}}"#).is_err());
     }
 
     #[test]

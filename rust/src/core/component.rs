@@ -104,4 +104,15 @@ pub trait Component<P> {
     /// Downcast support for extracting results after a run.
     fn as_any(&self) -> &dyn Any;
     fn as_any_mut(&mut self) -> &mut dyn Any;
+
+    /// Deep-copy this component for an engine snapshot
+    /// ([`crate::core::engine::Engine::snapshot`]). `None` (the
+    /// default) marks the component non-snapshotable — e.g. one
+    /// draining a non-rewindable job stream — which makes the whole
+    /// snapshot fail with an error naming it. Implementations must
+    /// copy *all* state that influences future decisions; sharing any
+    /// of it would let speculation perturb the original run.
+    fn snapshot_box(&self) -> Option<Box<dyn Component<P>>> {
+        None
+    }
 }

@@ -207,6 +207,63 @@ impl<P> Engine<P> {
         self.finish_components();
     }
 
+    /// Resumable stepping: deliver every event with `time <= bound`
+    /// (inclusive), then return how many were delivered. Unlike
+    /// [`Engine::run`] this neither runs `finish` hooks nor advances
+    /// `now` past the last delivered event, so stepping through any
+    /// partition of bounds replays the exact event sequence — and
+    /// therefore the exact end state — of one uninterrupted run.
+    pub fn step_until(&mut self, bound: SimTime) -> u64 {
+        self.init_components();
+        let before = self.events_processed;
+        self.drain_until(bound, true);
+        self.events_processed - before
+    }
+
+    /// Deep-copy the whole engine — components, pending events, link
+    /// and name tables, statistics, RNG and clock — so the copy can
+    /// run forward without perturbing the original (what-if wait-time
+    /// speculation, resumable serving). The event queue clone keeps
+    /// its sequence counter, so the copy's future pushes tie-break
+    /// identically; byte-identity of `snapshot -> resume -> run` with
+    /// an uninterrupted run is pinned by `tests/snapshot.rs`.
+    ///
+    /// Errors (naming the component) when any component is not
+    /// snapshotable — see [`Component::snapshot_box`]; a streamed job
+    /// source is the one stock example.
+    pub fn snapshot(&self) -> Result<Engine<P>, String>
+    where
+        P: Clone,
+    {
+        let mut components: Vec<Box<dyn Component<P>>> =
+            Vec::with_capacity(self.components.len());
+        for c in &self.components {
+            match c.snapshot_box() {
+                Some(copy) => components.push(copy),
+                None => {
+                    return Err(format!(
+                        "component {:?} cannot be snapshotted (non-cloneable state)",
+                        c.name()
+                    ))
+                }
+            }
+        }
+        Ok(Engine {
+            components,
+            names: self.names.clone(),
+            queue: self.queue.clone(),
+            links: self.links.clone(),
+            stats: self.stats.clone(),
+            rng: self.rng.clone(),
+            now: self.now,
+            events_processed: self.events_processed,
+            // Always empty between events; a snapshot is only taken
+            // at an event boundary.
+            emit_buf: Vec::new(),
+            initialized: self.initialized,
+        })
+    }
+
     /// Inclusive-bound event loop shared by `run`; returns true if a
     /// component requested stop. The window mode is normalized to one
     /// half-open cut up front so each pop is a single time compare on

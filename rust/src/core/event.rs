@@ -137,7 +137,7 @@ const SORT_THRESHOLD: usize = 64;
 /// `width`-tick slots. `cur` is the first bucket that may still hold
 /// events; earlier buckets were consumed (their range belongs to the
 /// bottom rung now) or handed to a child rung.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct Rung<P> {
     /// Absolute time of bucket 0's left edge.
     start: u64,
@@ -197,7 +197,10 @@ impl<P> Rung<P> {
 /// `time >= bottom_until` and `bottom.last()` is always the global
 /// minimum. That single invariant is what makes `pop`/`peek` O(1) after
 /// an amortized-O(1) `prepare_bottom`.
-#[derive(Debug)]
+/// Cloning (requires `P: Clone`) preserves every tier *and* `next_seq`,
+/// so a snapshot's future pushes receive the same sequence numbers the
+/// original's would — the resume path stays byte-identical.
+#[derive(Debug, Clone)]
 pub struct EventQueue<P> {
     /// Near-future events in *descending* key order (next event last).
     bottom: Vec<Scheduled<P>>,

@@ -222,7 +222,8 @@ pub enum Stat {
 }
 
 /// Registry of named statistics, keyed "component.stat".
-#[derive(Debug, Default)]
+/// `Clone` supports engine snapshots (`Engine::snapshot`).
+#[derive(Debug, Default, Clone)]
 pub struct StatRegistry {
     stats: BTreeMap<String, Stat>,
 }

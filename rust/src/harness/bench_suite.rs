@@ -477,6 +477,54 @@ fn sharded_federation_cases(b: &mut Bench, n: usize) {
     }
 }
 
+/// The serve daemon's request path in-process (no socket): a burst of
+/// submit requests with a predict_wait every 64th — measures
+/// [`ServerCore`] dispatch, the live engine stepping through each
+/// arrival, and the snapshot-clone speculative run, i.e. the latency
+/// budget of one daemon connection. The socket adds only transport on
+/// top of this path (same `handle_line` code).
+fn serve_request_cases(b: &mut Bench, submits: usize) {
+    use crate::config::ExperimentConfig;
+    use crate::runtime::serve::ServerCore;
+    let label = format!("serve/{}-submits/in-process", submits);
+    b.case(&label, move || {
+        let mut core = ServerCore::new(ExperimentConfig {
+            nodes: Some(64),
+            cores_per_node: Some(8),
+            ..ExperimentConfig::default()
+        });
+        let mut line = 0u64;
+        let mut ok = 0usize;
+        for i in 0..submits as u64 {
+            line += 1;
+            let r = core.handle_line(
+                line,
+                &format!(
+                    r#"{{"req":"submit","at":{},"job":{{"cores":{},"runtime":{}}}}}"#,
+                    i * 7,
+                    1 + i % 8,
+                    60 + (i % 97) * 30
+                ),
+            );
+            assert!(r.get_bool_or("ok", false), "bench submit refused");
+            ok += 1;
+            if i % 64 == 63 {
+                line += 1;
+                let p = core.handle_line(
+                    line,
+                    &format!(
+                        r#"{{"req":"predict_wait","job":{{"cores":{},"runtime":600}}}}"#,
+                        1 + i % 8
+                    ),
+                );
+                assert!(p.get_bool_or("ok", false), "bench predict refused");
+                ok += 1;
+            }
+        }
+        ok
+    });
+}
+
 /// Build and run the whole suite; the caller reads/serializes
 /// [`Bench::results`].
 pub fn engine_throughput_suite(smoke: bool) -> Bench {
@@ -534,6 +582,9 @@ pub fn engine_throughput_suite(smoke: bool) -> Bench {
 
     section("sharded federation engine (multi-domain PDES)");
     sharded_federation_cases(&mut b, if smoke { 8_000 } else { 25_000 });
+
+    section("serve daemon request path (in-process)");
+    serve_request_cases(&mut b, if smoke { 2_000 } else { 5_000 });
 
     section("baseline (CQsim-like) for comparison");
     let w = das2.clone();

@@ -8,7 +8,9 @@ use crate::job::{Job, JobId, JobState};
 use std::collections::HashMap;
 
 /// FIFO wait queue with O(1) membership test and by-id removal.
-#[derive(Debug, Default)]
+/// `Clone` supports scheduler-state snapshots (`Engine::snapshot`);
+/// iteration order is slot order, so a clone walks identically.
+#[derive(Debug, Default, Clone)]
 pub struct WaitQueue {
     /// Arrival order. Entries are `None` after removal (compacted lazily).
     slots: Vec<Option<Job>>,

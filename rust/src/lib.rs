@@ -136,12 +136,30 @@
 //!   with meta-scheduler routing delivered as conservative cross-rank
 //!   messages; decision fingerprints are byte-identical across shard
 //!   counts, so `--shards N` is a speedup knob, never a semantics knob.
-//! * [`runtime`] — PJRT bridge executing the AOT-compiled JAX/Pallas
-//!   queue-scoring artifact from the scheduler hot path (`--accel xla`).
+//! * [`runtime`] — execution services: the PJRT bridge executing the
+//!   AOT-compiled JAX/Pallas queue-scoring artifact from the scheduler
+//!   hot path (`--accel xla`), and [`runtime::serve`] — the
+//!   scheduler-as-a-service daemon (`sst-sched serve`): named,
+//!   long-lived resumable simulations behind a JSON-lines Unix-socket
+//!   protocol (`submit`/`predict_wait`/`status`/`metrics`/`shutdown`,
+//!   see `docs/PROTOCOL.md`) with bounded per-connection queues,
+//!   explicit backpressure replies, `--max-sims` admission control and
+//!   graceful SIGTERM drain.
 //! * [`sim`] — the component wiring: job source, scheduler, resource
-//!   manager, executor, statistics collector.
+//!   manager, executor, statistics collector. Since the serve PR,
+//!   `Simulation::build()` yields a resumable [`sim::SimInstance`]
+//!   state machine — `step_until`/`submit`/`snapshot`/`resume` — whose
+//!   snapshot→resume→run fingerprint is byte-identical to an
+//!   uninterrupted run (`rust/tests/snapshot.rs`); `predict_wait`
+//!   speculation rides that clone.
 //! * [`metrics`], [`config`], [`harness`] — reporting, configuration, and
 //!   per-figure experiment runners.
+//!
+//! User-facing documentation lives at the repository root: `README.md`
+//! (quickstart, subcommands, ingestion-tier guidance),
+//! `docs/ARCHITECTURE.md` (module map, determinism layers, serve
+//! lifecycle) and `docs/PROTOCOL.md` (the serve wire protocol, whose
+//! examples are round-tripped verbatim by `rust/tests/serve.rs`).
 //!
 //! ## Determinism contract & correctness tooling
 //!

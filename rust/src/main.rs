@@ -7,6 +7,7 @@
 //!                 [--ranks R] [--lookahead S] [--seed S]
 //!                 [--fast-parse]              # zero-copy trace ingestion
 //!                 [--config experiment.json]
+//! sst-sched serve [--socket sst-sched.sock] [--max-sims N] # JSON-lines daemon
 //! sst-sched check <experiment.json>           # static config validation
 //! sst-sched convert <in.swf|in.gwf> <out.stf> # re-encode a trace as binary stf
 //! sst-sched fig   3a|3b|4a|4b|5a|5b|6|7       # regenerate a paper figure
@@ -48,6 +49,11 @@ USAGE:
                 [--preemption none|kill|checkpoint] [--ckpt-overhead S]
                 [--restart-overhead S] [--starvation S] [--priority-bands N]
                 [--horizon TICKS|auto|exact]  # availability-planning horizon
+  sst-sched serve [--socket PATH] [--max-sims N] [--queue-depth N]
+                [--nodes N] [--cores C] [--policy P] [--seed S] ...
+                # scheduler-as-a-service daemon: JSON-lines over a Unix
+                # socket (submit | predict_wait | status | metrics |
+                # shutdown — see docs/PROTOCOL.md); drains on SIGTERM
   sst-sched faults [--workload ...] [--jobs N] [--mtbf S] [--mttr S] ...
                 # policy x preemption-mode comparison on one failure trace
   sst-sched bench [--smoke] [--out BENCH_engine.json]
@@ -80,6 +86,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "check" => cmd_check(&args),
         "bench" => cmd_bench(&args),
         "convert" => cmd_convert(&args),
@@ -203,6 +210,36 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
         SimDuration(args.u64_or("starvation", cfg.preemption.starvation_threshold.ticks())?);
     cfg.priority_bands = args.u64_or("priority-bands", cfg.priority_bands as u64)? as u8;
     Ok(cfg)
+}
+
+/// Scheduler-as-a-service daemon (`sst-sched serve`): host named,
+/// resumable simulations behind a JSON-lines Unix socket. Shares the
+/// full `--config`/CLI knob surface with `run`, plus the daemon knobs
+/// (`serve.*` config section / `--socket`, `--max-sims`,
+/// `--queue-depth`). Runs until a `shutdown` request or SIGTERM/SIGINT,
+/// then drains gracefully.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = config_from(args)?;
+    if let Some(s) = args.get("socket") {
+        cfg.serve.socket = s.to_string();
+    }
+    cfg.serve.max_sims = args.usize_or("max-sims", cfg.serve.max_sims)?;
+    cfg.serve.queue_depth = args.usize_or("queue-depth", cfg.serve.queue_depth)?;
+    args.reject_unknown()?;
+    if cfg.serve.max_sims == 0 {
+        bail!("--max-sims must be >= 1");
+    }
+    if cfg.serve.queue_depth == 0 {
+        bail!("--queue-depth must be >= 1");
+    }
+    #[cfg(unix)]
+    {
+        sst_sched::runtime::serve::serve(cfg)
+    }
+    #[cfg(not(unix))]
+    {
+        bail!("serve needs Unix domain sockets, unavailable on this platform")
+    }
 }
 
 /// Static config validation (`sst-sched check <config.json>`): parse the

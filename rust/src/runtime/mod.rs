@@ -1,4 +1,7 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifact.
+//! Execution services: the [`serve`] scheduler-as-a-service daemon and
+//! the PJRT bridge for the AOT-compiled JAX/Pallas scoring artifact.
+//!
+//! ## PJRT runtime
 //!
 //! `make artifacts` lowers the L2 scoring model (python/compile/model.py,
 //! which embeds the L1 Pallas fit kernel) to HLO *text*; this module loads
@@ -15,6 +18,8 @@
 //! offline crate set, so everything touching it is gated behind the
 //! `xla` cargo feature; the default build keeps the [`Accel`] selector
 //! and reports a clear error when an XLA backend is requested.
+
+pub mod serve;
 
 #[cfg(feature = "xla")]
 use crate::sched::scorer::{QueueScorer, ScoreParams, Scores};

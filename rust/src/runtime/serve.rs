@@ -1,0 +1,702 @@
+//! Scheduler-as-a-service: the `sst-sched serve` daemon.
+//!
+//! The daemon hosts named, long-lived [`SimInstance`]s and speaks a
+//! JSON-lines protocol over a Unix domain socket (one request object
+//! per line, one response object per line — see `docs/PROTOCOL.md` for
+//! every shape). Five request kinds:
+//!
+//! * `submit` — commit a job arrival into a live timeline; the engine
+//!   steps to the arrival time, so state advances as requests come in.
+//! * `predict_wait` — speculatively place a hypothetical job: snapshot
+//!   the live engine ([`SimInstance::snapshot`]), inject the job into
+//!   the clone, run the clone to completion, and report the predicted
+//!   start/wait. The live run is untouched (pinned by `tests/serve.rs`).
+//! * `status` — clock, queue depth, running/completed counts of one sim.
+//! * `metrics` — daemon-wide counters.
+//! * `shutdown` — stop accepting work and drain gracefully (SIGTERM and
+//!   SIGINT do the same).
+//!
+//! Robustness guarantees: per-connection request queues are bounded
+//! ([`crate::config::ServeOptions::queue_depth`]) and a full queue gets
+//! an explicit `backpressure` error reply instead of unbounded
+//! buffering; sim creation is admission-controlled (`--max-sims`);
+//! malformed requests are answered with the line number and byte offset
+//! of the error, like the trace parsers report theirs.
+//!
+//! [`ServerCore`] is the transport-free request handler — the socket
+//! loop, the integration tests, and the bench suite all drive the same
+//! code path.
+
+#![warn(missing_docs)]
+
+use crate::config::ExperimentConfig;
+use crate::core::time::{SimDuration, SimTime};
+use crate::job::Job;
+use crate::sim::{SimInstance, Simulation};
+use crate::trace::Workload;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[cfg(unix)]
+use anyhow::Context as _;
+#[cfg(unix)]
+use std::io::{BufRead as _, BufReader, ErrorKind, Write as _};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::sync::atomic::{AtomicBool, Ordering};
+#[cfg(unix)]
+use std::sync::{mpsc, Arc, Mutex};
+#[cfg(unix)]
+use std::time::Duration;
+
+/// Machine shape for daemon-hosted simulations when the config carries
+/// no platform override (`--nodes`): nodes.
+pub const DEFAULT_NODES: usize = 64;
+
+/// Default cores per node for daemon-hosted simulations (`--cores`).
+pub const DEFAULT_CORES_PER_NODE: u64 = 8;
+
+/// A request-level failure: the error `code` in the reply, a human
+/// message, and (for parse failures) the byte offset inside the line.
+struct ReqError {
+    code: &'static str,
+    message: String,
+    byte: Option<u64>,
+}
+
+impl ReqError {
+    fn bad(message: impl Into<String>) -> ReqError {
+        ReqError { code: "bad_request", message: message.into(), byte: None }
+    }
+
+    fn at(code: &'static str, message: impl Into<String>) -> ReqError {
+        ReqError { code, message: message.into(), byte: None }
+    }
+}
+
+/// One hosted simulation plus its monotone job-id allocator. Predictions
+/// peek the next id without consuming it, so a prediction followed by a
+/// real submission of the same job replays under the same identity.
+struct SimEntry {
+    inst: SimInstance,
+    next_job_id: u64,
+}
+
+/// Transport-free request handler for the serve protocol: feed it one
+/// request line at a time ([`ServerCore::handle_line`]) and write back
+/// the returned JSON. The socket daemon wraps this in a mutex shared by
+/// all connections; tests and the bench suite drive it directly.
+pub struct ServerCore {
+    cfg: ExperimentConfig,
+    sims: BTreeMap<String, SimEntry>,
+    requests: u64,
+    submits: u64,
+    predicts: u64,
+    errors: u64,
+    throttled: u64,
+    draining: bool,
+}
+
+impl ServerCore {
+    /// Build a daemon core; `cfg` supplies the default machine shape,
+    /// policy and every simulation knob for sims created on demand, and
+    /// `cfg.serve` the admission/queue limits.
+    pub fn new(cfg: ExperimentConfig) -> ServerCore {
+        ServerCore {
+            cfg,
+            sims: BTreeMap::new(),
+            requests: 0,
+            submits: 0,
+            predicts: 0,
+            errors: 0,
+            throttled: 0,
+            draining: false,
+        }
+    }
+
+    /// True once a `shutdown` request was accepted: the daemon stops
+    /// reading new requests and drains what is already queued.
+    pub fn draining(&self) -> bool {
+        self.draining
+    }
+
+    /// Record one backpressure rejection (the connection reader replies
+    /// without going through [`ServerCore::handle_line`]).
+    pub fn note_throttled(&mut self) {
+        self.throttled += 1;
+    }
+
+    /// Handle one request line and return the response object. Never
+    /// panics on bad input: malformed requests produce an `ok: false`
+    /// reply carrying `line_no` (1-based) and, for JSON syntax errors,
+    /// the byte offset within the line.
+    pub fn handle_line(&mut self, line_no: u64, line: &str) -> Json {
+        self.requests += 1;
+        match self.dispatch(line) {
+            Ok(resp) => resp,
+            Err(e) => {
+                self.errors += 1;
+                error_json(line_no, &e)
+            }
+        }
+    }
+
+    /// Deterministic digest of one sim's *future*: snapshot the live
+    /// engine, run the clone to completion, and fingerprint the report
+    /// ([`crate::sim::SimReport::fingerprint`]). Does not perturb the
+    /// live run — the non-perturbation property tests compare this
+    /// before and after speculative requests.
+    pub fn fingerprint(&self, sim: &str) -> Result<String, String> {
+        let entry =
+            self.sims.get(sim).ok_or_else(|| format!("no simulation named {sim:?}"))?;
+        let snap = entry.inst.snapshot()?;
+        Ok(SimInstance::resume(snap).run_to_completion(None).fingerprint())
+    }
+
+    fn dispatch(&mut self, line: &str) -> Result<Json, ReqError> {
+        let v = Json::parse(line).map_err(|e| ReqError {
+            code: "parse",
+            message: e.message,
+            byte: Some(e.offset as u64),
+        })?;
+        if v.as_obj().is_none() {
+            return Err(ReqError::bad("request must be a JSON object"));
+        }
+        let req = v
+            .get("req")
+            .and_then(|r| r.as_str())
+            .ok_or_else(|| {
+                ReqError::bad("missing \"req\" (submit|predict_wait|status|metrics|shutdown)")
+            })?
+            .to_string();
+        match req.as_str() {
+            "submit" => self.handle_submit(&v),
+            "predict_wait" => self.handle_predict(&v),
+            "status" => self.handle_status(&v),
+            "metrics" => Ok(self.metrics_json()),
+            "shutdown" => {
+                self.draining = true;
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("req", Json::str("shutdown")),
+                    ("draining", Json::Bool(true)),
+                ]))
+            }
+            other => Err(ReqError::bad(format!(
+                "unknown req {other:?} (submit|predict_wait|status|metrics|shutdown)"
+            ))),
+        }
+    }
+
+    /// Create the named sim on first use, under admission control.
+    fn ensure_sim(&mut self, name: &str) -> Result<(), ReqError> {
+        if self.sims.contains_key(name) {
+            return Ok(());
+        }
+        if self.sims.len() >= self.cfg.serve.max_sims {
+            return Err(ReqError::at(
+                "sim_limit",
+                format!(
+                    "admission control: {} simulation(s) already hosted (max_sims = {}); \
+                     reuse an existing sim or restart with a higher --max-sims",
+                    self.sims.len(),
+                    self.cfg.serve.max_sims
+                ),
+            ));
+        }
+        let inst = blank_instance(&self.cfg, name);
+        self.sims.insert(name.to_string(), SimEntry { inst, next_job_id: 1 });
+        Ok(())
+    }
+
+    /// Arrival time for a request: explicit `at`, else the sim clock;
+    /// arrivals cannot land in the simulated past.
+    fn arrival_time(v: &Json, now: SimTime) -> Result<SimTime, ReqError> {
+        let at = match opt_u64(v, "at")? {
+            Some(t) => SimTime(t),
+            None => now,
+        };
+        if at < now {
+            return Err(ReqError::at(
+                "time_regression",
+                format!(
+                    "\"at\" = {} is before the simulation clock {} — arrivals cannot be \
+                     scheduled in the past",
+                    at.ticks(),
+                    now.ticks()
+                ),
+            ));
+        }
+        Ok(at)
+    }
+
+    fn handle_submit(&mut self, v: &Json) -> Result<Json, ReqError> {
+        let name = v.get_str_or("sim", "default").to_string();
+        self.ensure_sim(&name)?;
+        let entry = self.sims.get_mut(&name).expect("just ensured");
+        let at = Self::arrival_time(v, entry.inst.now())?;
+        let id = entry.next_job_id;
+        let job = job_from(v, id, at)?;
+        entry.next_job_id += 1;
+        entry.inst.submit(at, job);
+        // Commit point: the live timeline advances through the arrival
+        // (and everything it causes at that tick), so status reflects it
+        // and later arrivals are appended behind it.
+        entry.inst.step_until(at);
+        self.submits += 1;
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("req", Json::str("submit")),
+            ("sim", Json::str(name)),
+            ("job_id", Json::num(id as f64)),
+            ("at", Json::num(at.ticks() as f64)),
+        ]))
+    }
+
+    fn handle_predict(&mut self, v: &Json) -> Result<Json, ReqError> {
+        let name = v.get_str_or("sim", "default").to_string();
+        self.ensure_sim(&name)?;
+        let entry = self.sims.get_mut(&name).expect("just ensured");
+        let at = Self::arrival_time(v, entry.inst.now())?;
+        // Peek — not consume — the id: a real submit right after the
+        // prediction replays the same job under the same identity.
+        let id = entry.next_job_id;
+        let job = job_from(v, id, at)?;
+        let snap = entry
+            .inst
+            .snapshot()
+            .map_err(|m| ReqError::at("snapshot", m))?;
+        let mut clone = SimInstance::resume(snap);
+        clone.submit(at, job);
+        let report = clone.run_to_completion(None);
+        self.predicts += 1;
+        let started = report.completed.iter().find(|j| j.id == id).and_then(|j| j.start);
+        match started {
+            Some(s) => Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("req", Json::str("predict_wait")),
+                ("sim", Json::str(name)),
+                ("job_id", Json::num(id as f64)),
+                ("predicted_start", Json::num(s.ticks() as f64)),
+                ("predicted_wait", Json::num((s - at).ticks() as f64)),
+            ])),
+            None => Err(ReqError::at(
+                "unplaceable",
+                "the hypothetical job never starts (larger than the machine, or the \
+                 speculative run ended first)",
+            )),
+        }
+    }
+
+    fn handle_status(&self, v: &Json) -> Result<Json, ReqError> {
+        let name = v.get_str_or("sim", "default");
+        let entry = self.sims.get(name).ok_or_else(|| {
+            ReqError::at(
+                "unknown_sim",
+                format!("no simulation named {name:?} (submit or predict_wait creates one)"),
+            )
+        })?;
+        Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("req", Json::str("status")),
+            ("sim", Json::str(name)),
+            ("policy", Json::str(entry.inst.policy_name())),
+            ("now", Json::num(entry.inst.now().ticks() as f64)),
+            ("queue_len", Json::num(entry.inst.queue_len() as f64)),
+            ("running", Json::num(entry.inst.running_len() as f64)),
+            ("completed", Json::num(entry.inst.completed_count() as f64)),
+        ]))
+    }
+
+    fn metrics_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("req", Json::str("metrics")),
+            ("sims", Json::num(self.sims.len() as f64)),
+            ("max_sims", Json::num(self.cfg.serve.max_sims as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("submits", Json::num(self.submits as f64)),
+            ("predicts", Json::num(self.predicts as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("throttled", Json::num(self.throttled as f64)),
+        ])
+    }
+}
+
+/// Wire a fresh, empty simulation for the daemon: the config's machine
+/// shape ([`DEFAULT_NODES`] x [`DEFAULT_CORES_PER_NODE`] unless
+/// overridden) and every simulation knob the batch commands honor, but
+/// no workload — jobs arrive only through requests.
+fn blank_instance(cfg: &ExperimentConfig, name: &str) -> SimInstance {
+    let nodes = cfg.nodes.unwrap_or(DEFAULT_NODES);
+    let cores = cfg.cores_per_node.unwrap_or(DEFAULT_CORES_PER_NODE);
+    let mut sim = Simulation::new(Workload::machine(name, nodes, cores), cfg.policy)
+        .with_seed(cfg.seed)
+        .with_faults(cfg.faults)
+        .with_preemption(cfg.preemption)
+        .with_reservations(cfg.reservations.clone())
+        .with_horizon(cfg.planning_horizon)
+        .with_auto_horizon_params(cfg.auto_horizon)
+        .with_mem_per_node(cfg.mem_per_node)
+        .with_memory_aware(cfg.memory_aware)
+        .with_fairshare_half_life(cfg.fairshare_half_life);
+    if let Some(order) = cfg.order {
+        sim = sim.with_order(order);
+    }
+    sim.build()
+}
+
+/// Optional non-negative integer field; present-but-wrong-typed is an
+/// error, not a silent default.
+fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>, ReqError> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => x.as_u64().map(Some).ok_or_else(|| {
+            ReqError::bad(format!("{key:?} must be a non-negative integer"))
+        }),
+    }
+}
+
+/// Build the submitted/hypothetical job from the request's `job` object:
+/// `cores` and `runtime` required, `est` defaults to `runtime` (a
+/// perfect estimate), `mem` to 0, `user` to 0.
+fn job_from(v: &Json, id: u64, submit: SimTime) -> Result<Job, ReqError> {
+    let j = v.get("job").ok_or_else(|| ReqError::bad("missing \"job\" object"))?;
+    if j.as_obj().is_none() {
+        return Err(ReqError::bad("\"job\" must be an object"));
+    }
+    let cores = opt_u64(j, "cores")?
+        .ok_or_else(|| ReqError::bad("job.cores must be a positive integer"))?;
+    let runtime = opt_u64(j, "runtime")?
+        .ok_or_else(|| ReqError::bad("job.runtime must be a positive integer"))?;
+    if cores == 0 || runtime == 0 {
+        return Err(ReqError::bad("job.cores and job.runtime must be >= 1"));
+    }
+    let est = opt_u64(j, "est")?.unwrap_or(runtime);
+    let mem = opt_u64(j, "mem")?.unwrap_or(0);
+    let user = opt_u64(j, "user")?.unwrap_or(0) as u32;
+    Ok(Job::new(id, submit, cores, mem, SimDuration(est), SimDuration(runtime), user, 0))
+}
+
+/// Error reply: `{"error": {...}, "ok": false}` with the request's line
+/// number and, for parse errors, the byte offset inside the line — the
+/// same locate-the-problem contract the trace parsers follow.
+fn error_json(line_no: u64, e: &ReqError) -> Json {
+    let mut err = vec![
+        ("code", Json::str(e.code)),
+        ("line", Json::num(line_no as f64)),
+        ("message", Json::str(e.message.clone())),
+    ];
+    if let Some(b) = e.byte {
+        err.push(("byte", Json::num(b as f64)));
+    }
+    Json::obj(vec![("error", Json::obj(err)), ("ok", Json::Bool(false))])
+}
+
+/// The explicit backpressure reply a connection sends when its bounded
+/// request queue (depth `depth`) is full — the request is refused, not
+/// buffered, so a flooding client cannot grow daemon memory.
+pub fn backpressure_json(line_no: u64, depth: usize) -> Json {
+    error_json(
+        line_no,
+        &ReqError::at(
+            "backpressure",
+            format!("request queue full ({depth} pending); retry after the daemon catches up"),
+        ),
+    )
+}
+
+#[cfg(unix)]
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+/// Route SIGTERM/SIGINT to the drain flag. The handler only stores an
+/// atomic (async-signal-safe); the accept loop and connection readers
+/// poll the flag and wind down.
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::Relaxed);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    // SAFETY: `signal` is the C library's; the handler is an extern "C"
+    // fn that performs a single atomic store.
+    unsafe {
+        signal(SIGTERM, on_signal);
+        signal(SIGINT, on_signal);
+    }
+}
+
+#[cfg(unix)]
+fn is_draining(core: &Mutex<ServerCore>) -> bool {
+    // A poisoned lock (a panicked connection) also drains the daemon.
+    core.lock().map(|c| c.draining()).unwrap_or(true)
+}
+
+#[cfg(unix)]
+fn write_line(writer: &Mutex<UnixStream>, resp: &Json) -> std::io::Result<()> {
+    let mut s = resp.to_string();
+    s.push('\n');
+    let mut w = writer.lock().map_err(|_| std::io::Error::other("writer lock poisoned"))?;
+    w.write_all(s.as_bytes())
+}
+
+/// Push one request line into the connection's bounded queue; on a full
+/// queue, reply with [`backpressure_json`] immediately instead of
+/// blocking the reader. Returns false when the connection is done.
+#[cfg(unix)]
+fn enqueue(
+    tx: &mpsc::SyncSender<(u64, String)>,
+    core: &Mutex<ServerCore>,
+    writer: &Mutex<UnixStream>,
+    line_no: u64,
+    line: &str,
+    depth: usize,
+) -> bool {
+    match tx.try_send((line_no, line.to_string())) {
+        Ok(()) => true,
+        Err(mpsc::TrySendError::Full(_)) => {
+            if let Ok(mut c) = core.lock() {
+                c.note_throttled();
+            }
+            write_line(writer, &backpressure_json(line_no, depth)).is_ok()
+        }
+        Err(mpsc::TrySendError::Disconnected(_)) => false,
+    }
+}
+
+/// One connection: a reader loop feeding a bounded queue, a worker
+/// thread consuming it through the shared [`ServerCore`]. The read
+/// timeout keeps the reader responsive to drain/SIGTERM even when the
+/// client holds the socket open silently.
+#[cfg(unix)]
+fn handle_conn(stream: UnixStream, core: Arc<Mutex<ServerCore>>, depth: usize) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let (tx, rx) = mpsc::sync_channel::<(u64, String)>(depth);
+    let worker_core = Arc::clone(&core);
+    let worker_writer = Arc::clone(&writer);
+    let worker = std::thread::spawn(move || {
+        for (line_no, line) in rx {
+            let resp = match worker_core.lock() {
+                Ok(mut c) => c.handle_line(line_no, &line),
+                Err(_) => break,
+            };
+            if write_line(&worker_writer, &resp).is_err() {
+                break;
+            }
+        }
+    });
+    let mut reader = BufReader::new(stream);
+    let mut buf = String::new();
+    let mut line_no = 0u64;
+    loop {
+        match reader.read_line(&mut buf) {
+            Ok(0) => {
+                // EOF; a final unterminated line is still a request.
+                if !buf.trim().is_empty() {
+                    line_no += 1;
+                    let line = buf.trim().to_string();
+                    enqueue(&tx, &core, &writer, line_no, &line, depth);
+                }
+                break;
+            }
+            Ok(_) => {
+                let line = buf.trim().to_string();
+                buf.clear();
+                if !line.is_empty() {
+                    line_no += 1;
+                    if !enqueue(&tx, &core, &writer, line_no, &line, depth) {
+                        break;
+                    }
+                }
+                if SHUTDOWN.load(Ordering::Relaxed) || is_draining(&core) {
+                    break;
+                }
+            }
+            // Read timeout: `buf` keeps any partial line already read.
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if SHUTDOWN.load(Ordering::Relaxed) || is_draining(&core) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    // Close the queue; the worker drains what was accepted, then exits.
+    drop(tx);
+    let _ = worker.join();
+}
+
+/// Run the daemon: bind `cfg.serve.socket`, accept JSON-lines
+/// connections, and serve until a `shutdown` request or SIGTERM/SIGINT;
+/// then drain queued requests, join every connection, and unlink the
+/// socket. Blocks the calling thread for the daemon's lifetime.
+#[cfg(unix)]
+pub fn serve(cfg: ExperimentConfig) -> anyhow::Result<()> {
+    let path = cfg.serve.socket.clone();
+    let depth = cfg.serve.queue_depth;
+    let max_sims = cfg.serve.max_sims;
+    if std::path::Path::new(&path).exists() {
+        std::fs::remove_file(&path)
+            .with_context(|| format!("removing stale socket {path:?}"))?;
+    }
+    let listener =
+        UnixListener::bind(&path).with_context(|| format!("binding socket {path:?}"))?;
+    listener
+        .set_nonblocking(true)
+        .context("setting the serve listener non-blocking")?;
+    install_signal_handlers();
+    let core = Arc::new(Mutex::new(ServerCore::new(cfg)));
+    eprintln!(
+        "sst-sched serve: listening on {path} (max_sims {max_sims}, queue depth {depth})"
+    );
+    let mut conns = Vec::new();
+    loop {
+        if SHUTDOWN.load(Ordering::Relaxed) || is_draining(&core) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let conn_core = Arc::clone(&core);
+                conns.push(std::thread::spawn(move || handle_conn(stream, conn_core, depth)));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(e).context("accepting on the serve socket"),
+        }
+    }
+    // Graceful drain: no new connections; live ones finish their queues.
+    for c in conns {
+        let _ = c.join();
+    }
+    let _ = std::fs::remove_file(&path);
+    eprintln!("sst-sched serve: drained, socket removed");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::Policy;
+
+    fn tiny_core() -> ServerCore {
+        ServerCore::new(ExperimentConfig {
+            nodes: Some(2),
+            cores_per_node: Some(4),
+            policy: Policy::Fcfs,
+            ..ExperimentConfig::default()
+        })
+    }
+
+    #[test]
+    fn submit_assigns_monotone_ids_and_advances() {
+        let mut c = tiny_core();
+        let r1 = c.handle_line(1, r#"{"req":"submit","job":{"cores":4,"runtime":100}}"#);
+        assert!(r1.get_bool_or("ok", false), "{r1:?}");
+        assert_eq!(r1.get_u64_or("job_id", 0), 1);
+        let r2 =
+            c.handle_line(2, r#"{"req":"submit","at":10,"job":{"cores":4,"runtime":100}}"#);
+        assert_eq!(r2.get_u64_or("job_id", 0), 2);
+        let st = c.handle_line(3, r#"{"req":"status"}"#);
+        assert_eq!(st.get_u64_or("now", 999), 10);
+        assert_eq!(st.get_u64_or("running", 0), 2);
+        assert_eq!(st.get_u64_or("queue_len", 9), 0);
+    }
+
+    #[test]
+    fn predict_matches_quiet_system_reality() {
+        let mut c = tiny_core();
+        // Fill the machine until t=100.
+        c.handle_line(1, r#"{"req":"submit","job":{"cores":4,"runtime":100}}"#);
+        c.handle_line(2, r#"{"req":"submit","job":{"cores":4,"runtime":100}}"#);
+        let p = c.handle_line(3, r#"{"req":"predict_wait","job":{"cores":4,"runtime":50}}"#);
+        assert!(p.get_bool_or("ok", false), "{p:?}");
+        assert_eq!(p.get_u64_or("predicted_start", 0), 100);
+        assert_eq!(p.get_u64_or("predicted_wait", 0), 100);
+        // Really submit the same job; the finished timeline must start
+        // it exactly where the prediction said.
+        let s = c.handle_line(4, r#"{"req":"submit","job":{"cores":4,"runtime":50}}"#);
+        assert_eq!(s.get_u64_or("job_id", 0), p.get_u64_or("job_id", 99));
+        let fp = c.fingerprint("default").unwrap();
+        let line = fp
+            .lines()
+            .find(|l| l.starts_with("3:"))
+            .expect("job 3 in fingerprint");
+        let start: u64 = line.split(':').nth(1).unwrap().parse().unwrap();
+        assert_eq!(start, 100);
+    }
+
+    #[test]
+    fn predict_does_not_perturb_the_live_run() {
+        let mut c = tiny_core();
+        c.handle_line(1, r#"{"req":"submit","job":{"cores":3,"runtime":70}}"#);
+        c.handle_line(2, r#"{"req":"submit","at":5,"job":{"cores":4,"runtime":40}}"#);
+        let before = c.fingerprint("default").unwrap();
+        for i in 0..4 {
+            let p = c.handle_line(
+                3 + i,
+                r#"{"req":"predict_wait","job":{"cores":2,"runtime":30}}"#,
+            );
+            assert!(p.get_bool_or("ok", false), "{p:?}");
+        }
+        assert_eq!(before, c.fingerprint("default").unwrap());
+    }
+
+    #[test]
+    fn admission_control_refuses_extra_sims() {
+        let cfg = ExperimentConfig {
+            nodes: Some(1),
+            cores_per_node: Some(4),
+            serve: crate::config::ServeOptions { max_sims: 1, ..Default::default() },
+            ..ExperimentConfig::default()
+        };
+        let mut c = ServerCore::new(cfg);
+        let ok = c.handle_line(1, r#"{"req":"submit","job":{"cores":1,"runtime":5}}"#);
+        assert!(ok.get_bool_or("ok", false));
+        let no =
+            c.handle_line(2, r#"{"req":"submit","sim":"b","job":{"cores":1,"runtime":5}}"#);
+        assert!(!no.get_bool_or("ok", true));
+        assert_eq!(no.get("error").unwrap().get_str_or("code", ""), "sim_limit");
+    }
+
+    #[test]
+    fn errors_carry_line_and_byte_offsets() {
+        let mut c = tiny_core();
+        let e = c.handle_line(7, "{\"req\": }");
+        let err = e.get("error").unwrap();
+        assert_eq!(err.get_str_or("code", ""), "parse");
+        assert_eq!(err.get_u64_or("line", 0), 7);
+        assert_eq!(err.get_u64_or("byte", 0), 8);
+        let e2 = c.handle_line(8, r#"{"req":"submit","at":3,"job":{"cores":4,"runtime":9}}"#);
+        assert!(e2.get_bool_or("ok", false));
+        let e3 = c.handle_line(9, r#"{"req":"submit","at":1,"job":{"cores":1,"runtime":9}}"#);
+        assert_eq!(e3.get("error").unwrap().get_str_or("code", ""), "time_regression");
+    }
+
+    #[test]
+    fn backpressure_reply_shape() {
+        let b = backpressure_json(9, 2);
+        assert!(!b.get_bool_or("ok", true));
+        let err = b.get("error").unwrap();
+        assert_eq!(err.get_str_or("code", ""), "backpressure");
+        assert_eq!(err.get_u64_or("line", 0), 9);
+    }
+
+    #[test]
+    fn shutdown_flips_draining() {
+        let mut c = tiny_core();
+        assert!(!c.draining());
+        let r = c.handle_line(1, r#"{"req":"shutdown"}"#);
+        assert!(r.get_bool_or("draining", false));
+        assert!(c.draining());
+    }
+}

@@ -79,6 +79,17 @@ impl Scheduler for BackfillScheduler {
         false
     }
 
+    /// Cloneable exactly when the scorer backend is (the native scorer
+    /// is; accelerator clients are not) — see
+    /// [`crate::sched::QueueScorer::clone_box`].
+    fn clone_box(&self) -> Option<Box<dyn Scheduler>> {
+        Some(Box::new(BackfillScheduler {
+            scorer: self.scorer.clone_box()?,
+            aging_weight: self.aging_weight,
+            waste_weight: self.waste_weight,
+        }))
+    }
+
     fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {
         let mut local = RoundScratch::default();
         let mut guard = None;

@@ -22,7 +22,7 @@ use crate::sched::fcfs::borrow_scratch;
 use crate::sched::{QueueOrder, RoundScratch, SchedInput, Scheduler};
 
 /// Conservative backfilling scheduler.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone, Copy)]
 pub struct ConservativeScheduler;
 
 impl ConservativeScheduler {
@@ -40,6 +40,10 @@ impl Scheduler for ConservativeScheduler {
     /// running-job snapshot is not needed (§Perf: the driver skips it).
     fn uses_running_info(&self) -> bool {
         false
+    }
+
+    fn clone_box(&self) -> Option<Box<dyn Scheduler>> {
+        Some(Box::new(*self))
     }
 
     fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {

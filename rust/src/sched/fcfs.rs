@@ -116,7 +116,7 @@ pub(crate) fn borrow_scratch<'a, 's>(
 /// The blocking scheduler: queue order in, allocations out, stop at the
 /// first blocked job. `name` is the policy identity it reports (FCFS,
 /// SJF and LJF differ only in `SchedInput::order`).
-#[derive(Debug)]
+#[derive(Debug, Clone, Copy)]
 pub struct BlockingScheduler {
     name: &'static str,
     alloc: AllocPolicy,
@@ -141,6 +141,10 @@ impl Scheduler for BlockingScheduler {
 
     fn name(&self) -> &'static str {
         self.name
+    }
+
+    fn clone_box(&self) -> Option<Box<dyn Scheduler>> {
+        Some(Box::new(*self))
     }
 
     fn schedule(&mut self, input: &SchedInput<'_>, cluster: &mut Cluster) -> Vec<Allocation> {

@@ -146,6 +146,16 @@ pub trait Scheduler {
     fn uses_running_info(&self) -> bool {
         true
     }
+
+    /// Deep-copy this scheduler for a simulation snapshot
+    /// ([`crate::core::engine::Engine::snapshot`]). `None` means the
+    /// policy holds state that cannot be duplicated (e.g. a backfill
+    /// scorer bound to an external accelerator client); snapshotting
+    /// such a simulation fails with a clear error instead of silently
+    /// sharing state. Every stock policy returns `Some`.
+    fn clone_box(&self) -> Option<Box<dyn Scheduler>> {
+        None
+    }
 }
 
 /// Policy selector (config/CLI surface).

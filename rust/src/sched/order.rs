@@ -99,6 +99,13 @@ pub trait QueueOrder {
     fn usage_snapshot(&self, _now: SimTime) -> Vec<UserShare> {
         Vec::new()
     }
+
+    /// Deep-copy this ordering — including accumulated fair-share usage
+    /// — for simulation snapshots
+    /// ([`crate::core::engine::Engine::snapshot`]). Every ordering is
+    /// plain data, so unlike [`crate::sched::Scheduler::clone_box`]
+    /// this is total.
+    fn clone_box(&self) -> Box<dyn QueueOrder>;
 }
 
 /// Arrival order (FCFS view): the queue as it stands.
@@ -119,6 +126,10 @@ impl QueueOrder for ArrivalOrder {
     ) -> bool {
         ids.clear();
         false
+    }
+
+    fn clone_box(&self) -> Box<dyn QueueOrder> {
+        Box::new(*self)
     }
 }
 
@@ -176,6 +187,10 @@ impl QueueOrder for ShortestFirst {
         order_by_estimate_into(queue, false, ids, keys);
         true
     }
+
+    fn clone_box(&self) -> Box<dyn QueueOrder> {
+        Box::new(*self)
+    }
 }
 
 impl QueueOrder for LongestFirst {
@@ -193,6 +208,10 @@ impl QueueOrder for LongestFirst {
         order_by_estimate_into(queue, true, ids, keys);
         true
     }
+
+    fn clone_box(&self) -> Box<dyn QueueOrder> {
+        Box::new(*self)
+    }
 }
 
 /// Usage-decayed fair-share ordering (the Slurm
@@ -205,6 +224,7 @@ impl QueueOrder for LongestFirst {
 /// Ties (including all-zero usage at cold start) break by (submit, id),
 /// so a fair-share order over untouched users degenerates to arrival
 /// order and stays deterministic.
+#[derive(Clone)]
 pub struct FairShare {
     /// Half-life in ticks; 0 disables decay (pure accumulated usage).
     half_life: f64,
@@ -285,6 +305,10 @@ impl QueueOrder for FairShare {
             .collect();
         out.sort_by(|a, b| (a.user, a.group).cmp(&(b.user, b.group)));
         out
+    }
+
+    fn clone_box(&self) -> Box<dyn QueueOrder> {
+        Box::new(self.clone())
     }
 }
 

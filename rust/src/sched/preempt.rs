@@ -138,6 +138,16 @@ impl Scheduler for PreemptiveScheduler {
         self.inner.schedule(input, cluster)
     }
 
+    /// Cloneable exactly when the wrapped policy is.
+    fn clone_box(&self) -> Option<Box<dyn Scheduler>> {
+        Some(Box::new(PreemptiveScheduler {
+            inner: self.inner.clone_box()?,
+            name: self.name,
+            cfg: self.cfg,
+            last_eviction: self.last_eviction,
+        }))
+    }
+
     fn preempt(&mut self, input: &SchedInput<'_>, cluster: &Cluster) -> Vec<JobId> {
         if !self.cfg.enabled() || self.cfg.starvation_threshold == SimDuration::ZERO {
             return Vec::new();

@@ -73,6 +73,13 @@ pub trait QueueScorer {
 
     /// Human-readable backend name ("native" / "xla").
     fn backend(&self) -> &'static str;
+
+    /// Deep-copy for simulation snapshots; `None` (the default) for
+    /// backends whose state cannot be duplicated — the XLA/PJRT client
+    /// owns device buffers a clone could not share safely.
+    fn clone_box(&self) -> Option<Box<dyn QueueScorer>> {
+        None
+    }
 }
 
 /// Pure-Rust scorer; the semantics mirror python/compile/kernels/ref.py
@@ -132,6 +139,10 @@ impl QueueScorer for NativeScorer {
 
     fn backend(&self) -> &'static str {
         "native"
+    }
+
+    fn clone_box(&self) -> Option<Box<dyn QueueScorer>> {
+        Some(Box::new(self.clone()))
     }
 }
 

@@ -191,6 +191,20 @@ impl Component<Ev> for JobSource {
         }
     }
 
+    /// Eager feeds copy their remaining jobs; a pull-based stream
+    /// cannot be rewound or duplicated, so streamed runs are not
+    /// snapshotable (the engine reports this source by name).
+    fn snapshot_box(&self) -> Option<Box<dyn Component<Ev>>> {
+        match &self.feed {
+            JobFeed::Eager(v) => Some(Box::new(JobSource {
+                feed: JobFeed::Eager(v.clone()),
+                target: self.target,
+                emitted: self.emitted,
+            })),
+            JobFeed::Stream { .. } => None,
+        }
+    }
+
     fn as_any(&self) -> &dyn Any {
         self
     }
@@ -237,6 +251,7 @@ enum InterruptReason {
 }
 
 /// One running job with its exact profile footprint.
+#[derive(Clone)]
 struct RunningEntry {
     job: Job,
     alloc: Allocation,
@@ -1386,6 +1401,76 @@ impl Component<Ev> for SchedulerComponent {
         self.record_series(now);
     }
 
+    /// Field-by-field deep copy. Fails (`None`) when the scheduling
+    /// policy is non-cloneable (accelerator-backed scorer) or when an
+    /// activity watermark is attached: the watermark `Arc` is *shared*
+    /// with the fault injector, and a copy would either alias it
+    /// (speculation perturbs the live run) or split it (clone behavior
+    /// diverges) — and it only exists on streamed runs, which the job
+    /// source already refuses to snapshot.
+    fn snapshot_box(&self) -> Option<Box<dyn Component<Ev>>> {
+        if self.activity_mark.is_some() {
+            return None;
+        }
+        Some(Box::new(SchedulerComponent {
+            cluster: self.cluster.clone(),
+            scheduler: self.scheduler.clone_box()?,
+            queue_order: self.queue_order.clone_box(),
+            memory_aware: self.memory_aware,
+            queue: self.queue.clone(),
+            running: self.running.clone(),
+            profile: self.profile.clone(),
+            horizon: self.horizon,
+            effective_horizon: self.effective_horizon,
+            auto_depth: self.auto_depth,
+            auto_params: self.auto_params,
+            // Pure per-round scratch: every buffer is cleared or
+            // overwritten at the start of the round that uses it, so a
+            // fresh default is decision-identical.
+            scratch: RefCell::new(RoundScratch::default()),
+            running_scratch: Vec::new(),
+            pending_repairs: self.pending_repairs.clone(),
+            resv_pending: self.resv_pending.clone(),
+            resv_plan_cores: self.resv_plan_cores.clone(),
+            resv_plan_mem: self.resv_plan_mem.clone(),
+            last_resync: self.last_resync,
+            profile_stale: self.profile_stale,
+            completed: self.completed.clone(),
+            retain_completed: self.retain_completed,
+            completed_count: self.completed_count,
+            wait_ticks_total: self.wait_ticks_total,
+            useful_work: self.useful_work,
+            first_record_t: self.first_record_t,
+            last_record_t: self.last_record_t,
+            last_util: self.last_util,
+            last_mem_util: self.last_mem_util,
+            last_avail: self.last_avail,
+            util_integral: self.util_integral,
+            mem_util_integral: self.mem_util_integral,
+            avail_integral: self.avail_integral,
+            avail_integral_at_completion: self.avail_integral_at_completion,
+            rejected: self.rejected,
+            executor: self.executor,
+            dispatch_pending: self.dispatch_pending,
+            dispatches: self.dispatches,
+            occupancy: self.occupancy.clone(),
+            running_series: self.running_series.clone(),
+            util_series: self.util_series.clone(),
+            mem_util_series: self.mem_util_series.clone(),
+            effective_util_series: self.effective_util_series.clone(),
+            avail_series: self.avail_series.clone(),
+            preemption: self.preemption,
+            reservations: self.reservations.clone(),
+            claimed: self.claimed.clone(),
+            fault_counters: self.fault_counters,
+            lost_work: self.lost_work,
+            overhead_work: self.overhead_work,
+            starvation_timer: self.starvation_timer,
+            activity_mark: None,
+            san: self.san.clone(),
+        }))
+    }
+
     fn as_any(&self) -> &dyn Any {
         self
     }
@@ -1426,6 +1511,10 @@ impl Component<Ev> for JobExecutor {
             }
             other => panic!("executor got unexpected event {other:?}"),
         }
+    }
+
+    fn snapshot_box(&self) -> Option<Box<dyn Component<Ev>>> {
+        Some(Box::new(JobExecutor { scheduler: self.scheduler, executed: self.executed }))
     }
 
     fn as_any(&self) -> &dyn Any {

@@ -381,6 +381,27 @@ impl Component<Ev> for FaultInjector {
         }
     }
 
+    /// Deep copy, including the injector's private RNG mid-stream.
+    /// Watermark-driven injectors (`Arc`s shared with the job stream
+    /// and scheduler) are not snapshotable — those only exist on
+    /// streamed runs, which the job source refuses to snapshot anyway.
+    fn snapshot_box(&self) -> Option<Box<dyn Component<Ev>>> {
+        if self.stream_watermark.is_some() || self.activity_mark.is_some() {
+            return None;
+        }
+        Some(Box::new(FaultInjector {
+            scheduler: self.scheduler,
+            cfg: self.cfg,
+            until: self.until,
+            rng: self.rng.clone(),
+            reservations: self.reservations.clone(),
+            stream_watermark: None,
+            activity_mark: None,
+            next_fault_due: self.next_fault_due,
+            injected: self.injected,
+        }))
+    }
+
     fn as_any(&self) -> &dyn Any {
         self
     }

@@ -563,12 +563,88 @@ impl SimInstance {
         );
     }
 
+    /// Process every event with time `<= bound` (inclusive) without
+    /// running finish hooks; the instance stays live and can be stepped
+    /// again. Returns events handled. The event sequence is exactly the
+    /// one an uninterrupted run would process — stepping is a pause
+    /// point, not a behavioural fork.
+    pub fn step_until(&mut self, bound: SimTime) -> u64 {
+        self.engine.step_until(bound)
+    }
+
+    /// Current engine clock (time of the last processed event).
+    pub fn now(&self) -> SimTime {
+        self.engine.now()
+    }
+
+    /// Live wait-queue depth.
+    pub fn queue_len(&self) -> usize {
+        self.sched().queue_len()
+    }
+
+    /// Jobs currently running.
+    pub fn running_len(&self) -> usize {
+        self.sched().running_len()
+    }
+
+    /// Jobs completed so far.
+    pub fn completed_count(&self) -> u64 {
+        self.sched().completed_count
+    }
+
+    /// Stable name of the scheduling policy driving this instance.
+    pub fn policy_name(&self) -> &'static str {
+        self.policy_name
+    }
+
+    fn sched(&self) -> &SchedulerComponent {
+        self.engine.get::<SchedulerComponent>(self.sched_id).expect("scheduler component")
+    }
+
+    /// Deep-copy the live instance into a [`SimSnapshot`] that can be
+    /// resumed independently. Fails (naming the offending component)
+    /// when any component holds non-snapshotable state — a non-rewindable
+    /// job stream, a stream watermark shared with the fault injector, or
+    /// an accelerator-backed scorer. Resuming the snapshot and running it
+    /// produces a byte-identical [`SimReport::fingerprint`] to the
+    /// original run — the clone preserves the event queue's sequence
+    /// counter, so even tie-breaking is reproduced.
+    pub fn snapshot(&self) -> Result<SimSnapshot, String> {
+        Ok(SimSnapshot {
+            engine: self.engine.snapshot()?,
+            sched_id: self.sched_id,
+            policy_name: self.policy_name,
+            workload_name: self.workload_name.clone(),
+            order_name: self.order_name,
+        })
+    }
+
+    /// Reconstruct a live instance from a snapshot (the inverse of
+    /// [`SimInstance::snapshot`]).
+    pub fn resume(snap: SimSnapshot) -> SimInstance {
+        SimInstance {
+            engine: snap.engine,
+            sched_id: snap.sched_id,
+            policy_name: snap.policy_name,
+            workload_name: snap.workload_name,
+            order_name: snap.order_name,
+        }
+    }
+
     /// Close statistics and extract the report.
     pub fn finalize(mut self) -> SimReport {
         self.engine.finish();
         let events = self.engine.events_processed();
         let end = self.engine.now();
         self.report(events, end)
+    }
+
+    /// Drain every remaining event (or stop at `horizon`) and report —
+    /// the stepping-world equivalent of [`Simulation::run`], used to
+    /// play a resumed [`SimSnapshot`] forward to its end state.
+    pub fn run_to_completion(mut self, horizon: Option<SimTime>) -> SimReport {
+        let run = self.engine.run(horizon);
+        self.report(run.events, run.end_time)
     }
 
     fn report(&mut self, events: u64, end_time: SimTime) -> SimReport {
@@ -635,6 +711,28 @@ impl SimInstance {
             overhead_work: s.overhead_work,
             preemption_mode: s.preemption.mode.as_str(),
         }
+    }
+}
+
+/// A paused deep copy of a running [`SimInstance`], produced by
+/// [`SimInstance::snapshot`] and revived by [`SimInstance::resume`] (or
+/// [`SimSnapshot::resume`]). Snapshots are independent: stepping a
+/// resumed copy cannot perturb the original, which is what lets the
+/// serve daemon answer speculative "when would this job start?" queries
+/// against a clone of the live timeline.
+pub struct SimSnapshot {
+    engine: Engine<Ev>,
+    sched_id: crate::core::event::ComponentId,
+    policy_name: &'static str,
+    workload_name: String,
+    order_name: &'static str,
+}
+
+impl SimSnapshot {
+    /// Revive the snapshot into a live instance (consumes the snapshot;
+    /// take another [`SimInstance::snapshot`] first to keep a copy).
+    pub fn resume(self) -> SimInstance {
+        SimInstance::resume(self)
     }
 }
 

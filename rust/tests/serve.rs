@@ -1,0 +1,247 @@
+//! Integration contract of `sst-sched serve`.
+//!
+//! Three layers: (1) every `-> ` / `<- ` example pair in
+//! `docs/PROTOCOL.md` is round-tripped verbatim through the server
+//! codec, so the protocol document cannot drift from the code;
+//! (2) a real Unix-socket session drives submit / predict_wait /
+//! status / shutdown end to end, twice, and the two reply transcripts
+//! must be identical (the daemon is deterministic); (3) property tests
+//! pin the `predict_wait` guarantees — speculation never mutates the
+//! live run, and in a quiet system the prediction is exact.
+
+use sst_sched::config::{ExperimentConfig, ServeOptions};
+use sst_sched::runtime::serve::{backpressure_json, ServerCore};
+use sst_sched::sched::Policy;
+use sst_sched::util::prop::check_n;
+
+/// The machine the PROTOCOL.md worked session runs on.
+fn protocol_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        nodes: Some(2),
+        cores_per_node: Some(4),
+        policy: Policy::Fcfs,
+        ..ExperimentConfig::default()
+    }
+}
+
+/// Every `-> request` / `<- reply` pair in docs/PROTOCOL.md, in order.
+fn protocol_examples() -> Vec<(String, String)> {
+    let text = include_str!("../../docs/PROTOCOL.md");
+    let mut reqs = Vec::new();
+    let mut resps = Vec::new();
+    for line in text.lines() {
+        if let Some(r) = line.strip_prefix("-> ") {
+            reqs.push(r.to_string());
+        } else if let Some(r) = line.strip_prefix("<- ") {
+            resps.push(r.to_string());
+        }
+    }
+    assert_eq!(reqs.len(), resps.len(), "PROTOCOL.md -> / <- markers unbalanced");
+    assert!(reqs.len() >= 8, "PROTOCOL.md lost its worked session");
+    reqs.into_iter().zip(resps).collect()
+}
+
+#[test]
+fn protocol_doc_examples_round_trip_verbatim() {
+    let mut core = ServerCore::new(protocol_cfg());
+    for (i, (req, want)) in protocol_examples().into_iter().enumerate() {
+        let got = core.handle_line(i as u64 + 1, &req).to_string();
+        assert_eq!(
+            got,
+            want,
+            "docs/PROTOCOL.md example {} drifted from the implementation\n  -> {req}",
+            i + 1
+        );
+    }
+}
+
+#[test]
+fn protocol_doc_backpressure_example_is_exact() {
+    let text = include_str!("../../docs/PROTOCOL.md");
+    let documented = text
+        .lines()
+        .find(|l| l.contains("\"code\":\"backpressure\""))
+        .expect("PROTOCOL.md lost its backpressure example");
+    assert_eq!(documented.trim(), backpressure_json(9, 2).to_string());
+}
+
+/// Speculative placement must be invisible: the fingerprint of the
+/// live run's future is byte-identical before and after any number of
+/// predict_wait requests.
+#[test]
+fn predict_wait_never_mutates_the_live_run() {
+    check_n("serve-predict-non-perturbation", 24, |rng| {
+        let mut core = ServerCore::new(ExperimentConfig {
+            nodes: Some(4),
+            cores_per_node: Some(8),
+            ..ExperimentConfig::default()
+        });
+        let mut line = 0u64;
+        let mut t = 0u64;
+        for _ in 0..(3 + rng.below(12)) {
+            t += rng.below(200);
+            line += 1;
+            let r = core.handle_line(
+                line,
+                &format!(
+                    r#"{{"req":"submit","at":{t},"job":{{"cores":{},"runtime":{}}}}}"#,
+                    1 + rng.below(8),
+                    1 + rng.below(500)
+                ),
+            );
+            if !r.get_bool_or("ok", false) {
+                return Err(format!("submit failed: {r:?}"));
+            }
+        }
+        let before = core.fingerprint("default")?;
+        for _ in 0..3 {
+            line += 1;
+            let p = core.handle_line(
+                line,
+                &format!(
+                    r#"{{"req":"predict_wait","job":{{"cores":{},"runtime":{}}}}}"#,
+                    1 + rng.below(8),
+                    1 + rng.below(500)
+                ),
+            );
+            if !p.get_bool_or("ok", false) {
+                return Err(format!("predict failed: {p:?}"));
+            }
+        }
+        let after = core.fingerprint("default")?;
+        if before != after {
+            return Err("speculative predict_wait perturbed the live run".into());
+        }
+        Ok(())
+    });
+}
+
+/// In an otherwise-quiet system, really submitting the job right after
+/// predicting it starts the job exactly where the prediction said —
+/// same id (peeked, not consumed), same start tick.
+#[test]
+fn predicted_start_matches_reality_in_a_quiet_system() {
+    check_n("serve-predict-accuracy", 24, |rng| {
+        let mut core = ServerCore::new(protocol_cfg());
+        let mut line = 0u64;
+        let mut t = 0u64;
+        for _ in 0..(2 + rng.below(10)) {
+            t += rng.below(100);
+            line += 1;
+            let r = core.handle_line(
+                line,
+                &format!(
+                    r#"{{"req":"submit","at":{t},"job":{{"cores":{},"runtime":{}}}}}"#,
+                    1 + rng.below(4),
+                    1 + rng.below(300)
+                ),
+            );
+            if !r.get_bool_or("ok", false) {
+                return Err(format!("submit failed: {r:?}"));
+            }
+        }
+        let job = format!(
+            r#"{{"cores":{},"runtime":{}}}"#,
+            1 + rng.below(4),
+            1 + rng.below(300)
+        );
+        line += 1;
+        let p = core.handle_line(line, &format!(r#"{{"req":"predict_wait","job":{job}}}"#));
+        if !p.get_bool_or("ok", false) {
+            return Err(format!("predict failed: {p:?}"));
+        }
+        let id = p.get_u64_or("job_id", 0);
+        let predicted = p.get_u64_or("predicted_start", u64::MAX);
+        line += 1;
+        let s = core.handle_line(line, &format!(r#"{{"req":"submit","job":{job}}}"#));
+        if s.get_u64_or("job_id", 0) != id {
+            return Err("submit after predict did not reuse the peeked job id".into());
+        }
+        let fp = core.fingerprint("default")?;
+        let actual: u64 = fp
+            .lines()
+            .find(|l| l.starts_with(&format!("{id}:")))
+            .ok_or_else(|| format!("job {id} missing from fingerprint:\n{fp}"))?
+            .split(':')
+            .nth(1)
+            .expect("fingerprint start field")
+            .parse()
+            .map_err(|e| format!("bad start field: {e}"))?;
+        if actual != predicted {
+            return Err(format!(
+                "predicted start {predicted} but the real run started the job at {actual}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end over a real Unix domain socket: spawn the daemon, drive
+/// the protocol, drain it with `shutdown`, and do it all twice — the
+/// two transcripts must match byte for byte.
+#[cfg(unix)]
+#[test]
+fn daemon_round_trips_over_a_real_socket() {
+    use sst_sched::runtime::serve::serve;
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    fn session(path: PathBuf, lines: &[&str]) -> Vec<String> {
+        let cfg = ExperimentConfig {
+            serve: ServeOptions {
+                socket: path.to_str().expect("utf-8 socket path").to_string(),
+                ..ServeOptions::default()
+            },
+            ..protocol_cfg()
+        };
+        let daemon = std::thread::spawn(move || serve(cfg).expect("daemon failed"));
+        let mut stream = None;
+        for _ in 0..500 {
+            match UnixStream::connect(&path) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+        let mut stream = stream.expect("could not connect to the daemon socket");
+        let mut reader = BufReader::new(stream.try_clone().expect("clone socket"));
+        let mut replies = Vec::with_capacity(lines.len());
+        for l in lines {
+            writeln!(stream, "{l}").expect("write request");
+            let mut buf = String::new();
+            reader.read_line(&mut buf).expect("read reply");
+            replies.push(buf.trim().to_string());
+        }
+        drop(reader);
+        drop(stream);
+        daemon.join().expect("daemon thread panicked");
+        assert!(!path.exists(), "daemon must unlink its socket on drain");
+        replies
+    }
+
+    let requests = [
+        r#"{"req":"submit","job":{"cores":4,"runtime":100}}"#,
+        r#"{"req":"submit","job":{"cores":4,"runtime":100}}"#,
+        r#"{"req":"predict_wait","job":{"cores":4,"runtime":50}}"#,
+        r#"{"req":"status"}"#,
+        r#"{"req":"shutdown"}"#,
+    ];
+    let base = std::env::temp_dir();
+    let a = session(
+        base.join(format!("sst-serve-{}-a.sock", std::process::id())),
+        &requests,
+    );
+    let b = session(
+        base.join(format!("sst-serve-{}-b.sock", std::process::id())),
+        &requests,
+    );
+    assert_eq!(a, b, "two identical daemon sessions must answer identically");
+    assert!(a[0].contains(r#""job_id":1"#), "{}", a[0]);
+    assert!(a[2].contains(r#""predicted_start":100"#), "{}", a[2]);
+    assert!(a[3].contains(r#""running":2"#), "{}", a[3]);
+    assert!(a[4].contains(r#""draining":true"#), "{}", a[4]);
+}

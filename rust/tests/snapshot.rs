@@ -1,0 +1,118 @@
+//! Resumable-simulation contract: a run that is stepped, snapshotted,
+//! and resumed must produce a result fingerprint byte-identical to the
+//! same run left uninterrupted. This is the property `sst-sched serve`
+//! leans on for `predict_wait` — the speculative clone must be a
+//! perfect fork of the live timeline.
+
+use sst_sched::core::rng::Rng;
+use sst_sched::core::time::SimTime;
+use sst_sched::job::Job;
+use sst_sched::sched::Policy;
+use sst_sched::sim::{FaultConfig, SimInstance, Simulation};
+use sst_sched::trace::Workload;
+use sst_sched::util::prop::check_n;
+
+fn gen_workload(rng: &mut Rng) -> Workload {
+    let n = 5 + rng.below(40) as usize;
+    let mut jobs = Vec::with_capacity(n);
+    let mut t = 0u64;
+    for i in 0..n {
+        t += rng.below(300);
+        let cores = 1 + rng.below(8);
+        let runtime = 1 + rng.below(2_000);
+        let est = runtime + rng.below(500);
+        let mut job = Job::with_estimate(i as u64 + 1, t, cores, runtime, est);
+        job.user = rng.below(5) as u32;
+        jobs.push(job);
+    }
+    Workload::new("snap-prop", jobs, 4, 8)
+}
+
+fn build(workload: &Workload, policy: Policy, faults: Option<FaultConfig>, seed: u64) -> Simulation {
+    let mut sim = Simulation::new(workload.clone(), policy).with_seed(seed);
+    if let Some(f) = faults {
+        sim = sim.with_faults(f);
+    }
+    sim
+}
+
+#[test]
+fn snapshot_resume_is_byte_identical() {
+    let policies = [
+        Policy::Fcfs,
+        Policy::Sjf,
+        Policy::FcfsBackfill,
+        Policy::ConservativeBackfill,
+    ];
+    check_n("snapshot-resume", 48, |rng| {
+        let workload = gen_workload(rng);
+        let policy = policies[rng.below(4) as usize];
+        let faults = if rng.below(3) == 0 {
+            Some(FaultConfig {
+                mtbf: 20_000.0,
+                mttr: 900.0,
+                seed: 7,
+                ..FaultConfig::default()
+            })
+        } else {
+            None
+        };
+        let seed = rng.next_u64();
+        let reference = build(&workload, policy, faults, seed).run(None).fingerprint();
+
+        let cut = SimTime(rng.below(5_000));
+        let mut inst = build(&workload, policy, faults, seed).build();
+        inst.step_until(cut);
+        let snap = inst.snapshot()?;
+        let resumed = SimInstance::resume(snap).run_to_completion(None).fingerprint();
+        if resumed != reference {
+            return Err(format!(
+                "snapshot at t={} diverged from the uninterrupted run:\n--- resumed\n{resumed}\n--- reference\n{reference}",
+                cut.ticks()
+            ));
+        }
+        // Snapshotting is read-only: the original instance, continued
+        // past the cut, must land on the same fingerprint too.
+        let original = inst.run_to_completion(None).fingerprint();
+        if original != reference {
+            return Err(format!(
+                "taking a snapshot at t={} perturbed the live run",
+                cut.ticks()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn snapshot_of_snapshot_still_matches() {
+    let jobs: Vec<Job> = (0..20)
+        .map(|i| Job::simple(i + 1, i * 50, 1 + (i % 6), 300 + 17 * i))
+        .collect();
+    let workload = Workload::new("snap-chain", jobs, 3, 6);
+    let reference = Simulation::new(workload.clone(), Policy::FcfsBackfill)
+        .run(None)
+        .fingerprint();
+
+    let mut inst = Simulation::new(workload, Policy::FcfsBackfill).build();
+    inst.step_until(SimTime(200));
+    let mut hop = SimInstance::resume(inst.snapshot().expect("first snapshot"));
+    hop.step_until(SimTime(600));
+    let resumed = SimInstance::resume(hop.snapshot().expect("second snapshot"));
+    assert_eq!(resumed.run_to_completion(None).fingerprint(), reference);
+}
+
+#[test]
+fn streamed_sources_refuse_to_snapshot() {
+    // A streamed job source reads from a live BufRead and cannot be
+    // cloned; the error must name the offending component instead of
+    // silently forking half a simulation.
+    use sst_sched::trace::{JobStream, TraceFormat};
+    let swf = "1 0 -1 10 1 -1 -1 1 10 -1 1 1 1 1 -1 -1 -1 -1\n";
+    let stream = JobStream::new(std::io::Cursor::new(swf.as_bytes().to_vec()), TraceFormat::Swf);
+    let inst = Simulation::new(Workload::machine("streamed", 2, 4), Policy::Fcfs)
+        .with_job_stream(Box::new(stream.map(|j| j.unwrap())))
+        .build();
+    let err = inst.snapshot().expect_err("streamed sims must not snapshot");
+    assert!(err.contains("source"), "error should name the component: {err}");
+}
