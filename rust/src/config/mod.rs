@@ -29,8 +29,61 @@ pub enum WorkloadSource {
     Stf(String),
 }
 
+/// Write-ahead-journal durability policy for the serve daemon
+/// (`serve.durability` / `serve --durability`): how hard the daemon
+/// tries to make each journaled request survive a crash. The full cost
+/// model lives in `crate::runtime::journal`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Durability {
+    /// `fsync` every record before applying its request; an
+    /// acknowledged request survives any crash.
+    Strict,
+    /// Write every record to the OS immediately, `fsync` in batches;
+    /// a process crash loses nothing, a machine crash at most one
+    /// batch. The default.
+    #[default]
+    Batched,
+    /// Buffer in user space, flush opportunistically; fastest, and a
+    /// crash loses the buffered tail (bounded by mark compaction,
+    /// which is always durable).
+    Off,
+}
+
+impl Durability {
+    /// Canonical config-file spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Durability::Strict => "strict",
+            Durability::Batched => "batched",
+            Durability::Off => "off",
+        }
+    }
+}
+
+impl std::fmt::Display for Durability {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Durability {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "strict" => Ok(Durability::Strict),
+            "batched" => Ok(Durability::Batched),
+            "off" => Ok(Durability::Off),
+            other => {
+                Err(format!("unknown durability {other:?} (expected strict|batched|off)"))
+            }
+        }
+    }
+}
+
 /// `sst-sched serve` daemon parameters (`serve.*` in the config file;
-/// `--socket`, `--max-sims`, `--queue-depth` on the CLI).
+/// `--socket`, `--max-sims`, `--queue-depth`, `--state-dir`,
+/// `--durability`, `--mark-interval` on the CLI).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServeOptions {
     /// Unix socket path the daemon binds (and unlinks on exit).
@@ -43,11 +96,29 @@ pub struct ServeOptions {
     /// full the daemon replies with an explicit `backpressure` error
     /// rather than buffering (or silently dropping) the request.
     pub queue_depth: usize,
+    /// Directory holding the write-ahead journal (`journal.sstj`).
+    /// `None` (the default) keeps the daemon purely in-memory — a crash
+    /// or restart loses every hosted sim, exactly the pre-journal
+    /// behavior.
+    pub state_dir: Option<String>,
+    /// Journal durability policy; inert without `state_dir`.
+    pub durability: Durability,
+    /// Submits between `MARK` compaction checkpoints; 0 disables
+    /// marking (the journal grows unboundedly — `sst-sched check`
+    /// flags it). Inert without `state_dir`.
+    pub mark_interval: u64,
 }
 
 impl Default for ServeOptions {
     fn default() -> ServeOptions {
-        ServeOptions { socket: "sst-sched.sock".to_string(), max_sims: 8, queue_depth: 64 }
+        ServeOptions {
+            socket: "sst-sched.sock".to_string(),
+            max_sims: 8,
+            queue_depth: 64,
+            state_dir: None,
+            durability: Durability::Batched,
+            mark_interval: 256,
+        }
     }
 }
 
@@ -300,6 +371,13 @@ impl ExperimentConfig {
                      request queue)"
                 );
             }
+            cfg.serve.state_dir =
+                sv.get("state_dir").and_then(|x| x.as_str()).map(|s| s.to_string());
+            cfg.serve.durability = sv
+                .get_str_or("durability", cfg.serve.durability.as_str())
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!(e))?;
+            cfg.serve.mark_interval = sv.get_u64_or("mark_interval", cfg.serve.mark_interval);
         }
         if let Some(rj) = v.get("reservations").and_then(|r| r.as_arr()) {
             for (i, r) in rj.iter().enumerate() {
@@ -462,7 +540,85 @@ impl ExperimentConfig {
                     .to_string(),
             );
         }
+
+        // -- serve persistence -----------------------------------------
+        if let Some(dir) = &cfg.serve.state_dir {
+            let dirp = std::path::Path::new(dir);
+            if dirp.exists() {
+                if !dirp.is_dir() {
+                    findings.push(format!(
+                        "serve.state_dir {dir:?} exists but is not a directory"
+                    ));
+                } else {
+                    if std::fs::metadata(dirp)
+                        .map(|m| m.permissions().readonly())
+                        .unwrap_or(false)
+                    {
+                        findings.push(format!(
+                            "serve.state_dir {dir:?} is not writable — the daemon \
+                             cannot append its journal there"
+                        ));
+                    }
+                    let jpath = dirp.join(crate::runtime::journal::FILE_NAME);
+                    if jpath.exists() {
+                        match crate::runtime::journal::peek_header(&jpath) {
+                            Ok(h) if h != cfg.semantic_hash() => findings.push(format!(
+                                "serve.state_dir: journal {jpath:?} was written under a \
+                                 different experiment config (header hash {h:016x}, this \
+                                 config {:016x}) — `serve --resume` will refuse it",
+                                cfg.semantic_hash()
+                            )),
+                            Ok(_) => {}
+                            Err(e) => findings.push(format!(
+                                "serve.state_dir: journal {jpath:?} is unreadable: {e:#}"
+                            )),
+                        }
+                    }
+                }
+            } else if let Some(p) = dirp.parent() {
+                if !p.as_os_str().is_empty() && !p.exists() {
+                    findings.push(format!(
+                        "serve.state_dir {dir:?}: parent directory {p:?} does not \
+                         exist — likely a typo"
+                    ));
+                }
+            }
+            if cfg.serve.mark_interval == 0 {
+                findings.push(
+                    "serve.mark_interval = 0 disables MARK compaction — the journal \
+                     grows without bound; set an interval or drop the key for the \
+                     default"
+                        .to_string(),
+                );
+            }
+        } else {
+            let d = ServeOptions::default();
+            if cfg.serve.durability != d.durability || cfg.serve.mark_interval != d.mark_interval
+            {
+                findings.push(
+                    "serve.durability / serve.mark_interval are set but \
+                     serve.state_dir is not — journaling is off, so they do nothing"
+                        .to_string(),
+                );
+            }
+        }
         Ok(findings)
+    }
+
+    /// FNV-1a digest of the config's *scheduling-relevant* surface: the
+    /// serialized config minus the `serve` block, so two configs that
+    /// differ only in daemon plumbing (socket path, queue depth,
+    /// durability knobs) hash identically. This is the hash a journal
+    /// header records — resuming needs the same simulation semantics,
+    /// not the same socket. Stable because [`ExperimentConfig::to_json`]
+    /// serializes through a `BTreeMap` (sorted keys, deterministic
+    /// number formatting).
+    pub fn semantic_hash(&self) -> u64 {
+        let mut j = self.to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("serve");
+        }
+        crate::parallel::fnv1a(j.to_string().as_bytes())
     }
 
     /// Serialize (round-trips through [`ExperimentConfig::parse`]).
@@ -589,14 +745,17 @@ impl ExperimentConfig {
             ));
         }
         if self.serve != ServeOptions::default() {
-            top.push((
-                "serve",
-                Json::obj(vec![
-                    ("max_sims", Json::num(self.serve.max_sims as f64)),
-                    ("queue_depth", Json::num(self.serve.queue_depth as f64)),
-                    ("socket", Json::str(self.serve.socket.clone())),
-                ]),
-            ));
+            let mut sv = vec![
+                ("durability", Json::str(self.serve.durability.as_str())),
+                ("mark_interval", Json::num(self.serve.mark_interval as f64)),
+                ("max_sims", Json::num(self.serve.max_sims as f64)),
+                ("queue_depth", Json::num(self.serve.queue_depth as f64)),
+                ("socket", Json::str(self.serve.socket.clone())),
+            ];
+            if let Some(d) = &self.serve.state_dir {
+                sv.push(("state_dir", Json::str(d.clone())));
+            }
+            top.push(("serve", Json::obj(sv)));
         }
         if !self.reservations.is_empty() {
             top.push((
@@ -1021,21 +1180,86 @@ mod tests {
     #[test]
     fn serve_block_roundtrips_and_validates() {
         let c = ExperimentConfig::parse(
-            r#"{"serve": {"socket": "/tmp/s.sock", "max_sims": 3, "queue_depth": 16}}"#,
+            r#"{"serve": {"socket": "/tmp/s.sock", "max_sims": 3, "queue_depth": 16,
+                          "state_dir": "/tmp/sst-state", "durability": "strict",
+                          "mark_interval": 32}}"#,
         )
         .unwrap();
         assert_eq!(c.serve.socket, "/tmp/s.sock");
         assert_eq!(c.serve.max_sims, 3);
         assert_eq!(c.serve.queue_depth, 16);
+        assert_eq!(c.serve.state_dir.as_deref(), Some("/tmp/sst-state"));
+        assert_eq!(c.serve.durability, Durability::Strict);
+        assert_eq!(c.serve.mark_interval, 32);
         let back = ExperimentConfig::parse(&c.to_json().to_pretty()).unwrap();
         assert_eq!(back.serve, c.serve);
         // Defaults stay out of the emitted config, and zero limits are
         // rejected up front rather than refusing every request later.
         let plain = ExperimentConfig::parse("{}").unwrap();
         assert_eq!(plain.serve, ServeOptions::default());
+        assert_eq!(plain.serve.state_dir, None);
+        assert_eq!(plain.serve.durability, Durability::Batched);
+        assert_eq!(plain.serve.mark_interval, 256);
         assert!(plain.to_json().get("serve").is_none());
         assert!(ExperimentConfig::parse(r#"{"serve": {"max_sims": 0}}"#).is_err());
         assert!(ExperimentConfig::parse(r#"{"serve": {"queue_depth": 0}}"#).is_err());
+        assert!(ExperimentConfig::parse(r#"{"serve": {"durability": "paranoid"}}"#).is_err());
+    }
+
+    #[test]
+    fn semantic_hash_ignores_serve_plumbing_only() {
+        let base = ExperimentConfig::parse(SAMPLE).unwrap();
+        // Daemon plumbing (socket, durability, state_dir...) must not
+        // change the hash: a journal resumes under any of them.
+        let mut plumbing = base.clone();
+        plumbing.serve.socket = "/tmp/elsewhere.sock".to_string();
+        plumbing.serve.durability = Durability::Off;
+        plumbing.serve.state_dir = Some("/tmp/x".to_string());
+        assert_eq!(base.semantic_hash(), plumbing.semantic_hash());
+        // Simulation semantics must change it.
+        let mut semantics = base.clone();
+        semantics.seed = base.seed + 1;
+        assert_ne!(base.semantic_hash(), semantics.semantic_hash());
+        let mut policy = base.clone();
+        policy.policy = Policy::Sjf;
+        assert_ne!(base.semantic_hash(), policy.semantic_hash());
+    }
+
+    #[test]
+    fn check_flags_serve_persistence_problems() {
+        // Zero mark interval + a parent directory that does not exist.
+        let f = ExperimentConfig::check(
+            r#"{"serve": {"state_dir": "/nonexistent-sst-parent/state",
+                          "mark_interval": 0}}"#,
+        )
+        .unwrap();
+        assert!(f.iter().any(|m| m.contains("parent directory")), "{f:#?}");
+        assert!(f.iter().any(|m| m.contains("mark_interval = 0")), "{f:#?}");
+        assert_eq!(f.len(), 2, "{f:#?}");
+        // Durability knobs without a state_dir are inert.
+        let f = ExperimentConfig::check(r#"{"serve": {"durability": "strict"}}"#).unwrap();
+        assert_eq!(f.len(), 1, "{f:#?}");
+        assert!(f[0].contains("journaling is off"), "{}", f[0]);
+        // A clean persistent config (existing writable dir) has no findings.
+        let dir = std::env::temp_dir().join(format!("sst-check-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = format!(r#"{{"serve": {{"state_dir": {:?}}}}}"#, dir.to_str().unwrap());
+        assert_eq!(ExperimentConfig::check(&text).unwrap(), Vec::<String>::new());
+        // A journal written under a different config is flagged.
+        let other = ExperimentConfig::parse(r#"{"workload": {"seed": 99}}"#).unwrap();
+        drop(
+            crate::runtime::journal::Journal::create(
+                &dir,
+                other.semantic_hash(),
+                Durability::Strict,
+            )
+            .unwrap(),
+        );
+        let f = ExperimentConfig::check(&text).unwrap();
+        assert_eq!(f.len(), 1, "{f:#?}");
+        assert!(f[0].contains("different experiment config"), "{}", f[0]);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

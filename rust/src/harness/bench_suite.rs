@@ -525,6 +525,53 @@ fn serve_request_cases(b: &mut Bench, submits: usize) {
     });
 }
 
+/// Crash-recovery cost: replay a write-ahead journal of `submits`
+/// requests back into a live daemon. The journal is written once
+/// outside the timed closure (compaction off, so the full request log
+/// replays); each timed run is a complete [`recover`] — read + verify
+/// the file, rebuild the sim, replay every surviving request. This is
+/// the daemon's restart-latency budget; tracked so journal-format or
+/// replay regressions show up as a number, not an incident.
+fn serve_journal_replay_cases(b: &mut Bench, submits: usize) {
+    use crate::config::{Durability, ExperimentConfig};
+    use crate::runtime::{journal::Journal, recover, serve::ServerCore};
+    let dir = std::env::temp_dir().join(format!("sst-bench-journal-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = ExperimentConfig {
+        nodes: Some(64),
+        cores_per_node: Some(8),
+        ..ExperimentConfig::default()
+    };
+    cfg.serve.state_dir = Some(dir.to_string_lossy().into_owned());
+    cfg.serve.durability = Durability::Off;
+    cfg.serve.mark_interval = 0;
+    let mut core = ServerCore::new(cfg.clone());
+    core.attach_journal(
+        Journal::create(&dir, cfg.semantic_hash(), cfg.serve.durability).expect("bench journal"),
+    );
+    for i in 0..submits as u64 {
+        let r = core.handle_line(
+            i + 1,
+            &format!(
+                r#"{{"req":"submit","at":{},"job":{{"cores":{},"runtime":{}}}}}"#,
+                i * 7,
+                1 + i % 8,
+                60 + (i % 97) * 30
+            ),
+        );
+        assert!(r.get_bool_or("ok", false), "bench journal submit refused");
+    }
+    drop(core); // graceful close: the journal flushes and syncs
+    let label = format!("serve/journal-replay/{}-submits", submits);
+    let rdir = dir.clone();
+    b.case(&label, move || {
+        let (core, report) = recover::recover(&cfg, &rdir).expect("bench recovery");
+        assert_eq!(report.replayed_submits, submits, "bench journal lost submits");
+        core.sim_names().len()
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Build and run the whole suite; the caller reads/serializes
 /// [`Bench::results`].
 pub fn engine_throughput_suite(smoke: bool) -> Bench {
@@ -585,6 +632,9 @@ pub fn engine_throughput_suite(smoke: bool) -> Bench {
 
     section("serve daemon request path (in-process)");
     serve_request_cases(&mut b, if smoke { 2_000 } else { 5_000 });
+
+    section("serve crash recovery (journal replay)");
+    serve_journal_replay_cases(&mut b, if smoke { 2_000 } else { 5_000 });
 
     section("baseline (CQsim-like) for comparison");
     let w = das2.clone();

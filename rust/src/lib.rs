@@ -144,7 +144,11 @@
 //!   protocol (`submit`/`predict_wait`/`status`/`metrics`/`shutdown`,
 //!   see `docs/PROTOCOL.md`) with bounded per-connection queues,
 //!   explicit backpressure replies, `--max-sims` admission control and
-//!   graceful SIGTERM drain.
+//!   graceful SIGTERM drain. `--state-dir` adds crash safety: a
+//!   write-ahead journal ([`runtime::journal`]) records every mutating
+//!   request before it is applied, and `--resume`
+//!   ([`runtime::recover`]) rebuilds the exact pre-crash daemon by
+//!   deterministic replay (`docs/OPERATIONS.md`).
 //! * [`sim`] — the component wiring: job source, scheduler, resource
 //!   manager, executor, statistics collector. Since the serve PR,
 //!   `Simulation::build()` yields a resumable [`sim::SimInstance`]
@@ -158,8 +162,10 @@
 //! User-facing documentation lives at the repository root: `README.md`
 //! (quickstart, subcommands, ingestion-tier guidance),
 //! `docs/ARCHITECTURE.md` (module map, determinism layers, serve
-//! lifecycle) and `docs/PROTOCOL.md` (the serve wire protocol, whose
-//! examples are round-tripped verbatim by `rust/tests/serve.rs`).
+//! lifecycle), `docs/PROTOCOL.md` (the serve wire protocol, whose
+//! examples are round-tripped verbatim by `rust/tests/serve.rs`) and
+//! `docs/OPERATIONS.md` (running the daemon durably: journal format,
+//! durability modes, recovery semantics).
 //!
 //! ## Determinism contract & correctness tooling
 //!
@@ -195,6 +201,18 @@
 //!   `cargo run --release --features sanitize -- run cfg.json` before
 //!   blessing new goldens or landing changes to the scheduler core,
 //!   the event queue, or the profile algebra.
+//!
+//! **Crash safety is the determinism contract's third dividend** (after
+//! cross-shard equality and snapshot/resume): because a hosted sim's
+//! future is a pure function of the experiment config and its ordered
+//! request history, the serve daemon never checkpoints scheduler
+//! internals — it write-ahead journals request *lines* and recovers by
+//! replaying them. The chaos harness (`rust/tests/crash_recovery.rs`)
+//! turns that into an equality assertion: for randomized crash points,
+//! torn journal tails, and every durability mode, the recovered
+//! daemon's per-sim fingerprints are byte-identical to an uncrashed
+//! reference. Any nondeterminism anywhere in the stack would show up
+//! there as a recovery divergence.
 
 pub mod analysis;
 pub mod baseline;

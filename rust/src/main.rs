@@ -50,10 +50,14 @@ USAGE:
                 [--restart-overhead S] [--starvation S] [--priority-bands N]
                 [--horizon TICKS|auto|exact]  # availability-planning horizon
   sst-sched serve [--socket PATH] [--max-sims N] [--queue-depth N]
+                [--state-dir DIR]  # write-ahead journal -> crash-safe daemon
+                [--resume DIR]     # recover sims by replaying DIR's journal
+                [--durability strict|batched|off] [--mark-interval N]
                 [--nodes N] [--cores C] [--policy P] [--seed S] ...
                 # scheduler-as-a-service daemon: JSON-lines over a Unix
                 # socket (submit | predict_wait | status | metrics |
-                # shutdown — see docs/PROTOCOL.md); drains on SIGTERM
+                # shutdown — see docs/PROTOCOL.md); drains on SIGTERM;
+                # persistence/recovery semantics in docs/OPERATIONS.md
   sst-sched faults [--workload ...] [--jobs N] [--mtbf S] [--mttr S] ...
                 # policy x preemption-mode comparison on one failure trace
   sst-sched bench [--smoke] [--out BENCH_engine.json]
@@ -225,6 +229,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     cfg.serve.max_sims = args.usize_or("max-sims", cfg.serve.max_sims)?;
     cfg.serve.queue_depth = args.usize_or("queue-depth", cfg.serve.queue_depth)?;
+    // Persistence knobs: `--state-dir DIR` starts a fresh journal,
+    // `--resume DIR` replays an existing one (both set serve.state_dir;
+    // resume flips the recovery path).
+    if let Some(d) = args.get("state-dir") {
+        cfg.serve.state_dir = Some(d.to_string());
+    }
+    let resume = args.get("resume").map(|d| d.to_string());
+    if let Some(d) = &resume {
+        if cfg.serve.state_dir.as_deref().is_some_and(|s| s != d) {
+            bail!("--state-dir and --resume point at different directories; pass one");
+        }
+        cfg.serve.state_dir = Some(d.clone());
+    }
+    if let Some(dur) = args.get("durability") {
+        cfg.serve.durability = dur.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    }
+    cfg.serve.mark_interval = args.u64_or("mark-interval", cfg.serve.mark_interval)?;
     args.reject_unknown()?;
     if cfg.serve.max_sims == 0 {
         bail!("--max-sims must be >= 1");
@@ -234,10 +255,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     #[cfg(unix)]
     {
-        sst_sched::runtime::serve::serve(cfg)
+        sst_sched::runtime::serve::serve_opts(cfg, resume.is_some())
     }
     #[cfg(not(unix))]
     {
+        let _ = resume;
         bail!("serve needs Unix domain sockets, unavailable on this platform")
     }
 }

@@ -1,0 +1,808 @@
+//! Write-ahead journal for the serve daemon: the durable half of the
+//! scheduler-as-a-service story.
+//!
+//! The insight the whole design rides on: a daemon-hosted sim's entire
+//! state is a pure function of `(ExperimentConfig, ordered
+//! mutating-request log)` — the determinism contract (byte-identical
+//! fingerprints, `rust/tests/snapshot.rs`) makes recovery-by-replay
+//! provably exact, not best-effort. So the journal records *requests*,
+//! not engine state: every state-mutating request is appended (and,
+//! depending on [`Durability`], fsynced) *before* it is applied, and
+//! [`crate::runtime::recover`] rebuilds the daemon by replaying the log
+//! over the same config.
+//!
+//! ## File layout (`<state-dir>/journal.sstj`, all integers little-endian)
+//!
+//! The binary conventions mirror `trace::stf`: fixed magic, a version
+//! gate, fixed-offset little-endian fields, and locate-the-problem
+//! errors carrying the record index and byte offset.
+//!
+//! 32-byte header:
+//!
+//! | offset | size | field                                     |
+//! |--------|------|-------------------------------------------|
+//! | 0      | 4    | magic `b"SSTJ"`                           |
+//! | 4      | 2    | version (currently 1)                     |
+//! | 6      | 2    | flags (reserved, zero)                    |
+//! | 8      | 8    | config hash ([`crate::config::ExperimentConfig::semantic_hash`]) |
+//! | 16     | 16   | reserved (zero)                           |
+//!
+//! then length-prefixed, checksummed records:
+//!
+//! | offset | size | field                                    |
+//! |--------|------|------------------------------------------|
+//! | 0      | 1    | kind (1 create, 2 submit, 3 shutdown, 4 mark) |
+//! | 1      | 4    | payload length                           |
+//! | 5      | 8    | FNV-1a checksum of kind byte + payload   |
+//! | 13     | n    | payload                                  |
+//!
+//! ## Corruption taxonomy
+//!
+//! * **Torn tail** — the file ends inside a record (a crash mid-append).
+//!   The intact prefix is returned, the tail is reported in
+//!   [`JournalImage::torn`] and cleanly discarded by recovery (the file
+//!   is truncated to [`JournalImage::valid_len`] before appending
+//!   resumes).
+//! * **Checksum mismatch on a complete record** — records are written
+//!   with a single `write_all`, so a crash truncates but never
+//!   scrambles; a complete record whose checksum fails is real
+//!   corruption and a hard error carrying the record index and byte
+//!   offset, like the stf reader's diagnostics.
+//! * **Bad magic / version / short header** — hard errors up front.
+//!
+//! ## MARK records and compaction
+//!
+//! Serve arrivals are monotone (`at >= now` is enforced, and every
+//! submit steps the engine through its arrival), so a sim's full
+//! request history *is* its ordered job list plus the clock bound it
+//! advanced to. A `MARK` record snapshots exactly that for every hosted
+//! sim — ordered jobs, `next_job_id`, clock, and an FNV digest of the
+//! sim's future fingerprint — which makes it a *lossless compaction* of
+//! every record before it. Writing a mark atomically rewrites the
+//! journal as `header + MARK` (tmp file + rename), so the file holds at
+//! most one mark and recovery replays from the mark's step bound
+//! instead of t=0. The fingerprint digest is asserted after replay:
+//! a diverged journal is refused, never silently half-recovered.
+
+use crate::config::Durability;
+use crate::sim::SimInstance;
+use anyhow::{bail, Context, Result};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// File magic: the first four bytes of every serve journal.
+pub const MAGIC: [u8; 4] = *b"SSTJ";
+/// Format version this reader/writer speaks.
+pub const VERSION: u16 = 1;
+/// Header size in bytes.
+pub const HEADER_BYTES: usize = 32;
+/// Fixed per-record prefix: kind (1) + payload length (4) + checksum (8).
+pub const RECORD_HEADER_BYTES: usize = 13;
+/// Journal file name inside the daemon's state directory.
+pub const FILE_NAME: &str = "journal.sstj";
+
+/// Byte offset of the config hash within the header.
+const CONFIG_HASH_OFFSET: usize = 8;
+
+const KIND_CREATE: u8 = 1;
+const KIND_SUBMIT: u8 = 2;
+const KIND_SHUTDOWN: u8 = 3;
+const KIND_MARK: u8 = 4;
+
+/// `fsync` cadence in `batched` mode: records between `sync_data` calls.
+const BATCH_SYNC_EVERY: u64 = 16;
+/// User-space buffer high-water mark in `off` mode: bytes buffered
+/// before an opportunistic write to the OS.
+const OFF_FLUSH_BYTES: usize = 64 * 1024;
+
+/// One journaled event. `Create`/`Submit` carry the raw request
+/// material and replay through the same dispatch path the live daemon
+/// uses; `Mark` is a lossless checkpoint (see the module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Record {
+    /// A sim was created by a non-submit request (`predict_wait` on a
+    /// fresh name); payload is the sim name.
+    Create(String),
+    /// A `submit` request, journaled before it was applied; payload is
+    /// the raw JSON request line.
+    Submit(String),
+    /// A `shutdown` request was accepted: the journal was closed
+    /// cleanly. Replay restores the sims but not the draining flag —
+    /// a resumed daemon starts a fresh serve lifetime.
+    Shutdown,
+    /// Checkpoint of every hosted sim; supersedes all earlier records.
+    Mark(Mark),
+}
+
+/// Payload of a `MARK` record: one checkpoint per hosted sim.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Mark {
+    /// Every hosted sim at mark time, in name order.
+    pub sims: Vec<SimMark>,
+}
+
+/// One sim's lossless checkpoint inside a [`Mark`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimMark {
+    /// Sim name (the `"sim"` request field).
+    pub name: String,
+    /// Next job id the allocator would hand out.
+    pub next_job_id: u64,
+    /// Clock the sim had advanced to (the replay step bound).
+    pub clock: u64,
+    /// FNV-1a digest of the sim's future fingerprint
+    /// ([`mark_fingerprint`]); recovery asserts the replayed state
+    /// reproduces it byte for byte.
+    pub fp_hash: u64,
+    /// Every job ever submitted to this sim, in submit order.
+    pub jobs: Vec<JobRec>,
+}
+
+/// One submitted job inside a [`SimMark`] — the full u64 field widths
+/// of the serve protocol, not stf's range-checked u32 slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobRec {
+    /// Arrival tick the submit committed (equals the job's submit time).
+    pub submit: u64,
+    /// Daemon-assigned job id.
+    pub id: u64,
+    /// Cores requested.
+    pub cores: u64,
+    /// Memory requested (MB).
+    pub mem: u64,
+    /// Runtime estimate in ticks.
+    pub est: u64,
+    /// Actual runtime in ticks.
+    pub runtime: u64,
+    /// Submitting user id.
+    pub user: u32,
+    /// Group id.
+    pub group: u32,
+}
+
+/// Encoded size of one [`JobRec`].
+const JOB_REC_BYTES: usize = 56;
+
+/// FNV-1a over the kind byte followed by the payload — the per-record
+/// checksum (same constants as [`crate::parallel::fnv1a`]).
+fn record_checksum(kind: u8, payload: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    h ^= kind as u64;
+    h = h.wrapping_mul(0x100000001b3);
+    for &b in payload {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Fingerprint a sim for a `MARK` record: snapshot the live engine, run
+/// the clone to completion, digest the report fingerprint. This is the
+/// journaled daemon's gate on what it can host: a streamed
+/// (`with_job_stream`) sim cannot be snapshotted, so this propagates
+/// the same clear by-name error [`SimInstance::snapshot`] already
+/// reports — streamed sims are rejected from journaled serve, never
+/// half-journaled.
+pub fn mark_fingerprint(inst: &SimInstance) -> Result<u64, String> {
+    let snap = inst.snapshot()?;
+    let fp = SimInstance::resume(snap).run_to_completion(None).fingerprint();
+    Ok(crate::parallel::fnv1a(fp.as_bytes()))
+}
+
+/// Encode the fixed header.
+pub fn encode_header(config_hash: u64) -> [u8; HEADER_BYTES] {
+    let mut h = [0u8; HEADER_BYTES];
+    h[0..4].copy_from_slice(&MAGIC);
+    h[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    h[CONFIG_HASH_OFFSET..CONFIG_HASH_OFFSET + 8].copy_from_slice(&config_hash.to_le_bytes());
+    h
+}
+
+/// Decode and validate a header prefix; returns the config hash.
+pub fn decode_header(bytes: &[u8]) -> Result<u64> {
+    if bytes.len() < HEADER_BYTES {
+        bail!(
+            "journal: file too short for a header ({} bytes, need {HEADER_BYTES})",
+            bytes.len()
+        );
+    }
+    if bytes[0..4] != MAGIC {
+        bail!("journal: bad magic {:?} (not a serve journal)", &bytes[0..4]);
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != VERSION {
+        bail!("journal: unsupported version {version} (this reader speaks {VERSION})");
+    }
+    Ok(u64::from_le_bytes(
+        bytes[CONFIG_HASH_OFFSET..CONFIG_HASH_OFFSET + 8].try_into().unwrap(),
+    ))
+}
+
+/// Read just the header of a journal file (config-hash compatibility
+/// checks, `sst-sched check`).
+pub fn peek_header(path: &Path) -> Result<u64> {
+    let bytes = std::fs::read(path).with_context(|| format!("journal: reading {path:?}"))?;
+    decode_header(&bytes)
+}
+
+fn encode_mark(m: &Mark) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + m.sims.iter().map(|s| 32 + s.name.len() + s.jobs.len() * JOB_REC_BYTES).sum::<usize>());
+    out.extend_from_slice(&(m.sims.len() as u32).to_le_bytes());
+    for s in &m.sims {
+        out.extend_from_slice(&(s.name.len() as u32).to_le_bytes());
+        out.extend_from_slice(s.name.as_bytes());
+        out.extend_from_slice(&s.next_job_id.to_le_bytes());
+        out.extend_from_slice(&s.clock.to_le_bytes());
+        out.extend_from_slice(&s.fp_hash.to_le_bytes());
+        out.extend_from_slice(&(s.jobs.len() as u32).to_le_bytes());
+        for j in &s.jobs {
+            out.extend_from_slice(&j.submit.to_le_bytes());
+            out.extend_from_slice(&j.id.to_le_bytes());
+            out.extend_from_slice(&j.cores.to_le_bytes());
+            out.extend_from_slice(&j.mem.to_le_bytes());
+            out.extend_from_slice(&j.est.to_le_bytes());
+            out.extend_from_slice(&j.runtime.to_le_bytes());
+            out.extend_from_slice(&j.user.to_le_bytes());
+            out.extend_from_slice(&j.group.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Bounds-checked little-endian cursor for mark payload decoding.
+struct Cur<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.b.len() - self.off < n {
+            bail!("journal: mark payload truncated reading {what} at payload byte {}", self.off);
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+}
+
+fn decode_mark(payload: &[u8]) -> Result<Mark> {
+    let mut c = Cur { b: payload, off: 0 };
+    let sims = c.u32("sim count")?;
+    let mut out = Mark { sims: Vec::with_capacity(sims as usize) };
+    for _ in 0..sims {
+        let name_len = c.u32("sim name length")? as usize;
+        let name = std::str::from_utf8(c.take(name_len, "sim name")?)
+            .context("journal: mark sim name is not UTF-8")?
+            .to_string();
+        let next_job_id = c.u64("next_job_id")?;
+        let clock = c.u64("clock")?;
+        let fp_hash = c.u64("fingerprint hash")?;
+        let njobs = c.u32("job count")?;
+        let mut jobs = Vec::with_capacity(njobs as usize);
+        for _ in 0..njobs {
+            jobs.push(JobRec {
+                submit: c.u64("job submit")?,
+                id: c.u64("job id")?,
+                cores: c.u64("job cores")?,
+                mem: c.u64("job mem")?,
+                est: c.u64("job est")?,
+                runtime: c.u64("job runtime")?,
+                user: c.u32("job user")?,
+                group: c.u32("job group")?,
+            });
+        }
+        out.sims.push(SimMark { name, next_job_id, clock, fp_hash, jobs });
+    }
+    if c.off != payload.len() {
+        bail!("journal: mark payload has {} trailing byte(s)", payload.len() - c.off);
+    }
+    Ok(out)
+}
+
+/// Encode one record (prefix + payload) into `out`.
+pub fn encode_record_into(out: &mut Vec<u8>, rec: &Record) {
+    let (kind, payload): (u8, Vec<u8>) = match rec {
+        Record::Create(name) => (KIND_CREATE, name.as_bytes().to_vec()),
+        Record::Submit(line) => (KIND_SUBMIT, line.as_bytes().to_vec()),
+        Record::Shutdown => (KIND_SHUTDOWN, Vec::new()),
+        Record::Mark(m) => (KIND_MARK, encode_mark(m)),
+    };
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&record_checksum(kind, &payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+}
+
+/// A torn/truncated tail: the byte offset where the intact prefix ends
+/// and why the tail could not be read. Recoverable by design — a crash
+/// mid-append is exactly this shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TornTail {
+    /// File offset of the first byte past the last intact record.
+    pub offset: u64,
+    /// What was wrong with the tail.
+    pub reason: String,
+}
+
+/// A fully scanned journal: header fields, every intact record, and
+/// whether a torn tail was discarded.
+#[derive(Debug)]
+pub struct JournalImage {
+    /// Config hash from the header.
+    pub config_hash: u64,
+    /// Every intact record, in append order.
+    pub records: Vec<Record>,
+    /// `Some` when the file ends inside a record (crash mid-append);
+    /// the tail is not part of [`JournalImage::records`].
+    pub torn: Option<TornTail>,
+    /// Byte length of the intact prefix — recovery truncates the file
+    /// here before appending resumes.
+    pub valid_len: u64,
+}
+
+/// Scan a whole journal image. Torn tails are tolerated and reported;
+/// a checksum mismatch on a *complete* record, an unknown record kind,
+/// or a malformed mark payload is a hard error carrying the record
+/// index and byte offset (records are written with a single `write_all`,
+/// so a crash truncates — it never scrambles a complete record).
+pub fn read_image(bytes: &[u8]) -> Result<JournalImage> {
+    let config_hash = decode_header(bytes)?;
+    let mut records = Vec::new();
+    let mut torn = None;
+    let mut off = HEADER_BYTES;
+    let mut idx = 0usize;
+    while off < bytes.len() {
+        let rem = bytes.len() - off;
+        if rem < RECORD_HEADER_BYTES {
+            torn = Some(TornTail {
+                offset: off as u64,
+                reason: format!(
+                    "record {idx} prefix truncated at byte {off} ({rem} of {RECORD_HEADER_BYTES} bytes)"
+                ),
+            });
+            break;
+        }
+        let kind = bytes[off];
+        let plen =
+            u32::from_le_bytes(bytes[off + 1..off + 5].try_into().unwrap()) as usize;
+        let stored =
+            u64::from_le_bytes(bytes[off + 5..off + 13].try_into().unwrap());
+        if rem < RECORD_HEADER_BYTES + plen {
+            torn = Some(TornTail {
+                offset: off as u64,
+                reason: format!(
+                    "record {idx} payload truncated at byte {off} ({} of {plen} payload bytes)",
+                    rem - RECORD_HEADER_BYTES
+                ),
+            });
+            break;
+        }
+        let payload = &bytes[off + RECORD_HEADER_BYTES..off + RECORD_HEADER_BYTES + plen];
+        let computed = record_checksum(kind, payload);
+        if computed != stored {
+            bail!(
+                "journal: record {idx} at byte {off} fails its checksum \
+                 (stored {stored:016x}, computed {computed:016x}) — the journal is \
+                 corrupt mid-file, not merely truncated; refusing to replay it"
+            );
+        }
+        let rec = match kind {
+            KIND_CREATE => Record::Create(
+                std::str::from_utf8(payload)
+                    .with_context(|| format!("journal: record {idx} at byte {off}: create payload is not UTF-8"))?
+                    .to_string(),
+            ),
+            KIND_SUBMIT => Record::Submit(
+                std::str::from_utf8(payload)
+                    .with_context(|| format!("journal: record {idx} at byte {off}: submit payload is not UTF-8"))?
+                    .to_string(),
+            ),
+            KIND_SHUTDOWN => Record::Shutdown,
+            KIND_MARK => Record::Mark(
+                decode_mark(payload)
+                    .with_context(|| format!("journal: record {idx} at byte {off}: bad mark payload"))?,
+            ),
+            other => bail!("journal: record {idx} at byte {off} has unknown kind {other}"),
+        };
+        records.push(rec);
+        off += RECORD_HEADER_BYTES + plen;
+        idx += 1;
+    }
+    Ok(JournalImage { config_hash, records, torn, valid_len: off.min(bytes.len()) as u64 })
+}
+
+/// Read and scan a journal file.
+pub fn read_file(path: &Path) -> Result<JournalImage> {
+    let bytes = std::fs::read(path).with_context(|| format!("journal: reading {path:?}"))?;
+    read_image(&bytes)
+}
+
+/// Append-side handle on a journal file. Owns the durability policy:
+///
+/// * `strict` — every record is written and fsynced before the request
+///   is applied; an acknowledged request survives any crash.
+/// * `batched` — every record reaches the OS immediately (a *process*
+///   crash loses nothing) and `fsync` runs every
+///   [`BATCH_SYNC_EVERY`] records (a machine crash loses at most one
+///   batch). The default.
+/// * `off` — records buffer in user space and reach the OS
+///   opportunistically; fastest, and a crash loses the buffered tail.
+///   Recovery still yields a consistent prefix, and MARK compaction is
+///   always written durably (tmp file + rename + fsync), so loss is
+///   bounded by the mark interval.
+///
+/// Dropping a `Journal` flushes and fsyncs (graceful close);
+/// [`Journal::abandon`] drops the user-space buffer unflushed — the
+/// crash-fault harness uses it to simulate a crash.
+pub struct Journal {
+    path: PathBuf,
+    file: std::fs::File,
+    /// User-space buffer of encoded-but-unwritten records (`off` mode).
+    buf: Vec<u8>,
+    durability: Durability,
+    config_hash: u64,
+    records: u64,
+    submits_since_mark: u64,
+    pending_sync: u64,
+}
+
+impl Journal {
+    /// Create a fresh journal at `<dir>/journal.sstj` (the directory is
+    /// created if missing). Refuses to overwrite an existing journal —
+    /// resuming or removing it is the caller's explicit decision.
+    pub fn create(dir: &Path, config_hash: u64, durability: Durability) -> Result<Journal> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("journal: creating state dir {dir:?}"))?;
+        let path = dir.join(FILE_NAME);
+        let mut file = std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .with_context(|| format!("journal: creating {path:?}"))?;
+        file.write_all(&encode_header(config_hash))
+            .with_context(|| format!("journal: writing header to {path:?}"))?;
+        file.sync_data().with_context(|| format!("journal: syncing {path:?}"))?;
+        Ok(Journal {
+            path,
+            file,
+            buf: Vec::new(),
+            durability,
+            config_hash,
+            records: 0,
+            submits_since_mark: 0,
+            pending_sync: 0,
+        })
+    }
+
+    /// Reopen an existing journal for appending after recovery. The
+    /// file is truncated to `valid_len` first, discarding a torn tail;
+    /// `records` / `submits_since_mark` seed the mark cadence from the
+    /// recovered image.
+    pub fn open_append(
+        dir: &Path,
+        config_hash: u64,
+        durability: Durability,
+        valid_len: u64,
+        records: u64,
+        submits_since_mark: u64,
+    ) -> Result<Journal> {
+        let path = dir.join(FILE_NAME);
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("journal: reopening {path:?}"))?;
+        file.set_len(valid_len)
+            .with_context(|| format!("journal: truncating {path:?} to its intact prefix"))?;
+        file.sync_data().with_context(|| format!("journal: syncing {path:?}"))?;
+        Ok(Journal {
+            path,
+            file,
+            buf: Vec::new(),
+            durability,
+            config_hash,
+            records,
+            submits_since_mark,
+            pending_sync: 0,
+        })
+    }
+
+    /// The journal file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Records appended over the journal's lifetime (marks included).
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    fn write_buf(&mut self) -> Result<()> {
+        if !self.buf.is_empty() {
+            self.file
+                .write_all(&self.buf)
+                .with_context(|| format!("journal: writing {:?}", self.path))?;
+            self.buf.clear();
+        }
+        Ok(())
+    }
+
+    /// Append one record under the durability policy. Call *before*
+    /// applying the request it records (write-ahead).
+    pub fn append(&mut self, rec: &Record) -> Result<()> {
+        let mut encoded = Vec::new();
+        encode_record_into(&mut encoded, rec);
+        match self.durability {
+            Durability::Off => {
+                self.buf.extend_from_slice(&encoded);
+                if self.buf.len() >= OFF_FLUSH_BYTES {
+                    self.write_buf()?;
+                }
+            }
+            Durability::Batched => {
+                self.file
+                    .write_all(&encoded)
+                    .with_context(|| format!("journal: writing {:?}", self.path))?;
+                self.pending_sync += 1;
+                if self.pending_sync >= BATCH_SYNC_EVERY {
+                    self.file
+                        .sync_data()
+                        .with_context(|| format!("journal: syncing {:?}", self.path))?;
+                    self.pending_sync = 0;
+                }
+            }
+            Durability::Strict => {
+                self.file
+                    .write_all(&encoded)
+                    .with_context(|| format!("journal: writing {:?}", self.path))?;
+                self.file
+                    .sync_data()
+                    .with_context(|| format!("journal: syncing {:?}", self.path))?;
+            }
+        }
+        self.records += 1;
+        if matches!(rec, Record::Submit(_)) {
+            self.submits_since_mark += 1;
+        }
+        Ok(())
+    }
+
+    /// True when `interval` submits have been journaled since the last
+    /// mark (0 disables marking — flagged by `sst-sched check`).
+    pub fn should_mark(&self, interval: u64) -> bool {
+        interval > 0 && self.submits_since_mark >= interval
+    }
+
+    /// Write a `MARK` checkpoint and compact: the journal is atomically
+    /// rewritten as `header + MARK` (tmp file, fsync, rename), because
+    /// the mark losslessly supersedes every record before it. Always
+    /// durable regardless of the durability mode — compaction is the
+    /// loss bound for `off`/`batched`.
+    pub fn mark_and_compact(&mut self, mark: &Mark) -> Result<()> {
+        let mut bytes = encode_header(self.config_hash).to_vec();
+        encode_record_into(&mut bytes, &Record::Mark(mark.clone()));
+        let tmp = self.path.with_extension("sstj.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("journal: creating compaction file {tmp:?}"))?;
+            f.write_all(&bytes)
+                .with_context(|| format!("journal: writing compaction file {tmp:?}"))?;
+            f.sync_data()
+                .with_context(|| format!("journal: syncing compaction file {tmp:?}"))?;
+        }
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("journal: renaming {tmp:?} over {:?}", self.path))?;
+        self.file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("journal: reopening {:?} after compaction", self.path))?;
+        // Everything buffered was subsumed by the mark.
+        self.buf.clear();
+        self.records = 1;
+        self.submits_since_mark = 0;
+        self.pending_sync = 0;
+        Ok(())
+    }
+
+    /// Graceful flush: push the user-space buffer to the OS and fsync.
+    pub fn flush(&mut self) -> Result<()> {
+        self.write_buf()?;
+        self.file
+            .sync_data()
+            .with_context(|| format!("journal: syncing {:?}", self.path))?;
+        self.pending_sync = 0;
+        Ok(())
+    }
+
+    /// Drop the journal *without* flushing the user-space buffer — a
+    /// process crash, as one call. The crash-fault chaos harness
+    /// (`rust/tests/crash_recovery.rs`) is the intended caller; a
+    /// graceful close is just `drop`.
+    pub fn abandon(mut self) {
+        self.buf.clear();
+    }
+}
+
+impl Drop for Journal {
+    fn drop(&mut self) {
+        // Graceful close: best-effort flush + fsync, so a clean daemon
+        // exit is durable even in `off` mode.
+        let _ = self.write_buf();
+        let _ = self.file.sync_data();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_mark() -> Mark {
+        Mark {
+            sims: vec![SimMark {
+                name: "default".to_string(),
+                next_job_id: 3,
+                clock: 120,
+                fp_hash: 0xdead_beef_cafe_f00d,
+                jobs: vec![
+                    JobRec { submit: 0, id: 1, cores: 4, mem: 0, est: 100, runtime: 100, user: 0, group: 0 },
+                    JobRec { submit: 120, id: 2, cores: 2, mem: 512, est: 60, runtime: 50, user: 7, group: 3 },
+                ],
+            }],
+        }
+    }
+
+    fn image_of(records: &[Record]) -> Vec<u8> {
+        let mut bytes = encode_header(42).to_vec();
+        for r in records {
+            encode_record_into(&mut bytes, r);
+        }
+        bytes
+    }
+
+    #[test]
+    fn every_record_kind_roundtrips() {
+        let recs = vec![
+            Record::Create("a".to_string()),
+            Record::Submit(r#"{"req":"submit","job":{"cores":1,"runtime":5}}"#.to_string()),
+            Record::Shutdown,
+            Record::Mark(sample_mark()),
+        ];
+        let img = read_image(&image_of(&recs)).unwrap();
+        assert_eq!(img.config_hash, 42);
+        assert_eq!(img.records, recs);
+        assert!(img.torn.is_none());
+        assert_eq!(img.valid_len, image_of(&recs).len() as u64);
+    }
+
+    #[test]
+    fn empty_journal_is_valid_and_empty() {
+        let img = read_image(&encode_header(7)).unwrap();
+        assert_eq!(img.config_hash, 7);
+        assert!(img.records.is_empty());
+        assert!(img.torn.is_none());
+        // A zero-byte file, by contrast, has no header at all.
+        let e = read_image(&[]).unwrap_err().to_string();
+        assert!(e.contains("too short"), "{e}");
+    }
+
+    #[test]
+    fn truncated_tail_is_recovered_not_fatal() {
+        let recs = vec![
+            Record::Submit("line one".to_string()),
+            Record::Submit("line two, about to be torn".to_string()),
+        ];
+        let full = image_of(&recs);
+        // Cut into the second record's payload: prefix survives.
+        let img = read_image(&full[..full.len() - 5]).unwrap();
+        assert_eq!(img.records, vec![Record::Submit("line one".to_string())]);
+        let torn = img.torn.expect("tail must be reported");
+        assert!(torn.reason.contains("record 1"), "{}", torn.reason);
+        assert!(torn.reason.contains("truncated"), "{}", torn.reason);
+        // valid_len points at the start of the torn record.
+        let one = image_of(&recs[..1]);
+        assert_eq!(img.valid_len, one.len() as u64);
+        // Cutting into the 13-byte record prefix is also just a torn tail.
+        let img2 = read_image(&full[..one.len() + 4]).unwrap();
+        assert_eq!(img2.records.len(), 1);
+        assert!(img2.torn.unwrap().reason.contains("prefix truncated"));
+    }
+
+    #[test]
+    fn checksum_flip_mid_file_is_a_hard_error_with_index_and_offset() {
+        let recs = vec![
+            Record::Submit("first".to_string()),
+            Record::Submit("second".to_string()),
+        ];
+        let mut bytes = image_of(&recs);
+        // Flip one payload byte of record 0 (payload starts right after
+        // the header + record prefix).
+        bytes[HEADER_BYTES + RECORD_HEADER_BYTES] ^= 0x01;
+        let e = read_image(&bytes).unwrap_err().to_string();
+        assert!(e.contains("record 0"), "{e}");
+        assert!(e.contains(&format!("byte {HEADER_BYTES}")), "{e}");
+        assert!(e.contains("checksum"), "{e}");
+        assert!(e.contains("corrupt mid-file"), "{e}");
+    }
+
+    #[test]
+    fn version_and_magic_mismatches_are_hard_errors() {
+        let mut v2 = image_of(&[Record::Shutdown]);
+        v2[4] = 9;
+        let e = read_image(&v2).unwrap_err().to_string();
+        assert!(e.contains("version 9"), "{e}");
+        let mut bad = image_of(&[Record::Shutdown]);
+        bad[0] = b'X';
+        assert!(read_image(&bad).unwrap_err().to_string().contains("magic"));
+        // Unknown record kind: hard error, not a skip.
+        let mut unk = encode_header(1).to_vec();
+        let kind = 200u8;
+        unk.push(kind);
+        unk.extend_from_slice(&0u32.to_le_bytes());
+        unk.extend_from_slice(&record_checksum(kind, &[]).to_le_bytes());
+        let e = read_image(&unk).unwrap_err().to_string();
+        assert!(e.contains("unknown kind 200"), "{e}");
+    }
+
+    #[test]
+    fn writer_roundtrips_through_a_real_file() {
+        let dir = std::env::temp_dir().join(format!("sst-journal-test-{}-w", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut j = Journal::create(&dir, 99, Durability::Strict).unwrap();
+        j.append(&Record::Create("a".to_string())).unwrap();
+        j.append(&Record::Submit("req".to_string())).unwrap();
+        assert_eq!(j.records(), 2);
+        assert!(!j.should_mark(5));
+        assert!(j.should_mark(1));
+        drop(j);
+        let img = read_file(&dir.join(FILE_NAME)).unwrap();
+        assert_eq!(img.config_hash, 99);
+        assert_eq!(img.records.len(), 2);
+        // A second create on the same dir must refuse to clobber.
+        assert!(Journal::create(&dir, 99, Durability::Strict).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn abandon_drops_the_unflushed_tail_in_off_mode() {
+        let dir = std::env::temp_dir().join(format!("sst-journal-test-{}-o", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut j = Journal::create(&dir, 5, Durability::Off).unwrap();
+        j.append(&Record::Submit("buffered, then lost".to_string())).unwrap();
+        j.abandon();
+        let img = read_file(&dir.join(FILE_NAME)).unwrap();
+        assert!(img.records.is_empty(), "off-mode buffer must die with the crash");
+        // Same sequence with a graceful drop keeps the record.
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut j = Journal::create(&dir, 5, Durability::Off).unwrap();
+        j.append(&Record::Submit("buffered, then flushed".to_string())).unwrap();
+        drop(j);
+        assert_eq!(read_file(&dir.join(FILE_NAME)).unwrap().records.len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mark_compaction_rewrites_to_header_plus_mark() {
+        let dir = std::env::temp_dir().join(format!("sst-journal-test-{}-m", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut j = Journal::create(&dir, 11, Durability::Batched).unwrap();
+        for i in 0..6 {
+            j.append(&Record::Submit(format!("submit {i}"))).unwrap();
+        }
+        j.mark_and_compact(&sample_mark()).unwrap();
+        j.append(&Record::Submit("after the mark".to_string())).unwrap();
+        drop(j);
+        let img = read_file(&dir.join(FILE_NAME)).unwrap();
+        assert_eq!(img.records.len(), 2, "compaction must drop the superseded prefix");
+        assert!(matches!(img.records[0], Record::Mark(_)));
+        assert_eq!(img.records[1], Record::Submit("after the mark".to_string()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

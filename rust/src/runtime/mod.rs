@@ -1,5 +1,7 @@
-//! Execution services: the [`serve`] scheduler-as-a-service daemon and
-//! the PJRT bridge for the AOT-compiled JAX/Pallas scoring artifact.
+//! Execution services: the [`serve`] scheduler-as-a-service daemon,
+//! its crash-safety layer (the [`journal`] write-ahead log and
+//! [`recover`] deterministic replay recovery), and the PJRT bridge for
+//! the AOT-compiled JAX/Pallas scoring artifact.
 //!
 //! ## PJRT runtime
 //!
@@ -19,6 +21,8 @@
 //! `xla` cargo feature; the default build keeps the [`Accel`] selector
 //! and reports a clear error when an XLA backend is requested.
 
+pub mod journal;
+pub mod recover;
 pub mod serve;
 
 #[cfg(feature = "xla")]

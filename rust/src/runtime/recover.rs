@@ -1,0 +1,190 @@
+//! Deterministic replay recovery for the serve daemon
+//! (`sst-sched serve --resume <dir>`).
+//!
+//! Recovery inverts the write-ahead journal
+//! ([`crate::runtime::journal`]): the daemon's state is a pure function
+//! of `(ExperimentConfig, ordered mutating-request log)`, so rebuilding
+//! it is (1) restore every sim from the latest `MARK` checkpoint — the
+//! recorded step bound, not t=0 — by re-submitting its job list in
+//! order, (2) re-dispatch the suffix records through the exact same
+//! [`ServerCore`] request path the live daemon used, and (3) assert the
+//! FNV digest of each recovered sim's fingerprint against the digest
+//! the mark recorded. A mismatch is a refusal, not a warning: the
+//! determinism contract makes byte-identical recovery the only
+//! acceptable outcome.
+//!
+//! Torn tails (a crash mid-append) are detected by checksum, reported,
+//! and cleanly discarded — the journal file is truncated to its intact
+//! prefix before the recovered daemon appends to it. Corrupt mid-file
+//! records fail hard with the record index and byte offset (see the
+//! journal module's corruption taxonomy).
+//!
+//! What is *not* recovered, by design: daemon metrics counters restart
+//! at the replayed-request counts, the draining flag (a resumed daemon
+//! is a fresh serve lifetime), and in-flight connections.
+
+use crate::config::ExperimentConfig;
+use crate::runtime::journal::{self, Journal, Record};
+use crate::runtime::serve::ServerCore;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// What recovery did — surfaced in the daemon's startup line and
+/// asserted by the crash-fault chaos harness.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryReport {
+    /// Intact records read from the journal.
+    pub records: usize,
+    /// True when replay started from a `MARK` checkpoint instead of an
+    /// empty daemon (t=0).
+    pub from_mark: bool,
+    /// Highest sim clock recorded in the mark — the step bound replay
+    /// started from (0 without a mark).
+    pub mark_step_bound: u64,
+    /// Jobs restored directly from the mark's per-sim checkpoints.
+    pub marked_jobs: usize,
+    /// `submit` records re-dispatched after the mark.
+    pub replayed_submits: usize,
+    /// `create` records re-applied after the mark.
+    pub replayed_creates: usize,
+    /// Clean-shutdown records seen (the journal was closed gracefully).
+    pub shutdowns: usize,
+    /// Sims hosted after recovery.
+    pub sims: usize,
+    /// Sims whose recovered fingerprint was verified against the mark.
+    pub verified_sims: usize,
+    /// Description of a discarded torn tail, if the crash tore one.
+    pub torn_tail: Option<String>,
+}
+
+impl RecoveryReport {
+    /// One-line human summary for the daemon's startup banner.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{} sim(s) from {} journal record(s)",
+            self.sims, self.records
+        );
+        if self.from_mark {
+            s.push_str(&format!(
+                ", mark at step bound {} ({} job(s) checkpointed, {} verified)",
+                self.mark_step_bound, self.marked_jobs, self.verified_sims
+            ));
+        }
+        if self.replayed_submits + self.replayed_creates > 0 {
+            s.push_str(&format!(
+                ", {} submit(s) + {} create(s) replayed",
+                self.replayed_submits, self.replayed_creates
+            ));
+        }
+        if let Some(t) = &self.torn_tail {
+            s.push_str(&format!(", torn tail discarded ({t})"));
+        }
+        s
+    }
+}
+
+/// Replay the journal in `dir` over `cfg` and return a live
+/// [`ServerCore`] with the journal reattached for appending (the torn
+/// tail, if any, is truncated away first). Fails — never
+/// half-recovers — on a missing journal, a config-hash mismatch,
+/// mid-file corruption, or a fingerprint that does not reproduce the
+/// mark's digest.
+pub fn recover(cfg: &ExperimentConfig, dir: &Path) -> Result<(ServerCore, RecoveryReport)> {
+    let path = dir.join(journal::FILE_NAME);
+    if !path.exists() {
+        bail!(
+            "journal: nothing to resume — {path:?} does not exist (start without --resume \
+             to begin a fresh journal)"
+        );
+    }
+    let bytes = std::fs::read(&path).with_context(|| format!("journal: reading {path:?}"))?;
+    let img = journal::read_image(&bytes)?;
+    let want = cfg.semantic_hash();
+    if img.config_hash != want {
+        bail!(
+            "journal: {path:?} was written under a different experiment config \
+             (header hash {:016x}, this config {:016x}) — replaying it here would \
+             rebuild different state; resume with the original config or remove the journal",
+            img.config_hash,
+            want
+        );
+    }
+
+    let mut report = RecoveryReport {
+        records: img.records.len(),
+        torn_tail: img.torn.as_ref().map(|t| t.reason.clone()),
+        ..RecoveryReport::default()
+    };
+    let mut core = ServerCore::new(cfg.clone());
+
+    // Replay starts at the latest MARK: it losslessly supersedes every
+    // record before it (compaction keeps at most one, as record 0, but
+    // the reader does not rely on that).
+    let mark_idx = img.records.iter().rposition(|r| matches!(r, Record::Mark(_)));
+    let start = match mark_idx {
+        Some(i) => {
+            let mark = match &img.records[i] {
+                Record::Mark(m) => m,
+                _ => unreachable!("rposition matched a mark"),
+            };
+            report.from_mark = true;
+            for sm in &mark.sims {
+                core.restore_sim(sm)
+                    .map_err(|e| anyhow::anyhow!("journal: restoring sim {:?}: {e}", sm.name))?;
+                report.marked_jobs += sm.jobs.len();
+                report.mark_step_bound = report.mark_step_bound.max(sm.clock);
+                let got = journal::mark_fingerprint(core.sim_instance(&sm.name).expect("just restored"))
+                    .map_err(|e| anyhow::anyhow!("journal: fingerprinting recovered sim {:?}: {e}", sm.name))?;
+                if got != sm.fp_hash {
+                    bail!(
+                        "journal: recovered state of sim {:?} does not reproduce the mark's \
+                         fingerprint digest (mark {:016x}, replay {:016x}) — the journal and \
+                         this build/config disagree; refusing to resume a diverged journal",
+                        sm.name,
+                        sm.fp_hash,
+                        got
+                    );
+                }
+                report.verified_sims += 1;
+            }
+            i + 1
+        }
+        None => 0,
+    };
+
+    // Re-dispatch the suffix through the same request path the live
+    // daemon used. Failures (e.g. a journaled request that was refused
+    // live) re-fail deterministically; that *is* the replay.
+    for (n, rec) in img.records[start..].iter().enumerate() {
+        match rec {
+            Record::Create(name) => {
+                core.replay_create(name);
+                report.replayed_creates += 1;
+            }
+            Record::Submit(line) => {
+                let _ = core.handle_line(n as u64 + 1, line);
+                report.replayed_submits += 1;
+            }
+            Record::Shutdown => {
+                // A clean close last lifetime; a resumed daemon starts
+                // un-drained.
+                report.shutdowns += 1;
+            }
+            Record::Mark(_) => unreachable!("no mark after the last mark"),
+        }
+    }
+    report.sims = core.sim_names().len();
+
+    // Reattach for appending: truncate the torn tail away, keep the
+    // mark cadence counting from the recovered suffix.
+    let journal = Journal::open_append(
+        dir,
+        img.config_hash,
+        cfg.serve.durability,
+        img.valid_len,
+        img.records.len() as u64,
+        report.replayed_submits as u64,
+    )?;
+    core.attach_journal(journal);
+    Ok((core, report))
+}

@@ -18,10 +18,19 @@
 //!
 //! Robustness guarantees: per-connection request queues are bounded
 //! ([`crate::config::ServeOptions::queue_depth`]) and a full queue gets
-//! an explicit `backpressure` error reply instead of unbounded
-//! buffering; sim creation is admission-controlled (`--max-sims`);
-//! malformed requests are answered with the line number and byte offset
-//! of the error, like the trace parsers report theirs.
+//! an explicit `backpressure` error reply (carrying a machine-readable
+//! `retry_after_ms` back-off hint) instead of unbounded buffering; sim
+//! creation is admission-controlled (`--max-sims`); malformed requests
+//! are answered with the line number and byte offset of the error, like
+//! the trace parsers report theirs.
+//!
+//! Crash safety: with `serve.state_dir` set (`--state-dir`), every
+//! state-mutating request is appended to a write-ahead journal
+//! ([`crate::runtime::journal`]) *before* it is applied, and
+//! `--resume <dir>` rebuilds the daemon by deterministic replay
+//! ([`crate::runtime::recover`]). A journal-write failure degrades the
+//! daemon to in-memory operation with a logged warning — it never kills
+//! live sims. See `docs/OPERATIONS.md` for the operational contract.
 //!
 //! [`ServerCore`] is the transport-free request handler — the socket
 //! loop, the integration tests, and the bench suite all drive the same
@@ -32,6 +41,7 @@
 use crate::config::ExperimentConfig;
 use crate::core::time::{SimDuration, SimTime};
 use crate::job::Job;
+use crate::runtime::journal::{self, Journal};
 use crate::sim::{SimInstance, Simulation};
 use crate::trace::Workload;
 use crate::util::json::Json;
@@ -78,9 +88,14 @@ impl ReqError {
 /// One hosted simulation plus its monotone job-id allocator. Predictions
 /// peek the next id without consuming it, so a prediction followed by a
 /// real submission of the same job replays under the same identity.
+/// `submitted` (filled only while a journal is attached) is the sim's
+/// ordered job history — the material of MARK checkpoints, which a
+/// lossless compaction needs because serve arrivals are monotone and a
+/// sim's state is exactly `f(config, ordered submits)`.
 struct SimEntry {
     inst: SimInstance,
     next_job_id: u64,
+    submitted: Vec<journal::JobRec>,
 }
 
 /// Transport-free request handler for the serve protocol: feed it one
@@ -96,6 +111,10 @@ pub struct ServerCore {
     errors: u64,
     throttled: u64,
     draining: bool,
+    /// Write-ahead journal; `None` for in-memory daemons (and after a
+    /// journal-write failure degraded the daemon, see
+    /// [`ServerCore::journal_append`]).
+    journal: Option<Journal>,
 }
 
 impl ServerCore {
@@ -112,13 +131,48 @@ impl ServerCore {
             errors: 0,
             throttled: 0,
             draining: false,
+            journal: None,
         }
+    }
+
+    /// Attach a write-ahead journal: every mutating request is appended
+    /// (write-ahead) from here on, and MARK checkpoints compact the file
+    /// every `cfg.serve.mark_interval` submits.
+    pub fn attach_journal(&mut self, journal: Journal) {
+        self.journal = Some(journal);
+    }
+
+    /// True while a journal is attached (false after a write failure
+    /// degraded the daemon to in-memory operation).
+    pub fn journal_active(&self) -> bool {
+        self.journal.is_some()
+    }
+
+    /// Names of every hosted sim, in deterministic (sorted) order.
+    pub fn sim_names(&self) -> Vec<String> {
+        self.sims.keys().cloned().collect()
+    }
+
+    /// Borrow a hosted sim's live instance (recovery verification).
+    pub fn sim_instance(&self, name: &str) -> Option<&SimInstance> {
+        self.sims.get(name).map(|e| &e.inst)
     }
 
     /// True once a `shutdown` request was accepted: the daemon stops
     /// reading new requests and drains what is already queued.
     pub fn draining(&self) -> bool {
         self.draining
+    }
+
+    /// Simulate a process crash: drop the core *without* the graceful
+    /// journal flush a normal drop performs, so the journal's user-space
+    /// buffer dies exactly as it would with the process. The crash-fault
+    /// chaos harness (`rust/tests/crash_recovery.rs`) is the intended
+    /// caller.
+    pub fn crash(mut self) {
+        if let Some(j) = self.journal.take() {
+            j.abandon();
+        }
     }
 
     /// Record one backpressure rejection (the connection reader replies
@@ -171,11 +225,29 @@ impl ServerCore {
             })?
             .to_string();
         match req.as_str() {
-            "submit" => self.handle_submit(&v),
+            "submit" => {
+                // Write-ahead: the raw request is durable before it is
+                // applied. A refused submit replays to the same refusal
+                // — replay is the same dispatch path. (Gated so the
+                // in-memory daemon never pays the line clone.)
+                if self.journal.is_some() {
+                    self.journal_append(journal::Record::Submit(line.to_string()));
+                }
+                let resp = self.handle_submit(&v);
+                if resp.is_ok() {
+                    self.maybe_mark();
+                }
+                resp
+            }
             "predict_wait" => self.handle_predict(&v),
             "status" => self.handle_status(&v),
             "metrics" => Ok(self.metrics_json()),
             "shutdown" => {
+                self.journal_append(journal::Record::Shutdown);
+                // Make the clean close durable even in `off` mode.
+                if let Some(j) = self.journal.as_mut() {
+                    let _ = j.flush();
+                }
                 self.draining = true;
                 Ok(Json::obj(vec![
                     ("ok", Json::Bool(true)),
@@ -206,8 +278,109 @@ impl ServerCore {
             ));
         }
         let inst = blank_instance(&self.cfg, name);
-        self.sims.insert(name.to_string(), SimEntry { inst, next_job_id: 1 });
+        self.sims
+            .insert(name.to_string(), SimEntry { inst, next_job_id: 1, submitted: Vec::new() });
         Ok(())
+    }
+
+    /// Replay-side `Create`: re-run sim creation under the same
+    /// admission control the live daemon applied (a refused create
+    /// re-fails deterministically, which is exactly what replay wants).
+    pub(crate) fn replay_create(&mut self, name: &str) {
+        let _ = self.ensure_sim(name);
+    }
+
+    /// Restore one sim from a MARK checkpoint: rebuild the blank
+    /// instance the daemon would have created, then re-submit the job
+    /// history in order — each submit stepping the engine through its
+    /// arrival exactly as the live `submit` handler did — and advance
+    /// to the recorded step bound.
+    pub(crate) fn restore_sim(&mut self, sm: &journal::SimMark) -> Result<(), String> {
+        if self.sims.contains_key(&sm.name) {
+            return Err(format!("a simulation named {:?} already exists", sm.name));
+        }
+        let mut inst = blank_instance(&self.cfg, &sm.name);
+        for j in &sm.jobs {
+            let job = Job::new(
+                j.id,
+                SimTime(j.submit),
+                j.cores,
+                j.mem,
+                SimDuration(j.est),
+                SimDuration(j.runtime),
+                j.user,
+                j.group,
+            );
+            inst.submit(SimTime(j.submit), job);
+            inst.step_until(SimTime(j.submit));
+        }
+        inst.step_until(SimTime(sm.clock));
+        self.sims.insert(
+            sm.name.clone(),
+            SimEntry { inst, next_job_id: sm.next_job_id, submitted: sm.jobs.clone() },
+        );
+        Ok(())
+    }
+
+    /// Append one record to the journal, degrading gracefully: a write
+    /// failure logs a warning and detaches the journal — live sims keep
+    /// running in memory; they are never killed over a full disk.
+    fn journal_append(&mut self, rec: journal::Record) {
+        if let Some(mut j) = self.journal.take() {
+            match j.append(&rec) {
+                Ok(()) => self.journal = Some(j),
+                Err(e) => eprintln!(
+                    "sst-sched serve: journal write failed ({e:#}); continuing IN MEMORY — \
+                     state after this point will not survive a restart"
+                ),
+            }
+        }
+    }
+
+    /// Write a MARK checkpoint (and compact the journal) once
+    /// `serve.mark_interval` submits have been journaled. A sim that
+    /// cannot be fingerprinted (a non-snapshotable source) cannot be
+    /// journaled — the daemon degrades to in-memory with the snapshot
+    /// layer's by-name error in the warning.
+    fn maybe_mark(&mut self) {
+        let interval = self.cfg.serve.mark_interval;
+        let due = match &self.journal {
+            Some(j) => j.should_mark(interval),
+            None => false,
+        };
+        if !due {
+            return;
+        }
+        let mut sims = Vec::with_capacity(self.sims.len());
+        for (name, entry) in &self.sims {
+            let fp_hash = match journal::mark_fingerprint(&entry.inst) {
+                Ok(h) => h,
+                Err(e) => {
+                    eprintln!(
+                        "sst-sched serve: sim {name:?} cannot be journaled ({e}); \
+                         journaling disabled, continuing IN MEMORY"
+                    );
+                    self.journal = None;
+                    return;
+                }
+            };
+            sims.push(journal::SimMark {
+                name: name.clone(),
+                next_job_id: entry.next_job_id,
+                clock: entry.inst.now().ticks(),
+                fp_hash,
+                jobs: entry.submitted.clone(),
+            });
+        }
+        if let Some(mut j) = self.journal.take() {
+            match j.mark_and_compact(&journal::Mark { sims }) {
+                Ok(()) => self.journal = Some(j),
+                Err(e) => eprintln!(
+                    "sst-sched serve: journal compaction failed ({e:#}); continuing IN MEMORY — \
+                     state after this point will not survive a restart"
+                ),
+            }
+        }
     }
 
     /// Arrival time for a request: explicit `at`, else the sim clock;
@@ -234,11 +407,24 @@ impl ServerCore {
     fn handle_submit(&mut self, v: &Json) -> Result<Json, ReqError> {
         let name = v.get_str_or("sim", "default").to_string();
         self.ensure_sim(&name)?;
+        let journaling = self.journal.is_some();
         let entry = self.sims.get_mut(&name).expect("just ensured");
         let at = Self::arrival_time(v, entry.inst.now())?;
         let id = entry.next_job_id;
         let job = job_from(v, id, at)?;
         entry.next_job_id += 1;
+        if journaling {
+            entry.submitted.push(journal::JobRec {
+                submit: at.ticks(),
+                id,
+                cores: job.cores,
+                mem: job.memory_mb,
+                est: job.est_runtime.ticks(),
+                runtime: job.runtime.ticks(),
+                user: job.user,
+                group: job.group,
+            });
+        }
         entry.inst.submit(at, job);
         // Commit point: the live timeline advances through the arrival
         // (and everything it causes at that tick), so status reflects it
@@ -256,6 +442,12 @@ impl ServerCore {
 
     fn handle_predict(&mut self, v: &Json) -> Result<Json, ReqError> {
         let name = v.get_str_or("sim", "default").to_string();
+        if !self.sims.contains_key(&name) {
+            // The only mutation a prediction can make is creating the
+            // named sim — journal that (write-ahead), not the whole
+            // speculative request.
+            self.journal_append(journal::Record::Create(name.clone()));
+        }
         self.ensure_sim(&name)?;
         let entry = self.sims.get_mut(&name).expect("just ensured");
         let at = Self::arrival_time(v, entry.inst.now())?;
@@ -394,17 +586,35 @@ fn error_json(line_no: u64, e: &ReqError) -> Json {
     Json::obj(vec![("error", Json::obj(err)), ("ok", Json::Bool(false))])
 }
 
+/// Initial client back-off hint carried by backpressure replies
+/// (`retry_after_ms`): wait this long before the first resend, then
+/// back off exponentially while the queue stays full — the retry
+/// contract is documented in `docs/PROTOCOL.md`.
+pub const RETRY_AFTER_MS: u64 = 25;
+
 /// The explicit backpressure reply a connection sends when its bounded
 /// request queue (depth `depth`) is full — the request is refused, not
-/// buffered, so a flooding client cannot grow daemon memory.
+/// buffered, so a flooding client cannot grow daemon memory. Carries a
+/// machine-readable `retry_after_ms` so clients can back off without
+/// parsing the message.
 pub fn backpressure_json(line_no: u64, depth: usize) -> Json {
-    error_json(
-        line_no,
-        &ReqError::at(
-            "backpressure",
-            format!("request queue full ({depth} pending); retry after the daemon catches up"),
+    Json::obj(vec![
+        (
+            "error",
+            Json::obj(vec![
+                ("code", Json::str("backpressure")),
+                ("line", Json::num(line_no as f64)),
+                (
+                    "message",
+                    Json::str(format!(
+                        "request queue full ({depth} pending); retry after the daemon catches up"
+                    )),
+                ),
+                ("retry_after_ms", Json::num(RETRY_AFTER_MS as f64)),
+            ]),
         ),
-    )
+        ("ok", Json::Bool(false)),
+    ])
 }
 
 #[cfg(unix)]
@@ -535,15 +745,76 @@ fn handle_conn(stream: UnixStream, core: Arc<Mutex<ServerCore>>, depth: usize) {
     let _ = worker.join();
 }
 
+/// Accept-loop poll backoff: start here when idle...
+#[cfg(unix)]
+const IDLE_POLL_MIN_MS: u64 = 1;
+/// ...and double up to this cap, which bounds drain/SIGTERM latency the
+/// same way the 200 ms connection read timeout does. An idle daemon
+/// polls ~5×/s instead of the old fixed 20 ms busy-poll's 50×/s, and
+/// any accepted connection snaps the interval back to the minimum.
+#[cfg(unix)]
+const IDLE_POLL_MAX_MS: u64 = 200;
+
 /// Run the daemon: bind `cfg.serve.socket`, accept JSON-lines
 /// connections, and serve until a `shutdown` request or SIGTERM/SIGINT;
 /// then drain queued requests, join every connection, and unlink the
 /// socket. Blocks the calling thread for the daemon's lifetime.
+/// Equivalent to [`serve_opts`] with `resume = false`.
 #[cfg(unix)]
 pub fn serve(cfg: ExperimentConfig) -> anyhow::Result<()> {
+    serve_opts(cfg, false)
+}
+
+/// Build the daemon core, honoring persistence: no `state_dir` → plain
+/// in-memory core; `state_dir` + `resume` → recover by journal replay
+/// and keep appending; `state_dir` fresh → create a new journal
+/// (refusing to clobber an existing one — that is `--resume`'s job).
+#[cfg(unix)]
+fn build_core(cfg: &ExperimentConfig, resume: bool) -> anyhow::Result<ServerCore> {
+    let dir = match &cfg.serve.state_dir {
+        None => {
+            if resume {
+                anyhow::bail!("--resume needs a state directory (serve --resume <dir>)");
+            }
+            return Ok(ServerCore::new(cfg.clone()));
+        }
+        Some(d) => std::path::PathBuf::from(d),
+    };
+    if resume {
+        let (core, report) = crate::runtime::recover::recover(cfg, &dir)?;
+        eprintln!("sst-sched serve: recovered {}", report.summary());
+        Ok(core)
+    } else {
+        let jpath = dir.join(journal::FILE_NAME);
+        if jpath.exists() {
+            anyhow::bail!(
+                "state dir {dir:?} already holds a journal; resume it with \
+                 `serve --resume {}` or remove {jpath:?} to start fresh",
+                dir.display()
+            );
+        }
+        let j = Journal::create(&dir, cfg.semantic_hash(), cfg.serve.durability)?;
+        eprintln!(
+            "sst-sched serve: journaling to {:?} (durability {}, mark interval {})",
+            j.path(),
+            cfg.serve.durability,
+            cfg.serve.mark_interval
+        );
+        let mut core = ServerCore::new(cfg.clone());
+        core.attach_journal(j);
+        Ok(core)
+    }
+}
+
+/// [`serve`] with an explicit resume flag (`sst-sched serve --resume`):
+/// when `resume` is true the daemon recovers its sims from the journal
+/// in `cfg.serve.state_dir` before accepting connections.
+#[cfg(unix)]
+pub fn serve_opts(cfg: ExperimentConfig, resume: bool) -> anyhow::Result<()> {
     let path = cfg.serve.socket.clone();
     let depth = cfg.serve.queue_depth;
     let max_sims = cfg.serve.max_sims;
+    let core = build_core(&cfg, resume)?;
     if std::path::Path::new(&path).exists() {
         std::fs::remove_file(&path)
             .with_context(|| format!("removing stale socket {path:?}"))?;
@@ -554,22 +825,26 @@ pub fn serve(cfg: ExperimentConfig) -> anyhow::Result<()> {
         .set_nonblocking(true)
         .context("setting the serve listener non-blocking")?;
     install_signal_handlers();
-    let core = Arc::new(Mutex::new(ServerCore::new(cfg)));
+    let core = Arc::new(Mutex::new(core));
     eprintln!(
         "sst-sched serve: listening on {path} (max_sims {max_sims}, queue depth {depth})"
     );
     let mut conns = Vec::new();
+    let mut idle_ms = IDLE_POLL_MIN_MS;
     loop {
         if SHUTDOWN.load(Ordering::Relaxed) || is_draining(&core) {
             break;
         }
         match listener.accept() {
             Ok((stream, _addr)) => {
+                idle_ms = IDLE_POLL_MIN_MS;
                 let conn_core = Arc::clone(&core);
                 conns.push(std::thread::spawn(move || handle_conn(stream, conn_core, depth)));
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(20));
+                // Exponential idle backoff instead of a fixed busy-poll.
+                std::thread::sleep(Duration::from_millis(idle_ms));
+                idle_ms = (idle_ms * 2).min(IDLE_POLL_MAX_MS);
             }
             Err(e) => return Err(e).context("accepting on the serve socket"),
         }
@@ -689,6 +964,7 @@ mod tests {
         let err = b.get("error").unwrap();
         assert_eq!(err.get_str_or("code", ""), "backpressure");
         assert_eq!(err.get_u64_or("line", 0), 9);
+        assert_eq!(err.get_u64_or("retry_after_ms", 0), RETRY_AFTER_MS);
     }
 
     #[test]

@@ -1,0 +1,352 @@
+//! Crash-fault chaos harness for the journaled serve daemon.
+//!
+//! The property under test is the whole point of the write-ahead
+//! journal: for ANY crash point — including torn journal tails — and
+//! any durability mode, recovery rebuilds a daemon whose per-sim
+//! fingerprints are byte-identical to an uncrashed reference that
+//! processed exactly the requests the journal preserved. The
+//! determinism contract (`tests/snapshot.rs`) is what makes this an
+//! equality assertion rather than a tolerance.
+//!
+//! The harness drives a [`ServerCore`] directly (no socket): scripted
+//! submit bursts, a crash simulated by [`ServerCore::crash`] (which
+//! drops the journal without the graceful flush) at a randomized
+//! request boundary, optionally an artificially truncated journal tail
+//! on top, then [`recover`] and compare.
+
+use sst_sched::config::{Durability, ExperimentConfig};
+use sst_sched::core::rng::Rng;
+use sst_sched::runtime::journal::{self, Journal};
+use sst_sched::runtime::recover;
+use sst_sched::runtime::serve::ServerCore;
+use sst_sched::sched::Policy;
+use sst_sched::sim::Simulation;
+use sst_sched::trace::Workload;
+use sst_sched::util::prop::check_n;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("sst-crashrec-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Small machine, journaling into `dir`, aggressive mark cadence so
+/// compaction happens inside short scripts.
+fn test_cfg(dir: &Path, durability: Durability, mark_interval: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        nodes: Some(2),
+        cores_per_node: Some(4),
+        policy: Policy::Fcfs,
+        ..ExperimentConfig::default()
+    };
+    cfg.serve.state_dir = Some(dir.to_str().unwrap().to_string());
+    cfg.serve.durability = durability;
+    cfg.serve.mark_interval = mark_interval;
+    cfg
+}
+
+fn journaled_core(cfg: &ExperimentConfig, dir: &Path) -> ServerCore {
+    let mut core = ServerCore::new(cfg.clone());
+    core.attach_journal(
+        Journal::create(dir, cfg.semantic_hash(), cfg.serve.durability).unwrap(),
+    );
+    core
+}
+
+/// Scripted submit burst over sims "a"/"b" with a globally non-
+/// decreasing arrival clock, so every request succeeds (arrivals can
+/// never regress a sim's clock). Returns the lines and the final tick.
+fn gen_script(rng: &mut Rng, n: usize) -> (Vec<String>, u64) {
+    let mut t = 0u64;
+    let mut lines = Vec::with_capacity(n);
+    for _ in 0..n {
+        t += rng.below(50);
+        let sim = if rng.below(2) == 0 { "a" } else { "b" };
+        let cores = 1 + rng.below(4);
+        let runtime = 1 + rng.below(500);
+        lines.push(format!(
+            r#"{{"req":"submit","sim":"{sim}","at":{t},"job":{{"cores":{cores},"runtime":{runtime}}}}}"#
+        ));
+    }
+    (lines, t)
+}
+
+fn feed(core: &mut ServerCore, lines: &[String]) -> Result<(), String> {
+    for (i, l) in lines.iter().enumerate() {
+        let r = core.handle_line(i as u64 + 1, l);
+        if !r.get_bool_or("ok", false) {
+            return Err(format!("submit refused: {r:?} for {l}"));
+        }
+    }
+    Ok(())
+}
+
+/// Uncrashed reference: a fresh in-memory core fed exactly `lines`.
+fn reference_core(cfg: &ExperimentConfig, lines: &[String]) -> ServerCore {
+    let mut c = ServerCore::new(cfg.clone());
+    feed(&mut c, lines).expect("reference submits must succeed");
+    c
+}
+
+/// Per-sim future fingerprints — the byte-identity the chaos property
+/// asserts.
+fn fingerprints(core: &ServerCore) -> BTreeMap<String, String> {
+    core.sim_names()
+        .into_iter()
+        .map(|n| {
+            let fp = core.fingerprint(&n).expect("hosted sims fingerprint");
+            (n, fp)
+        })
+        .collect()
+}
+
+/// Chop `cut` bytes off the journal's end — the torn tail a crash
+/// mid-append leaves.
+fn truncate_journal(dir: &Path, cut: u64) {
+    let jpath = dir.join(journal::FILE_NAME);
+    let len = std::fs::metadata(&jpath).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&jpath).unwrap();
+    f.set_len(len - cut).unwrap();
+}
+
+/// The acceptance-criteria chaos property: randomized crash points
+/// (including torn tails) across seeds and all three durability modes;
+/// the recovered daemon must be byte-identical to a reference run over
+/// the journal's surviving prefix, and must keep working (submit more,
+/// crash-free second recovery) afterwards.
+#[test]
+fn chaos_random_crash_points_recover_byte_identical() {
+    let modes = [Durability::Strict, Durability::Batched, Durability::Off];
+    let mut case = 0usize;
+    check_n("crash-recovery-chaos", 12, |rng| {
+        let mode = modes[case % modes.len()];
+        case += 1;
+        let dir = temp_dir(&format!("chaos{case}"));
+        let cfg = test_cfg(&dir, mode, 4);
+        let mut core = journaled_core(&cfg, &dir);
+
+        let n = 5 + rng.below(20) as usize;
+        let (lines, t_end) = gen_script(rng, n);
+        let crash_at = rng.below(n as u64 + 1) as usize;
+        feed(&mut core, &lines[..crash_at])?;
+        core.crash();
+
+        // Half the cases additionally tear the tail mid-record.
+        let jpath = dir.join(journal::FILE_NAME);
+        let len = std::fs::metadata(&jpath).map_err(|e| e.to_string())?.len();
+        let hdr = journal::HEADER_BYTES as u64;
+        let torn = rng.below(2) == 1 && len > hdr;
+        if torn {
+            truncate_journal(&dir, 1 + rng.below((len - hdr).min(40)));
+        }
+
+        let (rcore, report) =
+            recover::recover(&cfg, &dir).map_err(|e| format!("recovery failed: {e:#}"))?;
+        // The journal preserves a prefix of the submit stream: the jobs
+        // checkpointed by the latest MARK plus the replayed suffix.
+        let k = report.marked_jobs + report.replayed_submits;
+        if k > crash_at {
+            return Err(format!("recovered {k} submits but only {crash_at} were issued"));
+        }
+        if mode != Durability::Off && !torn && k != crash_at {
+            return Err(format!(
+                "a {mode} journal must survive a process crash intact: \
+                 recovered {k} of {crash_at}"
+            ));
+        }
+        let reference = reference_core(&cfg, &lines[..k]);
+        if fingerprints(&rcore) != fingerprints(&reference) {
+            return Err(format!(
+                "recovered fingerprints diverge from the reference \
+                 (mode {mode}, crash at {crash_at}, torn {torn}, surviving {k})"
+            ));
+        }
+
+        // The recovered daemon is live: journal reattached, new submits
+        // land, and a graceful close + second recovery still matches.
+        let mut rcore = rcore;
+        if !rcore.journal_active() {
+            return Err("recovery must reattach the journal".to_string());
+        }
+        let more =
+            format!(r#"{{"req":"submit","sim":"a","at":{},"job":{{"cores":1,"runtime":9}}}}"#, t_end + 1);
+        let r = rcore.handle_line(1, &more);
+        if !r.get_bool_or("ok", false) {
+            return Err(format!("post-recovery submit refused: {r:?}"));
+        }
+        drop(rcore); // graceful: flushes even in `off` mode
+        let (again, _) =
+            recover::recover(&cfg, &dir).map_err(|e| format!("second recovery: {e:#}"))?;
+        let mut extended = reference;
+        feed(&mut extended, std::slice::from_ref(&more))?;
+        if fingerprints(&again) != fingerprints(&extended) {
+            return Err("second recovery diverged from the extended reference".to_string());
+        }
+
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(())
+    });
+}
+
+/// Compaction contract: once `mark_interval` submits are journaled the
+/// file is rewritten as header + MARK, and recovery replays from the
+/// mark's step bound — not from t=0.
+#[test]
+fn recovery_after_compaction_replays_from_the_mark() {
+    let dir = temp_dir("compact");
+    let cfg = test_cfg(&dir, Durability::Batched, 4);
+    let mut core = journaled_core(&cfg, &dir);
+    let lines: Vec<String> = (0..10)
+        .map(|i| {
+            format!(r#"{{"req":"submit","at":{},"job":{{"cores":1,"runtime":50}}}}"#, i * 10)
+        })
+        .collect();
+    feed(&mut core, &lines).unwrap();
+    let live = fingerprints(&core);
+    drop(core);
+
+    // On disk: marks at submits 4 and 8 compacted everything before
+    // them, so the file is exactly MARK + the 2-submit suffix.
+    let img = journal::read_file(&dir.join(journal::FILE_NAME)).unwrap();
+    assert!(
+        matches!(img.records.first(), Some(journal::Record::Mark(_))),
+        "compaction must leave the mark first"
+    );
+    assert_eq!(img.records.len(), 3, "mark + 2 replay submits, not all 10");
+
+    let (rcore, report) = recover::recover(&cfg, &dir).unwrap();
+    assert!(report.from_mark, "replay must start from the MARK");
+    assert_eq!(report.marked_jobs, 8);
+    assert_eq!(report.replayed_submits, 2);
+    assert!(report.mark_step_bound > 0, "mark records the step bound replay starts from");
+    assert_eq!(report.verified_sims, 1, "the mark's fingerprint digest is asserted");
+    assert_eq!(fingerprints(&rcore), live);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A clean `shutdown` journals a SHUTDOWN record and flushes; resuming
+/// starts a fresh serve lifetime (not draining) with every sim intact.
+#[test]
+fn clean_shutdown_then_resume() {
+    let dir = temp_dir("shutdown");
+    let cfg = test_cfg(&dir, Durability::Off, 64);
+    let mut core = journaled_core(&cfg, &dir);
+    let (lines, t_end) = gen_script(&mut Rng::new(42), 6);
+    feed(&mut core, &lines).unwrap();
+    let live = fingerprints(&core);
+    let r = core.handle_line(7, r#"{"req":"shutdown"}"#);
+    assert!(r.get_bool_or("draining", false));
+    drop(core);
+
+    let (mut rcore, report) = recover::recover(&cfg, &dir).unwrap();
+    assert_eq!(report.shutdowns, 1, "the clean close is visible in the report");
+    assert!(!rcore.draining(), "a resumed daemon starts un-drained");
+    assert_eq!(fingerprints(&rcore), live);
+    let more = format!(
+        r#"{{"req":"submit","sim":"a","at":{},"job":{{"cores":1,"runtime":5}}}}"#,
+        t_end + 1
+    );
+    assert!(rcore.handle_line(1, &more).get_bool_or("ok", false));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Torn tails (deterministic shape): the intact prefix is recovered,
+/// the tear is reported, and the reattached journal is truncated clean.
+#[test]
+fn torn_tail_is_discarded_and_reported() {
+    let dir = temp_dir("torn");
+    let cfg = test_cfg(&dir, Durability::Strict, 64);
+    let mut core = journaled_core(&cfg, &dir);
+    let (lines, _) = gen_script(&mut Rng::new(7), 3);
+    feed(&mut core, &lines).unwrap();
+    core.crash();
+    truncate_journal(&dir, 5); // into record 2's payload
+
+    let (rcore, report) = recover::recover(&cfg, &dir).unwrap();
+    assert!(report.torn_tail.is_some(), "the tear must be reported");
+    assert_eq!(report.marked_jobs + report.replayed_submits, 2);
+    assert_eq!(fingerprints(&rcore), fingerprints(&reference_core(&cfg, &lines[..2])));
+    drop(rcore);
+    // Reattaching truncated the tail away: the file re-reads clean.
+    let img = journal::read_file(&dir.join(journal::FILE_NAME)).unwrap();
+    assert!(img.torn.is_none(), "recovery must leave a clean journal behind");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A journal only resumes under the config that wrote it — but "config"
+/// means simulation semantics: serve plumbing (socket, durability...)
+/// may differ freely.
+#[test]
+fn config_mismatch_is_refused_plumbing_changes_are_not() {
+    let dir = temp_dir("cfg");
+    let cfg = test_cfg(&dir, Durability::Strict, 64);
+    let mut core = journaled_core(&cfg, &dir);
+    let (lines, _) = gen_script(&mut Rng::new(3), 4);
+    feed(&mut core, &lines).unwrap();
+    drop(core);
+
+    let mut other = cfg.clone();
+    other.seed += 1;
+    let err = format!("{:#}", recover::recover(&other, &dir).unwrap_err());
+    assert!(err.contains("different experiment config"), "{err}");
+
+    let mut plumbing = cfg.clone();
+    plumbing.serve.socket = "/tmp/somewhere-else.sock".to_string();
+    plumbing.serve.durability = Durability::Off;
+    plumbing.serve.queue_depth = 7;
+    let (rcore, _) = recover::recover(&plumbing, &dir).unwrap();
+    assert_eq!(fingerprints(&rcore), fingerprints(&reference_core(&cfg, &lines)));
+    drop(rcore);
+
+    let empty = temp_dir("cfg-empty");
+    std::fs::create_dir_all(&empty).unwrap();
+    let err = format!("{:#}", recover::recover(&cfg, &empty).unwrap_err());
+    assert!(err.contains("nothing to resume"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&empty);
+}
+
+/// Mid-file corruption (a flipped byte in a *complete* record) must
+/// refuse recovery with the record index and byte offset — never
+/// silently replay scrambled state.
+#[test]
+fn mid_file_corruption_refuses_recovery_with_diagnostics() {
+    let dir = temp_dir("corrupt");
+    let cfg = test_cfg(&dir, Durability::Strict, 64);
+    let mut core = journaled_core(&cfg, &dir);
+    let (lines, _) = gen_script(&mut Rng::new(11), 3);
+    feed(&mut core, &lines).unwrap();
+    drop(core);
+
+    let jpath = dir.join(journal::FILE_NAME);
+    let mut bytes = std::fs::read(&jpath).unwrap();
+    let off = journal::HEADER_BYTES + journal::RECORD_HEADER_BYTES;
+    bytes[off] ^= 0x01; // flip one payload byte of record 0
+    std::fs::write(&jpath, &bytes).unwrap();
+
+    let err = format!("{:#}", recover::recover(&cfg, &dir).unwrap_err());
+    assert!(err.contains("record 0"), "{err}");
+    assert!(err.contains("checksum"), "{err}");
+    assert!(err.contains("corrupt mid-file"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Streamed (`with_job_stream`) sims cannot be snapshotted, so they
+/// cannot be journaled either: the mark path reports the snapshot
+/// layer's clear by-name error instead of half-journaling.
+#[test]
+fn streamed_sims_are_rejected_from_journaled_serve() {
+    use sst_sched::trace::{JobStream, TraceFormat};
+    let swf = "1 0 -1 10 1 -1 -1 1 10 -1 1 1 1 1 -1 -1 -1 -1\n";
+    let stream =
+        JobStream::new(std::io::Cursor::new(swf.as_bytes().to_vec()), TraceFormat::Swf);
+    let inst = Simulation::new(Workload::machine("streamed", 2, 4), Policy::Fcfs)
+        .with_job_stream(Box::new(stream.map(|j| j.unwrap())))
+        .build();
+    let err = journal::mark_fingerprint(&inst)
+        .expect_err("streamed sims must not be journalable");
+    assert!(err.contains("source"), "error should name the component: {err}");
+}
